@@ -1,0 +1,54 @@
+//! The paper's central experiment in miniature: a (σ, μ, λ) sweep over
+//! the synthetic CIFAR-style benchmark, printing the tradeoff table that
+//! Figures 6/7 plot — error vs (simulated) time as μ and λ vary.
+//!
+//! ```text
+//! cargo run --release --example cifar_sweep               # reduced grid
+//! RUDRA_FULL=1 cargo run --release --example cifar_sweep  # paper grid
+//! ```
+
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::paper;
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::stats::table::{f, pct, Table};
+use rudra::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    let ws = Workspace::open_default()?;
+    let (mus, lambdas, epochs) = paper::grid_axes();
+    println!(
+        "sweeping μ ∈ {mus:?} × λ ∈ {lambdas:?} for {epochs} epochs under 3 protocols\n"
+    );
+
+    let families: [(&str, fn(usize) -> Protocol); 3] = [
+        ("hardsync", |_| Protocol::Hardsync),
+        ("1-softsync", |_| Protocol::NSoftsync { n: 1 }),
+        ("λ-softsync", |l| Protocol::NSoftsync { n: l }),
+    ];
+
+    for (name, proto_of) in families {
+        println!("--- {name} ---");
+        let sweep = Sweep::new(&ws, epochs);
+        let results = sweep.run_grid(&mus, &lambdas, proto_of)?;
+        let mut t =
+            Table::new(&["μ", "λ", "⟨σ⟩", "test err", "sim time (paper geometry)"]);
+        for r in &results {
+            t.row(vec![
+                r.mu.to_string(),
+                r.lambda.to_string(),
+                f(r.avg_staleness, 1),
+                pct(r.test_error_pct),
+                fmt_secs(r.paper_sim_seconds),
+            ]);
+        }
+        t.print();
+        println!();
+    }
+
+    println!("reading the tables (the paper's Figures 6–7):");
+    println!("  * fixed μ, growing λ: time ↓, error ↑");
+    println!("  * fixed λ, shrinking μ: error recovers, time partially sacrificed");
+    println!("  * small μ stays accurate even at ⟨σ⟩ ≈ λ (staleness immunity)");
+    Ok(())
+}

@@ -1,0 +1,59 @@
+//! Quickstart: train the study CNN with 4 learners under 1-softsync and
+//! print everything the framework measures.
+//!
+//! ```text
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use rudra::config::RunConfig;
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::util::fmt_secs;
+
+fn main() -> anyhow::Result<()> {
+    // 1. Open the workspace: AOT artifacts (HLO text compiled onto the
+    //    embedded PJRT CPU client) + datasets. Python is not involved.
+    let ws = Workspace::open_default()?;
+    println!(
+        "loaded: {}-param CNN, {} train / {} test images\n",
+        ws.manifest.cnn.params, ws.train.n, ws.test.n
+    );
+
+    // 2. Pick a (σ, μ, λ) point. 1-softsync keeps ⟨σ⟩ ≈ 1 regardless of
+    //    λ — the paper's recommended protocol (§5.3).
+    let cfg = RunConfig {
+        protocol: Protocol::NSoftsync { n: 1 },
+        mu: 16,
+        lambda: 4,
+        epochs: 5,
+        ..RunConfig::default()
+    };
+    println!("training {}", cfg.label());
+
+    // 3. Run it: real gradients through PJRT, time simulated at P775
+    //    scale by the discrete-event cluster model.
+    let mut sweep = Sweep::new(&ws, cfg.epochs);
+    sweep.eval_each_epoch = true;
+    let p = sweep.run_point(&cfg)?;
+
+    for e in &p.epochs {
+        println!(
+            "  epoch {:>2}  train loss {:.4}  test err {:>6.2}%  (sim t = {})",
+            e.epoch,
+            e.train_loss,
+            e.test_error_pct.unwrap_or(f64::NAN),
+            fmt_secs(e.sim_time)
+        );
+    }
+    println!(
+        "\nfinal: test error {:.2}%  ⟨σ⟩ = {:.2}  max σ = {}  {} weight updates",
+        p.test_error_pct, p.avg_staleness, p.max_staleness, p.updates
+    );
+    println!(
+        "simulated wall-clock: {} (synthetic)  /  {} (paper CIFAR10 geometry, 140 epochs)",
+        fmt_secs(p.sim_seconds),
+        fmt_secs(p.paper_sim_seconds)
+    );
+    Ok(())
+}

@@ -1,0 +1,208 @@
+"""AOT compile path: lower every L2 graph to HLO **text** + write data.
+
+Run once by ``make artifacts``; Python never appears on the training hot
+path. The Rust runtime loads these with ``HloModuleProto::from_text_file``.
+
+HLO *text* (not ``.serialize()``) is the interchange format: jax ≥ 0.5
+emits protos with 64-bit instruction ids which xla_extension 0.5.1 (the
+version the published ``xla`` 0.1.6 crate binds) rejects; the text parser
+reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Outputs (under ``artifacts/``):
+* ``cnn_grad_b{μ}.hlo.txt``  for μ ∈ {4, 8, 16, 32, 64, 128} — the
+  learner's calcGradient graph (theta, x, y) -> (grads, loss)
+* ``cnn_eval_b{B}.hlo.txt``  — (theta, x, y) -> (loss[b], correct[b])
+* ``lm_grad_b{μ}.hlo.txt`` / ``lm_eval_b{μ}.hlo.txt`` — transformer LM
+* ``cnn_init.bin`` / ``lm_init.bin`` — deterministic initial weights
+* ``data/synth_train.bin`` / ``data/synth_test.bin`` / ``corpus.bin``
+* ``manifest.json`` — the index the Rust side reads
+"""
+
+import argparse
+import hashlib
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax._src.lib import xla_client as xc
+
+from . import datagen, model
+
+CNN_BATCHES = [4, 8, 16, 32, 64, 128]
+EVAL_BATCH = 128
+LM_BATCH = 8
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, specs, path: str) -> int:
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def cnn_flops_per_sample(cfg) -> int:
+    """Analytic forward FLOPs of the study CNN (multiply+add = 2 FLOPs)."""
+    h, w, c = cfg["height"], cfg["width"], cfg["channels"]
+    f = 0
+    f += 2 * h * w * 9 * c * cfg["conv1"]  # conv1 (SAME)
+    h2, w2 = h // 2, w // 2
+    f += 2 * h2 * w2 * 9 * cfg["conv1"] * cfg["conv2"]  # conv2
+    h4, w4 = h // 4, w // 4
+    flat = h4 * w4 * cfg["conv2"]
+    f += 2 * flat * cfg["fc"] + 2 * cfg["fc"] * cfg["classes"]
+    return f
+
+
+def lm_flops_per_token(cfg) -> int:
+    d, L, m, v = cfg["d_model"], cfg["layers"], cfg["mlp_mult"], cfg["vocab"]
+    s = cfg["seq"]
+    per_layer = 2 * (4 * d * d + 2 * m * d * d) + 2 * 2 * s * d  # proj + attn
+    return L * per_layer + 2 * d * v
+
+
+def build(out_dir: str, args) -> dict:
+    os.makedirs(os.path.join(out_dir, "data"), exist_ok=True)
+    cnn_cfg = dict(model.CNN_DEFAULT)
+    lm_cfg = {**model.LM_DEFAULT, "seq": args.lm_seq, "d_model": args.lm_dmodel,
+              "layers": args.lm_layers}
+
+    manifest = {"version": 1}
+
+    # ----- datasets ------------------------------------------------------
+    h, w, c, nc = (cnn_cfg["height"], cnn_cfg["width"], cnn_cfg["channels"],
+                   cnn_cfg["classes"])
+    train_x, train_y = datagen.gen_images(args.train_n, h, w, c, nc, seed=11)
+    test_x, test_y = datagen.gen_images(args.test_n, h, w, c, nc, seed=22)
+    datagen.write_images(os.path.join(out_dir, "data/synth_train.bin"),
+                         train_x, train_y, nc)
+    datagen.write_images(os.path.join(out_dir, "data/synth_test.bin"),
+                         test_x, test_y, nc)
+    corpus = datagen.gen_corpus(args.corpus_bytes, seed=7)
+    datagen.write_corpus(os.path.join(out_dir, "data/corpus.bin"), corpus)
+    manifest["data"] = {
+        "train": "data/synth_train.bin",
+        "test": "data/synth_test.bin",
+        "corpus": "data/corpus.bin",
+        "train_n": args.train_n,
+        "test_n": args.test_n,
+        "height": h, "width": w, "channels": c, "classes": nc,
+        "corpus_bytes": len(corpus),
+    }
+
+    # ----- CNN ------------------------------------------------------------
+    spec = model.cnn_spec(cnn_cfg)
+    theta0 = model.init_cnn(seed=1234, cfg=cnn_cfg)
+    datagen.write_weights(os.path.join(out_dir, "cnn_init.bin"), theta0)
+    tspec = jax.ShapeDtypeStruct((spec.total,), jnp.float32)
+    grad_paths = {}
+    for mu in CNN_BATCHES:
+        xspec = jax.ShapeDtypeStruct((mu, h, w, c), jnp.float32)
+        yspec = jax.ShapeDtypeStruct((mu,), jnp.int32)
+        name = f"cnn_grad_b{mu}.hlo.txt"
+        n = lower_to_file(model.cnn_grad_fn(cnn_cfg, use_pallas=True),
+                          (tspec, xspec, yspec), os.path.join(out_dir, name))
+        print(f"  {name}: {n} chars")
+        grad_paths[str(mu)] = name
+    xspec = jax.ShapeDtypeStruct((EVAL_BATCH, h, w, c), jnp.float32)
+    yspec = jax.ShapeDtypeStruct((EVAL_BATCH,), jnp.int32)
+    eval_name = f"cnn_eval_b{EVAL_BATCH}.hlo.txt"
+    lower_to_file(model.cnn_eval_fn(cnn_cfg, use_pallas=True),
+                  (tspec, xspec, yspec), os.path.join(out_dir, eval_name))
+    manifest["cnn"] = {
+        "params": spec.total,
+        "cfg": cnn_cfg,
+        "batches": CNN_BATCHES,
+        "grad": grad_paths,
+        "eval": {"batch": EVAL_BATCH, "path": eval_name},
+        "init": "cnn_init.bin",
+        "flops_per_sample": cnn_flops_per_sample(cnn_cfg),
+        "spec": spec.manifest(),
+    }
+
+    # ----- transformer LM --------------------------------------------------
+    if not args.skip_lm:
+        lspec = model.lm_spec(lm_cfg)
+        ltheta0 = model.init_lm(seed=4321, cfg=lm_cfg)
+        datagen.write_weights(os.path.join(out_dir, "lm_init.bin"), ltheta0)
+        tspec = jax.ShapeDtypeStruct((lspec.total,), jnp.float32)
+        tok = jax.ShapeDtypeStruct((LM_BATCH, lm_cfg["seq"]), jnp.int32)
+        grad_name = f"lm_grad_b{LM_BATCH}.hlo.txt"
+        n = lower_to_file(model.lm_grad_fn(lm_cfg, use_pallas=True),
+                          (tspec, tok, tok), os.path.join(out_dir, grad_name))
+        print(f"  {grad_name}: {n} chars")
+        eval_name = f"lm_eval_b{LM_BATCH}.hlo.txt"
+        lower_to_file(model.lm_eval_fn(lm_cfg, use_pallas=True),
+                      (tspec, tok, tok), os.path.join(out_dir, eval_name))
+        manifest["lm"] = {
+            "params": lspec.total,
+            "cfg": lm_cfg,
+            "batch": LM_BATCH,
+            "grad": grad_name,
+            "eval": eval_name,
+            "init": "lm_init.bin",
+            "flops_per_token": lm_flops_per_token(lm_cfg),
+        }
+
+    return manifest
+
+
+def config_digest(args) -> str:
+    keys = sorted(vars(args).items())
+    src_dir = os.path.dirname(os.path.abspath(__file__))
+    h = hashlib.sha256(repr(keys).encode())
+    for fn in sorted(os.listdir(src_dir)) + sorted(
+        os.listdir(os.path.join(src_dir, "kernels"))
+    ):
+        path = os.path.join(src_dir, fn)
+        if not os.path.isfile(path):
+            path = os.path.join(src_dir, "kernels", fn)
+        if path.endswith(".py") and os.path.isfile(path):
+            h.update(open(path, "rb").read())
+    return h.hexdigest()
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out", default="../artifacts/manifest.json",
+                    help="manifest path; artifacts land in its directory")
+    ap.add_argument("--train-n", type=int, default=8192)
+    ap.add_argument("--test-n", type=int, default=1024)
+    ap.add_argument("--corpus-bytes", type=int, default=262144)
+    ap.add_argument("--lm-seq", type=int, default=128)
+    ap.add_argument("--lm-dmodel", type=int, default=256)
+    ap.add_argument("--lm-layers", type=int, default=4)
+    ap.add_argument("--skip-lm", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    out_dir = os.path.dirname(os.path.abspath(args.out)) or "."
+    digest = config_digest(args)
+    if not args.force and os.path.exists(args.out):
+        try:
+            old = json.load(open(args.out))
+            if old.get("digest") == digest:
+                print(f"artifacts up to date ({args.out}); use --force to rebuild")
+                return
+        except Exception:
+            pass
+
+    manifest = build(out_dir, args)
+    manifest["digest"] = digest
+    with open(args.out, "w") as f:
+        json.dump(manifest, f, indent=1, sort_keys=True)
+    print(f"wrote {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,12 @@
+"""Layer-1 Pallas kernels for the Rudra reproduction.
+
+All kernels are authored TPU-idiomatically (MXU-sized blocks, f32
+accumulation, VMEM-resident scratch) but are lowered with
+``interpret=True`` so the resulting HLO runs on the CPU PJRT client that
+the Rust coordinator embeds (real-TPU lowering emits a Mosaic custom-call
+the CPU plugin cannot execute — see DESIGN.md §Hardware-Adaptation).
+"""
+
+from .matmul import matmul  # noqa: F401
+from .fused_linear import fused_linear  # noqa: F401
+from .softmax_xent import softmax_xent, softmax_xent_loss_grad  # noqa: F401

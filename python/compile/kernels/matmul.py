@@ -1,0 +1,142 @@
+"""Tiled Pallas matmul — the GEMM hot-spot of a Rudra learner.
+
+The paper (§5.2) notes that "the dominant computation performed by the
+learners involves multiple calls to matrix multiplication (GEMM)", and
+that small mini-batches proportionally reduce GEMM throughput. This
+kernel is that GEMM, written for the TPU MXU:
+
+* grid = (M/bm, N/bn, K/bk) with the K dimension innermost so each
+  (i, j) output tile stays resident in a VMEM scratch accumulator across
+  the K loop (the classic MXU-feeding schedule);
+* blocks default to 128×128×128 — the MXU systolic array is 128×128;
+* inputs may be bf16 or f32; accumulation is always f32
+  (``preferred_element_type``), matching MXU semantics;
+* arbitrary shapes are handled by zero-padding up to block multiples in
+  the wrapper and slicing the result back (zero rows/cols contribute
+  nothing to the product).
+
+A ``jax.custom_vjp`` makes the kernel differentiable: both cotangent
+GEMMs (dx = g·wᵀ, dw = xᵀ·g) are themselves Pallas calls, so the whole
+backward pass stays on the kernel path in the exported HLO.
+
+VMEM footprint per grid step = bm·bk + bk·bn input tiles + bm·bn f32
+scratch; for the 128³ default that is ≈192 KiB ≪ 16 MiB VMEM, leaving
+room for double buffering (see DESIGN.md §Perf).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _mm_kernel(x_ref, w_ref, o_ref, acc_ref, *, nk: int):
+    """One (i, j, k) grid step: acc += x_tile @ w_tile."""
+
+    @pl.when(pl.program_id(2) == 0)
+    def _zero():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += jnp.dot(
+        x_ref[...], w_ref[...], preferred_element_type=jnp.float32
+    )
+
+    @pl.when(pl.program_id(2) == nk - 1)
+    def _flush():
+        o_ref[...] = acc_ref[...].astype(o_ref.dtype)
+
+
+def _ceil_to(value: int, mult: int) -> int:
+    return (value + mult - 1) // mult * mult
+
+
+def _matmul_raw(x, w, bm, bn, bk, out_dtype, interpret):
+    """Non-differentiable tiled pallas matmul (see module docstring)."""
+    m, k = x.shape
+    _, n = w.shape
+    bm = min(bm, _ceil_to(m, 8))
+    bn = min(bn, _ceil_to(n, 8))
+    bk = min(bk, _ceil_to(k, 8))
+    mp, kp, np_ = _ceil_to(m, bm), _ceil_to(k, bk), _ceil_to(n, bn)
+    xp = jnp.pad(x, ((0, mp - m), (0, kp - k))) if (mp != m or kp != k) else x
+    wp = jnp.pad(w, ((0, kp - k), (0, np_ - n))) if (kp != k or np_ != n) else w
+    nk = kp // bk
+
+    out = pl.pallas_call(
+        functools.partial(_mm_kernel, nk=nk),
+        grid=(mp // bm, np_ // bn, nk),
+        in_specs=[
+            pl.BlockSpec((bm, bk), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((bk, bn), lambda i, j, kk: (kk, j)),
+        ],
+        out_specs=pl.BlockSpec((bm, bn), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), out_dtype),
+        scratch_shapes=[pltpu.VMEM((bm, bn), jnp.float32)],
+        interpret=interpret,
+    )(xp, wp)
+    if mp != m or np_ != n:
+        out = out[:m, :n]
+    return out
+
+
+@functools.lru_cache(maxsize=None)
+def _make_matmul(bm, bn, bk, out_dtype_name, interpret):
+    out_dtype = jnp.dtype(out_dtype_name) if out_dtype_name else None
+
+    @jax.custom_vjp
+    def f(x, w):
+        od = out_dtype or x.dtype
+        return _matmul_raw(x, w, bm, bn, bk, od, interpret)
+
+    def fwd(x, w):
+        return f(x, w), (x, w)
+
+    def bwd(res, g):
+        x, w = res
+        dx = _matmul_raw(g, w.T, bm, bn, bk, x.dtype, interpret)
+        dw = _matmul_raw(x.T, g, bm, bn, bk, w.dtype, interpret)
+        return dx, dw
+
+    f.defvjp(fwd, bwd)
+    return f
+
+
+def matmul(
+    x,
+    w,
+    *,
+    block_m: int = 128,
+    block_n: int = 128,
+    block_k: int = 128,
+    out_dtype=None,
+    interpret: bool = True,
+):
+    """Differentiable ``x @ w`` via the tiled Pallas kernel.
+
+    Args:
+      x: ``[M, K]`` array (f32 or bf16).
+      w: ``[K, N]`` array (same dtype family).
+      block_m/n/k: tile sizes; clamped to the (padded) problem size.
+      out_dtype: output dtype; defaults to ``x.dtype``.
+      interpret: keep True for CPU-PJRT execution (see module docstring).
+
+    Returns:
+      ``[M, N]`` product, f32-accumulated.
+    """
+    if x.ndim != 2 or w.ndim != 2:
+        raise ValueError(f"matmul expects 2-D operands, got {x.shape} @ {w.shape}")
+    if x.shape[1] != w.shape[0]:
+        raise ValueError(f"contraction mismatch: {x.shape} @ {w.shape}")
+    name = jnp.dtype(out_dtype).name if out_dtype else None
+    return _make_matmul(block_m, block_n, block_k, name, interpret)(x, w)
+
+
+def vmem_bytes(block_m: int, block_n: int, block_k: int, in_bytes: int = 4) -> int:
+    """Static VMEM-footprint estimate for one grid step (perf analysis)."""
+    return (
+        block_m * block_k * in_bytes
+        + block_k * block_n * in_bytes
+        + block_m * block_n * 4  # f32 scratch accumulator
+    )

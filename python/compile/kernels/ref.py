@@ -1,0 +1,48 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the correctness ground truth: ``python/tests`` sweeps shapes and
+dtypes with hypothesis and asserts the kernels match these to float
+tolerance; the L2 models can also be built entirely from these (``use_pallas
+=False``) which is how the model-level equivalence tests work.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w, out_dtype=None):
+    """f32-accumulated ``x @ w``, matching the kernel's MXU semantics."""
+    out_dtype = out_dtype or x.dtype
+    return jnp.dot(x, w, preferred_element_type=jnp.float32).astype(out_dtype)
+
+
+def fused_linear_ref(x, w, b, act="none", out_dtype=None):
+    out_dtype = out_dtype or x.dtype
+    y = jnp.dot(x, w, preferred_element_type=jnp.float32) + b.astype(jnp.float32)
+    if act == "relu":
+        y = jnp.maximum(y, 0.0)
+    elif act == "gelu":
+        y = jax.nn.gelu(y)
+    elif act == "tanh":
+        y = jnp.tanh(y)
+    elif act != "none":
+        raise ValueError(f"unknown activation {act!r}")
+    return y.astype(out_dtype)
+
+
+def softmax_xent_loss_grad_ref(logits, labels):
+    """Per-row cross-entropy loss and logit gradient."""
+    z = logits.astype(jnp.float32)
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    shifted = z - zmax
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=-1, keepdims=True))
+    logp = shifted - lse
+    onehot = jax.nn.one_hot(labels, z.shape[-1], dtype=jnp.float32)
+    loss = -jnp.sum(logp * onehot, axis=-1)
+    grad = (jnp.exp(logp) - onehot).astype(logits.dtype)
+    return loss, grad
+
+
+def softmax_xent_ref(logits, labels):
+    loss, _ = softmax_xent_loss_grad_ref(logits, labels)
+    return jnp.mean(loss)

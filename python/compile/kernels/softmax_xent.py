@@ -1,0 +1,94 @@
+"""Fused row-softmax + cross-entropy (+ gradient) Pallas kernel.
+
+Computes, for every row of a ``[B, C]`` logit matrix with integer labels:
+
+* ``loss_b  = logsumexp(z_b) - z_b[y_b]``
+* ``grad_b  = softmax(z_b) - onehot(y_b)``
+
+in one pass, so the ``[B, C]`` probability tensor never leaves VMEM.
+A ``jax.custom_vjp`` wrapper (``softmax_xent``) exposes the mean loss to
+``jax.grad`` while reusing the kernel-computed gradient — the backward
+pass costs one elementwise scale instead of a second softmax.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .matmul import _ceil_to
+
+
+def _xent_kernel(z_ref, y_ref, loss_ref, grad_ref):
+    z = z_ref[...].astype(jnp.float32)  # [bb, C]
+    y = y_ref[...]  # [bb, 1] int32
+    zmax = jnp.max(z, axis=-1, keepdims=True)
+    shifted = z - zmax
+    ez = jnp.exp(shifted)
+    sez = jnp.sum(ez, axis=-1, keepdims=True)
+    lse = jnp.log(sez)  # [bb, 1]
+    cols = jax.lax.broadcasted_iota(jnp.int32, z.shape, 1)
+    onehot = (cols == y).astype(jnp.float32)  # [bb, C]
+    correct = jnp.sum(shifted * onehot, axis=-1, keepdims=True)
+    loss_ref[...] = (lse - correct).astype(loss_ref.dtype)
+    grad_ref[...] = (ez / sez - onehot).astype(grad_ref.dtype)
+
+
+def softmax_xent_loss_grad(logits, labels, *, block_b: int = 128, interpret: bool = True):
+    """Per-row ``(loss[B], grad[B, C])`` from the fused kernel.
+
+    Rows are processed in blocks of ``block_b``; the class dimension stays
+    whole (C ≤ a few thousand fits VMEM comfortably: 128·4096·4 B = 2 MiB).
+    Padded rows get label -1, which matches no column, and their loss rows
+    are sliced away.
+    """
+    b, c = logits.shape
+    if labels.shape != (b,):
+        raise ValueError(f"labels shape {labels.shape} != ({b},)")
+    bb = min(block_b, _ceil_to(b, 8))
+    bp = _ceil_to(b, bb)
+    zp = jnp.pad(logits, ((0, bp - b), (0, 0))) if bp != b else logits
+    yp = labels.astype(jnp.int32)
+    if bp != b:
+        yp = jnp.pad(yp, (0, bp - b), constant_values=-1)
+    yp = yp.reshape(bp, 1)
+
+    loss, grad = pl.pallas_call(
+        _xent_kernel,
+        grid=(bp // bb,),
+        in_specs=[
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((bb, 1), lambda i: (i, 0)),
+            pl.BlockSpec((bb, c), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((bp, 1), jnp.float32),
+            jax.ShapeDtypeStruct((bp, c), logits.dtype),
+        ],
+        interpret=interpret,
+    )(zp, yp)
+    return loss[:b, 0], grad[:b]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=(2,))
+def softmax_xent(logits, labels, interpret: bool = True):
+    """Mean cross-entropy over the batch, differentiable w.r.t. logits."""
+    loss, _ = softmax_xent_loss_grad(logits, labels, interpret=interpret)
+    return jnp.mean(loss)
+
+
+def _xent_fwd(logits, labels, interpret):
+    loss, grad = softmax_xent_loss_grad(logits, labels, interpret=interpret)
+    return jnp.mean(loss), (grad, logits.shape[0])
+
+
+def _xent_bwd(interpret, res, ct):
+    grad, b = res
+    return (grad * (ct / b), None)
+
+
+softmax_xent.defvjp(_xent_fwd, _xent_bwd)

@@ -1,0 +1,344 @@
+"""Layer-2 JAX models for the Rudra reproduction.
+
+Two model families, both expressed as pure functions of a **flat f32
+parameter vector** ``theta`` so the Rust parameter server can treat
+weights, gradients, and optimizer state as opaque dense vectors (exactly
+how the paper's PS treats the model: "the size of pull and push messages
+is the same as the model size"):
+
+* ``cnn_*``  — the paper's CIFAR10 study model family (conv-pool ×2 →
+  FC → softmax), scaled to the synthetic benchmark described in
+  DESIGN.md §3.
+* ``lm_*``   — a decoder-only transformer byte-LM used by the end-to-end
+  example (``examples/transformer_e2e.rs``).
+
+All dense projections route through the Layer-1 Pallas kernels
+(``use_pallas=True``); setting ``use_pallas=False`` swaps every kernel for
+its pure-jnp oracle, which is how the model-level equivalence tests work.
+
+Exported graphs (see ``aot.py``):
+* grad:  (theta[P], x, y) -> (grads[P], loss)
+* eval:  (theta[P], x, y) -> (per-example loss, per-example correct)
+"""
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import fused_linear, matmul, softmax_xent
+from .kernels import ref as kref
+
+# ---------------------------------------------------------------------------
+# Flat parameter packing
+# ---------------------------------------------------------------------------
+
+
+class ParamSpec:
+    """Ordered (name, shape) table mapping a flat vector to named tensors."""
+
+    def __init__(self, entries):
+        self.entries = [(name, tuple(shape)) for name, shape in entries]
+        self.offsets = {}
+        off = 0
+        for name, shape in self.entries:
+            n = int(np.prod(shape)) if shape else 1
+            self.offsets[name] = (off, n, shape)
+            off += n
+        self.total = off
+
+    def unpack(self, theta):
+        """Flat ``theta[P]`` -> dict of named, shaped tensors (traceable)."""
+        out = {}
+        for name, (off, n, shape) in self.offsets.items():
+            out[name] = jax.lax.dynamic_slice(theta, (off,), (n,)).reshape(shape)
+        return out
+
+    def pack(self, tensors) -> np.ndarray:
+        """Dict of named numpy arrays -> flat f32 vector."""
+        flat = np.zeros(self.total, dtype=np.float32)
+        for name, (off, n, shape) in self.offsets.items():
+            arr = np.asarray(tensors[name], dtype=np.float32)
+            if arr.shape != shape:
+                raise ValueError(f"{name}: got {arr.shape}, want {shape}")
+            flat[off : off + n] = arr.reshape(-1)
+        return flat
+
+    def manifest(self):
+        return {
+            "total": self.total,
+            "entries": [
+                {"name": n, "shape": list(s), "offset": self.offsets[n][0]}
+                for n, s in self.entries
+            ],
+        }
+
+
+# ---------------------------------------------------------------------------
+# CNN (the paper's CIFAR10 study model, scaled to the synthetic benchmark)
+# ---------------------------------------------------------------------------
+
+CNN_DEFAULT = {
+    "height": 12,
+    "width": 12,
+    "channels": 3,
+    "classes": 10,
+    "conv1": 16,
+    "conv2": 32,
+    "fc": 64,
+}
+
+
+def cnn_spec(cfg=None) -> ParamSpec:
+    cfg = {**CNN_DEFAULT, **(cfg or {})}
+    h, w = cfg["height"], cfg["width"]
+    # two 2x2 max-pools
+    fh, fw = h // 4, w // 4
+    flat = fh * fw * cfg["conv2"]
+    return ParamSpec(
+        [
+            ("conv1/w", (3, 3, cfg["channels"], cfg["conv1"])),
+            ("conv1/b", (cfg["conv1"],)),
+            ("conv2/w", (3, 3, cfg["conv1"], cfg["conv2"])),
+            ("conv2/b", (cfg["conv2"],)),
+            ("fc1/w", (flat, cfg["fc"])),
+            ("fc1/b", (cfg["fc"],)),
+            ("fc2/w", (cfg["fc"], cfg["classes"])),
+            ("fc2/b", (cfg["classes"],)),
+        ]
+    )
+
+
+def _conv(x, w, b):
+    y = jax.lax.conv_general_dilated(
+        x,
+        w,
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+    return jax.nn.relu(y + b)
+
+
+def _maxpool2(x):
+    return jax.lax.reduce_window(
+        x, -jnp.inf, jax.lax.max, (1, 2, 2, 1), (1, 2, 2, 1), "VALID"
+    )
+
+
+def _linear(x, w, b, act, use_pallas):
+    if use_pallas:
+        return fused_linear(x, w, b, act=act)
+    return kref.fused_linear_ref(x, w, b, act=act)
+
+
+def cnn_logits(theta, x, cfg=None, use_pallas=True):
+    """``x``: [b, H, W, C] f32 -> logits [b, classes]."""
+    cfg = {**CNN_DEFAULT, **(cfg or {})}
+    p = cnn_spec(cfg).unpack(theta)
+    y = _conv(x, p["conv1/w"], p["conv1/b"])
+    y = _maxpool2(y)
+    y = _conv(y, p["conv2/w"], p["conv2/b"])
+    y = _maxpool2(y)
+    y = y.reshape(y.shape[0], -1)
+    y = _linear(y, p["fc1/w"], p["fc1/b"], "relu", use_pallas)
+    return _linear(y, p["fc2/w"], p["fc2/b"], "none", use_pallas)
+
+
+def cnn_loss(theta, x, y, cfg=None, use_pallas=True):
+    logits = cnn_logits(theta, x, cfg, use_pallas)
+    if use_pallas:
+        return softmax_xent(logits, y)
+    return kref.softmax_xent_ref(logits, y)
+
+
+def cnn_grad_fn(cfg=None, use_pallas=True):
+    """(theta, x, y) -> (grads[P], loss) — the learner's calcGradient."""
+
+    def fn(theta, x, y):
+        loss, grads = jax.value_and_grad(
+            lambda t: cnn_loss(t, x, y, cfg, use_pallas)
+        )(theta)
+        return grads, loss
+
+    return fn
+
+
+def cnn_eval_fn(cfg=None, use_pallas=True):
+    """(theta, x, y) -> (per-example loss [b], correct [b] f32)."""
+
+    def fn(theta, x, y):
+        logits = cnn_logits(theta, x, cfg, use_pallas)
+        loss, _ = kref.softmax_xent_loss_grad_ref(logits, y)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        correct = (pred == y).astype(jnp.float32)
+        return loss, correct
+
+    return fn
+
+
+def init_cnn(seed: int, cfg=None) -> np.ndarray:
+    """He-initialized flat parameter vector (deterministic in ``seed``)."""
+    cfg = {**CNN_DEFAULT, **(cfg or {})}
+    spec = cnn_spec(cfg)
+    rng = np.random.default_rng(seed)
+    tensors = {}
+    for name, shape in spec.entries:
+        if name.endswith("/b"):
+            tensors[name] = np.zeros(shape, np.float32)
+        else:
+            fan_in = int(np.prod(shape[:-1]))
+            std = math.sqrt(2.0 / fan_in)
+            tensors[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+    return spec.pack(tensors)
+
+
+# ---------------------------------------------------------------------------
+# Transformer byte-LM (end-to-end example)
+# ---------------------------------------------------------------------------
+
+LM_DEFAULT = {
+    "vocab": 256,
+    "d_model": 256,
+    "layers": 4,
+    "heads": 4,
+    "mlp_mult": 4,
+    "seq": 128,
+}
+
+
+def lm_spec(cfg=None) -> ParamSpec:
+    cfg = {**LM_DEFAULT, **(cfg or {})}
+    d, v, m = cfg["d_model"], cfg["vocab"], cfg["mlp_mult"]
+    entries = [("embed", (v, d)), ("pos", (cfg["seq"], d))]
+    for i in range(cfg["layers"]):
+        pre = f"layer{i}/"
+        entries += [
+            (pre + "ln1/g", (d,)),
+            (pre + "ln1/b", (d,)),
+            (pre + "attn/wqkv", (d, 3 * d)),
+            (pre + "attn/bqkv", (3 * d,)),
+            (pre + "attn/wo", (d, d)),
+            (pre + "attn/bo", (d,)),
+            (pre + "ln2/g", (d,)),
+            (pre + "ln2/b", (d,)),
+            (pre + "mlp/w1", (d, m * d)),
+            (pre + "mlp/b1", (m * d,)),
+            (pre + "mlp/w2", (m * d, d)),
+            (pre + "mlp/b2", (d,)),
+        ]
+    entries += [("lnf/g", (d,)), ("lnf/b", (d,)), ("head/w", (d, v)), ("head/b", (v,))]
+    return ParamSpec(entries)
+
+
+def _layernorm(x, g, b, eps=1e-5):
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * g + b
+
+
+def _mm(x, w, use_pallas):
+    if use_pallas:
+        return matmul(x, w)
+    return kref.matmul_ref(x, w)
+
+
+def lm_logits(theta, tokens, cfg=None, use_pallas=True):
+    """``tokens``: [b, S] int32 -> logits [b, S, V]."""
+    cfg = {**LM_DEFAULT, **(cfg or {})}
+    d, nh = cfg["d_model"], cfg["heads"]
+    b, s = tokens.shape
+    p = lm_spec(cfg).unpack(theta)
+    x = p["embed"][tokens] + p["pos"][None, :s, :]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.asarray(-1e9, jnp.float32)
+    for i in range(cfg["layers"]):
+        pre = f"layer{i}/"
+        h = _layernorm(x, p[pre + "ln1/g"], p[pre + "ln1/b"])
+        qkv = (
+            _mm(h.reshape(b * s, d), p[pre + "attn/wqkv"], use_pallas)
+            + p[pre + "attn/bqkv"]
+        ).reshape(b, s, 3, nh, d // nh)
+        q, k, v = qkv[:, :, 0], qkv[:, :, 1], qkv[:, :, 2]
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / math.sqrt(d // nh)
+        att = jnp.where(mask[None, None] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b * s, d)
+        o = _mm(o, p[pre + "attn/wo"], use_pallas) + p[pre + "attn/bo"]
+        x = x + o.reshape(b, s, d)
+        h = _layernorm(x, p[pre + "ln2/g"], p[pre + "ln2/b"])
+        if use_pallas:
+            h1 = fused_linear(
+                h.reshape(b * s, d), p[pre + "mlp/w1"], p[pre + "mlp/b1"], act="gelu"
+            )
+        else:
+            h1 = kref.fused_linear_ref(
+                h.reshape(b * s, d), p[pre + "mlp/w1"], p[pre + "mlp/b1"], act="gelu"
+            )
+        h2 = _mm(h1, p[pre + "mlp/w2"], use_pallas) + p[pre + "mlp/b2"]
+        x = x + h2.reshape(b, s, d)
+    x = _layernorm(x, p["lnf/g"], p["lnf/b"])
+    logits = _mm(x.reshape(b * s, d), p["head/w"], use_pallas) + p["head/b"]
+    return logits.reshape(b, s, cfg["vocab"])
+
+
+def lm_loss(theta, tokens, targets, cfg=None, use_pallas=True):
+    cfg = {**LM_DEFAULT, **(cfg or {})}
+    logits = lm_logits(theta, tokens, cfg, use_pallas)
+    flat = logits.reshape(-1, cfg["vocab"])
+    y = targets.reshape(-1)
+    if use_pallas:
+        return softmax_xent(flat, y)
+    return kref.softmax_xent_ref(flat, y)
+
+
+def lm_grad_fn(cfg=None, use_pallas=True):
+    def fn(theta, tokens, targets):
+        loss, grads = jax.value_and_grad(
+            lambda t: lm_loss(t, tokens, targets, cfg, use_pallas)
+        )(theta)
+        return grads, loss
+
+    return fn
+
+
+def lm_eval_fn(cfg=None, use_pallas=True):
+    """(theta, tok, tgt) -> (per-token loss [b*S], correct [b*S])."""
+
+    def fn(theta, tokens, targets):
+        cfg_ = {**LM_DEFAULT, **(cfg or {})}
+        logits = lm_logits(theta, tokens, cfg_, use_pallas).reshape(
+            -1, cfg_["vocab"]
+        )
+        y = targets.reshape(-1)
+        loss, _ = kref.softmax_xent_loss_grad_ref(logits, y)
+        pred = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return loss, (pred == y).astype(jnp.float32)
+
+    return fn
+
+
+def init_lm(seed: int, cfg=None) -> np.ndarray:
+    cfg = {**LM_DEFAULT, **(cfg or {})}
+    spec = lm_spec(cfg)
+    rng = np.random.default_rng(seed)
+    n_layers = cfg["layers"]
+    tensors = {}
+    for name, shape in spec.entries:
+        if name.endswith("/g"):
+            tensors[name] = np.ones(shape, np.float32)
+        elif name.endswith("/b") or name.endswith("/b1") or name.endswith("/b2") or name.endswith("bqkv") or name.endswith("bo"):
+            tensors[name] = np.zeros(shape, np.float32)
+        elif name in ("embed", "pos"):
+            tensors[name] = rng.normal(0.0, 0.02, size=shape).astype(np.float32)
+        else:
+            fan_in = shape[0]
+            std = 0.02
+            if name.endswith("wo") or name.endswith("w2"):
+                # residual-branch projections scaled down with depth
+                std = 0.02 / math.sqrt(2 * n_layers)
+            tensors[name] = rng.normal(0.0, std, size=shape).astype(np.float32)
+            del fan_in
+    return spec.pack(tensors)

@@ -1,0 +1,95 @@
+"""L1 perf analysis: block-shape sweep for the Pallas kernels.
+
+interpret=True gives CPU-numpy timings only — NOT a TPU proxy — so this
+tool optimizes *structure*: for each candidate block shape it reports
+
+* VMEM footprint per grid step (input tiles + f32 accumulator), which
+  must leave headroom for double buffering inside the 16 MiB budget;
+* an MXU-utilization estimate: the fraction of each (bm, bk)·(bk, bn)
+  tile-multiply that lands on full 128×128×128 systolic passes, i.e.
+  (bm·bn·bk) / (⌈bm/128⌉·⌈bn/128⌉·⌈bk/128⌉·128³) — padding waste;
+* grid-step count (smaller = less per-step launch/pipeline overhead);
+* wall time under interpret mode relative to the pure-jnp oracle, as a
+  *correctness-path* sanity number only.
+
+Usage: cd python && python -m compile.perf_kernels
+"""
+
+import math
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .kernels import matmul
+from .kernels import ref as kref
+from .kernels.matmul import vmem_bytes
+
+VMEM_BUDGET = 16 * 1024 * 1024
+
+# The model's dominant GEMMs: (label, M, K, N)
+WORKLOADS = [
+    ("cnn fc1 μ=128", 128, 288, 64),
+    ("lm qkv b*s=1024", 1024, 256, 768),
+    ("lm mlp1", 1024, 256, 1024),
+    ("lm head", 1024, 256, 256),
+]
+
+BLOCKS = [(64, 64, 64), (128, 128, 128), (256, 128, 128), (128, 128, 256), (256, 256, 128)]
+
+
+def mxu_utilization(m, k, n, bm, bk, bn):
+    """Fraction of issued MXU work that is useful (non-padding)."""
+    bm, bk, bn = min(bm, m), min(bk, k), min(bn, n)
+    tiles = math.ceil(m / bm) * math.ceil(k / bk) * math.ceil(n / bn)
+    issued = tiles * (
+        math.ceil(bm / 128) * math.ceil(bk / 128) * math.ceil(bn / 128) * 128**3
+    )
+    return (m * k * n) / issued
+
+
+def grid_steps(m, k, n, bm, bk, bn):
+    return math.ceil(m / bm) * math.ceil(n / bn) * math.ceil(k / bk)
+
+
+def time_fn(fn, *args, iters=5):
+    fn(*args)[0].block_until_ready() if isinstance(fn(*args), tuple) else jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / iters
+
+
+def main():
+    print("L1 block-shape sweep (structure metrics; interpret timings are CPU-only)\n")
+    rng = np.random.default_rng(0)
+    for label, m, k, n in WORKLOADS:
+        x = jnp.asarray(rng.standard_normal((m, k)).astype(np.float32))
+        w = jnp.asarray(rng.standard_normal((k, n)).astype(np.float32))
+        ref_t = time_fn(jax.jit(kref.matmul_ref), x, w)
+        print(f"== {label}: [{m}x{k}]·[{k}x{n}]  (jnp ref {ref_t*1e3:.2f} ms)")
+        print(f"   {'blocks':>16} {'VMEM/step':>10} {'dbl-buf ok':>10} {'MXU util':>9} {'steps':>6} {'interp ms':>10}")
+        best = None
+        for bm, bn, bk in BLOCKS:
+            vm = vmem_bytes(min(bm, m), min(bn, n), min(bk, k))
+            util = mxu_utilization(m, k, n, bm, bk, bn)
+            steps = grid_steps(m, k, n, bm, bk, bn)
+            f = jax.jit(
+                lambda a, b, bm=bm, bn=bn, bk=bk: matmul(
+                    a, b, block_m=bm, block_n=bn, block_k=bk
+                )
+            )
+            t = time_fn(f, x, w)
+            ok = "yes" if 2 * vm < VMEM_BUDGET else "NO"
+            print(
+                f"   {f'{bm}x{bn}x{bk}':>16} {vm/1024:>8.0f}KB {ok:>10} {util:>8.1%} {steps:>6} {t*1e3:>9.2f}"
+            )
+            score = (util, -steps)
+            if best is None or score > best[0]:
+                best = (score, (bm, bn, bk))
+        print(f"   -> structure pick: {best[1]}\n")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,159 @@
+"""Kernel-vs-oracle correctness: the core L1 signal.
+
+Hypothesis sweeps shapes and dtypes for every Pallas kernel against the
+pure-jnp oracles in ``compile.kernels.ref``.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import fused_linear, matmul, softmax_xent, softmax_xent_loss_grad
+from compile.kernels import ref as kref
+from compile.kernels.matmul import vmem_bytes
+
+DIMS = st.integers(min_value=1, max_value=160)
+SMALL_DIMS = st.integers(min_value=1, max_value=48)
+
+
+def rand(rng, *shape, dtype=np.float32):
+    return jnp.asarray(rng.standard_normal(shape).astype(dtype))
+
+
+@settings(max_examples=25, deadline=None)
+@given(m=DIMS, k=DIMS, n=DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_matches_ref_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x, w = rand(rng, m, k), rand(rng, k, n)
+    got = matmul(x, w)
+    want = kref.matmul_ref(x, w)
+    # K split across blocks accumulates in a different order than one
+    # fused dot; allow a few ulps of f32 reassociation slack.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=5e-5)
+
+
+@settings(max_examples=10, deadline=None)
+@given(m=SMALL_DIMS, k=SMALL_DIMS, n=SMALL_DIMS, seed=st.integers(0, 2**31 - 1))
+def test_matmul_bf16_accumulates_f32(m, k, n, seed):
+    rng = np.random.default_rng(seed)
+    x = rand(rng, m, k).astype(jnp.bfloat16)
+    w = rand(rng, k, n).astype(jnp.bfloat16)
+    got = matmul(x, w, out_dtype=jnp.float32)
+    want = kref.matmul_ref(x, w, out_dtype=jnp.float32)
+    np.testing.assert_allclose(
+        np.asarray(got), np.asarray(want), rtol=2e-2, atol=2e-2
+    )
+
+
+@pytest.mark.parametrize("bm,bn,bk", [(8, 8, 8), (32, 16, 64), (128, 128, 128)])
+def test_matmul_block_shapes_equivalent(bm, bn, bk):
+    rng = np.random.default_rng(0)
+    x, w = rand(rng, 70, 90), rand(rng, 90, 50)
+    got = matmul(x, w, block_m=bm, block_n=bn, block_k=bk)
+    np.testing.assert_allclose(got, kref.matmul_ref(x, w), rtol=1e-5, atol=1e-5)
+
+
+def test_matmul_rejects_bad_shapes():
+    x = jnp.zeros((4, 5))
+    with pytest.raises(ValueError):
+        matmul(x, jnp.zeros((6, 3)))
+    with pytest.raises(ValueError):
+        matmul(jnp.zeros((4,)), jnp.zeros((4, 2)))
+
+
+def test_matmul_grad_matches_ref_grad():
+    rng = np.random.default_rng(3)
+    x, w = rand(rng, 24, 40), rand(rng, 40, 16)
+
+    def f_pallas(x, w):
+        return jnp.sum(matmul(x, w) ** 2)
+
+    def f_ref(x, w):
+        return jnp.sum(kref.matmul_ref(x, w) ** 2)
+
+    gx1, gw1 = jax.grad(f_pallas, argnums=(0, 1))(x, w)
+    gx2, gw2 = jax.grad(f_ref, argnums=(0, 1))(x, w)
+    np.testing.assert_allclose(gx1, gx2, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(gw1, gw2, rtol=1e-4, atol=1e-4)
+
+
+def test_vmem_estimate_within_budget():
+    # default 128³ f32 tiling must fit comfortably in 16 MiB VMEM
+    assert vmem_bytes(128, 128, 128) < 1 << 20
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=DIMS,
+    k=DIMS,
+    n=DIMS,
+    act=st.sampled_from(["none", "relu", "gelu", "tanh"]),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_linear_matches_ref(m, k, n, act, seed):
+    rng = np.random.default_rng(seed)
+    x, w, b = rand(rng, m, k), rand(rng, k, n), rand(rng, n)
+    got = fused_linear(x, w, b, act=act)
+    want = kref.fused_linear_ref(x, w, b, act=act)
+    # K-blocked accumulation reorders float sums vs the fused reference;
+    # allow a few ulps of f32 reassociation slack.
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=5e-5)
+
+
+def test_fused_linear_rejects_unknown_act():
+    with pytest.raises(ValueError):
+        fused_linear(jnp.zeros((2, 2)), jnp.zeros((2, 2)), jnp.zeros(2), act="swish")
+
+
+@pytest.mark.parametrize("act", ["none", "relu", "gelu", "tanh"])
+def test_fused_linear_grads_match_ref(act):
+    rng = np.random.default_rng(11)
+    x, w, b = rand(rng, 20, 30), rand(rng, 30, 10), rand(rng, 10)
+
+    def f_pallas(x, w, b):
+        return jnp.sum(fused_linear(x, w, b, act=act) ** 2)
+
+    def f_ref(x, w, b):
+        return jnp.sum(kref.fused_linear_ref(x, w, b, act=act) ** 2)
+
+    g1 = jax.grad(f_pallas, argnums=(0, 1, 2))(x, w, b)
+    g2 = jax.grad(f_ref, argnums=(0, 1, 2))(x, w, b)
+    for a, b_ in zip(g1, g2):
+        np.testing.assert_allclose(a, b_, rtol=1e-4, atol=1e-4)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    b=st.integers(1, 130),
+    c=st.integers(2, 40),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_softmax_xent_matches_ref(b, c, seed):
+    rng = np.random.default_rng(seed)
+    logits = rand(rng, b, c) * 3.0
+    labels = jnp.asarray(rng.integers(0, c, size=b).astype(np.int32))
+    loss, grad = softmax_xent_loss_grad(logits, labels)
+    loss_ref, grad_ref = kref.softmax_xent_loss_grad_ref(logits, labels)
+    np.testing.assert_allclose(loss, loss_ref, rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(grad, grad_ref, rtol=1e-5, atol=1e-5)
+
+
+def test_softmax_xent_custom_vjp_matches_autodiff_of_ref():
+    rng = np.random.default_rng(5)
+    logits = rand(rng, 32, 10)
+    labels = jnp.asarray(rng.integers(0, 10, size=32).astype(np.int32))
+    g1 = jax.grad(lambda z: softmax_xent(z, labels))(logits)
+    g2 = jax.grad(lambda z: kref.softmax_xent_ref(z, labels))(logits)
+    np.testing.assert_allclose(g1, g2, rtol=1e-5, atol=1e-6)
+
+
+def test_softmax_xent_extreme_logits_stable():
+    # large logits must not overflow (max-subtraction in the kernel)
+    logits = jnp.asarray([[1e4, -1e4, 0.0], [5e3, 5e3, 5e3]], jnp.float32)
+    labels = jnp.asarray([0, 1], jnp.int32)
+    loss, grad = softmax_xent_loss_grad(logits, labels)
+    assert np.isfinite(np.asarray(loss)).all()
+    assert np.isfinite(np.asarray(grad)).all()
+    np.testing.assert_allclose(loss[0], 0.0, atol=1e-5)

@@ -1,0 +1,149 @@
+"""Model-level tests: shapes, packing, pallas↔ref equivalence, learning."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model
+
+
+def rand_batch(rng, b, cfg):
+    x = rng.standard_normal((b, cfg["height"], cfg["width"], cfg["channels"]))
+    y = rng.integers(0, cfg["classes"], size=b)
+    return jnp.asarray(x.astype(np.float32)), jnp.asarray(y.astype(np.int32))
+
+
+class TestParamSpec:
+    def test_pack_unpack_roundtrip(self):
+        spec = model.ParamSpec([("a", (2, 3)), ("b", (4,)), ("c", (1, 1, 2))])
+        assert spec.total == 12
+        rng = np.random.default_rng(0)
+        tensors = {n: rng.standard_normal(s).astype(np.float32) for n, s in spec.entries}
+        flat = spec.pack(tensors)
+        out = spec.unpack(jnp.asarray(flat))
+        for n, s in spec.entries:
+            np.testing.assert_array_equal(np.asarray(out[n]), tensors[n])
+
+    def test_pack_rejects_wrong_shape(self):
+        spec = model.ParamSpec([("a", (2, 2))])
+        with pytest.raises(ValueError):
+            spec.pack({"a": np.zeros((3, 2), np.float32)})
+
+    def test_manifest_offsets_are_contiguous(self):
+        spec = model.cnn_spec()
+        man = spec.manifest()
+        off = 0
+        for e in man["entries"]:
+            assert e["offset"] == off
+            off += int(np.prod(e["shape"]))
+        assert off == man["total"] == spec.total
+
+
+class TestCnn:
+    def test_param_count(self):
+        # conv1 3·3·3·16+16, conv2 3·3·16·32+32, fc1 288·64+64, fc2 64·10+10
+        assert model.cnn_spec().total == 432 + 16 + 4608 + 32 + 18432 + 64 + 640 + 10
+
+    def test_logits_shape(self):
+        theta = jnp.asarray(model.init_cnn(0))
+        rng = np.random.default_rng(1)
+        x, _ = rand_batch(rng, 8, model.CNN_DEFAULT)
+        assert model.cnn_logits(theta, x).shape == (8, 10)
+
+    def test_grad_pallas_equals_ref(self):
+        theta = jnp.asarray(model.init_cnn(0))
+        rng = np.random.default_rng(2)
+        x, y = rand_batch(rng, 8, model.CNN_DEFAULT)
+        g1, l1 = jax.jit(model.cnn_grad_fn(use_pallas=True))(theta, x, y)
+        g2, l2 = jax.jit(model.cnn_grad_fn(use_pallas=False))(theta, x, y)
+        np.testing.assert_allclose(l1, l2, rtol=1e-5, atol=1e-5)
+        np.testing.assert_allclose(g1, g2, rtol=1e-4, atol=1e-5)
+
+    def test_grad_matches_finite_difference(self):
+        cfg = {**model.CNN_DEFAULT, "height": 8, "width": 8, "conv1": 4, "conv2": 4, "fc": 8}
+        theta = jnp.asarray(model.init_cnn(3, cfg))
+        rng = np.random.default_rng(3)
+        x, y = rand_batch(rng, 4, cfg)
+        grads, _ = jax.jit(model.cnn_grad_fn(cfg, use_pallas=True))(theta, x, y)
+        # probe a few random coordinates
+        eps = 1e-3
+        loss = lambda t: float(model.cnn_loss(t, x, y, cfg, use_pallas=False))
+        idx = rng.integers(0, theta.shape[0], size=5)
+        for i in idx:
+            e = jnp.zeros_like(theta).at[i].set(eps)
+            fd = (loss(theta + e) - loss(theta - e)) / (2 * eps)
+            assert abs(fd - float(grads[i])) < 5e-2, f"coord {i}: fd={fd} ad={grads[i]}"
+
+    def test_sgd_reduces_loss(self):
+        theta = jnp.asarray(model.init_cnn(4))
+        rng = np.random.default_rng(4)
+        x, y = rand_batch(rng, 32, model.CNN_DEFAULT)
+        grad_fn = jax.jit(model.cnn_grad_fn(use_pallas=True))
+        losses = []
+        for _ in range(20):
+            g, l = grad_fn(theta, x, y)
+            losses.append(float(l))
+            theta = theta - 0.05 * g
+        assert losses[-1] < losses[0] * 0.8, losses
+
+    def test_eval_fn_counts_correct(self):
+        theta = jnp.asarray(model.init_cnn(5))
+        rng = np.random.default_rng(5)
+        x, y = rand_batch(rng, 16, model.CNN_DEFAULT)
+        loss, correct = jax.jit(model.cnn_eval_fn(use_pallas=True))(theta, x, y)
+        assert loss.shape == (16,)
+        assert correct.shape == (16,)
+        assert set(np.unique(np.asarray(correct))) <= {0.0, 1.0}
+
+    def test_init_deterministic(self):
+        np.testing.assert_array_equal(model.init_cnn(7), model.init_cnn(7))
+        assert not np.array_equal(model.init_cnn(7), model.init_cnn(8))
+
+
+class TestLm:
+    CFG = {**model.LM_DEFAULT, "d_model": 64, "layers": 2, "heads": 2, "seq": 32}
+
+    def test_logits_shape_and_causality(self):
+        theta = jnp.asarray(model.init_lm(0, self.CFG))
+        rng = np.random.default_rng(0)
+        tok = jnp.asarray(rng.integers(0, 256, size=(2, 32)).astype(np.int32))
+        logits = model.lm_logits(theta, tok, self.CFG, use_pallas=False)
+        assert logits.shape == (2, 32, 256)
+        # causality: changing a later token must not affect earlier logits
+        tok2 = tok.at[:, 20].set((tok[:, 20] + 1) % 256)
+        logits2 = model.lm_logits(theta, tok2, self.CFG, use_pallas=False)
+        np.testing.assert_allclose(
+            logits[:, :20], logits2[:, :20], rtol=1e-4, atol=1e-4
+        )
+        assert not np.allclose(logits[:, 20:], logits2[:, 20:], atol=1e-4)
+
+    def test_grad_pallas_equals_ref(self):
+        theta = jnp.asarray(model.init_lm(1, self.CFG))
+        rng = np.random.default_rng(1)
+        tok = jnp.asarray(rng.integers(0, 256, size=(2, 32)).astype(np.int32))
+        g1, l1 = jax.jit(model.lm_grad_fn(self.CFG, use_pallas=True))(theta, tok, tok)
+        g2, l2 = jax.jit(model.lm_grad_fn(self.CFG, use_pallas=False))(theta, tok, tok)
+        np.testing.assert_allclose(l1, l2, rtol=1e-4, atol=1e-4)
+        np.testing.assert_allclose(g1, g2, rtol=1e-3, atol=1e-4)
+
+    def test_initial_loss_near_uniform(self):
+        theta = jnp.asarray(model.init_lm(2, self.CFG))
+        rng = np.random.default_rng(2)
+        tok = jnp.asarray(rng.integers(0, 256, size=(2, 32)).astype(np.int32))
+        loss = model.lm_loss(theta, tok, tok, self.CFG, use_pallas=False)
+        assert abs(float(loss) - np.log(256)) < 0.5
+
+    def test_sgd_learns_repetition(self):
+        # A repeating corpus is easy; loss should fall fast.
+        theta = jnp.asarray(model.init_lm(3, self.CFG))
+        pattern = np.tile(np.arange(16, dtype=np.int32), 4)[None, :32]
+        tok = jnp.asarray(np.repeat(pattern, 2, axis=0))
+        tgt = jnp.asarray(np.roll(np.asarray(tok), -1, axis=1))
+        grad_fn = jax.jit(model.lm_grad_fn(self.CFG, use_pallas=True))
+        first = None
+        for _ in range(15):
+            g, l = grad_fn(theta, tok, tgt)
+            first = first if first is not None else float(l)
+            theta = theta - 0.5 * g
+        assert float(l) < first * 0.7, (first, float(l))

@@ -1,0 +1,97 @@
+//! Figure 5: the learning-rate modulation strategy (α = α₀/⟨σ⟩, Eq. 6).
+//!
+//! The paper's plot: test error vs epoch for n-softsync at n ∈ {4, 30},
+//! λ = 30, μ = 128, with α = α₀ vs α = α₀/n. Headline: the 30-softsync
+//! α₀ run fails to converge (stays ~90% = random guessing) while α₀/30
+//! converges. Reproduced with real SGD on the synthetic benchmark.
+
+use rudra::config::RunConfig;
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::paper;
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::params::lr::Modulation;
+use rudra::stats::table::{pct, Table};
+
+fn main() {
+    paper::banner("Figure 5 — dividing α by ⟨σ⟩ rescues convergence (λ=30, μ=128)");
+    let ws = Workspace::open_default().expect("run `make artifacts` first");
+    let lambda = 30;
+    // μ=128 gradient executions are cheap, so even the reduced run can
+    // afford the update count the rescued arm needs to visibly converge
+    // (the paper had 140 epochs × 50k samples; we compensate with epochs).
+    let epochs = if paper::full_grid() { 90 } else { 60 };
+    let mut sweep = Sweep::new(&ws, epochs);
+    sweep.eval_each_epoch = true;
+
+    // The synthetic benchmark's stability edge differs from CIFAR10's, so
+    // the α₀ arm uses a base LR chosen (like the paper's) to sit at the
+    // λ=1 stability edge but beyond it when amplified by ⟨σ⟩ = 30
+    // staleness; α₀/30 = 0.01 is inside the known-good range. Plain SGD
+    // (no momentum) isolates the staleness effect on the small synthetic
+    // budget — with momentum the effective delay grows to σ + m/(1−m) ≈
+    // σ+9 and the rescued arm converges too slowly to show in reduced
+    // epochs (direction is identical; see EXPERIMENTS.md).
+    let base_lr = 0.3;
+
+    let mut t = Table::new(&["config", "modulation", "final test err", "paper behaviour"]);
+    let mut finals = std::collections::BTreeMap::new();
+    for n in [4usize, 30] {
+        for (modulation, label) in
+            [(Modulation::None, "α₀"), (Modulation::StalenessReciprocal, "α₀/n")]
+        {
+            // paper_schedule: the paper's own step-drop recipe (α ×0.1 at
+            // ~85% and ~93% of training) — it settles the rescued arm's
+            // tail exactly as it settles the paper's Figure 5 curves.
+            let cfg = RunConfig {
+                protocol: Protocol::NSoftsync { n },
+                mu: 128,
+                lambda,
+                epochs,
+                base_lr,
+                modulation,
+                paper_schedule: true,
+                optimizer: rudra::params::optimizer::OptimizerKind::Sgd,
+                ..RunConfig::default()
+            };
+            let p = sweep.run_point(&cfg).expect("sim");
+            println!("{n}-softsync {label}: error by epoch (every 5th):");
+            for e in &p.epochs {
+                if e.epoch % 5 != 0 && e.epoch != 1 {
+                    continue;
+                }
+                if let Some(err) = e.test_error_pct {
+                    println!("    epoch {:>2}: {:>6.2}%", e.epoch, err);
+                }
+            }
+            let expected = match (n, modulation) {
+                (30, Modulation::None) => "fails to converge (~90%)",
+                (_, Modulation::None) => "higher error",
+                _ => "converges, lower error",
+            };
+            t.row(vec![
+                format!("{n}-softsync"),
+                label.to_string(),
+                pct(p.test_error_pct),
+                expected.to_string(),
+            ]);
+            finals.insert((n, label), p.test_error_pct);
+        }
+    }
+    t.print();
+
+    let bad = finals[&(30, "α₀")];
+    let good = finals[&(30, "α₀/n")];
+    assert!(
+        bad > 82.0,
+        "30-softsync with unmodulated α should stay near chance (90%): {bad}%"
+    );
+    assert!(
+        good < 80.0 && good < bad - 10.0,
+        "α₀/n must rescue convergence: {good}% vs {bad}%"
+    );
+    let g4 = finals[&(4, "α₀/n")];
+    let b4 = finals[&(4, "α₀")];
+    assert!(g4 <= b4 + 2.0, "modulation should not hurt at n=4: {g4}% vs {b4}%");
+    println!("\nFigure 5's rescue effect reproduced ✓");
+}

@@ -1,0 +1,91 @@
+//! Figure 7: (σ, μ, λ) tradeoff curves for (a) λ-softsync and
+//! (b) 1-softsync.
+//!
+//! Claims to preserve (§5.2):
+//!  * curves look qualitatively like hardsync's, but the error penalty at
+//!    (σ,μ,λ) = (30,128,30) is *more* pronounced than hardsync's;
+//!  * the μ=4 contour keeps error near baseline for any staleness — the
+//!    "small mini-batch confers immunity to stale gradients" finding;
+//!  * λ-softsync's (30,4,30) pays a sharp runtime penalty vs (30,128,30);
+//!    1-softsync avoids the μ=4 runtime collapse (reduced pull traffic).
+
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::paper;
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::stats::table::{f, pct, Table};
+use rudra::util::fmt_secs;
+
+fn main() {
+    paper::banner("Figure 7 — (σ,μ,λ) tradeoff curves, λ-softsync and 1-softsync");
+    let ws = Workspace::open_default().expect("run `make artifacts` first");
+    let (mus, lambdas, epochs) = paper::grid_axes();
+
+    let families: [(&str, fn(usize) -> Protocol); 2] = [
+        ("λ-softsync", |l| Protocol::NSoftsync { n: l }),
+        ("1-softsync", |_| Protocol::NSoftsync { n: 1 }),
+    ];
+    for (name, proto_of) in families {
+        println!("--- Figure 7 ({name}) ---");
+        let sweep = Sweep::new(&ws, epochs);
+        let results = sweep.run_grid(&mus, &lambdas, proto_of).expect("grid");
+        let mut t = Table::new(&["μ", "λ", "⟨σ⟩", "test err", "sim time (paper geom)"]);
+        for r in &results {
+            t.row(vec![
+                r.mu.to_string(),
+                r.lambda.to_string(),
+                f(r.avg_staleness, 1),
+                pct(r.test_error_pct),
+                fmt_secs(r.paper_sim_seconds),
+            ]);
+        }
+        t.print();
+
+        let find = |mu: usize, lambda: usize| {
+            results.iter().find(|r| r.mu == mu && r.lambda == lambda).unwrap()
+        };
+        let max_l = *lambdas.last().unwrap();
+        let max_mu = *mus.last().unwrap();
+        let min_mu = mus[0];
+        // μ=4 immunity: error at (min_mu, max_l) within a few points of
+        // (min_mu, 1) despite the staleness.
+        let e_small_scaled = find(min_mu, max_l).test_error_pct;
+        let e_small_base = find(min_mu, 1).test_error_pct;
+        assert!(
+            e_small_scaled < e_small_base + 8.0,
+            "{name}: μ={min_mu} contour should stay near baseline: {e_small_scaled} vs {e_small_base}"
+        );
+        // big-μ degradation exists at scale
+        let e_big_scaled = find(max_mu, max_l).test_error_pct;
+        assert!(
+            e_big_scaled >= e_small_scaled - 2.0,
+            "{name}: large μ at λ={max_l} should not beat small μ: {e_big_scaled} vs {e_small_scaled}"
+        );
+        println!();
+    }
+
+    // Runtime distinction at μ=4, λ=max: λ-softsync pays for PS traffic,
+    // 1-softsync doesn't (Fig 7's (30,4,30) spike).
+    let (mus, lambdas, _) = paper::grid_axes();
+    let min_mu = mus[0];
+    let max_l = *lambdas.last().unwrap();
+    let sweep = Sweep::new(&ws, 1);
+    let t_lambda = sweep
+        .run_grid(&[min_mu], &[max_l], |l| Protocol::NSoftsync { n: l })
+        .unwrap()[0]
+        .paper_sim_seconds;
+    let t_one = sweep
+        .run_grid(&[min_mu], &[max_l], |_| Protocol::NSoftsync { n: 1 })
+        .unwrap()[0]
+        .paper_sim_seconds;
+    println!(
+        "runtime at (μ={min_mu}, λ={max_l}): λ-softsync {} vs 1-softsync {}",
+        fmt_secs(t_lambda),
+        fmt_secs(t_one)
+    );
+    assert!(
+        t_one <= t_lambda * 1.05,
+        "1-softsync should not be slower: {t_one} vs {t_lambda}"
+    );
+    println!("\nsoftsync tradeoff-curve shape reproduced ✓");
+}

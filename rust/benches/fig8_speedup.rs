@@ -1,0 +1,71 @@
+//! Figure 8: speed-up in training time vs λ for (a) μ=128 and (b) μ=4,
+//! under hardsync, λ-softsync, and 1-softsync.
+//!
+//! Claims to preserve (§5.2): at μ=128 the two softsyncs track each other
+//! and beat hardsync; at μ=4 λ-softsync's speed-up is subdued relative to
+//! 1-softsync (PS traffic), and hardsync fares worst in both.
+//! Speed-ups are relative to (0, μ, 1) like the paper's.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::harness::paper;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::{f, Table};
+
+fn time_for(protocol: Protocol, mu: usize, lambda: usize, epochs: usize) -> f64 {
+    let mut cfg =
+        SimConfig::paper(protocol, Arch::Base, mu, lambda, epochs, ModelCost::cifar10());
+    cfg.seed = 11;
+    run_sim(
+        &cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim")
+    .sim_seconds
+}
+
+fn main() {
+    paper::banner("Figure 8 — speed-up vs λ at μ=128 and μ=4 (CIFAR10 geometry)");
+    let lambdas: Vec<usize> =
+        if paper::full_grid() { vec![1, 2, 4, 10, 18, 30] } else { vec![1, 4, 10, 30] };
+    let epochs = if paper::full_grid() { 4 } else { 1 };
+
+    for mu in [128usize, 4] {
+        println!("--- Fig 8({}) μ = {mu} ---", if mu == 128 { "a" } else { "b" });
+        let base = time_for(Protocol::NSoftsync { n: 1 }, mu, 1, epochs);
+        let mut t =
+            Table::new(&["λ", "hardsync ×", "λ-softsync ×", "1-softsync ×"]);
+        let mut rows = Vec::new();
+        for &l in &lambdas {
+            let s_hard = base / time_for(Protocol::Hardsync, mu, l, epochs);
+            let s_lsoft = base / time_for(Protocol::NSoftsync { n: l }, mu, l, epochs);
+            let s_1soft = base / time_for(Protocol::NSoftsync { n: 1 }, mu, l, epochs);
+            t.row(vec![l.to_string(), f(s_hard, 2), f(s_lsoft, 2), f(s_1soft, 2)]);
+            rows.push((l, s_hard, s_lsoft, s_1soft));
+        }
+        t.print();
+
+        let (_, h, ls, os) = *rows.last().unwrap();
+        assert!(os >= h, "μ={mu}: 1-softsync ({os:.2}) should beat hardsync ({h:.2})");
+        assert!(ls >= h * 0.9, "μ={mu}: λ-softsync should not trail hardsync badly");
+        if mu == 4 {
+            assert!(
+                os >= ls * 0.98,
+                "μ=4: 1-softsync ({os:.2}) should be at least λ-softsync ({ls:.2})"
+            );
+        }
+        // scale-out is material at the largest λ
+        let max_l = *lambdas.last().unwrap() as f64;
+        assert!(os > max_l * 0.3, "μ={mu}: speed-up {os:.2} too small for λ={max_l}");
+        println!();
+    }
+    println!("speed-up ordering (hardsync worst; softsyncs comparable; μ=4 penalty) reproduced ✓");
+}

@@ -1,0 +1,159 @@
+//! Hot-path micro-benchmarks (manual timing — criterion is not in the
+//! offline vendor set). Measures the L3 components that sit on the
+//! per-gradient path, plus the PJRT grad-execution latency per μ, which
+//! feeds the §Perf log in EXPERIMENTS.md.
+
+use std::time::Instant;
+
+use rudra::coordinator::protocol::{Accumulator, Protocol};
+use rudra::coordinator::server::{ParameterServer, ServerConfig};
+use rudra::netsim::event::EventQueue;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::Table;
+
+fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
+    // warmup
+    for _ in 0..iters.min(3) {
+        f();
+    }
+    let start = Instant::now();
+    for _ in 0..iters {
+        f();
+    }
+    let per = start.elapsed().as_secs_f64() / iters as f64;
+    (name.to_string(), per)
+}
+
+fn main() {
+    println!("=== perf_hotpath — L3 micro-benchmarks (manual timing) ===\n");
+    let n_params = 24_234; // the synthetic CNN's size
+    let big_params = 1_000_000; // ~the LM's order
+    let mut rows = Vec::new();
+
+    // 1. PS applyUpdate (axpy) at both model sizes.
+    for (label, p) in [("axpy 24k (CNN)", n_params), ("axpy 1M", big_params)] {
+        let mut theta = FlatVec::from_vec(vec![0.5; p]);
+        let grad = FlatVec::from_vec(vec![0.001; p]);
+        rows.push(bench(label, 2000, || theta.axpy(-0.01, &grad)));
+    }
+
+    // 2. Momentum and AdaGrad update kernels.
+    for (label, kind) in [
+        ("momentum update 24k", OptimizerKind::Momentum { momentum: 0.9 }),
+        ("adagrad update 24k", OptimizerKind::Adagrad { eps: 1e-8 }),
+    ] {
+        let mut opt = Optimizer::new(kind, 0.0, n_params);
+        let mut theta = FlatVec::from_vec(vec![0.5; n_params]);
+        let grad = FlatVec::from_vec(vec![0.001; n_params]);
+        rows.push(bench(label, 2000, || opt.apply(&mut theta, &grad, 0.01)));
+    }
+
+    // 3. Full server push (accumulate + update under 1-softsync, λ=8).
+    {
+        let cfg = ServerConfig {
+            protocol: Protocol::NSoftsync { n: 8 },
+            mu: 4,
+            lambda: 8,
+            samples_per_epoch: u64::MAX,
+            target_epochs: usize::MAX,
+        };
+        let mut server = ParameterServer::new(
+            cfg,
+            FlatVec::zeros(n_params),
+            Optimizer::paper_momentum(n_params),
+            LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+        );
+        let grad = FlatVec::from_vec(vec![0.001; n_params]);
+        let mut i = 0usize;
+        rows.push(bench("server push+update 24k (async)", 2000, || {
+            let ts = server.timestamp();
+            server.push_gradient(i % 8, &grad, ts).unwrap();
+            i += 1;
+        }));
+    }
+
+    // 4. Accumulator push throughput.
+    {
+        let mut acc = Accumulator::new(Protocol::NSoftsync { n: 1 }, 1024, n_params);
+        let grad = FlatVec::from_vec(vec![0.001; n_params]);
+        let mut i = 0usize;
+        rows.push(bench("accumulator push 24k", 2000, || {
+            acc.push(i % 1024, &grad, 0).unwrap();
+            i += 1;
+            if acc.ready() {
+                let _ = acc.take_update();
+            }
+        }));
+    }
+
+    // 5. Event-queue throughput (the sim engine's backbone).
+    {
+        let mut q: EventQueue<u32> = EventQueue::new();
+        rows.push(bench("event queue push+pop x1000", 500, || {
+            for i in 0..1000u32 {
+                q.schedule_in((i % 7) as f64 * 0.001, i);
+            }
+            while q.pop().is_some() {}
+        }));
+    }
+
+    // 6. Timing-only sim engine: events/second on a 1-epoch CIFAR run.
+    {
+        use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+        use rudra::coordinator::tree::Arch;
+        use rudra::netsim::cost::ModelCost;
+        let cfg = SimConfig::paper(
+            Protocol::NSoftsync { n: 1 },
+            Arch::Base,
+            16,
+            16,
+            1,
+            ModelCost::cifar10(),
+        );
+        let start = Instant::now();
+        let r = run_sim(
+            &cfg,
+            FlatVec::zeros(0),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+            LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+            None,
+            None,
+        )
+        .unwrap();
+        let dt = start.elapsed().as_secs_f64();
+        println!(
+            "sim engine: {} events in {:.3}s = {:.2}M events/s\n",
+            r.events_processed,
+            dt,
+            r.events_processed as f64 / dt / 1e6
+        );
+    }
+
+    // 7. PJRT grad latency per μ (requires artifacts; skipped otherwise).
+    match rudra::harness::Workspace::open_default() {
+        Ok(ws) => {
+            let theta = ws.cnn_init().unwrap();
+            for mu in [4usize, 16, 128] {
+                let exec = ws.cnn_grad(mu).unwrap();
+                let mut s = rudra::data::sampler::BatchSampler::new(&ws.train, mu, 1, 0);
+                let b = s.next_batch();
+                rows.push(bench(
+                    &format!("PJRT cnn grad μ={mu}"),
+                    30,
+                    || {
+                        let _ = exec.run_images(&theta, &b.images, &b.labels).unwrap();
+                    },
+                ));
+            }
+        }
+        Err(e) => println!("(skipping PJRT latency rows: {e})"),
+    }
+
+    let mut t = Table::new(&["benchmark", "per-iteration"]);
+    for (name, per) in &rows {
+        t.row(vec![name.clone(), rudra::util::fmt_secs(*per)]);
+    }
+    t.print();
+}

@@ -1,0 +1,64 @@
+//! Table 1: communication overlap (%) for Rudra-base / adv / adv* in the
+//! adversarial scenario — μ = 4 (smallest possible for 4-way learners),
+//! 300 MB model, ~60 learners (§3.3).
+//!
+//! Regenerates the table through the discrete-event cluster model; the
+//! paper's metric is compute / (compute + exposed comm) per learner.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::harness::paper;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::{f, Table};
+
+fn overlap_for(arch: Arch, updates: u64) -> f64 {
+    // Async (= λ-softsync): the weights timestamp advances on every push,
+    // so every cycle moves a model-sized pull — the continuous-traffic
+    // regime the adversarial scenario measures.
+    let mut cfg = SimConfig::paper(
+        Protocol::Async,
+        arch,
+        4,
+        56, // 7 nodes × 8 learners ≈ the paper's "about 60 learners"
+        1,
+        ModelCost::adversarial_300mb(),
+    );
+    cfg.max_updates = Some(updates);
+    cfg.seed = 1;
+    let r = run_sim(
+        &cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim");
+    r.overlap.overlap_pct()
+}
+
+fn main() {
+    paper::banner("Table 1 — communication overlap (adversarial: μ=4, 300 MB, ~60 learners)");
+    let updates = if paper::full_grid() { 400 } else { 60 };
+    let mut t = Table::new(&["Implementation", "paper overlap %", "reproduced overlap %"]);
+    let mut reproduced = Vec::new();
+    for (arch, (name, paper_pct)) in
+        [Arch::Base, Arch::Adv, Arch::AdvStar].into_iter().zip(paper::TABLE1_OVERLAP)
+    {
+        let got = overlap_for(arch, updates);
+        reproduced.push(got);
+        t.row(vec![name.to_string(), f(paper_pct, 2), f(got, 2)]);
+    }
+    t.print();
+    // the claim to preserve: base ≪ adv ≪ adv*, adv* ≈ full overlap
+    assert!(
+        reproduced[0] < reproduced[1] && reproduced[1] < reproduced[2],
+        "ordering violated: {reproduced:?}"
+    );
+    assert!(reproduced[2] > 90.0, "adv* should ~fully overlap: {reproduced:?}");
+    println!("\nordering base < adv < adv* reproduced ✓");
+}

@@ -1,0 +1,246 @@
+//! Run configuration: defaults, JSON config files, CLI overrides.
+//!
+//! A [`RunConfig`] fully determines a training run (model, protocol,
+//! (σ, μ, λ) point, architecture, LR policy, seeds) and can be built from
+//! a JSON file (`--config run.json`) with CLI flags layered on top —
+//! the "real config system" a framework needs, sized to the offline
+//! dependency set (our own JSON, no serde).
+
+use anyhow::{bail, Result};
+use std::path::Path;
+
+use crate::coordinator::protocol::Protocol;
+use crate::coordinator::tree::Arch;
+use crate::params::lr::Modulation;
+use crate::params::optimizer::OptimizerKind;
+use crate::util::cli::Args;
+use crate::util::json::Json;
+
+/// Which model family a run trains.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ModelKind {
+    Cnn,
+    Lm,
+}
+
+impl ModelKind {
+    pub fn parse(s: &str) -> Result<ModelKind> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "cnn" => Ok(ModelKind::Cnn),
+            "lm" | "transformer" => Ok(ModelKind::Lm),
+            other => bail!("unknown model {other:?} (cnn | lm)"),
+        }
+    }
+}
+
+/// Complete run description.
+#[derive(Debug, Clone)]
+pub struct RunConfig {
+    pub model: ModelKind,
+    pub protocol: Protocol,
+    pub arch: Arch,
+    pub mu: usize,
+    pub lambda: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub base_lr: f64,
+    pub modulation: Modulation,
+    pub optimizer: OptimizerKind,
+    pub weight_decay: f32,
+    /// Reference batch size B for the hardsync √-rule (paper: 128).
+    pub reference_batch: usize,
+    /// Use the paper-shaped step LR schedule (drops at 85%/93%).
+    pub paper_schedule: bool,
+    /// Warm-start: epochs of hardsync before switching protocol (§5.5).
+    pub warmstart_epochs: usize,
+    pub eval_each_epoch: bool,
+}
+
+impl Default for RunConfig {
+    fn default() -> Self {
+        RunConfig {
+            model: ModelKind::Cnn,
+            protocol: Protocol::NSoftsync { n: 1 },
+            arch: Arch::Base,
+            mu: 16,
+            lambda: 4,
+            epochs: 10,
+            seed: 42,
+            base_lr: 0.02,
+            modulation: Modulation::Auto,
+            optimizer: OptimizerKind::Momentum { momentum: 0.9 },
+            weight_decay: 0.0,
+            reference_batch: 128,
+            paper_schedule: true,
+            warmstart_epochs: 0,
+            eval_each_epoch: true,
+        }
+    }
+}
+
+impl RunConfig {
+    /// Layer a JSON object over this config.
+    pub fn apply_json(&mut self, j: &Json) -> Result<()> {
+        let obj = j.as_obj()?;
+        for (k, v) in obj {
+            match k.as_str() {
+                "model" => self.model = ModelKind::parse(v.as_str()?)?,
+                "protocol" => self.protocol = Protocol::parse(v.as_str()?)?,
+                "arch" => self.arch = Arch::parse(v.as_str()?)?,
+                "mu" => self.mu = v.as_usize()?,
+                "lambda" => self.lambda = v.as_usize()?,
+                "epochs" => self.epochs = v.as_usize()?,
+                "seed" => self.seed = v.as_usize()? as u64,
+                "base_lr" => self.base_lr = v.as_f64()?,
+                "modulation" => self.modulation = parse_modulation(v.as_str()?)?,
+                "optimizer" => self.optimizer = parse_optimizer(v.as_str()?)?,
+                "weight_decay" => self.weight_decay = v.as_f64()? as f32,
+                "reference_batch" => self.reference_batch = v.as_usize()?,
+                "paper_schedule" => self.paper_schedule = v.as_bool()?,
+                "warmstart_epochs" => self.warmstart_epochs = v.as_usize()?,
+                "eval_each_epoch" => self.eval_each_epoch = v.as_bool()?,
+                other => bail!("unknown config key {other:?}"),
+            }
+        }
+        Ok(())
+    }
+
+    pub fn apply_file(&mut self, path: &Path) -> Result<()> {
+        self.apply_json(&Json::parse_file(path)?)
+    }
+
+    /// Layer CLI flags over this config.
+    pub fn apply_args(&mut self, args: &Args) -> Result<()> {
+        if let Some(v) = args.get("model") {
+            self.model = ModelKind::parse(v)?;
+        }
+        if let Some(v) = args.get("protocol") {
+            self.protocol = Protocol::parse(v)?;
+        }
+        if let Some(v) = args.get("arch") {
+            self.arch = Arch::parse(v)?;
+        }
+        self.mu = args.usize_or("mu", self.mu)?;
+        self.lambda = args.usize_or("lambda", self.lambda)?;
+        self.epochs = args.usize_or("epochs", self.epochs)?;
+        self.seed = args.u64_or("seed", self.seed)?;
+        self.base_lr = args.f64_or("lr", self.base_lr)?;
+        if let Some(v) = args.get("modulation") {
+            self.modulation = parse_modulation(v)?;
+        }
+        if let Some(v) = args.get("optimizer") {
+            self.optimizer = parse_optimizer(v)?;
+        }
+        self.warmstart_epochs = args.usize_or("warmstart", self.warmstart_epochs)?;
+        self.validate()
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.mu == 0 || self.lambda == 0 || self.epochs == 0 {
+            bail!("mu, lambda, and epochs must all be >= 1");
+        }
+        if let Protocol::NSoftsync { n } = self.protocol {
+            if n > self.lambda {
+                // allowed (degenerates to async-like c=1) but suspicious
+                // for λ-softsync runs; the paper only uses n ≤ λ.
+            }
+            if n == 0 {
+                bail!("n-softsync requires n >= 1");
+            }
+        }
+        Ok(())
+    }
+
+    /// The LR policy implied by this config.
+    pub fn lr_policy(&self) -> crate::params::lr::LrPolicy {
+        let schedule = if self.paper_schedule {
+            crate::params::lr::Schedule::paper_shape(self.base_lr, self.epochs)
+        } else {
+            crate::params::lr::Schedule::constant(self.base_lr)
+        };
+        crate::params::lr::LrPolicy::new(schedule, self.modulation, self.reference_batch)
+    }
+
+    /// Short human label, e.g. `(σ=1, μ=4, λ=30) 1-softsync/base`.
+    pub fn label(&self) -> String {
+        format!(
+            "(σ̄={}, μ={}, λ={}) {}/{}",
+            self.protocol.effective_n(self.lambda),
+            self.mu,
+            self.lambda,
+            self.protocol.label(),
+            self.arch.label(),
+        )
+    }
+}
+
+fn parse_modulation(s: &str) -> Result<Modulation> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "none" => Ok(Modulation::None),
+        "sqrt" | "hardsync-sqrt" => Ok(Modulation::HardsyncSqrt),
+        "staleness" | "reciprocal" | "1/n" => Ok(Modulation::StalenessReciprocal),
+        "per-gradient" | "pergrad" => Ok(Modulation::PerGradient),
+        "auto" => Ok(Modulation::Auto),
+        other => {
+            bail!("unknown modulation {other:?} (none|sqrt|staleness|per-gradient|auto)")
+        }
+    }
+}
+
+fn parse_optimizer(s: &str) -> Result<OptimizerKind> {
+    match s.trim().to_ascii_lowercase().as_str() {
+        "sgd" => Ok(OptimizerKind::Sgd),
+        "momentum" => Ok(OptimizerKind::Momentum { momentum: 0.9 }),
+        "adagrad" => Ok(OptimizerKind::Adagrad { eps: 1e-8 }),
+        other => bail!("unknown optimizer {other:?} (sgd|momentum|adagrad)"),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn json_then_cli_layering() {
+        let mut cfg = RunConfig::default();
+        cfg.apply_json(
+            &Json::parse(r#"{"protocol": "30-softsync", "mu": 8, "lambda": 30}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.protocol, Protocol::NSoftsync { n: 30 });
+        assert_eq!(cfg.mu, 8);
+        let args = Args::parse(
+            ["--mu", "4", "--optimizer", "adagrad"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.mu, 4); // CLI wins
+        assert_eq!(cfg.lambda, 30); // JSON preserved
+        assert_eq!(cfg.optimizer, OptimizerKind::Adagrad { eps: 1e-8 });
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        let mut cfg = RunConfig::default();
+        let err = cfg.apply_json(&Json::parse(r#"{"mew": 4}"#).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("mew"));
+    }
+
+    #[test]
+    fn validation_catches_zeros() {
+        let mut cfg = RunConfig::default();
+        cfg.mu = 0;
+        assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn label_shows_sigma_mu_lambda() {
+        let mut cfg = RunConfig::default();
+        cfg.protocol = Protocol::NSoftsync { n: 30 };
+        cfg.lambda = 30;
+        cfg.mu = 4;
+        let l = cfg.label();
+        assert!(l.contains("μ=4") && l.contains("λ=30") && l.contains("30-softsync"), "{l}");
+    }
+}

@@ -1,0 +1,110 @@
+//! Rudra-adv*'s double-buffered pullWeights (§3.3).
+//!
+//! "We maintain a computation buffer and a communication buffer for the
+//! pullWeights thread, and the communication always happens in the
+//! background. To use the newly received weights only requires a pointer
+//! swap." This module implements exactly that: the communication side
+//! writes into the back buffer; the compute side swaps front/back at
+//! mini-batch boundaries if a fresher replica has landed.
+
+use crate::coordinator::clock::Timestamp;
+use crate::params::FlatVec;
+
+/// Compute/communication weight buffer pair with pointer-swap semantics.
+#[derive(Debug)]
+pub struct DoubleBuffer {
+    front: FlatVec,
+    front_ts: Timestamp,
+    back: FlatVec,
+    back_ts: Timestamp,
+    back_fresh: bool,
+    /// Number of swaps performed (diagnostics).
+    pub swaps: u64,
+}
+
+impl DoubleBuffer {
+    pub fn new(theta0: &FlatVec) -> DoubleBuffer {
+        DoubleBuffer {
+            front: theta0.clone(),
+            front_ts: 0,
+            back: theta0.clone(),
+            back_ts: 0,
+            back_fresh: false,
+            swaps: 0,
+        }
+    }
+
+    /// The compute-side view (what calcGradient reads).
+    pub fn compute_view(&self) -> (&FlatVec, Timestamp) {
+        (&self.front, self.front_ts)
+    }
+
+    /// Communication thread delivers a freshly received replica into the
+    /// back buffer. Keeps the freshest replica if several land between
+    /// swaps (later deliveries overwrite).
+    pub fn deliver(&mut self, theta: &FlatVec, ts: Timestamp) {
+        if ts <= self.back_ts && self.back_fresh {
+            return; // stale delivery, ignore
+        }
+        self.back.data.copy_from_slice(&theta.data);
+        self.back_ts = ts;
+        self.back_fresh = ts > self.front_ts;
+    }
+
+    /// Mini-batch boundary: swap to the fresher replica if one arrived.
+    /// Returns true if a swap happened. O(1) — a pointer swap.
+    pub fn try_swap(&mut self) -> bool {
+        if !self.back_fresh {
+            return false;
+        }
+        std::mem::swap(&mut self.front, &mut self.back);
+        std::mem::swap(&mut self.front_ts, &mut self.back_ts);
+        self.back_fresh = false;
+        self.swaps += 1;
+        true
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn swap_only_when_fresh() {
+        let mut db = DoubleBuffer::new(&FlatVec::zeros(2));
+        assert!(!db.try_swap());
+        db.deliver(&FlatVec::from_vec(vec![1.0, 1.0]), 3);
+        assert!(db.try_swap());
+        assert_eq!(db.compute_view().1, 3);
+        assert_eq!(db.compute_view().0.data, vec![1.0, 1.0]);
+        assert!(!db.try_swap(), "no double swap on the same delivery");
+    }
+
+    #[test]
+    fn later_delivery_wins() {
+        let mut db = DoubleBuffer::new(&FlatVec::zeros(1));
+        db.deliver(&FlatVec::from_vec(vec![1.0]), 1);
+        db.deliver(&FlatVec::from_vec(vec![2.0]), 5);
+        db.try_swap();
+        assert_eq!(db.compute_view(), (&FlatVec::from_vec(vec![2.0]), 5));
+    }
+
+    #[test]
+    fn stale_delivery_ignored() {
+        let mut db = DoubleBuffer::new(&FlatVec::zeros(1));
+        db.deliver(&FlatVec::from_vec(vec![2.0]), 5);
+        db.deliver(&FlatVec::from_vec(vec![1.0]), 1); // stale
+        db.try_swap();
+        assert_eq!(db.compute_view().1, 5);
+    }
+
+    #[test]
+    fn compute_view_stable_until_swap() {
+        let mut db = DoubleBuffer::new(&FlatVec::from_vec(vec![7.0]));
+        db.deliver(&FlatVec::from_vec(vec![9.0]), 2);
+        // no swap yet — compute still sees the old replica
+        assert_eq!(db.compute_view().0.data, vec![7.0]);
+        db.try_swap();
+        assert_eq!(db.compute_view().0.data, vec![9.0]);
+    }
+}

@@ -1,0 +1,133 @@
+//! Timestamps, vector clocks, and staleness accounting (§3.1).
+//!
+//! The paper's quantification technique (contribution #1): weights carry a
+//! scalar timestamp `ts_i` incremented by every update; a gradient
+//! inherits the timestamp of the weights it was computed from; the
+//! staleness of a gradient pushed while the server is at `ts_j` is
+//! σ = j − i. The set of gradient timestamps that triggers update i forms
+//! a vector clock ⟨ts_i1 … ts_in⟩, and the *average* staleness of that
+//! update is ⟨σ⟩ = (i − 1) − mean(i1 … in)   (Eq. 2).
+
+/// Scalar weight timestamp.
+pub type Timestamp = u64;
+
+/// One weight update's provenance: which gradient timestamps were folded in.
+#[derive(Debug, Clone)]
+pub struct UpdateRecord {
+    /// The timestamp the server advanced *to* (i).
+    pub new_ts: Timestamp,
+    /// Vector clock: timestamps of the contributing gradients.
+    pub clock: Vec<Timestamp>,
+    /// ⟨σ⟩ for this update, per Eq. (2).
+    pub avg_staleness: f64,
+}
+
+/// Running staleness statistics across a training run.
+#[derive(Debug, Default, Clone)]
+pub struct StalenessStats {
+    /// Per-update ⟨σ⟩ series (Figure 4's y-axis).
+    pub per_update_avg: Vec<f64>,
+    /// Histogram over individual gradient staleness values (Fig 4b inset).
+    pub histogram: Vec<u64>,
+    /// Max σ observed.
+    pub max: u64,
+    /// Total gradients folded in.
+    pub count: u64,
+    sum: f64,
+}
+
+impl StalenessStats {
+    /// Record one weight update from timestamps of contributing gradients.
+    /// `new_ts` is the timestamp the server advanced to (i); gradients were
+    /// computed at `grad_ts` (each < i).
+    pub fn record(&mut self, new_ts: Timestamp, grad_ts: &[Timestamp]) -> UpdateRecord {
+        debug_assert!(!grad_ts.is_empty());
+        let i_minus_1 = (new_ts - 1) as f64;
+        let mean_ts =
+            grad_ts.iter().map(|&t| t as f64).sum::<f64>() / grad_ts.len() as f64;
+        let avg = i_minus_1 - mean_ts;
+        self.per_update_avg.push(avg);
+        for &t in grad_ts {
+            let sigma = new_ts - 1 - t; // σ = (i−1) − ts(gradient)
+            if self.histogram.len() <= sigma as usize {
+                self.histogram.resize(sigma as usize + 1, 0);
+            }
+            self.histogram[sigma as usize] += 1;
+            self.max = self.max.max(sigma);
+            self.sum += sigma as f64;
+            self.count += 1;
+        }
+        UpdateRecord { new_ts, clock: grad_ts.to_vec(), avg_staleness: avg }
+    }
+
+    /// Overall ⟨σ⟩ across all gradients.
+    pub fn overall_avg(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+
+    /// Fraction of gradients with σ > `bound` (the paper reports
+    /// P[σ > 2n] < 1e-4 for n-softsync).
+    pub fn frac_exceeding(&self, bound: u64) -> f64 {
+        if self.count == 0 {
+            return 0.0;
+        }
+        let over: u64 = self
+            .histogram
+            .iter()
+            .enumerate()
+            .filter(|(s, _)| *s as u64 > bound)
+            .map(|(_, c)| *c)
+            .sum();
+        over as f64 / self.count as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn hardsync_staleness_is_zero() {
+        // Hardsync: all λ gradients carry the previous timestamp i−1.
+        let mut s = StalenessStats::default();
+        let rec = s.record(5, &[4, 4, 4]);
+        assert_eq!(rec.avg_staleness, 0.0);
+        assert_eq!(s.max, 0);
+        assert_eq!(s.overall_avg(), 0.0);
+    }
+
+    #[test]
+    fn eq2_average() {
+        // Update to ts=10 built from gradients at ts {9, 8, 7}:
+        // ⟨σ⟩ = 9 − mean(9,8,7) = 9 − 8 = 1.
+        let mut s = StalenessStats::default();
+        let rec = s.record(10, &[9, 8, 7]);
+        assert!((rec.avg_staleness - 1.0).abs() < 1e-12);
+        // individual σ values: 0, 1, 2 → max 2
+        assert_eq!(s.max, 2);
+        assert_eq!(s.histogram, vec![1, 1, 1]);
+    }
+
+    #[test]
+    fn histogram_and_tail() {
+        let mut s = StalenessStats::default();
+        s.record(2, &[1]); // σ = 0
+        s.record(3, &[1]); // σ = 1
+        s.record(10, &[1]); // σ = 8
+        assert_eq!(s.count, 3);
+        assert!((s.frac_exceeding(1) - 1.0 / 3.0).abs() < 1e-12);
+        assert_eq!(s.frac_exceeding(8), 0.0);
+    }
+
+    #[test]
+    fn overall_avg_accumulates() {
+        let mut s = StalenessStats::default();
+        s.record(2, &[1, 1]); // σ 0,0
+        s.record(4, &[1, 3]); // σ 2,0
+        assert!((s.overall_avg() - 0.5).abs() < 1e-12);
+    }
+}

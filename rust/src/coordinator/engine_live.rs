@@ -1,0 +1,244 @@
+//! Live execution engine: real threads, real time.
+//!
+//! The "production" path: one OS thread per learner plus the parameter
+//! server on the calling thread, joined by mpsc channels (the offline
+//! vendor set has no tokio; the paper itself used blocking MPI sends plus
+//! dedicated communication threads, which std::thread + mpsc model
+//! directly). Protocol semantics, staleness accounting and LR modulation
+//! all come from the same [`ParameterServer`] the virtual-time engine
+//! drives, so the two engines are behaviorally interchangeable; this one
+//! measures *real* wall-clock and real thread-interleaving staleness.
+//!
+//! Message flow per learner iteration (§2): calcGradient on the local
+//! replica → pushGradient (blocking send) → pullWeights (blocking recv of
+//! the server's reply, which carries fresh weights only when the
+//! timestamp advanced — the §3.2 pull-skip).
+
+use std::sync::mpsc;
+use std::sync::Arc;
+use std::time::Instant;
+
+use anyhow::Result;
+
+use crate::coordinator::clock::Timestamp;
+use crate::coordinator::learner::GradProvider;
+use crate::coordinator::protocol::Protocol;
+use crate::coordinator::server::{ParameterServer, ServerConfig};
+use crate::params::lr::LrPolicy;
+use crate::params::optimizer::Optimizer;
+use crate::params::FlatVec;
+
+/// Live-run configuration.
+#[derive(Debug, Clone)]
+pub struct LiveConfig {
+    pub protocol: Protocol,
+    pub mu: usize,
+    pub lambda: usize,
+    pub epochs: usize,
+    pub samples_per_epoch: u64,
+    /// Log a loss point every this many pushes (0 = never).
+    pub log_every: u64,
+}
+
+/// Live-run output.
+#[derive(Debug)]
+pub struct LiveResult {
+    pub wall_seconds: f64,
+    pub updates: u64,
+    pub staleness: crate::coordinator::clock::StalenessStats,
+    pub theta: FlatVec,
+    /// (pushes seen, mean recent training loss) log.
+    pub loss_log: Vec<(u64, f32)>,
+    pub pushes: u64,
+}
+
+enum ToServer {
+    Push { learner: usize, grad: FlatVec, ts: Timestamp, loss: f32 },
+}
+
+enum ToLearner {
+    /// Fresh weights (timestamp advanced since the learner's replica).
+    Weights { theta: Arc<FlatVec>, ts: Timestamp },
+    /// Pull-skip: your replica is current.
+    Unchanged,
+    Shutdown,
+}
+
+/// Run a live training session. `providers` supplies one gradient source
+/// per learner (each moved into its thread).
+pub fn run_live(
+    cfg: &LiveConfig,
+    theta0: FlatVec,
+    optimizer: Optimizer,
+    lr: LrPolicy,
+    providers: Vec<Box<dyn GradProvider + Send>>,
+) -> Result<LiveResult> {
+    anyhow::ensure!(providers.len() == cfg.lambda, "need one provider per learner");
+    let server_cfg = ServerConfig {
+        protocol: cfg.protocol,
+        mu: cfg.mu,
+        lambda: cfg.lambda,
+        samples_per_epoch: cfg.samples_per_epoch,
+        target_epochs: cfg.epochs,
+    };
+    let mut server = ParameterServer::new(server_cfg, theta0.clone(), optimizer, lr);
+
+    let (push_tx, push_rx) = mpsc::channel::<ToServer>();
+    let mut reply_txs = Vec::with_capacity(cfg.lambda);
+    let mut handles = Vec::with_capacity(cfg.lambda);
+    let start = Instant::now();
+
+    for (id, mut provider) in providers.into_iter().enumerate() {
+        let (reply_tx, reply_rx) = mpsc::channel::<ToLearner>();
+        reply_txs.push(reply_tx);
+        let push_tx = push_tx.clone();
+        let mut theta = theta0.clone();
+        let mut ts: Timestamp = 0;
+        handles.push(std::thread::spawn(move || -> Result<()> {
+            loop {
+                let (grad, loss) = provider.compute(id, &theta)?;
+                if push_tx.send(ToServer::Push { learner: id, grad, ts, loss }).is_err() {
+                    return Ok(()); // server gone
+                }
+                match reply_rx.recv() {
+                    Ok(ToLearner::Weights { theta: fresh, ts: new_ts }) => {
+                        theta.data.copy_from_slice(&fresh.data);
+                        ts = new_ts;
+                    }
+                    Ok(ToLearner::Unchanged) => {}
+                    Ok(ToLearner::Shutdown) | Err(_) => return Ok(()),
+                }
+            }
+        }));
+    }
+    drop(push_tx);
+
+    // Parameter-server loop: handle messages one by one ("parameter
+    // server handles each incoming message one by one", §3.2).
+    let mut pushes: u64 = 0;
+    let mut recent_losses: Vec<f64> = Vec::new();
+    let mut loss_log: Vec<(u64, f32)> = Vec::new();
+    // Hardsync holds replies until the barrier update fires.
+    let mut barrier_waiting: Vec<usize> = Vec::new();
+
+    while !server.done() {
+        let msg = match push_rx.recv() {
+            Ok(m) => m,
+            Err(_) => break, // all learners exited
+        };
+        let ToServer::Push { learner, grad, ts, loss } = msg;
+        pushes += 1;
+        recent_losses.push(loss as f64);
+        if cfg.log_every > 0 && pushes % cfg.log_every == 0 {
+            loss_log.push((pushes, crate::util::mean(&recent_losses) as f32));
+            recent_losses.clear();
+        }
+        let outcome = server.push_gradient(learner, &grad, ts)?;
+
+        if cfg.protocol.is_barrier() {
+            barrier_waiting.push(learner);
+            if outcome.updated {
+                let (theta, new_ts) = server.weights();
+                let snap = Arc::new(theta.clone());
+                for l in barrier_waiting.drain(..) {
+                    let _ = reply_txs[l]
+                        .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
+                }
+            }
+        } else {
+            // softsync/async: reply to this learner's implicit pull.
+            let (theta, cur_ts) = server.weights();
+            if cur_ts > ts {
+                let _ = reply_txs[learner]
+                    .send(ToLearner::Weights { theta: Arc::new(theta.clone()), ts: cur_ts });
+            } else {
+                let _ = reply_txs[learner].send(ToLearner::Unchanged);
+            }
+        }
+    }
+
+    // Shut everyone down ("parameter server shuts down each learner").
+    for tx in &reply_txs {
+        let _ = tx.send(ToLearner::Shutdown);
+    }
+    // Drain stragglers so their final sends don't block (bounded work:
+    // each learner sends at most one more push before seeing Shutdown).
+    while let Ok(_msg) = push_rx.try_recv() {}
+    for h in handles {
+        match h.join() {
+            Ok(r) => r?,
+            Err(_) => anyhow::bail!("learner thread panicked"),
+        }
+    }
+
+    Ok(LiveResult {
+        wall_seconds: start.elapsed().as_secs_f64(),
+        updates: server.updates,
+        staleness: server.staleness.clone(),
+        theta: server.weights().0.clone(),
+        loss_log,
+        pushes,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::learner::MockProvider;
+    use crate::params::lr::{LrPolicy, Modulation, Schedule};
+    use crate::params::optimizer::{Optimizer, OptimizerKind};
+
+    fn providers(lambda: usize, dim: usize) -> Vec<Box<dyn GradProvider + Send>> {
+        (0..lambda)
+            .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
+            .collect()
+    }
+
+    fn run(protocol: Protocol, lambda: usize) -> LiveResult {
+        let dim = 8;
+        let cfg = LiveConfig {
+            protocol,
+            mu: 4,
+            lambda,
+            epochs: 3,
+            samples_per_epoch: 64,
+            log_every: 4,
+        };
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        run_live(&cfg, theta0, opt, lr, providers(lambda, dim)).unwrap()
+    }
+
+    #[test]
+    fn hardsync_live_converges_toward_target() {
+        let r = run(Protocol::Hardsync, 4);
+        assert!(r.updates > 0);
+        assert_eq!(r.staleness.max, 0);
+        assert!(r.theta.norm() < 7.0, "moved toward 0: {}", r.theta.norm());
+        assert!(!r.loss_log.is_empty());
+    }
+
+    #[test]
+    fn softsync_live_completes_with_bounded_staleness() {
+        let r = run(Protocol::NSoftsync { n: 1 }, 4);
+        assert!(r.updates > 0);
+        // 1-softsync: σ ≤ 2n with overwhelming probability; allow slack
+        // for thread scheduling on a loaded box.
+        assert!(r.staleness.overall_avg() < 4.0, "⟨σ⟩ = {}", r.staleness.overall_avg());
+    }
+
+    #[test]
+    fn async_live_completes() {
+        let r = run(Protocol::Async, 4);
+        assert!(r.updates > 0);
+        assert!(r.pushes >= r.updates);
+    }
+
+    #[test]
+    fn single_learner_degenerates_to_sgd() {
+        let r = run(Protocol::NSoftsync { n: 1 }, 1);
+        assert_eq!(r.staleness.max, 0, "λ=1 has no staleness source");
+        assert!(r.theta.norm() < 1.0, "plain SGD should converge well");
+    }
+}

@@ -1,0 +1,846 @@
+//! Virtual-time execution engine: real gradients, simulated cluster.
+//!
+//! The paper's figures need *both* axes of every experiment — model
+//! accuracy (real SGD dynamics) and wall-clock time (cluster behaviour at
+//! P775 scale). This engine produces both from one run: learners,
+//! parameter server, and messages advance on a deterministic
+//! discrete-event clock whose durations come from [`crate::netsim`]
+//! (compute-cost model + link contention), while every gradient is
+//! computed *for real* through a [`GradProvider`] (PJRT executing the AOT
+//! HLO) at exactly the weight versions the virtual schedule dictates.
+//! Staleness distributions, protocol semantics, and accuracy are
+//! therefore faithful; *seconds are simulated* (and labeled as such
+//! everywhere).
+//!
+//! In *timing-only* mode (no provider) the same event flow runs without
+//! numeric work — how paper-scale workloads (289 MB AlexNet, 1.2M-image
+//! epochs) are simulated for runtime-only columns.
+//!
+//! Architecture modeling (§3.3, DESIGN.md §3):
+//! * **Base** — every push/pull is a learner↔root message; the root's
+//!   NIC endpoint serializes them (the §3.3 bottleneck). Learners block
+//!   on push-then-pull (Rudra-base is "non-blocking everywhere except
+//!   for pushing up gradients and pushing down weights").
+//! * **Adv** — learners push to a co-located leaf aggregator (loopback);
+//!   leaves opportunistically batch and relay gradient sums up to the
+//!   root; pulls hop root→leaf→learner with a per-leaf fetch cache so one
+//!   root egress serves all co-located learners. Learners unblock once
+//!   their push reaches the *leaf*.
+//! * **Adv\*** — pushes additionally go through a depth-1 pipeline (the
+//!   paper's pushGradient thread: a gradient may not start sending before
+//!   the previous one is delivered; the learner stalls only on that), and
+//!   weights arrive continuously via the learner broadcast tree: at every
+//!   mini-batch boundary the learner swaps in the snapshot a broadcast
+//!   initiated `bcast_period` ago would have delivered (tracked
+//!   exactly via a pruned history of recent updates — no event flood).
+
+use std::collections::VecDeque;
+use std::sync::Arc;
+
+use anyhow::Result;
+
+use crate::coordinator::clock::Timestamp;
+use crate::coordinator::learner::{GradProvider, LearnerState};
+use crate::coordinator::protocol::Protocol;
+use crate::coordinator::server::{ParameterServer, PushOutcome, ServerConfig};
+use crate::coordinator::tree::{Arch, PsTree};
+use crate::netsim::cluster::{jittered, ClusterSpec, Fabric};
+use crate::netsim::cost::{LearnerCompute, ModelCost};
+use crate::netsim::event::EventQueue;
+use crate::netsim::overlap::OverlapTracker;
+use crate::params::lr::LrPolicy;
+use crate::params::optimizer::Optimizer;
+use crate::params::FlatVec;
+use crate::util::rng::Rng;
+
+/// Periodic model evaluation (the paper's Statistics Server, §3.2).
+pub trait Evaluator {
+    /// Returns (mean loss, error %) on the held-out set.
+    fn eval(&mut self, theta: &FlatVec) -> Result<(f64, f64)>;
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    pub protocol: Protocol,
+    pub arch: Arch,
+    pub mu: usize,
+    pub lambda: usize,
+    pub epochs: usize,
+    pub seed: u64,
+    pub cluster: ClusterSpec,
+    pub compute: LearnerCompute,
+    pub model: ModelCost,
+    /// Evaluate at every epoch boundary (requires an evaluator).
+    pub eval_each_epoch: bool,
+    /// Hard cap on weight updates (safety valve for huge timing runs).
+    pub max_updates: Option<u64>,
+}
+
+impl SimConfig {
+    /// A convenient default wiring: P775 cluster + compute models.
+    pub fn paper(
+        protocol: Protocol,
+        arch: Arch,
+        mu: usize,
+        lambda: usize,
+        epochs: usize,
+        model: ModelCost,
+    ) -> SimConfig {
+        SimConfig {
+            protocol,
+            arch,
+            mu,
+            lambda,
+            epochs,
+            seed: 42,
+            cluster: ClusterSpec::p775(),
+            compute: LearnerCompute::p775(),
+            model,
+            eval_each_epoch: false,
+            max_updates: None,
+        }
+    }
+
+    pub fn server_config(&self) -> ServerConfig {
+        ServerConfig {
+            protocol: self.protocol,
+            mu: self.mu,
+            lambda: self.lambda,
+            samples_per_epoch: self.model.samples_per_epoch,
+            target_epochs: self.epochs,
+        }
+    }
+}
+
+/// One epoch-boundary record.
+#[derive(Debug, Clone)]
+pub struct EpochStat {
+    pub epoch: usize,
+    pub sim_time: f64,
+    pub train_loss: f64,
+    pub test_loss: Option<f64>,
+    pub test_error_pct: Option<f64>,
+}
+
+/// Simulation output.
+#[derive(Debug)]
+pub struct SimResult {
+    /// Simulated wall-clock (seconds) to reach the target epochs.
+    pub sim_seconds: f64,
+    pub updates: u64,
+    pub staleness: crate::coordinator::clock::StalenessStats,
+    pub overlap: OverlapTracker,
+    pub epochs: Vec<EpochStat>,
+    /// Final held-out (loss, error %), if an evaluator was provided.
+    pub final_eval: Option<(f64, f64)>,
+    /// Final weights (numeric mode only).
+    pub theta: Option<FlatVec>,
+    /// Mean training loss over the last epoch (numeric mode).
+    pub final_train_loss: f64,
+    pub events_processed: u64,
+}
+
+type RelayBatch = Vec<(usize, Option<FlatVec>, Timestamp)>;
+
+enum Ev {
+    /// Learner finished a mini-batch gradient.
+    ComputeDone { learner: usize },
+    /// Gradient delivered to the root (Base).
+    PushAtRoot { learner: usize },
+    /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*).
+    PushAtLeaf { learner: usize },
+    /// A leaf's aggregated batch arrived at the root.
+    RelayAtRoot { leaf: usize, batch: RelayBatch },
+    /// A pull completed at the learner.
+    PullDone { learner: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    /// Hardsync broadcast delivery.
+    Broadcast { learner: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+}
+
+struct Slot {
+    state: LearnerState,
+    pending_grad: Option<FlatVec>,
+    pending_ts: Timestamp,
+    compute_cost: f64,
+    blocked_since: f64,
+    pipe_busy: bool,
+    /// Adv*: a finished gradient is waiting for the push pipeline.
+    pipe_waiting: bool,
+    overlap: OverlapTracker,
+}
+
+struct LeafSim {
+    queue: RelayBatch,
+    relay_busy: bool,
+    /// Pull cache: last fetched weights (ts, ready time, payload).
+    cache_ts: Timestamp,
+    cache_ready: f64,
+    cache_snap: Option<Arc<FlatVec>>,
+}
+
+pub struct SimEngine<'a> {
+    cfg: &'a SimConfig,
+    server: ParameterServer,
+    fabric: Fabric,
+    q: EventQueue<Ev>,
+    slots: Vec<Slot>,
+    leaves: Vec<LeafSim>,
+    tree: PsTree,
+    rng: Rng,
+    barrier: Vec<usize>,
+    /// Timestamp as of the last hardsync broadcast (guards against
+    /// broadcasting before the root has folded every relayed gradient).
+    last_bcast_ts: Timestamp,
+    /// Recent update history (time, ts, snapshot) for the adv* broadcast
+    /// model; pruned to the broadcast window.
+    recent: VecDeque<(f64, Timestamp, Option<Arc<FlatVec>>)>,
+    /// Weight-snapshot cache keyed by timestamp: many pulls land between
+    /// two updates, and cloning the full parameter vector per pull was
+    /// the engine's top allocation cost (see EXPERIMENTS.md §Perf-L3).
+    snap_cache: Option<(Timestamp, Arc<FlatVec>)>,
+    provider: Option<&'a mut dyn GradProvider>,
+    evaluator: Option<&'a mut dyn Evaluator>,
+    numeric: bool,
+    bytes: f64,
+    base_compute: f64,
+    ps_node: usize,
+    bcast_period: f64,
+    epoch_losses: Vec<f64>,
+    epoch_stats: Vec<EpochStat>,
+    last_epoch_loss: f64,
+}
+
+impl<'a> SimEngine<'a> {
+    pub fn new(
+        cfg: &'a SimConfig,
+        theta0: FlatVec,
+        optimizer: Optimizer,
+        lr: LrPolicy,
+        provider: Option<&'a mut dyn GradProvider>,
+        evaluator: Option<&'a mut dyn Evaluator>,
+    ) -> SimEngine<'a> {
+        let numeric = provider.is_some();
+        let lambda = cfg.lambda;
+        let lpn = cfg.cluster.learners_per_node.max(1);
+        let n_nodes = lambda.div_ceil(lpn);
+        let tree = PsTree::new(lambda, lpn);
+        let slots = (0..lambda)
+            .map(|id| Slot {
+                state: LearnerState::new(id, &theta0),
+                pending_grad: None,
+                pending_ts: 0,
+                compute_cost: 0.0,
+                blocked_since: 0.0,
+                pipe_busy: false,
+                pipe_waiting: false,
+                overlap: OverlapTracker::default(),
+            })
+            .collect();
+        let leaves = (0..tree.n_leaves)
+            .map(|_| LeafSim {
+                queue: Vec::new(),
+                relay_busy: false,
+                cache_ts: 0,
+                cache_ready: 0.0,
+                cache_snap: None,
+            })
+            .collect();
+        let fan = lpn.max(2) as f64;
+        let depth = (lambda.max(2) as f64).log(fan).ceil().max(1.0);
+        let bcast_period = depth * cfg.cluster.wire_time(cfg.model.bytes);
+        let server = ParameterServer::new(
+            cfg.server_config(),
+            if numeric { theta0 } else { FlatVec::zeros(0) },
+            optimizer,
+            lr,
+        );
+        // The PS process handles each incoming message one by one (§3.2):
+        // its sends and receives share a single service queue.
+        let mut fabric = Fabric::new(cfg.cluster.clone(), n_nodes + 1);
+        fabric.set_single_duplex(n_nodes);
+        SimEngine {
+            cfg,
+            server,
+            fabric,
+            q: EventQueue::new(),
+            slots,
+            leaves,
+            tree,
+            rng: Rng::new(cfg.seed),
+            barrier: Vec::new(),
+            last_bcast_ts: 0,
+            snap_cache: None,
+            recent: VecDeque::new(),
+            provider,
+            evaluator,
+            numeric,
+            bytes: cfg.model.bytes,
+            base_compute: cfg.compute.minibatch_secs(&cfg.model, cfg.mu),
+            ps_node: n_nodes,
+            bcast_period,
+            epoch_losses: Vec::new(),
+            epoch_stats: Vec::new(),
+            last_epoch_loss: f64::NAN,
+        }
+    }
+
+    fn node_of(&self, l: usize) -> usize {
+        l / self.cfg.cluster.learners_per_node.max(1)
+    }
+
+    fn leaf_node(&self, leaf: usize) -> usize {
+        self.node_of(leaf * self.tree.fanout)
+    }
+
+    /// Snapshot of the server weights at its current timestamp, cached so
+    /// repeated pulls between two updates share one allocation.
+    fn server_snapshot(&mut self) -> Option<Arc<FlatVec>> {
+        if !self.numeric {
+            return None;
+        }
+        let ts = self.server.timestamp();
+        if let Some((cached_ts, snap)) = &self.snap_cache {
+            if *cached_ts == ts {
+                return Some(snap.clone());
+            }
+        }
+        let snap = Arc::new(self.server.weights().0.clone());
+        self.snap_cache = Some((ts, snap.clone()));
+        Some(snap)
+    }
+
+    /// Run the simulation to completion.
+    pub fn run(mut self) -> Result<SimResult> {
+        anyhow::ensure!(
+            !(self.cfg.protocol.is_barrier() && self.cfg.arch == Arch::AdvStar),
+            "hardsync + Rudra-adv* is contradictory: adv* decouples the \
+             push/pull the barrier requires (the paper pairs adv* with \
+             softsync only — Table 4)"
+        );
+        for l in 0..self.cfg.lambda {
+            self.start_compute(0.0, l);
+        }
+        let max_updates = self.cfg.max_updates.unwrap_or(u64::MAX);
+        while let Some((now, ev)) = self.q.pop() {
+            if self.server.done() || self.server.updates >= max_updates {
+                break;
+            }
+            match ev {
+                Ev::ComputeDone { learner } => self.on_compute_done(now, learner)?,
+                Ev::PushAtRoot { learner } => self.on_push_at_root(now, learner)?,
+                Ev::PushAtLeaf { learner } => self.on_push_at_leaf(now, learner)?,
+                Ev::RelayAtRoot { leaf, batch } => self.on_relay_at_root(now, leaf, batch)?,
+                Ev::PullDone { learner, snapshot, ts } => {
+                    self.on_pull_done(now, learner, snapshot, ts)
+                }
+                Ev::Broadcast { learner, snapshot, ts } => {
+                    self.on_broadcast(now, learner, snapshot, ts)
+                }
+            }
+        }
+
+        let final_eval = match (&mut self.evaluator, self.numeric) {
+            (Some(e), true) => Some(e.eval(self.server.weights().0)?),
+            _ => None,
+        };
+        let mut overlap = OverlapTracker::default();
+        for s in &self.slots {
+            overlap.merge(&s.overlap);
+        }
+        let final_train_loss = if self.epoch_losses.is_empty() {
+            self.last_epoch_loss
+        } else {
+            crate::util::mean(&self.epoch_losses)
+        };
+        Ok(SimResult {
+            sim_seconds: self.q.now(),
+            updates: self.server.updates,
+            staleness: self.server.staleness.clone(),
+            overlap,
+            epochs: self.epoch_stats,
+            final_eval,
+            theta: if self.numeric { Some(self.server.weights().0.clone()) } else { None },
+            final_train_loss,
+            events_processed: self.q.processed(),
+        })
+    }
+
+    /// Begin a new mini-batch: adv* learners first swap in the weights a
+    /// continuous broadcast would have delivered by now.
+    fn start_compute(&mut self, now: f64, l: usize) {
+        if self.cfg.arch == Arch::AdvStar {
+            let horizon = now - self.bcast_period;
+            let mut best: Option<(Timestamp, Option<Arc<FlatVec>>)> = None;
+            for (t, ts, snap) in self.recent.iter() {
+                if *t <= horizon && *ts > self.slots[l].state.ts {
+                    best = Some((*ts, snap.clone()));
+                }
+            }
+            if let Some((ts, snap)) = best {
+                if let Some(s) = snap {
+                    self.slots[l].state.install(&s, ts);
+                } else {
+                    self.slots[l].state.ts = ts;
+                }
+            }
+        }
+        let dt = jittered(self.base_compute, &self.cfg.cluster, &mut self.rng);
+        self.slots[l].compute_cost = dt;
+        self.q.schedule_in(dt, Ev::ComputeDone { learner: l });
+    }
+
+    fn on_compute_done(&mut self, now: f64, l: usize) -> Result<()> {
+        let cost = self.slots[l].compute_cost;
+        self.slots[l].overlap.add_compute(cost);
+        self.slots[l].state.steps += 1;
+        let grad_ts = self.slots[l].state.ts;
+        if self.provider.is_some() {
+            let (g, loss) = {
+                let theta = &self.slots[l].state.theta;
+                self.provider.as_deref_mut().unwrap().compute(l, theta)?
+            };
+            self.epoch_losses.push(loss as f64);
+            self.slots[l].pending_grad = Some(g);
+        }
+        self.slots[l].pending_ts = grad_ts;
+        self.slots[l].blocked_since = now;
+
+        match self.cfg.arch {
+            Arch::Base => {
+                let t = self.fabric.send(now, self.node_of(l), self.ps_node, self.bytes);
+                self.q.schedule_at(t, Ev::PushAtRoot { learner: l });
+            }
+            Arch::Adv => {
+                let leaf = self.tree.leaf_of[l];
+                let t =
+                    self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
+                self.q.schedule_at(t, Ev::PushAtLeaf { learner: l });
+            }
+            Arch::AdvStar => {
+                if self.slots[l].pipe_busy {
+                    // The §3.3 constraint: the pushGradient thread may not
+                    // start the current gradient before the previous one is
+                    // delivered — the learner stalls here.
+                    self.slots[l].pipe_waiting = true;
+                } else {
+                    self.start_advstar_push(now, l);
+                    self.start_compute(now, l);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    fn start_advstar_push(&mut self, now: f64, l: usize) {
+        self.slots[l].pipe_busy = true;
+        let leaf = self.tree.leaf_of[l];
+        let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
+        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l });
+    }
+
+    fn on_push_at_root(&mut self, now: f64, l: usize) -> Result<()> {
+        let grad = self.slots[l].pending_grad.take();
+        let ts = self.slots[l].pending_ts;
+        self.fold(now, l, grad, ts)?;
+        if self.cfg.protocol.is_barrier() {
+            self.barrier.push(l);
+            self.maybe_broadcast(now);
+        } else {
+            self.start_pull_base(now, l);
+        }
+        Ok(())
+    }
+
+    fn on_push_at_leaf(&mut self, now: f64, l: usize) -> Result<()> {
+        let leaf = self.tree.leaf_of[l];
+        let grad = self.slots[l].pending_grad.take();
+        let ts = self.slots[l].pending_ts;
+        self.leaves[leaf].queue.push((l, grad, ts));
+        self.try_relay(now, leaf);
+
+        match self.cfg.arch {
+            Arch::Adv => {
+                if self.cfg.protocol.is_barrier() {
+                    self.barrier.push(l);
+                    // broadcast fires from on_relay_at_root once the root
+                    // has folded all λ gradients
+                } else {
+                    self.start_pull_adv(now, l);
+                }
+            }
+            Arch::AdvStar => {
+                // pipeline slot freed (delivery to the PS parent complete)
+                if self.slots[l].pipe_waiting {
+                    self.slots[l].pipe_waiting = false;
+                    let stall = now - self.slots[l].blocked_since;
+                    self.slots[l].overlap.add_exposed_comm(stall);
+                    self.start_advstar_push(now, l);
+                    self.start_compute(now, l);
+                } else {
+                    self.slots[l].pipe_busy = false;
+                }
+            }
+            Arch::Base => unreachable!("PushAtLeaf in Base"),
+        }
+        Ok(())
+    }
+
+    fn try_relay(&mut self, now: f64, leaf: usize) {
+        if self.leaves[leaf].relay_busy || self.leaves[leaf].queue.is_empty() {
+            return;
+        }
+        let take = self.tree.fanout.min(self.leaves[leaf].queue.len());
+        let batch: RelayBatch = self.leaves[leaf].queue.drain(..take).collect();
+        self.leaves[leaf].relay_busy = true;
+        let t = self.fabric.send(now, self.leaf_node(leaf), self.ps_node, self.bytes);
+        self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch });
+    }
+
+    fn on_relay_at_root(&mut self, now: f64, leaf: usize, batch: RelayBatch) -> Result<()> {
+        for (l, grad, ts) in batch {
+            self.fold(now, l, grad, ts)?;
+        }
+        self.leaves[leaf].relay_busy = false;
+        self.try_relay(now, leaf);
+        if self.cfg.protocol.is_barrier() {
+            self.maybe_broadcast(now);
+        }
+        Ok(())
+    }
+
+    /// Fold one gradient into the server; handle update/epoch outcomes.
+    fn fold(&mut self, now: f64, l: usize, grad: Option<FlatVec>, ts: Timestamp) -> Result<()> {
+        let outcome: PushOutcome = match grad {
+            Some(g) => self.server.push_gradient(l, &g, ts)?,
+            None => self.server.push_gradient_timing_only(l, ts),
+        };
+        if outcome.updated {
+            if self.cfg.arch == Arch::AdvStar {
+                let snap = self.server_snapshot();
+                self.recent.push_back((now, self.server.timestamp(), snap));
+                // prune entries older than the broadcast window (keep one
+                // older entry as the query floor)
+                while self.recent.len() > 1
+                    && self.recent[1].0 <= now - self.bcast_period - 1e-9
+                {
+                    self.recent.pop_front();
+                }
+            }
+        }
+        if let Some(epoch) = outcome.epoch_completed {
+            let train_loss = crate::util::mean(&self.epoch_losses);
+            self.last_epoch_loss = train_loss;
+            self.epoch_losses.clear();
+            let (test_loss, test_err) = if self.cfg.eval_each_epoch && self.numeric {
+                match &mut self.evaluator {
+                    Some(e) => {
+                        let (tl, te) = e.eval(self.server.weights().0)?;
+                        (Some(tl), Some(te))
+                    }
+                    None => (None, None),
+                }
+            } else {
+                (None, None)
+            };
+            self.epoch_stats.push(EpochStat {
+                epoch,
+                sim_time: now,
+                train_loss,
+                test_loss,
+                test_error_pct: test_err,
+            });
+        }
+        Ok(())
+    }
+
+    /// Hardsync: once the barrier round's update has fired (server ts
+    /// advanced past every waiting learner), broadcast new weights.
+    fn maybe_broadcast(&mut self, now: f64) {
+        // Wait for BOTH: every learner at the barrier AND the root having
+        // folded every gradient (its timestamp advanced past the last
+        // broadcast) — with tree aggregation the barrier fills before the
+        // final relay lands at the root.
+        if self.barrier.len() < self.cfg.lambda
+            || self.server.timestamp() <= self.last_bcast_ts
+        {
+            return;
+        }
+        let ts = self.server.timestamp();
+        self.last_bcast_ts = ts;
+        let snap = self.server_snapshot();
+        let waiting = std::mem::take(&mut self.barrier);
+        match self.cfg.arch {
+            Arch::Base => {
+                for l in waiting {
+                    let t = self.fabric.send(now, self.ps_node, self.node_of(l), self.bytes);
+                    self.q.schedule_at(
+                        t,
+                        Ev::Broadcast { learner: l, snapshot: snap.clone(), ts },
+                    );
+                }
+            }
+            Arch::Adv | Arch::AdvStar => {
+                // root → leaf once, then leaf → co-located learners.
+                for leaf in 0..self.tree.n_leaves {
+                    let t1 =
+                        self.fabric.send(now, self.ps_node, self.leaf_node(leaf), self.bytes);
+                    let members: Vec<usize> = self.tree.members(leaf).collect();
+                    for l in members {
+                        let t =
+                            self.fabric.send(t1, self.leaf_node(leaf), self.node_of(l), self.bytes);
+                        self.q.schedule_at(
+                            t,
+                            Ev::Broadcast { learner: l, snapshot: snap.clone(), ts },
+                        );
+                    }
+                }
+            }
+        }
+    }
+
+    fn start_pull_base(&mut self, now: f64, l: usize) {
+        if self.slots[l].state.needs_pull(self.server.timestamp()) {
+            let ts = self.server.timestamp();
+            let snap = self.server_snapshot();
+            let t = self.fabric.send(now, self.ps_node, self.node_of(l), self.bytes);
+            self.q.schedule_at(t, Ev::PullDone { learner: l, snapshot: snap, ts });
+        } else {
+            // timestamp inquiry only (§3.2's pull-skip)
+            let ts = self.slots[l].state.ts;
+            self.q.schedule_at(
+                now + self.cfg.cluster.latency,
+                Ev::PullDone { learner: l, snapshot: None, ts },
+            );
+        }
+    }
+
+    fn start_pull_adv(&mut self, now: f64, l: usize) {
+        let leaf = self.tree.leaf_of[l];
+        let server_ts = self.server.timestamp();
+        if !self.slots[l].state.needs_pull(server_ts) {
+            let ts = self.slots[l].state.ts;
+            self.q.schedule_at(
+                now + self.cfg.cluster.latency,
+                Ev::PullDone { learner: l, snapshot: None, ts },
+            );
+            return;
+        }
+        // Refresh the leaf cache from the root if it is stale and no fetch
+        // is already in flight (one root egress serves all members).
+        if self.leaves[leaf].cache_ts < server_ts && self.leaves[leaf].cache_ready <= now {
+            let snap = self.server_snapshot();
+            let ready = self.fabric.send(now, self.ps_node, self.leaf_node(leaf), self.bytes);
+            self.leaves[leaf].cache_ts = server_ts;
+            self.leaves[leaf].cache_ready = ready;
+            self.leaves[leaf].cache_snap = snap;
+        }
+        // Join the cached/in-flight copy; final hop is node-local.
+        let ready = self.leaves[leaf].cache_ready.max(now);
+        let t = self.fabric.send(ready, self.leaf_node(leaf), self.node_of(l), self.bytes);
+        self.q.schedule_at(
+            t,
+            Ev::PullDone {
+                learner: l,
+                snapshot: self.leaves[leaf].cache_snap.clone(),
+                ts: self.leaves[leaf].cache_ts,
+            },
+        );
+    }
+
+    fn on_pull_done(&mut self, now: f64, l: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp) {
+        if let Some(s) = snapshot {
+            self.slots[l].state.install(&s, ts);
+        } else {
+            self.slots[l].state.ts = self.slots[l].state.ts.max(ts);
+        }
+        let stall = now - self.slots[l].blocked_since;
+        self.slots[l].overlap.add_exposed_comm(stall);
+        self.start_compute(now, l);
+    }
+
+    fn on_broadcast(&mut self, now: f64, l: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp) {
+        if let Some(s) = snapshot {
+            self.slots[l].state.install(&s, ts);
+        } else {
+            self.slots[l].state.ts = ts;
+        }
+        let stall = now - self.slots[l].blocked_since;
+        self.slots[l].overlap.add_exposed_comm(stall);
+        self.start_compute(now, l);
+    }
+}
+
+/// Convenience wrapper: build and run in one call.
+pub fn run_sim<'a>(
+    cfg: &'a SimConfig,
+    theta0: FlatVec,
+    optimizer: Optimizer,
+    lr: LrPolicy,
+    provider: Option<&'a mut dyn GradProvider>,
+    evaluator: Option<&'a mut dyn Evaluator>,
+) -> Result<SimResult> {
+    SimEngine::new(cfg, theta0, optimizer, lr, provider, evaluator).run()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::learner::MockProvider;
+    use crate::params::lr::{LrPolicy, Modulation, Schedule};
+    use crate::params::optimizer::{Optimizer, OptimizerKind};
+
+    fn tiny_model() -> ModelCost {
+        ModelCost {
+            name: "tiny",
+            flops_per_sample: 1.0e6,
+            bytes: 1.0e3,
+            samples_per_epoch: 64,
+        }
+    }
+
+    fn run(
+        protocol: Protocol,
+        arch: Arch,
+        mu: usize,
+        lambda: usize,
+        epochs: usize,
+        numeric: bool,
+        modulation: Modulation,
+    ) -> SimResult {
+        let mut cfg = SimConfig::paper(protocol, arch, mu, lambda, epochs, tiny_model());
+        cfg.seed = 7;
+        let n = 4;
+        let theta0 = FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, n);
+        let lr = LrPolicy::new(Schedule::constant(0.05), modulation, 128);
+        let mut provider = MockProvider::new(vec![0.0; n]);
+        run_sim(
+            &cfg,
+            theta0,
+            opt,
+            lr,
+            if numeric { Some(&mut provider) } else { None },
+            None,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn hardsync_zero_staleness_and_convergence() {
+        let r = run(Protocol::Hardsync, Arch::Base, 4, 4, 3, true, Modulation::None);
+        assert_eq!(r.staleness.max, 0);
+        assert!(r.updates > 0);
+        // 12 updates at α=0.05 on the quadratic bowl contract the norm by
+        // 0.95^12 ≈ 0.54 of the initial 3.84.
+        let theta = r.theta.unwrap();
+        let init_norm = FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]).norm();
+        assert!(
+            theta.norm() < 0.7 * init_norm,
+            "should contract toward 0: {} vs {}",
+            theta.norm(),
+            init_norm
+        );
+        assert!(r.sim_seconds > 0.0);
+    }
+
+    #[test]
+    fn one_softsync_avg_staleness_near_one() {
+        let r = run(
+            Protocol::NSoftsync { n: 1 },
+            Arch::Base,
+            4,
+            8,
+            4,
+            true,
+            Modulation::StalenessReciprocal,
+        );
+        let avg = r.staleness.overall_avg();
+        assert!(
+            (0.3..=2.0).contains(&avg),
+            "1-softsync ⟨σ⟩ should be ≈1, got {avg}"
+        );
+        assert!(r.staleness.max <= 4, "σ ≤ 2n bound grossly violated: {}", r.staleness.max);
+    }
+
+    #[test]
+    fn lambda_softsync_avg_staleness_near_lambda() {
+        let lambda = 8;
+        let r = run(
+            Protocol::NSoftsync { n: lambda },
+            Arch::Base,
+            4,
+            lambda,
+            4,
+            true,
+            Modulation::StalenessReciprocal,
+        );
+        let avg = r.staleness.overall_avg();
+        assert!(
+            (lambda as f64 * 0.4..=lambda as f64 * 1.8).contains(&avg),
+            "λ-softsync ⟨σ⟩ should be ≈λ={lambda}, got {avg}"
+        );
+    }
+
+    #[test]
+    fn timing_only_runs_all_archs() {
+        for arch in [Arch::Base, Arch::Adv, Arch::AdvStar] {
+            let r = run(Protocol::NSoftsync { n: 1 }, arch, 4, 8, 2, false, Modulation::None);
+            assert!(r.sim_seconds > 0.0, "{arch:?}");
+            assert!(r.updates > 0, "{arch:?}");
+            assert!(r.theta.is_none());
+        }
+    }
+
+    #[test]
+    fn hardsync_adv_completes_stale_free() {
+        let r = run(Protocol::Hardsync, Arch::Adv, 4, 8, 2, true, Modulation::None);
+        assert!(r.updates > 0);
+        assert_eq!(r.staleness.max, 0, "hardsync over the PS tree must be stale-free");
+    }
+
+    #[test]
+    fn hardsync_advstar_rejected() {
+        let cfg = SimConfig::paper(Protocol::Hardsync, Arch::AdvStar, 4, 4, 1, tiny_model());
+        let mut p = MockProvider::new(vec![0.0; 2]);
+        let err = run_sim(
+            &cfg,
+            FlatVec::zeros(2),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 2),
+            LrPolicy::new(Schedule::constant(0.1), Modulation::None, 128),
+            Some(&mut p),
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("contradictory"), "{err}");
+    }
+
+    #[test]
+    fn more_learners_train_faster_in_sim_time() {
+        let slow = run(Protocol::NSoftsync { n: 1 }, Arch::Base, 8, 1, 2, false, Modulation::None);
+        let fast = run(Protocol::NSoftsync { n: 1 }, Arch::Base, 8, 8, 2, false, Modulation::None);
+        assert!(
+            fast.sim_seconds < slow.sim_seconds,
+            "scale-out should reduce simulated time: {} vs {}",
+            fast.sim_seconds,
+            slow.sim_seconds
+        );
+    }
+
+    #[test]
+    fn deterministic_replay() {
+        let a = run(Protocol::NSoftsync { n: 2 }, Arch::Base, 4, 4, 2, true, Modulation::Auto);
+        let b = run(Protocol::NSoftsync { n: 2 }, Arch::Base, 4, 4, 2, true, Modulation::Auto);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        assert_eq!(a.theta.unwrap().data, b.theta.unwrap().data);
+        assert_eq!(a.events_processed, b.events_processed);
+    }
+
+    #[test]
+    fn epoch_stats_emitted() {
+        let r = run(Protocol::Hardsync, Arch::Base, 4, 4, 3, true, Modulation::None);
+        assert_eq!(r.epochs.len(), 3);
+        assert!(r.epochs[0].epoch == 1);
+        assert!(r.epochs.windows(2).all(|w| w[0].sim_time <= w[1].sim_time));
+    }
+}

@@ -1,0 +1,23 @@
+//! Layer-3 coordinator — the paper's system contribution.
+//!
+//! A parameter-server training framework in the paper's image (§2–3):
+//! learners run getMinibatch → pullWeights → calcGradient → pushGradient;
+//! the server runs sumGradients → applyUpdate under one of three
+//! synchronization protocols ([`protocol`]); scalar timestamps and a
+//! per-update vector clock ([`clock`]) quantify gradient staleness; the
+//! Rudra-adv/adv\* topologies ([`tree`], [`buffer`]) trade staleness
+//! control for communication overlap.
+//!
+//! Two engines drive the same server/learner logic:
+//! * [`engine_sim`] — deterministic virtual-time execution with real
+//!   gradients; cluster timing comes from [`crate::netsim`].
+//! * [`engine_live`] — std::thread + mpsc "production" execution.
+
+pub mod buffer;
+pub mod clock;
+pub mod engine_live;
+pub mod engine_sim;
+pub mod learner;
+pub mod protocol;
+pub mod server;
+pub mod tree;

@@ -1,0 +1,233 @@
+//! Synchronization protocols (§3.1): hardsync, n-softsync, async.
+//!
+//! The server-side update rules:
+//! * **Hardsync** (Eq. 3): wait for exactly one gradient from *every*
+//!   learner, average the λ of them, update, broadcast. σ ≡ 0.
+//! * **n-softsync** (Eq. 5): update after collecting at least
+//!   c = ⌊λ/n⌋ gradients, averaging the c of them. Empirically ⟨σ⟩ ≈ n
+//!   and σ ≤ 2n (§5.1).
+//! * **Async** (Eq. 4): apply every gradient immediately — exactly the
+//!   n = λ degenerate case of n-softsync (c = 1), unbounded in theory
+//!   (Downpour-style); bounded here by the engine's in-flight limit.
+
+use anyhow::{bail, Result};
+
+/// Protocol selection. `NSoftsync { n: 1 }` is 1-softsync; `Async` is the
+/// n = λ degenerate case kept separate for reporting clarity.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Protocol {
+    Hardsync,
+    NSoftsync { n: usize },
+    Async,
+}
+
+impl Protocol {
+    /// Parse `"hardsync" | "async" | "<n>-softsync" | "softsync:<n>"`.
+    pub fn parse(s: &str) -> Result<Protocol> {
+        let s = s.trim().to_ascii_lowercase();
+        match s.as_str() {
+            "hardsync" | "hard" => return Ok(Protocol::Hardsync),
+            "async" => return Ok(Protocol::Async),
+            _ => {}
+        }
+        if let Some(n) = s.strip_suffix("-softsync").or_else(|| s.strip_prefix("softsync:")) {
+            let n: usize = n.parse().map_err(|_| {
+                anyhow::anyhow!("bad softsync splitting parameter in {s:?}")
+            })?;
+            if n == 0 {
+                bail!("n-softsync requires n >= 1");
+            }
+            return Ok(Protocol::NSoftsync { n });
+        }
+        bail!("unknown protocol {s:?} (hardsync | async | <n>-softsync)");
+    }
+
+    /// Number of gradients the server collects before updating
+    /// (c = ⌊λ/n⌋ for n-softsync, clamped to ≥ 1; λ for hardsync; 1 async).
+    pub fn gradients_per_update(&self, lambda: usize) -> usize {
+        match *self {
+            Protocol::Hardsync => lambda,
+            Protocol::NSoftsync { n } => (lambda / n).max(1),
+            Protocol::Async => 1,
+        }
+    }
+
+    /// Whether the server must hear from *every* learner each step (and
+    /// learners must block on the new weights) — only hardsync.
+    pub fn is_barrier(&self) -> bool {
+        matches!(self, Protocol::Hardsync)
+    }
+
+    /// The effective splitting parameter n (λ for async, n for softsync).
+    /// ⟨σ⟩ ≈ n is the paper's §5.1 measurement.
+    pub fn effective_n(&self, lambda: usize) -> usize {
+        match *self {
+            Protocol::Hardsync => 0,
+            Protocol::NSoftsync { n } => n.min(lambda.max(1)),
+            Protocol::Async => lambda.max(1),
+        }
+    }
+
+    pub fn label(&self) -> String {
+        match *self {
+            Protocol::Hardsync => "hardsync".to_string(),
+            Protocol::NSoftsync { n } => format!("{n}-softsync"),
+            Protocol::Async => "async".to_string(),
+        }
+    }
+}
+
+/// Gradient accumulator implementing the protocol update rules over flat
+/// vectors: collects pushes, reports readiness, and produces the averaged
+/// Δθ of Eq. (3)/(5) along with the contributing vector clock.
+#[derive(Debug)]
+pub struct Accumulator {
+    protocol: Protocol,
+    lambda: usize,
+    /// Sum of pending gradients.
+    sum: crate::params::FlatVec,
+    /// Timestamps of the pending gradients (the vector clock in waiting).
+    pending_ts: Vec<u64>,
+    /// Learner ids contributing to the pending update (hardsync dedup).
+    pending_from: Vec<usize>,
+}
+
+impl Accumulator {
+    pub fn new(protocol: Protocol, lambda: usize, n_params: usize) -> Accumulator {
+        Accumulator {
+            protocol,
+            lambda,
+            sum: crate::params::FlatVec::zeros(n_params),
+            pending_ts: Vec::with_capacity(lambda),
+            pending_from: Vec::with_capacity(lambda),
+        }
+    }
+
+    pub fn pending(&self) -> usize {
+        self.pending_ts.len()
+    }
+
+    /// Push one gradient. Returns an error on a hardsync double-push from
+    /// the same learner within a single barrier round (a protocol
+    /// violation — the paper's hardsync collects *exactly one* gradient
+    /// per learner per step).
+    pub fn push(
+        &mut self,
+        learner: usize,
+        grad: &crate::params::FlatVec,
+        grad_ts: u64,
+    ) -> Result<()> {
+        self.push_scaled(learner, grad, grad_ts, 1.0)
+    }
+
+    /// Push one gradient pre-scaled by `scale` — the footnote-3
+    /// per-gradient staleness modulation folds staler gradients in with
+    /// smaller weight.
+    pub fn push_scaled(
+        &mut self,
+        learner: usize,
+        grad: &crate::params::FlatVec,
+        grad_ts: u64,
+        scale: f32,
+    ) -> Result<()> {
+        if self.protocol.is_barrier() && self.pending_from.contains(&learner) {
+            bail!("hardsync: learner {learner} pushed twice in one barrier round");
+        }
+        self.sum.axpy(scale, grad);
+        self.pending_ts.push(grad_ts);
+        self.pending_from.push(learner);
+        Ok(())
+    }
+
+    /// True when enough gradients have arrived to trigger applyUpdate.
+    pub fn ready(&self) -> bool {
+        self.pending() >= self.protocol.gradients_per_update(self.lambda)
+    }
+
+    /// Drain the pending set: returns (averaged Δθ, vector clock).
+    /// Averages over the *actual* number collected, matching Eq. (5)'s
+    /// 1/c prefactor (and Eq. 3's 1/λ under hardsync).
+    pub fn take_update(&mut self) -> (crate::params::FlatVec, Vec<u64>) {
+        let c = self.pending().max(1);
+        let mut avg = std::mem::replace(
+            &mut self.sum,
+            crate::params::FlatVec::zeros(0),
+        );
+        avg.scale(1.0 / c as f32);
+        self.sum = crate::params::FlatVec::zeros(avg.len());
+        let clock = std::mem::take(&mut self.pending_ts);
+        self.pending_from.clear();
+        (avg, clock)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::FlatVec;
+
+    #[test]
+    fn parse_all_forms() {
+        assert_eq!(Protocol::parse("hardsync").unwrap(), Protocol::Hardsync);
+        assert_eq!(Protocol::parse("async").unwrap(), Protocol::Async);
+        assert_eq!(
+            Protocol::parse("1-softsync").unwrap(),
+            Protocol::NSoftsync { n: 1 }
+        );
+        assert_eq!(
+            Protocol::parse("softsync:30").unwrap(),
+            Protocol::NSoftsync { n: 30 }
+        );
+        assert!(Protocol::parse("0-softsync").is_err());
+        assert!(Protocol::parse("what").is_err());
+    }
+
+    #[test]
+    fn gradients_per_update_matches_eq5() {
+        assert_eq!(Protocol::Hardsync.gradients_per_update(30), 30);
+        assert_eq!(Protocol::NSoftsync { n: 1 }.gradients_per_update(30), 30);
+        assert_eq!(Protocol::NSoftsync { n: 2 }.gradients_per_update(30), 15);
+        assert_eq!(Protocol::NSoftsync { n: 30 }.gradients_per_update(30), 1);
+        // ⌊λ/n⌋ with n > λ clamps to 1
+        assert_eq!(Protocol::NSoftsync { n: 64 }.gradients_per_update(30), 1);
+        assert_eq!(Protocol::Async.gradients_per_update(30), 1);
+    }
+
+    #[test]
+    fn accumulator_averages() {
+        let mut acc = Accumulator::new(Protocol::NSoftsync { n: 1 }, 2, 2);
+        assert!(!acc.ready());
+        acc.push(0, &FlatVec::from_vec(vec![2.0, 0.0]), 0).unwrap();
+        assert!(!acc.ready());
+        acc.push(1, &FlatVec::from_vec(vec![0.0, 4.0]), 0).unwrap();
+        assert!(acc.ready());
+        let (avg, clock) = acc.take_update();
+        assert_eq!(avg.data, vec![1.0, 2.0]);
+        assert_eq!(clock, vec![0, 0]);
+        assert_eq!(acc.pending(), 0);
+    }
+
+    #[test]
+    fn async_updates_every_push() {
+        let mut acc = Accumulator::new(Protocol::Async, 30, 1);
+        acc.push(7, &FlatVec::from_vec(vec![3.0]), 5).unwrap();
+        assert!(acc.ready());
+        let (avg, clock) = acc.take_update();
+        assert_eq!(avg.data, vec![3.0]);
+        assert_eq!(clock, vec![5]);
+    }
+
+    #[test]
+    fn hardsync_rejects_double_push() {
+        let mut acc = Accumulator::new(Protocol::Hardsync, 2, 1);
+        acc.push(0, &FlatVec::from_vec(vec![1.0]), 0).unwrap();
+        assert!(acc.push(0, &FlatVec::from_vec(vec![1.0]), 0).is_err());
+    }
+
+    #[test]
+    fn effective_n() {
+        assert_eq!(Protocol::Hardsync.effective_n(30), 0);
+        assert_eq!(Protocol::NSoftsync { n: 4 }.effective_n(30), 4);
+        assert_eq!(Protocol::Async.effective_n(30), 30);
+    }
+}

@@ -1,0 +1,301 @@
+//! The parameter server (§2, §3.2): sumGradients + applyUpdate.
+//!
+//! Engine-agnostic state machine — both the virtual-time and the live
+//! engine drive this same struct, so protocol semantics, staleness
+//! accounting, and LR modulation are identical across engines. The server
+//! holds the single authoritative copy of the weights together with their
+//! scalar timestamp, and records the vector clock of every update.
+
+use anyhow::Result;
+
+use crate::coordinator::clock::{StalenessStats, Timestamp};
+use crate::coordinator::protocol::{Accumulator, Protocol};
+use crate::params::lr::LrPolicy;
+use crate::params::optimizer::Optimizer;
+use crate::params::FlatVec;
+
+/// Static run parameters the server needs.
+#[derive(Debug, Clone)]
+pub struct ServerConfig {
+    pub protocol: Protocol,
+    pub mu: usize,
+    pub lambda: usize,
+    /// Samples per epoch (the paper's epoch = one aggregate pass).
+    pub samples_per_epoch: u64,
+    pub target_epochs: usize,
+}
+
+/// Result of folding one pushed gradient into the server.
+#[derive(Debug, Clone, Default)]
+pub struct PushOutcome {
+    /// Set when this push triggered applyUpdate.
+    pub updated: bool,
+    /// ⟨σ⟩ of the triggered update (Eq. 2), if any.
+    pub avg_staleness: Option<f64>,
+    /// Epoch boundary crossed by this update, if any.
+    pub epoch_completed: Option<usize>,
+}
+
+/// The parameter server.
+pub struct ParameterServer {
+    pub cfg: ServerConfig,
+    theta: FlatVec,
+    ts: Timestamp,
+    acc: Accumulator,
+    optimizer: Optimizer,
+    lr: LrPolicy,
+    pub staleness: StalenessStats,
+    /// Aggregate samples folded into updates so far.
+    samples_applied: u64,
+    epochs_completed: usize,
+    /// Number of weight updates applied.
+    pub updates: u64,
+    /// α actually used for the most recent update (for logging).
+    pub last_alpha: f64,
+    /// Pending vector clock for the timing-only path (no FlatVec math).
+    timing_pending: Vec<Timestamp>,
+}
+
+impl ParameterServer {
+    pub fn new(
+        cfg: ServerConfig,
+        theta0: FlatVec,
+        optimizer: Optimizer,
+        lr: LrPolicy,
+    ) -> ParameterServer {
+        let acc = Accumulator::new(cfg.protocol, cfg.lambda, theta0.len());
+        ParameterServer {
+            cfg,
+            theta: theta0,
+            ts: 0,
+            acc,
+            optimizer,
+            lr,
+            staleness: StalenessStats::default(),
+            samples_applied: 0,
+            epochs_completed: 0,
+            updates: 0,
+            last_alpha: 0.0,
+            timing_pending: Vec::new(),
+        }
+    }
+
+    /// Current weights and their timestamp (the pullWeights payload).
+    pub fn weights(&self) -> (&FlatVec, Timestamp) {
+        (&self.theta, self.ts)
+    }
+
+    pub fn timestamp(&self) -> Timestamp {
+        self.ts
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epochs_completed
+    }
+
+    pub fn samples_applied(&self) -> u64 {
+        self.samples_applied
+    }
+
+    /// Training completes after `target_epochs` epochs of aggregate
+    /// samples have been applied ("when a specified number of epochs are
+    /// trained, parameter server shuts down each learner", §3.2).
+    pub fn done(&self) -> bool {
+        self.epochs_completed >= self.cfg.target_epochs
+    }
+
+    /// sumGradients: fold in one learner's gradient (computed from
+    /// weights at `grad_ts`); applyUpdate fires when the protocol's
+    /// quota c is reached. Under [`crate::params::lr::Modulation::PerGradient`]
+    /// each gradient is individually rescaled by 1/(σᵢ+1) at fold time
+    /// (the paper's footnote-3 strategy).
+    pub fn push_gradient(
+        &mut self,
+        learner: usize,
+        grad: &FlatVec,
+        grad_ts: Timestamp,
+    ) -> Result<PushOutcome> {
+        let scale = if self.lr.is_per_gradient() {
+            let sigma = self.ts.saturating_sub(grad_ts);
+            1.0 / (sigma as f32 + 1.0)
+        } else {
+            1.0
+        };
+        self.acc.push_scaled(learner, grad, grad_ts, scale)?;
+        let mut out = PushOutcome::default();
+        if self.acc.ready() {
+            let (avg, vclock) = self.acc.take_update();
+            self.apply_update(avg, &vclock, &mut out);
+        }
+        Ok(out)
+    }
+
+    /// Timing-only variant: advances protocol/clock/epoch state without
+    /// numeric work (used when simulating paper-scale models whose
+    /// gradients we never materialize — e.g. the 289 MB AlexNet).
+    pub fn push_gradient_timing_only(
+        &mut self,
+        _learner: usize,
+        grad_ts: Timestamp,
+    ) -> PushOutcome {
+        // Bypass the accumulator's FlatVec (which is zero-length here);
+        // count pending via the vector clock alone.
+        self.timing_pending.push(grad_ts);
+        let mut out = PushOutcome::default();
+        if self.timing_pending.len() >= self.cfg.protocol.gradients_per_update(self.cfg.lambda)
+        {
+            let vclock = std::mem::take(&mut self.timing_pending);
+            self.advance_clock(&vclock, &mut out);
+        }
+        out
+    }
+
+    fn apply_update(&mut self, avg: FlatVec, vclock: &[Timestamp], out: &mut PushOutcome) {
+        let alpha =
+            self.lr
+                .alpha(self.epochs_completed, self.cfg.protocol, self.cfg.mu, self.cfg.lambda);
+        self.last_alpha = alpha;
+        self.optimizer.apply(&mut self.theta, &avg, alpha as f32);
+        self.advance_clock(vclock, out);
+    }
+
+    fn advance_clock(&mut self, vclock: &[Timestamp], out: &mut PushOutcome) {
+        self.ts += 1;
+        self.updates += 1;
+        let rec = self.staleness.record(self.ts, vclock);
+        out.updated = true;
+        out.avg_staleness = Some(rec.avg_staleness);
+        let before = self.samples_applied / self.cfg.samples_per_epoch;
+        self.samples_applied += (vclock.len() * self.cfg.mu) as u64;
+        let after = self.samples_applied / self.cfg.samples_per_epoch;
+        if after > before {
+            self.epochs_completed = after as usize;
+            out.epoch_completed = Some(self.epochs_completed);
+        }
+    }
+
+    /// Direct access for warm-start initialization (§5.5) and checkpoints.
+    pub fn theta_mut(&mut self) -> &mut FlatVec {
+        &mut self.theta
+    }
+
+    pub fn reset_optimizer(&mut self) {
+        self.optimizer.reset();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lr::{Modulation, Schedule};
+    use crate::params::optimizer::OptimizerKind;
+
+    fn server(protocol: Protocol, lambda: usize) -> ParameterServer {
+        let cfg = ServerConfig {
+            protocol,
+            mu: 4,
+            lambda,
+            samples_per_epoch: 16,
+            target_epochs: 2,
+        };
+        ParameterServer::new(
+            cfg,
+            FlatVec::zeros(2),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 2),
+            LrPolicy::new(Schedule::constant(1.0), Modulation::None, 128),
+        )
+    }
+
+    #[test]
+    fn hardsync_updates_once_per_round() {
+        let mut s = server(Protocol::Hardsync, 2);
+        let g = FlatVec::from_vec(vec![1.0, 0.0]);
+        let o1 = s.push_gradient(0, &g, 0).unwrap();
+        assert!(!o1.updated);
+        let o2 = s.push_gradient(1, &g, 0).unwrap();
+        assert!(o2.updated);
+        assert_eq!(o2.avg_staleness, Some(0.0));
+        assert_eq!(s.timestamp(), 1);
+        // θ = 0 − 1.0·mean(g) = −1
+        assert_eq!(s.weights().0.data, vec![-1.0, 0.0]);
+    }
+
+    #[test]
+    fn softsync_epoch_accounting() {
+        // λ=2, μ=4, epoch=16 samples ⇒ 4 gradients (1-softsync: 2 per
+        // update ⇒ 8 samples per update ⇒ epoch boundary every 2 updates).
+        let mut s = server(Protocol::NSoftsync { n: 1 }, 2);
+        let g = FlatVec::zeros(2);
+        let mut epochs = vec![];
+        for i in 0..8 {
+            let out = s.push_gradient(i % 2, &g, s.timestamp()).unwrap();
+            if let Some(e) = out.epoch_completed {
+                epochs.push(e);
+            }
+        }
+        assert_eq!(epochs, vec![1, 2]);
+        assert!(s.done());
+    }
+
+    #[test]
+    fn async_applies_every_push_with_staleness() {
+        let mut s = server(Protocol::Async, 2);
+        let g = FlatVec::from_vec(vec![1.0, 1.0]);
+        let o = s.push_gradient(0, &g, 0).unwrap();
+        assert!(o.updated);
+        // learner 1 pushes a gradient computed at ts 0 while server is at 1
+        let o2 = s.push_gradient(1, &g, 0).unwrap();
+        assert_eq!(o2.avg_staleness, Some(1.0));
+        assert_eq!(s.staleness.max, 1);
+    }
+
+    #[test]
+    fn per_gradient_modulation_downweights_stale_pushes() {
+        // footnote-3 strategy: a gradient with σ=3 contributes 1/4 as
+        // much as a fresh one.
+        let cfg = ServerConfig {
+            protocol: Protocol::NSoftsync { n: 2 },
+            mu: 4,
+            lambda: 2,
+            samples_per_epoch: 1_000_000,
+            target_epochs: 100,
+        };
+        let mut s = ParameterServer::new(
+            cfg,
+            FlatVec::zeros(1),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 1),
+            LrPolicy::new(Schedule::constant(1.0), Modulation::PerGradient, 128),
+        );
+        let g = FlatVec::from_vec(vec![1.0]);
+        // Four fresh updates advance the clock to ts=4.
+        for _ in 0..4 {
+            let ts = s.timestamp();
+            s.push_gradient(0, &g, ts).unwrap();
+        }
+        let theta_before = s.weights().0.data[0];
+        // A σ=3 gradient: contribution scaled by 1/(3+1).
+        s.push_gradient(1, &g, s.timestamp() - 3).unwrap();
+        let delta = theta_before - s.weights().0.data[0];
+        assert!((delta - 0.25).abs() < 1e-6, "stale push moved θ by {delta}");
+        // A fresh gradient moves it by the full 1.0.
+        let theta_before = s.weights().0.data[0];
+        s.push_gradient(0, &g, s.timestamp()).unwrap();
+        let delta = theta_before - s.weights().0.data[0];
+        assert!((delta - 1.0).abs() < 1e-6, "fresh push moved θ by {delta}");
+    }
+
+    #[test]
+    fn timing_only_matches_numeric_clocking() {
+        let mut a = server(Protocol::NSoftsync { n: 2 }, 2);
+        let mut b = server(Protocol::NSoftsync { n: 2 }, 2);
+        let g = FlatVec::zeros(2);
+        for i in 0..6 {
+            let oa = a.push_gradient(i % 2, &g, a.timestamp()).unwrap();
+            let ob = b.push_gradient_timing_only(i % 2, b.timestamp());
+            assert_eq!(oa.updated, ob.updated);
+            assert_eq!(oa.avg_staleness, ob.avg_staleness);
+        }
+        assert_eq!(a.timestamp(), b.timestamp());
+        assert_eq!(a.samples_applied(), b.samples_applied());
+    }
+}

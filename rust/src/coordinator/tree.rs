@@ -1,0 +1,161 @@
+//! Rudra-adv / Rudra-adv* topologies (§3.3).
+//!
+//! * **Rudra-adv**: a parameter-server *group* forming a tree. Leaf PS
+//!   nodes are co-located with the learners they serve; each non-root
+//!   node averages its children's gradients and relays the average to its
+//!   parent; the root applies the weight update and weights flow back
+//!   down the tree. Unlike a sharded PS (DistBelief/Adam), all weights
+//!   share one timestamp — which is what keeps the staleness analysis
+//!   tractable (the paper's key architectural distinction).
+//! * **Rudra-adv\***: additionally broadcasts weights down a tree formed
+//!   *within the learners* and decouples push/pull into background
+//!   communication threads (see [`crate::coordinator::buffer`]).
+
+/// System architecture selector (Tables 1 and 4).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Arch {
+    Base,
+    Adv,
+    AdvStar,
+}
+
+impl Arch {
+    pub fn parse(s: &str) -> anyhow::Result<Arch> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "base" | "rudra-base" => Ok(Arch::Base),
+            "adv" | "rudra-adv" => Ok(Arch::Adv),
+            "adv*" | "advstar" | "rudra-adv*" => Ok(Arch::AdvStar),
+            other => anyhow::bail!("unknown architecture {other:?} (base | adv | adv*)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Arch::Base => "Rudra-base",
+            Arch::Adv => "Rudra-adv",
+            Arch::AdvStar => "Rudra-adv*",
+        }
+    }
+}
+
+/// The aggregation tree: learners are grouped under leaf PS nodes of
+/// fan-in `fanout` (one leaf per compute node in the paper: leaves are
+/// co-located with their learners).
+#[derive(Debug, Clone)]
+pub struct PsTree {
+    pub lambda: usize,
+    pub fanout: usize,
+    /// leaf index for each learner.
+    pub leaf_of: Vec<usize>,
+    pub n_leaves: usize,
+}
+
+impl PsTree {
+    pub fn new(lambda: usize, fanout: usize) -> PsTree {
+        assert!(fanout >= 1);
+        let n_leaves = lambda.div_ceil(fanout);
+        let leaf_of = (0..lambda).map(|l| l / fanout).collect();
+        PsTree { lambda, fanout, leaf_of, n_leaves }
+    }
+
+    /// Learners under leaf `leaf`.
+    pub fn members(&self, leaf: usize) -> impl Iterator<Item = usize> + '_ {
+        (0..self.lambda).filter(move |&l| self.leaf_of[l] == leaf)
+    }
+
+    /// Number of messages hitting the root per full gradient wave —
+    /// the contention-reduction factor vs. Rudra-base (λ → n_leaves).
+    pub fn root_fan_in(&self) -> usize {
+        self.n_leaves
+    }
+}
+
+/// Leaf-level partial aggregation: averages `k` gradients then relays.
+/// Numerically: root averaging of equal-weight leaf averages equals the
+/// flat average when all leaves carry the same member count; the general
+/// case is handled by weighting each relay by its member count.
+#[derive(Debug)]
+pub struct LeafAggregator {
+    sum: crate::params::FlatVec,
+    count: usize,
+    clock: Vec<u64>,
+}
+
+impl LeafAggregator {
+    pub fn new(n_params: usize) -> LeafAggregator {
+        LeafAggregator { sum: crate::params::FlatVec::zeros(n_params), count: 0, clock: Vec::new() }
+    }
+
+    pub fn push(&mut self, grad: &crate::params::FlatVec, grad_ts: u64) {
+        self.sum.add_assign(grad);
+        self.count += 1;
+        self.clock.push(grad_ts);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.count
+    }
+
+    /// Drain into (sum, count, clock) — the relay message carries the
+    /// *sum* and member count so the root can average exactly.
+    pub fn take(&mut self) -> (crate::params::FlatVec, usize, Vec<u64>) {
+        let n = self.sum.len();
+        let sum = std::mem::replace(&mut self.sum, crate::params::FlatVec::zeros(n));
+        let count = std::mem::take(&mut self.count);
+        let clock = std::mem::take(&mut self.clock);
+        (sum, count, clock)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::FlatVec;
+
+    #[test]
+    fn tree_shapes() {
+        let t = PsTree::new(54, 8);
+        assert_eq!(t.n_leaves, 7);
+        assert_eq!(t.root_fan_in(), 7);
+        assert_eq!(t.leaf_of[0], 0);
+        assert_eq!(t.leaf_of[53], 6);
+        assert_eq!(t.members(0).count(), 8);
+        assert_eq!(t.members(6).count(), 6); // remainder leaf
+        let total: usize = (0..t.n_leaves).map(|l| t.members(l).count()).sum();
+        assert_eq!(total, 54);
+    }
+
+    #[test]
+    fn exact_average_via_weighted_relay() {
+        // 3 learners, fanout 2 → leaves {0,1}, {2}. Root average of the
+        // relayed (sum, count) pairs must equal the flat average.
+        let t = PsTree::new(3, 2);
+        let grads = [
+            FlatVec::from_vec(vec![3.0]),
+            FlatVec::from_vec(vec![6.0]),
+            FlatVec::from_vec(vec![9.0]),
+        ];
+        let mut leaves: Vec<LeafAggregator> =
+            (0..t.n_leaves).map(|_| LeafAggregator::new(1)).collect();
+        for (l, g) in grads.iter().enumerate() {
+            leaves[t.leaf_of[l]].push(g, 0);
+        }
+        let mut total = FlatVec::zeros(1);
+        let mut count = 0;
+        for leaf in leaves.iter_mut() {
+            let (sum, c, _) = leaf.take();
+            total.add_assign(&sum);
+            count += c;
+        }
+        total.scale(1.0 / count as f32);
+        assert_eq!(total.data, vec![6.0]); // (3+6+9)/3
+    }
+
+    #[test]
+    fn arch_parse() {
+        assert_eq!(Arch::parse("base").unwrap(), Arch::Base);
+        assert_eq!(Arch::parse("Rudra-adv").unwrap(), Arch::Adv);
+        assert_eq!(Arch::parse("adv*").unwrap(), Arch::AdvStar);
+        assert!(Arch::parse("mesh").is_err());
+    }
+}

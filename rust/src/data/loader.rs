@@ -1,0 +1,161 @@
+//! Readers for the binary dataset formats written by
+//! `python/compile/datagen.py` (all little-endian; see that module's
+//! docstring for the layouts).
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+const IMG_MAGIC: &[u8; 8] = b"RUDRAIMG";
+const TXT_MAGIC: &[u8; 8] = b"RUDRATXT";
+
+/// An in-memory labeled image dataset (row-major [n, h, w, c] f32).
+#[derive(Debug, Clone)]
+pub struct ImageSet {
+    pub n: usize,
+    pub h: usize,
+    pub w: usize,
+    pub c: usize,
+    pub classes: usize,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+}
+
+impl ImageSet {
+    pub fn load(path: &Path) -> Result<ImageSet> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening image set {}", path.display()))?;
+        let mut header = [0u8; 8 + 24];
+        f.read_exact(&mut header)?;
+        if &header[..8] != IMG_MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let u = |i: usize| {
+            u32::from_le_bytes(header[8 + 4 * i..12 + 4 * i].try_into().unwrap()) as usize
+        };
+        let (ver, n, h, w, c, classes) = (u(0), u(1), u(2), u(3), u(4), u(5));
+        if ver != 1 {
+            bail!("{}: unsupported version {ver}", path.display());
+        }
+        let px = n * h * w * c;
+        let mut raw = vec![0u8; px * 4];
+        f.read_exact(&mut raw).context("truncated image payload")?;
+        let images = raw
+            .chunks_exact(4)
+            .map(|b| f32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        let mut raw_labels = vec![0u8; n * 4];
+        f.read_exact(&mut raw_labels).context("truncated labels")?;
+        let labels: Vec<i32> = raw_labels
+            .chunks_exact(4)
+            .map(|b| i32::from_le_bytes(b.try_into().unwrap()))
+            .collect();
+        for &l in &labels {
+            if l < 0 || l as usize >= classes {
+                bail!("{}: label {l} out of range [0, {classes})", path.display());
+            }
+        }
+        Ok(ImageSet { n, h, w, c, classes, images, labels })
+    }
+
+    /// Floats per image.
+    pub fn sample_len(&self) -> usize {
+        self.h * self.w * self.c
+    }
+
+    /// Copy sample `i`'s pixels into `out` (length `sample_len`).
+    pub fn fill_sample(&self, i: usize, out: &mut [f32]) {
+        let len = self.sample_len();
+        out.copy_from_slice(&self.images[i * len..(i + 1) * len]);
+    }
+}
+
+/// The text corpus for the LM example.
+#[derive(Debug, Clone)]
+pub struct Corpus {
+    pub bytes: Vec<u8>,
+}
+
+impl Corpus {
+    pub fn load(path: &Path) -> Result<Corpus> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening corpus {}", path.display()))?;
+        let mut header = [0u8; 8 + 4 + 8];
+        f.read_exact(&mut header)?;
+        if &header[..8] != TXT_MAGIC {
+            bail!("{}: bad magic", path.display());
+        }
+        let ver = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if ver != 1 {
+            bail!("{}: unsupported version {ver}", path.display());
+        }
+        let len = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+        let mut bytes = vec![0u8; len];
+        f.read_exact(&mut bytes).context("truncated corpus")?;
+        Ok(Corpus { bytes })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    fn write_imageset(path: &Path, n: usize, h: usize, w: usize, c: usize, classes: u32) {
+        let mut f = std::fs::File::create(path).unwrap();
+        f.write_all(IMG_MAGIC).unwrap();
+        for v in [1u32, n as u32, h as u32, w as u32, c as u32, classes] {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        for i in 0..(n * h * w * c) {
+            f.write_all(&(i as f32).to_le_bytes()).unwrap();
+        }
+        for i in 0..n {
+            f.write_all(&((i as i32) % classes as i32).to_le_bytes()).unwrap();
+        }
+    }
+
+    #[test]
+    fn image_roundtrip() {
+        let dir = std::env::temp_dir().join("rudra_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("imgs.bin");
+        write_imageset(&path, 4, 2, 2, 3, 10);
+        let set = ImageSet::load(&path).unwrap();
+        assert_eq!((set.n, set.h, set.w, set.c, set.classes), (4, 2, 2, 3, 10));
+        assert_eq!(set.sample_len(), 12);
+        let mut buf = vec![0.0f32; 12];
+        set.fill_sample(1, &mut buf);
+        assert_eq!(buf[0], 12.0);
+        assert_eq!(set.labels, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn rejects_out_of_range_labels() {
+        let dir = std::env::temp_dir().join("rudra_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad_labels.bin");
+        write_imageset(&path, 4, 2, 2, 3, 10);
+        // Corrupt the final label to 99 (>= classes).
+        let mut bytes = std::fs::read(&path).unwrap();
+        let n = bytes.len();
+        bytes[n - 4..].copy_from_slice(&99i32.to_le_bytes());
+        std::fs::write(&path, bytes).unwrap();
+        assert!(ImageSet::load(&path).is_err());
+    }
+
+    #[test]
+    fn corpus_roundtrip() {
+        let dir = std::env::temp_dir().join("rudra_test_loader");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("corpus.bin");
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(TXT_MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&5u64.to_le_bytes()).unwrap();
+        f.write_all(b"hello").unwrap();
+        drop(f);
+        let c = Corpus::load(&path).unwrap();
+        assert_eq!(c.bytes, b"hello");
+    }
+}

@@ -1,0 +1,13 @@
+//! Data layer: the paper's "Data Server" (§3.2) in library form.
+//!
+//! The paper hosts training data on GPFS and gives every learner an I/O
+//! thread that prefetches mini-batches "via random sampling prior to
+//! training", fully overlapped with compute. Here [`loader`] reads the
+//! binary datasets produced by the AOT step, [`sampler`] reproduces the
+//! per-learner random sampling (with an optional prefetch thread in the
+//! live engine), and [`corpus`] provides contiguous-window sampling over
+//! the byte corpus for the transformer example.
+
+pub mod corpus;
+pub mod loader;
+pub mod sampler;

@@ -1,0 +1,154 @@
+//! Per-learner mini-batch samplers (the paper's getMinibatch, §2).
+//!
+//! Each learner "selects randomly a mini-batch of examples from the
+//! training data" — learners sample independently with replacement across
+//! the shared dataset (the paper's data server serves random samples, not
+//! partitions). Epoch accounting follows the paper: an epoch is one pass
+//! worth of samples *in aggregate* across all learners.
+
+use crate::data::loader::ImageSet;
+use crate::util::rng::Rng;
+
+/// A sampled mini-batch in the flat layouts the grad executables expect.
+#[derive(Debug, Clone)]
+pub struct Batch {
+    /// [μ · h · w · c] f32, row-major NHWC.
+    pub images: Vec<f32>,
+    /// [μ] i32.
+    pub labels: Vec<i32>,
+    pub mu: usize,
+}
+
+/// Random-with-replacement sampler over an [`ImageSet`], one per learner,
+/// seeded from the learner id so runs replay exactly.
+#[derive(Debug)]
+pub struct BatchSampler<'a> {
+    set: &'a ImageSet,
+    rng: Rng,
+    pub mu: usize,
+}
+
+impl<'a> BatchSampler<'a> {
+    pub fn new(set: &'a ImageSet, mu: usize, seed: u64, learner: usize) -> Self {
+        assert!(mu >= 1, "mini-batch size must be >= 1");
+        BatchSampler { set, rng: Rng::new(seed).split(learner as u64), mu }
+    }
+
+    pub fn next_batch(&mut self) -> Batch {
+        let len = self.set.sample_len();
+        let mut images = vec![0.0f32; self.mu * len];
+        let mut labels = vec![0i32; self.mu];
+        for b in 0..self.mu {
+            let i = self.rng.usize_below(self.set.n);
+            self.set.fill_sample(i, &mut images[b * len..(b + 1) * len]);
+            labels[b] = self.set.labels[i];
+        }
+        Batch { images, labels, mu: self.mu }
+    }
+}
+
+/// Sequential full-coverage iterator for evaluation: yields fixed-size
+/// batches padded by wrapping, plus the count of *valid* samples in each
+/// (the stats server only scores the valid prefix).
+#[derive(Debug)]
+pub struct EvalIter<'a> {
+    set: &'a ImageSet,
+    batch: usize,
+    pos: usize,
+}
+
+impl<'a> EvalIter<'a> {
+    pub fn new(set: &'a ImageSet, batch: usize) -> Self {
+        EvalIter { set, batch, pos: 0 }
+    }
+}
+
+impl<'a> Iterator for EvalIter<'a> {
+    /// (batch, valid_count)
+    type Item = (Batch, usize);
+
+    fn next(&mut self) -> Option<Self::Item> {
+        if self.pos >= self.set.n {
+            return None;
+        }
+        let len = self.set.sample_len();
+        let valid = (self.set.n - self.pos).min(self.batch);
+        let mut images = vec![0.0f32; self.batch * len];
+        let mut labels = vec![0i32; self.batch];
+        for b in 0..self.batch {
+            // wrap padding re-scores early samples; they are not counted.
+            let i = (self.pos + b) % self.set.n;
+            self.set.fill_sample(i, &mut images[b * len..(b + 1) * len]);
+            labels[b] = self.set.labels[i];
+        }
+        self.pos += valid;
+        Some((Batch { images, labels, mu: self.batch }, valid))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tiny_set() -> ImageSet {
+        let n = 10;
+        let (h, w, c) = (2, 2, 1);
+        ImageSet {
+            n,
+            h,
+            w,
+            c,
+            classes: 5,
+            images: (0..n * h * w * c).map(|i| i as f32).collect(),
+            labels: (0..n as i32).map(|i| i % 5).collect(),
+        }
+    }
+
+    #[test]
+    fn batches_have_right_shape_and_content() {
+        let set = tiny_set();
+        let mut s = BatchSampler::new(&set, 4, 42, 0);
+        let b = s.next_batch();
+        assert_eq!(b.images.len(), 4 * 4);
+        assert_eq!(b.labels.len(), 4);
+        // each row must be a real sample
+        for i in 0..4 {
+            let first = b.images[i * 4];
+            let idx = (first as usize) / 4;
+            assert!(idx < set.n);
+            assert_eq!(b.labels[i], set.labels[idx]);
+        }
+    }
+
+    #[test]
+    fn different_learners_sample_differently() {
+        let set = tiny_set();
+        let mut a = BatchSampler::new(&set, 8, 42, 0);
+        let mut b = BatchSampler::new(&set, 8, 42, 1);
+        assert_ne!(a.next_batch().labels, b.next_batch().labels);
+    }
+
+    #[test]
+    fn same_seed_replays() {
+        let set = tiny_set();
+        let mut a = BatchSampler::new(&set, 8, 42, 3);
+        let mut b = BatchSampler::new(&set, 8, 42, 3);
+        for _ in 0..5 {
+            assert_eq!(a.next_batch().labels, b.next_batch().labels);
+        }
+    }
+
+    #[test]
+    fn eval_iter_covers_exactly_once() {
+        let set = tiny_set();
+        let mut total = 0;
+        let mut batches = 0;
+        for (b, valid) in EvalIter::new(&set, 4) {
+            assert_eq!(b.labels.len(), 4);
+            total += valid;
+            batches += 1;
+        }
+        assert_eq!(total, set.n);
+        assert_eq!(batches, 3); // 4 + 4 + 2
+    }
+}

@@ -1,0 +1,117 @@
+//! Experiment harness: wires artifacts + data + engines into the
+//! experiment grid of the paper's evaluation section.
+//!
+//! [`providers`] implements [`GradProvider`] over the AOT executables;
+//! [`sweep`] runs (σ, μ, λ) grids through the virtual-time engine and
+//! collects the quantities each table/figure reports.
+
+pub mod paper;
+pub mod providers;
+pub mod sweep;
+
+use std::path::PathBuf;
+
+use anyhow::{Context, Result};
+
+use crate::data::loader::{Corpus, ImageSet};
+use crate::runtime::{EvalExec, GradExec, Manifest, Runtime};
+
+/// Everything loaded once and shared across runs: the PJRT client,
+/// compiled executables (one grad graph per μ), and the datasets.
+pub struct Workspace {
+    pub manifest: Manifest,
+    pub runtime: Runtime,
+    pub train: ImageSet,
+    pub test: ImageSet,
+    pub corpus: Corpus,
+}
+
+impl Workspace {
+    /// Load from `artifacts/manifest.json` (or `$RUDRA_MANIFEST`).
+    pub fn open_default() -> Result<Workspace> {
+        let path = std::env::var("RUDRA_MANIFEST")
+            .map(PathBuf::from)
+            .unwrap_or_else(|_| Manifest::default_path());
+        Self::open(&path)
+    }
+
+    pub fn open(manifest_path: &std::path::Path) -> Result<Workspace> {
+        let manifest = Manifest::load(manifest_path)?;
+        let runtime = Runtime::cpu()?;
+        let train = ImageSet::load(&manifest.data.train).context("train set")?;
+        let test = ImageSet::load(&manifest.data.test).context("test set")?;
+        let corpus = Corpus::load(&manifest.data.corpus).context("corpus")?;
+        Ok(Workspace { manifest, runtime, train, test, corpus })
+    }
+
+    /// Compile the CNN grad executable for mini-batch size μ.
+    pub fn cnn_grad(&self, mu: usize) -> Result<GradExec> {
+        let d = &self.manifest.data;
+        self.runtime.load_grad(
+            self.manifest.cnn.grad_path(mu)?,
+            self.manifest.cnn.params,
+            vec![mu, d.height, d.width, d.channels],
+            vec![mu],
+        )
+    }
+
+    /// Compile the CNN eval executable.
+    pub fn cnn_eval(&self) -> Result<EvalExec> {
+        let d = &self.manifest.data;
+        let b = self.manifest.cnn.eval_batch;
+        self.runtime.load_eval(
+            &self.manifest.cnn.eval,
+            self.manifest.cnn.params,
+            vec![b, d.height, d.width, d.channels],
+            vec![b],
+            true,
+        )
+    }
+
+    /// Initial CNN weights (deterministic, from the AOT step).
+    pub fn cnn_init(&self) -> Result<crate::params::FlatVec> {
+        let w = crate::params::FlatVec::load(&self.manifest.cnn.init)?;
+        anyhow::ensure!(w.len() == self.manifest.cnn.params, "init length mismatch");
+        Ok(w)
+    }
+
+    /// LM grad executable (the e2e example), if LM artifacts were built.
+    pub fn lm_grad(&self) -> Result<GradExec> {
+        let lm = self.lm()?;
+        let b = self.manifest.lm_batch;
+        let s = self.manifest.lm_seq;
+        self.runtime
+            .load_grad_tokens(lm.grad_path(b)?, lm.params, vec![b, s], vec![b, s])
+    }
+
+    pub fn lm_eval(&self) -> Result<EvalExec> {
+        let lm = self.lm()?;
+        let b = self.manifest.lm_batch;
+        let s = self.manifest.lm_seq;
+        self.runtime.load_eval(&lm.eval, lm.params, vec![b, s], vec![b, s], false)
+    }
+
+    pub fn lm_init(&self) -> Result<crate::params::FlatVec> {
+        let lm = self.lm()?;
+        let w = crate::params::FlatVec::load(&lm.init)?;
+        anyhow::ensure!(w.len() == lm.params, "lm init length mismatch");
+        Ok(w)
+    }
+
+    fn lm(&self) -> Result<&crate::runtime::artifacts::ModelArtifacts> {
+        self.manifest
+            .lm
+            .as_ref()
+            .context("LM artifacts not built (aot ran with --skip-lm)")
+    }
+
+    /// Cost model of the *actual* synthetic CNN workload, for sim timing.
+    pub fn cnn_cost(&self) -> crate::netsim::cost::ModelCost {
+        crate::netsim::cost::ModelCost::from_manifest(
+            "synthetic-cnn",
+            self.manifest.cnn.flops,
+            self.manifest.cnn.params,
+            self.manifest.data.train_n as u64,
+        )
+    }
+}

@@ -1,0 +1,123 @@
+//! The paper's published numbers, transcribed for paper-vs-reproduced
+//! reporting in the benches (Gupta, Zhang & Milthorpe, IJCAI 2017).
+
+/// Table 1: communication overlap (%) in the adversarial scenario
+/// (μ=4, 300 MB model, ~60 learners).
+pub const TABLE1_OVERLAP: [(&str, f64); 3] =
+    [("Rudra-base", 11.52), ("Rudra-adv", 56.75), ("Rudra-adv*", 99.56)];
+
+/// §5.4 baseline: (σ,μ,λ) = (0,128,1) → 17.9% test error, 22 392 s for
+/// 140 epochs.
+pub const CIFAR_BASELINE_ERR: f64 = 17.9;
+pub const CIFAR_BASELINE_SECS: f64 = 22_392.0;
+pub const CIFAR_EPOCHS: usize = 140;
+
+/// Table 2 rows: (σ, μ, λ, test error %, training time s), grouped by
+/// μλ product.
+pub const TABLE2: [(usize, usize, usize, f64, f64); 22] = [
+    // μλ ≈ 128
+    (1, 4, 30, 18.09, 1573.0),
+    (30, 4, 30, 18.41, 2073.0),
+    (18, 8, 18, 18.92, 2488.0),
+    (10, 16, 10, 18.79, 3396.0),
+    (4, 32, 4, 18.82, 7776.0),
+    (2, 64, 2, 17.96, 13449.0),
+    // μλ ≈ 256
+    (1, 8, 30, 20.04, 1478.0),
+    (30, 8, 30, 19.65, 1509.0),
+    (18, 16, 18, 20.33, 2938.0),
+    (10, 32, 10, 20.82, 3518.0),
+    (4, 64, 4, 20.70, 6631.0),
+    (2, 128, 2, 19.52, 11797.0),
+    (1, 128, 2, 19.59, 11924.0),
+    // μλ ≈ 512
+    (1, 16, 30, 23.25, 1469.0),
+    (30, 16, 30, 22.14, 1502.0),
+    (18, 32, 18, 23.63, 2255.0),
+    (10, 64, 10, 24.08, 2683.0),
+    (4, 128, 4, 23.01, 7089.0),
+    // μλ ≈ 1024
+    (1, 32, 30, 27.16, 1299.0),
+    (30, 32, 30, 27.27, 1420.0),
+    (18, 64, 18, 28.31, 1713.0),
+    (1, 128, 10, 29.83, 2551.0),
+];
+
+/// Table 3: the paper's top-5 (σ, μ, λ) configurations
+/// (σ, μ, λ, protocol, test error %, training time s).
+pub const TABLE3: [(usize, usize, usize, &str, f64, f64); 5] = [
+    (1, 4, 30, "1-softsync", 18.09, 1573.0),
+    (0, 8, 30, "Hardsync", 18.56, 1995.0),
+    (30, 4, 30, "30-softsync", 18.41, 2073.0),
+    (0, 4, 30, "Hardsync", 18.15, 2235.0),
+    (18, 8, 18, "18-softsync", 18.92, 2488.0),
+];
+
+/// Table 4: ImageNet ladder — (config, arch, μ, λ, protocol,
+/// top-1 err %, top-5 err %, minutes/epoch).
+pub const TABLE4: [(&str, &str, usize, usize, &str, f64, f64, f64); 4] = [
+    ("base-hardsync", "base", 16, 18, "hardsync", 44.35, 20.85, 330.0),
+    ("base-softsync", "base", 16, 18, "1-softsync", 45.63, 22.08, 270.0),
+    ("adv-softsync", "adv", 4, 54, "1-softsync", 46.09, 22.44, 212.0),
+    ("adv*-softsync", "adv*", 4, 54, "1-softsync", 46.53, 23.38, 125.0),
+];
+
+/// §5.5: ImageNet baseline (μ=256, λ=1) trains at 54 h/epoch; μ=8, λ=54
+/// gives >50% top-1 at ~96 min/epoch (the accuracy cliff).
+pub const IMAGENET_BASELINE_HOURS_PER_EPOCH: f64 = 54.0;
+
+/// Figure 6/7 grids.
+pub const FIG67_LAMBDAS: [usize; 6] = [1, 2, 4, 10, 18, 30];
+pub const FIG67_MUS: [usize; 6] = [4, 8, 16, 32, 64, 128];
+
+/// Whether the full paper-scale grid was requested (env RUDRA_FULL=1);
+/// otherwise benches run a reduced grid that preserves the comparisons.
+pub fn full_grid() -> bool {
+    std::env::var("RUDRA_FULL").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Reduced grid axes used when `full_grid()` is false.
+pub fn grid_axes() -> (Vec<usize>, Vec<usize>, usize) {
+    if full_grid() {
+        (FIG67_MUS.to_vec(), FIG67_LAMBDAS.to_vec(), 30)
+    } else {
+        (vec![4, 32, 128], vec![1, 4, 30], 6)
+    }
+}
+
+/// Standard bench banner explaining the measurement provenance.
+pub fn banner(what: &str) {
+    println!("=== {what} ===");
+    println!(
+        "[reproduction] accuracy: real SGD on the synthetic benchmark (see DESIGN.md §3);"
+    );
+    println!(
+        "[reproduction] time: discrete-event P775 model, simulated seconds;"
+    );
+    println!(
+        "[reproduction] grid: {} (RUDRA_FULL=1 for the paper's full grid)\n",
+        if full_grid() { "FULL paper grid" } else { "reduced default" }
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    #[test]
+    fn table2_groups_are_mulambda_constant() {
+        // every row's μλ product sits within 30% of one of the paper's
+        // four group anchors {128, 256, 512, 1024}
+        for &(_, mu, lambda, _, _) in super::TABLE2.iter() {
+            let p = (mu * lambda) as f64;
+            let near = [128.0, 256.0, 512.0, 1024.0]
+                .iter()
+                .any(|g| (p / g).max(g / p) <= 1.3);
+            assert!(near, "μλ = {p} not near a group anchor");
+        }
+    }
+
+    #[test]
+    fn table3_is_sorted_by_time() {
+        let times: Vec<f64> = super::TABLE3.iter().map(|r| r.5).collect();
+        assert!(times.windows(2).all(|w| w[0] <= w[1]));
+    }
+}

@@ -1,0 +1,196 @@
+//! PJRT-backed [`GradProvider`] implementations: the learner's
+//! getMinibatch + calcGradient over the AOT-compiled graphs.
+
+use anyhow::Result;
+
+use crate::coordinator::learner::GradProvider;
+use crate::data::corpus::WindowSampler;
+use crate::data::loader::{Corpus, ImageSet};
+use crate::data::sampler::BatchSampler;
+use crate::params::FlatVec;
+use crate::runtime::GradExec;
+
+/// CNN provider: per-learner random mini-batch sampling over the image
+/// set + one grad-graph execution per compute.
+pub struct CnnProvider<'a> {
+    exec: &'a GradExec,
+    samplers: Vec<BatchSampler<'a>>,
+    /// Total gradient executions (diagnostics / perf accounting).
+    pub steps: u64,
+}
+
+impl<'a> CnnProvider<'a> {
+    pub fn new(exec: &'a GradExec, set: &'a ImageSet, mu: usize, lambda: usize, seed: u64) -> Self {
+        let samplers =
+            (0..lambda).map(|l| BatchSampler::new(set, mu, seed, l)).collect();
+        CnnProvider { exec, samplers, steps: 0 }
+    }
+}
+
+impl<'a> GradProvider for CnnProvider<'a> {
+    fn compute(&mut self, learner: usize, theta: &FlatVec) -> Result<(FlatVec, f32)> {
+        let batch = self.samplers[learner].next_batch();
+        let out = self.exec.run_images(theta, &batch.images, &batch.labels)?;
+        self.steps += 1;
+        Ok((out.grads, out.loss))
+    }
+
+    fn n_params(&self) -> usize {
+        self.exec.n_params
+    }
+}
+
+/// LM provider: contiguous-window sampling over the byte corpus.
+pub struct LmProvider<'a> {
+    exec: &'a GradExec,
+    samplers: Vec<WindowSampler<'a>>,
+    pub steps: u64,
+}
+
+impl<'a> LmProvider<'a> {
+    pub fn new(
+        exec: &'a GradExec,
+        corpus: &'a Corpus,
+        batch: usize,
+        seq: usize,
+        lambda: usize,
+        seed: u64,
+    ) -> Self {
+        let samplers = (0..lambda)
+            .map(|l| WindowSampler::new(corpus, batch, seq, seed, l))
+            .collect();
+        LmProvider { exec, samplers, steps: 0 }
+    }
+}
+
+impl<'a> GradProvider for LmProvider<'a> {
+    fn compute(&mut self, learner: usize, theta: &FlatVec) -> Result<(FlatVec, f32)> {
+        let batch = self.samplers[learner].next_batch();
+        let out = self.exec.run_tokens(theta, &batch.tokens, &batch.targets)?;
+        self.steps += 1;
+        Ok((out.grads, out.loss))
+    }
+
+    fn n_params(&self) -> usize {
+        self.exec.n_params
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Compute service for the live engine
+// ---------------------------------------------------------------------------
+
+use std::sync::mpsc;
+use std::sync::Arc;
+
+/// A gradient request to the compute service.
+pub struct ComputeReq {
+    pub theta: Vec<f32>,
+    pub images: Vec<f32>,
+    pub labels: Vec<i32>,
+    pub reply: mpsc::Sender<Result<(Vec<f32>, f32)>>,
+}
+
+/// PJRT executables are not `Send` (the client wraps a raw PJRT handle),
+/// so the live engine routes gradient work through one dedicated service
+/// thread that *owns* the client — mirroring the paper's design where the
+/// learner process has dedicated compute/communication threads.
+pub struct ComputeService {
+    req_tx: Option<mpsc::Sender<ComputeReq>>,
+    handle: Option<std::thread::JoinHandle<Result<()>>>,
+    pub n_params: usize,
+}
+
+impl ComputeService {
+    /// Start the service for the CNN grad graph at mini-batch size μ.
+    pub fn start_cnn(manifest_path: std::path::PathBuf, mu: usize) -> Result<ComputeService> {
+        // Validate eagerly on the caller's thread for a clean error.
+        let m = crate::runtime::Manifest::load(&manifest_path)?;
+        let n_params = m.cnn.params;
+        let (tx, rx) = mpsc::channel::<ComputeReq>();
+        let handle = std::thread::spawn(move || -> Result<()> {
+            let ws = crate::harness::Workspace::open(&manifest_path)?;
+            let exec = ws.cnn_grad(mu)?;
+            for req in rx {
+                let theta = FlatVec::from_vec(req.theta);
+                let res = exec
+                    .run_images(&theta, &req.images, &req.labels)
+                    .map(|o| (o.grads.data, o.loss));
+                let _ = req.reply.send(res);
+            }
+            Ok(())
+        });
+        Ok(ComputeService { req_tx: Some(tx), handle: Some(handle), n_params })
+    }
+
+    pub fn client(&self) -> mpsc::Sender<ComputeReq> {
+        self.req_tx.as_ref().expect("service running").clone()
+    }
+}
+
+impl Drop for ComputeService {
+    fn drop(&mut self) {
+        drop(self.req_tx.take()); // close the channel so the thread exits
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+/// `Send` provider for the live engine: samples its own mini-batches and
+/// delegates gradient execution to the [`ComputeService`].
+pub struct ServiceProvider {
+    tx: mpsc::Sender<ComputeReq>,
+    set: Arc<ImageSet>,
+    rng: crate::util::rng::Rng,
+    mu: usize,
+    n_params: usize,
+}
+
+impl ServiceProvider {
+    pub fn new(
+        service: &ComputeService,
+        set: Arc<ImageSet>,
+        mu: usize,
+        seed: u64,
+        learner: usize,
+    ) -> ServiceProvider {
+        ServiceProvider {
+            tx: service.client(),
+            rng: crate::util::rng::Rng::new(seed).split(learner as u64),
+            set,
+            mu,
+            n_params: service.n_params,
+        }
+    }
+
+    fn sample(&mut self) -> (Vec<f32>, Vec<i32>) {
+        let len = self.set.sample_len();
+        let mut images = vec![0.0f32; self.mu * len];
+        let mut labels = vec![0i32; self.mu];
+        for b in 0..self.mu {
+            let i = self.rng.usize_below(self.set.n);
+            self.set.fill_sample(i, &mut images[b * len..(b + 1) * len]);
+            labels[b] = self.set.labels[i];
+        }
+        (images, labels)
+    }
+}
+
+impl GradProvider for ServiceProvider {
+    fn compute(&mut self, _learner: usize, theta: &FlatVec) -> Result<(FlatVec, f32)> {
+        let (images, labels) = self.sample();
+        let (reply_tx, reply_rx) = mpsc::channel();
+        self.tx
+            .send(ComputeReq { theta: theta.data.clone(), images, labels, reply: reply_tx })
+            .map_err(|_| anyhow::anyhow!("compute service terminated"))?;
+        let (grads, loss) = reply_rx
+            .recv()
+            .map_err(|_| anyhow::anyhow!("compute service dropped reply"))??;
+        Ok((FlatVec::from_vec(grads), loss))
+    }
+
+    fn n_params(&self) -> usize {
+        self.n_params
+    }
+}

@@ -1,0 +1,184 @@
+//! (σ, μ, λ) sweep runner: executes one grid point end to end and
+//! collects everything the paper's tables/figures report.
+
+use anyhow::Result;
+
+use crate::config::RunConfig;
+use crate::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use crate::coordinator::protocol::Protocol;
+use crate::coordinator::tree::Arch;
+use crate::harness::providers::CnnProvider;
+use crate::harness::Workspace;
+use crate::netsim::cluster::ClusterSpec;
+use crate::netsim::cost::{LearnerCompute, ModelCost};
+use crate::params::optimizer::Optimizer;
+use crate::stats::ImageEvaluator;
+
+/// One grid point's outcome.
+#[derive(Debug, Clone)]
+pub struct PointResult {
+    pub protocol: Protocol,
+    pub mu: usize,
+    pub lambda: usize,
+    /// Simulated training time (seconds) at P775 scale for the *paper's*
+    /// workload geometry.
+    pub paper_sim_seconds: f64,
+    /// Simulated training time for the actual synthetic workload.
+    pub sim_seconds: f64,
+    pub test_error_pct: f64,
+    pub test_loss: f64,
+    pub train_loss: f64,
+    pub avg_staleness: f64,
+    pub max_staleness: u64,
+    pub updates: u64,
+    pub epochs: Vec<crate::coordinator::engine_sim::EpochStat>,
+}
+
+/// Runs grid points with shared compiled executables.
+pub struct Sweep<'a> {
+    pub ws: &'a Workspace,
+    pub epochs: usize,
+    pub seed: u64,
+    pub arch: Arch,
+    /// Evaluate at every epoch boundary (needed for Fig 5/9 curves).
+    pub eval_each_epoch: bool,
+}
+
+impl<'a> Sweep<'a> {
+    pub fn new(ws: &'a Workspace, epochs: usize) -> Sweep<'a> {
+        Sweep { ws, epochs, seed: 42, arch: Arch::Base, eval_each_epoch: false }
+    }
+
+    /// Train the synthetic benchmark at one (protocol, μ, λ) point with
+    /// real gradients under simulated cluster timing, then overlay the
+    /// paper-scale timing run (CIFAR10 geometry) for the time axis.
+    pub fn run_point(&self, cfg: &RunConfig) -> Result<PointResult> {
+        let grad = self.ws.cnn_grad(cfg.mu)?;
+        let eval = self.ws.cnn_eval()?;
+        let mut provider =
+            CnnProvider::new(&grad, &self.ws.train, cfg.mu, cfg.lambda, cfg.seed);
+        let mut evaluator =
+            ImageEvaluator::new(&eval, &self.ws.test, self.ws.manifest.cnn.eval_batch);
+
+        let sim_cfg = SimConfig {
+            protocol: cfg.protocol,
+            arch: self.arch,
+            mu: cfg.mu,
+            lambda: cfg.lambda,
+            epochs: self.epochs,
+            seed: cfg.seed,
+            cluster: ClusterSpec::p775(),
+            compute: LearnerCompute::p775(),
+            model: self.ws.cnn_cost(),
+            eval_each_epoch: self.eval_each_epoch,
+            max_updates: None,
+        };
+        let theta0 = warmstarted(self, cfg)?;
+        let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
+        let result: SimResult = run_sim(
+            &sim_cfg,
+            theta0,
+            optimizer,
+            cfg.lr_policy(),
+            Some(&mut provider),
+            Some(&mut evaluator),
+        )?;
+        let (test_loss, test_error_pct) = result.final_eval.unwrap_or((f64::NAN, f64::NAN));
+
+        // Paper-scale timing overlay: same (protocol, μ, λ, arch) on the
+        // CIFAR10 cost geometry, timing-only.
+        let paper_cfg = SimConfig {
+            model: ModelCost::cifar10(),
+            epochs: 140,
+            eval_each_epoch: false,
+            ..sim_cfg.clone()
+        };
+        let paper_time = run_sim(
+            &paper_cfg,
+            crate::params::FlatVec::zeros(0),
+            Optimizer::new(crate::params::optimizer::OptimizerKind::Sgd, 0.0, 0),
+            cfg.lr_policy(),
+            None,
+            None,
+        )?;
+
+        Ok(PointResult {
+            protocol: cfg.protocol,
+            mu: cfg.mu,
+            lambda: cfg.lambda,
+            paper_sim_seconds: paper_time.sim_seconds,
+            sim_seconds: result.sim_seconds,
+            test_error_pct,
+            test_loss,
+            train_loss: result.final_train_loss,
+            avg_staleness: result.staleness.overall_avg(),
+            max_staleness: result.staleness.max,
+            updates: result.updates,
+            epochs: result.epochs,
+        })
+    }
+
+    /// Run a (μ, λ) grid under one protocol family. For softsync, `n_of`
+    /// maps λ to the splitting parameter (e.g. `|_| 1` for 1-softsync or
+    /// `|l| l` for λ-softsync).
+    pub fn run_grid(
+        &self,
+        mus: &[usize],
+        lambdas: &[usize],
+        protocol_of: impl Fn(usize) -> Protocol,
+    ) -> Result<Vec<PointResult>> {
+        let mut out = Vec::new();
+        for &lambda in lambdas {
+            for &mu in mus {
+                let mut cfg = RunConfig {
+                    mu,
+                    lambda,
+                    protocol: protocol_of(lambda),
+                    epochs: self.epochs,
+                    seed: self.seed,
+                    ..RunConfig::default()
+                };
+                cfg.arch = self.arch;
+                out.push(self.run_point(&cfg)?);
+            }
+        }
+        Ok(out)
+    }
+}
+
+/// §5.5 warm-start: initialize from a model trained with hardsync for
+/// `warmstart_epochs` before the protocol under test takes over.
+fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec> {
+    let theta0 = sweep.ws.cnn_init()?;
+    if cfg.warmstart_epochs == 0 {
+        return Ok(theta0);
+    }
+    let grad = sweep.ws.cnn_grad(cfg.mu)?;
+    let mut provider =
+        CnnProvider::new(&grad, &sweep.ws.train, cfg.mu, cfg.lambda, cfg.seed ^ 0xDEAD);
+    let warm_cfg = SimConfig {
+        protocol: Protocol::Hardsync,
+        arch: Arch::Base,
+        mu: cfg.mu,
+        lambda: cfg.lambda,
+        epochs: cfg.warmstart_epochs,
+        seed: cfg.seed,
+        cluster: ClusterSpec::p775(),
+        compute: LearnerCompute::p775(),
+        model: sweep.ws.cnn_cost(),
+        eval_each_epoch: false,
+        max_updates: None,
+    };
+    let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
+    let mut lr_cfg = cfg.clone();
+    lr_cfg.modulation = crate::params::lr::Modulation::Auto;
+    let r = run_sim(
+        &warm_cfg,
+        theta0,
+        optimizer,
+        lr_cfg.lr_policy(),
+        Some(&mut provider),
+        None,
+    )?;
+    Ok(r.theta.expect("numeric warmstart returns weights"))
+}

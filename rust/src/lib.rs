@@ -1,0 +1,33 @@
+//! # Rudra — reproduction of "Model Accuracy and Runtime Tradeoff in
+//! # Distributed Deep Learning: A Systematic Study" (IJCAI 2017)
+//!
+//! A parameter-server distributed deep-learning framework in the paper's
+//! image: learners compute gradients (real numerics, via AOT-compiled
+//! JAX/Pallas HLO executed through PJRT), a parameter server applies them
+//! under one of three synchronization protocols (hardsync, n-softsync,
+//! async), and a vector clock quantifies gradient staleness.
+//!
+//! Two execution engines are provided:
+//! * [`coordinator::engine_sim`] — a deterministic virtual-time engine in
+//!   which compute and communication durations come from a discrete-event
+//!   cluster model ([`netsim`]) calibrated to the paper's P775 testbed,
+//!   while gradients are computed for real. One run yields both an
+//!   accuracy trajectory and a simulated wall-clock.
+//! * [`coordinator::engine_live`] — a tokio-based live engine (threads +
+//!   channels), the "production" path.
+//!
+//! See DESIGN.md for the experiment index mapping every table and figure
+//! of the paper to a bench target.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod harness;
+pub mod netsim;
+pub mod params;
+pub mod runtime;
+pub mod stats;
+pub mod util;
+
+/// Crate-wide result type.
+pub type Result<T> = anyhow::Result<T>;

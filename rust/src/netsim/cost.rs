@@ -1,0 +1,178 @@
+//! Compute-cost models, calibrated to the paper's published numbers.
+//!
+//! §4.1: one P775 node = 4× eight-core POWER7 @3.84 GHz, 982 GFLOP/s
+//! peak, 512 GB/s memory bandwidth, 192 GB/s bidirectional interconnect.
+//! Learners are "4-way multi-threaded" tasks (§3.3's Table 1 scenario),
+//! i.e. 8 learners per 32-core node → peak ≈ 982/8 ≈ 123 GFLOP/s per
+//! learner, of which dense GEMM achieves a fraction that *falls off at
+//! small mini-batch sizes* — §5.2: "a reduction in the mini-batch size
+//! results in a proportionate decrease in the GEMM throughput".
+//!
+//! The falloff is modeled as efficiency(μ) = μ/(μ + μ_half), the standard
+//! half-saturation curve for GEMM with a skinny dimension: at μ = 128 the
+//! learner runs near its dense-GEMM ceiling, at μ = 4 it is ~8× slower
+//! per sample, matching the paper's Figure 6 observation that the
+//! (0,4,1) configuration trains slower than (0,128,1) per epoch.
+
+/// A trainable model as the simulator sees it: pure cost numbers.
+#[derive(Debug, Clone)]
+pub struct ModelCost {
+    pub name: &'static str,
+    /// Forward-pass FLOPs per sample (backward ≈ 2× forward).
+    pub flops_per_sample: f64,
+    /// Model size in bytes (the push/pull message size, §3.2).
+    pub bytes: f64,
+    /// Number of training samples per epoch.
+    pub samples_per_epoch: u64,
+}
+
+impl ModelCost {
+    /// The paper's CIFAR10 study model: ~90K params, ~350 kB, 50 000
+    /// training images (§4.2). FLOPs from the caffe cifar10_full shape
+    /// (3 conv layers at 32×32→16×16→8×8 + pooling + FC): ≈25 MFLOP/sample
+    /// forward.
+    pub fn cifar10() -> ModelCost {
+        ModelCost {
+            name: "cifar10-cnn",
+            flops_per_sample: 25.0e6,
+            bytes: 350.0e3,
+            samples_per_epoch: 50_000,
+        }
+    }
+
+    /// The paper's ImageNet model (AlexNet-style, §4.2): 72M params,
+    /// 289 MB, 1.2M images, ≈1.4 GFLOP/sample forward.
+    pub fn imagenet() -> ModelCost {
+        ModelCost {
+            name: "imagenet-alexnet",
+            flops_per_sample: 1.4e9,
+            bytes: 289.0e6,
+            samples_per_epoch: 1_200_000,
+        }
+    }
+
+    /// The Table 1 adversarial scenario: "model size is 300MB".
+    pub fn adversarial_300mb() -> ModelCost {
+        ModelCost {
+            name: "adversarial-300mb",
+            flops_per_sample: 1.4e9,
+            bytes: 300.0e6,
+            samples_per_epoch: 1_200_000,
+        }
+    }
+
+    /// Build a cost model from the AOT manifest (the synthetic CNN),
+    /// letting sim-engine timing reflect the *actual* model being trained.
+    pub fn from_manifest(
+        name: &'static str,
+        flops_per_sample: f64,
+        n_params: usize,
+        samples_per_epoch: u64,
+    ) -> ModelCost {
+        ModelCost {
+            name,
+            flops_per_sample,
+            bytes: (n_params * 4) as f64,
+            samples_per_epoch,
+        }
+    }
+}
+
+/// Per-learner compute-rate model with the small-μ GEMM falloff.
+#[derive(Debug, Clone)]
+pub struct LearnerCompute {
+    /// Peak dense-GEMM rate of one learner (FLOP/s).
+    pub peak_flops: f64,
+    /// Fraction of peak attainable on this workload at large μ.
+    pub gemm_efficiency: f64,
+    /// Half-saturation mini-batch size for the GEMM falloff.
+    pub mu_half: f64,
+    /// Backward-to-forward FLOP ratio (2.0 for dense nets).
+    pub backward_ratio: f64,
+}
+
+impl LearnerCompute {
+    /// P775 defaults: 8 learners/node ⇒ 982/8 ≈ 123 GFLOP/s per-learner
+    /// peak. `gemm_efficiency` = 0.2 calibrates against two anchors from
+    /// the paper: the CIFAR10 baseline (μ=128, λ=1) takes 22 392 s for
+    /// 140 epochs (§5.4) ⇒ ≈410 ms/minibatch, and the ImageNet baseline
+    /// (μ=256, λ=1) takes 54 h/epoch (§5.5) ⇒ ≈44 s/minibatch; both land
+    /// within 10% at 0.2 of peak. Half-saturation μ ≈ 6 reproduces the
+    /// Fig 6/8 small-μ slowdowns.
+    pub fn p775() -> LearnerCompute {
+        LearnerCompute {
+            peak_flops: 982.0e9 / 8.0,
+            gemm_efficiency: 0.2,
+            mu_half: 6.0,
+            backward_ratio: 2.0,
+        }
+    }
+
+    /// GEMM efficiency at mini-batch size μ (half-saturation curve,
+    /// normalized to 1.0 at μ = 128, the paper's reference batch).
+    pub fn efficiency(&self, mu: usize) -> f64 {
+        let sat = |m: f64| m / (m + self.mu_half);
+        sat(mu as f64) / sat(128.0)
+    }
+
+    /// Seconds to compute one mini-batch of size μ (forward + backward).
+    pub fn minibatch_secs(&self, model: &ModelCost, mu: usize) -> f64 {
+        let flops = model.flops_per_sample * (1.0 + self.backward_ratio) * mu as f64;
+        let rate = self.peak_flops * self.gemm_efficiency * self.efficiency(mu);
+        flops / rate
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn efficiency_monotone_in_mu() {
+        let c = LearnerCompute::p775();
+        let e4 = c.efficiency(4);
+        let e32 = c.efficiency(32);
+        let e128 = c.efficiency(128);
+        assert!(e4 < e32 && e32 < e128);
+        assert!((e128 - 1.0).abs() < 1e-12, "normalized at 128");
+    }
+
+    #[test]
+    fn small_mu_costs_more_per_sample() {
+        let c = LearnerCompute::p775();
+        let m = ModelCost::cifar10();
+        let per_sample_4 = c.minibatch_secs(&m, 4) / 4.0;
+        let per_sample_128 = c.minibatch_secs(&m, 128) / 128.0;
+        assert!(
+            per_sample_4 > 2.0 * per_sample_128,
+            "μ=4 should be markedly slower per sample: {per_sample_4} vs {per_sample_128}"
+        );
+    }
+
+    #[test]
+    fn imagenet_epoch_scale_matches_paper() {
+        // §5.5: baseline (μ=256, λ=1) takes 54 hours/epoch. Our P775
+        // learner model should land within ~2× of that.
+        let c = LearnerCompute::p775();
+        let m = ModelCost::imagenet();
+        let steps = m.samples_per_epoch as f64 / 256.0;
+        let hours = steps * c.minibatch_secs(&m, 256) / 3600.0;
+        assert!(
+            (20.0..110.0).contains(&hours),
+            "simulated baseline epoch {hours} h should be within ~2x of the paper's 54 h"
+        );
+    }
+
+    #[test]
+    fn cifar_baseline_training_time_scale() {
+        // §5.4: baseline (μ=128, λ=1) takes 22 392 s for 140 epochs.
+        let c = LearnerCompute::p775();
+        let m = ModelCost::cifar10();
+        let steps = m.samples_per_epoch as f64 / 128.0;
+        let total = 140.0 * steps * c.minibatch_secs(&m, 128);
+        assert!(
+            (8_000.0..90_000.0).contains(&total),
+            "simulated 140-epoch baseline {total} s should be same order as 22 392 s"
+        );
+    }
+}

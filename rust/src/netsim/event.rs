@@ -1,0 +1,146 @@
+//! Virtual-time event queue.
+//!
+//! A deterministic discrete-event core: events carry an `f64` virtual time
+//! (seconds) and a sequence number that breaks ties FIFO, so simulations
+//! replay bit-identically for a given seed regardless of host timing.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+/// An event scheduled at virtual time `at`, carrying payload `T`.
+#[derive(Debug, Clone)]
+struct Scheduled<T> {
+    at: f64,
+    seq: u64,
+    payload: T,
+}
+
+impl<T> PartialEq for Scheduled<T> {
+    fn eq(&self, other: &Self) -> bool {
+        self.at == other.at && self.seq == other.seq
+    }
+}
+impl<T> Eq for Scheduled<T> {}
+
+impl<T> Ord for Scheduled<T> {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; invert for earliest-first. Ties break
+        // by insertion order (lower seq first) for FIFO determinism.
+        other
+            .at
+            .partial_cmp(&self.at)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.seq.cmp(&self.seq))
+    }
+}
+impl<T> PartialOrd for Scheduled<T> {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+/// Deterministic virtual-time event queue.
+#[derive(Debug)]
+pub struct EventQueue<T> {
+    heap: BinaryHeap<Scheduled<T>>,
+    now: f64,
+    seq: u64,
+    processed: u64,
+}
+
+impl<T> Default for EventQueue<T> {
+    fn default() -> Self {
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+    }
+}
+
+impl<T> EventQueue<T> {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Current virtual time (the timestamp of the last popped event).
+    pub fn now(&self) -> f64 {
+        self.now
+    }
+
+    pub fn len(&self) -> usize {
+        self.heap.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.heap.is_empty()
+    }
+
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Schedule `payload` at absolute virtual time `at` (clamped to now).
+    pub fn schedule_at(&mut self, at: f64, payload: T) {
+        let at = if at < self.now { self.now } else { at };
+        self.heap.push(Scheduled { at, seq: self.seq, payload });
+        self.seq += 1;
+    }
+
+    /// Schedule `payload` `delay` seconds from now.
+    pub fn schedule_in(&mut self, delay: f64, payload: T) {
+        debug_assert!(delay >= 0.0, "negative delay {delay}");
+        self.schedule_at(self.now + delay, payload);
+    }
+
+    /// Pop the earliest event, advancing virtual time to it.
+    pub fn pop(&mut self) -> Option<(f64, T)> {
+        let ev = self.heap.pop()?;
+        debug_assert!(ev.at >= self.now, "time went backwards");
+        self.now = ev.at;
+        self.processed += 1;
+        Some((ev.at, ev.payload))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pops_in_time_order() {
+        let mut q = EventQueue::new();
+        q.schedule_at(3.0, "c");
+        q.schedule_at(1.0, "a");
+        q.schedule_at(2.0, "b");
+        let order: Vec<&str> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, vec!["a", "b", "c"]);
+        assert_eq!(q.now(), 3.0);
+    }
+
+    #[test]
+    fn ties_are_fifo() {
+        let mut q = EventQueue::new();
+        for i in 0..10 {
+            q.schedule_at(1.0, i);
+        }
+        let order: Vec<i32> = std::iter::from_fn(|| q.pop().map(|(_, p)| p)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn schedule_in_accumulates() {
+        let mut q = EventQueue::new();
+        q.schedule_in(1.0, 1);
+        q.pop();
+        q.schedule_in(0.5, 2);
+        let (t, _) = q.pop().unwrap();
+        assert!((t - 1.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn past_events_clamp_to_now() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1);
+        q.pop();
+        q.schedule_at(1.0, 2); // in the past → clamped
+        let (t, _) = q.pop().unwrap();
+        assert_eq!(t, 5.0);
+    }
+}

@@ -1,0 +1,21 @@
+//! Discrete-event cluster model — the substitute for the paper's P775
+//! testbed (DESIGN.md §3).
+//!
+//! The paper's runtime results are driven by three quantities the model
+//! reproduces from the published hardware description (§4.1):
+//! * learner compute time per mini-batch — model FLOPs / effective GEMM
+//!   rate, with the small-μ GEMM-efficiency falloff the paper calls out
+//!   in §5.2 ([`cost`]);
+//! * message time — bytes / link bandwidth + latency ([`cluster`]);
+//! * contention — serialized service at a shared receiver: "if 16 tasks
+//!   are sending 300 MB to the same receiver and there is link
+//!   contention, it would take over a second" (§3.3) ([`cluster`]).
+//!
+//! [`event`] provides the virtual-time event queue shared with the
+//! coordinator's simulation engine; [`overlap`] accounts the
+//! computation/communication overlap ratio that Table 1 reports.
+
+pub mod cluster;
+pub mod cost;
+pub mod event;
+pub mod overlap;

@@ -1,0 +1,173 @@
+//! Learning-rate policies under study in the paper.
+//!
+//! * Baseline step schedule: α₀ dropped by 10× at fixed epochs ("reduced
+//!   by a factor of 10 after the 120th and 130th epoch", §4.2).
+//! * Hardsync scale-out rule: α = α₀·√(λμ/B) where B is the reference
+//!   batch size (§3.2).
+//! * Staleness modulation (Eq. 6): α = α₀/⟨σ⟩ = α₀/n for n-softsync —
+//!   the paper's contribution #3; Figure 5 shows it rescues convergence.
+//! * AdaGrad (per-coordinate, §5.5) lives in [`crate::params::optimizer`];
+//!   here we only decide the scalar α fed to it.
+
+use crate::coordinator::protocol::Protocol;
+
+/// How the scalar learning rate is derived from (protocol, μ, λ).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Modulation {
+    /// Use α₀ unmodified (the "no modulation" arm of Figure 5).
+    None,
+    /// Hardsync rule: α₀·√(λμ/B).
+    HardsyncSqrt,
+    /// Softsync rule (Eq. 6): α₀ / ⟨σ⟩ with ⟨σ⟩ = n.
+    StalenessReciprocal,
+    /// The paper's footnote-3 extension: "a finer-grained learning rate
+    /// modulation strategy that depends on the staleness of each of [the]
+    /// gradients … instead of the average staleness. Such a strategy
+    /// should apply smaller learning rates to staler gradients." Each
+    /// gradient is scaled by 1/(σᵢ + 1) *at fold time* (σᵢ measured
+    /// against the server clock); the scalar α stays α₀.
+    PerGradient,
+    /// Pick the paper's default for the protocol (√-rule for hardsync,
+    /// 1/⟨σ⟩ for n-softsync).
+    Auto,
+}
+
+/// Step-drop schedule: α is multiplied by `factor` at each epoch in
+/// `drops` (paper: factor 0.1 at epochs 120 and 130 of 140).
+#[derive(Debug, Clone)]
+pub struct Schedule {
+    pub base: f64,
+    pub drops: Vec<usize>,
+    pub factor: f64,
+}
+
+impl Schedule {
+    pub fn constant(base: f64) -> Schedule {
+        Schedule { base, drops: vec![], factor: 1.0 }
+    }
+
+    /// The paper's CIFAR10 schedule shape scaled to `epochs` total epochs:
+    /// drops at ~85% and ~93% of training.
+    pub fn paper_shape(base: f64, epochs: usize) -> Schedule {
+        let d1 = (epochs as f64 * 120.0 / 140.0).round() as usize;
+        let d2 = (epochs as f64 * 130.0 / 140.0).round() as usize;
+        Schedule { base, drops: vec![d1.max(1), d2.max(2)], factor: 0.1 }
+    }
+
+    pub fn at_epoch(&self, epoch: usize) -> f64 {
+        let mut a = self.base;
+        for &d in &self.drops {
+            if epoch >= d {
+                a *= self.factor;
+            }
+        }
+        a
+    }
+}
+
+/// Full LR policy: schedule × scale-out modulation.
+#[derive(Debug, Clone)]
+pub struct LrPolicy {
+    pub schedule: Schedule,
+    pub modulation: Modulation,
+    /// Reference (baseline) batch size B for the hardsync √-rule.
+    pub reference_batch: usize,
+}
+
+impl LrPolicy {
+    pub fn new(schedule: Schedule, modulation: Modulation, reference_batch: usize) -> Self {
+        LrPolicy { schedule, modulation, reference_batch }
+    }
+
+    /// The modulation factor applied on top of the schedule.
+    pub fn factor(&self, protocol: Protocol, mu: usize, lambda: usize) -> f64 {
+        let eff = match self.modulation {
+            Modulation::Auto => match protocol {
+                Protocol::Hardsync => Modulation::HardsyncSqrt,
+                Protocol::NSoftsync { .. } | Protocol::Async => {
+                    Modulation::StalenessReciprocal
+                }
+            },
+            m => m,
+        };
+        match eff {
+            Modulation::None => 1.0,
+            // Per-gradient scaling happens at fold time in the server
+            // (see ParameterServer::push_gradient); the scalar α is α₀.
+            Modulation::PerGradient => 1.0,
+            Modulation::HardsyncSqrt => {
+                ((lambda * mu) as f64 / self.reference_batch as f64).sqrt()
+            }
+            Modulation::StalenessReciprocal => {
+                // ⟨σ⟩ = n for n-softsync (measured in §5.1); hardsync has
+                // σ = 0, where the rule degenerates to no modulation.
+                let n = match protocol {
+                    Protocol::Hardsync => 1,
+                    Protocol::NSoftsync { n } => n.max(1),
+                    Protocol::Async => lambda.max(1),
+                };
+                1.0 / n as f64
+            }
+            Modulation::Auto => unreachable!(),
+        }
+    }
+
+    /// Scalar α for a weight update at `epoch` under `(protocol, μ, λ)`.
+    pub fn alpha(&self, epoch: usize, protocol: Protocol, mu: usize, lambda: usize) -> f64 {
+        self.schedule.at_epoch(epoch) * self.factor(protocol, mu, lambda)
+    }
+
+    /// Whether gradients are individually rescaled by staleness at fold
+    /// time (the footnote-3 strategy).
+    pub fn is_per_gradient(&self) -> bool {
+        self.modulation == Modulation::PerGradient
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn schedule_drops() {
+        let s = Schedule { base: 0.1, drops: vec![10, 20], factor: 0.1 };
+        assert!((s.at_epoch(0) - 0.1).abs() < 1e-12);
+        assert!((s.at_epoch(10) - 0.01).abs() < 1e-12);
+        assert!((s.at_epoch(25) - 0.001).abs() < 1e-12);
+    }
+
+    #[test]
+    fn paper_shape_scales() {
+        let s = Schedule::paper_shape(0.001, 140);
+        assert_eq!(s.drops, vec![120, 130]);
+        let s30 = Schedule::paper_shape(0.001, 30);
+        assert_eq!(s30.drops, vec![26, 28]);
+    }
+
+    #[test]
+    fn hardsync_sqrt_rule() {
+        let p = LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128);
+        // λμ = B ⇒ factor 1
+        assert!((p.factor(Protocol::Hardsync, 128, 1) - 1.0).abs() < 1e-12);
+        // λμ = 4·128 ⇒ factor 2
+        assert!((p.factor(Protocol::Hardsync, 128, 4) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn staleness_reciprocal_rule() {
+        let p = LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128);
+        let f30 = p.factor(Protocol::NSoftsync { n: 30 }, 128, 30);
+        assert!((f30 - 1.0 / 30.0).abs() < 1e-12);
+        let f1 = p.factor(Protocol::NSoftsync { n: 1 }, 4, 30);
+        assert!((f1 - 1.0).abs() < 1e-12);
+        // async degenerates to n = λ
+        let fa = p.factor(Protocol::Async, 4, 30);
+        assert!((fa - 1.0 / 30.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn none_modulation_is_identity() {
+        let p = LrPolicy::new(Schedule::constant(0.01), Modulation::None, 128);
+        assert!((p.alpha(0, Protocol::NSoftsync { n: 30 }, 128, 30) - 0.01).abs() < 1e-12);
+    }
+}

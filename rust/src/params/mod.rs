@@ -1,0 +1,149 @@
+//! Flat parameter-vector layer.
+//!
+//! The parameter server treats the model exactly as the paper describes:
+//! an opaque dense vector of f32 weights ("the size of pull and push
+//! messages is the same as the model size plus the size of scalar
+//! timestamp", §3.2). This module provides the vector type, the
+//! optimizers applied at the server ([`optimizer`]), and the learning-rate
+//! policies under study ([`lr`]).
+
+pub mod lr;
+pub mod optimizer;
+
+use anyhow::{bail, Context, Result};
+use std::io::Read;
+use std::path::Path;
+
+/// Magic header for weight files written by `python/compile/datagen.py`.
+const WTS_MAGIC: &[u8; 8] = b"RUDRAWTS";
+
+/// A flat f32 parameter (or gradient) vector.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlatVec {
+    pub data: Vec<f32>,
+}
+
+impl FlatVec {
+    pub fn zeros(n: usize) -> FlatVec {
+        FlatVec { data: vec![0.0; n] }
+    }
+
+    pub fn from_vec(data: Vec<f32>) -> FlatVec {
+        FlatVec { data }
+    }
+
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+
+    /// Load a `RUDRAWTS` binary (little-endian) written by the AOT step.
+    pub fn load(path: &Path) -> Result<FlatVec> {
+        let mut f = std::fs::File::open(path)
+            .with_context(|| format!("opening weights {}", path.display()))?;
+        let mut header = [0u8; 8 + 4 + 8];
+        f.read_exact(&mut header)?;
+        if &header[..8] != WTS_MAGIC {
+            bail!("{}: bad magic {:?}", path.display(), &header[..8]);
+        }
+        let ver = u32::from_le_bytes(header[8..12].try_into().unwrap());
+        if ver != 1 {
+            bail!("{}: unsupported version {ver}", path.display());
+        }
+        let n = u64::from_le_bytes(header[12..20].try_into().unwrap()) as usize;
+        let mut raw = vec![0u8; n * 4];
+        f.read_exact(&mut raw)
+            .with_context(|| format!("{}: truncated payload", path.display()))?;
+        let data = raw
+            .chunks_exact(4)
+            .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+            .collect();
+        Ok(FlatVec { data })
+    }
+
+    /// `self += alpha * other` (the PS applyUpdate hot loop).
+    pub fn axpy(&mut self, alpha: f32, other: &FlatVec) {
+        debug_assert_eq!(self.len(), other.len());
+        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+            *a += alpha * b;
+        }
+    }
+
+    /// `self *= s`.
+    pub fn scale(&mut self, s: f32) {
+        for a in self.data.iter_mut() {
+            *a *= s;
+        }
+    }
+
+    /// Element-wise accumulate (gradient summing at the PS).
+    pub fn add_assign(&mut self, other: &FlatVec) {
+        self.axpy(1.0, other);
+    }
+
+    pub fn fill(&mut self, v: f32) {
+        self.data.iter_mut().for_each(|x| *x = v);
+    }
+
+    /// L2 norm (diagnostics; gradient-explosion detection).
+    pub fn norm(&self) -> f64 {
+        self.data.iter().map(|&x| (x as f64) * (x as f64)).sum::<f64>().sqrt()
+    }
+
+    pub fn is_finite(&self) -> bool {
+        self.data.iter().all(|x| x.is_finite())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::io::Write;
+
+    #[test]
+    fn axpy_and_norm() {
+        let mut a = FlatVec::from_vec(vec![1.0, 2.0, 3.0]);
+        let b = FlatVec::from_vec(vec![1.0, 1.0, 1.0]);
+        a.axpy(-0.5, &b);
+        assert_eq!(a.data, vec![0.5, 1.5, 2.5]);
+        assert!((FlatVec::from_vec(vec![3.0, 4.0]).norm() - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn load_roundtrip() {
+        let dir = std::env::temp_dir().join("rudra_test_wts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("w.bin");
+        let vals: Vec<f32> = vec![0.5, -1.25, 3.0];
+        let mut f = std::fs::File::create(&path).unwrap();
+        f.write_all(WTS_MAGIC).unwrap();
+        f.write_all(&1u32.to_le_bytes()).unwrap();
+        f.write_all(&(vals.len() as u64).to_le_bytes()).unwrap();
+        for v in &vals {
+            f.write_all(&v.to_le_bytes()).unwrap();
+        }
+        drop(f);
+        let loaded = FlatVec::load(&path).unwrap();
+        assert_eq!(loaded.data, vals);
+    }
+
+    #[test]
+    fn load_rejects_bad_magic() {
+        let dir = std::env::temp_dir().join("rudra_test_wts");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("bad.bin");
+        std::fs::write(&path, b"NOTMAGIC\x01\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00\x00").unwrap();
+        assert!(FlatVec::load(&path).is_err());
+    }
+
+    #[test]
+    fn finite_detection() {
+        let mut v = FlatVec::from_vec(vec![1.0, 2.0]);
+        assert!(v.is_finite());
+        v.data[1] = f32::NAN;
+        assert!(!v.is_finite());
+    }
+}

@@ -1,0 +1,159 @@
+//! Optimizers applied at the parameter server (applyUpdate, §2).
+//!
+//! The paper trains with momentum-accelerated mini-batch SGD (momentum
+//! 0.9) and switches to AdaGrad for the ImageNet 1-softsync runs (§5.5).
+//! Weight decay (0.0005 on the big model) is applied as an L2 term folded
+//! into the aggregated gradient at the server.
+
+use crate::params::FlatVec;
+
+/// Optimizer selection + hyperparameters.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum OptimizerKind {
+    /// Plain SGD: θ ← θ − α·Δ.
+    Sgd,
+    /// Momentum SGD: v ← m·v − α·Δ; θ ← θ + v.
+    Momentum { momentum: f32 },
+    /// AdaGrad: G += Δ²; θ ← θ − α·Δ/√(G + ε).
+    Adagrad { eps: f32 },
+}
+
+/// Server-side optimizer state over flat vectors.
+#[derive(Debug, Clone)]
+pub struct Optimizer {
+    pub kind: OptimizerKind,
+    pub weight_decay: f32,
+    /// Momentum velocity or AdaGrad accumulator, depending on `kind`.
+    state: Option<FlatVec>,
+}
+
+impl Optimizer {
+    pub fn new(kind: OptimizerKind, weight_decay: f32, n_params: usize) -> Optimizer {
+        let state = match kind {
+            OptimizerKind::Sgd => None,
+            OptimizerKind::Momentum { .. } | OptimizerKind::Adagrad { .. } => {
+                Some(FlatVec::zeros(n_params))
+            }
+        };
+        Optimizer { kind, weight_decay, state }
+    }
+
+    /// The paper's CIFAR10 setup: momentum 0.9, no weight decay.
+    pub fn paper_momentum(n_params: usize) -> Optimizer {
+        Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, n_params)
+    }
+
+    /// The paper's ImageNet softsync setup: AdaGrad + weight decay 5e-4.
+    pub fn paper_adagrad(n_params: usize) -> Optimizer {
+        Optimizer::new(OptimizerKind::Adagrad { eps: 1e-8 }, 5e-4, n_params)
+    }
+
+    /// Apply one update with aggregated gradient `grad` and step size
+    /// `alpha` to `theta` in place. `grad` is the protocol-averaged
+    /// gradient Δθ of Eq. (3)/(5).
+    pub fn apply(&mut self, theta: &mut FlatVec, grad: &FlatVec, alpha: f32) {
+        debug_assert_eq!(theta.len(), grad.len());
+        let wd = self.weight_decay;
+        match self.kind {
+            OptimizerKind::Sgd => {
+                if wd == 0.0 {
+                    theta.axpy(-alpha, grad);
+                } else {
+                    for (t, g) in theta.data.iter_mut().zip(grad.data.iter()) {
+                        *t -= alpha * (g + wd * *t);
+                    }
+                }
+            }
+            OptimizerKind::Momentum { momentum } => {
+                let v = self.state.as_mut().expect("momentum state");
+                for ((vi, g), t) in
+                    v.data.iter_mut().zip(grad.data.iter()).zip(theta.data.iter_mut())
+                {
+                    let g = g + wd * *t;
+                    *vi = momentum * *vi - alpha * g;
+                    *t += *vi;
+                }
+            }
+            OptimizerKind::Adagrad { eps } => {
+                let acc = self.state.as_mut().expect("adagrad state");
+                for ((a, g), t) in
+                    acc.data.iter_mut().zip(grad.data.iter()).zip(theta.data.iter_mut())
+                {
+                    let g = g + wd * *t;
+                    *a += g * g;
+                    *t -= alpha * g / (a.sqrt() + eps);
+                }
+            }
+        }
+    }
+
+    /// Reset optimizer state (used when warm-starting switches protocol,
+    /// §5.5: softsync runs warm-start from a 1-epoch hardsync model).
+    pub fn reset(&mut self) {
+        if let Some(s) = self.state.as_mut() {
+            s.fill(0.0);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn theta3() -> FlatVec {
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5])
+    }
+
+    #[test]
+    fn sgd_step() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.0, 3);
+        let mut t = theta3();
+        let g = FlatVec::from_vec(vec![1.0, 1.0, 1.0]);
+        opt.apply(&mut t, &g, 0.1);
+        assert_eq!(t.data, vec![0.9, -2.1, 0.4]);
+    }
+
+    #[test]
+    fn momentum_accumulates() {
+        let mut opt = Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, 1);
+        let mut t = FlatVec::from_vec(vec![0.0]);
+        let g = FlatVec::from_vec(vec![1.0]);
+        opt.apply(&mut t, &g, 0.1); // v = -0.1, θ = -0.1
+        assert!((t.data[0] + 0.1).abs() < 1e-6);
+        opt.apply(&mut t, &g, 0.1); // v = -0.19, θ = -0.29
+        assert!((t.data[0] + 0.29).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adagrad_shrinks_steps() {
+        let mut opt = Optimizer::new(OptimizerKind::Adagrad { eps: 1e-8 }, 0.0, 1);
+        let mut t = FlatVec::from_vec(vec![0.0]);
+        let g = FlatVec::from_vec(vec![1.0]);
+        opt.apply(&mut t, &g, 0.1);
+        let step1 = -t.data[0];
+        let before = t.data[0];
+        opt.apply(&mut t, &g, 0.1);
+        let step2 = before - t.data[0];
+        assert!(step2 < step1, "adagrad step should shrink: {step1} vs {step2}");
+    }
+
+    #[test]
+    fn weight_decay_pulls_toward_zero() {
+        let mut opt = Optimizer::new(OptimizerKind::Sgd, 0.1, 1);
+        let mut t = FlatVec::from_vec(vec![1.0]);
+        let g = FlatVec::zeros(1);
+        opt.apply(&mut t, &g, 0.5);
+        assert!(t.data[0] < 1.0 && t.data[0] > 0.0);
+    }
+
+    #[test]
+    fn reset_clears_state() {
+        let mut opt = Optimizer::paper_momentum(2);
+        let mut t = FlatVec::zeros(2);
+        opt.apply(&mut t, &FlatVec::from_vec(vec![1.0, 1.0]), 0.1);
+        opt.reset();
+        let mut t2 = FlatVec::zeros(2);
+        opt.apply(&mut t2, &FlatVec::from_vec(vec![1.0, 1.0]), 0.1);
+        assert_eq!(t.data, t2.data);
+    }
+}

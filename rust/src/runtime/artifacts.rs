@@ -1,0 +1,228 @@
+//! The AOT artifact manifest (`artifacts/manifest.json`).
+//!
+//! Written by `python/compile/aot.py`; indexes every HLO file, initial
+//! weight binary, and dataset the Rust side consumes. Loading validates
+//! that every referenced file exists so misconfigured runs fail fast.
+
+use anyhow::{bail, Context, Result};
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use crate::util::json::Json;
+
+/// A model family's artifacts (grad per batch size, eval, init weights).
+#[derive(Debug, Clone)]
+pub struct ModelArtifacts {
+    pub params: usize,
+    /// batch size → grad HLO path.
+    pub grad: BTreeMap<usize, PathBuf>,
+    pub eval_batch: usize,
+    pub eval: PathBuf,
+    pub init: PathBuf,
+    /// Analytic forward FLOPs per sample (CNN) or per token (LM),
+    /// feeding the simulator's cost model.
+    pub flops: f64,
+}
+
+impl ModelArtifacts {
+    /// Batch sizes with a compiled grad graph, ascending.
+    pub fn batch_sizes(&self) -> Vec<usize> {
+        self.grad.keys().copied().collect()
+    }
+
+    pub fn grad_path(&self, mu: usize) -> Result<&PathBuf> {
+        self.grad
+            .get(&mu)
+            .ok_or_else(|| anyhow::anyhow!(
+                "no grad executable for μ={mu}; available: {:?}",
+                self.batch_sizes()
+            ))
+    }
+}
+
+/// Dataset pointers + geometry.
+#[derive(Debug, Clone)]
+pub struct DataArtifacts {
+    pub train: PathBuf,
+    pub test: PathBuf,
+    pub corpus: PathBuf,
+    pub height: usize,
+    pub width: usize,
+    pub channels: usize,
+    pub classes: usize,
+    pub train_n: usize,
+    pub test_n: usize,
+}
+
+/// The parsed manifest.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub dir: PathBuf,
+    pub cnn: ModelArtifacts,
+    /// Present unless AOT ran with --skip-lm.
+    pub lm: Option<ModelArtifacts>,
+    pub lm_batch: usize,
+    pub lm_seq: usize,
+    pub data: DataArtifacts,
+}
+
+impl Manifest {
+    /// Default location relative to the repo root.
+    pub fn default_path() -> PathBuf {
+        PathBuf::from("artifacts/manifest.json")
+    }
+
+    pub fn load(path: &Path) -> Result<Manifest> {
+        let json = Json::parse_file(path)?;
+        let dir = path.parent().unwrap_or(Path::new(".")).to_path_buf();
+
+        let cnn = Self::parse_model(&dir, json.get("cnn")?, "flops_per_sample")
+            .context("manifest: cnn section")?;
+        let (lm, lm_batch, lm_seq) = match json.opt("lm") {
+            None => (None, 0, 0),
+            Some(lm_json) => {
+                let params = lm_json.get("params")?.as_usize()?;
+                let batch = lm_json.get("batch")?.as_usize()?;
+                let seq = lm_json.get("cfg")?.get("seq")?.as_usize()?;
+                let mut grad = BTreeMap::new();
+                grad.insert(batch, dir.join(lm_json.get("grad")?.as_str()?));
+                let m = ModelArtifacts {
+                    params,
+                    grad,
+                    eval_batch: batch,
+                    eval: dir.join(lm_json.get("eval")?.as_str()?),
+                    init: dir.join(lm_json.get("init")?.as_str()?),
+                    flops: lm_json.get("flops_per_token")?.as_f64()?,
+                };
+                (Some(m), batch, seq)
+            }
+        };
+
+        let d = json.get("data")?;
+        let data = DataArtifacts {
+            train: dir.join(d.get("train")?.as_str()?),
+            test: dir.join(d.get("test")?.as_str()?),
+            corpus: dir.join(d.get("corpus")?.as_str()?),
+            height: d.get("height")?.as_usize()?,
+            width: d.get("width")?.as_usize()?,
+            channels: d.get("channels")?.as_usize()?,
+            classes: d.get("classes")?.as_usize()?,
+            train_n: d.get("train_n")?.as_usize()?,
+            test_n: d.get("test_n")?.as_usize()?,
+        };
+
+        let m = Manifest { dir, cnn, lm, lm_batch, lm_seq, data };
+        m.validate()?;
+        Ok(m)
+    }
+
+    fn parse_model(dir: &Path, j: &Json, flops_key: &str) -> Result<ModelArtifacts> {
+        let params = j.get("params")?.as_usize()?;
+        let mut grad = BTreeMap::new();
+        for (k, v) in j.get("grad")?.as_obj()? {
+            let mu: usize = k.parse().with_context(|| format!("grad batch key {k:?}"))?;
+            grad.insert(mu, dir.join(v.as_str()?));
+        }
+        if grad.is_empty() {
+            bail!("no grad executables listed");
+        }
+        let e = j.get("eval")?;
+        Ok(ModelArtifacts {
+            params,
+            grad,
+            eval_batch: e.get("batch")?.as_usize()?,
+            eval: dir.join(e.get("path")?.as_str()?),
+            init: dir.join(j.get("init")?.as_str()?),
+            flops: j.get(flops_key)?.as_f64()?,
+        })
+    }
+
+    fn validate(&self) -> Result<()> {
+        let mut paths: Vec<&PathBuf> = vec![
+            &self.cnn.eval,
+            &self.cnn.init,
+            &self.data.train,
+            &self.data.test,
+            &self.data.corpus,
+        ];
+        paths.extend(self.cnn.grad.values());
+        if let Some(lm) = &self.lm {
+            paths.push(&lm.eval);
+            paths.push(&lm.init);
+            paths.extend(lm.grad.values());
+        }
+        for p in paths {
+            if !p.exists() {
+                bail!(
+                    "manifest references missing artifact {} — run `make artifacts`",
+                    p.display()
+                );
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// Build a minimal on-disk manifest + touched artifact files.
+    fn fake_manifest(dir: &Path) -> PathBuf {
+        std::fs::create_dir_all(dir.join("data")).unwrap();
+        for f in [
+            "cnn_grad_b4.hlo.txt",
+            "cnn_eval_b128.hlo.txt",
+            "cnn_init.bin",
+            "data/synth_train.bin",
+            "data/synth_test.bin",
+            "data/corpus.bin",
+        ] {
+            std::fs::write(dir.join(f), "x").unwrap();
+        }
+        let text = r#"{
+            "cnn": {
+                "params": 100,
+                "grad": {"4": "cnn_grad_b4.hlo.txt"},
+                "eval": {"batch": 128, "path": "cnn_eval_b128.hlo.txt"},
+                "init": "cnn_init.bin",
+                "flops_per_sample": 123456
+            },
+            "data": {
+                "train": "data/synth_train.bin",
+                "test": "data/synth_test.bin",
+                "corpus": "data/corpus.bin",
+                "height": 12, "width": 12, "channels": 3, "classes": 10,
+                "train_n": 2048, "test_n": 512
+            },
+            "version": 1
+        }"#;
+        let path = dir.join("manifest.json");
+        std::fs::write(&path, text).unwrap();
+        path
+    }
+
+    #[test]
+    fn loads_and_indexes() {
+        let dir = std::env::temp_dir().join("rudra_test_manifest");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = fake_manifest(&dir);
+        let m = Manifest::load(&path).unwrap();
+        assert_eq!(m.cnn.params, 100);
+        assert_eq!(m.cnn.batch_sizes(), vec![4]);
+        assert!(m.lm.is_none());
+        assert!(m.cnn.grad_path(4).is_ok());
+        assert!(m.cnn.grad_path(8).is_err());
+        assert_eq!(m.data.classes, 10);
+    }
+
+    #[test]
+    fn missing_artifact_fails_fast() {
+        let dir = std::env::temp_dir().join("rudra_test_manifest2");
+        let _ = std::fs::remove_dir_all(&dir);
+        let path = fake_manifest(&dir);
+        std::fs::remove_file(dir.join("cnn_init.bin")).unwrap();
+        let err = Manifest::load(&path).unwrap_err().to_string();
+        assert!(err.contains("make artifacts"), "{err}");
+    }
+}

@@ -1,0 +1,222 @@
+//! Typed wrappers around PJRT-compiled HLO executables.
+//!
+//! Load path: `HloModuleProto::from_text_file` → `XlaComputation::from_proto`
+//! → `client.compile` (the text parser reassigns instruction ids, which is
+//! why text — not serialized protos — is the interchange format; see
+//! /opt/xla-example/README.md).
+//!
+//! Execution: all graphs were lowered with `return_tuple=True`, so each
+//! execute yields a single tuple literal that we unpack.
+
+use anyhow::{anyhow, Context, Result};
+use std::path::Path;
+
+use crate::params::FlatVec;
+
+/// Shared PJRT CPU client. One per process; executables borrow it.
+pub struct Runtime {
+    client: xla::PjRtClient,
+}
+
+impl Runtime {
+    pub fn cpu() -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("PJRT cpu client: {e:?}"))?;
+        Ok(Runtime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    fn compile(&self, path: &Path) -> Result<xla::PjRtLoadedExecutable> {
+        let proto = xla::HloModuleProto::from_text_file(path)
+            .map_err(|e| anyhow!("parsing HLO text {}: {e:?}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        self.client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compiling {}: {e:?}", path.display()))
+    }
+
+    /// Load a gradient graph `(theta[P], x, y) -> (grads[P], loss)`.
+    ///
+    /// `x_dims`/`y_dims` give the batch tensor shapes (NHWC images + i32
+    /// labels for the CNN; i32 token/target matrices for the LM).
+    pub fn load_grad(
+        &self,
+        path: &Path,
+        n_params: usize,
+        x_dims: Vec<usize>,
+        y_dims: Vec<usize>,
+    ) -> Result<GradExec> {
+        Ok(GradExec {
+            exe: self.compile(path)?,
+            n_params,
+            x_dims,
+            y_dims,
+            x_is_f32: true,
+        })
+    }
+
+    /// Same as [`Runtime::load_grad`] but with an integer `x` input (LM
+    /// token ids).
+    pub fn load_grad_tokens(
+        &self,
+        path: &Path,
+        n_params: usize,
+        x_dims: Vec<usize>,
+        y_dims: Vec<usize>,
+    ) -> Result<GradExec> {
+        Ok(GradExec {
+            exe: self.compile(path)?,
+            n_params,
+            x_dims,
+            y_dims,
+            x_is_f32: false,
+        })
+    }
+
+    /// Load an eval graph `(theta, x, y) -> (loss[b], correct[b])`.
+    pub fn load_eval(
+        &self,
+        path: &Path,
+        n_params: usize,
+        x_dims: Vec<usize>,
+        y_dims: Vec<usize>,
+        x_is_f32: bool,
+    ) -> Result<EvalExec> {
+        Ok(EvalExec {
+            exe: self.compile(path)?,
+            n_params,
+            x_dims,
+            y_dims,
+            x_is_f32,
+        })
+    }
+}
+
+fn literal_f32(data: &[f32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+fn literal_i32(data: &[i32], dims: &[i64]) -> Result<xla::Literal> {
+    let lit = xla::Literal::vec1(data);
+    if dims.len() == 1 {
+        return Ok(lit);
+    }
+    lit.reshape(dims).map_err(|e| anyhow!("reshape {dims:?}: {e:?}"))
+}
+
+/// The learner's calcGradient executable.
+pub struct GradExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub x_dims: Vec<usize>,
+    pub y_dims: Vec<usize>,
+    x_is_f32: bool,
+}
+
+/// Output of one gradient step.
+#[derive(Debug, Clone)]
+pub struct GradOut {
+    pub grads: FlatVec,
+    pub loss: f32,
+}
+
+impl GradExec {
+    /// Run one mini-batch: `theta` (flat weights), `x` (flat batch
+    /// tensor), `y` (flat labels/targets).
+    pub fn run(&self, theta: &FlatVec, x_f32: &[f32], x_i32: &[i32], y: &[i32]) -> Result<GradOut> {
+        let expect_x: usize = self.x_dims.iter().product();
+        let expect_y: usize = self.y_dims.iter().product();
+        let xd: Vec<i64> = self.x_dims.iter().map(|&d| d as i64).collect();
+        let yd: Vec<i64> = self.y_dims.iter().map(|&d| d as i64).collect();
+        anyhow::ensure!(theta.len() == self.n_params, "theta length mismatch");
+
+        let theta_lit = literal_f32(&theta.data, &[self.n_params as i64])?;
+        let x_lit = if self.x_is_f32 {
+            anyhow::ensure!(x_f32.len() == expect_x, "x length mismatch");
+            literal_f32(x_f32, &xd)?
+        } else {
+            anyhow::ensure!(x_i32.len() == expect_x, "x length mismatch");
+            literal_i32(x_i32, &xd)?
+        };
+        let y_lit = literal_i32(y, &yd)?;
+        anyhow::ensure!(y.len() == expect_y, "y length mismatch");
+
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[theta_lit, x_lit, y_lit])
+            .map_err(|e| anyhow!("grad execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("grad to_literal: {e:?}"))?;
+        let (grads_lit, loss_lit) =
+            tuple.to_tuple2().map_err(|e| anyhow!("grad tuple: {e:?}"))?;
+        let grads = grads_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("grads to_vec: {e:?}"))?;
+        let loss = loss_lit
+            .to_vec::<f32>()
+            .map_err(|e| anyhow!("loss to_vec: {e:?}"))?
+            .first()
+            .copied()
+            .context("empty loss literal")?;
+        Ok(GradOut { grads: FlatVec::from_vec(grads), loss })
+    }
+
+    /// Convenience for image models (f32 inputs).
+    pub fn run_images(&self, theta: &FlatVec, images: &[f32], labels: &[i32]) -> Result<GradOut> {
+        self.run(theta, images, &[], labels)
+    }
+
+    /// Convenience for token models (i32 inputs).
+    pub fn run_tokens(&self, theta: &FlatVec, tokens: &[i32], targets: &[i32]) -> Result<GradOut> {
+        self.run(theta, &[], tokens, targets)
+    }
+}
+
+/// The statistics server's eval executable.
+pub struct EvalExec {
+    exe: xla::PjRtLoadedExecutable,
+    pub n_params: usize,
+    pub x_dims: Vec<usize>,
+    pub y_dims: Vec<usize>,
+    x_is_f32: bool,
+}
+
+impl EvalExec {
+    /// Returns (per-example loss, per-example correct∈{0,1}).
+    pub fn run(
+        &self,
+        theta: &FlatVec,
+        x_f32: &[f32],
+        x_i32: &[i32],
+        y: &[i32],
+    ) -> Result<(Vec<f32>, Vec<f32>)> {
+        let xd: Vec<i64> = self.x_dims.iter().map(|&d| d as i64).collect();
+        let yd: Vec<i64> = self.y_dims.iter().map(|&d| d as i64).collect();
+        let theta_lit = literal_f32(&theta.data, &[self.n_params as i64])?;
+        let x_lit = if self.x_is_f32 {
+            literal_f32(x_f32, &xd)?
+        } else {
+            literal_i32(x_i32, &xd)?
+        };
+        let y_lit = literal_i32(y, &yd)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&[theta_lit, x_lit, y_lit])
+            .map_err(|e| anyhow!("eval execute: {e:?}"))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("eval to_literal: {e:?}"))?;
+        let (loss_lit, correct_lit) =
+            tuple.to_tuple2().map_err(|e| anyhow!("eval tuple: {e:?}"))?;
+        let loss = loss_lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        let correct = correct_lit.to_vec::<f32>().map_err(|e| anyhow!("{e:?}"))?;
+        Ok((loss, correct))
+    }
+}

@@ -1,0 +1,12 @@
+//! PJRT runtime: load AOT-compiled HLO text, execute from the hot path.
+//!
+//! The AOT bridge (DESIGN.md §2): `python/compile/aot.py` lowers every L2
+//! graph to **HLO text** once; this module compiles those artifacts on the
+//! embedded PJRT CPU client and exposes typed executables to the
+//! coordinator. Python never runs at training time.
+
+pub mod artifacts;
+pub mod executable;
+
+pub use artifacts::Manifest;
+pub use executable::{EvalExec, GradExec, Runtime};

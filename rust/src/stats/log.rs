@@ -1,0 +1,96 @@
+//! Structured experiment logging: CSV + JSONL writers.
+
+use anyhow::{Context, Result};
+use std::io::Write;
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Append-mode CSV writer with a fixed header.
+pub struct CsvLog {
+    file: std::fs::File,
+    columns: usize,
+}
+
+impl CsvLog {
+    pub fn create(path: &Path, header: &[&str]) -> Result<CsvLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let mut file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        writeln!(file, "{}", header.join(","))?;
+        Ok(CsvLog { file, columns: header.len() })
+    }
+
+    pub fn row(&mut self, values: &[String]) -> Result<()> {
+        anyhow::ensure!(
+            values.len() == self.columns,
+            "row has {} values, header has {}",
+            values.len(),
+            self.columns
+        );
+        writeln!(self.file, "{}", values.join(","))?;
+        Ok(())
+    }
+
+    pub fn row_f64(&mut self, values: &[f64]) -> Result<()> {
+        self.row(&values.iter().map(|v| format!("{v}")).collect::<Vec<_>>())
+    }
+}
+
+/// Append-mode JSONL writer.
+pub struct JsonlLog {
+    file: std::fs::File,
+}
+
+impl JsonlLog {
+    pub fn create(path: &Path) -> Result<JsonlLog> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let file = std::fs::File::create(path)
+            .with_context(|| format!("creating {}", path.display()))?;
+        Ok(JsonlLog { file })
+    }
+
+    pub fn record(&mut self, value: &Json) -> Result<()> {
+        writeln!(self.file, "{}", value.to_string())?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("rudra_test_log");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.csv");
+        let mut log = CsvLog::create(&path, &["epoch", "loss"]).unwrap();
+        log.row_f64(&[1.0, 0.5]).unwrap();
+        log.row_f64(&[2.0, 0.25]).unwrap();
+        assert!(log.row_f64(&[1.0]).is_err(), "column count enforced");
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "epoch,loss\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn jsonl_lines_parse_back() {
+        let dir = std::env::temp_dir().join("rudra_test_log");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("t.jsonl");
+        let mut log = JsonlLog::create(&path).unwrap();
+        log.record(&Json::obj(vec![("a", Json::num(1.0))])).unwrap();
+        log.record(&Json::obj(vec![("a", Json::num(2.0))])).unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        for line in text.lines() {
+            Json::parse(line).unwrap();
+        }
+        assert_eq!(text.lines().count(), 2);
+    }
+}

@@ -1,0 +1,104 @@
+//! The Statistics Server (§3.2) in library form: evaluation, metric
+//! history, structured logging, and the table renderer the benches use.
+
+pub mod log;
+pub mod table;
+
+use anyhow::Result;
+
+use crate::coordinator::engine_sim::Evaluator;
+use crate::data::loader::ImageSet;
+use crate::data::sampler::EvalIter;
+use crate::params::FlatVec;
+use crate::runtime::EvalExec;
+
+/// Statistics-server evaluator over the held-out image set: runs the AOT
+/// eval graph in fixed-size chunks and scores only valid samples.
+pub struct ImageEvaluator<'a> {
+    pub exec: &'a EvalExec,
+    pub set: &'a ImageSet,
+    pub batch: usize,
+}
+
+impl<'a> ImageEvaluator<'a> {
+    pub fn new(exec: &'a EvalExec, set: &'a ImageSet, batch: usize) -> Self {
+        ImageEvaluator { exec, set, batch }
+    }
+}
+
+impl<'a> Evaluator for ImageEvaluator<'a> {
+    fn eval(&mut self, theta: &FlatVec) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        for (batch, valid) in EvalIter::new(self.set, self.batch) {
+            let (loss, corr) = self.exec.run(theta, &batch.images, &[], &batch.labels)?;
+            for i in 0..valid {
+                loss_sum += loss[i] as f64;
+                correct += corr[i] as f64;
+            }
+            n += valid;
+        }
+        anyhow::ensure!(n > 0, "empty eval set");
+        let mean_loss = loss_sum / n as f64;
+        let err_pct = 100.0 * (1.0 - correct / n as f64);
+        Ok((mean_loss, err_pct))
+    }
+}
+
+/// Evaluator over token batches (the LM example): scores fixed windows
+/// deterministically sampled from the held-out tail of the corpus.
+pub struct TokenEvaluator<'a> {
+    pub exec: &'a EvalExec,
+    pub windows: Vec<(Vec<i32>, Vec<i32>)>,
+}
+
+impl<'a> TokenEvaluator<'a> {
+    /// Carve `n_windows` non-overlapping (tokens, targets) windows of
+    /// `batch × seq` from the corpus tail.
+    pub fn new(
+        exec: &'a EvalExec,
+        corpus: &crate::data::loader::Corpus,
+        batch: usize,
+        seq: usize,
+        n_windows: usize,
+    ) -> Result<Self> {
+        let need = n_windows * batch * (seq + 1);
+        anyhow::ensure!(
+            corpus.bytes.len() >= need,
+            "corpus too small for {n_windows} eval windows"
+        );
+        let tail = &corpus.bytes[corpus.bytes.len() - need..];
+        let mut windows = Vec::with_capacity(n_windows);
+        let mut off = 0;
+        for _ in 0..n_windows {
+            let mut tokens = Vec::with_capacity(batch * seq);
+            let mut targets = Vec::with_capacity(batch * seq);
+            for _ in 0..batch {
+                for s in 0..seq {
+                    tokens.push(tail[off + s] as i32);
+                    targets.push(tail[off + s + 1] as i32);
+                }
+                off += seq + 1;
+            }
+            windows.push((tokens, targets));
+        }
+        Ok(TokenEvaluator { exec, windows })
+    }
+}
+
+impl<'a> Evaluator for TokenEvaluator<'a> {
+    fn eval(&mut self, theta: &FlatVec) -> Result<(f64, f64)> {
+        let mut loss_sum = 0.0f64;
+        let mut correct = 0.0f64;
+        let mut n = 0usize;
+        for (tokens, targets) in &self.windows {
+            let (loss, corr) = self.exec.run(theta, &[], tokens, targets)?;
+            loss_sum += loss.iter().map(|&x| x as f64).sum::<f64>();
+            correct += corr.iter().map(|&x| x as f64).sum::<f64>();
+            n += loss.len();
+        }
+        anyhow::ensure!(n > 0, "no eval windows");
+        Ok((loss_sum / n as f64, 100.0 * (1.0 - correct / n as f64)))
+    }
+}

@@ -1,0 +1,157 @@
+//! Tiny CLI argument parser (clap is not in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional args.
+//! Typed getters parse on access and produce friendly errors.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, Vec<String>>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw arguments. `flag_names` lists options that take no value.
+    pub fn parse<I: IntoIterator<Item = String>>(raw: I, flag_names: &[&str]) -> Result<Args> {
+        let mut args = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if body.is_empty() {
+                    // `--` terminates option parsing.
+                    args.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = body.split_once('=') {
+                    args.options.entry(k.to_string()).or_default().push(v.to_string());
+                } else if flag_names.contains(&body) {
+                    args.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| anyhow!("option --{body} expects a value"))?;
+                    args.options.entry(body.to_string()).or_default().push(v);
+                }
+            } else {
+                args.positional.push(a);
+            }
+        }
+        Ok(args)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.options.get(name).and_then(|v| v.last()).map(|s| s.as_str())
+    }
+
+    pub fn get_all(&self, name: &str) -> Vec<&str> {
+        self.options
+            .get(name)
+            .map(|v| v.iter().map(|s| s.as_str()).collect())
+            .unwrap_or_default()
+    }
+
+    pub fn str_or(&self, name: &str, default: &str) -> String {
+        self.get(name).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn u64_or(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad integer {v:?}")),
+        }
+    }
+
+    pub fn f64_or(&self, name: &str, default: f64) -> Result<f64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v.parse().map_err(|_| anyhow!("--{name}: bad float {v:?}")),
+        }
+    }
+
+    /// Comma-separated list of integers, e.g. `--mus 4,8,16`.
+    pub fn usize_list_or(&self, name: &str, default: &[usize]) -> Result<Vec<usize>> {
+        match self.get(name) {
+            None => Ok(default.to_vec()),
+            Some(v) => v
+                .split(',')
+                .map(|p| {
+                    p.trim()
+                        .parse()
+                        .map_err(|_| anyhow!("--{name}: bad integer {p:?}"))
+                })
+                .collect(),
+        }
+    }
+
+    /// Error if any unknown option was passed (catches typos).
+    pub fn ensure_known(&self, known: &[&str]) -> Result<()> {
+        for k in self.options.keys().chain(self.flags.iter()) {
+            if !known.contains(&k.as_str()) {
+                bail!("unknown option --{k}; known: {}", known.join(", "));
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(v: &[&str], flags: &[&str]) -> Args {
+        Args::parse(v.iter().map(|s| s.to_string()), flags).unwrap()
+    }
+
+    #[test]
+    fn mixed_styles() {
+        let a = parse(
+            &["train", "--mu", "4", "--lambda=30", "--verbose", "pos2"],
+            &["verbose"],
+        );
+        assert_eq!(a.positional, vec!["train", "pos2"]);
+        assert_eq!(a.usize_or("mu", 0).unwrap(), 4);
+        assert_eq!(a.usize_or("lambda", 0).unwrap(), 30);
+        assert!(a.flag("verbose"));
+    }
+
+    #[test]
+    fn defaults_and_lists() {
+        let a = parse(&["--mus", "4, 8,16"], &[]);
+        assert_eq!(a.usize_list_or("mus", &[]).unwrap(), vec![4, 8, 16]);
+        assert_eq!(a.usize_list_or("lambdas", &[1, 2]).unwrap(), vec![1, 2]);
+        assert_eq!(a.f64_or("lr", 0.001).unwrap(), 0.001);
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(vec!["--mu".to_string()], &[]).is_err());
+    }
+
+    #[test]
+    fn unknown_option_detection() {
+        let a = parse(&["--typo", "1"], &[]);
+        assert!(a.ensure_known(&["mu"]).is_err());
+        assert!(a.ensure_known(&["typo"]).is_ok());
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse(&["--mu", "4", "--", "--not-an-option"], &[]);
+        assert_eq!(a.positional, vec!["--not-an-option"]);
+    }
+}

@@ -1,0 +1,88 @@
+//! Small self-contained utilities.
+//!
+//! The offline build environment vendors only the `xla` crate's dependency
+//! tree (see `.cargo/config.toml`), so the pieces one would normally pull
+//! from crates.io live here: a counter-based PRNG ([`rng`]), a JSON
+//! reader/writer ([`json`]) for the artifact manifest and experiment logs,
+//! a tiny CLI argument parser ([`cli`]), and a seeded property-testing
+//! harness ([`prop`]) used by the invariant test suites.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+
+/// Format a `f64` duration in seconds as a human-readable string.
+pub fn fmt_secs(s: f64) -> String {
+    if s < 1e-3 {
+        format!("{:.1}us", s * 1e6)
+    } else if s < 1.0 {
+        format!("{:.2}ms", s * 1e3)
+    } else if s < 120.0 {
+        format!("{:.2}s", s)
+    } else if s < 7200.0 {
+        format!("{:.1}min", s / 60.0)
+    } else {
+        format!("{:.2}h", s / 3600.0)
+    }
+}
+
+/// Mean of a slice (0.0 for empty input).
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Population standard deviation.
+pub fn stddev(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    (xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / xs.len() as f64).sqrt()
+}
+
+/// Percentile via linear interpolation over a sorted copy; `p` in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v: Vec<f64> = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (v[hi] - v[lo]) * (rank - lo as f64)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fmt_secs_ranges() {
+        assert_eq!(fmt_secs(0.0000005), "0.5us");
+        assert_eq!(fmt_secs(0.5), "500.00ms");
+        assert_eq!(fmt_secs(2.0), "2.00s");
+        assert_eq!(fmt_secs(180.0), "3.0min");
+        assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+
+    #[test]
+    fn stats_basics() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((percentile(&xs, 0.0) - 1.0).abs() < 1e-12);
+        assert!((percentile(&xs, 100.0) - 4.0).abs() < 1e-12);
+        assert!((percentile(&xs, 50.0) - 2.5).abs() < 1e-12);
+        assert!(stddev(&xs) > 0.0);
+        assert_eq!(mean(&[]), 0.0);
+    }
+}

@@ -1,0 +1,62 @@
+//! Seeded property-testing harness (proptest is not in the offline vendor
+//! set). A `check` runs a property over many generated cases; on failure it
+//! reports the seed and case index so the exact case replays.
+
+use crate::util::rng::Rng;
+
+/// Run `prop` over `cases` generated cases. `gen` maps a per-case RNG to a
+/// case value; `prop` returns `Err(reason)` to fail. Panics with the seed
+/// and case index on the first failure (no shrinking — cases are small and
+/// fully determined by `(seed, index)`).
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    seed: u64,
+    cases: usize,
+    mut gen: impl FnMut(&mut Rng) -> T,
+    mut prop: impl FnMut(&T) -> Result<(), String>,
+) {
+    let base = Rng::new(seed);
+    for i in 0..cases {
+        let mut case_rng = base.split(i as u64);
+        let case = gen(&mut case_rng);
+        if let Err(reason) = prop(&case) {
+            panic!(
+                "property {name:?} failed at case {i} (seed {seed}):\n  case: {case:?}\n  reason: {reason}"
+            );
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passes_trivial_property() {
+        check(
+            "below_in_range",
+            1,
+            200,
+            |r| r.below(17),
+            |&v| {
+                if v < 17 {
+                    Ok(())
+                } else {
+                    Err(format!("{v} >= 17"))
+                }
+            },
+        );
+    }
+
+    #[test]
+    #[should_panic(expected = "property")]
+    fn reports_failures() {
+        check(
+            "always_fails",
+            2,
+            5,
+            |r| r.below(10),
+            |_| Err("nope".to_string()),
+        );
+    }
+}

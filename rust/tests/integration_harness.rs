@@ -1,0 +1,86 @@
+//! Harness/config integration: workspace loading, config layering, and
+//! a miniature grid sweep (artifacts required; skipped otherwise).
+
+use rudra::config::{ModelKind, RunConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::util::cli::Args;
+use rudra::util::json::Json;
+
+fn workspace() -> Option<Workspace> {
+    match Workspace::open_default() {
+        Ok(ws) => Some(ws),
+        Err(e) => {
+            eprintln!("skipping harness integration (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn config_file_plus_cli_layering_end_to_end() {
+    let dir = std::env::temp_dir().join("rudra_test_harness");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("run.json");
+    std::fs::write(
+        &path,
+        r#"{"protocol": "hardsync", "mu": 32, "lambda": 8, "model": "cnn"}"#,
+    )
+    .unwrap();
+    let mut cfg = RunConfig::default();
+    cfg.apply_file(&path).unwrap();
+    let args = Args::parse(
+        ["--protocol", "2-softsync", "--epochs", "5"].iter().map(|s| s.to_string()),
+        &[],
+    )
+    .unwrap();
+    cfg.apply_args(&args).unwrap();
+    assert_eq!(cfg.protocol, Protocol::NSoftsync { n: 2 });
+    assert_eq!(cfg.mu, 32);
+    assert_eq!(cfg.epochs, 5);
+    assert_eq!(cfg.model, ModelKind::Cnn);
+}
+
+#[test]
+fn workspace_cost_model_reflects_manifest() {
+    let Some(ws) = workspace() else { return };
+    let cost = ws.cnn_cost();
+    assert_eq!(cost.bytes as usize, ws.manifest.cnn.params * 4);
+    assert_eq!(cost.samples_per_epoch as usize, ws.manifest.data.train_n);
+    assert!(cost.flops_per_sample > 1e5);
+}
+
+#[test]
+fn mini_grid_produces_coherent_results() {
+    let Some(ws) = workspace() else { return };
+    let sweep = Sweep::new(&ws, 2);
+    let results = sweep
+        .run_grid(&[16], &[1, 4], |_| Protocol::NSoftsync { n: 1 })
+        .unwrap();
+    assert_eq!(results.len(), 2);
+    // scale-out reduces simulated time on the paper geometry
+    assert!(
+        results[1].paper_sim_seconds < results[0].paper_sim_seconds,
+        "λ=4 {} !< λ=1 {}",
+        results[1].paper_sim_seconds,
+        results[0].paper_sim_seconds
+    );
+    for r in &results {
+        assert!(r.test_error_pct.is_finite());
+        assert!(r.updates > 0);
+    }
+}
+
+#[test]
+fn manifest_env_override_is_respected() {
+    // Pointing RUDRA_MANIFEST at nonsense must fail loudly, not fall back.
+    let prev = std::env::var("RUDRA_MANIFEST").ok();
+    std::env::set_var("RUDRA_MANIFEST", "/nonexistent/manifest.json");
+    let r = Workspace::open_default();
+    match prev {
+        Some(v) => std::env::set_var("RUDRA_MANIFEST", v),
+        None => std::env::remove_var("RUDRA_MANIFEST"),
+    }
+    assert!(r.is_err());
+}

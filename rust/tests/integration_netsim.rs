@@ -1,0 +1,158 @@
+//! Cluster-simulator integration: the timing-side claims of the paper
+//! reproduced end-to-end through the event engine (no numerics needed).
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+
+fn timing(cfg: &SimConfig) -> rudra::coordinator::engine_sim::SimResult {
+    run_sim(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+/// §5.4: the CIFAR10 baseline (μ=128, λ=1, hardsync) takes 22 392 s for
+/// 140 epochs on the P775. Our calibrated simulator should land within
+/// ~35% (one learner, no contention — pure compute model).
+#[test]
+fn cifar_baseline_time_matches_paper_scale() {
+    let mut cfg = SimConfig::paper(
+        Protocol::Hardsync,
+        Arch::Base,
+        128,
+        1,
+        140,
+        ModelCost::cifar10(),
+    );
+    cfg.cluster.compute_jitter = 0.0;
+    let r = timing(&cfg);
+    let paper = 22_392.0;
+    assert!(
+        (r.sim_seconds / paper - 1.0).abs() < 0.35,
+        "simulated {} vs paper {paper}",
+        r.sim_seconds
+    );
+}
+
+/// §5.5: ImageNet baseline (μ=256, λ=1) takes 54 h/epoch.
+#[test]
+fn imagenet_baseline_epoch_time_matches_paper_scale() {
+    let mut cfg = SimConfig::paper(
+        Protocol::Hardsync,
+        Arch::Base,
+        256,
+        1,
+        1,
+        ModelCost::imagenet(),
+    );
+    cfg.cluster.compute_jitter = 0.0;
+    let r = timing(&cfg);
+    let hours = r.sim_seconds / 3600.0;
+    assert!((hours / 54.0 - 1.0).abs() < 0.35, "simulated {hours} h vs paper 54 h");
+}
+
+/// Figure 8's qualitative content: hardsync speed-up < softsync speed-up,
+/// and 1-softsync ≥ λ-softsync at small μ.
+#[test]
+fn fig8_speedup_ordering_at_small_mu() {
+    let epochs = 2;
+    let model = ModelCost::cifar10;
+    let lambda = 16;
+    let t = |protocol| {
+        let mut cfg =
+            SimConfig::paper(protocol, Arch::Base, 4, lambda, epochs, model());
+        cfg.seed = 5;
+        timing(&cfg).sim_seconds
+    };
+    let t_base = {
+        let mut cfg = SimConfig::paper(
+            Protocol::NSoftsync { n: 1 },
+            Arch::Base,
+            4,
+            1,
+            epochs,
+            model(),
+        );
+        cfg.seed = 5;
+        timing(&cfg).sim_seconds
+    };
+    let s_hard = t_base / t(Protocol::Hardsync);
+    let s_soft1 = t_base / t(Protocol::NSoftsync { n: 1 });
+    let s_softl = t_base / t(Protocol::NSoftsync { n: lambda });
+    assert!(s_soft1 > s_hard, "1-softsync {s_soft1} vs hardsync {s_hard}");
+    assert!(s_soft1 >= s_softl * 0.95, "1-softsync {s_soft1} vs λ-softsync {s_softl}");
+    assert!(s_soft1 > lambda as f64 * 0.3, "scale-out should be material: {s_soft1}");
+}
+
+/// §3.3/Table 1 direction: on the adversarial workload the overlap ratio
+/// must order base < adv < adv*.
+#[test]
+fn table1_overlap_ordering() {
+    let model = ModelCost::adversarial_300mb;
+    let overlap = |arch| {
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, arch, 4, 56, 1, model());
+        cfg.max_updates = Some(40);
+        cfg.seed = 9;
+        timing(&cfg).overlap.overlap_pct()
+    };
+    let base = overlap(Arch::Base);
+    let adv = overlap(Arch::Adv);
+    let advstar = overlap(Arch::AdvStar);
+    assert!(
+        base < adv && adv < advstar,
+        "overlap must order base({base:.1}) < adv({adv:.1}) < adv*({advstar:.1})"
+    );
+    assert!(advstar > 90.0, "adv* should nearly hide comm: {advstar:.1}");
+    assert!(base < 40.0, "base should be comm-bound: {base:.1}");
+}
+
+/// Epoch time decreases monotonically with λ at fixed μ (Fig 6's time
+/// axis: "training time reduces monotonically with λ").
+#[test]
+fn fig6_time_monotone_in_lambda() {
+    let mut last = f64::INFINITY;
+    for lambda in [1usize, 2, 4, 8, 16] {
+        let mut cfg = SimConfig::paper(
+            Protocol::Hardsync,
+            Arch::Base,
+            128,
+            lambda,
+            1,
+            ModelCost::cifar10(),
+        );
+        cfg.cluster.compute_jitter = 0.0;
+        let t = timing(&cfg).sim_seconds;
+        assert!(t < last, "λ={lambda}: {t} !< {last}");
+        last = t;
+    }
+}
+
+/// Small μ costs more wall-clock than large μ at the same λ and epoch
+/// budget (the GEMM-efficiency falloff; Fig 6's (0,4,1) observation).
+#[test]
+fn small_mu_slower_per_epoch() {
+    let t = |mu| {
+        let mut cfg = SimConfig::paper(
+            Protocol::Hardsync,
+            Arch::Base,
+            mu,
+            1,
+            1,
+            ModelCost::cifar10(),
+        );
+        cfg.cluster.compute_jitter = 0.0;
+        timing(&cfg).sim_seconds
+    };
+    assert!(t(4) > 1.5 * t(128), "μ=4 {} vs μ=128 {}", t(4), t(128));
+}

@@ -1,0 +1,232 @@
+//! Protocol-level integration over the virtual-time engine with the mock
+//! quadratic provider: verifies the paper's §5.1 staleness claims and the
+//! Figure 5 learning-rate-modulation effect at the optimizer level,
+//! without needing artifacts.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+
+fn tiny_model(samples_per_epoch: u64) -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch }
+}
+
+fn run(
+    protocol: Protocol,
+    lambda: usize,
+    epochs: usize,
+    base_lr: f64,
+    modulation: Modulation,
+    dim: usize,
+) -> SimResult {
+    let mut cfg =
+        SimConfig::paper(protocol, Arch::Base, 4, lambda, epochs, tiny_model(256));
+    cfg.seed = 17;
+    let theta0 = FlatVec::from_vec((0..dim).map(|i| (i as f32 % 5.0) - 2.0).collect());
+    let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+    let lr = LrPolicy::new(Schedule::constant(base_lr), modulation, 128);
+    let mut provider = MockProvider::new(vec![0.0; dim]);
+    run_sim(&cfg, theta0, opt, lr, Some(&mut provider), None).unwrap()
+}
+
+/// §5.1, Figure 4(a): 1-softsync and 2-softsync keep ⟨σ⟩ near 1 and 2.
+#[test]
+fn fig4a_softsync_staleness_tracks_n() {
+    let lambda = 16;
+    for n in [1usize, 2] {
+        let r = run(
+            Protocol::NSoftsync { n },
+            lambda,
+            4,
+            0.02,
+            Modulation::StalenessReciprocal,
+            8,
+        );
+        let avg = r.staleness.overall_avg();
+        assert!(
+            (n as f64 * 0.3..=n as f64 * 2.2).contains(&avg),
+            "{n}-softsync ⟨σ⟩ = {avg}, expected ≈ {n}"
+        );
+    }
+}
+
+/// §5.1, Figure 4(b): λ-softsync has ⟨σ⟩ ≈ λ with a bounded tail
+/// (P[σ > 2n] < 1e-4 in the paper; we assert a generous version).
+#[test]
+fn fig4b_lambda_softsync_staleness_bounded() {
+    let lambda = 16;
+    let r = run(
+        Protocol::NSoftsync { n: lambda },
+        lambda,
+        6,
+        0.005,
+        Modulation::StalenessReciprocal,
+        8,
+    );
+    let avg = r.staleness.overall_avg();
+    assert!(
+        (lambda as f64 * 0.4..=lambda as f64 * 1.8).contains(&avg),
+        "λ-softsync ⟨σ⟩ = {avg}, expected ≈ {lambda}"
+    );
+    let tail = r.staleness.frac_exceeding(2 * lambda as u64);
+    assert!(tail < 0.02, "P[σ > 2n] = {tail} too heavy");
+}
+
+/// Figure 5's mechanism at the optimizer level: with λ-softsync and a
+/// step size at the hardsync-stable limit, unmodulated updates diverge
+/// while α/n converges. (The full CNN version is the fig5 bench.)
+#[test]
+fn fig5_modulation_rescues_convergence() {
+    let lambda = 16;
+    // On the quadratic bowl, plain SGD is stable for α < 2; with ⟨σ⟩ ≈ λ
+    // stale updates the effective multiplier blows past stability.
+    let diverged = run(
+        Protocol::NSoftsync { n: lambda },
+        lambda,
+        4,
+        1.6,
+        Modulation::None,
+        8,
+    );
+    let rescued = run(
+        Protocol::NSoftsync { n: lambda },
+        lambda,
+        4,
+        1.6,
+        Modulation::StalenessReciprocal,
+        8,
+    );
+    let d_norm = diverged.theta.unwrap().norm();
+    let r_norm = rescued.theta.unwrap().norm();
+    assert!(
+        !d_norm.is_finite() || d_norm > 10.0,
+        "unmodulated stale run should diverge (|θ| = {d_norm})"
+    );
+    assert!(r_norm < 2.0, "α/⟨σ⟩ run should converge (|θ| = {r_norm})");
+}
+
+/// Hardsync with the √(λμ/B) rule stays stable as λ grows.
+#[test]
+fn hardsync_sqrt_rule_stable_scaleout() {
+    for lambda in [1usize, 4, 16] {
+        let r = run(Protocol::Hardsync, lambda, 3, 0.3, Modulation::HardsyncSqrt, 8);
+        let norm = r.theta.unwrap().norm();
+        assert!(norm.is_finite() && norm < 4.0, "λ={lambda}: |θ| = {norm}");
+        assert_eq!(r.staleness.max, 0);
+    }
+}
+
+/// Async (= λ-softsync) applies one gradient per update: update count
+/// must equal total pushes.
+#[test]
+fn async_update_count_matches_pushes() {
+    let r = run(Protocol::Async, 8, 2, 0.01, Modulation::StalenessReciprocal, 4);
+    assert_eq!(r.staleness.per_update_avg.len() as u64, r.updates);
+    // every update folded exactly one gradient
+    assert_eq!(r.staleness.count, r.updates);
+}
+
+/// Footnote-3 extension: per-gradient 1/(σᵢ+1) scaling also rescues the
+/// λ-softsync run that diverges unmodulated (like Fig 5, but finer
+/// grained — stale gradients are damped individually).
+#[test]
+fn per_gradient_modulation_rescues_convergence() {
+    // α₀ = 1.2: far beyond the delayed-feedback stability edge when
+    // unmodulated (σ ≈ 16 requires α ≲ 0.1), safely inside it once each
+    // gradient is damped by 1/(σᵢ+1) → α_eff ≈ 0.07.
+    let lambda = 16;
+    let diverged = run(
+        Protocol::NSoftsync { n: lambda },
+        lambda,
+        4,
+        1.2,
+        Modulation::None,
+        8,
+    );
+    let rescued = run(
+        Protocol::NSoftsync { n: lambda },
+        lambda,
+        4,
+        1.2,
+        Modulation::PerGradient,
+        8,
+    );
+    let d = diverged.theta.unwrap().norm();
+    let r = rescued.theta.unwrap().norm();
+    assert!(!d.is_finite() || d > 10.0, "unmodulated should diverge: {d}");
+    assert!(r < 2.0, "per-gradient modulation should converge: {r}");
+}
+
+/// Future-work #1 (chaotic systems): straggler injection produces the
+/// Downpour-style staleness tails the homogeneous cluster never shows,
+/// and σ stays bounded by the in-flight limit rather than 2n.
+#[test]
+fn chaotic_cluster_fattens_staleness_tail() {
+    let lambda = 8;
+    let mk = |chaotic: bool| {
+        let mut cfg = SimConfig::paper(
+            Protocol::NSoftsync { n: lambda },
+            Arch::Base,
+            4,
+            lambda,
+            4,
+            tiny_model(256),
+        );
+        cfg.seed = 21;
+        if chaotic {
+            cfg.cluster = rudra::netsim::cluster::ClusterSpec::chaotic();
+        }
+        let mut provider = MockProvider::new(vec![0.0; 4]);
+        run_sim(
+            &cfg,
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            LrPolicy::new(Schedule::constant(0.001), Modulation::StalenessReciprocal, 128),
+            Some(&mut provider),
+            None,
+        )
+        .unwrap()
+    };
+    let calm = mk(false);
+    let chaos = mk(true);
+    assert!(
+        chaos.staleness.max > calm.staleness.max,
+        "stragglers must fatten the σ tail: {} vs {}",
+        chaos.staleness.max,
+        calm.staleness.max
+    );
+}
+
+/// The three architectures agree on protocol semantics: same updates for
+/// the same epoch budget (timing differs, math doesn't diverge wildly).
+#[test]
+fn architectures_preserve_update_budget() {
+    let mut results = vec![];
+    for arch in [Arch::Base, Arch::Adv, Arch::AdvStar] {
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, arch, 4, 8, 2, tiny_model(256));
+        cfg.seed = 3;
+        let mut provider = MockProvider::new(vec![0.0; 4]);
+        let r = run_sim(
+            &cfg,
+            FlatVec::from_vec(vec![1.0, 1.0, 1.0, 1.0]),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+            Some(&mut provider),
+            None,
+        )
+        .unwrap();
+        results.push((arch, r.updates));
+    }
+    let base_updates = results[0].1;
+    for (arch, updates) in &results {
+        // Epoch accounting is sample-driven, so update totals match
+        // across architectures for the same protocol.
+        assert_eq!(*updates, base_updates, "{arch:?}");
+    }
+}

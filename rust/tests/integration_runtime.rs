@@ -1,0 +1,131 @@
+//! Runtime integration: load real artifacts, execute grad/eval graphs,
+//! and cross-check the numerics (gradient direction, loss scale).
+//!
+//! Requires `make artifacts`. Tests are skipped (with a notice) when the
+//! manifest is absent so `cargo test` stays green pre-AOT.
+
+use rudra::harness::Workspace;
+use rudra::params::FlatVec;
+
+fn workspace() -> Option<Workspace> {
+    match Workspace::open_default() {
+        Ok(ws) => Some(ws),
+        Err(e) => {
+            eprintln!("skipping runtime integration (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+#[test]
+fn manifest_and_init_agree() {
+    let Some(ws) = workspace() else { return };
+    let theta = ws.cnn_init().unwrap();
+    assert_eq!(theta.len(), ws.manifest.cnn.params);
+    assert!(theta.is_finite());
+    assert!(theta.norm() > 0.0);
+    assert_eq!(ws.train.classes, ws.manifest.data.classes);
+    assert_eq!(ws.train.n, ws.manifest.data.train_n);
+}
+
+#[test]
+fn grad_executes_and_descends() {
+    let Some(ws) = workspace() else { return };
+    let mu = 16;
+    let exec = ws.cnn_grad(mu).unwrap();
+    let mut theta = ws.cnn_init().unwrap();
+    let mut sampler = rudra::data::sampler::BatchSampler::new(&ws.train, mu, 7, 0);
+
+    // Fixed batch: repeated SGD steps must reduce its loss.
+    let batch = sampler.next_batch();
+    let first = exec.run_images(&theta, &batch.images, &batch.labels).unwrap();
+    assert!(first.loss.is_finite());
+    assert!(first.grads.is_finite());
+    assert_eq!(first.grads.len(), theta.len());
+    // initial loss ≈ ln(10) for 10-way softmax from random init
+    assert!((1.0..5.0).contains(&first.loss), "initial loss {}", first.loss);
+
+    let mut loss = first.loss;
+    for _ in 0..10 {
+        let out = exec.run_images(&theta, &batch.images, &batch.labels).unwrap();
+        theta.axpy(-0.1, &out.grads);
+        loss = out.loss;
+    }
+    assert!(
+        loss < first.loss * 0.9,
+        "SGD on a fixed batch must overfit it: {} -> {}",
+        first.loss,
+        loss
+    );
+}
+
+#[test]
+fn grad_batch_sizes_all_load() {
+    let Some(ws) = workspace() else { return };
+    for &mu in &ws.manifest.cnn.batch_sizes() {
+        let exec = ws.cnn_grad(mu).unwrap();
+        assert_eq!(exec.x_dims[0], mu);
+    }
+    assert!(ws.cnn_grad(999).is_err(), "unknown μ must fail cleanly");
+}
+
+#[test]
+fn eval_scores_are_sane() {
+    let Some(ws) = workspace() else { return };
+    let eval = ws.cnn_eval().unwrap();
+    let theta = ws.cnn_init().unwrap();
+    use rudra::coordinator::engine_sim::Evaluator;
+    let mut ev =
+        rudra::stats::ImageEvaluator::new(&eval, &ws.test, ws.manifest.cnn.eval_batch);
+    let (loss, err) = ev.eval(&theta).unwrap();
+    // untrained 10-class model: error near 90%, loss near ln(10)
+    assert!((70.0..=99.9).contains(&err), "untrained error {err}");
+    assert!((1.5..4.0).contains(&loss), "untrained loss {loss}");
+}
+
+#[test]
+fn grad_is_deterministic() {
+    let Some(ws) = workspace() else { return };
+    let exec = ws.cnn_grad(4).unwrap();
+    let theta = ws.cnn_init().unwrap();
+    let mut s = rudra::data::sampler::BatchSampler::new(&ws.train, 4, 3, 1);
+    let b = s.next_batch();
+    let a = exec.run_images(&theta, &b.images, &b.labels).unwrap();
+    let c = exec.run_images(&theta, &b.images, &b.labels).unwrap();
+    assert_eq!(a.loss, c.loss);
+    assert_eq!(a.grads.data, c.grads.data);
+}
+
+#[test]
+fn rejects_wrong_theta_length() {
+    let Some(ws) = workspace() else { return };
+    let exec = ws.cnn_grad(4).unwrap();
+    let bad = FlatVec::zeros(10);
+    let mut s = rudra::data::sampler::BatchSampler::new(&ws.train, 4, 3, 0);
+    let b = s.next_batch();
+    assert!(exec.run_images(&bad, &b.images, &b.labels).is_err());
+}
+
+#[test]
+fn lm_grad_executes() {
+    let Some(ws) = workspace() else { return };
+    if ws.manifest.lm.is_none() {
+        eprintln!("skipping LM runtime test (aot --skip-lm)");
+        return;
+    }
+    let exec = ws.lm_grad().unwrap();
+    let theta = ws.lm_init().unwrap();
+    let mut s = rudra::data::corpus::WindowSampler::new(
+        &ws.corpus,
+        ws.manifest.lm_batch,
+        ws.manifest.lm_seq,
+        5,
+        0,
+    );
+    let b = s.next_batch();
+    let out = exec.run_tokens(&theta, &b.tokens, &b.targets).unwrap();
+    assert!(out.loss.is_finite());
+    // byte-LM from scratch: loss ≈ ln(256) ≈ 5.55
+    assert!((4.0..7.0).contains(&out.loss), "initial LM loss {}", out.loss);
+    assert!(out.grads.is_finite());
+}

@@ -1,0 +1,136 @@
+//! End-to-end training integration: real artifacts through both engines,
+//! verifying the headline training behaviour the benches then quantify.
+//! Skipped (with a notice) when artifacts are absent.
+
+use rudra::config::RunConfig;
+use rudra::coordinator::engine_live::{run_live, LiveConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::harness::providers::{ComputeService, ServiceProvider};
+use rudra::harness::sweep::Sweep;
+use rudra::harness::Workspace;
+use rudra::params::optimizer::Optimizer;
+
+fn workspace() -> Option<Workspace> {
+    match Workspace::open_default() {
+        Ok(ws) => Some(ws),
+        Err(e) => {
+            eprintln!("skipping train integration (no artifacts): {e}");
+            None
+        }
+    }
+}
+
+/// Short real training run through the virtual-time engine: error must
+/// drop well below chance (90%) within a few epochs.
+#[test]
+fn sim_engine_trains_below_chance() {
+    let Some(ws) = workspace() else { return };
+    let mut sweep = Sweep::new(&ws, 3);
+    sweep.eval_each_epoch = true;
+    let cfg = RunConfig {
+        protocol: Protocol::NSoftsync { n: 1 },
+        mu: 16,
+        lambda: 4,
+        epochs: 3,
+        ..RunConfig::default()
+    };
+    let p = sweep.run_point(&cfg).unwrap();
+    // chance = 90% on the near-uniform 10-class benchmark; 3 epochs of
+    // the reduced workload lands in the low 70s.
+    assert!(
+        p.test_error_pct < 82.0,
+        "3 epochs should beat chance clearly: {}%",
+        p.test_error_pct
+    );
+    assert!(p.train_loss < 2.28, "train loss {} should be below ln(10)", p.train_loss);
+    assert!(p.avg_staleness < 3.0);
+    assert!(p.sim_seconds > 0.0 && p.paper_sim_seconds > 0.0);
+    // epoch stats carry eval series for Fig 5/9-style curves
+    assert_eq!(p.epochs.len(), 3);
+    assert!(p.epochs.iter().all(|e| e.test_error_pct.is_some()));
+}
+
+/// Hardsync and 1-softsync agree on accuracy at matched μλ within a
+/// tolerance (Table 2/3's core claim) on a reduced budget.
+#[test]
+fn protocols_agree_at_matched_mulambda() {
+    let Some(ws) = workspace() else { return };
+    let sweep = Sweep::new(&ws, 3);
+    let mut errs = vec![];
+    for protocol in [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }] {
+        let cfg = RunConfig {
+            protocol,
+            mu: 8,
+            lambda: 4,
+            epochs: 3,
+            ..RunConfig::default()
+        };
+        errs.push(sweep.run_point(&cfg).unwrap().test_error_pct);
+    }
+    let gap = (errs[0] - errs[1]).abs();
+    assert!(
+        gap < 15.0,
+        "hardsync {} vs 1-softsync {} diverge too much at matched μλ",
+        errs[0],
+        errs[1]
+    );
+}
+
+/// The live engine (real threads + compute service) completes a short
+/// run and also beats chance.
+#[test]
+fn live_engine_trains_below_chance() {
+    let Some(ws) = workspace() else { return };
+    let manifest_path = std::env::var("RUDRA_MANIFEST")
+        .map(std::path::PathBuf::from)
+        .unwrap_or_else(|_| rudra::runtime::Manifest::default_path());
+    let mu = 16;
+    let lambda = 3;
+    let service = ComputeService::start_cnn(manifest_path, mu).unwrap();
+    let train = std::sync::Arc::new(ws.train.clone());
+    let providers: Vec<Box<dyn rudra::coordinator::learner::GradProvider + Send>> = (0
+        ..lambda)
+        .map(|id| {
+            Box::new(ServiceProvider::new(&service, train.clone(), mu, 11, id))
+                as Box<dyn rudra::coordinator::learner::GradProvider + Send>
+        })
+        .collect();
+    let cfg = RunConfig::default();
+    let live_cfg = LiveConfig {
+        protocol: Protocol::NSoftsync { n: 1 },
+        mu,
+        lambda,
+        epochs: 2,
+        samples_per_epoch: ws.train.n as u64,
+        log_every: 0,
+    };
+    let theta0 = ws.cnn_init().unwrap();
+    let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
+    let r = run_live(&live_cfg, theta0, optimizer, cfg.lr_policy(), providers).unwrap();
+    assert!(r.updates > 0);
+    assert!(r.theta.is_finite());
+
+    use rudra::coordinator::engine_sim::Evaluator;
+    let eval = ws.cnn_eval().unwrap();
+    let mut ev =
+        rudra::stats::ImageEvaluator::new(&eval, &ws.test, ws.manifest.cnn.eval_batch);
+    let (_, err) = ev.eval(&r.theta).unwrap();
+    assert!(err < 80.0, "live 2-epoch error {err}%");
+}
+
+/// Warm-starting (§5.5) produces a different (and not worse) start.
+#[test]
+fn warmstart_path_works() {
+    let Some(ws) = workspace() else { return };
+    let sweep = Sweep::new(&ws, 2);
+    let cfg = RunConfig {
+        protocol: Protocol::NSoftsync { n: 4 },
+        mu: 16,
+        lambda: 4,
+        epochs: 2,
+        warmstart_epochs: 1,
+        ..RunConfig::default()
+    };
+    let p = sweep.run_point(&cfg).unwrap();
+    assert!(p.test_error_pct < 80.0, "warmstarted error {}%", p.test_error_pct);
+}

@@ -1,0 +1,339 @@
+//! Property-based invariant tests over the coordinator's routing,
+//! batching, and state machinery, using the seeded case generator in
+//! `rudra::util::prop` (the offline vendor set has no proptest; cases are
+//! fully determined by (seed, index) so failures replay exactly).
+
+use rudra::coordinator::clock::StalenessStats;
+use rudra::coordinator::protocol::{Accumulator, Protocol};
+use rudra::coordinator::server::{ParameterServer, ServerConfig};
+use rudra::coordinator::tree::PsTree;
+use rudra::netsim::cluster::Endpoint;
+use rudra::netsim::event::EventQueue;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::util::prop::check;
+use rudra::util::rng::Rng;
+
+/// For any (λ, n): c = ⌊λ/n⌋ clamped to [1, λ] — updates always make
+/// progress and never demand more gradients than learners exist.
+#[test]
+fn prop_gradients_per_update_in_bounds() {
+    check(
+        "gradients_per_update_bounds",
+        1,
+        500,
+        |r| {
+            let lambda = r.below(64) as usize + 1;
+            let n = r.below(96) as usize + 1;
+            (lambda, n)
+        },
+        |&(lambda, n)| {
+            let c = Protocol::NSoftsync { n }.gradients_per_update(lambda);
+            if c == 0 {
+                return Err("c = 0 stalls the server".into());
+            }
+            if c > lambda {
+                return Err(format!("c = {c} > λ = {lambda}"));
+            }
+            if n <= lambda && c != lambda / n {
+                return Err(format!("c = {c} != ⌊{lambda}/{n}⌋"));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// The accumulator's average equals the arithmetic mean of the pushed
+/// gradients regardless of push order and count.
+#[test]
+fn prop_accumulator_average_exact() {
+    check(
+        "accumulator_average",
+        2,
+        200,
+        |r| {
+            let c = r.below(12) as usize + 1;
+            let dim = r.below(8) as usize + 1;
+            let grads: Vec<Vec<f32>> = (0..c)
+                .map(|_| (0..dim).map(|_| (r.f64() * 8.0 - 4.0) as f32).collect())
+                .collect();
+            grads
+        },
+        |grads| {
+            let dim = grads[0].len();
+            let lambda = grads.len();
+            let mut acc = Accumulator::new(Protocol::NSoftsync { n: 1 }, lambda, dim);
+            for (i, g) in grads.iter().enumerate() {
+                acc.push(i, &FlatVec::from_vec(g.clone()), 0).map_err(|e| e.to_string())?;
+            }
+            if !acc.ready() {
+                return Err("not ready after λ pushes".into());
+            }
+            let (avg, clock) = acc.take_update();
+            if clock.len() != lambda {
+                return Err("vector clock wrong length".into());
+            }
+            for d in 0..dim {
+                let want: f32 =
+                    grads.iter().map(|g| g[d]).sum::<f32>() / lambda as f32;
+                if (avg.data[d] - want).abs() > 1e-4 {
+                    return Err(format!("dim {d}: {} != {want}", avg.data[d]));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Eq. (2) invariants: ⟨σ⟩ ≥ 0 for causal clocks, and ⟨σ⟩ = 0 iff every
+/// gradient was computed at ts = i−1.
+#[test]
+fn prop_staleness_nonnegative_and_zero_iff_fresh() {
+    check(
+        "staleness_eq2",
+        3,
+        400,
+        |r| {
+            let new_ts = r.below(50) + 1;
+            let k = r.below(8) as usize + 1;
+            let clocks: Vec<u64> = (0..k).map(|_| r.below(new_ts)).collect();
+            (new_ts, clocks)
+        },
+        |(new_ts, clocks)| {
+            let mut s = StalenessStats::default();
+            let rec = s.record(*new_ts, clocks);
+            if rec.avg_staleness < -1e-9 {
+                return Err(format!("negative ⟨σ⟩ {}", rec.avg_staleness));
+            }
+            let all_fresh = clocks.iter().all(|&t| t == new_ts - 1);
+            if all_fresh != (rec.avg_staleness.abs() < 1e-9) {
+                return Err(format!(
+                    "⟨σ⟩ = {} but all_fresh = {all_fresh}",
+                    rec.avg_staleness
+                ));
+            }
+            // histogram total equals clock count
+            let total: u64 = s.histogram.iter().sum();
+            if total != clocks.len() as u64 {
+                return Err("histogram lost gradients".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Server state machine: for any protocol and any interleaving of
+/// learner pushes, timestamps increase exactly on updates, epoch samples
+/// accounting is exact, and the weights stay finite.
+#[test]
+fn prop_server_state_machine() {
+    check(
+        "server_state",
+        4,
+        120,
+        |r| {
+            let lambda = r.below(8) as usize + 1;
+            let proto = match r.below(3) {
+                0 => Protocol::Hardsync,
+                1 => Protocol::NSoftsync { n: r.below(lambda as u64) as usize + 1 },
+                _ => Protocol::Async,
+            };
+            let pushes = r.below(60) as usize + lambda;
+            (lambda, proto, pushes, r.next_u64())
+        },
+        |&(lambda, proto, pushes, seed)| {
+            let dim = 3;
+            let cfg = ServerConfig {
+                protocol: proto,
+                mu: 4,
+                lambda,
+                samples_per_epoch: 32,
+                target_epochs: usize::MAX, // never auto-done in this test
+            };
+            let mut server = ParameterServer::new(
+                cfg,
+                FlatVec::zeros(dim),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, dim),
+                LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+            );
+            let mut rng = Rng::new(seed);
+            let mut ts_seen = 0u64;
+            let mut folded = 0u64;
+            // hardsync requires round-robin (one push per learner per
+            // round); others are arbitrary
+            let mut order: Vec<usize> = (0..lambda).collect();
+            for p in 0..pushes {
+                let learner = if proto.is_barrier() {
+                    if p % lambda == 0 {
+                        rng.shuffle(&mut order);
+                    }
+                    order[p % lambda]
+                } else {
+                    rng.usize_below(lambda)
+                };
+                let g = FlatVec::from_vec(vec![0.1, -0.1, 0.05]);
+                let grad_ts = server.timestamp(); // fresh pull
+                let out = server
+                    .push_gradient(learner, &g, grad_ts)
+                    .map_err(|e| e.to_string())?;
+                folded += 1;
+                if out.updated {
+                    if server.timestamp() != ts_seen + 1 {
+                        return Err("timestamp must advance by exactly 1".into());
+                    }
+                    ts_seen = server.timestamp();
+                } else if server.timestamp() != ts_seen {
+                    return Err("timestamp changed without an update".into());
+                }
+                if !server.weights().0.is_finite() {
+                    return Err("weights went non-finite".into());
+                }
+            }
+            let expected_samples = server.updates
+                * proto.gradients_per_update(lambda) as u64
+                * 4;
+            if server.samples_applied() != expected_samples {
+                return Err(format!(
+                    "samples {} != updates×c×μ {}",
+                    server.samples_applied(),
+                    expected_samples
+                ));
+            }
+            let _ = folded;
+            Ok(())
+        },
+    );
+}
+
+/// Tree routing: every learner maps to exactly one leaf, leaves partition
+/// the learners, and fan-in bounds hold.
+#[test]
+fn prop_tree_partitions_learners() {
+    check(
+        "tree_partition",
+        5,
+        300,
+        |r| {
+            let lambda = r.below(200) as usize + 1;
+            let fanout = r.below(16) as usize + 1;
+            (lambda, fanout)
+        },
+        |&(lambda, fanout)| {
+            let t = PsTree::new(lambda, fanout);
+            let mut seen = vec![false; lambda];
+            for leaf in 0..t.n_leaves {
+                let mut count = 0;
+                for l in t.members(leaf) {
+                    if seen[l] {
+                        return Err(format!("learner {l} in two leaves"));
+                    }
+                    seen[l] = true;
+                    if t.leaf_of[l] != leaf {
+                        return Err("leaf_of disagrees with members".into());
+                    }
+                    count += 1;
+                }
+                if count == 0 {
+                    return Err(format!("empty leaf {leaf}"));
+                }
+                if count > fanout {
+                    return Err(format!("leaf {leaf} over fan-in: {count}"));
+                }
+            }
+            if !seen.iter().all(|&s| s) {
+                return Err("some learner unrouted".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Event queue: any schedule pops in nondecreasing time order with FIFO
+/// tie-breaking, and never loses events.
+#[test]
+fn prop_event_queue_ordering() {
+    check(
+        "event_queue",
+        6,
+        200,
+        |r| {
+            let n = r.below(200) as usize + 1;
+            let times: Vec<f64> = (0..n).map(|_| (r.below(50) as f64) * 0.125).collect();
+            times
+        },
+        |times| {
+            let mut q = EventQueue::new();
+            for (i, &t) in times.iter().enumerate() {
+                q.schedule_at(t, i);
+            }
+            let mut popped = Vec::new();
+            let mut last_t = f64::NEG_INFINITY;
+            let mut last_seq_at_t: i64 = -1;
+            while let Some((t, i)) = q.pop() {
+                if t < last_t {
+                    return Err("time went backwards".into());
+                }
+                if t > last_t {
+                    last_seq_at_t = -1;
+                    last_t = t;
+                }
+                // FIFO among equal times means insertion index increases
+                if (times[i] - t).abs() > 1e-12 {
+                    return Err("event popped at wrong time".into());
+                }
+                if (i as i64) < last_seq_at_t {
+                    return Err("FIFO tie-break violated".into());
+                }
+                last_seq_at_t = i as i64;
+                popped.push(i);
+            }
+            if popped.len() != times.len() {
+                return Err("lost events".into());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Endpoint contention: reservations never overlap and total busy time
+/// equals the sum of durations.
+#[test]
+fn prop_endpoint_serializes() {
+    check(
+        "endpoint_serialization",
+        7,
+        200,
+        |r| {
+            let n = r.below(40) as usize + 1;
+            (0..n)
+                .map(|_| (r.f64() * 10.0, 0.01 + r.f64()))
+                .collect::<Vec<(f64, f64)>>()
+        },
+        |reqs| {
+            let mut e = Endpoint::default();
+            let mut windows: Vec<(f64, f64)> = Vec::new();
+            let mut total = 0.0;
+            for &(earliest, dur) in reqs {
+                let done = e.reserve(earliest, dur);
+                let start = done - dur;
+                if start + 1e-12 < earliest {
+                    return Err("transfer started before requested".into());
+                }
+                for &(s, d) in &windows {
+                    if start + 1e-9 < d && s + 1e-9 < done {
+                        return Err(format!(
+                            "overlap: [{start},{done}] vs [{s},{d}]"
+                        ));
+                    }
+                }
+                windows.push((start, done));
+                total += dur;
+            }
+            if (e.busy_total - total).abs() > 1e-6 {
+                return Err("busy_total wrong".into());
+            }
+            Ok(())
+        },
+    );
+}
