@@ -53,6 +53,7 @@ fn main() {
             cluster: ClusterSpec::p775(),
             compute: LearnerCompute::p775(),
             model: ws.cnn_cost(),
+            shards: cfg.shards,
             eval_each_epoch: false,
             max_updates: None,
         };

@@ -58,6 +58,7 @@ fn main() {
             lambda: 8,
             samples_per_epoch: u64::MAX,
             target_epochs: usize::MAX,
+            shards: 1,
         };
         let mut server = ParameterServer::new(
             cfg,

@@ -1,0 +1,115 @@
+//! Shard-count sweep over the hotpath workload (manual timing, like
+//! `perf_hotpath`): measures the server-side push+applyUpdate wall time
+//! at S ∈ {1, 2, 4, 8} on a 1M-parameter model, plus the simulated-time
+//! relief on the §3.3 adversarial workload where the flat root is the
+//! bottleneck. Expected shape: per-push wall time and adversarial
+//! sim-time both decrease as S grows.
+
+use std::time::Instant;
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::server::ServerConfig;
+use rudra::coordinator::shard::ShardedServer;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::{f, Table};
+
+/// Seconds per push (each push triggers applyUpdate under async) on a
+/// `ShardedServer` with `shards` shards over `n_params` weights.
+fn bench_server_push(n_params: usize, shards: usize, iters: usize) -> f64 {
+    let cfg = ServerConfig {
+        protocol: Protocol::Async,
+        mu: 4,
+        lambda: 8,
+        samples_per_epoch: u64::MAX,
+        target_epochs: usize::MAX,
+        shards,
+    };
+    let mut server = ShardedServer::new(
+        cfg,
+        FlatVec::zeros(n_params),
+        Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, n_params),
+        LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+    );
+    let grad = FlatVec::from_vec(vec![0.001; n_params]);
+    // warmup
+    for i in 0..8usize {
+        let ts = server.timestamp();
+        server.push_gradient(i % 8, &grad, ts).unwrap();
+    }
+    let start = Instant::now();
+    for i in 0..iters {
+        let ts = server.timestamp();
+        server.push_gradient(i % 8, &grad, ts).unwrap();
+    }
+    start.elapsed().as_secs_f64() / iters as f64
+}
+
+/// Simulated seconds for a capped 1-softsync run on the adversarial
+/// 300 MB workload (λ = 32, Rudra-base) with a sharded root.
+fn bench_adversarial_sim(shards: usize) -> f64 {
+    let mut cfg = SimConfig::paper(
+        Protocol::NSoftsync { n: 1 },
+        Arch::Base,
+        4,
+        32,
+        1,
+        ModelCost::adversarial_300mb(),
+    );
+    cfg.seed = 5;
+    cfg.shards = shards;
+    cfg.max_updates = Some(40);
+    run_sim(
+        &cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim")
+    .sim_seconds
+}
+
+fn main() {
+    println!("=== perf_shards — sharded applyUpdate sweep (manual timing) ===\n");
+    let n_params = 1_000_000;
+    let iters = 300;
+
+    let mut rows = Vec::new();
+    for shards in [1usize, 2, 4, 8] {
+        let per_push = bench_server_push(n_params, shards, iters);
+        let sim = bench_adversarial_sim(shards);
+        rows.push((shards, per_push, sim));
+    }
+
+    let base_push = rows[0].1;
+    let base_sim = rows[0].2;
+    let mut t = Table::new(&[
+        "S",
+        "push+apply 1M",
+        "speedup ×",
+        "adversarial sim (s)",
+        "sim speedup ×",
+    ]);
+    for &(shards, per_push, sim) in &rows {
+        t.row(vec![
+            shards.to_string(),
+            rudra::util::fmt_secs(per_push),
+            f(base_push / per_push, 2),
+            f(sim, 1),
+            f(base_sim / sim, 2),
+        ]);
+    }
+    t.print();
+
+    println!(
+        "\napplyUpdate wall time should fall as S grows (scoped-thread parallel \
+         apply); adversarial sim time falls as the root NIC stops serializing \
+         every push (§3.3)."
+    );
+}

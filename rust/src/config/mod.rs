@@ -54,6 +54,13 @@ pub struct RunConfig {
     /// Warm-start: epochs of hardsync before switching protocol (§5.5).
     pub warmstart_epochs: usize,
     pub eval_each_epoch: bool,
+    /// Parameter shards at the server's root tier (JSON key / CLI flag
+    /// `shards`). 1 (the default) is the paper's flat server; S > 1
+    /// splits θ into S contiguous shards with independent endpoints and
+    /// parallel applyUpdate — the §3.3 root-bottleneck fix
+    /// ([`crate::coordinator::shard`]). Protocol semantics, staleness,
+    /// and fixed-seed S = 1 trajectories are unchanged.
+    pub shards: usize,
 }
 
 impl Default for RunConfig {
@@ -74,6 +81,7 @@ impl Default for RunConfig {
             paper_schedule: true,
             warmstart_epochs: 0,
             eval_each_epoch: true,
+            shards: 1,
         }
     }
 }
@@ -99,6 +107,7 @@ impl RunConfig {
                 "paper_schedule" => self.paper_schedule = v.as_bool()?,
                 "warmstart_epochs" => self.warmstart_epochs = v.as_usize()?,
                 "eval_each_epoch" => self.eval_each_epoch = v.as_bool()?,
+                "shards" => self.shards = v.as_usize()?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -132,12 +141,16 @@ impl RunConfig {
             self.optimizer = parse_optimizer(v)?;
         }
         self.warmstart_epochs = args.usize_or("warmstart", self.warmstart_epochs)?;
+        self.shards = args.usize_or("shards", self.shards)?;
         self.validate()
     }
 
     pub fn validate(&self) -> Result<()> {
         if self.mu == 0 || self.lambda == 0 || self.epochs == 0 {
             bail!("mu, lambda, and epochs must all be >= 1");
+        }
+        if self.shards == 0 {
+            bail!("shards must be >= 1 (1 = the flat, unsharded server)");
         }
         if let Protocol::NSoftsync { n } = self.protocol {
             if n > self.lambda {
@@ -161,15 +174,19 @@ impl RunConfig {
         crate::params::lr::LrPolicy::new(schedule, self.modulation, self.reference_batch)
     }
 
-    /// Short human label, e.g. `(σ=1, μ=4, λ=30) 1-softsync/base`.
+    /// Short human label, e.g. `(σ=1, μ=4, λ=30) 1-softsync/base`; a
+    /// sharded root tier appends ` S=<shards>`.
     pub fn label(&self) -> String {
+        let shard_suffix =
+            if self.shards > 1 { format!(" S={}", self.shards) } else { String::new() };
         format!(
-            "(σ̄={}, μ={}, λ={}) {}/{}",
+            "(σ̄={}, μ={}, λ={}) {}/{}{}",
             self.protocol.effective_n(self.lambda),
             self.mu,
             self.lambda,
             self.protocol.label(),
             self.arch.label(),
+            shard_suffix,
         )
     }
 }
@@ -232,6 +249,24 @@ mod tests {
         let mut cfg = RunConfig::default();
         cfg.mu = 0;
         assert!(cfg.validate().is_err());
+    }
+
+    #[test]
+    fn shards_knob_layers_and_validates() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.shards, 1, "flat server by default");
+        cfg.apply_json(&Json::parse(r#"{"shards": 4}"#).unwrap()).unwrap();
+        assert_eq!(cfg.shards, 4);
+        let args =
+            Args::parse(["--shards", "8"].iter().map(|s| s.to_string()), &[]).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.shards, 8, "CLI wins over JSON");
+        cfg.shards = 0;
+        assert!(cfg.validate().is_err(), "0 shards rejected");
+        cfg.shards = 4;
+        assert!(cfg.label().contains("S=4"), "{}", cfg.label());
+        cfg.shards = 1;
+        assert!(!cfg.label().contains("S="), "{}", cfg.label());
     }
 
     #[test]

@@ -23,7 +23,8 @@ use anyhow::Result;
 use crate::coordinator::clock::Timestamp;
 use crate::coordinator::learner::GradProvider;
 use crate::coordinator::protocol::Protocol;
-use crate::coordinator::server::{ParameterServer, ServerConfig};
+use crate::coordinator::server::ServerConfig;
+use crate::coordinator::shard::ShardedServer;
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
@@ -36,6 +37,10 @@ pub struct LiveConfig {
     pub lambda: usize,
     pub epochs: usize,
     pub samples_per_epoch: u64,
+    /// Parameter shards at the server (default 1 = the paper's flat
+    /// server); applyUpdate runs per shard in parallel for large models
+    /// ([`crate::coordinator::shard`]).
+    pub shards: usize,
     /// Log a loss point every this many pushes (0 = never).
     pub log_every: u64,
 }
@@ -50,6 +55,8 @@ pub struct LiveResult {
     /// (pushes seen, mean recent training loss) log.
     pub loss_log: Vec<(u64, f32)>,
     pub pushes: u64,
+    /// applyUpdate count per shard (length = `LiveConfig::shards`).
+    pub shard_updates: Vec<u64>,
 }
 
 enum ToServer {
@@ -80,8 +87,9 @@ pub fn run_live(
         lambda: cfg.lambda,
         samples_per_epoch: cfg.samples_per_epoch,
         target_epochs: cfg.epochs,
+        shards: cfg.shards,
     };
-    let mut server = ParameterServer::new(server_cfg, theta0.clone(), optimizer, lr);
+    let mut server = ShardedServer::new(server_cfg, theta0.clone(), optimizer, lr);
 
     let (push_tx, push_rx) = mpsc::channel::<ToServer>();
     let mut reply_txs = Vec::with_capacity(cfg.lambda);
@@ -138,8 +146,8 @@ pub fn run_live(
         if cfg.protocol.is_barrier() {
             barrier_waiting.push(learner);
             if outcome.updated {
-                let (theta, new_ts) = server.weights();
-                let snap = Arc::new(theta.clone());
+                let new_ts = server.timestamp();
+                let snap = Arc::new(server.assemble_weights());
                 for l in barrier_waiting.drain(..) {
                     let _ = reply_txs[l]
                         .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
@@ -147,10 +155,11 @@ pub fn run_live(
             }
         } else {
             // softsync/async: reply to this learner's implicit pull.
-            let (theta, cur_ts) = server.weights();
+            let cur_ts = server.timestamp();
             if cur_ts > ts {
+                let snap = Arc::new(server.assemble_weights());
                 let _ = reply_txs[learner]
-                    .send(ToLearner::Weights { theta: Arc::new(theta.clone()), ts: cur_ts });
+                    .send(ToLearner::Weights { theta: snap, ts: cur_ts });
             } else {
                 let _ = reply_txs[learner].send(ToLearner::Unchanged);
             }
@@ -175,9 +184,10 @@ pub fn run_live(
         wall_seconds: start.elapsed().as_secs_f64(),
         updates: server.updates,
         staleness: server.staleness.clone(),
-        theta: server.weights().0.clone(),
+        theta: server.assemble_weights(),
         loss_log,
         pushes,
+        shard_updates: server.shard_updates(),
     })
 }
 
@@ -195,6 +205,10 @@ mod tests {
     }
 
     fn run(protocol: Protocol, lambda: usize) -> LiveResult {
+        run_sharded(protocol, lambda, 1)
+    }
+
+    fn run_sharded(protocol: Protocol, lambda: usize, shards: usize) -> LiveResult {
         let dim = 8;
         let cfg = LiveConfig {
             protocol,
@@ -202,6 +216,7 @@ mod tests {
             lambda,
             epochs: 3,
             samples_per_epoch: 64,
+            shards,
             log_every: 4,
         };
         let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
@@ -240,5 +255,16 @@ mod tests {
         let r = run(Protocol::NSoftsync { n: 1 }, 1);
         assert_eq!(r.staleness.max, 0, "λ=1 has no staleness source");
         assert!(r.theta.norm() < 1.0, "plain SGD should converge well");
+    }
+
+    #[test]
+    fn sharded_live_server_completes_in_lockstep() {
+        let r = run_sharded(Protocol::NSoftsync { n: 1 }, 4, 4);
+        assert!(r.updates > 0);
+        assert!(r.theta.is_finite());
+        assert_eq!(r.shard_updates, vec![r.updates; 4], "shards must stay in lockstep");
+        // flat result exposes the degenerate single-shard counter
+        let flat = run(Protocol::NSoftsync { n: 1 }, 4);
+        assert_eq!(flat.shard_updates, vec![flat.updates]);
     }
 }

@@ -8,6 +8,11 @@
 //! Rudra-adv/adv\* topologies ([`tree`], [`buffer`]) trade staleness
 //! control for communication overlap.
 //!
+//! The server comes in two equivalent shapes: the flat [`server`] (single
+//! accumulator/optimizer over the whole θ, the reference implementation)
+//! and the sharded [`shard`] server (S contiguous shards applied in
+//! parallel, the §3.3 root-bottleneck fix) that both engines drive.
+//!
 //! Two engines drive the same server/learner logic:
 //! * [`engine_sim`] — deterministic virtual-time execution with real
 //!   gradients; cluster timing comes from [`crate::netsim`].
@@ -20,4 +25,5 @@ pub mod engine_sim;
 pub mod learner;
 pub mod protocol;
 pub mod server;
+pub mod shard;
 pub mod tree;

@@ -130,10 +130,26 @@ impl Accumulator {
         grad_ts: u64,
         scale: f32,
     ) -> Result<()> {
+        self.push_scaled_slice(learner, &grad.data, grad_ts, scale)
+    }
+
+    /// Slice form of [`Accumulator::push_scaled`]: the sharded server folds
+    /// each shard's contiguous range of the gradient without copying it
+    /// into a standalone vector first.
+    pub fn push_scaled_slice(
+        &mut self,
+        learner: usize,
+        grad: &[f32],
+        grad_ts: u64,
+        scale: f32,
+    ) -> Result<()> {
+        if learner >= self.lambda {
+            bail!("learner id {learner} out of range (λ = {})", self.lambda);
+        }
         if self.protocol.is_barrier() && self.pending_from.contains(&learner) {
             bail!("hardsync: learner {learner} pushed twice in one barrier round");
         }
-        self.sum.axpy(scale, grad);
+        self.sum.axpy_slice(scale, grad);
         self.pending_ts.push(grad_ts);
         self.pending_from.push(learner);
         Ok(())
@@ -222,6 +238,23 @@ mod tests {
         let mut acc = Accumulator::new(Protocol::Hardsync, 2, 1);
         acc.push(0, &FlatVec::from_vec(vec![1.0]), 0).unwrap();
         assert!(acc.push(0, &FlatVec::from_vec(vec![1.0]), 0).is_err());
+    }
+
+    #[test]
+    fn rejects_out_of_range_learner() {
+        // Regression: push_scaled used to accept any learner id, silently
+        // corrupting hardsync dedup and per-learner accounting.
+        for protocol in [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::Async] {
+            let mut acc = Accumulator::new(protocol, 2, 1);
+            let g = FlatVec::from_vec(vec![1.0]);
+            let err = acc.push(2, &g, 0).unwrap_err();
+            assert!(err.to_string().contains("out of range"), "{err}");
+            assert!(acc.push(7, &g, 0).is_err());
+            assert_eq!(acc.pending(), 0, "rejected pushes must not accumulate");
+            // valid ids still work
+            acc.push(1, &g, 0).unwrap();
+            assert_eq!(acc.pending(), 1);
+        }
     }
 
     #[test]

@@ -23,6 +23,11 @@ pub struct ServerConfig {
     /// Samples per epoch (the paper's epoch = one aggregate pass).
     pub samples_per_epoch: u64,
     pub target_epochs: usize,
+    /// Parameter shards at the root tier (1 = the flat server of the
+    /// paper; >1 = the Downpour-style sharded server of
+    /// [`crate::coordinator::shard`]). This flat [`ParameterServer`]
+    /// ignores the knob and always behaves as one shard.
+    pub shards: usize,
 }
 
 /// Result of folding one pushed gradient into the server.
@@ -197,6 +202,7 @@ mod tests {
             lambda,
             samples_per_epoch: 16,
             target_epochs: 2,
+            shards: 1,
         };
         ParameterServer::new(
             cfg,
@@ -259,6 +265,7 @@ mod tests {
             lambda: 2,
             samples_per_epoch: 1_000_000,
             target_epochs: 100,
+            shards: 1,
         };
         let mut s = ParameterServer::new(
             cfg,

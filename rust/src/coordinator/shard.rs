@@ -1,0 +1,583 @@
+//! Sharded parameter server: S contiguous weight shards, parallel
+//! applyUpdate (§3.3's root-bottleneck fix).
+//!
+//! The paper identifies the root parameter server as the scalability wall
+//! at λ = 30: every learner's push serializes through one NIC endpoint and
+//! one applyUpdate loop ("if 16 tasks are sending 300 MB to the same
+//! receiver and there is link contention, it would take over a second").
+//! The canonical fix — the Downpour/DistBelief-style sharded server — is
+//! to split the flat parameter vector θ into `S` contiguous shards, each
+//! owning its slice of the accumulator, optimizer state, and weights, so
+//! sumGradients and applyUpdate run per shard in parallel and push/pull
+//! traffic spreads over `S` independent endpoints (see
+//! [`crate::netsim::cluster::Fabric::send_to_shards`]).
+//!
+//! **Semantics are unchanged by construction.** Every push delivers one
+//! slice to every shard, so all shard quotas fill on the same push and all
+//! shards apply the same update step with the same scalar α. Per-shard
+//! timestamps therefore advance in lockstep with the shared scalar clock,
+//! which is exactly the property that keeps the paper's staleness analysis
+//! (one scalar timestamp per model, Eq. 2) intact — the distinction the
+//! paper draws against DistBelief's independently-clocked shards. At any
+//! `S` the folded arithmetic is the same per-coordinate operations in the
+//! same order as the unsharded [`ParameterServer`], so fixed-seed
+//! trajectories are bit-identical at `S = 1` and equal within float
+//! round-off at any `S` (see `prop_sharded_server_matches_unsharded`).
+//!
+//! Parallelism uses `std::thread::scope` over the shard set, gated on the
+//! shard slices being large enough (`PAR_MIN_SHARD_PARAMS`) for fork/join to pay for
+//! itself; below the threshold shards apply serially, with identical
+//! results either way.
+
+use std::ops::Range;
+
+use anyhow::{bail, Result};
+
+use crate::coordinator::clock::{StalenessStats, Timestamp};
+use crate::coordinator::protocol::Accumulator;
+use crate::coordinator::server::{PushOutcome, ServerConfig};
+use crate::params::lr::LrPolicy;
+use crate::params::optimizer::Optimizer;
+use crate::params::FlatVec;
+
+/// Below this many parameters *per shard slice*, fork/join costs more
+/// than the axpy it parallelizes; shards run serially (same results
+/// either way).
+const PAR_MIN_SHARD_PARAMS: usize = 8_192;
+
+/// Contiguous partition of a flat parameter vector into `S` shards whose
+/// lengths differ by at most one.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub n_params: usize,
+    pub shards: usize,
+}
+
+impl ShardSpec {
+    /// `shards` is clamped to ≥ 1 so a zero in a hand-built config cannot
+    /// produce an empty server.
+    pub fn new(n_params: usize, shards: usize) -> ShardSpec {
+        ShardSpec { n_params, shards: shards.max(1) }
+    }
+
+    /// Half-open parameter range owned by shard `s`.
+    pub fn range(&self, s: usize) -> Range<usize> {
+        debug_assert!(s < self.shards);
+        let base = self.n_params / self.shards;
+        let rem = self.n_params % self.shards;
+        let start = s * base + s.min(rem);
+        let len = base + usize::from(s < rem);
+        start..start + len
+    }
+
+    pub fn ranges(&self) -> impl Iterator<Item = Range<usize>> + '_ {
+        (0..self.shards).map(|s| self.range(s))
+    }
+}
+
+/// One shard: a contiguous slice of θ with its own accumulator, optimizer
+/// state, and timestamp.
+#[derive(Debug)]
+pub struct Shard {
+    pub range: Range<usize>,
+    acc: Accumulator,
+    optimizer: Optimizer,
+    theta: FlatVec,
+    /// Lockstep with the server's scalar clock (asserted after updates).
+    pub ts: Timestamp,
+    /// applyUpdate count for this shard (stats reporting).
+    pub updates: u64,
+}
+
+impl Shard {
+    /// Fold this shard's slice of one pushed gradient. The caller
+    /// ([`ShardedServer::push_gradient`]) has already validated the
+    /// learner id and hardsync dedup, so the accumulator cannot reject.
+    fn fold(&mut self, grad: &FlatVec, learner: usize, grad_ts: Timestamp, scale: f32) {
+        self.acc
+            .push_scaled_slice(learner, &grad.data[self.range.clone()], grad_ts, scale)
+            .expect("shard push pre-validated by ShardedServer");
+    }
+
+    /// applyUpdate for this shard: drain the accumulator and step θ.
+    fn apply(&mut self, alpha: f64) {
+        let (avg, _clock) = self.acc.take_update();
+        self.optimizer.apply(&mut self.theta, &avg, alpha as f32);
+        self.ts += 1;
+        self.updates += 1;
+    }
+}
+
+/// Parameter server over `S` shards. Drop-in for [`ParameterServer`] in
+/// both engines: same protocol semantics, staleness accounting, epoch
+/// bookkeeping, and LR modulation, with the numeric work split across
+/// shards and applied in parallel.
+///
+/// [`ParameterServer`]: crate::coordinator::server::ParameterServer
+pub struct ShardedServer {
+    pub cfg: ServerConfig,
+    spec: ShardSpec,
+    shards: Vec<Shard>,
+    lr: LrPolicy,
+    pub staleness: StalenessStats,
+    /// Shared scalar timestamp (all shards advance in lockstep with it).
+    ts: Timestamp,
+    /// Shared vector clock in waiting (timestamps of pending gradients).
+    pending_ts: Vec<Timestamp>,
+    /// Learner ids contributing to the pending update (hardsync dedup).
+    pending_from: Vec<usize>,
+    samples_applied: u64,
+    epochs_completed: usize,
+    /// Number of weight updates applied (aggregate; equals every shard's
+    /// own count).
+    pub updates: u64,
+    /// α actually used for the most recent update (for logging).
+    pub last_alpha: f64,
+    /// Pending vector clock for the timing-only path.
+    timing_pending: Vec<Timestamp>,
+}
+
+impl ShardedServer {
+    /// `optimizer` supplies the kind and weight decay; each shard
+    /// allocates its own state slice of matching length.
+    pub fn new(
+        cfg: ServerConfig,
+        theta0: FlatVec,
+        optimizer: Optimizer,
+        lr: LrPolicy,
+    ) -> ShardedServer {
+        let spec = ShardSpec::new(theta0.len(), cfg.shards);
+        let shards = spec
+            .ranges()
+            .map(|range| Shard {
+                acc: Accumulator::new(cfg.protocol, cfg.lambda, range.len()),
+                optimizer: Optimizer::new(optimizer.kind, optimizer.weight_decay, range.len()),
+                theta: FlatVec::from_vec(theta0.data[range.clone()].to_vec()),
+                range,
+                ts: 0,
+                updates: 0,
+            })
+            .collect();
+        ShardedServer {
+            cfg,
+            spec,
+            shards,
+            lr,
+            staleness: StalenessStats::default(),
+            ts: 0,
+            pending_ts: Vec::new(),
+            pending_from: Vec::new(),
+            samples_applied: 0,
+            epochs_completed: 0,
+            updates: 0,
+            last_alpha: 0.0,
+            timing_pending: Vec::new(),
+        }
+    }
+
+    pub fn timestamp(&self) -> Timestamp {
+        self.ts
+    }
+
+    pub fn epoch(&self) -> usize {
+        self.epochs_completed
+    }
+
+    pub fn samples_applied(&self) -> u64 {
+        self.samples_applied
+    }
+
+    pub fn n_shards(&self) -> usize {
+        self.spec.shards
+    }
+
+    pub fn spec(&self) -> ShardSpec {
+        self.spec
+    }
+
+    /// Per-shard applyUpdate counts (stats reporting). Lockstep shards
+    /// mean every entry equals [`ShardedServer::updates`]; a divergence
+    /// indicates a routing bug and is asserted against in debug builds.
+    pub fn shard_updates(&self) -> Vec<u64> {
+        self.shards.iter().map(|s| s.updates).collect()
+    }
+
+    /// Training completes after `target_epochs` epochs of aggregate
+    /// samples have been applied (§3.2).
+    pub fn done(&self) -> bool {
+        self.epochs_completed >= self.cfg.target_epochs
+    }
+
+    /// Gather the sharded weights into one contiguous vector (the
+    /// pullWeights payload). Engines cache the result per timestamp, so
+    /// this copies at the same rate the unsharded server cloned θ.
+    pub fn assemble_weights(&self) -> FlatVec {
+        let mut out = FlatVec::zeros(self.spec.n_params);
+        for shard in &self.shards {
+            out.data[shard.range.clone()].copy_from_slice(&shard.theta.data);
+        }
+        out
+    }
+
+    /// sumGradients: fold one learner's gradient into every shard;
+    /// applyUpdate fires on all shards (in parallel for large models) when
+    /// the protocol quota is reached.
+    pub fn push_gradient(
+        &mut self,
+        learner: usize,
+        grad: &FlatVec,
+        grad_ts: Timestamp,
+    ) -> Result<PushOutcome> {
+        if learner >= self.cfg.lambda {
+            bail!("learner id {learner} out of range (λ = {})", self.cfg.lambda);
+        }
+        anyhow::ensure!(
+            grad.len() == self.spec.n_params,
+            "gradient length {} != model size {}",
+            grad.len(),
+            self.spec.n_params
+        );
+        if self.cfg.protocol.is_barrier() && self.pending_from.contains(&learner) {
+            bail!("hardsync: learner {learner} pushed twice in one barrier round");
+        }
+        let scale = if self.lr.is_per_gradient() {
+            let sigma = self.ts.saturating_sub(grad_ts);
+            1.0 / (sigma as f32 + 1.0)
+        } else {
+            1.0
+        };
+        let quota = self.cfg.protocol.gradients_per_update(self.cfg.lambda);
+        let will_update = self.pending_ts.len() + 1 >= quota;
+        if will_update {
+            // applyUpdate fires: fold the final gradient and step every
+            // shard, in parallel for large models.
+            let alpha = self
+                .lr
+                .alpha(self.epochs_completed, self.cfg.protocol, self.cfg.mu, self.cfg.lambda);
+            self.last_alpha = alpha;
+            self.for_each_shard(|shard| {
+                shard.fold(grad, learner, grad_ts, scale);
+                shard.apply(alpha);
+            });
+        } else {
+            // Fold-only push: the per-shard work is one slice of a single
+            // axpy (memory-bound), so forking threads here would cost more
+            // than it hides — run the slices serially, same math.
+            for shard in self.shards.iter_mut() {
+                shard.fold(grad, learner, grad_ts, scale);
+            }
+        }
+        self.pending_ts.push(grad_ts);
+        self.pending_from.push(learner);
+
+        let mut out = PushOutcome::default();
+        if will_update {
+            let clock = std::mem::take(&mut self.pending_ts);
+            self.pending_from.clear();
+            self.advance_clock(&clock, &mut out);
+            debug_assert!(
+                self.shards.iter().all(|s| s.ts == self.ts),
+                "shard clocks must stay in lockstep with the scalar timestamp"
+            );
+        }
+        Ok(out)
+    }
+
+    /// Timing-only variant: advances protocol/clock/epoch state (including
+    /// every shard's clock, so per-shard stats stay truthful) without
+    /// numeric work.
+    pub fn push_gradient_timing_only(&mut self, _learner: usize, grad_ts: Timestamp) -> PushOutcome {
+        self.timing_pending.push(grad_ts);
+        let mut out = PushOutcome::default();
+        if self.timing_pending.len() >= self.cfg.protocol.gradients_per_update(self.cfg.lambda) {
+            let vclock = std::mem::take(&mut self.timing_pending);
+            for shard in self.shards.iter_mut() {
+                shard.ts += 1;
+                shard.updates += 1;
+            }
+            self.advance_clock(&vclock, &mut out);
+        }
+        out
+    }
+
+    /// Run `f` over every shard — via a scoped thread pool when the model
+    /// is large enough for the fork/join to pay off, serially otherwise.
+    /// Shards are independent (disjoint θ ranges), so scheduling order
+    /// cannot affect results.
+    fn for_each_shard<F: Fn(&mut Shard) + Sync>(&mut self, f: F) {
+        let slice_len = self.spec.n_params / self.shards.len();
+        if self.shards.len() > 1 && slice_len >= PAR_MIN_SHARD_PARAMS {
+            std::thread::scope(|scope| {
+                // Each spawned closure must own its captures for `'scope`:
+                // copy a shared reference to `f` (F: Sync) and move the
+                // per-shard `&mut` in — a non-`move` closure would only
+                // reborrow the loop-local binding, which dies each
+                // iteration.
+                let f = &f;
+                for shard in self.shards.iter_mut() {
+                    scope.spawn(move || f(shard));
+                }
+            });
+        } else {
+            for shard in self.shards.iter_mut() {
+                f(shard);
+            }
+        }
+    }
+
+    // Deliberately mirrors `ParameterServer::advance_clock` line for line:
+    // the flat server stays the reference implementation, and the
+    // `prop_sharded_server_matches_unsharded` property test fails if the
+    // two copies of the epoch/staleness bookkeeping ever diverge.
+    fn advance_clock(&mut self, vclock: &[Timestamp], out: &mut PushOutcome) {
+        self.ts += 1;
+        self.updates += 1;
+        let rec = self.staleness.record(self.ts, vclock);
+        out.updated = true;
+        out.avg_staleness = Some(rec.avg_staleness);
+        let before = self.samples_applied / self.cfg.samples_per_epoch;
+        self.samples_applied += (vclock.len() * self.cfg.mu) as u64;
+        let after = self.samples_applied / self.cfg.samples_per_epoch;
+        if after > before {
+            self.epochs_completed = after as usize;
+            out.epoch_completed = Some(self.epochs_completed);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::protocol::Protocol;
+    use crate::coordinator::server::ParameterServer;
+    use crate::params::lr::{Modulation, Schedule};
+    use crate::params::optimizer::OptimizerKind;
+
+    fn cfg(protocol: Protocol, lambda: usize, shards: usize) -> ServerConfig {
+        ServerConfig {
+            protocol,
+            mu: 4,
+            lambda,
+            samples_per_epoch: 16,
+            target_epochs: 2,
+            shards,
+        }
+    }
+
+    fn lr() -> LrPolicy {
+        LrPolicy::new(Schedule::constant(1.0), Modulation::None, 128)
+    }
+
+    #[test]
+    fn spec_ranges_partition_the_vector() {
+        for (n, s) in [(10, 4), (7, 3), (5, 8), (0, 3), (12, 1)] {
+            let spec = ShardSpec::new(n, s);
+            let mut covered = 0;
+            let mut next = 0;
+            for r in spec.ranges() {
+                assert_eq!(r.start, next, "ranges must be contiguous");
+                covered += r.len();
+                next = r.end;
+            }
+            assert_eq!(covered, n);
+            // balanced: lengths differ by at most one
+            let lens: Vec<usize> = spec.ranges().map(|r| r.len()).collect();
+            let (min, max) = (lens.iter().min().unwrap(), lens.iter().max().unwrap());
+            assert!(max - min <= 1, "{lens:?}");
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let spec = ShardSpec::new(4, 0);
+        assert_eq!(spec.shards, 1);
+        assert_eq!(spec.range(0), 0..4);
+    }
+
+    #[test]
+    fn single_shard_matches_unsharded_bitwise() {
+        let theta0 = FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0, 0.25]);
+        let mut reference = ParameterServer::new(
+            cfg(Protocol::NSoftsync { n: 1 }, 2, 1),
+            theta0.clone(),
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, 5),
+            lr(),
+        );
+        let mut sharded = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 1 }, 2, 1),
+            theta0,
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, 5),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![0.3, -0.1, 0.2, 0.05, -0.4]);
+        for i in 0..8 {
+            let ts = reference.timestamp();
+            let a = reference.push_gradient(i % 2, &g, ts).unwrap();
+            let b = sharded.push_gradient(i % 2, &g, ts).unwrap();
+            assert_eq!(a.updated, b.updated);
+            assert_eq!(a.avg_staleness, b.avg_staleness);
+            assert_eq!(a.epoch_completed, b.epoch_completed);
+        }
+        assert_eq!(reference.weights().0.data, sharded.assemble_weights().data);
+        assert_eq!(reference.timestamp(), sharded.timestamp());
+        assert_eq!(reference.samples_applied(), sharded.samples_applied());
+    }
+
+    #[test]
+    fn many_shards_match_unsharded() {
+        for shards in [2usize, 3, 4, 7] {
+            let dim = 11;
+            let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 * 0.5 - 2.0).collect());
+            let mut reference = ParameterServer::new(
+                cfg(Protocol::Async, 3, 1),
+                theta0.clone(),
+                Optimizer::new(OptimizerKind::Adagrad { eps: 1e-8 }, 1e-3, dim),
+                lr(),
+            );
+            let mut sharded = ShardedServer::new(
+                cfg(Protocol::Async, 3, shards),
+                theta0,
+                Optimizer::new(OptimizerKind::Adagrad { eps: 1e-8 }, 1e-3, dim),
+                lr(),
+            );
+            for i in 0..9 {
+                let g =
+                    FlatVec::from_vec((0..dim).map(|d| ((i + d) % 5) as f32 * 0.1).collect());
+                let ts = reference.timestamp();
+                reference.push_gradient(i % 3, &g, ts).unwrap();
+                sharded.push_gradient(i % 3, &g, ts).unwrap();
+            }
+            let want = reference.weights().0;
+            let got = sharded.assemble_weights();
+            for d in 0..dim {
+                assert!(
+                    (want.data[d] - got.data[d]).abs() <= 1e-6,
+                    "S={shards} dim {d}: {} vs {}",
+                    got.data[d],
+                    want.data[d]
+                );
+            }
+            assert_eq!(sharded.shard_updates(), vec![sharded.updates; shards]);
+        }
+    }
+
+    #[test]
+    fn parallel_apply_path_matches_unsharded() {
+        // Large enough that every shard slice crosses PAR_MIN_SHARD_PARAMS
+        // so applyUpdate actually runs on scoped threads; results must
+        // still match the flat server exactly.
+        let dim = 4 * PAR_MIN_SHARD_PARAMS + 17;
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| (i % 13) as f32 * 0.1 - 0.6).collect());
+        let mut reference = ParameterServer::new(
+            cfg(Protocol::Async, 2, 1),
+            theta0.clone(),
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, dim),
+            lr(),
+        );
+        let mut sharded = ShardedServer::new(
+            cfg(Protocol::Async, 2, 4),
+            theta0,
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, dim),
+            lr(),
+        );
+        let g = FlatVec::from_vec((0..dim).map(|i| ((i % 11) as f32 - 5.0) * 0.01).collect());
+        for i in 0..5 {
+            let ts = reference.timestamp();
+            let a = reference.push_gradient(i % 2, &g, ts).unwrap();
+            let b = sharded.push_gradient(i % 2, &g, ts).unwrap();
+            assert_eq!(a.updated, b.updated);
+        }
+        assert_eq!(reference.weights().0.data, sharded.assemble_weights().data);
+        assert_eq!(sharded.shard_updates(), vec![5; 4]);
+    }
+
+    #[test]
+    fn hardsync_rejects_double_push_at_any_shard_count() {
+        let mut s = ShardedServer::new(
+            cfg(Protocol::Hardsync, 2, 3),
+            FlatVec::zeros(6),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 6),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 6]);
+        s.push_gradient(0, &g, 0).unwrap();
+        let err = s.push_gradient(0, &g, 0).unwrap_err();
+        assert!(err.to_string().contains("twice"), "{err}");
+        // the round still completes once the other learner arrives
+        let out = s.push_gradient(1, &g, 0).unwrap();
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+    }
+
+    #[test]
+    fn rejects_out_of_range_learner() {
+        let mut s = ShardedServer::new(
+            cfg(Protocol::Async, 2, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let g = FlatVec::zeros(4);
+        let err = s.push_gradient(2, &g, 0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert_eq!(s.updates, 0);
+    }
+
+    #[test]
+    fn per_gradient_modulation_matches_unsharded() {
+        let mk = |shards| {
+            let c = ServerConfig {
+                protocol: Protocol::NSoftsync { n: 2 },
+                mu: 4,
+                lambda: 2,
+                samples_per_epoch: 1_000_000,
+                target_epochs: 100,
+                shards,
+            };
+            ShardedServer::new(
+                c,
+                FlatVec::zeros(3),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 3),
+                LrPolicy::new(Schedule::constant(1.0), Modulation::PerGradient, 128),
+            )
+        };
+        let mut a = mk(1);
+        let mut b = mk(3);
+        let g = FlatVec::from_vec(vec![1.0, 0.5, -0.5]);
+        for _ in 0..4 {
+            let ts = a.timestamp();
+            a.push_gradient(0, &g, ts).unwrap();
+            b.push_gradient(0, &g, ts).unwrap();
+        }
+        // a σ = 3 push is damped identically on both
+        let stale_ts = a.timestamp() - 3;
+        a.push_gradient(1, &g, stale_ts).unwrap();
+        b.push_gradient(1, &g, stale_ts).unwrap();
+        assert_eq!(a.assemble_weights().data, b.assemble_weights().data);
+    }
+
+    #[test]
+    fn timing_only_matches_numeric_clocking() {
+        let mut numeric = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 2 }, 2, 4),
+            FlatVec::zeros(8),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 8),
+            lr(),
+        );
+        let mut timing = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 2 }, 2, 4),
+            FlatVec::zeros(0),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+            lr(),
+        );
+        let g = FlatVec::zeros(8);
+        for i in 0..6 {
+            let a = numeric.push_gradient(i % 2, &g, numeric.timestamp()).unwrap();
+            let b = timing.push_gradient_timing_only(i % 2, timing.timestamp());
+            assert_eq!(a.updated, b.updated);
+            assert_eq!(a.avg_staleness, b.avg_staleness);
+        }
+        assert_eq!(numeric.timestamp(), timing.timestamp());
+        assert_eq!(numeric.shard_updates(), timing.shard_updates());
+    }
+}

@@ -4,12 +4,20 @@
 //!   nodes are co-located with the learners they serve; each non-root
 //!   node averages its children's gradients and relays the average to its
 //!   parent; the root applies the weight update and weights flow back
-//!   down the tree. Unlike a sharded PS (DistBelief/Adam), all weights
-//!   share one timestamp — which is what keeps the staleness analysis
-//!   tractable (the paper's key architectural distinction).
+//!   down the tree. Unlike an independently-clocked sharded PS
+//!   (DistBelief/Adam), all weights share one timestamp — which is what
+//!   keeps the staleness analysis tractable (the paper's key
+//!   architectural distinction).
 //! * **Rudra-adv\***: additionally broadcasts weights down a tree formed
 //!   *within the learners* and decouples push/pull into background
 //!   communication threads (see [`crate::coordinator::buffer`]).
+//!
+//! The **root tier** may itself be sharded
+//! ([`crate::coordinator::shard`]): `root_shards` contiguous parameter
+//! shards, each with its own network endpoint and applyUpdate loop. The
+//! shards advance in lockstep with one scalar timestamp, so — unlike
+//! DistBelief — sharding here relieves the §3.3 bottleneck *without*
+//! giving up the single-clock staleness analysis.
 
 /// System architecture selector (Tables 1 and 4).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +48,8 @@ impl Arch {
 
 /// The aggregation tree: learners are grouped under leaf PS nodes of
 /// fan-in `fanout` (one leaf per compute node in the paper: leaves are
-/// co-located with their learners).
+/// co-located with their learners), topped by a root tier of
+/// `root_shards` parameter shards.
 #[derive(Debug, Clone)]
 pub struct PsTree {
     pub lambda: usize,
@@ -48,14 +57,28 @@ pub struct PsTree {
     /// leaf index for each learner.
     pub leaf_of: Vec<usize>,
     pub n_leaves: usize,
+    /// Parameter shards at the root tier (1 = the paper's flat root).
+    pub root_shards: usize,
 }
 
 impl PsTree {
     pub fn new(lambda: usize, fanout: usize) -> PsTree {
+        Self::with_shards(lambda, fanout, 1)
+    }
+
+    /// Tree with a sharded root tier: pushes/pulls stripe across
+    /// `root_shards` independent root endpoints.
+    pub fn with_shards(lambda: usize, fanout: usize, root_shards: usize) -> PsTree {
         assert!(fanout >= 1);
         let n_leaves = lambda.div_ceil(fanout);
         let leaf_of = (0..lambda).map(|l| l / fanout).collect();
-        PsTree { lambda, fanout, leaf_of, n_leaves }
+        PsTree { lambda, fanout, leaf_of, n_leaves, root_shards: root_shards.max(1) }
+    }
+
+    /// Fabric endpoint indices of the root shards, given the index of the
+    /// first root endpoint (engines place them after the compute nodes).
+    pub fn shard_endpoints(&self, first: usize) -> Vec<usize> {
+        (first..first + self.root_shards).collect()
     }
 
     /// Learners under leaf `leaf`.
@@ -111,6 +134,20 @@ impl LeafAggregator {
 mod tests {
     use super::*;
     use crate::params::FlatVec;
+
+    #[test]
+    fn sharded_root_tier() {
+        let t = PsTree::new(8, 4);
+        assert_eq!(t.root_shards, 1);
+        assert_eq!(t.shard_endpoints(2), vec![2]);
+        let t = PsTree::with_shards(8, 4, 4);
+        assert_eq!(t.root_shards, 4);
+        assert_eq!(t.shard_endpoints(2), vec![2, 3, 4, 5]);
+        // leaf routing is independent of the root tier
+        assert_eq!(t.n_leaves, 2);
+        // zero clamps to the flat root
+        assert_eq!(PsTree::with_shards(4, 2, 0).root_shards, 1);
+    }
 
     #[test]
     fn tree_shapes() {

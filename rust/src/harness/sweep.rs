@@ -70,6 +70,7 @@ impl<'a> Sweep<'a> {
             cluster: ClusterSpec::p775(),
             compute: LearnerCompute::p775(),
             model: self.ws.cnn_cost(),
+            shards: cfg.shards,
             eval_each_epoch: self.eval_each_epoch,
             max_updates: None,
         };
@@ -166,6 +167,7 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         cluster: ClusterSpec::p775(),
         compute: LearnerCompute::p775(),
         model: sweep.ws.cnn_cost(),
+        shards: cfg.shards,
         eval_each_epoch: false,
         max_updates: None,
     };

@@ -29,6 +29,7 @@ const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing> [--flags]
   timing                    timing-only simulation at paper scale
 common flags: --protocol hardsync|async|<n>-softsync  --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
+              --shards S (root parameter shards; 1 = flat server)
 ";
 
 fn main() {
@@ -124,6 +125,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         lambda: cfg.lambda,
         epochs: cfg.epochs,
         samples_per_epoch: train.n as u64,
+        shards: cfg.shards,
         log_every: args.u64_or("log-every", 50)?,
     };
     let ws = Workspace::open_default()?;
@@ -142,6 +144,9 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         result.staleness.overall_avg(),
         result.staleness.max
     );
+    if cfg.shards > 1 {
+        println!("server: {}", rudra::stats::shard_update_summary(&result.shard_updates));
+    }
 
     if !args.flag("no-eval") {
         let eval = ws.cnn_eval()?;
@@ -216,7 +221,8 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
         other => anyhow::bail!("unknown workload {other:?}"),
     };
     let epochs = args.usize_or("epochs", cfg.epochs)?;
-    let sim_cfg = SimConfig::paper(cfg.protocol, cfg.arch, cfg.mu, cfg.lambda, epochs, model);
+    let mut sim_cfg = SimConfig::paper(cfg.protocol, cfg.arch, cfg.mu, cfg.lambda, epochs, model);
+    sim_cfg.shards = cfg.shards;
     let r = run_sim(
         &sim_cfg,
         rudra::params::FlatVec::zeros(0),
@@ -235,6 +241,9 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
         r.overlap.overlap_pct(),
         r.events_processed
     );
+    if cfg.shards > 1 {
+        println!("server: {}", rudra::stats::shard_update_summary(&r.shard_updates));
+    }
     let _ = Protocol::Hardsync; // referenced for doc completeness
     Ok(())
 }

@@ -149,6 +149,42 @@ impl Fabric {
         ingress_done + self.spec.latency
     }
 
+    /// Striped push to a sharded server (§3.3 root-bottleneck fix): the
+    /// message is split evenly across the shard endpoints, the sender's
+    /// egress carries the slices back to back, and each shard's ingress
+    /// serves only its slice. Returns the time the *last* slice lands —
+    /// the moment the full gradient is folded. With one shard endpoint
+    /// this is exactly [`Fabric::send`].
+    pub fn send_to_shards(&mut self, at: f64, src: usize, shard_eps: &[usize], bytes: f64) -> f64 {
+        assert!(!shard_eps.is_empty(), "need at least one shard endpoint");
+        if shard_eps.len() == 1 {
+            return self.send(at, src, shard_eps[0], bytes);
+        }
+        let per = bytes / shard_eps.len() as f64;
+        let mut done = f64::NEG_INFINITY;
+        for &e in shard_eps {
+            done = done.max(self.send(at, src, e, per));
+        }
+        done
+    }
+
+    /// Striped pull/broadcast from a sharded server: each shard endpoint
+    /// sends its slice of the weights; the payload is complete when the
+    /// last slice arrives at `dst`. With one shard endpoint this is
+    /// exactly [`Fabric::send`].
+    pub fn send_from_shards(&mut self, at: f64, shard_eps: &[usize], dst: usize, bytes: f64) -> f64 {
+        assert!(!shard_eps.is_empty(), "need at least one shard endpoint");
+        if shard_eps.len() == 1 {
+            return self.send(at, shard_eps[0], dst, bytes);
+        }
+        let per = bytes / shard_eps.len() as f64;
+        let mut done = f64::NEG_INFINITY;
+        for &e in shard_eps {
+            done = done.max(self.send(at, e, dst, per));
+        }
+        done
+    }
+
     /// Ingress utilization of endpoint `e` over `[0, horizon]`.
     pub fn ingress_utilization(&self, e: usize, horizon: f64) -> f64 {
         if horizon <= 0.0 {
@@ -228,6 +264,60 @@ mod tests {
         let a1 = f2.send(0.0, 1, 0, 300.0e6);
         let a2 = f2.send(0.0, 0, 2, 300.0e6);
         assert!(a2 < a1 + dur - 1e-9);
+    }
+
+    #[test]
+    fn striped_send_with_one_shard_is_plain_send() {
+        let mut a = Fabric::new(ClusterSpec::p775(), 3);
+        let mut b = Fabric::new(ClusterSpec::p775(), 3);
+        // interleave some traffic so endpoint state is non-trivial
+        a.send(0.0, 1, 2, 1.0e6);
+        b.send(0.0, 1, 2, 1.0e6);
+        let ta = a.send_to_shards(0.5, 1, &[0], 300.0e6);
+        let tb = b.send(0.5, 1, 0, 300.0e6);
+        assert_eq!(ta, tb);
+        let ta = a.send_from_shards(1.0, &[0], 2, 300.0e6);
+        let tb = b.send(1.0, 0, 2, 300.0e6);
+        assert_eq!(ta, tb);
+    }
+
+    #[test]
+    fn sharding_relieves_the_root_bottleneck() {
+        // The §3.3 adversarial wave: 16 learners push 300 MB at once. One
+        // root endpoint serializes the full 4.8 GB; four shard endpoints
+        // each serialize only a quarter of it.
+        let flat_last = {
+            let mut f = Fabric::new(ClusterSpec::p775(), 17);
+            let mut last = 0.0f64;
+            for src in 1..=16 {
+                last = last.max(f.send_to_shards(0.0, src, &[0], 300.0e6));
+            }
+            last
+        };
+        let sharded_last = {
+            let mut f = Fabric::new(ClusterSpec::p775(), 20);
+            let shard_eps = [16, 17, 18, 19];
+            let mut last = 0.0f64;
+            for src in 0..16 {
+                last = last.max(f.send_to_shards(0.0, src, &shard_eps, 300.0e6));
+            }
+            last
+        };
+        assert!(
+            sharded_last < flat_last * 0.5,
+            "4 shards should cut the root stall well below half: {sharded_last} vs {flat_last}"
+        );
+    }
+
+    #[test]
+    fn striped_pull_completes_when_last_slice_lands() {
+        let mut f = Fabric::new(ClusterSpec::p775(), 4);
+        // preload shard endpoint 2's egress so its slice arrives late
+        f.send(0.0, 2, 3, 300.0e6);
+        let t = f.send_from_shards(0.0, &[1, 2], 0, 100.0e6);
+        let mut g = Fabric::new(ClusterSpec::p775(), 4);
+        let unloaded = g.send_from_shards(0.0, &[1, 2], 0, 100.0e6);
+        assert!(t > unloaded, "busy shard must delay completion: {t} vs {unloaded}");
     }
 
     #[test]

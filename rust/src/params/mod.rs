@@ -66,8 +66,15 @@ impl FlatVec {
 
     /// `self += alpha * other` (the PS applyUpdate hot loop).
     pub fn axpy(&mut self, alpha: f32, other: &FlatVec) {
+        self.axpy_slice(alpha, &other.data);
+    }
+
+    /// `self += alpha * other` over a raw slice — the sharded server folds
+    /// each shard's contiguous gradient range without materializing a
+    /// per-shard `FlatVec`.
+    pub fn axpy_slice(&mut self, alpha: f32, other: &[f32]) {
         debug_assert_eq!(self.len(), other.len());
-        for (a, b) in self.data.iter_mut().zip(other.data.iter()) {
+        for (a, b) in self.data.iter_mut().zip(other.iter()) {
             *a += alpha * b;
         }
     }

@@ -102,3 +102,33 @@ impl<'a> Evaluator for TokenEvaluator<'a> {
         Ok((loss_sum / n as f64, 100.0 * (1.0 - correct / n as f64)))
     }
 }
+
+/// One-line report of per-shard applyUpdate counts from a sharded-server
+/// run. Lockstep shards render compactly (`4 shards × 120 updates`); any
+/// divergence — which would indicate a routing bug — is spelled out in
+/// full so it cannot hide in a summary.
+pub fn shard_update_summary(shard_updates: &[u64]) -> String {
+    match (shard_updates.iter().min(), shard_updates.iter().max()) {
+        (Some(min), Some(max)) if min == max => {
+            format!("{} shards × {} updates", shard_updates.len(), max)
+        }
+        (Some(_), Some(_)) => {
+            format!("{} shards, DIVERGENT updates {:?}", shard_updates.len(), shard_updates)
+        }
+        _ => "0 shards".to_string(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_summary_lockstep_and_divergent() {
+        assert_eq!(shard_update_summary(&[120, 120, 120, 120]), "4 shards × 120 updates");
+        assert_eq!(shard_update_summary(&[7]), "1 shards × 7 updates");
+        let s = shard_update_summary(&[3, 4]);
+        assert!(s.contains("DIVERGENT") && s.contains("[3, 4]"), "{s}");
+        assert_eq!(shard_update_summary(&[]), "0 shards");
+    }
+}

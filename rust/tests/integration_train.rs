@@ -102,6 +102,7 @@ fn live_engine_trains_below_chance() {
         lambda,
         epochs: 2,
         samples_per_epoch: ws.train.n as u64,
+        shards: 1,
         log_every: 0,
     };
     let theta0 = ws.cnn_init().unwrap();

@@ -6,6 +6,7 @@
 use rudra::coordinator::clock::StalenessStats;
 use rudra::coordinator::protocol::{Accumulator, Protocol};
 use rudra::coordinator::server::{ParameterServer, ServerConfig};
+use rudra::coordinator::shard::ShardedServer;
 use rudra::coordinator::tree::PsTree;
 use rudra::netsim::cluster::Endpoint;
 use rudra::netsim::event::EventQueue;
@@ -150,6 +151,7 @@ fn prop_server_state_machine() {
                 lambda,
                 samples_per_epoch: 32,
                 target_epochs: usize::MAX, // never auto-done in this test
+                shards: 1,
             };
             let mut server = ParameterServer::new(
                 cfg,
@@ -201,6 +203,112 @@ fn prop_server_state_machine() {
                 ));
             }
             let _ = folded;
+            Ok(())
+        },
+    );
+}
+
+/// Sharded server ≡ flat server: for any shard count S, any of the three
+/// protocols, any optimizer, and any valid push sequence, the
+/// [`ShardedServer`] produces the same update/epoch outcomes, the same
+/// timestamps, and weights equal within 1e-6 of the unsharded
+/// [`ParameterServer`] — and its per-shard update counters stay in
+/// lockstep with the aggregate count.
+#[test]
+fn prop_sharded_server_matches_unsharded() {
+    check(
+        "sharded_server_equivalence",
+        11,
+        80,
+        |r| {
+            let lambda = r.below(6) as usize + 1;
+            let proto = match r.below(3) {
+                0 => Protocol::Hardsync,
+                1 => Protocol::NSoftsync { n: r.below(lambda as u64 + 2) as usize + 1 },
+                _ => Protocol::Async,
+            };
+            let shards = r.below(8) as usize + 1;
+            let dim = r.below(24) as usize + 1;
+            let opt = r.below(3);
+            let modulation = r.below(3);
+            let pushes = r.below(40) as usize + lambda;
+            (lambda, proto, shards, dim, opt, modulation, pushes, r.next_u64())
+        },
+        |&(lambda, proto, shards, dim, opt, modulation, pushes, seed)| {
+            let kind = match opt {
+                0 => OptimizerKind::Sgd,
+                1 => OptimizerKind::Momentum { momentum: 0.9 },
+                _ => OptimizerKind::Adagrad { eps: 1e-8 },
+            };
+            let modulation = match modulation {
+                0 => Modulation::None,
+                1 => Modulation::StalenessReciprocal,
+                _ => Modulation::PerGradient,
+            };
+            let mk_cfg = |s| ServerConfig {
+                protocol: proto,
+                mu: 4,
+                lambda,
+                samples_per_epoch: 64,
+                target_epochs: usize::MAX,
+                shards: s,
+            };
+            let theta0 = FlatVec::from_vec((0..dim).map(|i| (i % 7) as f32 * 0.25 - 0.75).collect());
+            let lr = LrPolicy::new(Schedule::constant(0.05), modulation, 128);
+            let mut flat = ParameterServer::new(
+                mk_cfg(1),
+                theta0.clone(),
+                Optimizer::new(kind, 1e-4, dim),
+                lr.clone(),
+            );
+            let mut sharded = ShardedServer::new(
+                mk_cfg(shards),
+                theta0,
+                Optimizer::new(kind, 1e-4, dim),
+                lr,
+            );
+            let mut rng = Rng::new(seed);
+            let mut order: Vec<usize> = (0..lambda).collect();
+            for p in 0..pushes {
+                let learner = if proto.is_barrier() {
+                    if p % lambda == 0 {
+                        rng.shuffle(&mut order);
+                    }
+                    order[p % lambda]
+                } else {
+                    rng.usize_below(lambda)
+                };
+                let g = FlatVec::from_vec(
+                    (0..dim).map(|_| (rng.f64() * 0.4 - 0.2) as f32).collect(),
+                );
+                // fresh or slightly stale pull (never ahead of the clock)
+                let ts = flat.timestamp().saturating_sub(rng.below(3));
+                let a = flat.push_gradient(learner, &g, ts).map_err(|e| e.to_string())?;
+                let b = sharded.push_gradient(learner, &g, ts).map_err(|e| e.to_string())?;
+                if a.updated != b.updated || a.epoch_completed != b.epoch_completed {
+                    return Err(format!("outcome diverged at push {p}"));
+                }
+                if flat.timestamp() != sharded.timestamp() {
+                    return Err("timestamps diverged".into());
+                }
+            }
+            let want = flat.weights().0;
+            let got = sharded.assemble_weights();
+            for d in 0..dim {
+                if (want.data[d] - got.data[d]).abs() > 1e-6 {
+                    return Err(format!(
+                        "dim {d}: sharded {} vs flat {} (S = {shards})",
+                        got.data[d], want.data[d]
+                    ));
+                }
+            }
+            if sharded.shard_updates() != vec![sharded.updates; shards] {
+                return Err(format!(
+                    "shard counters out of lockstep: {:?} vs {}",
+                    sharded.shard_updates(),
+                    sharded.updates
+                ));
+            }
             Ok(())
         },
     );
