@@ -56,6 +56,9 @@ fn main() {
             shards: cfg.shards,
             eval_each_epoch: false,
             max_updates: None,
+            churn: cfg.churn.clone(),
+            rescale: cfg.rescale,
+            checkpoint_every_updates: cfg.checkpoint_every,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

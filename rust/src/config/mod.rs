@@ -11,6 +11,8 @@ use std::path::Path;
 
 use crate::coordinator::protocol::Protocol;
 use crate::coordinator::tree::Arch;
+use crate::elastic::membership::ChurnSchedule;
+use crate::elastic::rescaler::RescalePolicy;
 use crate::params::lr::Modulation;
 use crate::params::optimizer::OptimizerKind;
 use crate::util::cli::Args;
@@ -61,6 +63,19 @@ pub struct RunConfig {
     /// ([`crate::coordinator::shard`]). Protocol semantics, staleness,
     /// and fixed-seed S = 1 trajectories are unchanged.
     pub shards: usize,
+    /// Elastic membership churn (JSON key / flag `churn`): a DSL string
+    /// of deterministic events and/or a random failure process, e.g.
+    /// `"kill:3@10,rejoin:3@25,rate:2,downtime:30"` — see
+    /// [`ChurnSchedule::parse`]. `"none"` (the default) is churn-free.
+    pub churn: ChurnSchedule,
+    /// Checkpoint interval in weight updates (JSON key / flag
+    /// `checkpoint_every`): capture the full server + RNG state every N
+    /// updates ([`crate::elastic::checkpoint`]). 0 = off.
+    pub checkpoint_every: u64,
+    /// μ·λ rescale policy on membership changes (JSON key / flag
+    /// `rescale`): `"none"` keeps μ fixed, `"mulambda"` holds
+    /// μ·λ_active ≈ μ₀·λ₀ live ([`crate::elastic::rescaler`]).
+    pub rescale: RescalePolicy,
 }
 
 impl Default for RunConfig {
@@ -82,6 +97,9 @@ impl Default for RunConfig {
             warmstart_epochs: 0,
             eval_each_epoch: true,
             shards: 1,
+            churn: ChurnSchedule::none(),
+            checkpoint_every: 0,
+            rescale: RescalePolicy::None,
         }
     }
 }
@@ -108,6 +126,9 @@ impl RunConfig {
                 "warmstart_epochs" => self.warmstart_epochs = v.as_usize()?,
                 "eval_each_epoch" => self.eval_each_epoch = v.as_bool()?,
                 "shards" => self.shards = v.as_usize()?,
+                "churn" => self.churn = ChurnSchedule::parse(v.as_str()?)?,
+                "checkpoint_every" => self.checkpoint_every = v.as_usize()? as u64,
+                "rescale" => self.rescale = RescalePolicy::parse(v.as_str()?)?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -142,6 +163,13 @@ impl RunConfig {
         }
         self.warmstart_epochs = args.usize_or("warmstart", self.warmstart_epochs)?;
         self.shards = args.usize_or("shards", self.shards)?;
+        if let Some(v) = args.get("churn") {
+            self.churn = ChurnSchedule::parse(v)?;
+        }
+        self.checkpoint_every = args.u64_or("checkpoint-every", self.checkpoint_every)?;
+        if let Some(v) = args.get("rescale") {
+            self.rescale = RescalePolicy::parse(v)?;
+        }
         self.validate()
     }
 
@@ -151,6 +179,15 @@ impl RunConfig {
         }
         if self.shards == 0 {
             bail!("shards must be >= 1 (1 = the flat, unsharded server)");
+        }
+        if let Some(max_id) = self.churn.max_learner_id() {
+            if max_id >= self.lambda {
+                bail!(
+                    "churn schedule references learner {max_id}, but lambda = {} \
+                     (ids are 0-based)",
+                    self.lambda
+                );
+            }
         }
         if let Protocol::NSoftsync { n } = self.protocol {
             if n > self.lambda {
@@ -175,33 +212,37 @@ impl RunConfig {
     }
 
     /// Short human label, e.g. `(σ=1, μ=4, λ=30) 1-softsync/base`; a
-    /// sharded root tier appends ` S=<shards>`.
+    /// sharded root tier appends ` S=<shards>`, elastic runs append the
+    /// churn/rescale markers.
     pub fn label(&self) -> String {
         let shard_suffix =
             if self.shards > 1 { format!(" S={}", self.shards) } else { String::new() };
+        let churn_suffix = if self.churn.is_quiet() {
+            String::new()
+        } else {
+            format!(" churn[{}]", self.churn.label())
+        };
+        let rescale_suffix = if self.rescale == RescalePolicy::MuLambdaConst {
+            " μλ=const"
+        } else {
+            ""
+        };
         format!(
-            "(σ̄={}, μ={}, λ={}) {}/{}{}",
+            "(σ̄={}, μ={}, λ={}) {}/{}{}{}{}",
             self.protocol.effective_n(self.lambda),
             self.mu,
             self.lambda,
             self.protocol.label(),
             self.arch.label(),
             shard_suffix,
+            churn_suffix,
+            rescale_suffix,
         )
     }
 }
 
 fn parse_modulation(s: &str) -> Result<Modulation> {
-    match s.trim().to_ascii_lowercase().as_str() {
-        "none" => Ok(Modulation::None),
-        "sqrt" | "hardsync-sqrt" => Ok(Modulation::HardsyncSqrt),
-        "staleness" | "reciprocal" | "1/n" => Ok(Modulation::StalenessReciprocal),
-        "per-gradient" | "pergrad" => Ok(Modulation::PerGradient),
-        "auto" => Ok(Modulation::Auto),
-        other => {
-            bail!("unknown modulation {other:?} (none|sqrt|staleness|per-gradient|auto)")
-        }
-    }
+    Modulation::parse(s)
 }
 
 fn parse_optimizer(s: &str) -> Result<OptimizerKind> {
@@ -267,6 +308,47 @@ mod tests {
         assert!(cfg.label().contains("S=4"), "{}", cfg.label());
         cfg.shards = 1;
         assert!(!cfg.label().contains("S="), "{}", cfg.label());
+    }
+
+    #[test]
+    fn elastic_knobs_layer_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.churn.is_quiet(), "churn-free by default");
+        assert_eq!(cfg.checkpoint_every, 0);
+        assert_eq!(cfg.rescale, RescalePolicy::None);
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"lambda": 8, "churn": "kill:3@10,rejoin:3@25", "checkpoint_every": 50,
+                    "rescale": "mulambda"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.churn.events.len(), 2);
+        assert_eq!(cfg.checkpoint_every, 50);
+        assert_eq!(cfg.rescale, RescalePolicy::MuLambdaConst);
+        // CLI wins over JSON
+        let args = Args::parse(
+            ["--churn", "rate:2,downtime:30", "--rescale", "none", "--checkpoint-every", "10"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.churn.events.is_empty());
+        assert_eq!(cfg.churn.kill_rate_per_ksec, 2.0);
+        assert_eq!(cfg.rescale, RescalePolicy::None);
+        assert_eq!(cfg.checkpoint_every, 10);
+        // schedule ids are validated against λ
+        cfg.churn = ChurnSchedule::parse("kill:9@1").unwrap();
+        assert!(cfg.validate().is_err(), "learner 9 with λ = 8 rejected");
+        cfg.lambda = 10;
+        assert!(cfg.validate().is_ok());
+        // labels surface elasticity
+        cfg.rescale = RescalePolicy::MuLambdaConst;
+        let l = cfg.label();
+        assert!(l.contains("churn[") && l.contains("μλ=const"), "{l}");
     }
 
     #[test]

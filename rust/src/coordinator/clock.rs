@@ -69,6 +69,30 @@ impl StalenessStats {
         }
     }
 
+    /// Serialize for checkpointing: restoring mid-run must resume the
+    /// exact staleness series, not restart it.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("per_update_avg", Json::arr_f64(&self.per_update_avg)),
+            ("histogram", Json::arr_u64(&self.histogram)),
+            ("max", Json::num(self.max as f64)),
+            ("count", Json::num(self.count as f64)),
+            ("sum", Json::num(self.sum)),
+        ])
+    }
+
+    /// Restore from [`StalenessStats::to_json`] output.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<StalenessStats> {
+        Ok(StalenessStats {
+            per_update_avg: j.get("per_update_avg")?.as_f64_vec()?,
+            histogram: j.get("histogram")?.as_u64_vec()?,
+            max: j.get("max")?.as_u64()?,
+            count: j.get("count")?.as_u64()?,
+            sum: j.get("sum")?.as_f64()?,
+        })
+    }
+
     /// Fraction of gradients with σ > `bound` (the paper reports
     /// P[σ > 2n] < 1e-4 for n-softsync).
     pub fn frac_exceeding(&self, bound: u64) -> f64 {
@@ -129,5 +153,24 @@ mod tests {
         s.record(2, &[1, 1]); // σ 0,0
         s.record(4, &[1, 3]); // σ 2,0
         assert!((s.overall_avg() - 0.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn json_roundtrip_resumes_series() {
+        let mut s = StalenessStats::default();
+        s.record(2, &[1]);
+        s.record(5, &[2, 4]);
+        let text = s.to_json().to_string();
+        let mut back =
+            StalenessStats::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.per_update_avg, s.per_update_avg);
+        assert_eq!(back.histogram, s.histogram);
+        assert_eq!(back.max, s.max);
+        assert_eq!(back.count, s.count);
+        assert_eq!(back.overall_avg(), s.overall_avg());
+        // the restored stats keep accumulating correctly
+        back.record(6, &[5]);
+        s.record(6, &[5]);
+        assert_eq!(back.overall_avg(), s.overall_avg());
     }
 }

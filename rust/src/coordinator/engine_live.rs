@@ -13,10 +13,26 @@
 //! replica → pushGradient (blocking send) → pullWeights (blocking recv of
 //! the server's reply, which carries fresh weights only when the
 //! timestamp advanced — the §3.2 pull-skip).
+//!
+//! **Elastic membership** ([`crate::elastic`]): with [`LiveConfig::elastic`]
+//! set, the server loop polls its push channel with a timeout and runs
+//! heartbeat detection — a learner silent past the timeout turns Suspect,
+//! past twice the timeout it is evicted (Dead): its thread gets a
+//! Shutdown, its handle is detached (it may be wedged inside a gradient
+//! computation forever), and the surviving quorum is rescaled via
+//! μ·λ = const. Deterministic churn for tests arrives as
+//! kill/rejoin-after-N-pushes schedules; rejoin spawns a fresh thread from
+//! a provider factory and warm-starts it from the current weights.
+//! Hardsync cannot deadlock on a death: the quota shrink flushes an
+//! already-satisfied barrier round immediately
+//! ([`ShardedServer::set_active_lambda`]).
+//!
+//! [`ParameterServer`]: crate::coordinator::server::ParameterServer
+//! [`ShardedServer::set_active_lambda`]: crate::coordinator::shard::ShardedServer::set_active_lambda
 
 use std::sync::mpsc;
 use std::sync::Arc;
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
@@ -25,9 +41,40 @@ use crate::coordinator::learner::GradProvider;
 use crate::coordinator::protocol::Protocol;
 use crate::coordinator::server::ServerConfig;
 use crate::coordinator::shard::ShardedServer;
+use crate::elastic::membership::{ChurnRecord, Membership, Phase};
+use crate::elastic::rescaler::{RescalePolicy, Rescaler};
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
+
+/// Elastic-membership knobs for the live engine.
+#[derive(Debug, Clone)]
+pub struct LiveElastic {
+    /// Heartbeat timeout: silent past this → Suspect, past 2× → evicted.
+    /// `Duration::ZERO` disables heartbeat detection (scheduled churn
+    /// still runs).
+    pub heartbeat_timeout: Duration,
+    /// Deterministic churn: kill learner `.1` once the server has seen
+    /// `.0` total pushes.
+    pub kill_after_pushes: Vec<(u64, usize)>,
+    /// Deterministic churn: rejoin learner `.1` at `.0` total pushes.
+    /// Requires the provider factory of [`run_live_elastic`].
+    pub rejoin_after_pushes: Vec<(u64, usize)>,
+    /// μ·λ rescaling policy applied on every membership change.
+    pub rescale: RescalePolicy,
+}
+
+impl LiveElastic {
+    /// Heartbeat-only config (no scheduled churn).
+    pub fn heartbeat(timeout: Duration) -> LiveElastic {
+        LiveElastic {
+            heartbeat_timeout: timeout,
+            kill_after_pushes: Vec::new(),
+            rejoin_after_pushes: Vec::new(),
+            rescale: RescalePolicy::MuLambdaConst,
+        }
+    }
+}
 
 /// Live-run configuration.
 #[derive(Debug, Clone)]
@@ -43,6 +90,9 @@ pub struct LiveConfig {
     pub shards: usize,
     /// Log a loss point every this many pushes (0 = never).
     pub log_every: u64,
+    /// Elastic membership (heartbeat detection + churn schedules);
+    /// `None` = the classic fixed-λ run.
+    pub elastic: Option<LiveElastic>,
 }
 
 /// Live-run output.
@@ -57,10 +107,19 @@ pub struct LiveResult {
     pub pushes: u64,
     /// applyUpdate count per shard (length = `LiveConfig::shards`).
     pub shard_updates: Vec<u64>,
+    /// Churn log (wall seconds since run start); empty without churn.
+    pub churn: Vec<ChurnRecord>,
+    /// Death → rejoin downtimes, wall seconds.
+    pub recovery_secs: Vec<f64>,
+    /// λ_active when the run ended.
+    pub final_active_lambda: usize,
 }
 
 enum ToServer {
-    Push { learner: usize, grad: FlatVec, ts: Timestamp, loss: f32 },
+    /// `inc` is the learner's incarnation at spawn time: a straggler push
+    /// from a killed thread must not be credited to (or replied at) the
+    /// learner that later rejoined under the same id.
+    Push { learner: usize, inc: u64, grad: FlatVec, ts: Timestamp, loss: f32 },
 }
 
 enum ToLearner {
@@ -71,6 +130,8 @@ enum ToLearner {
     Shutdown,
 }
 
+type ProviderFactory<'f> = Box<dyn FnMut(usize) -> Box<dyn GradProvider + Send> + 'f>;
+
 /// Run a live training session. `providers` supplies one gradient source
 /// per learner (each moved into its thread).
 pub fn run_live(
@@ -80,7 +141,70 @@ pub fn run_live(
     lr: LrPolicy,
     providers: Vec<Box<dyn GradProvider + Send>>,
 ) -> Result<LiveResult> {
+    run_live_inner(cfg, theta0, optimizer, lr, providers, None)
+}
+
+/// Elastic variant: learners are built from `factory`, which is also used
+/// to warm-restart rejoining learners (the rejoin schedule requires it).
+pub fn run_live_elastic(
+    cfg: &LiveConfig,
+    theta0: FlatVec,
+    optimizer: Optimizer,
+    lr: LrPolicy,
+    mut factory: ProviderFactory<'_>,
+) -> Result<LiveResult> {
+    let providers: Vec<Box<dyn GradProvider + Send>> =
+        (0..cfg.lambda).map(|id| factory(id)).collect();
+    run_live_inner(cfg, theta0, optimizer, lr, providers, Some(factory))
+}
+
+fn spawn_learner(
+    id: usize,
+    inc: u64,
+    mut provider: Box<dyn GradProvider + Send>,
+    mut theta: FlatVec,
+    mut ts: Timestamp,
+    push_tx: mpsc::Sender<ToServer>,
+) -> (std::thread::JoinHandle<Result<()>>, mpsc::Sender<ToLearner>) {
+    let (reply_tx, reply_rx) = mpsc::channel::<ToLearner>();
+    let handle = std::thread::spawn(move || -> Result<()> {
+        loop {
+            let (grad, loss) = provider.compute(id, &theta)?;
+            if push_tx.send(ToServer::Push { learner: id, inc, grad, ts, loss }).is_err() {
+                return Ok(()); // server gone
+            }
+            match reply_rx.recv() {
+                Ok(ToLearner::Weights { theta: fresh, ts: new_ts }) => {
+                    theta.data.copy_from_slice(&fresh.data);
+                    ts = new_ts;
+                }
+                Ok(ToLearner::Unchanged) => {}
+                Ok(ToLearner::Shutdown) | Err(_) => return Ok(()),
+            }
+        }
+    });
+    (handle, reply_tx)
+}
+
+fn run_live_inner(
+    cfg: &LiveConfig,
+    theta0: FlatVec,
+    optimizer: Optimizer,
+    lr: LrPolicy,
+    providers: Vec<Box<dyn GradProvider + Send>>,
+    mut factory: Option<ProviderFactory<'_>>,
+) -> Result<LiveResult> {
     anyhow::ensure!(providers.len() == cfg.lambda, "need one provider per learner");
+    let elastic = cfg.elastic.clone();
+    if let Some(e) = &elastic {
+        anyhow::ensure!(
+            e.rejoin_after_pushes.is_empty() || factory.is_some(),
+            "a rejoin schedule needs the provider factory of run_live_elastic"
+        );
+        for &(_, l) in e.kill_after_pushes.iter().chain(e.rejoin_after_pushes.iter()) {
+            anyhow::ensure!(l < cfg.lambda, "churn schedule references learner {l}, λ = {}", cfg.lambda);
+        }
+    }
     let server_cfg = ServerConfig {
         protocol: cfg.protocol,
         mu: cfg.mu,
@@ -90,36 +214,86 @@ pub fn run_live(
         shards: cfg.shards,
     };
     let mut server = ShardedServer::new(server_cfg, theta0.clone(), optimizer, lr);
+    let rescale_policy =
+        elastic.as_ref().map(|e| e.rescale).unwrap_or(RescalePolicy::None);
+    let rescaler = Rescaler::new(rescale_policy, cfg.mu, cfg.lambda);
+    let mut membership = Membership::new(cfg.lambda);
+
+    // Merge the deterministic churn into one pushes-ordered agenda.
+    #[derive(Clone, Copy)]
+    enum Planned {
+        Kill(usize),
+        Rejoin(usize),
+    }
+    let mut agenda: Vec<(u64, Planned)> = Vec::new();
+    if let Some(e) = &elastic {
+        for &(at, l) in &e.kill_after_pushes {
+            agenda.push((at, Planned::Kill(l)));
+        }
+        for &(at, l) in &e.rejoin_after_pushes {
+            agenda.push((at, Planned::Rejoin(l)));
+        }
+    }
+    agenda.sort_by_key(|(at, _)| *at);
+    let mut agenda_next = 0usize;
 
     let (push_tx, push_rx) = mpsc::channel::<ToServer>();
     let mut reply_txs = Vec::with_capacity(cfg.lambda);
-    let mut handles = Vec::with_capacity(cfg.lambda);
+    let mut handles: Vec<Option<std::thread::JoinHandle<Result<()>>>> =
+        Vec::with_capacity(cfg.lambda);
     let start = Instant::now();
 
-    for (id, mut provider) in providers.into_iter().enumerate() {
-        let (reply_tx, reply_rx) = mpsc::channel::<ToLearner>();
+    // Per-learner incarnation counters (bumped at kill); pushes from a
+    // dead incarnation are dropped even after the id rejoins.
+    let mut incs: Vec<u64> = vec![0; cfg.lambda];
+    for (id, provider) in providers.into_iter().enumerate() {
+        let (handle, reply_tx) =
+            spawn_learner(id, 0, provider, theta0.clone(), 0, push_tx.clone());
+        handles.push(Some(handle));
         reply_txs.push(reply_tx);
-        let push_tx = push_tx.clone();
-        let mut theta = theta0.clone();
-        let mut ts: Timestamp = 0;
-        handles.push(std::thread::spawn(move || -> Result<()> {
-            loop {
-                let (grad, loss) = provider.compute(id, &theta)?;
-                if push_tx.send(ToServer::Push { learner: id, grad, ts, loss }).is_err() {
-                    return Ok(()); // server gone
-                }
-                match reply_rx.recv() {
-                    Ok(ToLearner::Weights { theta: fresh, ts: new_ts }) => {
-                        theta.data.copy_from_slice(&fresh.data);
-                        ts = new_ts;
-                    }
-                    Ok(ToLearner::Unchanged) => {}
-                    Ok(ToLearner::Shutdown) | Err(_) => return Ok(()),
-                }
-            }
-        }));
     }
+    // A rejoin schedule must be able to wire new learners into the push
+    // channel later; otherwise the sender is dropped so the loop can
+    // observe disconnection when every learner exits.
+    let spare_tx = if agenda.iter().any(|(_, p)| matches!(*p, Planned::Rejoin(_))) {
+        Some(push_tx.clone())
+    } else {
+        None
+    };
     drop(push_tx);
+
+    let heartbeat = elastic
+        .as_ref()
+        .map(|e| e.heartbeat_timeout)
+        .filter(|t| !t.is_zero());
+    // Elastic runs always poll (heartbeats and liveness need a clock even
+    // when only scheduled churn is configured).
+    let poll = match (heartbeat, &elastic) {
+        (Some(t), _) => Some((t / 4).max(Duration::from_millis(5))),
+        (None, Some(_)) => Some(Duration::from_millis(25)),
+        (None, None) => None,
+    };
+    // Hard stall guard: an elastic run whose learners all wedge or exit
+    // without the ledger noticing must error out, not hang forever. It
+    // scales with the heartbeat so a long timeout can still evict (the
+    // eviction fires at 2× the heartbeat, well inside 8×); heartbeat-less
+    // runs get a generous fixed window for slow mini-batches.
+    let stall_cap: Duration = match heartbeat {
+        Some(t) => (t * 8).max(Duration::from_secs(60)),
+        None => Duration::from_secs(300),
+    };
+    let mut last_progress = Instant::now();
+    let mut last_heard: Vec<Instant> = vec![start; cfg.lambda];
+    // Learners that have pushed at least once. Never-heard learners get a
+    // longer warm-up grace before suspicion/eviction — the first
+    // mini-batch (plus thread spawn) can legitimately dwarf the
+    // steady-state heartbeat.
+    let mut heard: Vec<bool> = vec![false; cfg.lambda];
+    // Heartbeats are checked on channel-idle timeouts AND periodically on
+    // busy channels (a wedged learner must not hide behind its peers'
+    // steady push traffic).
+    let scan_every = poll.unwrap_or(Duration::from_millis(25));
+    let mut last_scan = Instant::now();
 
     // Parameter-server loop: handle messages one by one ("parameter
     // server handles each incoming message one by one", §3.2).
@@ -129,12 +303,124 @@ pub fn run_live(
     // Hardsync holds replies until the barrier update fires.
     let mut barrier_waiting: Vec<usize> = Vec::new();
 
+    // Membership change: rescale μ, recompute the quota (flushing a
+    // satisfied barrier round via the membership-aware quorum when a
+    // death — `$dead` — triggered the change), release barrier replies.
+    macro_rules! rescale_members {
+        ($dead:expr) => {{
+            let active = membership.active_count();
+            anyhow::ensure!(active > 0, "every learner is dead; training cannot continue");
+            server.set_mu(rescaler.mu_for(active));
+            let dead: Option<usize> = $dead;
+            let flush = match dead {
+                Some(d) => server.remove_learner(d, active)?,
+                None => server.set_active_lambda(active)?,
+            };
+            if let Some(out) = flush {
+                if out.updated && cfg.protocol.is_barrier() {
+                    let new_ts = server.timestamp();
+                    let snap = Arc::new(server.assemble_weights());
+                    for l in barrier_waiting.drain(..) {
+                        let _ = reply_txs[l]
+                            .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
+                    }
+                }
+            }
+        }};
+    }
+
+    macro_rules! kill_learner {
+        ($l:expr) => {{
+            let l: usize = $l;
+            if membership.is_live(l) {
+                membership.kill(l, start.elapsed().as_secs_f64())?;
+                incs[l] += 1;
+                let _ = reply_txs[l].send(ToLearner::Shutdown);
+                // Detach the thread: it may be wedged inside compute()
+                // forever — exactly the failure heartbeats exist to catch.
+                if let Some(h) = handles[l].take() {
+                    drop(h);
+                }
+                barrier_waiting.retain(|&x| x != l);
+                rescale_members!(Some(l));
+            }
+        }};
+    }
+
+    // One heartbeat sweep: suspect the quiet, evict at most the single
+    // stalest over-limit learner, then give every survivor a fresh grace
+    // period (a barrier stalled by one wedged learner makes *everyone*
+    // look silent).
+    macro_rules! heartbeat_scan {
+        () => {{
+            if let Some(timeout) = heartbeat {
+                let now = Instant::now();
+                let mut stalest: Option<(usize, Duration)> = None;
+                for l in 0..cfg.lambda {
+                    if !membership.is_live(l) {
+                        continue;
+                    }
+                    let silent = now.duration_since(last_heard[l]);
+                    let (suspect_after, evict_after) = if heard[l] {
+                        (timeout, timeout * 2)
+                    } else {
+                        (timeout * 5, timeout * 10)
+                    };
+                    if silent > suspect_after && membership.phase(l) != Phase::Suspect {
+                        membership.suspect(l, start.elapsed().as_secs_f64())?;
+                    }
+                    if silent > evict_after
+                        && stalest.map(|(_, s)| silent > s).unwrap_or(true)
+                    {
+                        stalest = Some((l, silent));
+                    }
+                }
+                if let Some((l, _)) = stalest {
+                    kill_learner!(l);
+                    let fresh = Instant::now();
+                    for t in last_heard.iter_mut() {
+                        *t = fresh;
+                    }
+                }
+            }
+        }};
+    }
+
     while !server.done() {
-        let msg = match push_rx.recv() {
-            Ok(m) => m,
-            Err(_) => break, // all learners exited
+        let msg = if let Some(poll) = poll {
+            match push_rx.recv_timeout(poll) {
+                Ok(m) => Some(m),
+                Err(mpsc::RecvTimeoutError::Timeout) => None,
+                Err(mpsc::RecvTimeoutError::Disconnected) => break,
+            }
+        } else {
+            match push_rx.recv() {
+                Ok(m) => Some(m),
+                Err(_) => break, // all learners exited
+            }
         };
-        let ToServer::Push { learner, grad, ts, loss } = msg;
+
+        let Some(msg) = msg else {
+            anyhow::ensure!(
+                last_progress.elapsed() < stall_cap,
+                "live engine stalled: no pushes for {} seconds",
+                stall_cap.as_secs()
+            );
+            last_scan = Instant::now();
+            heartbeat_scan!();
+            continue;
+        };
+
+        let ToServer::Push { learner, inc, grad, ts, loss } = msg;
+        if inc != incs[learner] || !membership.is_live(learner) {
+            continue; // a dead incarnation's final push: message lost
+        }
+        last_heard[learner] = Instant::now();
+        heard[learner] = true;
+        last_progress = Instant::now();
+        if membership.phase(learner) == Phase::Suspect {
+            membership.recover(learner, start.elapsed().as_secs_f64())?;
+        }
         pushes += 1;
         recent_losses.push(loss as f64);
         if cfg.log_every > 0 && pushes % cfg.log_every == 0 {
@@ -164,6 +450,46 @@ pub fn run_live(
                 let _ = reply_txs[learner].send(ToLearner::Unchanged);
             }
         }
+
+        // Deterministic churn agenda (kills/rejoins keyed on push count).
+        while agenda_next < agenda.len() && agenda[agenda_next].0 <= pushes {
+            match agenda[agenda_next].1 {
+                Planned::Kill(l) => kill_learner!(l),
+                Planned::Rejoin(l) => {
+                    if membership.phase(l) == Phase::Dead {
+                        // Warm restart: a fresh provider, current weights,
+                        // current timestamp — the learner re-enters the
+                        // quorum as `Rejoined` under its old id.
+                        let provider = factory.as_mut().expect("validated above")(l);
+                        let tx = spare_tx
+                            .as_ref()
+                            .expect("rejoin schedule keeps a sender")
+                            .clone();
+                        let (handle, reply_tx) = spawn_learner(
+                            l,
+                            incs[l],
+                            provider,
+                            server.assemble_weights(),
+                            server.timestamp(),
+                            tx,
+                        );
+                        handles[l] = Some(handle);
+                        reply_txs[l] = reply_tx;
+                        membership.rejoin(l, start.elapsed().as_secs_f64())?;
+                        last_heard[l] = Instant::now();
+                        heard[l] = false; // fresh warm-up grace for the new thread
+                        rescale_members!(None);
+                    }
+                }
+            }
+            agenda_next += 1;
+        }
+
+        // Busy channels must not starve failure detection.
+        if heartbeat.is_some() && last_scan.elapsed() >= scan_every {
+            last_scan = Instant::now();
+            heartbeat_scan!();
+        }
     }
 
     // Shut everyone down ("parameter server shuts down each learner").
@@ -173,7 +499,7 @@ pub fn run_live(
     // Drain stragglers so their final sends don't block (bounded work:
     // each learner sends at most one more push before seeing Shutdown).
     while let Ok(_msg) = push_rx.try_recv() {}
-    for h in handles {
+    for h in handles.into_iter().flatten() {
         match h.join() {
             Ok(r) => r?,
             Err(_) => anyhow::bail!("learner thread panicked"),
@@ -188,6 +514,9 @@ pub fn run_live(
         loss_log,
         pushes,
         shard_updates: server.shard_updates(),
+        churn: membership.log,
+        recovery_secs: membership.recovery_secs,
+        final_active_lambda: server.active_lambda(),
     })
 }
 
@@ -195,6 +524,7 @@ pub fn run_live(
 mod tests {
     use super::*;
     use crate::coordinator::learner::MockProvider;
+    use crate::elastic::membership::ChurnKind;
     use crate::params::lr::{LrPolicy, Modulation, Schedule};
     use crate::params::optimizer::{Optimizer, OptimizerKind};
 
@@ -204,13 +534,8 @@ mod tests {
             .collect()
     }
 
-    fn run(protocol: Protocol, lambda: usize) -> LiveResult {
-        run_sharded(protocol, lambda, 1)
-    }
-
-    fn run_sharded(protocol: Protocol, lambda: usize, shards: usize) -> LiveResult {
-        let dim = 8;
-        let cfg = LiveConfig {
+    fn base_cfg(protocol: Protocol, lambda: usize, shards: usize) -> LiveConfig {
+        LiveConfig {
             protocol,
             mu: 4,
             lambda,
@@ -218,7 +543,17 @@ mod tests {
             samples_per_epoch: 64,
             shards,
             log_every: 4,
-        };
+            elastic: None,
+        }
+    }
+
+    fn run(protocol: Protocol, lambda: usize) -> LiveResult {
+        run_sharded(protocol, lambda, 1)
+    }
+
+    fn run_sharded(protocol: Protocol, lambda: usize, shards: usize) -> LiveResult {
+        let dim = 8;
+        let cfg = base_cfg(protocol, lambda, shards);
         let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
         let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
         let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
@@ -232,6 +567,8 @@ mod tests {
         assert_eq!(r.staleness.max, 0);
         assert!(r.theta.norm() < 7.0, "moved toward 0: {}", r.theta.norm());
         assert!(!r.loss_log.is_empty());
+        assert!(r.churn.is_empty(), "no churn configured");
+        assert_eq!(r.final_active_lambda, 4);
     }
 
     #[test]
@@ -266,5 +603,107 @@ mod tests {
         // flat result exposes the degenerate single-shard counter
         let flat = run(Protocol::NSoftsync { n: 1 }, 4);
         assert_eq!(flat.shard_updates, vec![flat.updates]);
+    }
+
+    #[test]
+    fn scheduled_kill_and_rejoin_with_rescale() {
+        let dim = 6;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4, 2);
+        cfg.epochs = 4;
+        cfg.samples_per_epoch = 96;
+        cfg.elastic = Some(LiveElastic {
+            heartbeat_timeout: Duration::ZERO,
+            kill_after_pushes: vec![(8, 2)],
+            rejoin_after_pushes: vec![(20, 2)],
+            rescale: RescalePolicy::MuLambdaConst,
+        });
+        let theta0 = FlatVec::from_vec(vec![1.0; dim]);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live_elastic(
+            &cfg,
+            theta0,
+            opt,
+            lr,
+            Box::new(move |_id| {
+                Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>
+            }),
+        )
+        .unwrap();
+        assert!(r.updates > 0);
+        assert!(r.theta.is_finite());
+        let kinds: Vec<ChurnKind> =
+            r.churn.iter().filter(|c| c.learner == 2).map(|c| c.kind).collect();
+        assert_eq!(kinds, vec![ChurnKind::Kill, ChurnKind::Rejoin]);
+        assert_eq!(r.recovery_secs.len(), 1);
+        assert_eq!(r.final_active_lambda, 4, "learner 2 rejoined the quorum");
+    }
+
+    #[test]
+    fn hardsync_survives_scheduled_death() {
+        let dim = 4;
+        let mut cfg = base_cfg(Protocol::Hardsync, 3, 1);
+        cfg.elastic = Some(LiveElastic {
+            heartbeat_timeout: Duration::ZERO,
+            kill_after_pushes: vec![(7, 1)],
+            rejoin_after_pushes: vec![],
+            rescale: RescalePolicy::MuLambdaConst,
+        });
+        let theta0 = FlatVec::from_vec(vec![2.0; dim]);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(3, dim)).unwrap();
+        // the run reaches its target epochs — no barrier deadlock on the
+        // dead learner — and the quorum shrank by exactly one
+        assert!(r.updates > 0);
+        assert_eq!(r.final_active_lambda, 2);
+        assert!(r.churn.iter().any(|c| c.kind == ChurnKind::Kill && c.learner == 1));
+    }
+
+    #[test]
+    fn heartbeat_evicts_wedged_learner() {
+        // Learner 2 wedges forever inside compute() after 2 mini-batches;
+        // under hardsync that stalls every barrier round until the
+        // heartbeat detector evicts it and the quorum flush releases the
+        // survivors.
+        struct Wedging {
+            inner: MockProvider,
+            computes: u64,
+        }
+        impl GradProvider for Wedging {
+            fn compute(&mut self, l: usize, theta: &FlatVec) -> Result<(FlatVec, f32)> {
+                self.computes += 1;
+                if self.computes > 2 {
+                    // long enough to be "forever" relative to the 200 ms
+                    // heartbeat; the thread is detached at eviction and
+                    // dies with the test process
+                    std::thread::sleep(Duration::from_secs(20));
+                }
+                self.inner.compute(l, theta)
+            }
+            fn n_params(&self) -> usize {
+                self.inner.n_params()
+            }
+        }
+        let dim = 4;
+        let mut cfg = base_cfg(Protocol::Hardsync, 3, 1);
+        cfg.epochs = 2;
+        cfg.samples_per_epoch = 48;
+        cfg.elastic = Some(LiveElastic::heartbeat(Duration::from_millis(200)));
+        let mut provs = providers(2, dim);
+        provs.push(Box::new(Wedging { inner: MockProvider::new(vec![0.0; dim]), computes: 0 }));
+        let theta0 = FlatVec::from_vec(vec![1.0; dim]);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, provs).unwrap();
+        assert!(r.updates > 0, "training resumed after the eviction");
+        assert_eq!(r.final_active_lambda, 2, "wedged learner evicted");
+        assert!(
+            r.churn
+                .iter()
+                .any(|c| c.kind == ChurnKind::Kill && c.learner == 2),
+            "churn log records the eviction: {:?}",
+            r.churn
+        );
     }
 }

@@ -52,9 +52,13 @@ use crate::coordinator::protocol::Protocol;
 use crate::coordinator::server::{PushOutcome, ServerConfig};
 use crate::coordinator::shard::ShardedServer;
 use crate::coordinator::tree::{Arch, PsTree};
+use crate::elastic::checkpoint::Checkpoint;
+use crate::elastic::membership::{ChurnAction, ChurnEvent, ChurnRecord, ChurnSchedule, Membership};
+use crate::elastic::rescaler::{RescalePolicy, RescaleRecord, Rescaler};
 use crate::netsim::cluster::{jittered, ClusterSpec, Fabric};
 use crate::netsim::cost::{LearnerCompute, ModelCost};
 use crate::netsim::event::EventQueue;
+use crate::netsim::failure::FailureInjector;
 use crate::netsim::overlap::OverlapTracker;
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
@@ -88,6 +92,16 @@ pub struct SimConfig {
     pub eval_each_epoch: bool,
     /// Hard cap on weight updates (safety valve for huge timing runs).
     pub max_updates: Option<u64>,
+    /// Elastic membership churn: deterministic kill/rejoin/join events
+    /// plus an optional random failure process
+    /// ([`crate::netsim::failure::FailureInjector`]). Quiet by default.
+    pub churn: ChurnSchedule,
+    /// What to do with μ when λ_active changes: keep it fixed, or hold
+    /// μ·λ_active ≈ μ₀·λ₀ ([`crate::elastic::rescaler`]).
+    pub rescale: RescalePolicy,
+    /// Capture a server checkpoint every this many weight updates
+    /// (0 = off); the latest lands in [`SimResult::last_checkpoint`].
+    pub checkpoint_every_updates: u64,
 }
 
 impl SimConfig {
@@ -113,6 +127,9 @@ impl SimConfig {
             shards: 1,
             eval_each_epoch: false,
             max_updates: None,
+            churn: ChurnSchedule::none(),
+            rescale: RescalePolicy::None,
+            checkpoint_every_updates: 0,
         }
     }
 
@@ -136,6 +153,9 @@ pub struct EpochStat {
     pub train_loss: f64,
     pub test_loss: Option<f64>,
     pub test_error_pct: Option<f64>,
+    /// λ_active when the epoch boundary was crossed (equals λ for
+    /// churn-free runs).
+    pub active_lambda: usize,
 }
 
 /// Simulation output.
@@ -157,23 +177,48 @@ pub struct SimResult {
     /// applyUpdate count per root shard (length = `SimConfig::shards`;
     /// lockstep shards make every entry equal `updates`).
     pub shard_updates: Vec<u64>,
+    /// Churn log: every membership transition with its virtual time and
+    /// the active-λ after it (empty for churn-free runs).
+    pub churn: Vec<ChurnRecord>,
+    /// Death → rejoin downtimes, in virtual seconds.
+    pub recovery_secs: Vec<f64>,
+    /// One record per membership change: the (μ, c, LR-factor) the
+    /// rescaler put in force.
+    pub rescales: Vec<RescaleRecord>,
+    /// λ_active when the run ended.
+    pub final_active_lambda: usize,
+    /// Checkpoints captured (per `SimConfig::checkpoint_every_updates`).
+    pub checkpoints_taken: u64,
+    /// The most recent captured checkpoint, if any.
+    pub last_checkpoint: Option<Checkpoint>,
 }
 
-type RelayBatch = Vec<(usize, Option<FlatVec>, Timestamp)>;
+/// (learner, incarnation, gradient, timestamp) — relayed leaf batches
+/// carry the incarnation so a crash invalidates in-flight gradients.
+type RelayBatch = Vec<(usize, u64, Option<FlatVec>, Timestamp)>;
 
+/// Learner-loop events carry the learner's *incarnation* at schedule
+/// time: a kill bumps the slot's incarnation, so every event the dead
+/// incarnation left in flight (its compute completion, its gradient on
+/// the wire, its pending pull) is dropped on arrival instead of acting on
+/// the rejoined learner — message-loss semantics with no queue surgery.
 enum Ev {
     /// Learner finished a mini-batch gradient.
-    ComputeDone { learner: usize },
+    ComputeDone { learner: usize, inc: u64 },
     /// Gradient delivered to the root (Base).
-    PushAtRoot { learner: usize },
+    PushAtRoot { learner: usize, inc: u64 },
     /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*).
-    PushAtLeaf { learner: usize },
+    PushAtLeaf { learner: usize, inc: u64 },
     /// A leaf's aggregated batch arrived at the root.
     RelayAtRoot { leaf: usize, batch: RelayBatch },
     /// A pull completed at the learner.
-    PullDone { learner: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    PullDone { learner: usize, inc: u64, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
     /// Hardsync broadcast delivery.
-    Broadcast { learner: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    Broadcast { learner: usize, inc: u64, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    /// A scheduled membership change (kill/rejoin/join).
+    Churn { event: ChurnEvent },
+    /// The random failure process fires (self re-arming).
+    RandomKill,
 }
 
 struct Slot {
@@ -185,6 +230,8 @@ struct Slot {
     pipe_busy: bool,
     /// Adv*: a finished gradient is waiting for the push pipeline.
     pipe_waiting: bool,
+    /// Bumped on every death; stale-incarnation events are dropped.
+    inc: u64,
     overlap: OverlapTracker,
 }
 
@@ -229,6 +276,25 @@ pub struct SimEngine<'a> {
     epoch_losses: Vec<f64>,
     epoch_stats: Vec<EpochStat>,
     last_epoch_loss: f64,
+    /// Elastic membership ledger (all-Active for churn-free runs).
+    membership: Membership,
+    /// Random-failure process (inert unless the schedule sets a rate).
+    injector: FailureInjector,
+    /// μ·λ = const rescaling (inert under `RescalePolicy::None`).
+    rescaler: Rescaler,
+    /// Per-learner μ currently in force (rescaled on churn).
+    cur_mu: usize,
+    /// Copy of the LR policy for rescale-factor reporting (the server
+    /// owns the live one).
+    lr: LrPolicy,
+    rescale_log: Vec<RescaleRecord>,
+    checkpoints_taken: u64,
+    last_checkpoint: Option<Checkpoint>,
+    /// Whether a RandomKill event is currently scheduled. The process
+    /// disarms instead of re-arming when no learner is live (otherwise an
+    /// all-dead run would spin on self-scheduled kills forever) and is
+    /// re-armed by the next revive.
+    random_armed: bool,
 }
 
 impl<'a> SimEngine<'a> {
@@ -242,6 +308,14 @@ impl<'a> SimEngine<'a> {
     ) -> SimEngine<'a> {
         let numeric = provider.is_some();
         let lambda = cfg.lambda;
+        // Learners whose first scheduled churn action is Join start in the
+        // Joining phase (deferred spot instances); ids are validated
+        // against λ at the top of `run`, so filtering here cannot hide a
+        // bad schedule.
+        let joining: Vec<usize> =
+            cfg.churn.joining_ids().into_iter().filter(|&l| l < lambda).collect();
+        let membership = Membership::with_joining(lambda, &joining)
+            .expect("joining ids pre-filtered to < λ");
         let lpn = cfg.cluster.learners_per_node.max(1);
         let n_nodes = lambda.div_ceil(lpn);
         let tree = PsTree::with_shards(lambda, lpn, cfg.shards);
@@ -254,6 +328,7 @@ impl<'a> SimEngine<'a> {
                 blocked_since: 0.0,
                 pipe_busy: false,
                 pipe_waiting: false,
+                inc: 0,
                 overlap: OverlapTracker::default(),
             })
             .collect();
@@ -269,6 +344,7 @@ impl<'a> SimEngine<'a> {
         let fan = lpn.max(2) as f64;
         let depth = (lambda.max(2) as f64).log(fan).ceil().max(1.0);
         let bcast_period = depth * cfg.cluster.wire_time(cfg.model.bytes);
+        let lr_copy = lr.clone();
         let server = ShardedServer::new(
             cfg.server_config(),
             if numeric { theta0 } else { FlatVec::zeros(0) },
@@ -306,7 +382,27 @@ impl<'a> SimEngine<'a> {
             epoch_losses: Vec::new(),
             epoch_stats: Vec::new(),
             last_epoch_loss: f64::NAN,
+            membership,
+            injector: FailureInjector::new(
+                cfg.churn.kill_rate_per_ksec,
+                cfg.churn.mean_downtime_secs,
+                cfg.seed,
+            ),
+            rescaler: Rescaler::new(cfg.rescale, cfg.mu, cfg.lambda),
+            cur_mu: cfg.mu,
+            lr: lr_copy,
+            rescale_log: Vec::new(),
+            checkpoints_taken: 0,
+            last_checkpoint: None,
+            random_armed: false,
         }
+    }
+
+    /// Whether this run exercises the elastic machinery at all. Quiet
+    /// runs skip the initial membership normalization so churn-free
+    /// trajectories stay bit-identical with pre-elastic builds.
+    fn elastic_enabled(&self) -> bool {
+        !self.cfg.churn.is_quiet() || self.cfg.rescale != RescalePolicy::None
     }
 
     fn node_of(&self, l: usize) -> usize {
@@ -344,8 +440,34 @@ impl<'a> SimEngine<'a> {
              push/pull the barrier requires (the paper pairs adv* with \
              softsync only — Table 4)"
         );
+        if let Some(max_id) = self.cfg.churn.max_learner_id() {
+            anyhow::ensure!(
+                max_id < self.cfg.lambda,
+                "churn schedule references learner {max_id}, but λ = {}",
+                self.cfg.lambda
+            );
+        }
+        anyhow::ensure!(
+            self.membership.active_count() > 0,
+            "churn schedule defers every learner's join: nothing can start"
+        );
+        // Elastic runs normalize the server's quota/μ to the *initial*
+        // active set (deferred joins may make it smaller than λ).
+        if self.elastic_enabled() {
+            self.on_membership_change(0.0, None)?;
+        }
+        for ev in self.cfg.churn.events.clone() {
+            self.q.schedule_at(ev.at, Ev::Churn { event: ev });
+        }
+        if self.injector.enabled() {
+            let dt = self.injector.next_kill_delay();
+            self.q.schedule_in(dt, Ev::RandomKill);
+            self.random_armed = true;
+        }
         for l in 0..self.cfg.lambda {
-            self.start_compute(0.0, l);
+            if self.membership.is_live(l) {
+                self.start_compute(0.0, l);
+            }
         }
         let max_updates = self.cfg.max_updates.unwrap_or(u64::MAX);
         while let Some((now, ev)) = self.q.pop() {
@@ -353,16 +475,18 @@ impl<'a> SimEngine<'a> {
                 break;
             }
             match ev {
-                Ev::ComputeDone { learner } => self.on_compute_done(now, learner)?,
-                Ev::PushAtRoot { learner } => self.on_push_at_root(now, learner)?,
-                Ev::PushAtLeaf { learner } => self.on_push_at_leaf(now, learner)?,
+                Ev::ComputeDone { learner, inc } => self.on_compute_done(now, learner, inc)?,
+                Ev::PushAtRoot { learner, inc } => self.on_push_at_root(now, learner, inc)?,
+                Ev::PushAtLeaf { learner, inc } => self.on_push_at_leaf(now, learner, inc)?,
                 Ev::RelayAtRoot { leaf, batch } => self.on_relay_at_root(now, leaf, batch)?,
-                Ev::PullDone { learner, snapshot, ts } => {
-                    self.on_pull_done(now, learner, snapshot, ts)
+                Ev::PullDone { learner, inc, snapshot, ts } => {
+                    self.on_pull_done(now, learner, inc, snapshot, ts)
                 }
-                Ev::Broadcast { learner, snapshot, ts } => {
-                    self.on_broadcast(now, learner, snapshot, ts)
+                Ev::Broadcast { learner, inc, snapshot, ts } => {
+                    self.on_broadcast(now, learner, inc, snapshot, ts)
                 }
+                Ev::Churn { event } => self.on_churn(now, event)?,
+                Ev::RandomKill => self.on_random_kill(now)?,
             }
         }
 
@@ -395,6 +519,12 @@ impl<'a> SimEngine<'a> {
             final_train_loss,
             events_processed: self.q.processed(),
             shard_updates: self.server.shard_updates(),
+            churn: self.membership.log,
+            recovery_secs: self.membership.recovery_secs,
+            rescales: self.rescale_log,
+            final_active_lambda: self.server.active_lambda(),
+            checkpoints_taken: self.checkpoints_taken,
+            last_checkpoint: self.last_checkpoint,
         })
     }
 
@@ -419,10 +549,14 @@ impl<'a> SimEngine<'a> {
         }
         let dt = jittered(self.base_compute, &self.cfg.cluster, &mut self.rng);
         self.slots[l].compute_cost = dt;
-        self.q.schedule_in(dt, Ev::ComputeDone { learner: l });
+        let inc = self.slots[l].inc;
+        self.q.schedule_in(dt, Ev::ComputeDone { learner: l, inc });
     }
 
-    fn on_compute_done(&mut self, now: f64, l: usize) -> Result<()> {
+    fn on_compute_done(&mut self, now: f64, l: usize, inc: u64) -> Result<()> {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return Ok(()); // the learner died mid-compute; work is lost
+        }
         let cost = self.slots[l].compute_cost;
         self.slots[l].overlap.add_compute(cost);
         self.slots[l].state.steps += 1;
@@ -442,13 +576,13 @@ impl<'a> SimEngine<'a> {
             Arch::Base => {
                 let t =
                     self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, self.bytes);
-                self.q.schedule_at(t, Ev::PushAtRoot { learner: l });
+                self.q.schedule_at(t, Ev::PushAtRoot { learner: l, inc });
             }
             Arch::Adv => {
                 let leaf = self.tree.leaf_of[l];
                 let t =
                     self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
-                self.q.schedule_at(t, Ev::PushAtLeaf { learner: l });
+                self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc });
             }
             Arch::AdvStar => {
                 if self.slots[l].pipe_busy {
@@ -468,14 +602,18 @@ impl<'a> SimEngine<'a> {
     fn start_advstar_push(&mut self, now: f64, l: usize) {
         self.slots[l].pipe_busy = true;
         let leaf = self.tree.leaf_of[l];
+        let inc = self.slots[l].inc;
         let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
-        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l });
+        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc });
     }
 
-    fn on_push_at_root(&mut self, now: f64, l: usize) -> Result<()> {
+    fn on_push_at_root(&mut self, now: f64, l: usize, inc: u64) -> Result<()> {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return Ok(()); // gradient of a dead incarnation is discarded
+        }
         let grad = self.slots[l].pending_grad.take();
         let ts = self.slots[l].pending_ts;
-        self.fold(now, l, grad, ts)?;
+        self.fold(now, l, inc, grad, ts)?;
         if self.cfg.protocol.is_barrier() {
             self.barrier.push(l);
             self.maybe_broadcast(now);
@@ -485,11 +623,14 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
-    fn on_push_at_leaf(&mut self, now: f64, l: usize) -> Result<()> {
+    fn on_push_at_leaf(&mut self, now: f64, l: usize, inc: u64) -> Result<()> {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return Ok(());
+        }
         let leaf = self.tree.leaf_of[l];
         let grad = self.slots[l].pending_grad.take();
         let ts = self.slots[l].pending_ts;
-        self.leaves[leaf].queue.push((l, grad, ts));
+        self.leaves[leaf].queue.push((l, inc, grad, ts));
         self.try_relay(now, leaf);
 
         match self.cfg.arch {
@@ -532,8 +673,8 @@ impl<'a> SimEngine<'a> {
     }
 
     fn on_relay_at_root(&mut self, now: f64, leaf: usize, batch: RelayBatch) -> Result<()> {
-        for (l, grad, ts) in batch {
-            self.fold(now, l, grad, ts)?;
+        for (l, inc, grad, ts) in batch {
+            self.fold(now, l, inc, grad, ts)?;
         }
         self.leaves[leaf].relay_busy = false;
         self.try_relay(now, leaf);
@@ -544,11 +685,30 @@ impl<'a> SimEngine<'a> {
     }
 
     /// Fold one gradient into the server; handle update/epoch outcomes.
-    fn fold(&mut self, now: f64, l: usize, grad: Option<FlatVec>, ts: Timestamp) -> Result<()> {
+    /// Gradients from dead incarnations are dropped here (crashed
+    /// learners' messages are lost, not replayed).
+    fn fold(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        grad: Option<FlatVec>,
+        ts: Timestamp,
+    ) -> Result<()> {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return Ok(());
+        }
         let outcome: PushOutcome = match grad {
             Some(g) => self.server.push_gradient(l, &g, ts)?,
             None => self.server.push_gradient_timing_only(l, ts),
         };
+        self.after_update(now, outcome)
+    }
+
+    /// Post-applyUpdate bookkeeping shared by the push path and the
+    /// membership-change quota flush: adv* broadcast history, periodic
+    /// checkpoints, and epoch-boundary stats/eval.
+    fn after_update(&mut self, now: f64, outcome: PushOutcome) -> Result<()> {
         if outcome.updated {
             if self.cfg.arch == Arch::AdvStar {
                 let snap = self.server_snapshot();
@@ -560,6 +720,15 @@ impl<'a> SimEngine<'a> {
                 {
                     self.recent.pop_front();
                 }
+            }
+            let every = self.cfg.checkpoint_every_updates;
+            if every > 0 && self.server.updates % every == 0 {
+                self.last_checkpoint = Some(Checkpoint::capture(
+                    &format!("update-{}", self.server.updates),
+                    &self.server,
+                    &[("engine", &self.rng)],
+                ));
+                self.checkpoints_taken += 1;
             }
         }
         if let Some(epoch) = outcome.epoch_completed {
@@ -584,6 +753,7 @@ impl<'a> SimEngine<'a> {
                 train_loss,
                 test_loss,
                 test_error_pct: test_err,
+                active_lambda: self.membership.active_count(),
             });
         }
         Ok(())
@@ -592,11 +762,13 @@ impl<'a> SimEngine<'a> {
     /// Hardsync: once the barrier round's update has fired (server ts
     /// advanced past every waiting learner), broadcast new weights.
     fn maybe_broadcast(&mut self, now: f64) {
-        // Wait for BOTH: every learner at the barrier AND the root having
-        // folded every gradient (its timestamp advanced past the last
-        // broadcast) — with tree aggregation the barrier fills before the
-        // final relay lands at the root.
-        if self.barrier.len() < self.cfg.lambda
+        // Wait for BOTH: every *live* learner at the barrier AND the root
+        // having folded every gradient (its timestamp advanced past the
+        // last broadcast) — with tree aggregation the barrier fills before
+        // the final relay lands at the root. The quorum is membership-
+        // aware: dead learners are removed from the barrier at kill time,
+        // so a crash mid-round cannot deadlock the protocol.
+        if self.barrier.len() < self.membership.active_count()
             || self.server.timestamp() <= self.last_bcast_ts
         {
             return;
@@ -608,28 +780,39 @@ impl<'a> SimEngine<'a> {
         match self.cfg.arch {
             Arch::Base => {
                 for l in waiting {
+                    let inc = self.slots[l].inc;
                     let t = self
                         .fabric
                         .send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
                     self.q.schedule_at(
                         t,
-                        Ev::Broadcast { learner: l, snapshot: snap.clone(), ts },
+                        Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
                     );
                 }
             }
             Arch::Adv | Arch::AdvStar => {
-                // root shards → leaf once, then leaf → co-located learners.
+                // root shards → leaf once, then leaf → co-located learners
+                // (live ones only — dead and not-yet-joined slots get no
+                // weights and, crucially, no compute restart).
                 for leaf in 0..self.tree.n_leaves {
+                    let members: Vec<usize> = self
+                        .tree
+                        .members(leaf)
+                        .filter(|&l| self.membership.is_live(l))
+                        .collect();
+                    if members.is_empty() {
+                        continue;
+                    }
                     let t1 = self
                         .fabric
                         .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), self.bytes);
-                    let members: Vec<usize> = self.tree.members(leaf).collect();
                     for l in members {
+                        let inc = self.slots[l].inc;
                         let t =
                             self.fabric.send(t1, self.leaf_node(leaf), self.node_of(l), self.bytes);
                         self.q.schedule_at(
                             t,
-                            Ev::Broadcast { learner: l, snapshot: snap.clone(), ts },
+                            Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
                         );
                     }
                 }
@@ -638,30 +821,32 @@ impl<'a> SimEngine<'a> {
     }
 
     fn start_pull_base(&mut self, now: f64, l: usize) {
+        let inc = self.slots[l].inc;
         if self.slots[l].state.needs_pull(self.server.timestamp()) {
             let ts = self.server.timestamp();
             let snap = self.server_snapshot();
             let t =
                 self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
-            self.q.schedule_at(t, Ev::PullDone { learner: l, snapshot: snap, ts });
+            self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
         } else {
             // timestamp inquiry only (§3.2's pull-skip)
             let ts = self.slots[l].state.ts;
             self.q.schedule_at(
                 now + self.cfg.cluster.latency,
-                Ev::PullDone { learner: l, snapshot: None, ts },
+                Ev::PullDone { learner: l, inc, snapshot: None, ts },
             );
         }
     }
 
     fn start_pull_adv(&mut self, now: f64, l: usize) {
+        let inc = self.slots[l].inc;
         let leaf = self.tree.leaf_of[l];
         let server_ts = self.server.timestamp();
         if !self.slots[l].state.needs_pull(server_ts) {
             let ts = self.slots[l].state.ts;
             self.q.schedule_at(
                 now + self.cfg.cluster.latency,
-                Ev::PullDone { learner: l, snapshot: None, ts },
+                Ev::PullDone { learner: l, inc, snapshot: None, ts },
             );
             return;
         }
@@ -683,13 +868,24 @@ impl<'a> SimEngine<'a> {
             t,
             Ev::PullDone {
                 learner: l,
+                inc,
                 snapshot: self.leaves[leaf].cache_snap.clone(),
                 ts: self.leaves[leaf].cache_ts,
             },
         );
     }
 
-    fn on_pull_done(&mut self, now: f64, l: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp) {
+    fn on_pull_done(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        snapshot: Option<Arc<FlatVec>>,
+        ts: Timestamp,
+    ) {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return; // pulled weights for a dead incarnation: dropped
+        }
         if let Some(s) = snapshot {
             self.slots[l].state.install(&s, ts);
         } else {
@@ -700,7 +896,17 @@ impl<'a> SimEngine<'a> {
         self.start_compute(now, l);
     }
 
-    fn on_broadcast(&mut self, now: f64, l: usize, snapshot: Option<Arc<FlatVec>>, ts: Timestamp) {
+    fn on_broadcast(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        snapshot: Option<Arc<FlatVec>>,
+        ts: Timestamp,
+    ) {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return;
+        }
         if let Some(s) = snapshot {
             self.slots[l].state.install(&s, ts);
         } else {
@@ -709,6 +915,141 @@ impl<'a> SimEngine<'a> {
         let stall = now - self.slots[l].blocked_since;
         self.slots[l].overlap.add_exposed_comm(stall);
         self.start_compute(now, l);
+    }
+
+    // ---- elastic membership ------------------------------------------------
+
+    fn on_churn(&mut self, now: f64, event: ChurnEvent) -> Result<()> {
+        match event.action {
+            ChurnAction::Kill => self.apply_kill(now, event.learner),
+            ChurnAction::Rejoin => self.apply_revive(now, event.learner, true),
+            ChurnAction::Join => self.apply_revive(now, event.learner, false),
+        }
+    }
+
+    /// The random failure process: kill a victim (never the last live
+    /// learner — a cluster with zero learners is an outage, not a churn
+    /// scenario), schedule its rejoin if the schedule allows downtime,
+    /// and re-arm. With *no* live learner (scheduled kills took the rest)
+    /// the process disarms, so the event loop can drain instead of
+    /// spinning on self-scheduled kills forever; a later revive re-arms.
+    fn on_random_kill(&mut self, now: f64) -> Result<()> {
+        self.random_armed = false;
+        let live = self.membership.live_ids();
+        if live.len() > 1 {
+            if let Some(victim) = self.injector.pick(&live) {
+                self.apply_kill(now, victim)?;
+                if let Some(downtime) = self.injector.downtime() {
+                    self.q.schedule_in(
+                        downtime,
+                        Ev::Churn {
+                            event: ChurnEvent {
+                                at: now + downtime,
+                                learner: victim,
+                                action: ChurnAction::Rejoin,
+                            },
+                        },
+                    );
+                }
+            }
+        }
+        if !live.is_empty() {
+            let dt = self.injector.next_kill_delay();
+            self.q.schedule_in(dt, Ev::RandomKill);
+            self.random_armed = true;
+        }
+        Ok(())
+    }
+
+    /// Kill learner `l`: bump its incarnation (in-flight events die with
+    /// it), drop it from the hardsync barrier, and rescale the survivors.
+    fn apply_kill(&mut self, now: f64, l: usize) -> Result<()> {
+        if !self.membership.is_live(l) && self.membership.phase(l)
+            != crate::elastic::membership::Phase::Joining
+        {
+            return Ok(()); // already dead: scheduled and random kills can race
+        }
+        self.membership.kill(l, now)?;
+        self.slots[l].inc += 1;
+        self.slots[l].pending_grad = None;
+        self.slots[l].pipe_busy = false;
+        self.slots[l].pipe_waiting = false;
+        self.barrier.retain(|&x| x != l);
+        self.on_membership_change(now, Some(l))?;
+        Ok(())
+    }
+
+    /// Bring learner `l` up: `rejoin` = warm restart after a death,
+    /// otherwise a first-time (deferred) join. The learner pulls the
+    /// current weights from the root shards — paying the full striped
+    /// transfer — and resumes its compute loop when they land.
+    fn apply_revive(&mut self, now: f64, l: usize, rejoin: bool) -> Result<()> {
+        use crate::elastic::membership::Phase;
+        // Lenient on races: a deterministic rejoin may target a learner
+        // the random process never killed, or that is already back.
+        if rejoin {
+            if self.membership.phase(l) != Phase::Dead {
+                return Ok(());
+            }
+            self.membership.rejoin(l, now)?;
+        } else {
+            match self.membership.phase(l) {
+                Phase::Joining => self.membership.activate(l, now)?,
+                // a learner killed before its scheduled join (or a `join:`
+                // written where `rejoin:` was meant) comes back warm
+                Phase::Dead => {
+                    self.membership.rejoin(l, now)?;
+                }
+                _ => return Ok(()),
+            }
+        }
+        self.on_membership_change(now, None)?;
+        // a revive brings the random failure process back if it disarmed
+        // during a full outage
+        if self.injector.enabled() && !self.random_armed {
+            let dt = self.injector.next_kill_delay();
+            self.q.schedule_in(dt, Ev::RandomKill);
+            self.random_armed = true;
+        }
+        let inc = self.slots[l].inc;
+        self.slots[l].blocked_since = now;
+        let ts = self.server.timestamp();
+        let snap = self.server_snapshot();
+        let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
+        self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
+        Ok(())
+    }
+
+    /// Re-point the server at the new active set: rescale μ (μ·λ = const),
+    /// recompute the collection quota c — flushing a round the shrink
+    /// just satisfied (via the membership-aware [`ShardedServer::remove_learner`]
+    /// when a death triggered the change) — and log the rescale decision.
+    /// With every learner down (a full outage between kill and rejoin
+    /// events) the server is left as-is; the next revive re-normalizes.
+    fn on_membership_change(&mut self, now: f64, removed: Option<usize>) -> Result<()> {
+        let active = self.membership.active_count();
+        if active == 0 {
+            return Ok(());
+        }
+        let mu = self.rescaler.mu_for(active);
+        if mu != self.cur_mu {
+            self.cur_mu = mu;
+            self.server.set_mu(mu);
+            self.base_compute = self.cfg.compute.minibatch_secs(&self.cfg.model, mu);
+        }
+        let flush = match removed {
+            Some(dead) => self.server.remove_learner(dead, active)?,
+            None => self.server.set_active_lambda(active)?,
+        };
+        let record = self.rescaler.record(now, &self.lr, self.cfg.protocol, active)?;
+        self.rescale_log.push(record);
+        if let Some(outcome) = flush {
+            self.after_update(now, outcome)?;
+        }
+        if self.cfg.protocol.is_barrier() {
+            self.maybe_broadcast(now);
+        }
+        Ok(())
     }
 }
 

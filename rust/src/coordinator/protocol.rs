@@ -52,6 +52,28 @@ impl Protocol {
         }
     }
 
+    /// Checked form of [`Protocol::gradients_per_update`] for *recomputing*
+    /// c when λ changes mid-run (elastic membership). Unlike the clamped
+    /// static form, this rejects λ_active < n: there ⌊λ/n⌋ = 0, and the
+    /// silent `.max(1)` clamp would quietly turn an n-softsync run into
+    /// async (and a 0 quota would make the server spin waiting for a
+    /// round that can never fill). Also rejects λ_active = 0 — a server
+    /// with no live learners has no well-defined collection threshold.
+    pub fn try_gradients_per_update(&self, lambda: usize) -> Result<usize> {
+        if lambda == 0 {
+            bail!("no active learners (λ_active = 0): cannot compute a collection threshold");
+        }
+        if let Protocol::NSoftsync { n } = *self {
+            if lambda < n {
+                bail!(
+                    "{n}-softsync requires λ_active >= n, but λ_active = {lambda} \
+                     (c = ⌊λ/n⌋ would be 0; evict fewer learners or lower n)"
+                );
+            }
+        }
+        Ok(self.gradients_per_update(lambda))
+    }
+
     /// Whether the server must hear from *every* learner each step (and
     /// learners must block on the new weights) — only hardsync.
     pub fn is_barrier(&self) -> bool {
@@ -83,7 +105,14 @@ impl Protocol {
 #[derive(Debug)]
 pub struct Accumulator {
     protocol: Protocol,
+    /// Active learner count λ_active — the quota basis (c = ⌊λ/n⌋).
+    /// Starts equal to `id_bound`; elastic membership shrinks/grows it via
+    /// [`Accumulator::set_active_lambda`].
     lambda: usize,
+    /// Learner-id space bound (total learner slots ever allocated). Ids
+    /// are stable across death/rejoin, so the bound never changes even as
+    /// `lambda` does.
+    id_bound: usize,
     /// Sum of pending gradients.
     sum: crate::params::FlatVec,
     /// Timestamps of the pending gradients (the vector clock in waiting).
@@ -97,6 +126,7 @@ impl Accumulator {
         Accumulator {
             protocol,
             lambda,
+            id_bound: lambda,
             sum: crate::params::FlatVec::zeros(n_params),
             pending_ts: Vec::with_capacity(lambda),
             pending_from: Vec::with_capacity(lambda),
@@ -105,6 +135,59 @@ impl Accumulator {
 
     pub fn pending(&self) -> usize {
         self.pending_ts.len()
+    }
+
+    /// Current quota basis λ_active.
+    pub fn active_lambda(&self) -> usize {
+        self.lambda
+    }
+
+    /// Recompute the collection quota for a changed active learner count
+    /// (elastic membership). The learner-id space is unchanged — dead
+    /// learners keep their ids for rejoin. Rejects λ_active values whose
+    /// quota would be ill-defined (0, or < n under n-softsync); see
+    /// [`Protocol::try_gradients_per_update`]. The caller decides whether
+    /// an already-satisfied quota triggers an immediate applyUpdate.
+    pub fn set_active_lambda(&mut self, lambda: usize) -> Result<()> {
+        self.protocol.try_gradients_per_update(lambda)?;
+        self.lambda = lambda;
+        Ok(())
+    }
+
+    /// Serialize for checkpointing (protocol lives in the server config).
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("lambda", Json::num(self.lambda as f64)),
+            ("id_bound", Json::num(self.id_bound as f64)),
+            ("sum", Json::arr_f32(&self.sum.data)),
+            ("pending_ts", Json::arr_u64(&self.pending_ts)),
+            (
+                "pending_from",
+                Json::Arr(
+                    self.pending_from.iter().map(|&l| Json::num(l as f64)).collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Restore from [`Accumulator::to_json`] output.
+    pub fn from_json(protocol: Protocol, j: &crate::util::json::Json) -> Result<Accumulator> {
+        let lambda = j.get("lambda")?.as_usize()?;
+        let id_bound = j.get("id_bound")?.as_usize()?;
+        let sum = crate::params::FlatVec::from_vec(j.get("sum")?.as_f32_vec()?);
+        let pending_ts = j.get("pending_ts")?.as_u64_vec()?;
+        let pending_from = j
+            .get("pending_from")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<Result<Vec<usize>>>()?;
+        anyhow::ensure!(
+            pending_ts.len() == pending_from.len(),
+            "accumulator checkpoint: pending_ts/pending_from length mismatch"
+        );
+        Ok(Accumulator { protocol, lambda, id_bound, sum, pending_ts, pending_from })
     }
 
     /// Push one gradient. Returns an error on a hardsync double-push from
@@ -143,8 +226,8 @@ impl Accumulator {
         grad_ts: u64,
         scale: f32,
     ) -> Result<()> {
-        if learner >= self.lambda {
-            bail!("learner id {learner} out of range (λ = {})", self.lambda);
+        if learner >= self.id_bound {
+            bail!("learner id {learner} out of range (λ = {})", self.id_bound);
         }
         if self.protocol.is_barrier() && self.pending_from.contains(&learner) {
             bail!("hardsync: learner {learner} pushed twice in one barrier round");
@@ -158,6 +241,13 @@ impl Accumulator {
     /// True when enough gradients have arrived to trigger applyUpdate.
     pub fn ready(&self) -> bool {
         self.pending() >= self.protocol.gradients_per_update(self.lambda)
+    }
+
+    /// Whether `learner` contributed to the pending (un-applied) set —
+    /// the membership-aware hardsync flush refuses to close a round the
+    /// dead learner was part of while survivors' gradients are in flight.
+    pub fn pending_contains(&self, learner: usize) -> bool {
+        self.pending_from.contains(&learner)
     }
 
     /// Drain the pending set: returns (averaged Δθ, vector clock).
@@ -262,5 +352,64 @@ mod tests {
         assert_eq!(Protocol::Hardsync.effective_n(30), 0);
         assert_eq!(Protocol::NSoftsync { n: 4 }.effective_n(30), 4);
         assert_eq!(Protocol::Async.effective_n(30), 30);
+    }
+
+    #[test]
+    fn checked_quota_rejects_lambda_below_n() {
+        // Regression: recomputing c = ⌊λ/n⌋ after membership churn used
+        // the clamped static form, silently turning n-softsync into async
+        // when λ_active dropped below n (⌊λ/n⌋ = 0 clamped to 1).
+        let p = Protocol::NSoftsync { n: 4 };
+        assert_eq!(p.try_gradients_per_update(8).unwrap(), 2);
+        assert_eq!(p.try_gradients_per_update(4).unwrap(), 1);
+        let err = p.try_gradients_per_update(3).unwrap_err();
+        assert!(err.to_string().contains("λ_active"), "{err}");
+        // λ_active = 0 is rejected for every protocol.
+        for proto in [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::Async] {
+            assert!(proto.try_gradients_per_update(0).is_err(), "{proto:?}");
+        }
+        // hardsync and async have no n constraint
+        assert_eq!(Protocol::Hardsync.try_gradients_per_update(3).unwrap(), 3);
+        assert_eq!(Protocol::Async.try_gradients_per_update(1).unwrap(), 1);
+    }
+
+    #[test]
+    fn accumulator_rescales_quota_but_keeps_id_space() {
+        let mut acc = Accumulator::new(Protocol::NSoftsync { n: 1 }, 4, 1);
+        let g = FlatVec::from_vec(vec![1.0]);
+        acc.push(0, &g, 0).unwrap();
+        acc.push(1, &g, 0).unwrap();
+        assert!(!acc.ready(), "quota 4 not met by 2 pushes");
+        // two learners die: quota drops to 2, already satisfied
+        acc.set_active_lambda(2).unwrap();
+        assert_eq!(acc.active_lambda(), 2);
+        assert!(acc.ready());
+        // dead learners' ids stay addressable (they may rejoin)
+        acc.push(3, &g, 0).unwrap();
+        assert_eq!(acc.pending(), 3);
+        // but rescaling below the protocol's floor is rejected
+        let mut soft = Accumulator::new(Protocol::NSoftsync { n: 3 }, 6, 1);
+        assert!(soft.set_active_lambda(2).is_err());
+        assert_eq!(soft.active_lambda(), 6, "failed rescale must not change λ");
+    }
+
+    #[test]
+    fn accumulator_json_roundtrip_preserves_pending_state() {
+        let mut acc = Accumulator::new(Protocol::NSoftsync { n: 2 }, 4, 3);
+        let g = FlatVec::from_vec(vec![0.25, -1.5, 3.0]);
+        acc.push(1, &g, 7).unwrap();
+        acc.push_scaled(2, &g, 5, 0.5).unwrap();
+        let j = acc.to_json();
+        let text = j.to_string();
+        let back = Accumulator::from_json(
+            Protocol::NSoftsync { n: 2 },
+            &crate::util::json::Json::parse(&text).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(back.active_lambda(), 4);
+        assert_eq!(back.pending(), 2);
+        assert_eq!(back.sum.data, acc.sum.data, "pending sum must survive bit-exactly");
+        assert_eq!(back.pending_ts, vec![7, 5]);
+        assert_eq!(back.pending_from, vec![1, 2]);
     }
 }

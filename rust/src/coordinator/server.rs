@@ -179,6 +179,64 @@ impl ParameterServer {
         }
     }
 
+    /// Elastic rescale: change the per-learner mini-batch size μ (the
+    /// μ·λ = const rule recomputes it on every membership change). Applies
+    /// to updates from the next applyUpdate on; in-flight gradients keep
+    /// their old sample count only until folded, a deliberate first-order
+    /// approximation.
+    pub fn set_mu(&mut self, mu: usize) {
+        self.cfg.mu = mu.max(1);
+    }
+
+    /// Elastic membership: recompute the collection quota c for a changed
+    /// active learner count. Rejects quotas the protocol cannot satisfy
+    /// (λ_active = 0, or < n under n-softsync —
+    /// [`crate::coordinator::protocol::Protocol::try_gradients_per_update`]).
+    ///
+    /// Shrinking λ can leave the pending set already at or above the new
+    /// quota — the update is applied *immediately* (returned as
+    /// `Some(outcome)`), which is what keeps hardsync from deadlocking on
+    /// a dead learner: the barrier round completes with the gradients of
+    /// the surviving quorum.
+    pub fn set_active_lambda(&mut self, lambda: usize) -> Result<Option<PushOutcome>> {
+        let quota = self.cfg.protocol.try_gradients_per_update(lambda)?;
+        self.cfg.lambda = lambda;
+        self.acc.set_active_lambda(lambda)?;
+        let mut out = PushOutcome::default();
+        if self.acc.pending() >= quota && self.acc.pending() > 0 {
+            let (avg, vclock) = self.acc.take_update();
+            self.apply_update(avg, &vclock, &mut out);
+            return Ok(Some(out));
+        }
+        if self.timing_pending.len() >= quota && !self.timing_pending.is_empty() {
+            let vclock = std::mem::take(&mut self.timing_pending);
+            self.advance_clock(&vclock, &mut out);
+            return Ok(Some(out));
+        }
+        Ok(None)
+    }
+
+    /// Membership-aware shrink for a learner *death*. Like
+    /// [`ParameterServer::set_active_lambda`], but protocol-safe for
+    /// hardsync: the satisfied-quota flush is suppressed while the dead
+    /// learner's own gradient sits in the pending round — survivors of
+    /// that round still have gradients in flight, and closing the round
+    /// early would collide with their next-round pushes. The round then
+    /// completes through the normal push path (the per-push quota check
+    /// uses the shrunk λ).
+    pub fn remove_learner(
+        &mut self,
+        dead: usize,
+        lambda: usize,
+    ) -> Result<Option<PushOutcome>> {
+        if self.cfg.protocol.is_barrier() && self.acc.pending_contains(dead) {
+            self.acc.set_active_lambda(lambda)?;
+            self.cfg.lambda = lambda;
+            return Ok(None);
+        }
+        self.set_active_lambda(lambda)
+    }
+
     /// Direct access for warm-start initialization (§5.5) and checkpoints.
     pub fn theta_mut(&mut self) -> &mut FlatVec {
         &mut self.theta
@@ -289,6 +347,49 @@ mod tests {
         s.push_gradient(0, &g, s.timestamp()).unwrap();
         let delta = theta_before - s.weights().0.data[0];
         assert!((delta - 1.0).abs() < 1e-6, "fresh push moved θ by {delta}");
+    }
+
+    #[test]
+    fn lambda_shrink_flushes_satisfied_quota() {
+        // hardsync λ=3: two learners push, the third dies. The quota
+        // shrink must fire the barrier update immediately (no deadlock).
+        let mut s = server(Protocol::Hardsync, 3);
+        let g = FlatVec::from_vec(vec![1.0, 0.0]);
+        assert!(!s.push_gradient(0, &g, 0).unwrap().updated);
+        assert!(!s.push_gradient(1, &g, 0).unwrap().updated);
+        let out = s.set_active_lambda(2).unwrap().expect("quota met → flush");
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+        // the update averaged the 2 surviving gradients
+        assert_eq!(s.weights().0.data, vec![-1.0, 0.0]);
+        // growing back (rejoin) never flushes
+        assert!(s.set_active_lambda(3).unwrap().is_none());
+        assert_eq!(s.cfg.lambda, 3);
+    }
+
+    #[test]
+    fn lambda_rescale_rejects_unsatisfiable_quota() {
+        let mut s = server(Protocol::NSoftsync { n: 2 }, 4);
+        let err = s.set_active_lambda(1).unwrap_err();
+        assert!(err.to_string().contains("softsync"), "{err}");
+        assert_eq!(s.cfg.lambda, 4, "failed rescale must leave λ unchanged");
+        assert!(s.set_active_lambda(0).is_err());
+    }
+
+    #[test]
+    fn set_mu_rescales_epoch_accounting() {
+        // λ=2, 1-softsync ⇒ 2 gradients per update. With μ=4 an update
+        // applies 8 samples; after set_mu(8) it applies 16 = one epoch.
+        let mut s = server(Protocol::NSoftsync { n: 1 }, 2);
+        let g = FlatVec::zeros(2);
+        s.push_gradient(0, &g, 0).unwrap();
+        s.push_gradient(1, &g, 0).unwrap();
+        assert_eq!(s.samples_applied(), 8);
+        s.set_mu(8);
+        s.push_gradient(0, &g, 1).unwrap();
+        let out = s.push_gradient(1, &g, 1).unwrap();
+        assert_eq!(s.samples_applied(), 24);
+        assert_eq!(out.epoch_completed, Some(1));
     }
 
     #[test]

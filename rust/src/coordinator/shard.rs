@@ -118,6 +118,10 @@ pub struct ShardedServer {
     pub cfg: ServerConfig,
     spec: ShardSpec,
     shards: Vec<Shard>,
+    /// Learner-id space bound (total learner slots). `cfg.lambda` tracks
+    /// the *active* count under elastic membership; ids of dead learners
+    /// stay reserved for rejoin, so the bound is fixed at construction.
+    id_bound: usize,
     lr: LrPolicy,
     pub staleness: StalenessStats,
     /// Shared scalar timestamp (all shards advance in lockstep with it).
@@ -159,6 +163,7 @@ impl ShardedServer {
             })
             .collect();
         ShardedServer {
+            id_bound: cfg.lambda,
             cfg,
             spec,
             shards,
@@ -228,8 +233,8 @@ impl ShardedServer {
         grad: &FlatVec,
         grad_ts: Timestamp,
     ) -> Result<PushOutcome> {
-        if learner >= self.cfg.lambda {
-            bail!("learner id {learner} out of range (λ = {})", self.cfg.lambda);
+        if learner >= self.id_bound {
+            bail!("learner id {learner} out of range (λ = {})", self.id_bound);
         }
         anyhow::ensure!(
             grad.len() == self.spec.n_params,
@@ -298,6 +303,228 @@ impl ShardedServer {
             self.advance_clock(&vclock, &mut out);
         }
         out
+    }
+
+    /// Current active learner count λ_active (the quota/LR basis).
+    pub fn active_lambda(&self) -> usize {
+        self.cfg.lambda
+    }
+
+    /// Current per-learner mini-batch size μ.
+    pub fn mu(&self) -> usize {
+        self.cfg.mu
+    }
+
+    /// The LR policy this server applies (the rescaler reads it to report
+    /// the staleness-aware modulation factor after a membership change).
+    pub fn lr_policy(&self) -> &LrPolicy {
+        &self.lr
+    }
+
+    /// Elastic rescale: change the per-learner mini-batch size μ (the
+    /// μ·λ = const rule recomputes it on every membership change). Takes
+    /// effect from the next applyUpdate; gradients already in flight keep
+    /// their old sample count until folded (first-order approximation).
+    pub fn set_mu(&mut self, mu: usize) {
+        self.cfg.mu = mu.max(1);
+    }
+
+    /// Elastic membership: recompute the collection quota c = ⌊λ/n⌋ for a
+    /// changed active learner count, *safely between updates*. Rejects
+    /// unsatisfiable quotas (λ_active = 0, or < n under n-softsync). If a
+    /// shrink leaves the pending set already at the new quota, the update
+    /// fires immediately on every shard (returned as `Some`) — the
+    /// membership-aware quorum that keeps hardsync from deadlocking when
+    /// a learner dies mid-round. Shard clocks stay in lockstep with the
+    /// scalar timestamp throughout.
+    pub fn set_active_lambda(&mut self, lambda: usize) -> Result<Option<PushOutcome>> {
+        let quota = self.cfg.protocol.try_gradients_per_update(lambda)?;
+        self.cfg.lambda = lambda;
+        for shard in self.shards.iter_mut() {
+            shard.acc.set_active_lambda(lambda)?;
+        }
+        let mut out = PushOutcome::default();
+        if self.pending_ts.len() >= quota && !self.pending_ts.is_empty() {
+            let alpha = self
+                .lr
+                .alpha(self.epochs_completed, self.cfg.protocol, self.cfg.mu, self.cfg.lambda);
+            self.last_alpha = alpha;
+            self.for_each_shard(|shard| shard.apply(alpha));
+            let clock = std::mem::take(&mut self.pending_ts);
+            self.pending_from.clear();
+            self.advance_clock(&clock, &mut out);
+            debug_assert!(
+                self.shards.iter().all(|s| s.ts == self.ts),
+                "shard clocks must stay in lockstep across a quota flush"
+            );
+            return Ok(Some(out));
+        }
+        if self.timing_pending.len() >= quota && !self.timing_pending.is_empty() {
+            let vclock = std::mem::take(&mut self.timing_pending);
+            for shard in self.shards.iter_mut() {
+                shard.ts += 1;
+                shard.updates += 1;
+            }
+            self.advance_clock(&vclock, &mut out);
+            return Ok(Some(out));
+        }
+        Ok(None)
+    }
+
+    /// Membership-aware shrink for a learner *death*. Like
+    /// [`ShardedServer::set_active_lambda`], but protocol-safe for
+    /// hardsync: if the dead learner's own gradient sits in the pending
+    /// round, the satisfied-quota flush is suppressed — survivors of that
+    /// round still have gradients in flight, and closing the round early
+    /// would collide with their next-round pushes (a hardsync double-push
+    /// error). The round then completes through the normal push path,
+    /// whose per-push quota check already uses the shrunk λ.
+    pub fn remove_learner(
+        &mut self,
+        dead: usize,
+        lambda: usize,
+    ) -> Result<Option<PushOutcome>> {
+        if self.cfg.protocol.is_barrier() && self.pending_from.contains(&dead) {
+            let quota = self.cfg.protocol.try_gradients_per_update(lambda)?;
+            debug_assert!(quota >= 1);
+            self.cfg.lambda = lambda;
+            for shard in self.shards.iter_mut() {
+                shard.acc.set_active_lambda(lambda)?;
+            }
+            return Ok(None);
+        }
+        self.set_active_lambda(lambda)
+    }
+
+    /// Serialize the complete server state — per-shard θ slices, optimizer
+    /// state, accumulators, shard timestamps, protocol/epoch bookkeeping,
+    /// staleness history, and the LR policy — via the offline JSON util
+    /// (no serde). [`ShardedServer::from_json`] restores a server that
+    /// continues the exact trajectory.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let shard_state: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("start", Json::num(s.range.start as f64)),
+                    ("end", Json::num(s.range.end as f64)),
+                    ("ts", Json::num(s.ts as f64)),
+                    ("updates", Json::num(s.updates as f64)),
+                    ("theta", Json::arr_f32(&s.theta.data)),
+                    ("optimizer", s.optimizer.to_json()),
+                    ("acc", s.acc.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(1.0)),
+            ("protocol", Json::str(self.cfg.protocol.label())),
+            ("mu", Json::num(self.cfg.mu as f64)),
+            ("lambda", Json::num(self.cfg.lambda as f64)),
+            ("id_bound", Json::num(self.id_bound as f64)),
+            ("samples_per_epoch", Json::num(self.cfg.samples_per_epoch as f64)),
+            ("target_epochs", Json::num(self.cfg.target_epochs as f64)),
+            ("shards", Json::num(self.spec.shards as f64)),
+            ("n_params", Json::num(self.spec.n_params as f64)),
+            ("ts", Json::num(self.ts as f64)),
+            ("updates", Json::num(self.updates as f64)),
+            ("last_alpha", Json::num(self.last_alpha)),
+            ("samples_applied", Json::num(self.samples_applied as f64)),
+            ("epochs_completed", Json::num(self.epochs_completed as f64)),
+            ("pending_ts", Json::arr_u64(&self.pending_ts)),
+            (
+                "pending_from",
+                Json::Arr(self.pending_from.iter().map(|&l| Json::num(l as f64)).collect()),
+            ),
+            ("timing_pending", Json::arr_u64(&self.timing_pending)),
+            ("staleness", self.staleness.to_json()),
+            ("lr", self.lr.to_json()),
+            ("shard_state", Json::Arr(shard_state)),
+        ])
+    }
+
+    /// Restore a server from [`ShardedServer::to_json`] output. Enforces
+    /// the single-clock staleness invariant on the way in: every shard
+    /// timestamp must equal the scalar clock, or the checkpoint is
+    /// rejected (a divergence would silently break the Eq. 2 analysis).
+    pub fn from_json(j: &crate::util::json::Json) -> Result<ShardedServer> {
+        let version = j.get("version")?.as_u64()?;
+        anyhow::ensure!(version == 1, "unsupported server checkpoint version {version}");
+        let protocol = crate::coordinator::protocol::Protocol::parse(
+            j.get("protocol")?.as_str()?,
+        )?;
+        let cfg = ServerConfig {
+            protocol,
+            mu: j.get("mu")?.as_usize()?,
+            lambda: j.get("lambda")?.as_usize()?,
+            samples_per_epoch: j.get("samples_per_epoch")?.as_u64()?,
+            target_epochs: j.get("target_epochs")?.as_usize()?,
+            shards: j.get("shards")?.as_usize()?,
+        };
+        let spec = ShardSpec::new(j.get("n_params")?.as_usize()?, cfg.shards);
+        let ts = j.get("ts")?.as_u64()?;
+        let raw_shards = j.get("shard_state")?.as_arr()?;
+        anyhow::ensure!(
+            raw_shards.len() == spec.shards,
+            "checkpoint has {} shard records for S = {}",
+            raw_shards.len(),
+            spec.shards
+        );
+        let mut shards = Vec::with_capacity(raw_shards.len());
+        for (s, sj) in raw_shards.iter().enumerate() {
+            let range = sj.get("start")?.as_usize()?..sj.get("end")?.as_usize()?;
+            anyhow::ensure!(
+                range == spec.range(s),
+                "checkpoint shard {s} covers {range:?}, spec expects {:?}",
+                spec.range(s)
+            );
+            let shard_ts = sj.get("ts")?.as_u64()?;
+            anyhow::ensure!(
+                shard_ts == ts,
+                "checkpoint violates the single-clock invariant: shard {s} at ts \
+                 {shard_ts}, scalar clock at {ts}"
+            );
+            let theta = FlatVec::from_vec(sj.get("theta")?.as_f32_vec()?);
+            anyhow::ensure!(
+                theta.len() == range.len(),
+                "checkpoint shard {s}: θ slice has {} params, range holds {}",
+                theta.len(),
+                range.len()
+            );
+            shards.push(Shard {
+                acc: Accumulator::from_json(protocol, sj.get("acc")?)?,
+                optimizer: Optimizer::from_json(sj.get("optimizer")?)?,
+                theta,
+                range,
+                ts: shard_ts,
+                updates: sj.get("updates")?.as_u64()?,
+            });
+        }
+        Ok(ShardedServer {
+            id_bound: j.get("id_bound")?.as_usize()?,
+            cfg,
+            spec,
+            shards,
+            lr: LrPolicy::from_json(j.get("lr")?)?,
+            staleness: crate::coordinator::clock::StalenessStats::from_json(
+                j.get("staleness")?,
+            )?,
+            ts,
+            pending_ts: j.get("pending_ts")?.as_u64_vec()?,
+            pending_from: j
+                .get("pending_from")?
+                .as_arr()?
+                .iter()
+                .map(|v| v.as_usize())
+                .collect::<Result<Vec<usize>>>()?,
+            samples_applied: j.get("samples_applied")?.as_u64()?,
+            epochs_completed: j.get("epochs_completed")?.as_usize()?,
+            updates: j.get("updates")?.as_u64()?,
+            last_alpha: j.get("last_alpha")?.as_f64()?,
+            timing_pending: j.get("timing_pending")?.as_u64_vec()?,
+        })
     }
 
     /// Run `f` over every shard — via a scoped thread pool when the model
@@ -554,6 +781,160 @@ mod tests {
         a.push_gradient(1, &g, stale_ts).unwrap();
         b.push_gradient(1, &g, stale_ts).unwrap();
         assert_eq!(a.assemble_weights().data, b.assemble_weights().data);
+    }
+
+    #[test]
+    fn lambda_shrink_flushes_on_every_shard_in_lockstep() {
+        // hardsync λ=3 over 3 shards: two push, the third dies. The quota
+        // flush must apply on every shard and keep the clocks in lockstep.
+        let mut s = ShardedServer::new(
+            cfg(Protocol::Hardsync, 3, 3),
+            FlatVec::zeros(6),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 6),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 6]);
+        assert!(!s.push_gradient(0, &g, 0).unwrap().updated);
+        assert!(!s.push_gradient(1, &g, 0).unwrap().updated);
+        let out = s.set_active_lambda(2).unwrap().expect("quota met → flush");
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+        assert_eq!(s.shard_updates(), vec![1, 1, 1]);
+        assert_eq!(s.assemble_weights().data, vec![-1.0; 6]);
+        // the shrunk quota governs the next round: 2 pushes now update
+        s.push_gradient(0, &g, 1).unwrap();
+        let out = s.push_gradient(1, &g, 1).unwrap();
+        assert!(out.updated);
+        // dead learner 2's id stays addressable for rejoin
+        assert!(s.set_active_lambda(3).unwrap().is_none());
+        s.push_gradient(2, &g, 2).unwrap();
+        assert_eq!(s.active_lambda(), 3);
+    }
+
+    #[test]
+    fn remove_learner_defers_flush_while_dead_gradient_pends() {
+        // hardsync λ=3: learners 0 and 2 pushed; learner 2 dies. Its
+        // gradient is in the pending round, so the shrink must NOT close
+        // the round — learner 1's gradient is still in flight, and an
+        // early close would make 1's next-round push collide (the
+        // double-push regression this API exists to prevent).
+        let mut s = ShardedServer::new(
+            cfg(Protocol::Hardsync, 3, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        s.push_gradient(0, &g, 0).unwrap();
+        s.push_gradient(2, &g, 0).unwrap();
+        let flush = s.remove_learner(2, 2).unwrap();
+        assert!(flush.is_none(), "round containing the dead gradient must stay open");
+        assert_eq!(s.timestamp(), 0);
+        // learner 1's in-flight gradient lands: the round closes with all
+        // three contributions under the shrunk quota…
+        let out = s.push_gradient(1, &g, 0).unwrap();
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+        // …and the survivors' next round proceeds without a double-push.
+        s.push_gradient(0, &g, 1).unwrap();
+        let out = s.push_gradient(1, &g, 1).unwrap();
+        assert!(out.updated);
+        // By contrast, a dead learner that never pushed flushes at once
+        // (the deadlock case): rebuild the 0/1-pushed state.
+        let mut s2 = ShardedServer::new(
+            cfg(Protocol::Hardsync, 3, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        s2.push_gradient(0, &g, 0).unwrap();
+        s2.push_gradient(1, &g, 0).unwrap();
+        let out = s2.remove_learner(2, 2).unwrap().expect("quorum complete → flush");
+        assert!(out.updated);
+    }
+
+    #[test]
+    fn lambda_rescale_matches_flat_server() {
+        // The flat server is the reference: a shrink-triggered flush must
+        // produce identical weights on both.
+        let theta0 = FlatVec::from_vec(vec![0.5, -1.0, 2.0, 0.0, 1.5]);
+        let mut flat = ParameterServer::new(
+            cfg(Protocol::NSoftsync { n: 1 }, 4, 1),
+            theta0.clone(),
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, 5),
+            lr(),
+        );
+        let mut sharded = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 1 }, 4, 3),
+            theta0,
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, 5),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![0.1, -0.2, 0.3, 0.4, -0.5]);
+        for l in 0..3 {
+            flat.push_gradient(l, &g, 0).unwrap();
+            sharded.push_gradient(l, &g, 0).unwrap();
+        }
+        let a = flat.set_active_lambda(3).unwrap().expect("flush");
+        let b = sharded.set_active_lambda(3).unwrap().expect("flush");
+        assert_eq!(a.updated, b.updated);
+        assert_eq!(a.avg_staleness, b.avg_staleness);
+        assert_eq!(flat.weights().0.data, sharded.assemble_weights().data);
+        assert_eq!(flat.timestamp(), sharded.timestamp());
+    }
+
+    #[test]
+    fn json_roundtrip_is_bit_identical_and_resumes() {
+        let mut orig = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 2 }, 4, 4),
+            FlatVec::from_vec((0..11).map(|i| i as f32 * 0.37 - 1.9).collect()),
+            Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 1e-4, 11),
+            lr(),
+        );
+        let g = FlatVec::from_vec((0..11).map(|i| ((i % 7) as f32 - 3.0) * 0.13).collect());
+        // leave the accumulator mid-round (5 pushes at quota 2 → 1 pending)
+        for i in 0..5 {
+            let ts = orig.timestamp();
+            orig.push_gradient(i % 4, &g, ts).unwrap();
+        }
+        let text = orig.to_json().to_string();
+        let mut restored =
+            ShardedServer::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(restored.timestamp(), orig.timestamp());
+        assert_eq!(restored.assemble_weights().data, orig.assemble_weights().data);
+        assert_eq!(restored.shard_updates(), orig.shard_updates());
+        assert_eq!(restored.staleness.count, orig.staleness.count);
+        // resuming pushes produces bit-identical trajectories
+        for i in 0..6 {
+            let ts = orig.timestamp();
+            let a = orig.push_gradient(i % 4, &g, ts).unwrap();
+            let b = restored.push_gradient(i % 4, &g, ts).unwrap();
+            assert_eq!(a.updated, b.updated);
+            assert_eq!(a.avg_staleness, b.avg_staleness);
+        }
+        assert_eq!(restored.assemble_weights().data, orig.assemble_weights().data);
+        assert_eq!(restored.samples_applied(), orig.samples_applied());
+    }
+
+    #[test]
+    fn from_json_rejects_broken_clock_invariant() {
+        let s = ShardedServer::new(
+            cfg(Protocol::Async, 2, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let mut j = s.to_json();
+        // corrupt one shard's timestamp
+        if let crate::util::json::Json::Obj(m) = &mut j {
+            if let Some(crate::util::json::Json::Arr(shards)) = m.get_mut("shard_state") {
+                if let crate::util::json::Json::Obj(sm) = &mut shards[1] {
+                    sm.insert("ts".to_string(), crate::util::json::Json::num(7.0));
+                }
+            }
+        }
+        let err = ShardedServer::from_json(&j).unwrap_err();
+        assert!(err.to_string().contains("single-clock"), "{err}");
     }
 
     #[test]

@@ -1,0 +1,465 @@
+//! Learner lifecycle ledger and churn schedules.
+//!
+//! The ledger tracks each learner slot through the elastic lifecycle
+//!
+//! ```text
+//! Joining ──activate──▶ Active ──suspect──▶ Suspect ──kill──▶ Dead
+//!                         │  ▲                 │               │
+//!                         │  └───recover───────┘               │
+//!                         └────────kill────────────────────────┤
+//!                                                              ▼
+//!                                          Rejoined ◀──rejoin──┘
+//! ```
+//!
+//! `Rejoined` behaves exactly like `Active` (it exists so logs can tell a
+//! warm-restarted learner from one that never failed) and may die again.
+//! Learner *ids are stable across death*: a dead learner keeps its slot so
+//! a rejoin reuses the same id against the server's fixed id space.
+//!
+//! Every transition is validated and appended to a churn log together with
+//! the active-λ after the event; `recovery_secs` records death→rejoin
+//! gaps (the recovery-time column in [`crate::stats`]).
+
+use anyhow::{bail, Result};
+
+/// Lifecycle phase of one learner slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Scheduled to join later (spot instance not yet up). Not counted in
+    /// the active quorum.
+    Joining,
+    Active,
+    /// Missed heartbeats but not yet evicted — still counted in the
+    /// quorum (the live engine's grace period).
+    Suspect,
+    Dead,
+    /// Back after a death (warm restart). Counted in the quorum.
+    Rejoined,
+}
+
+impl Phase {
+    /// Live phases count toward the active quorum λ_active.
+    pub fn is_live(&self) -> bool {
+        matches!(self, Phase::Active | Phase::Suspect | Phase::Rejoined)
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            Phase::Joining => "joining",
+            Phase::Active => "active",
+            Phase::Suspect => "suspect",
+            Phase::Dead => "dead",
+            Phase::Rejoined => "rejoined",
+        }
+    }
+}
+
+/// What happened in one churn event.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnKind {
+    Join,
+    Suspect,
+    Recover,
+    Kill,
+    Rejoin,
+}
+
+impl ChurnKind {
+    pub fn label(&self) -> &'static str {
+        match self {
+            ChurnKind::Join => "join",
+            ChurnKind::Suspect => "suspect",
+            ChurnKind::Recover => "recover",
+            ChurnKind::Kill => "kill",
+            ChurnKind::Rejoin => "rejoin",
+        }
+    }
+}
+
+/// One entry of the churn log.
+#[derive(Debug, Clone)]
+pub struct ChurnRecord {
+    /// Event time — virtual seconds in the sim engine, wall seconds since
+    /// run start in the live engine.
+    pub at: f64,
+    pub learner: usize,
+    pub kind: ChurnKind,
+    /// λ_active immediately after the event.
+    pub active_after: usize,
+}
+
+/// The membership ledger: one phase per learner slot plus the churn log.
+#[derive(Debug, Clone)]
+pub struct Membership {
+    phases: Vec<Phase>,
+    /// Death time per slot (meaningful while Dead).
+    died_at: Vec<f64>,
+    pub log: Vec<ChurnRecord>,
+    /// death → rejoin gaps, in event-time seconds.
+    pub recovery_secs: Vec<f64>,
+}
+
+impl Membership {
+    /// All `total` slots start Active (the classic fixed-λ run).
+    pub fn new(total: usize) -> Membership {
+        Membership {
+            phases: vec![Phase::Active; total],
+            died_at: vec![0.0; total],
+            log: Vec::new(),
+            recovery_secs: Vec::new(),
+        }
+    }
+
+    /// `joining` slots start in `Joining` (deferred spot-instance joins);
+    /// the rest start Active. Out-of-range ids are rejected.
+    pub fn with_joining(total: usize, joining: &[usize]) -> Result<Membership> {
+        let mut m = Membership::new(total);
+        for &l in joining {
+            if l >= total {
+                bail!("joining learner id {l} out of range (λ slots = {total})");
+            }
+            m.phases[l] = Phase::Joining;
+        }
+        Ok(m)
+    }
+
+    pub fn total(&self) -> usize {
+        self.phases.len()
+    }
+
+    pub fn phase(&self, l: usize) -> Phase {
+        self.phases[l]
+    }
+
+    pub fn is_live(&self, l: usize) -> bool {
+        self.phases[l].is_live()
+    }
+
+    /// λ_active: learners counted in the protocol quorum.
+    pub fn active_count(&self) -> usize {
+        self.phases.iter().filter(|p| p.is_live()).count()
+    }
+
+    /// Ids currently counted in the quorum, ascending.
+    pub fn live_ids(&self) -> Vec<usize> {
+        (0..self.phases.len()).filter(|&l| self.phases[l].is_live()).collect()
+    }
+
+    fn record(&mut self, at: f64, learner: usize, kind: ChurnKind) {
+        let active_after = self.active_count();
+        self.log.push(ChurnRecord { at, learner, kind, active_after });
+    }
+
+    /// Joining → Active (the deferred learner came up).
+    pub fn activate(&mut self, l: usize, at: f64) -> Result<()> {
+        match self.phases[l] {
+            Phase::Joining => {
+                self.phases[l] = Phase::Active;
+                self.record(at, l, ChurnKind::Join);
+                Ok(())
+            }
+            p => bail!("learner {l} cannot join from {:?}", p.label()),
+        }
+    }
+
+    /// Active/Rejoined → Suspect (missed heartbeats; still in the quorum).
+    pub fn suspect(&mut self, l: usize, at: f64) -> Result<()> {
+        match self.phases[l] {
+            Phase::Active | Phase::Rejoined => {
+                self.phases[l] = Phase::Suspect;
+                self.record(at, l, ChurnKind::Suspect);
+                Ok(())
+            }
+            p => bail!("learner {l} cannot become suspect from {:?}", p.label()),
+        }
+    }
+
+    /// Suspect → Active (a heartbeat arrived before eviction).
+    pub fn recover(&mut self, l: usize, at: f64) -> Result<()> {
+        match self.phases[l] {
+            Phase::Suspect => {
+                self.phases[l] = Phase::Active;
+                self.record(at, l, ChurnKind::Recover);
+                Ok(())
+            }
+            p => bail!("learner {l} cannot recover from {:?}", p.label()),
+        }
+    }
+
+    /// Any live phase (or Joining) → Dead. Records the death time for the
+    /// recovery-time accounting.
+    pub fn kill(&mut self, l: usize, at: f64) -> Result<()> {
+        match self.phases[l] {
+            Phase::Active | Phase::Suspect | Phase::Rejoined | Phase::Joining => {
+                self.phases[l] = Phase::Dead;
+                self.died_at[l] = at;
+                self.record(at, l, ChurnKind::Kill);
+                Ok(())
+            }
+            Phase::Dead => bail!("learner {l} is already dead"),
+        }
+    }
+
+    /// Dead → Rejoined (warm restart). Returns the downtime and logs it as
+    /// this learner's recovery time.
+    pub fn rejoin(&mut self, l: usize, at: f64) -> Result<f64> {
+        match self.phases[l] {
+            Phase::Dead => {
+                self.phases[l] = Phase::Rejoined;
+                let downtime = (at - self.died_at[l]).max(0.0);
+                self.recovery_secs.push(downtime);
+                self.record(at, l, ChurnKind::Rejoin);
+                Ok(downtime)
+            }
+            p => bail!("learner {l} cannot rejoin from {:?}", p.label()),
+        }
+    }
+}
+
+/// A scheduled churn action.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChurnAction {
+    /// The learner comes up for the first time (it starts in `Joining`).
+    Join,
+    Kill,
+    Rejoin,
+}
+
+/// One scheduled churn event (deterministic churn).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ChurnEvent {
+    /// Virtual-time seconds (sim engine).
+    pub at: f64,
+    pub learner: usize,
+    pub action: ChurnAction,
+}
+
+/// A churn schedule: explicit timed events plus an optional random
+/// kill/rejoin process (realized deterministically by
+/// [`crate::netsim::failure::FailureInjector`]).
+///
+/// Parsed from the config DSL, a comma-separated list of
+/// `kill:<id>@<secs>`, `rejoin:<id>@<secs>`, `join:<id>@<secs>`,
+/// `rate:<kills-per-1000s>`, `downtime:<mean-secs>` — or `none`.
+/// Example: `"kill:3@10,rejoin:3@25,rate:2,downtime:30"`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ChurnSchedule {
+    /// Deterministic events, sorted by time.
+    pub events: Vec<ChurnEvent>,
+    /// Mean random kills per 1000 virtual seconds (0 = off).
+    pub kill_rate_per_ksec: f64,
+    /// Mean seconds a randomly killed learner stays dead before
+    /// rejoining (0 = killed learners never rejoin).
+    pub mean_downtime_secs: f64,
+}
+
+impl ChurnSchedule {
+    pub fn none() -> ChurnSchedule {
+        ChurnSchedule { events: Vec::new(), kill_rate_per_ksec: 0.0, mean_downtime_secs: 0.0 }
+    }
+
+    /// True when the schedule injects no churn at all.
+    pub fn is_quiet(&self) -> bool {
+        self.events.is_empty() && self.kill_rate_per_ksec == 0.0
+    }
+
+    /// Learner ids whose *first* scheduled action is `Join` — they start
+    /// in the `Joining` phase instead of Active. A learner whose first
+    /// event is a kill starts Active (it must be up to die); a later
+    /// `join:` for it is then handled as a warm rejoin by the engine.
+    /// Relies on `events` being time-sorted (parse sorts; hand-built
+    /// schedules should too).
+    pub fn joining_ids(&self) -> Vec<usize> {
+        let mut first_seen = std::collections::BTreeSet::new();
+        let mut out = Vec::new();
+        for e in &self.events {
+            if first_seen.insert(e.learner) && e.action == ChurnAction::Join {
+                out.push(e.learner);
+            }
+        }
+        out
+    }
+
+    /// Parse the config DSL (see the type docs).
+    pub fn parse(s: &str) -> Result<ChurnSchedule> {
+        let mut out = ChurnSchedule::none();
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(out);
+        }
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (head, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad churn token {tok:?} (want kind:…)"))?;
+            match head.to_ascii_lowercase().as_str() {
+                "rate" => {
+                    out.kill_rate_per_ksec = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad churn rate {rest:?}"))?;
+                    if out.kill_rate_per_ksec < 0.0 {
+                        bail!("churn rate must be >= 0");
+                    }
+                }
+                "downtime" => {
+                    out.mean_downtime_secs = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad churn downtime {rest:?}"))?;
+                    if out.mean_downtime_secs < 0.0 {
+                        bail!("churn downtime must be >= 0");
+                    }
+                }
+                kind => {
+                    let action = match kind {
+                        "kill" => ChurnAction::Kill,
+                        "rejoin" => ChurnAction::Rejoin,
+                        "join" => ChurnAction::Join,
+                        other => bail!(
+                            "unknown churn action {other:?} (kill|rejoin|join|rate|downtime)"
+                        ),
+                    };
+                    let (id, at) = rest.split_once('@').ok_or_else(|| {
+                        anyhow::anyhow!("bad churn event {tok:?} (want {kind}:<id>@<secs>)")
+                    })?;
+                    let learner: usize = id
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad learner id {id:?} in {tok:?}"))?;
+                    let at: f64 = at
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad event time {at:?} in {tok:?}"))?;
+                    if at < 0.0 {
+                        bail!("churn event time must be >= 0 in {tok:?}");
+                    }
+                    out.events.push(ChurnEvent { at, learner, action });
+                }
+            }
+        }
+        out.events.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .unwrap_or(std::cmp::Ordering::Equal)
+                .then(a.learner.cmp(&b.learner))
+        });
+        Ok(out)
+    }
+
+    /// Canonical label (round-trips through [`ChurnSchedule::parse`]).
+    pub fn label(&self) -> String {
+        if self.is_quiet() {
+            return "none".to_string();
+        }
+        let mut parts: Vec<String> = self
+            .events
+            .iter()
+            .map(|e| {
+                let kind = match e.action {
+                    ChurnAction::Kill => "kill",
+                    ChurnAction::Rejoin => "rejoin",
+                    ChurnAction::Join => "join",
+                };
+                format!("{kind}:{}@{}", e.learner, e.at)
+            })
+            .collect();
+        if self.kill_rate_per_ksec > 0.0 {
+            parts.push(format!("rate:{}", self.kill_rate_per_ksec));
+        }
+        if self.mean_downtime_secs > 0.0 {
+            parts.push(format!("downtime:{}", self.mean_downtime_secs));
+        }
+        parts.join(",")
+    }
+
+    /// Largest learner id referenced by a deterministic event, if any —
+    /// config validation checks it against λ.
+    pub fn max_learner_id(&self) -> Option<usize> {
+        self.events.iter().map(|e| e.learner).max()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_happy_path() {
+        let mut m = Membership::with_joining(4, &[3]).unwrap();
+        assert_eq!(m.active_count(), 3);
+        assert!(!m.is_live(3));
+        m.activate(3, 1.0).unwrap();
+        assert_eq!(m.active_count(), 4);
+        m.suspect(1, 2.0).unwrap();
+        assert_eq!(m.active_count(), 4, "suspects stay in the quorum");
+        m.recover(1, 2.5).unwrap();
+        assert_eq!(m.phase(1), Phase::Active);
+        m.kill(2, 3.0).unwrap();
+        assert_eq!(m.active_count(), 3);
+        assert_eq!(m.live_ids(), vec![0, 1, 3]);
+        let downtime = m.rejoin(2, 7.5).unwrap();
+        assert!((downtime - 4.5).abs() < 1e-12);
+        assert_eq!(m.phase(2), Phase::Rejoined);
+        assert_eq!(m.active_count(), 4);
+        assert_eq!(m.recovery_secs, vec![4.5]);
+        // a rejoined learner can die again
+        m.kill(2, 9.0).unwrap();
+        assert_eq!(m.active_count(), 3);
+        let kinds: Vec<ChurnKind> = m.log.iter().map(|r| r.kind).collect();
+        assert_eq!(
+            kinds,
+            vec![
+                ChurnKind::Join,
+                ChurnKind::Suspect,
+                ChurnKind::Recover,
+                ChurnKind::Kill,
+                ChurnKind::Rejoin,
+                ChurnKind::Kill,
+            ]
+        );
+        assert_eq!(m.log[3].active_after, 3);
+    }
+
+    #[test]
+    fn invalid_transitions_rejected() {
+        let mut m = Membership::new(2);
+        assert!(m.activate(0, 0.0).is_err(), "Active cannot re-join");
+        assert!(m.rejoin(0, 0.0).is_err(), "only the dead rejoin");
+        assert!(m.recover(0, 0.0).is_err(), "only suspects recover");
+        m.kill(0, 1.0).unwrap();
+        assert!(m.kill(0, 2.0).is_err(), "double kill");
+        assert!(m.suspect(0, 2.0).is_err(), "dead learners have no heartbeat");
+        assert!(Membership::with_joining(2, &[5]).is_err(), "id out of range");
+    }
+
+    #[test]
+    fn schedule_parse_and_label_roundtrip() {
+        let s = ChurnSchedule::parse("kill:3@10, rejoin:3@25.5, rate:2, downtime:30").unwrap();
+        assert_eq!(s.events.len(), 2);
+        assert_eq!(s.events[0].action, ChurnAction::Kill);
+        assert_eq!(s.events[0].learner, 3);
+        assert_eq!(s.events[1].at, 25.5);
+        assert_eq!(s.kill_rate_per_ksec, 2.0);
+        assert_eq!(s.mean_downtime_secs, 30.0);
+        assert!(!s.is_quiet());
+        assert_eq!(s.max_learner_id(), Some(3));
+        assert_eq!(ChurnSchedule::parse(&s.label()).unwrap(), s);
+        assert_eq!(ChurnSchedule::parse("none").unwrap(), ChurnSchedule::none());
+        assert!(ChurnSchedule::parse("none").unwrap().is_quiet());
+    }
+
+    #[test]
+    fn schedule_events_sorted_and_validated() {
+        let s = ChurnSchedule::parse("kill:1@9,kill:0@3,join:2@1").unwrap();
+        let times: Vec<f64> = s.events.iter().map(|e| e.at).collect();
+        assert_eq!(times, vec![1.0, 3.0, 9.0]);
+        assert_eq!(s.joining_ids(), vec![2]);
+        // only learners whose FIRST action is Join start deferred: a
+        // kill-then-join learner must start Active so the kill can land
+        let s = ChurnSchedule::parse("kill:2@5,join:2@10,join:3@1").unwrap();
+        assert_eq!(s.joining_ids(), vec![3]);
+        assert!(ChurnSchedule::parse("explode:1@2").is_err());
+        assert!(ChurnSchedule::parse("kill:x@2").is_err());
+        assert!(ChurnSchedule::parse("kill:1@-2").is_err());
+        assert!(ChurnSchedule::parse("rate:-1").is_err());
+    }
+}

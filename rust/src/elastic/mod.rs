@@ -1,0 +1,43 @@
+//! Elastic membership, checkpoint/restore, and live μ·λ rescaling.
+//!
+//! The paper fixes the learner count λ for a whole run, which makes its
+//! headline prescription — shrink the per-learner mini-batch μ as λ grows
+//! so μ·λ stays constant — untestable under the realistic regime where
+//! learners join, straggle, crash, and restart mid-training. Membership
+//! churn is exactly where synchronization-protocol tradeoffs bite:
+//! Chen et al., *Revisiting Distributed Synchronous SGD*, drop the
+//! slowest learners via backup workers; Dutta et al., *Slow and Stale
+//! Gradients Can Win the Race*, chart the error–runtime frontier under
+//! stragglers. This subsystem makes the codebase elastic:
+//!
+//! * [`membership`] — a learner lifecycle ledger
+//!   (Joining → Active → Suspect → Dead → Rejoined) with a validated
+//!   transition graph, churn log, and recovery-time accounting, driven by
+//!   a [`membership::ChurnSchedule`] (deterministic timed events and/or a
+//!   random failure process realized by
+//!   [`crate::netsim::failure::FailureInjector`]).
+//! * [`checkpoint`] — serialize/restore the sharded server (θ, optimizer
+//!   state, pending accumulators, shard timestamps, staleness history)
+//!   and named RNG streams through the offline JSON util; restore
+//!   re-validates the single-clock staleness invariant.
+//! * [`rescaler`] — the μ·λ = const rule applied live: every membership
+//!   change recomputes per-learner μ, the n-softsync collection threshold
+//!   c = ⌊λ_active/n⌋ (via the checked quota that rejects λ_active < n),
+//!   and the staleness-aware LR modulation factor through
+//!   [`crate::params::lr`].
+//!
+//! Both engines drive it: the virtual-time engine takes deterministic
+//! churn events from the netsim failure injector; the live engine detects
+//! failures by heartbeat timeout on its mpsc channels. Hardsync survives
+//! learner death through a membership-aware quorum (the quota flush in
+//! [`crate::coordinator::shard::ShardedServer::set_active_lambda`]), and
+//! the whole family of scenarios this unlocks — spot-instance preemption,
+//! straggler eviction, warm restart — is swept by `benches/perf_elastic`.
+
+pub mod checkpoint;
+pub mod membership;
+pub mod rescaler;
+
+pub use checkpoint::Checkpoint;
+pub use membership::{ChurnRecord, ChurnSchedule, Membership};
+pub use rescaler::{RescalePolicy, RescaleRecord, Rescaler};

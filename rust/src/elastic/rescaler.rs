@@ -1,0 +1,217 @@
+//! Live μ·λ = const rescaling — the paper's headline prescription kept
+//! true under churn.
+//!
+//! The paper's central accuracy result is that the *aggregate* mini-batch
+//! μ·λ, not the per-learner μ, is what governs convergence: adding
+//! learners without shrinking μ trades accuracy for runtime (Table 2).
+//! A static run fixes μ once; under elastic membership the product drifts
+//! every time a learner dies or joins. The [`Rescaler`] pins it: on every
+//! membership change it recomputes
+//!
+//! * the per-learner mini-batch μ = the integer closest to P/λ_active
+//!   (P = the configured product μ₀·λ₀), so μ·λ_active stays within one
+//!   mini-batch of P;
+//! * the n-softsync collection threshold c = ⌊λ_active/n⌋ via the
+//!   *checked* form that rejects λ_active < n
+//!   ([`Protocol::try_gradients_per_update`]);
+//! * the staleness-aware LR modulation factor through
+//!   [`crate::params::lr`] (the Eq. 6 α₀/⟨σ⟩ rule re-evaluated at the new
+//!   (μ, λ)).
+
+use anyhow::Result;
+
+use crate::coordinator::protocol::Protocol;
+use crate::params::lr::LrPolicy;
+
+/// Rescaling policy applied on membership changes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RescalePolicy {
+    /// Keep the configured per-learner μ fixed (the paper's static runs):
+    /// μ·λ drifts with churn.
+    None,
+    /// Hold μ·λ_active ≈ μ₀·λ₀ by recomputing μ on every change.
+    MuLambdaConst,
+}
+
+impl RescalePolicy {
+    pub fn parse(s: &str) -> Result<RescalePolicy> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" | "off" | "fixed-mu" => Ok(RescalePolicy::None),
+            "mulambda" | "mu-lambda" | "mulambda-const" | "const" => {
+                Ok(RescalePolicy::MuLambdaConst)
+            }
+            other => anyhow::bail!("unknown rescale policy {other:?} (none|mulambda)"),
+        }
+    }
+
+    pub fn label(&self) -> &'static str {
+        match self {
+            RescalePolicy::None => "none",
+            RescalePolicy::MuLambdaConst => "mulambda",
+        }
+    }
+}
+
+/// One rescale decision (logged per membership change).
+#[derive(Debug, Clone)]
+pub struct RescaleRecord {
+    /// Event time (virtual or wall seconds, engine-dependent).
+    pub at: f64,
+    pub active_lambda: usize,
+    /// Per-learner μ in force after the event.
+    pub mu: usize,
+    /// Collection threshold c in force after the event.
+    pub quota: usize,
+    /// Staleness-aware LR modulation factor at the new (μ, λ).
+    pub lr_factor: f64,
+}
+
+/// Applies a [`RescalePolicy`] against the run's configured μ₀·λ₀.
+#[derive(Debug, Clone, Copy)]
+pub struct Rescaler {
+    policy: RescalePolicy,
+    mu0: usize,
+    /// Target product P = μ₀·λ₀.
+    product: usize,
+}
+
+impl Rescaler {
+    pub fn new(policy: RescalePolicy, mu0: usize, lambda0: usize) -> Rescaler {
+        Rescaler { policy, mu0: mu0.max(1), product: mu0.max(1) * lambda0.max(1) }
+    }
+
+    pub fn policy(&self) -> RescalePolicy {
+        self.policy
+    }
+
+    /// The pinned product P = μ₀·λ₀.
+    pub fn target_product(&self) -> usize {
+        self.product
+    }
+
+    /// Per-learner μ for `active` learners. Under `MuLambdaConst` this is
+    /// whichever of ⌊P/λ⌋ and ⌈P/λ⌉ lands μ·λ closer to P (ties go to the
+    /// smaller μ — erring toward fresher gradients), clamped to ≥ 1.
+    pub fn mu_for(&self, active: usize) -> usize {
+        match self.policy {
+            RescalePolicy::None => self.mu0,
+            RescalePolicy::MuLambdaConst => {
+                let active = active.max(1);
+                let lo = (self.product / active).max(1);
+                let hi = lo + 1;
+                let err = |mu: usize| (mu * active).abs_diff(self.product);
+                if err(hi) < err(lo) {
+                    hi
+                } else {
+                    lo
+                }
+            }
+        }
+    }
+
+    /// The collection threshold for `active` learners, via the checked
+    /// quota (rejects λ_active the protocol cannot serve).
+    pub fn quota_for(&self, protocol: Protocol, active: usize) -> Result<usize> {
+        protocol.try_gradients_per_update(active)
+    }
+
+    /// The staleness-aware LR modulation factor at the post-churn (μ, λ)
+    /// — Eq. 6 re-evaluated live through [`crate::params::lr`].
+    pub fn lr_factor(&self, lr: &LrPolicy, protocol: Protocol, active: usize) -> f64 {
+        lr.factor(protocol, self.mu_for(active), active.max(1))
+    }
+
+    /// Build the log record for a membership change.
+    pub fn record(
+        &self,
+        at: f64,
+        lr: &LrPolicy,
+        protocol: Protocol,
+        active: usize,
+    ) -> Result<RescaleRecord> {
+        Ok(RescaleRecord {
+            at,
+            active_lambda: active,
+            mu: self.mu_for(active),
+            quota: self.quota_for(protocol, active)?,
+            lr_factor: self.lr_factor(lr, protocol, active),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::params::lr::{Modulation, Schedule};
+
+    #[test]
+    fn policy_labels_roundtrip() {
+        for p in [RescalePolicy::None, RescalePolicy::MuLambdaConst] {
+            assert_eq!(RescalePolicy::parse(p.label()).unwrap(), p);
+        }
+        assert!(RescalePolicy::parse("sideways").is_err());
+    }
+
+    #[test]
+    fn none_policy_keeps_mu_fixed() {
+        let r = Rescaler::new(RescalePolicy::None, 8, 4);
+        for active in [1usize, 3, 4, 9] {
+            assert_eq!(r.mu_for(active), 8);
+        }
+    }
+
+    #[test]
+    fn mulambda_holds_product_within_one_minibatch() {
+        // P = 64 with λ ranging over realistic churn: the invariant the
+        // integration suite checks per churn event.
+        let r = Rescaler::new(RescalePolicy::MuLambdaConst, 8, 8);
+        assert_eq!(r.target_product(), 64);
+        for active in 1usize..=10 {
+            let mu = r.mu_for(active);
+            let err = (mu * active).abs_diff(64);
+            assert!(
+                err <= mu,
+                "λ={active}: μ={mu} gives |μλ−P| = {err} > one mini-batch"
+            );
+        }
+        // exact divisions land exactly
+        assert_eq!(r.mu_for(8), 8);
+        assert_eq!(r.mu_for(4), 16);
+        assert_eq!(r.mu_for(16), 4);
+        // rounding picks the closer side: P=64, λ=5 → 13·5=65 beats 12·5=60
+        assert_eq!(r.mu_for(5), 13);
+        // μ never hits 0 even when λ exceeds P
+        let tiny = Rescaler::new(RescalePolicy::MuLambdaConst, 1, 2);
+        assert_eq!(tiny.mu_for(8), 1);
+    }
+
+    #[test]
+    fn quota_uses_checked_form() {
+        let r = Rescaler::new(RescalePolicy::MuLambdaConst, 4, 8);
+        assert_eq!(r.quota_for(Protocol::NSoftsync { n: 2 }, 8).unwrap(), 4);
+        assert!(r.quota_for(Protocol::NSoftsync { n: 2 }, 1).is_err());
+        assert_eq!(r.quota_for(Protocol::Hardsync, 5).unwrap(), 5);
+    }
+
+    #[test]
+    fn lr_factor_tracks_membership() {
+        // Hardsync √-rule: α scales with √(λμ/B); under μλ=const the
+        // factor is pinned too — that is the point of the rule.
+        let lr = LrPolicy::new(Schedule::constant(0.1), Modulation::Auto, 64);
+        let r = Rescaler::new(RescalePolicy::MuLambdaConst, 8, 8);
+        let f8 = r.lr_factor(&lr, Protocol::Hardsync, 8);
+        let f4 = r.lr_factor(&lr, Protocol::Hardsync, 4);
+        assert!((f8 - 1.0).abs() < 1e-12, "64/64 → 1, got {f8}");
+        assert!((f4 - 1.0).abs() < 1e-12, "μ rescaled to 16 keeps λμ = 64, got {f4}");
+        // under a fixed-μ policy the factor drifts instead
+        let fixed = Rescaler::new(RescalePolicy::None, 8, 8);
+        let f4_fixed = fixed.lr_factor(&lr, Protocol::Hardsync, 4);
+        assert!((f4_fixed - (32.0f64 / 64.0).sqrt()).abs() < 1e-12);
+        // record() assembles the full log row
+        let rec = r.record(1.5, &lr, Protocol::NSoftsync { n: 1 }, 4).unwrap();
+        assert_eq!(rec.active_lambda, 4);
+        assert_eq!(rec.mu, 16);
+        assert_eq!(rec.quota, 4);
+        assert!((rec.lr_factor - 1.0).abs() < 1e-12, "1-softsync: α₀/1");
+    }
+}

@@ -32,6 +32,12 @@ pub struct PointResult {
     pub max_staleness: u64,
     pub updates: u64,
     pub epochs: Vec<crate::coordinator::engine_sim::EpochStat>,
+    /// Churn events observed (kills/rejoins/joins; 0 for static runs).
+    pub churn_events: usize,
+    /// Death → rejoin downtimes (virtual seconds).
+    pub recovery_secs: Vec<f64>,
+    /// λ_active at the end of the run.
+    pub final_active_lambda: usize,
 }
 
 /// Runs grid points with shared compiled executables.
@@ -73,6 +79,9 @@ impl<'a> Sweep<'a> {
             shards: cfg.shards,
             eval_each_epoch: self.eval_each_epoch,
             max_updates: None,
+            churn: cfg.churn.clone(),
+            rescale: cfg.rescale,
+            checkpoint_every_updates: cfg.checkpoint_every,
         };
         let theta0 = warmstarted(self, cfg)?;
         let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
@@ -87,11 +96,18 @@ impl<'a> Sweep<'a> {
         let (test_loss, test_error_pct) = result.final_eval.unwrap_or((f64::NAN, f64::NAN));
 
         // Paper-scale timing overlay: same (protocol, μ, λ, arch) on the
-        // CIFAR10 cost geometry, timing-only.
+        // CIFAR10 cost geometry, timing-only. Deliberately churn-free: the
+        // overlay is the *paper's* static-λ reference time, and a churn
+        // schedule calibrated (in seconds) to the short numeric run would
+        // replay nonsensically — or kill λ_active below a softsync n —
+        // over the 140-epoch horizon.
         let paper_cfg = SimConfig {
             model: ModelCost::cifar10(),
             epochs: 140,
             eval_each_epoch: false,
+            churn: crate::elastic::membership::ChurnSchedule::none(),
+            rescale: crate::elastic::rescaler::RescalePolicy::None,
+            checkpoint_every_updates: 0,
             ..sim_cfg.clone()
         };
         let paper_time = run_sim(
@@ -116,6 +132,9 @@ impl<'a> Sweep<'a> {
             max_staleness: result.staleness.max,
             updates: result.updates,
             epochs: result.epochs,
+            churn_events: result.churn.len(),
+            recovery_secs: result.recovery_secs,
+            final_active_lambda: result.final_active_lambda,
         })
     }
 
@@ -170,6 +189,12 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         shards: cfg.shards,
         eval_each_epoch: false,
         max_updates: None,
+        // The warm-start phase is a controlled prologue: no churn, no
+        // rescaling, no checkpoints — elasticity applies to the run under
+        // test only.
+        churn: crate::elastic::membership::ChurnSchedule::none(),
+        rescale: crate::elastic::rescaler::RescalePolicy::None,
+        checkpoint_every_updates: 0,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();

@@ -22,6 +22,7 @@
 pub mod config;
 pub mod coordinator;
 pub mod data;
+pub mod elastic;
 pub mod harness;
 pub mod netsim;
 pub mod params;

@@ -10,9 +10,10 @@
 use anyhow::Result;
 
 use rudra::config::RunConfig;
-use rudra::coordinator::engine_live::{run_live, LiveConfig};
+use rudra::coordinator::engine_live::{run_live, LiveConfig, LiveElastic};
 use rudra::coordinator::engine_sim::{run_sim, SimConfig};
 use rudra::coordinator::protocol::Protocol;
+use rudra::elastic::rescaler::RescalePolicy;
 use rudra::harness::sweep::Sweep;
 use rudra::harness::Workspace;
 use rudra::netsim::cost::ModelCost;
@@ -30,6 +31,13 @@ const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing> [--flags]
 common flags: --protocol hardsync|async|<n>-softsync  --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
               --shards S (root parameter shards; 1 = flat server)
+elasticity:   --churn SPEC (kill:<id>@<t>,rejoin:<id>@<t>,join:<id>@<t>,
+                rate:<kills/1000s>,downtime:<mean-s> | none) [sim/sweep/timing]
+              --rescale none|mulambda (hold μ·λ_active ≈ μ₀·λ₀)
+              --checkpoint-every N (server checkpoint every N updates)
+                [sim/sweep/timing]
+              --heartbeat-ms N (live engine: evict learners silent > 2N ms)
+              --epoch-csv FILE (sim: per-epoch CSV incl. active-λ column)
 ";
 
 fn main() {
@@ -68,6 +76,21 @@ fn run() -> Result<()> {
             anyhow::bail!("unknown command {other:?}\n{USAGE}");
         }
     }
+}
+
+/// Live-engine elasticity from the config + CLI: `--heartbeat-ms` arms
+/// eviction of silent learners; the rescale policy rides along. (The
+/// time-based `--churn` DSL drives the *sim* engine; the live engine's
+/// deterministic churn schedules are test-facing —
+/// [`rudra::coordinator::engine_live::LiveElastic`].)
+fn live_elastic(cfg: &RunConfig, args: &Args) -> Result<Option<LiveElastic>> {
+    let hb_ms = args.u64_or("heartbeat-ms", 0)?;
+    if hb_ms == 0 && cfg.rescale == RescalePolicy::None {
+        return Ok(None);
+    }
+    let mut e = LiveElastic::heartbeat(std::time::Duration::from_millis(hb_ms));
+    e.rescale = cfg.rescale;
+    Ok(Some(e))
 }
 
 fn cmd_info() -> Result<()> {
@@ -127,6 +150,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         samples_per_epoch: train.n as u64,
         shards: cfg.shards,
         log_every: args.u64_or("log-every", 50)?,
+        elastic: live_elastic(cfg, args)?,
     };
     let ws = Workspace::open_default()?;
     let theta0 = ws.cnn_init()?;
@@ -146,6 +170,13 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     );
     if cfg.shards > 1 {
         println!("server: {}", rudra::stats::shard_update_summary(&result.shard_updates));
+    }
+    if !result.churn.is_empty() {
+        println!(
+            "membership: {} (λ_active at end: {})",
+            rudra::stats::churn_summary(&result.churn, &result.recovery_secs),
+            result.final_active_lambda
+        );
     }
 
     if !args.flag("no-eval") {
@@ -176,16 +207,36 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
         fmt_secs(p.sim_seconds),
         fmt_secs(p.paper_sim_seconds)
     );
+    if p.churn_events > 0 {
+        let mean_rec = rudra::util::mean(&p.recovery_secs);
+        println!(
+            "membership: {} churn events, λ_active at end {}, mean recovery {}",
+            p.churn_events,
+            p.final_active_lambda,
+            fmt_secs(mean_rec)
+        );
+    }
     for e in &p.epochs {
         if let Some(err) = e.test_error_pct {
             println!(
-                "  epoch {:>3}  sim t {:>10}  train loss {:.4}  test err {:.2}%",
+                "  epoch {:>3}  sim t {:>10}  train loss {:.4}  test err {:.2}%  λ_active {}",
                 e.epoch,
                 fmt_secs(e.sim_time),
                 e.train_loss,
-                err
+                err,
+                e.active_lambda
             );
         }
+    }
+    if let Some(path) = args.get("epoch-csv") {
+        let mut log = rudra::stats::log::CsvLog::create(
+            std::path::Path::new(path),
+            &rudra::stats::log::EPOCH_COLUMNS,
+        )?;
+        for e in &p.epochs {
+            log.row(&rudra::stats::log::epoch_row(e))?;
+        }
+        println!("wrote {} epoch rows to {path}", p.epochs.len());
     }
     Ok(())
 }
@@ -223,6 +274,10 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     let epochs = args.usize_or("epochs", cfg.epochs)?;
     let mut sim_cfg = SimConfig::paper(cfg.protocol, cfg.arch, cfg.mu, cfg.lambda, epochs, model);
     sim_cfg.shards = cfg.shards;
+    sim_cfg.seed = cfg.seed;
+    sim_cfg.churn = cfg.churn.clone();
+    sim_cfg.rescale = cfg.rescale;
+    sim_cfg.checkpoint_every_updates = cfg.checkpoint_every;
     let r = run_sim(
         &sim_cfg,
         rudra::params::FlatVec::zeros(0),
@@ -243,6 +298,16 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     );
     if cfg.shards > 1 {
         println!("server: {}", rudra::stats::shard_update_summary(&r.shard_updates));
+    }
+    if !r.churn.is_empty() {
+        println!(
+            "membership: {} (λ_active at end: {})",
+            rudra::stats::churn_summary(&r.churn, &r.recovery_secs),
+            r.final_active_lambda
+        );
+    }
+    if r.checkpoints_taken > 0 {
+        println!("checkpoints: {} captured", r.checkpoints_taken);
     }
     let _ = Protocol::Hardsync; // referenced for doc completeness
     Ok(())

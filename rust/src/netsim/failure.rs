@@ -1,0 +1,119 @@
+//! Deterministic failure injection for the virtual-time cluster.
+//!
+//! Models the random component of a churn schedule — spot-instance
+//! preemptions arriving as a Poisson process, each followed by an
+//! exponentially distributed downtime before the learner warm-restarts.
+//! Everything draws from a dedicated seeded [`Rng`] stream, so a churned
+//! run replays bit-identically for a given seed (the same property the
+//! rest of the event queue guarantees).
+//!
+//! The injector is policy-light by design: it only *draws* kill times,
+//! victims, and downtimes. Applying them — updating the membership
+//! ledger, rescaling μ·λ, flushing protocol quotas — is the engine's job
+//! ([`crate::coordinator::engine_sim`]).
+
+use crate::util::rng::Rng;
+
+/// Draws a Poisson kill process with exponential downtimes.
+#[derive(Debug, Clone)]
+pub struct FailureInjector {
+    rng: Rng,
+    /// Mean seconds between random kills (∞ encoded as 0 rate upstream).
+    mean_interarrival: f64,
+    /// Mean downtime before a killed learner rejoins (0 = never rejoin).
+    mean_downtime: f64,
+}
+
+impl FailureInjector {
+    /// `kill_rate_per_ksec` is the schedule's mean kills per 1000 virtual
+    /// seconds; 0 disables the random process entirely.
+    pub fn new(kill_rate_per_ksec: f64, mean_downtime_secs: f64, seed: u64) -> FailureInjector {
+        FailureInjector {
+            // decorrelate from the engine's jitter stream
+            rng: Rng::new(seed ^ 0xE1A5_71C0_FA17_0B3D),
+            mean_interarrival: if kill_rate_per_ksec > 0.0 {
+                1000.0 / kill_rate_per_ksec
+            } else {
+                0.0
+            },
+            mean_downtime: mean_downtime_secs.max(0.0),
+        }
+    }
+
+    /// Whether the random kill process is active.
+    pub fn enabled(&self) -> bool {
+        self.mean_interarrival > 0.0
+    }
+
+    /// Seconds until the next random kill (exponential interarrival).
+    /// Only meaningful when [`FailureInjector::enabled`].
+    pub fn next_kill_delay(&mut self) -> f64 {
+        debug_assert!(self.enabled());
+        self.rng.exponential(self.mean_interarrival)
+    }
+
+    /// Downtime for a freshly killed learner: `Some(secs)` if the
+    /// schedule lets learners rejoin, `None` for permanent eviction.
+    pub fn downtime(&mut self) -> Option<f64> {
+        if self.mean_downtime > 0.0 {
+            Some(self.rng.exponential(self.mean_downtime))
+        } else {
+            None
+        }
+    }
+
+    /// Pick a victim uniformly among `candidates` (the engine passes the
+    /// currently live set, minus any survivors it wants to protect).
+    pub fn pick(&mut self, candidates: &[usize]) -> Option<usize> {
+        if candidates.is_empty() {
+            None
+        } else {
+            Some(candidates[self.rng.usize_below(candidates.len())])
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn disabled_at_zero_rate() {
+        let inj = FailureInjector::new(0.0, 10.0, 1);
+        assert!(!inj.enabled());
+    }
+
+    #[test]
+    fn deterministic_for_a_seed() {
+        let mut a = FailureInjector::new(5.0, 20.0, 42);
+        let mut b = FailureInjector::new(5.0, 20.0, 42);
+        for _ in 0..50 {
+            assert_eq!(a.next_kill_delay(), b.next_kill_delay());
+            assert_eq!(a.downtime(), b.downtime());
+            assert_eq!(a.pick(&[3, 5, 9]), b.pick(&[3, 5, 9]));
+        }
+    }
+
+    #[test]
+    fn kill_delays_match_requested_rate() {
+        // 5 kills per 1000 s ⇒ mean interarrival 200 s.
+        let mut inj = FailureInjector::new(5.0, 0.0, 7);
+        let n = 4000;
+        let mean: f64 = (0..n).map(|_| inj.next_kill_delay()).sum::<f64>() / n as f64;
+        assert!((150.0..250.0).contains(&mean), "mean interarrival {mean}");
+        assert_eq!(inj.downtime(), None, "downtime 0 = permanent eviction");
+    }
+
+    #[test]
+    fn pick_covers_all_candidates() {
+        let mut inj = FailureInjector::new(1.0, 1.0, 3);
+        let cands = [2usize, 4, 7];
+        let mut seen = [false; 3];
+        for _ in 0..200 {
+            let v = inj.pick(&cands).unwrap();
+            seen[cands.iter().position(|&c| c == v).unwrap()] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+        assert_eq!(inj.pick(&[]), None);
+    }
+}

@@ -13,9 +13,12 @@
 //!
 //! [`event`] provides the virtual-time event queue shared with the
 //! coordinator's simulation engine; [`overlap`] accounts the
-//! computation/communication overlap ratio that Table 1 reports.
+//! computation/communication overlap ratio that Table 1 reports;
+//! [`failure`] injects deterministic churn (random kills + downtimes) for
+//! the elastic-membership scenarios ([`crate::elastic`]).
 
 pub mod cluster;
 pub mod cost;
 pub mod event;
+pub mod failure;
 pub mod overlap;

@@ -32,6 +32,34 @@ pub enum Modulation {
     Auto,
 }
 
+impl Modulation {
+    /// Parse a config/CLI label (`none | sqrt | staleness | per-gradient |
+    /// auto`, plus the aliases the config file historically accepted).
+    pub fn parse(s: &str) -> anyhow::Result<Modulation> {
+        match s.trim().to_ascii_lowercase().as_str() {
+            "none" => Ok(Modulation::None),
+            "sqrt" | "hardsync-sqrt" => Ok(Modulation::HardsyncSqrt),
+            "staleness" | "reciprocal" | "1/n" => Ok(Modulation::StalenessReciprocal),
+            "per-gradient" | "pergrad" => Ok(Modulation::PerGradient),
+            "auto" => Ok(Modulation::Auto),
+            other => anyhow::bail!(
+                "unknown modulation {other:?} (none|sqrt|staleness|per-gradient|auto)"
+            ),
+        }
+    }
+
+    /// Canonical label; `Modulation::parse(m.label())` round-trips.
+    pub fn label(&self) -> &'static str {
+        match self {
+            Modulation::None => "none",
+            Modulation::HardsyncSqrt => "sqrt",
+            Modulation::StalenessReciprocal => "staleness",
+            Modulation::PerGradient => "per-gradient",
+            Modulation::Auto => "auto",
+        }
+    }
+}
+
 /// Step-drop schedule: α is multiplied by `factor` at each epoch in
 /// `drops` (paper: factor 0.1 at epochs 120 and 130 of 140).
 #[derive(Debug, Clone)]
@@ -122,6 +150,41 @@ impl LrPolicy {
     pub fn is_per_gradient(&self) -> bool {
         self.modulation == Modulation::PerGradient
     }
+
+    /// Serialize for checkpointing: a restored server must reproduce the
+    /// exact α sequence of the original run.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("base", Json::num(self.schedule.base)),
+            (
+                "drops",
+                Json::Arr(self.schedule.drops.iter().map(|&d| Json::num(d as f64)).collect()),
+            ),
+            ("factor", Json::num(self.schedule.factor)),
+            ("modulation", Json::str(self.modulation.label())),
+            ("reference_batch", Json::num(self.reference_batch as f64)),
+        ])
+    }
+
+    /// Restore from [`LrPolicy::to_json`] output.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<LrPolicy> {
+        let drops = j
+            .get("drops")?
+            .as_arr()?
+            .iter()
+            .map(|v| v.as_usize())
+            .collect::<anyhow::Result<Vec<usize>>>()?;
+        Ok(LrPolicy {
+            schedule: Schedule {
+                base: j.get("base")?.as_f64()?,
+                drops,
+                factor: j.get("factor")?.as_f64()?,
+            },
+            modulation: Modulation::parse(j.get("modulation")?.as_str()?)?,
+            reference_batch: j.get("reference_batch")?.as_usize()?,
+        })
+    }
 }
 
 #[cfg(test)]
@@ -169,5 +232,34 @@ mod tests {
     fn none_modulation_is_identity() {
         let p = LrPolicy::new(Schedule::constant(0.01), Modulation::None, 128);
         assert!((p.alpha(0, Protocol::NSoftsync { n: 30 }, 128, 30) - 0.01).abs() < 1e-12);
+    }
+
+    #[test]
+    fn modulation_labels_roundtrip() {
+        for m in [
+            Modulation::None,
+            Modulation::HardsyncSqrt,
+            Modulation::StalenessReciprocal,
+            Modulation::PerGradient,
+            Modulation::Auto,
+        ] {
+            assert_eq!(Modulation::parse(m.label()).unwrap(), m);
+        }
+        assert!(Modulation::parse("wat").is_err());
+    }
+
+    #[test]
+    fn policy_json_roundtrip_reproduces_alpha() {
+        let p = LrPolicy::new(
+            Schedule { base: 0.02, drops: vec![8, 12], factor: 0.1 },
+            Modulation::StalenessReciprocal,
+            256,
+        );
+        let text = p.to_json().to_string();
+        let back = LrPolicy::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        for epoch in [0usize, 8, 12, 20] {
+            let proto = Protocol::NSoftsync { n: 4 };
+            assert_eq!(p.alpha(epoch, proto, 16, 8), back.alpha(epoch, proto, 16, 8));
+        }
     }
 }

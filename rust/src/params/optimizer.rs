@@ -94,6 +94,50 @@ impl Optimizer {
             s.fill(0.0);
         }
     }
+
+    /// Serialize kind, hyperparameters, and accumulated state (momentum
+    /// velocity / AdaGrad accumulator) for checkpointing.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let (kind, param) = match self.kind {
+            OptimizerKind::Sgd => ("sgd", 0.0f32),
+            OptimizerKind::Momentum { momentum } => ("momentum", momentum),
+            OptimizerKind::Adagrad { eps } => ("adagrad", eps),
+        };
+        Json::obj(vec![
+            ("kind", Json::str(kind)),
+            ("param", Json::num(param as f64)),
+            ("weight_decay", Json::num(self.weight_decay as f64)),
+            (
+                "state",
+                match &self.state {
+                    Some(s) => Json::arr_f32(&s.data),
+                    None => Json::Null,
+                },
+            ),
+        ])
+    }
+
+    /// Restore from [`Optimizer::to_json`] output; the restored optimizer
+    /// continues the exact update sequence.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<Optimizer> {
+        let param = j.get("param")?.as_f64()? as f32;
+        let kind = match j.get("kind")?.as_str()? {
+            "sgd" => OptimizerKind::Sgd,
+            "momentum" => OptimizerKind::Momentum { momentum: param },
+            "adagrad" => OptimizerKind::Adagrad { eps: param },
+            other => anyhow::bail!("unknown optimizer kind {other:?} in checkpoint"),
+        };
+        let state = match j.get("state")? {
+            crate::util::json::Json::Null => None,
+            arr => Some(FlatVec::from_vec(arr.as_f32_vec()?)),
+        };
+        anyhow::ensure!(
+            state.is_some() == !matches!(kind, OptimizerKind::Sgd),
+            "optimizer checkpoint: state presence does not match kind"
+        );
+        Ok(Optimizer { kind, weight_decay: j.get("weight_decay")?.as_f64()? as f32, state })
+    }
 }
 
 #[cfg(test)]
@@ -144,6 +188,28 @@ mod tests {
         let g = FlatVec::zeros(1);
         opt.apply(&mut t, &g, 0.5);
         assert!(t.data[0] < 1.0 && t.data[0] > 0.0);
+    }
+
+    #[test]
+    fn json_roundtrip_continues_identical_updates() {
+        for kind in [
+            OptimizerKind::Sgd,
+            OptimizerKind::Momentum { momentum: 0.9 },
+            OptimizerKind::Adagrad { eps: 1e-8 },
+        ] {
+            let mut a = Optimizer::new(kind, 1e-4, 3);
+            let mut ta = FlatVec::from_vec(vec![1.0, -0.5, 0.25]);
+            let g = FlatVec::from_vec(vec![0.3, 0.7, -0.2]);
+            a.apply(&mut ta, &g, 0.1);
+            let text = a.to_json().to_string();
+            let mut b =
+                Optimizer::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+            assert_eq!(b.kind, a.kind, "{kind:?}");
+            let mut tb = ta.clone();
+            a.apply(&mut ta, &g, 0.1);
+            b.apply(&mut tb, &g, 0.1);
+            assert_eq!(ta.data, tb.data, "{kind:?} must resume bit-identically");
+        }
     }
 
     #[test]

@@ -39,6 +39,27 @@ impl CsvLog {
     }
 }
 
+/// Canonical per-epoch CSV header, including the elastic columns
+/// (active-λ per epoch; churn/recovery totals live in the run-level
+/// summary — [`crate::stats::churn_summary`]).
+pub const EPOCH_COLUMNS: [&str; 6] =
+    ["epoch", "sim_time_s", "train_loss", "test_loss", "test_error_pct", "active_lambda"];
+
+/// Render one [`EpochStat`] as a row under [`EPOCH_COLUMNS`].
+///
+/// [`EpochStat`]: crate::coordinator::engine_sim::EpochStat
+pub fn epoch_row(e: &crate::coordinator::engine_sim::EpochStat) -> Vec<String> {
+    let opt = |v: Option<f64>| v.map(|x| format!("{x}")).unwrap_or_default();
+    vec![
+        e.epoch.to_string(),
+        format!("{}", e.sim_time),
+        format!("{}", e.train_loss),
+        opt(e.test_loss),
+        opt(e.test_error_pct),
+        e.active_lambda.to_string(),
+    ]
+}
+
 /// Append-mode JSONL writer.
 pub struct JsonlLog {
     file: std::fs::File,
@@ -76,6 +97,28 @@ mod tests {
         drop(log);
         let text = std::fs::read_to_string(&path).unwrap();
         assert_eq!(text, "epoch,loss\n1,0.5\n2,0.25\n");
+    }
+
+    #[test]
+    fn epoch_rows_fit_the_header() {
+        let e = crate::coordinator::engine_sim::EpochStat {
+            epoch: 3,
+            sim_time: 12.5,
+            train_loss: 0.75,
+            test_loss: None,
+            test_error_pct: Some(18.0),
+            active_lambda: 6,
+        };
+        let row = epoch_row(&e);
+        assert_eq!(row.len(), EPOCH_COLUMNS.len());
+        assert_eq!(row[0], "3");
+        assert_eq!(row[3], "", "missing eval renders empty");
+        assert_eq!(row[5], "6");
+        // and the CsvLog accepts it under the canonical header
+        let dir = std::env::temp_dir().join("rudra_test_log");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut log = CsvLog::create(&dir.join("epochs.csv"), &EPOCH_COLUMNS).unwrap();
+        log.row(&row).unwrap();
     }
 
     #[test]

@@ -103,6 +103,41 @@ impl<'a> Evaluator for TokenEvaluator<'a> {
     }
 }
 
+/// One-line report of an elastic run's churn: event counts by kind plus
+/// mean recovery time, e.g. `3 churn events (2 kills, 1 rejoins), mean
+/// recovery 12.3s`. Static runs render as `no churn`.
+pub fn churn_summary(
+    churn: &[crate::elastic::membership::ChurnRecord],
+    recovery_secs: &[f64],
+) -> String {
+    use crate::elastic::membership::ChurnKind;
+    if churn.is_empty() {
+        return "no churn".to_string();
+    }
+    let count = |k: ChurnKind| churn.iter().filter(|c| c.kind == k).count();
+    let mut parts = Vec::new();
+    for (kind, noun) in [
+        (ChurnKind::Kill, "kills"),
+        (ChurnKind::Rejoin, "rejoins"),
+        (ChurnKind::Join, "joins"),
+        (ChurnKind::Suspect, "suspects"),
+        (ChurnKind::Recover, "recovers"),
+    ] {
+        let n = count(kind);
+        if n > 0 {
+            parts.push(format!("{n} {noun}"));
+        }
+    }
+    let mut out = format!("{} churn events ({})", churn.len(), parts.join(", "));
+    if !recovery_secs.is_empty() {
+        out.push_str(&format!(
+            ", mean recovery {}",
+            crate::util::fmt_secs(crate::util::mean(recovery_secs))
+        ));
+    }
+    out
+}
+
 /// One-line report of per-shard applyUpdate counts from a sharded-server
 /// run. Lockstep shards render compactly (`4 shards × 120 updates`); any
 /// divergence — which would indicate a routing bug — is spelled out in
@@ -122,6 +157,22 @@ pub fn shard_update_summary(shard_updates: &[u64]) -> String {
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn churn_summary_renders_counts_and_recovery() {
+        use crate::elastic::membership::{ChurnKind, ChurnRecord};
+        assert_eq!(churn_summary(&[], &[]), "no churn");
+        let rec = |kind, learner| ChurnRecord { at: 1.0, learner, kind, active_after: 3 };
+        let log = vec![
+            rec(ChurnKind::Kill, 0),
+            rec(ChurnKind::Kill, 1),
+            rec(ChurnKind::Rejoin, 0),
+        ];
+        let s = churn_summary(&log, &[10.0, 14.0]);
+        assert!(s.contains("3 churn events"), "{s}");
+        assert!(s.contains("2 kills") && s.contains("1 rejoins"), "{s}");
+        assert!(s.contains("12.00s"), "{s}");
+    }
 
     #[test]
     fn shard_summary_lockstep_and_divergent() {

@@ -69,6 +69,30 @@ impl Json {
         Ok(f as usize)
     }
 
+    /// Non-negative integer as u64. Exact only below 2⁵³ (the f64 integer
+    /// range) — fine for timestamps/update counts; 64-bit RNG states go
+    /// through hex strings instead.
+    pub fn as_u64(&self) -> Result<u64> {
+        let f = self.as_f64()?;
+        if f < 0.0 || f.fract() != 0.0 {
+            bail!("not a non-negative integer: {f}");
+        }
+        Ok(f as u64)
+    }
+
+    /// Array of numbers as f32s (exact: every f32 round-trips through f64).
+    pub fn as_f32_vec(&self) -> Result<Vec<f32>> {
+        self.as_arr()?.iter().map(|v| Ok(v.as_f64()? as f32)).collect()
+    }
+
+    pub fn as_u64_vec(&self) -> Result<Vec<u64>> {
+        self.as_arr()?.iter().map(|v| v.as_u64()).collect()
+    }
+
+    pub fn as_f64_vec(&self) -> Result<Vec<f64>> {
+        self.as_arr()?.iter().map(|v| v.as_f64()).collect()
+    }
+
     pub fn as_str(&self) -> Result<&str> {
         match self {
             Json::Str(s) => Ok(s),
@@ -113,6 +137,17 @@ impl Json {
 
     pub fn arr_f64(xs: &[f64]) -> Json {
         Json::Arr(xs.iter().map(|&x| Json::Num(x)).collect())
+    }
+
+    /// f32 slice as a JSON array. `f32 → f64` is exact, and the writer
+    /// emits shortest-round-trip decimals, so checkpoints restore the
+    /// original bits.
+    pub fn arr_f32(xs: &[f32]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
+    }
+
+    pub fn arr_u64(xs: &[u64]) -> Json {
+        Json::Arr(xs.iter().map(|&x| Json::Num(x as f64)).collect())
     }
 
     // ---- serialization -----------------------------------------------------
@@ -379,6 +414,36 @@ mod tests {
     fn integers_stay_integers() {
         let v = Json::Num(24234.0);
         assert_eq!(v.to_string(), "24234");
+    }
+
+    #[test]
+    fn f32_values_roundtrip_bit_exactly() {
+        // Checkpoints depend on this: any f32 (weights, momentum state,
+        // pending gradient sums) must survive write → parse unchanged.
+        let vals: Vec<f32> = vec![
+            0.1,
+            -1.0 / 3.0,
+            f32::MIN_POSITIVE,
+            1.000_000_1,
+            3.4e38,
+            -0.0,
+            5.877e-39, // subnormal
+        ];
+        let j = Json::arr_f32(&vals);
+        let back = Json::parse(&j.to_string()).unwrap().as_f32_vec().unwrap();
+        for (a, b) in vals.iter().zip(back.iter()) {
+            assert_eq!(a.to_bits() & !0x8000_0000, b.to_bits() & !0x8000_0000, "{a} vs {b}");
+            assert_eq!(a, b);
+        }
+    }
+
+    #[test]
+    fn u64_vec_roundtrip() {
+        let vals = vec![0u64, 1, 42, 1 << 52];
+        let j = Json::arr_u64(&vals);
+        assert_eq!(Json::parse(&j.to_string()).unwrap().as_u64_vec().unwrap(), vals);
+        assert!(Json::Num(-1.0).as_u64().is_err());
+        assert!(Json::Num(1.5).as_u64().is_err());
     }
 
     #[test]

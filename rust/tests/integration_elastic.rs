@@ -1,0 +1,331 @@
+//! Integration tests for the elastic membership subsystem: churn-driven
+//! runs through the virtual-time engine (deterministic, zero-jitter
+//! cluster), the μ·λ = const rescaler, membership-aware hardsync quorums,
+//! and checkpoint/restore round trips at S > 1.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::server::ServerConfig;
+use rudra::coordinator::shard::ShardedServer;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::checkpoint::Checkpoint;
+use rudra::elastic::membership::{ChurnKind, ChurnSchedule};
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::{LearnerCompute, ModelCost};
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+
+const DIM: usize = 4;
+
+fn tiny_model() -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch: 64 }
+}
+
+/// Zero-jitter P775: one mini-batch ≈ 1.2 ms (μ=4) of virtual time, so
+/// churn events placed at a few milliseconds land mid-run, and every
+/// trajectory is exactly reproducible.
+fn quiet_cluster() -> ClusterSpec {
+    ClusterSpec { compute_jitter: 0.0, straggler_prob: 0.0, ..ClusterSpec::p775() }
+}
+
+fn elastic_cfg(
+    protocol: Protocol,
+    mu: usize,
+    lambda: usize,
+    epochs: usize,
+    churn: &str,
+    rescale: RescalePolicy,
+) -> SimConfig {
+    SimConfig {
+        protocol,
+        arch: Arch::Base,
+        mu,
+        lambda,
+        epochs,
+        seed: 11,
+        cluster: quiet_cluster(),
+        compute: LearnerCompute::p775(),
+        model: tiny_model(),
+        shards: 1,
+        eval_each_epoch: false,
+        max_updates: None,
+        churn: ChurnSchedule::parse(churn).unwrap(),
+        rescale,
+        checkpoint_every_updates: 0,
+    }
+}
+
+fn run(cfg: &SimConfig) -> anyhow::Result<SimResult> {
+    let mut provider = MockProvider::new(vec![0.0; DIM]);
+    run_sim(
+        cfg,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, DIM),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        Some(&mut provider),
+        None,
+    )
+}
+
+/// Acceptance (a): under a kill schedule, n-softsync staleness stays
+/// within the paper's σ ≤ 2n bound measured against the *shrunk* active
+/// set (the quota c = ⌊λ_active/n⌋ is recomputed per kill).
+#[test]
+fn softsync_staleness_bounded_under_kills() {
+    let n = 4;
+    let cfg = elastic_cfg(
+        Protocol::NSoftsync { n },
+        4,
+        12,
+        8,
+        "kill:2@0.003,kill:5@0.004,kill:8@0.005,kill:11@0.006",
+        RescalePolicy::None,
+    );
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.final_active_lambda, 8, "4 of 12 learners died");
+    assert_eq!(
+        r.churn.iter().filter(|c| c.kind == ChurnKind::Kill).count(),
+        4,
+        "{:?}",
+        r.churn
+    );
+    assert!(r.epochs.len() == 8, "run completed all epochs: {}", r.epochs.len());
+    let bound = 2 * n as u64;
+    assert!(
+        r.staleness.max <= bound,
+        "σ_max = {} exceeds 2n = {bound} (λ_active-aware quota)",
+        r.staleness.max
+    );
+    assert_eq!(r.staleness.frac_exceeding(bound), 0.0);
+    // the epoch log carries the active-λ column: it must end at 8
+    assert_eq!(r.epochs.last().unwrap().active_lambda, 8);
+}
+
+/// Acceptance (b): hardsync completes — no deadlock — when a learner dies
+/// mid-round; the membership-aware quorum closes the barrier with the
+/// survivors.
+#[test]
+fn hardsync_completes_after_death() {
+    let cfg = elastic_cfg(Protocol::Hardsync, 4, 4, 3, "kill:2@0.005", RescalePolicy::None);
+    let r = run(&cfg).unwrap();
+    assert_eq!(
+        r.epochs.len(),
+        3,
+        "hardsync must reach its target epochs after the death (updates = {})",
+        r.updates
+    );
+    assert_eq!(r.final_active_lambda, 3);
+    assert!(r.churn.iter().any(|c| c.kind == ChurnKind::Kill && c.learner == 2));
+    assert!(r.theta.unwrap().is_finite());
+}
+
+/// Hardsync also survives a kill + later rejoin (warm restart): the
+/// rejoined learner re-enters the barrier under its old id.
+#[test]
+fn hardsync_kill_then_rejoin_restores_quorum() {
+    let cfg = elastic_cfg(
+        Protocol::Hardsync,
+        4,
+        4,
+        4,
+        "kill:1@0.004,rejoin:1@0.009",
+        RescalePolicy::None,
+    );
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.epochs.len(), 4, "completed after kill+rejoin");
+    assert_eq!(r.final_active_lambda, 4, "rejoin restored the full quorum");
+    assert_eq!(r.recovery_secs.len(), 1);
+    let rec = r.recovery_secs[0];
+    assert!((rec - 0.005).abs() < 1e-9, "recovery time = rejoin − kill, got {rec}");
+    let kinds: Vec<ChurnKind> =
+        r.churn.iter().filter(|c| c.learner == 1).map(|c| c.kind).collect();
+    assert_eq!(kinds, vec![ChurnKind::Kill, ChurnKind::Rejoin]);
+}
+
+/// Acceptance (c): with the rescaler on, μ·λ_active stays within ±1
+/// mini-batch of the configured product μ₀·λ₀ across every churn event.
+#[test]
+fn rescaler_holds_mu_lambda_product_across_churn() {
+    let product = 64; // μ₀ = 8, λ₀ = 8
+    let cfg = elastic_cfg(
+        Protocol::NSoftsync { n: 1 },
+        8,
+        8,
+        8,
+        "kill:1@0.004,kill:5@0.006,rejoin:1@0.010",
+        RescalePolicy::MuLambdaConst,
+    );
+    let r = run(&cfg).unwrap();
+    // initial normalization + 2 kills + 1 rejoin
+    assert_eq!(r.rescales.len(), 4, "{:?}", r.rescales);
+    for rec in &r.rescales {
+        let err = (rec.mu * rec.active_lambda).abs_diff(product);
+        assert!(
+            err <= rec.mu,
+            "at t={}: μ={} λ={} drifts {err} > 1 mini-batch from P={product}",
+            rec.at,
+            rec.mu,
+            rec.active_lambda
+        );
+        assert!(rec.quota >= 1);
+    }
+    // μ actually moved: 8 → (λ=7) 9 → (λ=6) 11 → (λ=7) 9
+    let mus: Vec<usize> = r.rescales.iter().map(|rec| rec.mu).collect();
+    assert_eq!(mus, vec![8, 9, 11, 9]);
+    assert_eq!(r.final_active_lambda, 7);
+    // one rescaled update can apply > samples_per_epoch samples (6·11 =
+    // 66 > 64) and cross two boundaries in one record, so check the
+    // final epoch number, not the record count
+    assert!(r.epochs.last().unwrap().epoch >= 8, "rescaled run completed");
+}
+
+/// Acceptance (d): checkpoint → restore round trip is bit-identical with
+/// shards > 1, including mid-round accumulator state, and the restored
+/// server continues the exact trajectory.
+#[test]
+fn checkpoint_restore_bit_identical_with_shards() {
+    let dim = 13;
+    let cfg = ServerConfig {
+        protocol: Protocol::NSoftsync { n: 2 },
+        mu: 4,
+        lambda: 6,
+        samples_per_epoch: 96,
+        target_epochs: 10,
+        shards: 4,
+    };
+    let mut orig = ShardedServer::new(
+        cfg,
+        FlatVec::from_vec((0..dim).map(|i| (i as f32).sin()).collect()),
+        Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 1e-4, dim),
+        LrPolicy::new(Schedule::constant(0.1), Modulation::Auto, 128),
+    );
+    let grad = |i: usize| {
+        FlatVec::from_vec((0..dim).map(|d| (((i * 7 + d) % 11) as f32 - 5.0) * 0.07).collect())
+    };
+    for i in 0..11 {
+        let ts = orig.timestamp();
+        orig.push_gradient(i % 6, &grad(i), ts).unwrap();
+    }
+    // capture mid-round (11 pushes, quota 3 ⇒ 2 pending), round-trip
+    // through the JSON text form as the CI restore path would
+    let text = Checkpoint::capture("integration", &orig, &[]).to_json_string();
+    let mut restored = Checkpoint::from_json_str(&text).unwrap().restore().unwrap().server;
+    assert_eq!(restored.n_shards(), 4);
+    assert_eq!(restored.assemble_weights().data, orig.assemble_weights().data);
+    assert_eq!(restored.timestamp(), orig.timestamp());
+    assert_eq!(restored.shard_updates(), orig.shard_updates());
+    for i in 11..30 {
+        let ts = orig.timestamp();
+        let a = orig.push_gradient(i % 6, &grad(i), ts).unwrap();
+        let b = restored.push_gradient(i % 6, &grad(i), ts).unwrap();
+        assert_eq!(a.updated, b.updated, "push {i}");
+        assert_eq!(a.avg_staleness, b.avg_staleness, "push {i}");
+        assert_eq!(a.epoch_completed, b.epoch_completed, "push {i}");
+    }
+    assert_eq!(
+        restored.assemble_weights().data,
+        orig.assemble_weights().data,
+        "trajectories must stay bit-identical after restore"
+    );
+    assert_eq!(restored.samples_applied(), orig.samples_applied());
+    assert_eq!(restored.staleness.count, orig.staleness.count);
+}
+
+/// The engine captures checkpoints on its update interval and the last
+/// one restores to a server consistent with the interval.
+#[test]
+fn engine_checkpoints_on_interval() {
+    let mut cfg =
+        elastic_cfg(Protocol::NSoftsync { n: 1 }, 4, 4, 3, "none", RescalePolicy::None);
+    cfg.shards = 2;
+    cfg.checkpoint_every_updates = 3;
+    let r = run(&cfg).unwrap();
+    assert!(r.checkpoints_taken > 0, "interval checkpoints captured");
+    let ckpt = r.last_checkpoint.expect("last checkpoint kept");
+    assert_eq!(ckpt.updates().unwrap() % 3, 0);
+    let restored = ckpt.restore().unwrap();
+    assert_eq!(restored.server.n_shards(), 2);
+    assert!(restored.server.assemble_weights().is_finite());
+    assert!(restored.rngs.contains_key("engine"), "engine RNG stream checkpointed");
+}
+
+/// The checked quota: killing learners below n-softsync's floor is a hard
+/// error (c = ⌊λ/n⌋ would be 0), not a silent protocol change.
+#[test]
+fn softsync_below_n_is_rejected() {
+    let cfg =
+        elastic_cfg(Protocol::NSoftsync { n: 4 }, 4, 4, 3, "kill:0@0.003", RescalePolicy::None);
+    let err = run(&cfg).unwrap_err();
+    assert!(err.to_string().contains("softsync"), "{err}");
+}
+
+/// Deferred joins: a learner scheduled with `join:` starts outside the
+/// quorum and enters it mid-run (spot-instance arrival).
+#[test]
+fn deferred_join_grows_the_quorum() {
+    let cfg = elastic_cfg(
+        Protocol::NSoftsync { n: 1 },
+        4,
+        4,
+        4,
+        "join:3@0.004",
+        RescalePolicy::MuLambdaConst,
+    );
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.final_active_lambda, 4);
+    assert!(r.churn.iter().any(|c| c.kind == ChurnKind::Join && c.learner == 3));
+    assert_eq!(r.epochs.len(), 4);
+    // λ_active grew 3 → 4, so the rescaler tightened μ: P = 16 ⇒ 5 then 4
+    let mus: Vec<usize> = r.rescales.iter().map(|rec| rec.mu).collect();
+    assert_eq!(mus, vec![5, 4], "{:?}", r.rescales);
+}
+
+/// Random churn (rate + downtime) replays bit-identically for a fixed
+/// seed — the failure injector draws from its own deterministic stream.
+#[test]
+fn random_churn_is_deterministic() {
+    // mean interarrival 1 ms, mean downtime 4 ms — many kill/rejoin
+    // cycles inside a ~20 ms run (the first arrival is virtually certain
+    // to land in-run at this rate)
+    let cfg = elastic_cfg(
+        Protocol::NSoftsync { n: 1 },
+        4,
+        8,
+        8,
+        "rate:1000000,downtime:0.004",
+        RescalePolicy::MuLambdaConst,
+    );
+    let a = run(&cfg).unwrap();
+    let b = run(&cfg).unwrap();
+    assert_eq!(a.sim_seconds, b.sim_seconds);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.theta.unwrap().data, b.theta.unwrap().data);
+    assert_eq!(a.churn.len(), b.churn.len());
+    assert!(!a.churn.is_empty(), "the random process actually fired");
+    assert!(a.epochs.len() == 8, "completed under random churn");
+}
+
+/// CI churn smoke (fast): tiny λ, 2 epochs, forced kill + rejoin with the
+/// rescaler on — the whole elastic path end to end in milliseconds of
+/// virtual time.
+#[test]
+fn churn_smoke() {
+    let cfg = elastic_cfg(
+        Protocol::NSoftsync { n: 1 },
+        4,
+        4,
+        2,
+        "kill:1@0.002,rejoin:1@0.005",
+        RescalePolicy::MuLambdaConst,
+    );
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.epochs.len(), 2, "completed");
+    assert_eq!(r.final_active_lambda, 4);
+    assert_eq!(r.recovery_secs.len(), 1);
+    assert!(r.churn.len() >= 2, "{:?}", r.churn);
+    assert!(r.theta.unwrap().is_finite());
+    assert!(!r.rescales.is_empty());
+}

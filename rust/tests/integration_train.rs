@@ -104,6 +104,7 @@ fn live_engine_trains_below_chance() {
         samples_per_epoch: ws.train.n as u64,
         shards: 1,
         log_every: 0,
+        elastic: None,
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

@@ -7,6 +7,7 @@ use rudra::coordinator::clock::StalenessStats;
 use rudra::coordinator::protocol::{Accumulator, Protocol};
 use rudra::coordinator::server::{ParameterServer, ServerConfig};
 use rudra::coordinator::shard::ShardedServer;
+use rudra::elastic::checkpoint::Checkpoint;
 use rudra::coordinator::tree::PsTree;
 use rudra::netsim::cluster::Endpoint;
 use rudra::netsim::event::EventQueue;
@@ -308,6 +309,121 @@ fn prop_sharded_server_matches_unsharded() {
                     sharded.shard_updates(),
                     sharded.updates
                 ));
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Checkpoint → restore → resume reproduces the *bit-identical*
+/// fixed-seed trajectory of an uninterrupted run, for all three protocols
+/// and S ∈ {1, 4} shards, with the checkpoint taken at an arbitrary point
+/// — including mid-accumulation and mid-hardsync-round (the pending sums
+/// and vector clock ride along in the checkpoint).
+#[test]
+fn prop_checkpoint_restore_resumes_bit_identical() {
+    check(
+        "checkpoint_resume_equivalence",
+        13,
+        72,
+        |r| {
+            let lambda = r.below(5) as usize + 2;
+            let proto = match r.below(3) {
+                0 => Protocol::Hardsync,
+                1 => Protocol::NSoftsync { n: r.below(lambda as u64) as usize + 1 },
+                _ => Protocol::Async,
+            };
+            let shards = if r.below(2) == 0 { 1 } else { 4 };
+            let dim = r.below(20) as usize + 1;
+            let opt = r.below(3);
+            let pushes = r.below(50) as usize + lambda;
+            let split = r.below(pushes as u64) as usize;
+            (lambda, proto, shards, dim, opt, pushes, split, r.next_u64())
+        },
+        |&(lambda, proto, shards, dim, opt, pushes, split, seed)| {
+            let kind = match opt {
+                0 => OptimizerKind::Sgd,
+                1 => OptimizerKind::Momentum { momentum: 0.9 },
+                _ => OptimizerKind::Adagrad { eps: 1e-8 },
+            };
+            let mk = || {
+                ShardedServer::new(
+                    ServerConfig {
+                        protocol: proto,
+                        mu: 4,
+                        lambda,
+                        samples_per_epoch: 48,
+                        target_epochs: usize::MAX,
+                        shards,
+                    },
+                    FlatVec::from_vec(
+                        (0..dim).map(|i| (i % 5) as f32 * 0.3 - 0.6).collect(),
+                    ),
+                    Optimizer::new(kind, 1e-4, dim),
+                    LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+                )
+            };
+            // Pre-generate the push sequence so both runs see the same one.
+            let mut rng = Rng::new(seed);
+            let mut order: Vec<usize> = (0..lambda).collect();
+            let seq: Vec<(usize, Vec<f32>)> = (0..pushes)
+                .map(|p| {
+                    let learner = if proto.is_barrier() {
+                        if p % lambda == 0 {
+                            rng.shuffle(&mut order);
+                        }
+                        order[p % lambda]
+                    } else {
+                        rng.usize_below(lambda)
+                    };
+                    let g: Vec<f32> =
+                        (0..dim).map(|_| (rng.f64() * 0.4 - 0.2) as f32).collect();
+                    (learner, g)
+                })
+                .collect();
+            let push = |s: &mut ShardedServer, (learner, g): &(usize, Vec<f32>)| {
+                let ts = s.timestamp();
+                s.push_gradient(*learner, &FlatVec::from_vec(g.clone()), ts)
+                    .map(|_| ())
+                    .map_err(|e| e.to_string())
+            };
+            // Run A: uninterrupted.
+            let mut a = mk();
+            for item in &seq {
+                push(&mut a, item)?;
+            }
+            // Run B: interrupted at `split`, checkpointed through the
+            // JSON text form, restored, resumed.
+            let mut b = mk();
+            for item in &seq[..split] {
+                push(&mut b, item)?;
+            }
+            let text = Checkpoint::capture("prop", &b, &[]).to_json_string();
+            let mut b = Checkpoint::from_json_str(&text)
+                .map_err(|e| e.to_string())?
+                .restore()
+                .map_err(|e| format!("restore failed (S = {shards}): {e:#}"))?
+                .server;
+            for item in &seq[split..] {
+                push(&mut b, item)?;
+            }
+            if a.assemble_weights().data != b.assemble_weights().data {
+                return Err(format!(
+                    "trajectory diverged after restore at split {split}/{pushes} \
+                     (S = {shards}, {proto:?}, {kind:?})"
+                ));
+            }
+            if a.timestamp() != b.timestamp()
+                || a.samples_applied() != b.samples_applied()
+                || a.updates != b.updates
+                || a.shard_updates() != b.shard_updates()
+            {
+                return Err("clock/epoch bookkeeping diverged after restore".into());
+            }
+            if a.staleness.count != b.staleness.count
+                || a.staleness.max != b.staleness.max
+            {
+                return Err("staleness history diverged after restore".into());
             }
             Ok(())
         },
