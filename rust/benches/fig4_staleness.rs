@@ -59,6 +59,8 @@ fn main() {
             churn: cfg.churn.clone(),
             rescale: cfg.rescale,
             checkpoint_every_updates: cfg.checkpoint_every,
+            hetero: cfg.hetero.clone(),
+            adaptive: cfg.adaptive.clone(),
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

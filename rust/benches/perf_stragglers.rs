@@ -1,0 +1,173 @@
+//! Straggler sweep (manual timing, like `perf_elastic`): slowdown factor
+//! × synchronization protocol on the paper's CIFAR10 geometry at λ = 8,
+//! timing-only on a zero-jitter cluster so every second is attributable
+//! to the straggler model. For each point: simulated epoch time, weight
+//! updates, dropped gradients, ⟨σ⟩/max σ, and the utilization spread.
+//!
+//! Expected shape — the Chen et al. / Dutta et al. tradeoff, live:
+//! * hardsync degrades toward the straggler's speed (every barrier round
+//!   waits for it);
+//! * backup:b closes rounds without the b slowest and recovers ≥ 80% of
+//!   the *ideal* (no-straggler) hardsync epoch time even under a 10×
+//!   straggler, paying only the smaller per-round quota;
+//! * n-softsync absorbs the straggler as staleness (⟨σ⟩ grows with the
+//!   skew) rather than wall-clock;
+//! * async is fastest and stalest.
+//!
+//! The tail of the run asserts the acceptance criteria (recovery ≥ 80%,
+//! hardsync degradation, and `hetero none` ≡ `slow:0x1` bit-identity),
+//! so `cargo bench perf_stragglers` fails loudly on a regression.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::{f, Table};
+use rudra::straggler::hetero::HeteroSpec;
+use rudra::util::fmt_secs;
+
+const LAMBDA: usize = 8;
+const MU: usize = 128;
+const EPOCHS: usize = 2;
+
+fn cfg(protocol: Protocol, hetero: &str) -> SimConfig {
+    let mut cfg =
+        SimConfig::paper(protocol, Arch::Base, MU, LAMBDA, EPOCHS, ModelCost::cifar10());
+    cfg.seed = 29;
+    cfg.cluster = ClusterSpec { compute_jitter: 0.0, ..ClusterSpec::p775() };
+    cfg.hetero = HeteroSpec::parse(hetero).expect("hetero spec");
+    cfg
+}
+
+fn run_timing(protocol: Protocol, hetero: &str) -> SimResult {
+    run_sim(
+        &cfg(protocol, hetero),
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim")
+}
+
+fn run_numeric(protocol: Protocol, hetero: &str) -> SimResult {
+    let mut c = cfg(protocol, hetero);
+    c.model = ModelCost {
+        name: "tiny",
+        flops_per_sample: 1.0e6,
+        bytes: 1.0e3,
+        samples_per_epoch: 2048,
+    };
+    let mut provider = MockProvider::new(vec![0.0; 4]);
+    run_sim(
+        &c,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        Some(&mut provider),
+        None,
+    )
+    .expect("numeric sim")
+}
+
+fn util_spread(r: &SimResult) -> String {
+    let min = r.learner_utilization.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = r.learner_utilization.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    format!("{:.0}–{:.0}%", min * 100.0, max * 100.0)
+}
+
+fn main() {
+    println!("=== perf_stragglers — slowdown × protocol sweep (timing-only) ===\n");
+    println!(
+        "CIFAR10 geometry, λ = {LAMBDA}, μ = {MU}, {EPOCHS} epochs, zero jitter;\n\
+         `slow:0x<f>` makes learner 0 a persistent f× straggler.\n"
+    );
+
+    let protocols = [
+        Protocol::Hardsync,
+        Protocol::BackupSync { b: 1 },
+        Protocol::BackupSync { b: 2 },
+        Protocol::NSoftsync { n: 2 },
+        Protocol::Async,
+    ];
+    let scenarios = [("none", "none"), ("3× straggler", "slow:0x3"), ("10× straggler", "slow:0x10")];
+
+    let mut t = Table::new(&[
+        "protocol",
+        "stragglers",
+        "sim time",
+        "updates",
+        "dropped",
+        "⟨σ⟩",
+        "max σ",
+        "util",
+    ]);
+    for protocol in protocols {
+        for (label, hetero) in scenarios {
+            let r = run_timing(protocol, hetero);
+            t.row(vec![
+                protocol.label(),
+                label.to_string(),
+                fmt_secs(r.sim_seconds),
+                r.updates.to_string(),
+                r.dropped_gradients.to_string(),
+                f(r.staleness.overall_avg(), 2),
+                r.staleness.max.to_string(),
+                util_spread(&r),
+            ]);
+        }
+    }
+    t.print();
+
+    // ---- acceptance checks ------------------------------------------------
+    let ideal = run_timing(Protocol::Hardsync, "none");
+    let hard10 = run_timing(Protocol::Hardsync, "slow:0x10");
+    let backup10 = run_timing(Protocol::BackupSync { b: 1 }, "slow:0x10");
+    let recovery = ideal.sim_seconds / backup10.sim_seconds;
+    println!(
+        "\n10× single-straggler: ideal hardsync {}, hardsync {} ({:.1}× degraded), \
+         backup:1 {} ({:.1}% of ideal pace recovered, {} gradients dropped)",
+        fmt_secs(ideal.sim_seconds),
+        fmt_secs(hard10.sim_seconds),
+        hard10.sim_seconds / ideal.sim_seconds,
+        fmt_secs(backup10.sim_seconds),
+        recovery * 100.0,
+        backup10.dropped_gradients,
+    );
+    assert!(
+        recovery >= 0.8,
+        "ACCEPTANCE: backup:1 must recover >= 80% of ideal hardsync epoch time, \
+         got {:.1}%",
+        recovery * 100.0
+    );
+    assert!(
+        hard10.sim_seconds > 4.0 * ideal.sim_seconds,
+        "ACCEPTANCE: hardsync must degrade toward the straggler's speed \
+         ({} vs ideal {})",
+        fmt_secs(hard10.sim_seconds),
+        fmt_secs(ideal.sim_seconds)
+    );
+
+    // `hetero none` must preserve bit-identical fixed-seed trajectories:
+    // the unit-factor spec exercises the hetero code path and must land
+    // on exactly the same virtual seconds, event count, and weights.
+    let quiet = run_numeric(Protocol::NSoftsync { n: 2 }, "none");
+    let unit = run_numeric(Protocol::NSoftsync { n: 2 }, "slow:0x1");
+    assert_eq!(quiet.sim_seconds, unit.sim_seconds, "hetero none must stay bit-identical");
+    assert_eq!(quiet.events_processed, unit.events_processed);
+    assert_eq!(
+        quiet.theta.as_ref().unwrap().data,
+        unit.theta.as_ref().unwrap().data,
+        "hetero none must not perturb the trajectory"
+    );
+    println!(
+        "bit-identity: hetero none ≡ slow:0x1 ({} events, θ match) — OK",
+        quiet.events_processed
+    );
+}

@@ -15,6 +15,8 @@ use crate::elastic::membership::ChurnSchedule;
 use crate::elastic::rescaler::RescalePolicy;
 use crate::params::lr::Modulation;
 use crate::params::optimizer::OptimizerKind;
+use crate::straggler::adaptive::AdaptiveSpec;
+use crate::straggler::hetero::HeteroSpec;
 use crate::util::cli::Args;
 use crate::util::json::Json;
 
@@ -76,6 +78,18 @@ pub struct RunConfig {
     /// `rescale`): `"none"` keeps μ fixed, `"mulambda"` holds
     /// μ·λ_active ≈ μ₀·λ₀ live ([`crate::elastic::rescaler`]).
     pub rescale: RescalePolicy,
+    /// Per-learner speed heterogeneity (JSON key / flag `hetero`): a DSL
+    /// string of explicit `slow:<id>x<factor>` entries, sampled
+    /// `lognormal:<sigma>` / `pareto:<alpha>` distributions, and a
+    /// `markov:<p_degrade>:<p_recover>:<mult>` transient process — see
+    /// [`HeteroSpec::parse`]. `"none"` (default) is homogeneous and
+    /// preserves bit-identical fixed-seed trajectories.
+    pub hetero: HeteroSpec,
+    /// Adaptive-n staleness control (JSON key / flag `adaptive`):
+    /// `"sigma:<target>"` retunes the n-softsync splitting parameter per
+    /// epoch to hold the target ⟨σ⟩ ([`AdaptiveSpec::parse`]). `"none"`
+    /// (default) is open-loop.
+    pub adaptive: AdaptiveSpec,
 }
 
 impl Default for RunConfig {
@@ -100,6 +114,8 @@ impl Default for RunConfig {
             churn: ChurnSchedule::none(),
             checkpoint_every: 0,
             rescale: RescalePolicy::None,
+            hetero: HeteroSpec::none(),
+            adaptive: AdaptiveSpec::none(),
         }
     }
 }
@@ -129,6 +145,8 @@ impl RunConfig {
                 "churn" => self.churn = ChurnSchedule::parse(v.as_str()?)?,
                 "checkpoint_every" => self.checkpoint_every = v.as_usize()? as u64,
                 "rescale" => self.rescale = RescalePolicy::parse(v.as_str()?)?,
+                "hetero" => self.hetero = HeteroSpec::parse(v.as_str()?)?,
+                "adaptive" => self.adaptive = AdaptiveSpec::parse(v.as_str()?)?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -170,6 +188,12 @@ impl RunConfig {
         if let Some(v) = args.get("rescale") {
             self.rescale = RescalePolicy::parse(v)?;
         }
+        if let Some(v) = args.get("hetero") {
+            self.hetero = HeteroSpec::parse(v)?;
+        }
+        if let Some(v) = args.get("adaptive") {
+            self.adaptive = AdaptiveSpec::parse(v)?;
+        }
         self.validate()
     }
 
@@ -197,6 +221,26 @@ impl RunConfig {
             if n == 0 {
                 bail!("n-softsync requires n >= 1");
             }
+        }
+        if let Protocol::BackupSync { .. } = self.protocol {
+            // the checked quota is the single source of the b < λ rule
+            self.protocol.try_gradients_per_update(self.lambda)?;
+        }
+        if let Some(max_id) = self.hetero.max_learner_id() {
+            if max_id >= self.lambda {
+                bail!(
+                    "hetero spec references learner {max_id}, but lambda = {} \
+                     (ids are 0-based)",
+                    self.lambda
+                );
+            }
+        }
+        if self.adaptive.enabled() && !matches!(self.protocol, Protocol::NSoftsync { .. }) {
+            bail!(
+                "adaptive staleness control retunes the n-softsync splitting \
+                 parameter; protocol {} has none",
+                self.protocol.label()
+            );
         }
         Ok(())
     }
@@ -227,8 +271,17 @@ impl RunConfig {
         } else {
             ""
         };
+        let hetero_suffix = if self.hetero.is_quiet() {
+            String::new()
+        } else {
+            format!(" hetero[{}]", self.hetero.label())
+        };
+        let adaptive_suffix = match self.adaptive.target_sigma {
+            Some(t) => format!(" adaptive[σ→{t}]"),
+            None => String::new(),
+        };
         format!(
-            "(σ̄={}, μ={}, λ={}) {}/{}{}{}{}",
+            "(σ̄={}, μ={}, λ={}) {}/{}{}{}{}{}{}",
             self.protocol.effective_n(self.lambda),
             self.mu,
             self.lambda,
@@ -237,6 +290,8 @@ impl RunConfig {
             shard_suffix,
             churn_suffix,
             rescale_suffix,
+            hetero_suffix,
+            adaptive_suffix,
         )
     }
 }
@@ -349,6 +404,55 @@ mod tests {
         cfg.rescale = RescalePolicy::MuLambdaConst;
         let l = cfg.label();
         assert!(l.contains("churn[") && l.contains("μλ=const"), "{l}");
+    }
+
+    #[test]
+    fn straggler_knobs_layer_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.hetero.is_quiet() && !cfg.adaptive.enabled(), "quiet by default");
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"lambda": 8, "protocol": "4-softsync",
+                    "hetero": "slow:2x10,lognormal:0.3", "adaptive": "sigma:4"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.hetero.slow, vec![(2, 10.0)]);
+        assert_eq!(cfg.adaptive.target_sigma, Some(4.0));
+        // CLI wins over JSON
+        let args = Args::parse(
+            ["--hetero", "pareto:2", "--adaptive", "none"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.hetero.pareto_alpha, Some(2.0));
+        assert!(cfg.hetero.slow.is_empty());
+        assert!(!cfg.adaptive.enabled());
+        // hetero ids validate against λ
+        cfg.hetero = HeteroSpec::parse("slow:9x2").unwrap();
+        assert!(cfg.validate().is_err(), "learner 9 with λ = 8 rejected");
+        cfg.hetero = HeteroSpec::none();
+        // adaptive needs a softsync protocol
+        cfg.adaptive = AdaptiveSpec::parse("sigma:2").unwrap();
+        cfg.protocol = Protocol::Hardsync;
+        assert!(cfg.validate().is_err(), "adaptive + hardsync rejected");
+        cfg.protocol = Protocol::NSoftsync { n: 2 };
+        assert!(cfg.validate().is_ok());
+        // backup:b validates b < λ
+        cfg.adaptive = AdaptiveSpec::none();
+        cfg.protocol = Protocol::parse("backup:8").unwrap();
+        assert!(cfg.validate().is_err(), "b = λ rejected");
+        cfg.protocol = Protocol::parse("backup:2").unwrap();
+        assert!(cfg.validate().is_ok());
+        // labels surface the new knobs
+        cfg.hetero = HeteroSpec::parse("slow:1x4").unwrap();
+        let l = cfg.label();
+        assert!(l.contains("backup:2") && l.contains("hetero[slow:1x4]"), "{l}");
+        cfg.protocol = Protocol::NSoftsync { n: 2 };
+        cfg.adaptive = AdaptiveSpec::parse("sigma:3").unwrap();
+        assert!(cfg.label().contains("adaptive[σ→3]"), "{}", cfg.label());
     }
 
     #[test]

@@ -60,6 +60,13 @@ impl StalenessStats {
         UpdateRecord { new_ts, clock: grad_ts.to_vec(), avg_staleness: avg }
     }
 
+    /// Run-cumulative `(gradient count, staleness sum)` — windowed
+    /// consumers (the adaptive-n controller's per-epoch ⟨σ⟩) difference
+    /// successive snapshots.
+    pub fn totals(&self) -> (u64, f64) {
+        (self.count, self.sum)
+    }
+
     /// Overall ⟨σ⟩ across all gradients.
     pub fn overall_avg(&self) -> f64 {
         if self.count == 0 {

@@ -113,6 +113,10 @@ pub struct LiveResult {
     pub recovery_secs: Vec<f64>,
     /// λ_active when the run ended.
     pub final_active_lambda: usize,
+    /// Backup-sync: total gradients dropped as too-slow (0 elsewhere).
+    pub dropped_gradients: u64,
+    /// Backup-sync: dropped-gradient count per learner slot.
+    pub dropped_by_learner: Vec<u64>,
 }
 
 enum ToServer {
@@ -127,6 +131,11 @@ enum ToLearner {
     Weights { theta: Arc<FlatVec>, ts: Timestamp },
     /// Pull-skip: your replica is current.
     Unchanged,
+    /// Dynamic-μ control: the rescaler retuned the per-learner mini-batch
+    /// size; apply it to the provider in place (the ROADMAP "live-engine
+    /// dynamic μ" channel). Not a pull reply — the learner keeps waiting
+    /// for its actual reply after applying it.
+    SetMu(usize),
     Shutdown,
 }
 
@@ -173,13 +182,22 @@ fn spawn_learner(
             if push_tx.send(ToServer::Push { learner: id, inc, grad, ts, loss }).is_err() {
                 return Ok(()); // server gone
             }
-            match reply_rx.recv() {
-                Ok(ToLearner::Weights { theta: fresh, ts: new_ts }) => {
-                    theta.data.copy_from_slice(&fresh.data);
-                    ts = new_ts;
+            // Drain control messages (SetMu) until the actual pull reply;
+            // a retune can land at any point between two pushes.
+            loop {
+                match reply_rx.recv() {
+                    Ok(ToLearner::SetMu(mu)) => {
+                        provider.set_mu(mu);
+                        continue;
+                    }
+                    Ok(ToLearner::Weights { theta: fresh, ts: new_ts }) => {
+                        theta.data.copy_from_slice(&fresh.data);
+                        ts = new_ts;
+                        break;
+                    }
+                    Ok(ToLearner::Unchanged) => break,
+                    Ok(ToLearner::Shutdown) | Err(_) => return Ok(()),
                 }
-                Ok(ToLearner::Unchanged) => {}
-                Ok(ToLearner::Shutdown) | Err(_) => return Ok(()),
             }
         }
     });
@@ -195,6 +213,10 @@ fn run_live_inner(
     mut factory: Option<ProviderFactory<'_>>,
 ) -> Result<LiveResult> {
     anyhow::ensure!(providers.len() == cfg.lambda, "need one provider per learner");
+    if let Protocol::BackupSync { .. } = cfg.protocol {
+        // the checked quota is the single source of the b < λ rule
+        cfg.protocol.try_gradients_per_update(cfg.lambda)?;
+    }
     let elastic = cfg.elastic.clone();
     if let Some(e) = &elastic {
         anyhow::ensure!(
@@ -303,14 +325,48 @@ fn run_live_inner(
     // Hardsync holds replies until the barrier update fires.
     let mut barrier_waiting: Vec<usize> = Vec::new();
 
-    // Membership change: rescale μ, recompute the quota (flushing a
-    // satisfied barrier round via the membership-aware quorum when a
-    // death — `$dead` — triggered the change), release barrier replies.
+    // Per-learner μ currently in force (retuned by the rescaler; pushed
+    // to live providers over the SetMu control channel).
+    let mut cur_mu = cfg.mu;
+
+    // Weight snapshots are cached per timestamp: θ is immutable between
+    // two updates, so pull replies, barrier releases, and backup-sync
+    // drop-refreshes landing at the same clock share one assembly instead
+    // of copying the full model per message.
+    let mut snap_cache: Option<(Timestamp, Arc<FlatVec>)> = None;
+    macro_rules! snapshot {
+        () => {{
+            let ts = server.timestamp();
+            match &snap_cache {
+                Some((t, s)) if *t == ts => s.clone(),
+                _ => {
+                    let s = Arc::new(server.assemble_weights());
+                    snap_cache = Some((ts, s.clone()));
+                    s
+                }
+            }
+        }};
+    }
+
+    // Membership change: rescale μ — notifying every live learner's
+    // provider over its reply channel when it moved — recompute the quota
+    // (flushing a satisfied barrier round via the membership-aware quorum
+    // when a death — `$dead` — triggered the change), release barrier
+    // replies.
     macro_rules! rescale_members {
         ($dead:expr) => {{
             let active = membership.active_count();
             anyhow::ensure!(active > 0, "every learner is dead; training cannot continue");
-            server.set_mu(rescaler.mu_for(active));
+            let new_mu = rescaler.mu_for(active);
+            if new_mu != cur_mu {
+                cur_mu = new_mu;
+                for l in 0..cfg.lambda {
+                    if membership.is_live(l) {
+                        let _ = reply_txs[l].send(ToLearner::SetMu(new_mu));
+                    }
+                }
+            }
+            server.set_mu(new_mu);
             let dead: Option<usize> = $dead;
             let flush = match dead {
                 Some(d) => server.remove_learner(d, active)?,
@@ -319,7 +375,7 @@ fn run_live_inner(
             if let Some(out) = flush {
                 if out.updated && cfg.protocol.is_barrier() {
                     let new_ts = server.timestamp();
-                    let snap = Arc::new(server.assemble_weights());
+                    let snap = snapshot!();
                     for l in barrier_waiting.drain(..) {
                         let _ = reply_txs[l]
                             .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
@@ -430,20 +486,31 @@ fn run_live_inner(
         let outcome = server.push_gradient(learner, &grad, ts)?;
 
         if cfg.protocol.is_barrier() {
-            barrier_waiting.push(learner);
-            if outcome.updated {
-                let new_ts = server.timestamp();
-                let snap = Arc::new(server.assemble_weights());
-                for l in barrier_waiting.drain(..) {
-                    let _ = reply_txs[l]
-                        .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
+            if outcome.dropped {
+                // backup-sync: one of the b slowest — nothing was folded;
+                // refresh the straggler with current weights immediately
+                // (the clock is necessarily ahead of its replica, and θ
+                // is unchanged since the round's update, so the cached
+                // snapshot is reused rather than re-assembled).
+                let snap = snapshot!();
+                let _ = reply_txs[learner]
+                    .send(ToLearner::Weights { theta: snap, ts: server.timestamp() });
+            } else {
+                barrier_waiting.push(learner);
+                if outcome.updated {
+                    let new_ts = server.timestamp();
+                    let snap = snapshot!();
+                    for l in barrier_waiting.drain(..) {
+                        let _ = reply_txs[l]
+                            .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
+                    }
                 }
             }
         } else {
             // softsync/async: reply to this learner's implicit pull.
             let cur_ts = server.timestamp();
             if cur_ts > ts {
-                let snap = Arc::new(server.assemble_weights());
+                let snap = snapshot!();
                 let _ = reply_txs[learner]
                     .send(ToLearner::Weights { theta: snap, ts: cur_ts });
             } else {
@@ -478,6 +545,11 @@ fn run_live_inner(
                         membership.rejoin(l, start.elapsed().as_secs_f64())?;
                         last_heard[l] = Instant::now();
                         heard[l] = false; // fresh warm-up grace for the new thread
+                        // the factory builds providers at the spawn-time μ;
+                        // bring the rejoiner onto the μ currently in force
+                        if cur_mu != cfg.mu {
+                            let _ = reply_txs[l].send(ToLearner::SetMu(cur_mu));
+                        }
                         rescale_members!(None);
                     }
                 }
@@ -517,6 +589,8 @@ fn run_live_inner(
         churn: membership.log,
         recovery_secs: membership.recovery_secs,
         final_active_lambda: server.active_lambda(),
+        dropped_gradients: server.dropped,
+        dropped_by_learner: server.dropped_by().to_vec(),
     })
 }
 
@@ -658,6 +732,83 @@ mod tests {
         assert!(r.updates > 0);
         assert_eq!(r.final_active_lambda, 2);
         assert!(r.churn.iter().any(|c| c.kind == ChurnKind::Kill && c.learner == 1));
+    }
+
+    #[test]
+    fn backup_sync_live_completes_stale_free() {
+        let r = run(Protocol::BackupSync { b: 1 }, 4);
+        assert!(r.updates > 0);
+        assert_eq!(r.staleness.max, 0, "backup-sync folds only fresh gradients");
+        assert_eq!(
+            r.dropped_by_learner.iter().sum::<u64>(),
+            r.dropped_gradients,
+            "per-learner drop attribution must add up"
+        );
+        assert!(r.theta.is_finite());
+        // b = 0 behaves as hardsync: no drops, zero staleness
+        let r0 = run(Protocol::BackupSync { b: 0 }, 3);
+        assert_eq!(r0.dropped_gradients, 0);
+        assert_eq!(r0.staleness.max, 0);
+        assert!(r0.updates > 0);
+    }
+
+    #[test]
+    fn rescale_pushes_new_mu_down_the_control_channel() {
+        use std::sync::atomic::{AtomicUsize, Ordering};
+        // Providers record the last μ received over the SetMu channel so
+        // the test can observe delivery from outside the learner threads.
+        struct MuRecorder {
+            inner: MockProvider,
+            seen: Arc<AtomicUsize>,
+        }
+        impl GradProvider for MuRecorder {
+            fn compute(&mut self, l: usize, theta: &FlatVec) -> Result<(FlatVec, f32)> {
+                self.inner.compute(l, theta)
+            }
+            fn n_params(&self) -> usize {
+                self.inner.n_params()
+            }
+            fn set_mu(&mut self, mu: usize) -> bool {
+                self.seen.store(mu, Ordering::SeqCst);
+                true
+            }
+        }
+        let dim = 4;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4, 1);
+        cfg.mu = 8;
+        cfg.epochs = 4;
+        cfg.samples_per_epoch = 256;
+        cfg.elastic = Some(LiveElastic {
+            heartbeat_timeout: Duration::ZERO,
+            kill_after_pushes: vec![(6, 2)],
+            rejoin_after_pushes: vec![],
+            rescale: RescalePolicy::MuLambdaConst,
+        });
+        let seen: Vec<Arc<AtomicUsize>> =
+            (0..4).map(|_| Arc::new(AtomicUsize::new(0))).collect();
+        let provs: Vec<Box<dyn GradProvider + Send>> = seen
+            .iter()
+            .map(|s| {
+                Box::new(MuRecorder {
+                    inner: MockProvider::new(vec![0.0; dim]),
+                    seen: s.clone(),
+                }) as Box<dyn GradProvider + Send>
+            })
+            .collect();
+        let theta0 = FlatVec::from_vec(vec![1.0; dim]);
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, provs).unwrap();
+        assert!(r.updates > 0);
+        assert_eq!(r.final_active_lambda, 3, "learner 2 was killed");
+        // μ·λ = const with P = 32: λ 4 → 3 rescales μ 8 → 11; every
+        // surviving provider must have seen it over the control channel.
+        for (l, s) in seen.iter().enumerate() {
+            if l == 2 {
+                continue; // dead before (or at) the retune — may have missed it
+            }
+            assert_eq!(s.load(Ordering::SeqCst), 11, "learner {l} missed the SetMu");
+        }
     }
 
     #[test]

@@ -63,6 +63,8 @@ use crate::netsim::overlap::OverlapTracker;
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
+use crate::straggler::adaptive::{AdaptiveController, AdaptiveRecord, AdaptiveSpec};
+use crate::straggler::hetero::{HeteroModel, HeteroSpec};
 use crate::util::rng::Rng;
 
 /// Periodic model evaluation (the paper's Statistics Server, §3.2).
@@ -102,6 +104,15 @@ pub struct SimConfig {
     /// Capture a server checkpoint every this many weight updates
     /// (0 = off); the latest lands in [`SimResult::last_checkpoint`].
     pub checkpoint_every_updates: u64,
+    /// Per-learner speed heterogeneity ([`crate::straggler::hetero`]):
+    /// persistent slowdown factors (explicit and/or sampled) plus an
+    /// optional Markov transient, drawn from a dedicated RNG stream.
+    /// Quiet (`none`, the default) preserves bit-identical trajectories.
+    pub hetero: HeteroSpec,
+    /// Adaptive-n staleness control ([`crate::straggler::adaptive`]):
+    /// retune the n-softsync splitting parameter at epoch boundaries to
+    /// hold a target ⟨σ⟩. Off by default.
+    pub adaptive: AdaptiveSpec,
 }
 
 impl SimConfig {
@@ -130,6 +141,8 @@ impl SimConfig {
             churn: ChurnSchedule::none(),
             rescale: RescalePolicy::None,
             checkpoint_every_updates: 0,
+            hetero: HeteroSpec::none(),
+            adaptive: AdaptiveSpec::none(),
         }
     }
 
@@ -191,6 +204,21 @@ pub struct SimResult {
     pub checkpoints_taken: u64,
     /// The most recent captured checkpoint, if any.
     pub last_checkpoint: Option<Checkpoint>,
+    /// Backup-sync: total gradients dropped as too-slow (0 elsewhere).
+    pub dropped_gradients: u64,
+    /// Backup-sync: dropped-gradient count per learner slot (straggler
+    /// attribution).
+    pub dropped_by_learner: Vec<u64>,
+    /// Fraction of the run each learner spent computing (per-learner
+    /// utilization: under a barrier protocol, fast learners idle while a
+    /// straggler finishes; under backup-sync the straggler stays busy but
+    /// its work lands in `dropped_by_learner` instead).
+    pub learner_utilization: Vec<f64>,
+    /// Persistent per-learner speed factors in force (all 1.0 when the
+    /// `hetero` knob is quiet).
+    pub hetero_factors: Vec<f64>,
+    /// Adaptive-n controller decisions, one per epoch (empty when off).
+    pub adaptive: Vec<AdaptiveRecord>,
 }
 
 /// (learner, incarnation, gradient, timestamp) — relayed leaf batches
@@ -290,6 +318,11 @@ pub struct SimEngine<'a> {
     rescale_log: Vec<RescaleRecord>,
     checkpoints_taken: u64,
     last_checkpoint: Option<Checkpoint>,
+    /// Per-learner speed heterogeneity (inert when the spec is quiet;
+    /// draws from its own RNG stream, never the engine's).
+    hetero: HeteroModel,
+    /// Adaptive-n staleness controller (None when the knob is off).
+    adaptive: Option<AdaptiveController>,
     /// Whether a RandomKill event is currently scheduled. The process
     /// disarms instead of re-arming when no learner is live (otherwise an
     /// all-dead run would spin on self-scheduled kills forever) and is
@@ -394,6 +427,11 @@ impl<'a> SimEngine<'a> {
             rescale_log: Vec::new(),
             checkpoints_taken: 0,
             last_checkpoint: None,
+            hetero: HeteroModel::build(&cfg.hetero, lambda, cfg.seed),
+            adaptive: AdaptiveController::new(
+                &cfg.adaptive,
+                cfg.protocol.effective_n(lambda).max(1),
+            ),
             random_armed: false,
         }
     }
@@ -434,11 +472,12 @@ impl<'a> SimEngine<'a> {
 
     /// Run the simulation to completion.
     pub fn run(mut self) -> Result<SimResult> {
+        self.cfg.cluster.validate()?;
         anyhow::ensure!(
             !(self.cfg.protocol.is_barrier() && self.cfg.arch == Arch::AdvStar),
-            "hardsync + Rudra-adv* is contradictory: adv* decouples the \
-             push/pull the barrier requires (the paper pairs adv* with \
-             softsync only — Table 4)"
+            "a barrier protocol (hardsync/backup-sync) + Rudra-adv* is \
+             contradictory: adv* decouples the push/pull the barrier \
+             requires (the paper pairs adv* with softsync only — Table 4)"
         );
         if let Some(max_id) = self.cfg.churn.max_learner_id() {
             anyhow::ensure!(
@@ -446,6 +485,24 @@ impl<'a> SimEngine<'a> {
                 "churn schedule references learner {max_id}, but λ = {}",
                 self.cfg.lambda
             );
+        }
+        if let Some(max_id) = self.cfg.hetero.max_learner_id() {
+            anyhow::ensure!(
+                max_id < self.cfg.lambda,
+                "hetero spec references learner {max_id}, but λ = {}",
+                self.cfg.lambda
+            );
+        }
+        anyhow::ensure!(
+            self.adaptive.is_none()
+                || matches!(self.cfg.protocol, Protocol::NSoftsync { .. }),
+            "the adaptive-n controller retunes the n-softsync splitting \
+             parameter; protocol {} has none",
+            self.cfg.protocol.label()
+        );
+        if let Protocol::BackupSync { .. } = self.cfg.protocol {
+            // the checked quota is the single source of the b < λ rule
+            self.cfg.protocol.try_gradients_per_update(self.cfg.lambda)?;
         }
         anyhow::ensure!(
             self.membership.active_count() > 0,
@@ -503,6 +560,12 @@ impl<'a> SimEngine<'a> {
         for s in &self.slots {
             overlap.merge(&s.overlap);
         }
+        let horizon = self.q.now();
+        let learner_utilization: Vec<f64> = self
+            .slots
+            .iter()
+            .map(|s| if horizon > 0.0 { s.overlap.compute / horizon } else { 0.0 })
+            .collect();
         let final_train_loss = if self.epoch_losses.is_empty() {
             self.last_epoch_loss
         } else {
@@ -525,6 +588,11 @@ impl<'a> SimEngine<'a> {
             final_active_lambda: self.server.active_lambda(),
             checkpoints_taken: self.checkpoints_taken,
             last_checkpoint: self.last_checkpoint,
+            dropped_gradients: self.server.dropped,
+            dropped_by_learner: self.server.dropped_by().to_vec(),
+            learner_utilization,
+            hetero_factors: self.hetero.persistent().to_vec(),
+            adaptive: self.adaptive.map(|c| c.log).unwrap_or_default(),
         })
     }
 
@@ -547,7 +615,16 @@ impl<'a> SimEngine<'a> {
                 }
             }
         }
-        let dt = jittered(self.base_compute, &self.cfg.cluster, &mut self.rng);
+        // Heterogeneous clusters scale the learner's cached base compute
+        // time by its current slowdown factor (persistent × Markov
+        // transient) before the jitter draw; a quiet hetero model takes
+        // the exact pre-straggler path, bit for bit.
+        let base = if self.hetero.enabled() {
+            self.base_compute * self.hetero.draw(l)
+        } else {
+            self.base_compute
+        };
+        let dt = jittered(base, &self.cfg.cluster, &mut self.rng);
         self.slots[l].compute_cost = dt;
         let inc = self.slots[l].inc;
         self.q.schedule_in(dt, Ev::ComputeDone { learner: l, inc });
@@ -613,10 +690,17 @@ impl<'a> SimEngine<'a> {
         }
         let grad = self.slots[l].pending_grad.take();
         let ts = self.slots[l].pending_ts;
-        self.fold(now, l, inc, grad, ts)?;
+        let out = self.fold(now, l, inc, grad, ts)?;
         if self.cfg.protocol.is_barrier() {
-            self.barrier.push(l);
-            self.maybe_broadcast(now);
+            if out.dropped {
+                // backup-sync: one of the b slowest — its work is lost;
+                // refresh it with the current weights instead of parking
+                // it at a barrier its round already left behind.
+                self.start_pull_base(now, l);
+            } else {
+                self.barrier.push(l);
+                self.maybe_broadcast(now);
+            }
         } else {
             self.start_pull_base(now, l);
         }
@@ -674,6 +758,12 @@ impl<'a> SimEngine<'a> {
 
     fn on_relay_at_root(&mut self, now: f64, leaf: usize, batch: RelayBatch) -> Result<()> {
         for (l, inc, grad, ts) in batch {
+            // A backup-sync drop needs no action here: the learner either
+            // already took the round's broadcast (its stale gradient was
+            // still in the relay pipeline) and is computing fresh, or it
+            // is parked in the barrier and the next broadcast releases it.
+            // Refreshing it directly instead would risk starting a second
+            // compute loop for the same slot.
             self.fold(now, l, inc, grad, ts)?;
         }
         self.leaves[leaf].relay_busy = false;
@@ -686,7 +776,9 @@ impl<'a> SimEngine<'a> {
 
     /// Fold one gradient into the server; handle update/epoch outcomes.
     /// Gradients from dead incarnations are dropped here (crashed
-    /// learners' messages are lost, not replayed).
+    /// learners' messages are lost, not replayed); the returned outcome's
+    /// `dropped` flag reports a backup-sync too-slow drop so the caller
+    /// can refresh the learner.
     fn fold(
         &mut self,
         now: f64,
@@ -694,15 +786,16 @@ impl<'a> SimEngine<'a> {
         inc: u64,
         grad: Option<FlatVec>,
         ts: Timestamp,
-    ) -> Result<()> {
+    ) -> Result<PushOutcome> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
-            return Ok(());
+            return Ok(PushOutcome::default());
         }
         let outcome: PushOutcome = match grad {
             Some(g) => self.server.push_gradient(l, &g, ts)?,
             None => self.server.push_gradient_timing_only(l, ts),
         };
-        self.after_update(now, outcome)
+        self.after_update(now, outcome.clone())?;
+        Ok(outcome)
     }
 
     /// Post-applyUpdate bookkeeping shared by the push path and the
@@ -723,10 +816,16 @@ impl<'a> SimEngine<'a> {
             }
             let every = self.cfg.checkpoint_every_updates;
             if every > 0 && self.server.updates % every == 0 {
+                // A heterogeneous run has a second named RNG stream to
+                // resume; quiet runs keep the exact pre-straggler payload.
+                let mut streams: Vec<(&str, &Rng)> = vec![("engine", &self.rng)];
+                if self.hetero.enabled() {
+                    streams.push(("hetero", self.hetero.rng()));
+                }
                 self.last_checkpoint = Some(Checkpoint::capture(
                     &format!("update-{}", self.server.updates),
                     &self.server,
-                    &[("engine", &self.rng)],
+                    &streams,
                 ));
                 self.checkpoints_taken += 1;
             }
@@ -755,22 +854,38 @@ impl<'a> SimEngine<'a> {
                 test_error_pct: test_err,
                 active_lambda: self.membership.active_count(),
             });
+            // Adaptive-n control: close the loop at the epoch boundary —
+            // measure the epoch's ⟨σ⟩ window and retune the softsync
+            // splitting parameter on the server (between updates; the
+            // next push closes any already-satisfied round).
+            if self.adaptive.is_some() {
+                let (count, sum) = self.server.staleness.totals();
+                let active = self.membership.active_count();
+                let ctl = self.adaptive.as_mut().expect("checked above");
+                if let Some(new_n) = ctl.epoch_tick(epoch, now, count, sum, active) {
+                    self.server.set_softsync_n(new_n)?;
+                }
+            }
         }
         Ok(())
     }
 
-    /// Hardsync: once the barrier round's update has fired (server ts
-    /// advanced past every waiting learner), broadcast new weights.
+    /// Barrier protocols: once the round's update has fired (server ts
+    /// advanced past the last broadcast), broadcast new weights.
     fn maybe_broadcast(&mut self, now: f64) {
-        // Wait for BOTH: every *live* learner at the barrier AND the root
-        // having folded every gradient (its timestamp advanced past the
-        // last broadcast) — with tree aggregation the barrier fills before
-        // the final relay lands at the root. The quorum is membership-
-        // aware: dead learners are removed from the barrier at kill time,
-        // so a crash mid-round cannot deadlock the protocol.
-        if self.barrier.len() < self.membership.active_count()
-            || self.server.timestamp() <= self.last_bcast_ts
-        {
+        // Hardsync waits for BOTH: every *live* learner at the barrier AND
+        // the root having folded every gradient (its timestamp advanced
+        // past the last broadcast) — with tree aggregation the barrier
+        // fills before the final relay lands at the root. The quorum is
+        // membership-aware: dead learners are removed from the barrier at
+        // kill time, so a crash mid-round cannot deadlock the protocol.
+        // Backup-sync rounds close on the first λ_active − b folds, so
+        // there the ts advance alone is the signal: everyone waiting at
+        // that moment is released, and the b stragglers are refreshed
+        // individually when their late pushes land.
+        let backup = matches!(self.cfg.protocol, Protocol::BackupSync { .. });
+        let quorum = if backup { 1 } else { self.membership.active_count() };
+        if self.barrier.len() < quorum || self.server.timestamp() <= self.last_bcast_ts {
             return;
         }
         let ts = self.server.timestamp();
@@ -793,12 +908,18 @@ impl<'a> SimEngine<'a> {
             Arch::Adv | Arch::AdvStar => {
                 // root shards → leaf once, then leaf → co-located learners
                 // (live ones only — dead and not-yet-joined slots get no
-                // weights and, crucially, no compute restart).
+                // weights and, crucially, no compute restart). Under
+                // hardsync every live learner is waiting by construction;
+                // under backup-sync only the *waiting* set may be served —
+                // a learner still computing (one of the b stragglers)
+                // must not have a second compute loop started for it.
                 for leaf in 0..self.tree.n_leaves {
                     let members: Vec<usize> = self
                         .tree
                         .members(leaf)
-                        .filter(|&l| self.membership.is_live(l))
+                        .filter(|&l| {
+                            self.membership.is_live(l) && (!backup || waiting.contains(&l))
+                        })
                         .collect();
                     if members.is_empty() {
                         continue;
@@ -1031,17 +1152,34 @@ impl<'a> SimEngine<'a> {
         if active == 0 {
             return Ok(());
         }
+        // Adaptive-n follows the quorum down: the controller may have
+        // steered n to the λ_active ceiling, and re-deriving the quota
+        // below n is a hard error for a *static* n-softsync run — but a
+        // feedback-controlled one retunes instead of aborting. Must
+        // happen before the quota recomputation and the rescale record.
+        if let Some(ctl) = self.adaptive.as_mut() {
+            if let Some(new_n) = ctl.clamp_to_lambda(active) {
+                self.server.set_softsync_n(new_n)?;
+            }
+        }
         let mu = self.rescaler.mu_for(active);
         if mu != self.cur_mu {
             self.cur_mu = mu;
             self.server.set_mu(mu);
             self.base_compute = self.cfg.compute.minibatch_secs(&self.cfg.model, mu);
+            // dynamic-μ control channel: providers that can resample at
+            // the rescaled μ do so from the next mini-batch on
+            if let Some(p) = self.provider.as_deref_mut() {
+                p.set_mu(mu);
+            }
         }
         let flush = match removed {
             Some(dead) => self.server.remove_learner(dead, active)?,
             None => self.server.set_active_lambda(active)?,
         };
-        let record = self.rescaler.record(now, &self.lr, self.cfg.protocol, active)?;
+        // The server's protocol is the live one (adaptive-n may have
+        // retuned the splitting parameter since the run started).
+        let record = self.rescaler.record(now, &self.lr, self.server.protocol(), active)?;
         self.rescale_log.push(record);
         if let Some(outcome) = flush {
             self.after_update(now, outcome)?;
@@ -1253,5 +1391,125 @@ mod tests {
         assert_eq!(r.epochs.len(), 3);
         assert!(r.epochs[0].epoch == 1);
         assert!(r.epochs.windows(2).all(|w| w[0].sim_time <= w[1].sim_time));
+    }
+
+    #[test]
+    fn backup_zero_is_bitwise_hardsync() {
+        let a = run(Protocol::Hardsync, Arch::Base, 4, 4, 3, true, Modulation::None);
+        let b = run(Protocol::BackupSync { b: 0 }, Arch::Base, 4, 4, 3, true, Modulation::None);
+        assert_eq!(a.sim_seconds, b.sim_seconds);
+        assert_eq!(a.updates, b.updates);
+        assert_eq!(a.events_processed, b.events_processed);
+        assert_eq!(a.theta.unwrap().data, b.theta.unwrap().data);
+        assert_eq!(b.dropped_gradients, 0, "b = 0 can never drop");
+    }
+
+    #[test]
+    fn backup_sync_completes_stale_free_and_books_drops() {
+        for arch in [Arch::Base, Arch::Adv] {
+            let r = run(Protocol::BackupSync { b: 2 }, arch, 4, 8, 3, true, Modulation::None);
+            assert_eq!(r.epochs.len(), 3, "{arch:?}: completed");
+            assert_eq!(r.staleness.max, 0, "{arch:?}: backup-sync folds only fresh gradients");
+            assert!(r.updates > 0, "{arch:?}");
+            assert_eq!(
+                r.dropped_by_learner.iter().sum::<u64>(),
+                r.dropped_gradients,
+                "{arch:?}: per-learner attribution must add up"
+            );
+            assert!(r.theta.unwrap().is_finite(), "{arch:?}");
+        }
+    }
+
+    #[test]
+    fn backup_sync_advstar_rejected_like_hardsync() {
+        let cfg =
+            SimConfig::paper(Protocol::BackupSync { b: 1 }, Arch::AdvStar, 4, 4, 1, tiny_model());
+        let mut p = MockProvider::new(vec![0.0; 2]);
+        let err = run_sim(
+            &cfg,
+            FlatVec::zeros(2),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 2),
+            LrPolicy::new(Schedule::constant(0.1), Modulation::None, 128),
+            Some(&mut p),
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("contradictory"), "{err}");
+    }
+
+    #[test]
+    fn hetero_slowdown_extends_sim_time_deterministically() {
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, Arch::Base, 4, 4, 2, tiny_model());
+        cfg.seed = 7;
+        let time = |hetero: &str| {
+            let mut c = cfg.clone();
+            c.hetero = crate::straggler::hetero::HeteroSpec::parse(hetero).unwrap();
+            run_sim(
+                &c,
+                FlatVec::zeros(0),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+                LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+                None,
+                None,
+            )
+            .unwrap()
+        };
+        let flat = time("none");
+        let slow = time("slow:0x4");
+        assert!(
+            slow.sim_seconds > flat.sim_seconds,
+            "a 4× straggler must stretch the run: {} vs {}",
+            slow.sim_seconds,
+            flat.sim_seconds
+        );
+        assert_eq!(slow.hetero_factors, vec![4.0, 1.0, 1.0, 1.0]);
+        let replay = time("slow:0x4");
+        assert_eq!(slow.sim_seconds, replay.sim_seconds, "hetero runs replay exactly");
+        assert_eq!(slow.events_processed, replay.events_processed);
+    }
+
+    #[test]
+    fn hetero_out_of_range_and_bad_jitter_rejected() {
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, Arch::Base, 4, 2, 1, tiny_model());
+        cfg.hetero = crate::straggler::hetero::HeteroSpec::parse("slow:5x2").unwrap();
+        let run_cfg = |c: &SimConfig| {
+            run_sim(
+                c,
+                FlatVec::zeros(0),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+                LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+                None,
+                None,
+            )
+        };
+        let err = run_cfg(&cfg).unwrap_err();
+        assert!(err.to_string().contains("hetero"), "{err}");
+        // Regression: compute_jitter outside [0, 1) used to be silently
+        // accepted and mean-shifted every duration via the clamp.
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, Arch::Base, 4, 2, 1, tiny_model());
+        cfg.cluster.compute_jitter = 1.5;
+        let err = run_cfg(&cfg).unwrap_err();
+        assert!(err.to_string().contains("compute_jitter"), "{err}");
+        cfg.cluster.compute_jitter = -0.2;
+        assert!(run_cfg(&cfg).is_err());
+    }
+
+    #[test]
+    fn adaptive_requires_softsync() {
+        let mut cfg = SimConfig::paper(Protocol::Async, Arch::Base, 4, 4, 1, tiny_model());
+        cfg.adaptive = crate::straggler::adaptive::AdaptiveSpec::parse("sigma:2").unwrap();
+        let err = run_sim(
+            &cfg,
+            FlatVec::zeros(0),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+            LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+            None,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("adaptive"), "{err}");
     }
 }

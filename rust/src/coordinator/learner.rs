@@ -24,6 +24,18 @@ pub trait GradProvider {
 
     /// Number of parameters (gradient length).
     fn n_params(&self) -> usize;
+
+    /// Dynamic-μ control: the elastic rescaler retunes the per-learner
+    /// mini-batch size on membership changes, and the engines forward the
+    /// new μ here (the live engine over each learner's reply channel, the
+    /// sim engine directly). Returns whether the provider applied it —
+    /// providers whose gradient graph is AOT-compiled for one batch size
+    /// must decline (the default), in which case the server-side μ
+    /// accounting still rescales but the provider keeps sampling at its
+    /// spawn-time μ, the pre-control-channel behavior.
+    fn set_mu(&mut self, _mu: usize) -> bool {
+        false
+    }
 }
 
 /// Per-learner replica state shared by both engines.
@@ -62,11 +74,14 @@ impl LearnerState {
 #[derive(Debug, Clone)]
 pub struct MockProvider {
     pub target: FlatVec,
+    /// Last μ received over the dynamic-μ control channel (None until the
+    /// first retune) — lets tests observe that the channel delivered.
+    pub mu: Option<usize>,
 }
 
 impl MockProvider {
     pub fn new(target: Vec<f32>) -> MockProvider {
-        MockProvider { target: FlatVec::from_vec(target) }
+        MockProvider { target: FlatVec::from_vec(target), mu: None }
     }
 }
 
@@ -81,6 +96,13 @@ impl GradProvider for MockProvider {
 
     fn n_params(&self) -> usize {
         self.target.len()
+    }
+
+    fn set_mu(&mut self, mu: usize) -> bool {
+        // the closed-form gradient has no batch dimension; record and
+        // accept so control-channel tests can assert delivery
+        self.mu = Some(mu);
+        true
     }
 }
 

@@ -1,8 +1,15 @@
-//! Synchronization protocols (§3.1): hardsync, n-softsync, async.
+//! Synchronization protocols (§3.1): hardsync, backup-sync, n-softsync,
+//! async.
 //!
 //! The server-side update rules:
 //! * **Hardsync** (Eq. 3): wait for exactly one gradient from *every*
 //!   learner, average the λ of them, update, broadcast. σ ≡ 0.
+//! * **Backup-sync** (Chen et al., *Revisiting Distributed Synchronous
+//!   SGD*): a hardsync barrier over the first λ − b arrivals per round;
+//!   the b slowest gradients are *dropped* when they land (they were
+//!   computed from pre-update weights) and their learners refreshed with
+//!   current weights. σ ≡ 0 for everything aggregated; straggler work is
+//!   wasted instead of staled. b = 0 is exactly hardsync.
 //! * **n-softsync** (Eq. 5): update after collecting at least
 //!   c = ⌊λ/n⌋ gradients, averaging the c of them. Empirically ⟨σ⟩ ≈ n
 //!   and σ ≤ 2n (§5.1).
@@ -13,22 +20,33 @@
 use anyhow::{bail, Result};
 
 /// Protocol selection. `NSoftsync { n: 1 }` is 1-softsync; `Async` is the
-/// n = λ degenerate case kept separate for reporting clarity.
+/// n = λ degenerate case kept separate for reporting clarity;
+/// `BackupSync { b: 0 }` degenerates to hardsync.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Protocol {
     Hardsync,
+    /// Hardsync with `b` backup workers: each round closes on the first
+    /// λ_active − b gradients; the b slowest are dropped on arrival.
+    BackupSync { b: usize },
     NSoftsync { n: usize },
     Async,
 }
 
 impl Protocol {
-    /// Parse `"hardsync" | "async" | "<n>-softsync" | "softsync:<n>"`.
+    /// Parse `"hardsync" | "async" | "<n>-softsync" | "softsync:<n>" |
+    /// "backup:<b>"`.
     pub fn parse(s: &str) -> Result<Protocol> {
         let s = s.trim().to_ascii_lowercase();
         match s.as_str() {
             "hardsync" | "hard" => return Ok(Protocol::Hardsync),
             "async" => return Ok(Protocol::Async),
             _ => {}
+        }
+        if let Some(b) = s.strip_prefix("backup:").or_else(|| s.strip_prefix("backup-sync:")) {
+            let b: usize = b.parse().map_err(|_| {
+                anyhow::anyhow!("bad backup-worker count in {s:?} (want backup:<b>)")
+            })?;
+            return Ok(Protocol::BackupSync { b });
         }
         if let Some(n) = s.strip_suffix("-softsync").or_else(|| s.strip_prefix("softsync:")) {
             let n: usize = n.parse().map_err(|_| {
@@ -39,14 +57,16 @@ impl Protocol {
             }
             return Ok(Protocol::NSoftsync { n });
         }
-        bail!("unknown protocol {s:?} (hardsync | async | <n>-softsync)");
+        bail!("unknown protocol {s:?} (hardsync | async | <n>-softsync | backup:<b>)");
     }
 
     /// Number of gradients the server collects before updating
-    /// (c = ⌊λ/n⌋ for n-softsync, clamped to ≥ 1; λ for hardsync; 1 async).
+    /// (c = ⌊λ/n⌋ for n-softsync, clamped to ≥ 1; λ for hardsync;
+    /// λ − b for backup-sync, clamped to ≥ 1; 1 async).
     pub fn gradients_per_update(&self, lambda: usize) -> usize {
         match *self {
             Protocol::Hardsync => lambda,
+            Protocol::BackupSync { b } => lambda.saturating_sub(b).max(1),
             Protocol::NSoftsync { n } => (lambda / n).max(1),
             Protocol::Async => 1,
         }
@@ -71,20 +91,31 @@ impl Protocol {
                 );
             }
         }
+        if let Protocol::BackupSync { b } = *self {
+            if lambda <= b {
+                bail!(
+                    "backup:{b} requires λ_active > b, but λ_active = {lambda} \
+                     (a round of λ − b = 0 gradients can never close; evict \
+                     fewer learners or lower b)"
+                );
+            }
+        }
         Ok(self.gradients_per_update(lambda))
     }
 
-    /// Whether the server must hear from *every* learner each step (and
-    /// learners must block on the new weights) — only hardsync.
+    /// Whether learners block on a broadcast of fresh weights after each
+    /// round (the barrier family: hardsync hears from *every* learner,
+    /// backup-sync from the first λ − b).
     pub fn is_barrier(&self) -> bool {
-        matches!(self, Protocol::Hardsync)
+        matches!(self, Protocol::Hardsync | Protocol::BackupSync { .. })
     }
 
     /// The effective splitting parameter n (λ for async, n for softsync).
-    /// ⟨σ⟩ ≈ n is the paper's §5.1 measurement.
+    /// ⟨σ⟩ ≈ n is the paper's §5.1 measurement; the barrier protocols are
+    /// stale-free (backup-sync *drops* rather than stales late gradients).
     pub fn effective_n(&self, lambda: usize) -> usize {
         match *self {
-            Protocol::Hardsync => 0,
+            Protocol::Hardsync | Protocol::BackupSync { .. } => 0,
             Protocol::NSoftsync { n } => n.min(lambda.max(1)),
             Protocol::Async => lambda.max(1),
         }
@@ -93,6 +124,7 @@ impl Protocol {
     pub fn label(&self) -> String {
         match *self {
             Protocol::Hardsync => "hardsync".to_string(),
+            Protocol::BackupSync { b } => format!("backup:{b}"),
             Protocol::NSoftsync { n } => format!("{n}-softsync"),
             Protocol::Async => "async".to_string(),
         }
@@ -151,6 +183,16 @@ impl Accumulator {
     pub fn set_active_lambda(&mut self, lambda: usize) -> Result<()> {
         self.protocol.try_gradients_per_update(lambda)?;
         self.lambda = lambda;
+        Ok(())
+    }
+
+    /// Adaptive-n control: swap the protocol in place (between updates),
+    /// revalidating the collection quota against the current λ_active.
+    /// The pending set is untouched — if the new quota is already met,
+    /// the next push closes the round.
+    pub fn set_protocol(&mut self, protocol: Protocol) -> Result<()> {
+        protocol.try_gradients_per_update(self.lambda)?;
+        self.protocol = protocol;
         Ok(())
     }
 
@@ -286,6 +328,72 @@ mod tests {
         );
         assert!(Protocol::parse("0-softsync").is_err());
         assert!(Protocol::parse("what").is_err());
+        assert_eq!(Protocol::parse("backup:2").unwrap(), Protocol::BackupSync { b: 2 });
+        assert_eq!(Protocol::parse("backup:0").unwrap(), Protocol::BackupSync { b: 0 });
+        assert!(Protocol::parse("backup:x").is_err());
+        // labels round-trip for every variant (checkpoints rely on this)
+        for p in [
+            Protocol::Hardsync,
+            Protocol::BackupSync { b: 3 },
+            Protocol::NSoftsync { n: 4 },
+            Protocol::Async,
+        ] {
+            assert_eq!(Protocol::parse(&p.label()).unwrap(), p);
+        }
+    }
+
+    #[test]
+    fn backup_sync_quota_and_barrier_family() {
+        let p = Protocol::BackupSync { b: 2 };
+        assert_eq!(p.gradients_per_update(8), 6);
+        assert!(p.is_barrier());
+        assert_eq!(p.effective_n(8), 0, "backup-sync is stale-free");
+        // checked form rejects λ_active ≤ b (elastic membership shrink)
+        assert_eq!(p.try_gradients_per_update(3).unwrap(), 1);
+        let err = p.try_gradients_per_update(2).unwrap_err();
+        assert!(err.to_string().contains("backup:2"), "{err}");
+        assert!(p.try_gradients_per_update(1).is_err());
+        // b = 0 is exactly hardsync's quota at every λ
+        let h = Protocol::BackupSync { b: 0 };
+        for lambda in 1..=8 {
+            assert_eq!(
+                h.gradients_per_update(lambda),
+                Protocol::Hardsync.gradients_per_update(lambda)
+            );
+        }
+    }
+
+    #[test]
+    fn backup_sync_accumulator_rounds_close_at_lambda_minus_b() {
+        let mut acc = Accumulator::new(Protocol::BackupSync { b: 1 }, 3, 1);
+        let g = FlatVec::from_vec(vec![3.0]);
+        acc.push(0, &g, 0).unwrap();
+        assert!(!acc.ready());
+        acc.push(1, &g, 0).unwrap();
+        assert!(acc.ready(), "round closes on λ − b = 2 arrivals");
+        let (avg, clock) = acc.take_update();
+        assert_eq!(avg.data, vec![3.0]);
+        assert_eq!(clock, vec![0, 0]);
+        // backup-sync shares the barrier family's double-push protection
+        let mut acc = Accumulator::new(Protocol::BackupSync { b: 1 }, 3, 1);
+        acc.push(0, &g, 0).unwrap();
+        assert!(acc.push(0, &g, 0).is_err());
+    }
+
+    #[test]
+    fn accumulator_set_protocol_revalidates_quota() {
+        let mut acc = Accumulator::new(Protocol::NSoftsync { n: 2 }, 8, 1);
+        let g = FlatVec::from_vec(vec![1.0]);
+        for l in 0..3 {
+            acc.push(l, &g, 0).unwrap();
+        }
+        assert!(!acc.ready(), "quota ⌊8/2⌋ = 4 not met by 3");
+        acc.set_protocol(Protocol::NSoftsync { n: 4 }).unwrap();
+        assert!(acc.ready(), "quota ⌊8/4⌋ = 2 already met");
+        // n > λ_active is rejected and leaves the protocol unchanged
+        let err = acc.set_protocol(Protocol::NSoftsync { n: 9 }).unwrap_err();
+        assert!(err.to_string().contains("softsync"), "{err}");
+        assert!(acc.ready());
     }
 
     #[test]

@@ -39,6 +39,10 @@ pub struct PushOutcome {
     pub avg_staleness: Option<f64>,
     /// Epoch boundary crossed by this update, if any.
     pub epoch_completed: Option<usize>,
+    /// Backup-sync only: the gradient arrived after its round closed (one
+    /// of the b slowest) and was dropped — nothing was folded. The engine
+    /// refreshes the learner with current weights instead of barriering it.
+    pub dropped: bool,
 }
 
 /// The parameter server.
@@ -59,6 +63,11 @@ pub struct ParameterServer {
     pub last_alpha: f64,
     /// Pending vector clock for the timing-only path (no FlatVec math).
     timing_pending: Vec<Timestamp>,
+    /// Backup-sync: total gradients dropped as too-slow (wasted work).
+    pub dropped: u64,
+    /// Backup-sync: dropped-gradient count per learner slot (straggler
+    /// attribution for the stats server).
+    dropped_by: Vec<u64>,
 }
 
 impl ParameterServer {
@@ -69,6 +78,7 @@ impl ParameterServer {
         lr: LrPolicy,
     ) -> ParameterServer {
         let acc = Accumulator::new(cfg.protocol, cfg.lambda, theta0.len());
+        let dropped_by = vec![0; cfg.lambda];
         ParameterServer {
             cfg,
             theta: theta0,
@@ -82,6 +92,34 @@ impl ParameterServer {
             updates: 0,
             last_alpha: 0.0,
             timing_pending: Vec::new(),
+            dropped: 0,
+            dropped_by,
+        }
+    }
+
+    /// Per-learner dropped-gradient counts (backup-sync straggler
+    /// attribution; all zeros for the other protocols).
+    pub fn dropped_by(&self) -> &[u64] {
+        &self.dropped_by
+    }
+
+    /// Backup-sync's drop rule: a gradient computed from pre-update
+    /// weights (grad_ts behind the server clock) missed its round — it is
+    /// one of the b slowest and its work is discarded. Returns `true`
+    /// when the push should be discarded; the drop is booked only for
+    /// in-range learner ids (both counters or neither, so the
+    /// `dropped == Σ dropped_by` attribution invariant always holds).
+    fn backup_drop(&mut self, learner: usize, grad_ts: Timestamp) -> bool {
+        if matches!(self.cfg.protocol, crate::coordinator::protocol::Protocol::BackupSync { .. })
+            && grad_ts < self.ts
+        {
+            if let Some(d) = self.dropped_by.get_mut(learner) {
+                *d += 1;
+                self.dropped += 1;
+            }
+            true
+        } else {
+            false
         }
     }
 
@@ -120,6 +158,18 @@ impl ParameterServer {
         grad: &FlatVec,
         grad_ts: Timestamp,
     ) -> Result<PushOutcome> {
+        // Validate the id before the backup-sync drop rule (mirroring
+        // [`crate::coordinator::shard::ShardedServer`]): an out-of-range
+        // push must be an error, never a silently booked "drop".
+        if learner >= self.dropped_by.len() {
+            anyhow::bail!(
+                "learner id {learner} out of range (λ = {})",
+                self.dropped_by.len()
+            );
+        }
+        if self.backup_drop(learner, grad_ts) {
+            return Ok(PushOutcome { dropped: true, ..PushOutcome::default() });
+        }
         let scale = if self.lr.is_per_gradient() {
             let sigma = self.ts.saturating_sub(grad_ts);
             1.0 / (sigma as f32 + 1.0)
@@ -140,9 +190,12 @@ impl ParameterServer {
     /// gradients we never materialize — e.g. the 289 MB AlexNet).
     pub fn push_gradient_timing_only(
         &mut self,
-        _learner: usize,
+        learner: usize,
         grad_ts: Timestamp,
     ) -> PushOutcome {
+        if self.backup_drop(learner, grad_ts) {
+            return PushOutcome { dropped: true, ..PushOutcome::default() };
+        }
         // Bypass the accumulator's FlatVec (which is zero-length here);
         // count pending via the vector clock alone.
         self.timing_pending.push(grad_ts);
@@ -347,6 +400,39 @@ mod tests {
         s.push_gradient(0, &g, s.timestamp()).unwrap();
         let delta = theta_before - s.weights().0.data[0];
         assert!((delta - 1.0).abs() < 1e-6, "fresh push moved θ by {delta}");
+    }
+
+    #[test]
+    fn backup_sync_drops_slow_gradients_and_stays_stale_free() {
+        // λ = 3, b = 1: rounds close on 2 arrivals; the third (slow)
+        // gradient arrives behind the clock and is dropped un-folded.
+        let mut s = server(Protocol::BackupSync { b: 1 }, 3);
+        let g = FlatVec::from_vec(vec![1.0, 0.0]);
+        assert!(!s.push_gradient(0, &g, 0).unwrap().updated);
+        let out = s.push_gradient(1, &g, 0).unwrap();
+        assert!(out.updated && !out.dropped);
+        assert_eq!(s.timestamp(), 1);
+        assert_eq!(s.weights().0.data, vec![-1.0, 0.0], "averaged the 2 survivors");
+        // the straggler's round-0 gradient lands late: dropped, θ untouched
+        let late = s.push_gradient(2, &g, 0).unwrap();
+        assert!(late.dropped && !late.updated);
+        assert_eq!(s.weights().0.data, vec![-1.0, 0.0]);
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.dropped_by(), &[0, 0, 1]);
+        assert_eq!(s.staleness.max, 0, "backup-sync never folds stale gradients");
+        // an out-of-range id stays a hard error even when stale — it must
+        // never be silently booked as a "drop" (mirrors the sharded server)
+        let err = s.push_gradient(9, &g, 0).unwrap_err();
+        assert!(err.to_string().contains("out of range"), "{err}");
+        assert_eq!(s.dropped, 1, "rejected push must not book a drop");
+        // a fresh push from the refreshed straggler folds normally
+        assert!(!s.push_gradient(2, &g, 1).unwrap().dropped);
+        // timing-only path books drops identically
+        let mut t = server(Protocol::BackupSync { b: 1 }, 3);
+        t.push_gradient_timing_only(0, 0);
+        assert!(t.push_gradient_timing_only(1, 0).updated);
+        assert!(t.push_gradient_timing_only(2, 0).dropped);
+        assert_eq!(t.dropped, 1);
     }
 
     #[test]

@@ -139,6 +139,11 @@ pub struct ShardedServer {
     pub last_alpha: f64,
     /// Pending vector clock for the timing-only path.
     timing_pending: Vec<Timestamp>,
+    /// Backup-sync: total gradients dropped as too-slow (wasted work).
+    pub dropped: u64,
+    /// Backup-sync: dropped-gradient count per learner slot (straggler
+    /// attribution for the stats server).
+    dropped_by: Vec<u64>,
 }
 
 impl ShardedServer {
@@ -164,6 +169,7 @@ impl ShardedServer {
             .collect();
         ShardedServer {
             id_bound: cfg.lambda,
+            dropped_by: vec![0; cfg.lambda],
             cfg,
             spec,
             shards,
@@ -177,7 +183,67 @@ impl ShardedServer {
             updates: 0,
             last_alpha: 0.0,
             timing_pending: Vec::new(),
+            dropped: 0,
         }
+    }
+
+    /// The protocol currently in force (adaptive-n control can change the
+    /// softsync splitting parameter mid-run; see
+    /// [`ShardedServer::set_softsync_n`]).
+    pub fn protocol(&self) -> crate::coordinator::protocol::Protocol {
+        self.cfg.protocol
+    }
+
+    /// Per-learner dropped-gradient counts (backup-sync straggler
+    /// attribution; all zeros for the other protocols).
+    pub fn dropped_by(&self) -> &[u64] {
+        &self.dropped_by
+    }
+
+    /// Backup-sync's drop rule (see
+    /// [`crate::coordinator::server::ParameterServer`]'s mirror): a
+    /// gradient behind the server clock missed its round and is
+    /// discarded, booked against its learner.
+    fn backup_drop(&mut self, learner: usize, grad_ts: Timestamp) -> bool {
+        if matches!(self.cfg.protocol, crate::coordinator::protocol::Protocol::BackupSync { .. })
+            && grad_ts < self.ts
+        {
+            // both counters or neither (in-range ids only), so the
+            // `dropped == Σ dropped_by` attribution invariant always holds
+            if let Some(d) = self.dropped_by.get_mut(learner) {
+                *d += 1;
+                self.dropped += 1;
+            }
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Adaptive-n control: retune the n-softsync splitting parameter in
+    /// place, *between* updates. Rejects non-softsync protocols and any n
+    /// the current λ_active cannot serve (the checked quota). The pending
+    /// set is untouched: if the new, smaller quota is already met, the
+    /// next push closes the round — no flush is needed, so the single
+    /// clock and the shard lockstep are never at risk.
+    pub fn set_softsync_n(&mut self, n: usize) -> Result<()> {
+        use crate::coordinator::protocol::Protocol;
+        if !matches!(self.cfg.protocol, Protocol::NSoftsync { .. }) {
+            bail!(
+                "adaptive-n control requires an n-softsync protocol, run uses {}",
+                self.cfg.protocol.label()
+            );
+        }
+        if n == 0 {
+            bail!("n-softsync requires n >= 1");
+        }
+        let new = Protocol::NSoftsync { n };
+        new.try_gradients_per_update(self.cfg.lambda)?;
+        for shard in self.shards.iter_mut() {
+            shard.acc.set_protocol(new)?;
+        }
+        self.cfg.protocol = new;
+        Ok(())
     }
 
     pub fn timestamp(&self) -> Timestamp {
@@ -242,6 +308,9 @@ impl ShardedServer {
             grad.len(),
             self.spec.n_params
         );
+        if self.backup_drop(learner, grad_ts) {
+            return Ok(PushOutcome { dropped: true, ..PushOutcome::default() });
+        }
         if self.cfg.protocol.is_barrier() && self.pending_from.contains(&learner) {
             bail!("hardsync: learner {learner} pushed twice in one barrier round");
         }
@@ -291,7 +360,10 @@ impl ShardedServer {
     /// Timing-only variant: advances protocol/clock/epoch state (including
     /// every shard's clock, so per-shard stats stay truthful) without
     /// numeric work.
-    pub fn push_gradient_timing_only(&mut self, _learner: usize, grad_ts: Timestamp) -> PushOutcome {
+    pub fn push_gradient_timing_only(&mut self, learner: usize, grad_ts: Timestamp) -> PushOutcome {
+        if self.backup_drop(learner, grad_ts) {
+            return PushOutcome { dropped: true, ..PushOutcome::default() };
+        }
         self.timing_pending.push(grad_ts);
         let mut out = PushOutcome::default();
         if self.timing_pending.len() >= self.cfg.protocol.gradients_per_update(self.cfg.lambda) {
@@ -439,6 +511,8 @@ impl ShardedServer {
                 Json::Arr(self.pending_from.iter().map(|&l| Json::num(l as f64)).collect()),
             ),
             ("timing_pending", Json::arr_u64(&self.timing_pending)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("dropped_by", Json::arr_u64(&self.dropped_by)),
             ("staleness", self.staleness.to_json()),
             ("lr", self.lr.to_json()),
             ("shard_state", Json::Arr(shard_state)),
@@ -502,8 +576,18 @@ impl ShardedServer {
                 updates: sj.get("updates")?.as_u64()?,
             });
         }
+        let id_bound = j.get("id_bound")?.as_usize()?;
+        // Drop counters entered the format after v1 shipped; absent fields
+        // read as zero so pre-straggler checkpoints stay loadable.
+        let dropped = j.get("dropped").and_then(|v| v.as_u64()).unwrap_or(0);
+        let dropped_by = match j.get("dropped_by") {
+            Ok(v) => v.as_u64_vec()?,
+            Err(_) => vec![0; id_bound],
+        };
         Ok(ShardedServer {
-            id_bound: j.get("id_bound")?.as_usize()?,
+            id_bound,
+            dropped,
+            dropped_by,
             cfg,
             spec,
             shards,
@@ -781,6 +865,93 @@ mod tests {
         a.push_gradient(1, &g, stale_ts).unwrap();
         b.push_gradient(1, &g, stale_ts).unwrap();
         assert_eq!(a.assemble_weights().data, b.assemble_weights().data);
+    }
+
+    #[test]
+    fn backup_sync_sharded_drops_late_gradients_in_lockstep() {
+        // λ = 3, b = 1 over 2 shards: rounds close on 2 arrivals; the
+        // straggler's late gradient is dropped on every shard alike.
+        let mut s = ShardedServer::new(
+            cfg(Protocol::BackupSync { b: 1 }, 3, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        assert!(!s.push_gradient(0, &g, 0).unwrap().updated);
+        let out = s.push_gradient(1, &g, 0).unwrap();
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+        assert_eq!(s.shard_updates(), vec![1, 1]);
+        assert_eq!(s.assemble_weights().data, vec![-1.0; 4]);
+        let late = s.push_gradient(2, &g, 0).unwrap();
+        assert!(late.dropped && !late.updated);
+        assert_eq!(s.assemble_weights().data, vec![-1.0; 4], "dropped push folds nothing");
+        assert_eq!(s.dropped, 1);
+        assert_eq!(s.dropped_by(), &[0, 0, 1]);
+        assert_eq!(s.staleness.max, 0);
+        // the elastic shrink uses the checked quota: λ_active ≤ b rejected
+        assert!(s.set_active_lambda(1).is_err());
+        assert_eq!(s.active_lambda(), 3, "failed rescale must not change λ");
+        // shrinking to λ = 2 keeps quota 1: next fresh push updates alone
+        assert!(s.set_active_lambda(2).unwrap().is_none());
+        let out = s.push_gradient(0, &g, 1).unwrap();
+        assert!(out.updated);
+        assert_eq!(s.shard_updates(), vec![2, 2]);
+    }
+
+    #[test]
+    fn set_softsync_n_retunes_quota_between_updates() {
+        let mut s = ShardedServer::new(
+            cfg(Protocol::NSoftsync { n: 1 }, 4, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        // quota ⌊4/1⌋ = 4: two pushes leave the round open
+        s.push_gradient(0, &g, 0).unwrap();
+        s.push_gradient(1, &g, 0).unwrap();
+        s.set_softsync_n(2).unwrap();
+        assert_eq!(s.protocol(), Protocol::NSoftsync { n: 2 });
+        // new quota ⌊4/2⌋ = 2 already met: the NEXT push closes the round
+        // (no flush — the clock only ever advances through a push)
+        assert_eq!(s.timestamp(), 0);
+        let out = s.push_gradient(2, &g, 0).unwrap();
+        assert!(out.updated);
+        assert_eq!(s.timestamp(), 1);
+        assert_eq!(s.shard_updates(), vec![1, 1], "lockstep preserved across retune");
+        // invalid retunes are rejected and leave the protocol unchanged
+        assert!(s.set_softsync_n(0).is_err());
+        assert!(s.set_softsync_n(5).is_err(), "n > λ_active");
+        assert_eq!(s.protocol(), Protocol::NSoftsync { n: 2 });
+        let mut hard = ShardedServer::new(
+            cfg(Protocol::Hardsync, 2, 1),
+            FlatVec::zeros(2),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 2),
+            lr(),
+        );
+        assert!(hard.set_softsync_n(2).is_err(), "adaptive-n is softsync-only");
+    }
+
+    #[test]
+    fn drop_counters_survive_checkpoint_roundtrip() {
+        let mut s = ShardedServer::new(
+            cfg(Protocol::BackupSync { b: 1 }, 3, 2),
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            lr(),
+        );
+        let g = FlatVec::from_vec(vec![1.0; 4]);
+        s.push_gradient(0, &g, 0).unwrap();
+        s.push_gradient(1, &g, 0).unwrap();
+        s.push_gradient(2, &g, 0).unwrap(); // dropped
+        let text = s.to_json().to_string();
+        let back =
+            ShardedServer::from_json(&crate::util::json::Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.protocol(), Protocol::BackupSync { b: 1 });
+        assert_eq!(back.dropped, 1);
+        assert_eq!(back.dropped_by(), s.dropped_by());
     }
 
     #[test]

@@ -38,6 +38,13 @@ impl<'a> GradProvider for CnnProvider<'a> {
     fn n_params(&self) -> usize {
         self.exec.n_params
     }
+
+    fn set_mu(&mut self, _mu: usize) -> bool {
+        // The grad graph is AOT-compiled for one batch size (cnn_grad(μ));
+        // resampling at a different μ would feed it a mis-shaped batch.
+        // Decline: the rescaler's server-side accounting still applies.
+        false
+    }
 }
 
 /// LM provider: contiguous-window sampling over the byte corpus.
@@ -192,5 +199,11 @@ impl GradProvider for ServiceProvider {
 
     fn n_params(&self) -> usize {
         self.n_params
+    }
+
+    fn set_mu(&mut self, _mu: usize) -> bool {
+        // Like CnnProvider: the compute service's grad graph is compiled
+        // for the spawn-time μ, so a live retune must be declined.
+        false
     }
 }

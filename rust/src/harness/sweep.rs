@@ -38,6 +38,14 @@ pub struct PointResult {
     pub recovery_secs: Vec<f64>,
     /// λ_active at the end of the run.
     pub final_active_lambda: usize,
+    /// Backup-sync: gradients dropped as too-slow (0 elsewhere).
+    pub dropped_gradients: u64,
+    /// Backup-sync: dropped-gradient count per learner slot.
+    pub dropped_by_learner: Vec<u64>,
+    /// Fraction of the run each learner spent computing.
+    pub learner_utilization: Vec<f64>,
+    /// Adaptive-n decisions, one per epoch (empty when the knob is off).
+    pub adaptive: Vec<crate::straggler::adaptive::AdaptiveRecord>,
 }
 
 /// Runs grid points with shared compiled executables.
@@ -82,6 +90,8 @@ impl<'a> Sweep<'a> {
             churn: cfg.churn.clone(),
             rescale: cfg.rescale,
             checkpoint_every_updates: cfg.checkpoint_every,
+            hetero: cfg.hetero.clone(),
+            adaptive: cfg.adaptive.clone(),
         };
         let theta0 = warmstarted(self, cfg)?;
         let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
@@ -108,6 +118,8 @@ impl<'a> Sweep<'a> {
             churn: crate::elastic::membership::ChurnSchedule::none(),
             rescale: crate::elastic::rescaler::RescalePolicy::None,
             checkpoint_every_updates: 0,
+            hetero: crate::straggler::hetero::HeteroSpec::none(),
+            adaptive: crate::straggler::adaptive::AdaptiveSpec::none(),
             ..sim_cfg.clone()
         };
         let paper_time = run_sim(
@@ -135,6 +147,10 @@ impl<'a> Sweep<'a> {
             churn_events: result.churn.len(),
             recovery_secs: result.recovery_secs,
             final_active_lambda: result.final_active_lambda,
+            dropped_gradients: result.dropped_gradients,
+            dropped_by_learner: result.dropped_by_learner,
+            learner_utilization: result.learner_utilization,
+            adaptive: result.adaptive,
         })
     }
 
@@ -190,11 +206,14 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         eval_each_epoch: false,
         max_updates: None,
         // The warm-start phase is a controlled prologue: no churn, no
-        // rescaling, no checkpoints — elasticity applies to the run under
-        // test only.
+        // rescaling, no checkpoints, homogeneous open-loop learners —
+        // elasticity and straggler scenarios apply to the run under test
+        // only.
         churn: crate::elastic::membership::ChurnSchedule::none(),
         rescale: crate::elastic::rescaler::RescalePolicy::None,
         checkpoint_every_updates: 0,
+        hetero: crate::straggler::hetero::HeteroSpec::none(),
+        adaptive: crate::straggler::adaptive::AdaptiveSpec::none(),
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();

@@ -28,6 +28,7 @@ pub mod netsim;
 pub mod params;
 pub mod runtime;
 pub mod stats;
+pub mod straggler;
 pub mod util;
 
 /// Crate-wide result type.

@@ -28,7 +28,8 @@ const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing> [--flags]
   sim                       one (σ,μ,λ) point: real SGD + simulated P775 time
   sweep                     (μ,λ) grid under one protocol
   timing                    timing-only simulation at paper scale
-common flags: --protocol hardsync|async|<n>-softsync  --arch base|adv|adv*
+common flags: --protocol hardsync|async|<n>-softsync|backup:<b>
+              --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
               --shards S (root parameter shards; 1 = flat server)
 elasticity:   --churn SPEC (kill:<id>@<t>,rejoin:<id>@<t>,join:<id>@<t>,
@@ -38,6 +39,11 @@ elasticity:   --churn SPEC (kill:<id>@<t>,rejoin:<id>@<t>,join:<id>@<t>,
                 [sim/sweep/timing]
               --heartbeat-ms N (live engine: evict learners silent > 2N ms)
               --epoch-csv FILE (sim: per-epoch CSV incl. active-λ column)
+stragglers:   --hetero SPEC (slow:<id>x<f>,lognormal:<σ>,pareto:<α>,
+                markov:<p↓>:<p↑>:<mult> | none) per-learner speed skew
+                [sim/sweep/timing]
+              --adaptive sigma:<target>[,band:<f>] (retune n-softsync's n
+                per epoch to hold ⟨σ⟩) [sim/sweep/timing]
 ";
 
 fn main() {
@@ -216,6 +222,15 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
             fmt_secs(mean_rec)
         );
     }
+    if !cfg.hetero.is_quiet() || p.dropped_gradients > 0 {
+        println!(
+            "stragglers: {}",
+            rudra::stats::straggler_summary(&p.learner_utilization, &p.dropped_by_learner)
+        );
+    }
+    if !p.adaptive.is_empty() {
+        println!("{}", rudra::stats::adaptive_summary(&p.adaptive));
+    }
     for e in &p.epochs {
         if let Some(err) = e.test_error_pct {
             println!(
@@ -278,6 +293,8 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.churn = cfg.churn.clone();
     sim_cfg.rescale = cfg.rescale;
     sim_cfg.checkpoint_every_updates = cfg.checkpoint_every;
+    sim_cfg.hetero = cfg.hetero.clone();
+    sim_cfg.adaptive = cfg.adaptive.clone();
     let r = run_sim(
         &sim_cfg,
         rudra::params::FlatVec::zeros(0),
@@ -308,6 +325,15 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     }
     if r.checkpoints_taken > 0 {
         println!("checkpoints: {} captured", r.checkpoints_taken);
+    }
+    if !cfg.hetero.is_quiet() || r.dropped_gradients > 0 {
+        println!(
+            "stragglers: {}",
+            rudra::stats::straggler_summary(&r.learner_utilization, &r.dropped_by_learner)
+        );
+    }
+    if !r.adaptive.is_empty() {
+        println!("{}", rudra::stats::adaptive_summary(&r.adaptive));
     }
     let _ = Protocol::Hardsync; // referenced for doc completeness
     Ok(())

@@ -7,6 +7,8 @@
 //! Rudra-adv: a flat parameter server receiving λ simultaneous 300 MB
 //! pushes serializes them into a >1 s stall.
 
+use anyhow::{bail, Result};
+
 use crate::util::rng::Rng;
 
 /// Cluster-wide communication parameters.
@@ -66,6 +68,46 @@ impl ClusterSpec {
     /// Seconds to move `bytes` over one uncontended link.
     pub fn wire_time(&self, bytes: f64) -> f64 {
         self.latency + bytes / self.link_bandwidth
+    }
+
+    /// Sanity-check the spec before a run. The load-bearing rule is the
+    /// jitter bound: [`jittered`] draws `1 + jitter·N(0,1)` clamped to
+    /// ≥ 0.2, so a jitter ≥ 1 puts a large probability mass on the clamp
+    /// and *silently inflates* the mean compute time instead of widening
+    /// it symmetrically — a config typo (e.g. writing a percentage) would
+    /// skew every runtime result without failing. Negative jitter,
+    /// out-of-range straggler probability, sub-1 straggler multipliers,
+    /// and degenerate bandwidth/topology values are rejected for the same
+    /// reason.
+    pub fn validate(&self) -> Result<()> {
+        if !self.compute_jitter.is_finite() || !(0.0..1.0).contains(&self.compute_jitter) {
+            bail!(
+                "compute_jitter must be in [0, 1), got {} (the 1 + jitter·N(0,1) \
+                 clamp would silently distort the mean at jitter >= 1)",
+                self.compute_jitter
+            );
+        }
+        if !self.straggler_prob.is_finite() || !(0.0..=1.0).contains(&self.straggler_prob) {
+            bail!("straggler_prob must be a probability, got {}", self.straggler_prob);
+        }
+        if self.straggler_prob > 0.0 && (!self.straggler_mult.is_finite() || self.straggler_mult < 1.0)
+        {
+            bail!("straggler_mult must be >= 1, got {}", self.straggler_mult);
+        }
+        if !self.link_bandwidth.is_finite()
+            || self.link_bandwidth <= 0.0
+            || !self.local_bandwidth.is_finite()
+            || self.local_bandwidth <= 0.0
+        {
+            bail!("link/local bandwidth must be > 0");
+        }
+        if !self.latency.is_finite() || self.latency < 0.0 {
+            bail!("latency must be >= 0, got {}", self.latency);
+        }
+        if self.learners_per_node == 0 {
+            bail!("learners_per_node must be >= 1");
+        }
+        Ok(())
     }
 }
 
@@ -345,6 +387,37 @@ mod tests {
         let spec = ClusterSpec::p775();
         let mut rng = Rng::new(4);
         assert!((0..5000).all(|_| jittered(1.0, &spec, &mut rng) < 2.0));
+    }
+
+    #[test]
+    fn validate_rejects_distorting_jitter() {
+        // Regression: a jitter >= 1 (or < 0) used to be accepted silently
+        // even though the 1 + jitter·N(0,1) clamp at 0.2 turns it into a
+        // mean shift rather than symmetric noise.
+        assert!(ClusterSpec::p775().validate().is_ok());
+        assert!(ClusterSpec::chaotic().validate().is_ok());
+        let spec = |j: f64| ClusterSpec { compute_jitter: j, ..ClusterSpec::p775() };
+        for bad in [-0.1, 1.0, 1.5, f64::NAN, f64::INFINITY] {
+            let err = spec(bad).validate().unwrap_err();
+            assert!(err.to_string().contains("compute_jitter"), "{bad}: {err}");
+        }
+        assert!(spec(0.0).validate().is_ok());
+        assert!(spec(0.99).validate().is_ok());
+        // the clamp's mean-shift, demonstrated: at jitter 2 the mean draw
+        // is well above the nominal 1.0 the spec pretends to preserve
+        let distorted = ClusterSpec { compute_jitter: 2.0, ..ClusterSpec::p775() };
+        let mut rng = Rng::new(1);
+        let mean: f64 =
+            (0..20_000).map(|_| jittered(1.0, &distorted, &mut rng)).sum::<f64>() / 20_000.0;
+        assert!(mean > 1.15, "clamp inflates the mean to {mean} — why jitter >= 1 is invalid");
+        // the other knobs are covered too
+        let bad_prob = ClusterSpec { straggler_prob: 1.5, ..ClusterSpec::p775() };
+        assert!(bad_prob.validate().is_err());
+        let bad_mult =
+            ClusterSpec { straggler_prob: 0.1, straggler_mult: 0.5, ..ClusterSpec::p775() };
+        assert!(bad_mult.validate().is_err());
+        let bad_lpn = ClusterSpec { learners_per_node: 0, ..ClusterSpec::p775() };
+        assert!(bad_lpn.validate().is_err());
     }
 
     #[test]

@@ -116,6 +116,8 @@ impl LearnerCompute {
     }
 
     /// Seconds to compute one mini-batch of size μ (forward + backward).
+    /// Heterogeneous clusters ([`crate::straggler::hetero`]) scale this
+    /// homogeneous cost by a per-learner slowdown factor at draw time.
     pub fn minibatch_secs(&self, model: &ModelCost, mu: usize) -> f64 {
         let flops = model.flops_per_sample * (1.0 + self.backward_ratio) * mu as f64;
         let rate = self.peak_flops * self.gemm_efficiency * self.efficiency(mu);

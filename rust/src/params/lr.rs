@@ -111,7 +111,9 @@ impl LrPolicy {
     pub fn factor(&self, protocol: Protocol, mu: usize, lambda: usize) -> f64 {
         let eff = match self.modulation {
             Modulation::Auto => match protocol {
-                Protocol::Hardsync => Modulation::HardsyncSqrt,
+                // backup-sync is stale-free like hardsync; its aggregate
+                // batch is the √-rule's input (with the dropped b removed)
+                Protocol::Hardsync | Protocol::BackupSync { .. } => Modulation::HardsyncSqrt,
                 Protocol::NSoftsync { .. } | Protocol::Async => {
                     Modulation::StalenessReciprocal
                 }
@@ -124,13 +126,20 @@ impl LrPolicy {
             // (see ParameterServer::push_gradient); the scalar α is α₀.
             Modulation::PerGradient => 1.0,
             Modulation::HardsyncSqrt => {
-                ((lambda * mu) as f64 / self.reference_batch as f64).sqrt()
+                // aggregate samples per update: λμ, minus the b dropped
+                // gradients under backup-sync
+                let agg = match protocol {
+                    Protocol::BackupSync { b } => lambda.saturating_sub(b).max(1) * mu,
+                    _ => lambda * mu,
+                };
+                (agg as f64 / self.reference_batch as f64).sqrt()
             }
             Modulation::StalenessReciprocal => {
-                // ⟨σ⟩ = n for n-softsync (measured in §5.1); hardsync has
-                // σ = 0, where the rule degenerates to no modulation.
+                // ⟨σ⟩ = n for n-softsync (measured in §5.1); the barrier
+                // protocols have σ = 0, where the rule degenerates to no
+                // modulation.
                 let n = match protocol {
-                    Protocol::Hardsync => 1,
+                    Protocol::Hardsync | Protocol::BackupSync { .. } => 1,
                     Protocol::NSoftsync { n } => n.max(1),
                     Protocol::Async => lambda.max(1),
                 };
@@ -214,6 +223,22 @@ mod tests {
         assert!((p.factor(Protocol::Hardsync, 128, 1) - 1.0).abs() < 1e-12);
         // λμ = 4·128 ⇒ factor 2
         assert!((p.factor(Protocol::Hardsync, 128, 4) - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn backup_sync_uses_sqrt_rule_on_the_surviving_aggregate() {
+        let p = LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128);
+        // (λ − b)μ = 1·128 ⇒ factor 1 (b = 3 of λ = 4 dropped)
+        let f = p.factor(Protocol::BackupSync { b: 3 }, 128, 4);
+        assert!((f - 1.0).abs() < 1e-12, "{f}");
+        // b = 0 matches hardsync exactly
+        assert_eq!(
+            p.factor(Protocol::BackupSync { b: 0 }, 128, 4),
+            p.factor(Protocol::Hardsync, 128, 4)
+        );
+        // under the reciprocal rule, backup-sync is stale-free (n = 1)
+        let p = LrPolicy::new(Schedule::constant(0.001), Modulation::StalenessReciprocal, 128);
+        assert!((p.factor(Protocol::BackupSync { b: 2 }, 4, 8) - 1.0).abs() < 1e-12);
     }
 
     #[test]

@@ -138,6 +138,58 @@ pub fn churn_summary(
     out
 }
 
+/// One-line report of a run's straggler profile: the per-learner compute
+/// utilization spread plus backup-sync's dropped-gradient accounting,
+/// e.g. `learner util 9–97% (mean 21%), 42 gradients dropped (worst:
+/// learner 0 × 40)`. Homogeneous, drop-free runs render as `balanced
+/// (util ≈ 87%)`.
+pub fn straggler_summary(utilization: &[f64], dropped_by: &[u64]) -> String {
+    if utilization.is_empty() {
+        return "no learners".to_string();
+    }
+    let pct = |x: f64| (x * 100.0).round() as i64;
+    let min = utilization.iter().cloned().fold(f64::INFINITY, f64::min);
+    let max = utilization.iter().cloned().fold(f64::NEG_INFINITY, f64::max);
+    let mean = crate::util::mean(utilization);
+    let total_dropped: u64 = dropped_by.iter().sum();
+    // a spread under 10 points of utilization with no drops is balanced
+    if max - min < 0.10 && total_dropped == 0 {
+        return format!("balanced (util ≈ {}%)", pct(mean));
+    }
+    let mut out = format!(
+        "learner util {}–{}% (mean {}%)",
+        pct(min),
+        pct(max),
+        pct(mean)
+    );
+    if total_dropped > 0 {
+        let (worst, count) = dropped_by
+            .iter()
+            .enumerate()
+            .max_by_key(|&(_, c)| c)
+            .map(|(l, &c)| (l, c))
+            .unwrap_or((0, 0));
+        out.push_str(&format!(
+            ", {total_dropped} gradients dropped (worst: learner {worst} × {count})"
+        ));
+    }
+    out
+}
+
+/// One-line report of the adaptive-n controller's trajectory, e.g.
+/// `adaptive-n: 3 retunes, n 8 → 2, ⟨σ⟩ 7.6 → 2.1`. An empty log renders
+/// as `adaptive-n: no decisions`.
+pub fn adaptive_summary(log: &[crate::straggler::adaptive::AdaptiveRecord]) -> String {
+    let (Some(first), Some(last)) = (log.first(), log.last()) else {
+        return "adaptive-n: no decisions".to_string();
+    };
+    let retunes = log.iter().filter(|r| r.new_n != r.old_n).count();
+    format!(
+        "adaptive-n: {retunes} retunes, n {} → {}, ⟨σ⟩ {:.1} → {:.1}",
+        first.old_n, last.new_n, first.observed_sigma, last.observed_sigma
+    )
+}
+
 /// One-line report of per-shard applyUpdate counts from a sharded-server
 /// run. Lockstep shards render compactly (`4 shards × 120 updates`); any
 /// divergence — which would indicate a routing bug — is spelled out in
@@ -172,6 +224,38 @@ mod tests {
         assert!(s.contains("3 churn events"), "{s}");
         assert!(s.contains("2 kills") && s.contains("1 rejoins"), "{s}");
         assert!(s.contains("12.00s"), "{s}");
+    }
+
+    #[test]
+    fn straggler_summary_renders_spread_and_drops() {
+        assert_eq!(straggler_summary(&[], &[]), "no learners");
+        let s = straggler_summary(&[0.85, 0.87, 0.86], &[0, 0, 0]);
+        assert!(s.starts_with("balanced"), "{s}");
+        let s = straggler_summary(&[0.95, 0.10, 0.12], &[40, 0, 2]);
+        assert!(s.contains("10–95%"), "{s}");
+        assert!(s.contains("42 gradients dropped"), "{s}");
+        assert!(s.contains("learner 0 × 40"), "{s}");
+        // drops force the detailed rendering even when utilization is flat
+        let s = straggler_summary(&[0.5, 0.5], &[3, 0]);
+        assert!(s.contains("3 gradients dropped"), "{s}");
+    }
+
+    #[test]
+    fn adaptive_summary_renders_trajectory() {
+        use crate::straggler::adaptive::AdaptiveRecord;
+        assert_eq!(adaptive_summary(&[]), "adaptive-n: no decisions");
+        let rec = |epoch, sigma, old_n, new_n| AdaptiveRecord {
+            epoch,
+            observed_sigma: sigma,
+            epoch_secs: 1.0,
+            old_n,
+            new_n,
+        };
+        let log = vec![rec(1, 7.6, 8, 4), rec(2, 3.9, 4, 2), rec(3, 2.1, 2, 2)];
+        let s = adaptive_summary(&log);
+        assert!(s.contains("2 retunes"), "{s}");
+        assert!(s.contains("n 8 → 2"), "{s}");
+        assert!(s.contains("7.6 → 2.1"), "{s}");
     }
 
     #[test]

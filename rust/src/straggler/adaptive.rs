@@ -1,0 +1,302 @@
+//! Adaptive-n staleness controller: hold a target ⟨σ⟩ by retuning the
+//! n-softsync splitting parameter from observations.
+//!
+//! The paper picks n offline and shows ⟨σ⟩ ≈ n (§5.1); under
+//! heterogeneous speeds and elastic membership the realized staleness
+//! drifts away from the configured n, and with it the error–runtime
+//! operating point (Dutta et al., *Slow and Stale Gradients Can Win the
+//! Race*). The [`AdaptiveController`] closes the loop: at every epoch
+//! boundary it measures the epoch's mean gradient staleness from the
+//! staleness histogram totals and multiplicatively steps n toward the
+//! target (⟨σ⟩ ≈ n makes `n ← n · target/⟨σ⟩` a fixed-point iteration),
+//! clamped to one doubling/halving per epoch and to `1 ≤ n ≤ λ_active`.
+//! A deadband around the target suppresses hunting. Every decision is
+//! logged as an [`AdaptiveRecord`].
+//!
+//! The controller only *decides*; applying the new n — revalidating the
+//! quota c = ⌊λ_active/n⌋ and swapping the protocol on the sharded
+//! server's accumulators between updates — is
+//! [`crate::coordinator::shard::ShardedServer::set_softsync_n`]'s job,
+//! driven by the engine.
+
+use anyhow::{bail, Result};
+
+/// Adaptive-control spec, parsed from the `adaptive` config knob:
+/// `none` (default, open-loop) or `sigma:<target>` with an optional
+/// `,band:<frac>` deadband override (default 0.25 — retune only when the
+/// observed ⟨σ⟩ leaves ±25% of the target).
+#[derive(Debug, Clone, PartialEq)]
+pub struct AdaptiveSpec {
+    /// Target mean gradient staleness (None = controller off).
+    pub target_sigma: Option<f64>,
+    /// Relative deadband around the target.
+    pub deadband: f64,
+}
+
+impl Default for AdaptiveSpec {
+    fn default() -> AdaptiveSpec {
+        AdaptiveSpec::none()
+    }
+}
+
+impl AdaptiveSpec {
+    pub fn none() -> AdaptiveSpec {
+        AdaptiveSpec { target_sigma: None, deadband: DEFAULT_DEADBAND }
+    }
+
+    pub fn enabled(&self) -> bool {
+        self.target_sigma.is_some()
+    }
+
+    /// Parse the config DSL (see the type docs).
+    pub fn parse(s: &str) -> Result<AdaptiveSpec> {
+        let mut out = AdaptiveSpec::none();
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(out);
+        }
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (head, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad adaptive token {tok:?} (want kind:…)"))?;
+            match head.to_ascii_lowercase().as_str() {
+                "sigma" => {
+                    let t: f64 = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad adaptive target {rest:?}"))?;
+                    if !t.is_finite() || t <= 0.0 {
+                        bail!("adaptive target sigma must be > 0");
+                    }
+                    out.target_sigma = Some(t);
+                }
+                "band" => {
+                    let b: f64 = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad adaptive deadband {rest:?}"))?;
+                    if !(0.0..1.0).contains(&b) {
+                        bail!("adaptive deadband must be in [0, 1)");
+                    }
+                    out.deadband = b;
+                }
+                other => bail!("unknown adaptive entry {other:?} (sigma|band|none)"),
+            }
+        }
+        if out.target_sigma.is_none() {
+            bail!("adaptive spec needs a sigma:<target> entry (or \"none\")");
+        }
+        Ok(out)
+    }
+
+    /// Canonical label (round-trips through [`AdaptiveSpec::parse`]).
+    pub fn label(&self) -> String {
+        match self.target_sigma {
+            None => "none".to_string(),
+            Some(t) if self.deadband == DEFAULT_DEADBAND => format!("sigma:{t}"),
+            Some(t) => format!("sigma:{t},band:{}", self.deadband),
+        }
+    }
+}
+
+const DEFAULT_DEADBAND: f64 = 0.25;
+
+/// One per-epoch controller decision (`new_n == old_n` means the
+/// observation stayed inside the deadband or the clamp bound).
+#[derive(Debug, Clone)]
+pub struct AdaptiveRecord {
+    pub epoch: usize,
+    /// Mean gradient staleness over the epoch's updates.
+    pub observed_sigma: f64,
+    /// Virtual seconds the epoch took.
+    pub epoch_secs: f64,
+    pub old_n: usize,
+    pub new_n: usize,
+}
+
+/// The feedback loop. Owns the decision log; the engine applies the
+/// returned n to the server.
+#[derive(Debug)]
+pub struct AdaptiveController {
+    target: f64,
+    deadband: f64,
+    n: usize,
+    last_count: u64,
+    last_sum: f64,
+    last_epoch_time: f64,
+    pub log: Vec<AdaptiveRecord>,
+}
+
+impl AdaptiveController {
+    /// `n0` is the configured n-softsync splitting parameter the run
+    /// starts with. Returns `None` for an open-loop (quiet) spec.
+    pub fn new(spec: &AdaptiveSpec, n0: usize) -> Option<AdaptiveController> {
+        spec.target_sigma.map(|target| AdaptiveController {
+            target,
+            deadband: spec.deadband,
+            n: n0.max(1),
+            last_count: 0,
+            last_sum: 0.0,
+            last_epoch_time: 0.0,
+            log: Vec::new(),
+        })
+    }
+
+    /// The n currently in force (as last decided).
+    pub fn n(&self) -> usize {
+        self.n
+    }
+
+    /// Membership shrink: the active quorum fell to `active`, possibly
+    /// below the controller's current n — follow it down (n ≤ λ_active is
+    /// the checked quota's feasibility rule). Returns the new n when the
+    /// controller had to move; the engine applies it to the server
+    /// *before* re-deriving the quota for the shrunk quorum, so a kill at
+    /// the n ceiling retunes instead of aborting the run.
+    pub fn clamp_to_lambda(&mut self, active: usize) -> Option<usize> {
+        let cap = active.max(1);
+        if self.n > cap {
+            self.n = cap;
+            Some(cap)
+        } else {
+            None
+        }
+    }
+
+    /// Feed one epoch boundary: `count`/`sum` are the run-cumulative
+    /// gradient count and staleness sum (the controller differences them
+    /// into a per-epoch window itself), `now` the boundary's virtual
+    /// time, `active_lambda` the clamp ceiling. Returns `Some(new_n)`
+    /// when the server's splitting parameter should change.
+    pub fn epoch_tick(
+        &mut self,
+        epoch: usize,
+        now: f64,
+        count: u64,
+        sum: f64,
+        active_lambda: usize,
+    ) -> Option<usize> {
+        let window_count = count.saturating_sub(self.last_count);
+        let window_sum = sum - self.last_sum;
+        let epoch_secs = now - self.last_epoch_time;
+        self.last_count = count;
+        self.last_sum = sum;
+        self.last_epoch_time = now;
+        if window_count == 0 {
+            return None;
+        }
+        let sigma = window_sum / window_count as f64;
+        let old_n = self.n;
+        let mut new_n = old_n;
+        let hi = self.target * (1.0 + self.deadband);
+        let lo = self.target * (1.0 - self.deadband);
+        if sigma > hi || sigma < lo {
+            // ⟨σ⟩ ≈ n ⇒ multiplicative step toward the target, at most one
+            // doubling/halving per epoch so a noisy window cannot slam the
+            // protocol across its whole range.
+            let ratio = (self.target / sigma.max(1e-9)).clamp(0.5, 2.0);
+            new_n = ((old_n as f64 * ratio).round() as usize).clamp(1, active_lambda.max(1));
+        }
+        self.log.push(AdaptiveRecord {
+            epoch,
+            observed_sigma: sigma,
+            epoch_secs,
+            old_n,
+            new_n,
+        });
+        if new_n != old_n {
+            self.n = new_n;
+            Some(new_n)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        let s = AdaptiveSpec::parse("sigma:2").unwrap();
+        assert_eq!(s.target_sigma, Some(2.0));
+        assert_eq!(s.deadband, DEFAULT_DEADBAND);
+        assert_eq!(AdaptiveSpec::parse(&s.label()).unwrap(), s);
+        let s = AdaptiveSpec::parse("sigma:1.5,band:0.1").unwrap();
+        assert_eq!(s.deadband, 0.1);
+        assert_eq!(AdaptiveSpec::parse(&s.label()).unwrap(), s);
+        assert!(AdaptiveSpec::parse("none").unwrap().target_sigma.is_none());
+        assert!(!AdaptiveSpec::parse("none").unwrap().enabled());
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(AdaptiveSpec::parse("sigma:0").is_err());
+        assert!(AdaptiveSpec::parse("sigma:-2").is_err());
+        assert!(AdaptiveSpec::parse("band:0.5").is_err(), "band without target");
+        assert!(AdaptiveSpec::parse("sigma:2,band:1.5").is_err());
+        assert!(AdaptiveSpec::parse("tau:3").is_err());
+    }
+
+    #[test]
+    fn quiet_spec_builds_no_controller() {
+        assert!(AdaptiveController::new(&AdaptiveSpec::none(), 4).is_none());
+    }
+
+    #[test]
+    fn steps_toward_target_with_clamped_rate() {
+        let spec = AdaptiveSpec::parse("sigma:2").unwrap();
+        let mut c = AdaptiveController::new(&spec, 8).unwrap();
+        // epoch 1: observed ⟨σ⟩ = 8 (100 gradients, sum 800) ⇒ ratio
+        // 2/8 = 0.25 clamps to 0.5 ⇒ n 8 → 4
+        assert_eq!(c.epoch_tick(1, 10.0, 100, 800.0, 8), Some(4));
+        // epoch 2: window is differenced — 100 more gradients at σ = 4
+        assert_eq!(c.epoch_tick(2, 20.0, 200, 1200.0, 8), Some(2));
+        assert_eq!(c.n(), 2);
+        // epoch 3: on target ⇒ inside the deadband, no change
+        assert_eq!(c.epoch_tick(3, 30.0, 300, 1400.0, 8), None);
+        assert_eq!(c.log.len(), 3);
+        assert_eq!(c.log[0].old_n, 8);
+        assert_eq!(c.log[0].new_n, 4);
+        assert!((c.log[1].observed_sigma - 4.0).abs() < 1e-12);
+        assert!((c.log[2].epoch_secs - 10.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn raises_n_when_too_fresh_and_respects_lambda_clamp() {
+        let spec = AdaptiveSpec::parse("sigma:6").unwrap();
+        let mut c = AdaptiveController::new(&spec, 4).unwrap();
+        // observed σ = 1 ⇒ ratio clamps to 2 ⇒ 4 → 8, but λ_active = 6
+        assert_eq!(c.epoch_tick(1, 5.0, 50, 50.0, 6), Some(6));
+        assert_eq!(c.n(), 6);
+        // n never drops below 1
+        let mut floor = AdaptiveController::new(&AdaptiveSpec::parse("sigma:0.1").unwrap(), 1)
+            .unwrap();
+        assert_eq!(floor.epoch_tick(1, 1.0, 10, 100.0, 8), None);
+        assert_eq!(floor.n(), 1);
+    }
+
+    #[test]
+    fn membership_clamp_follows_quorum_down() {
+        let spec = AdaptiveSpec::parse("sigma:8").unwrap();
+        let mut c = AdaptiveController::new(&spec, 6).unwrap();
+        assert_eq!(c.clamp_to_lambda(8), None, "quorum above n: no move");
+        assert_eq!(c.clamp_to_lambda(4), Some(4), "kill below the ceiling retunes");
+        assert_eq!(c.n(), 4);
+        assert_eq!(c.clamp_to_lambda(4), None, "idempotent at the cap");
+        // never below 1, even for a pathological quorum report
+        assert_eq!(c.clamp_to_lambda(0), Some(1));
+        assert_eq!(c.n(), 1);
+    }
+
+    #[test]
+    fn empty_window_is_skipped() {
+        let spec = AdaptiveSpec::parse("sigma:2").unwrap();
+        let mut c = AdaptiveController::new(&spec, 4).unwrap();
+        assert_eq!(c.epoch_tick(1, 1.0, 0, 0.0, 8), None);
+        assert!(c.log.is_empty());
+    }
+}

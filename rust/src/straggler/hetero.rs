@@ -1,0 +1,365 @@
+//! Per-learner speed heterogeneity: spec DSL + deterministic model.
+//!
+//! A [`HeteroSpec`] describes *why* learners differ in speed; a
+//! [`HeteroModel`] realizes it for a concrete λ as one persistent
+//! slowdown factor per learner plus an optional two-state Markov
+//! transient. The virtual-time engine multiplies each mini-batch's base
+//! compute time ([`crate::netsim::cost::LearnerCompute::minibatch_secs`])
+//! by the learner's current factor before the usual jitter draw.
+//!
+//! All randomness — sampling the persistent factors and driving the
+//! Markov transitions — comes from the model's own RNG stream, derived
+//! from the run seed but separate from the engine's jitter stream. A
+//! quiet spec (`none`) therefore consumes zero draws and leaves
+//! fixed-seed trajectories bit-identical with heterogeneity-free builds,
+//! and the stream is checkpointed by name (`"hetero"`) alongside the
+//! engine stream so elastic checkpoints stay replayable.
+
+use anyhow::{bail, Result};
+
+use crate::util::rng::Rng;
+
+/// Two-state Markov transient degradation: every mini-batch, a nominal
+/// learner degrades with probability `p_degrade` and a degraded learner
+/// recovers with probability `p_recover`; while degraded, compute time is
+/// multiplied by `mult` on top of the learner's persistent factor. This
+/// models transient interference (co-tenant bursts, GC pauses, thermal
+/// throttling) as opposed to the persistent factors' hardware skew.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct MarkovSpec {
+    pub p_degrade: f64,
+    pub p_recover: f64,
+    pub mult: f64,
+}
+
+/// Heterogeneity spec, parsed from the `hetero` config knob: a
+/// comma-separated list of
+///
+/// * `slow:<id>x<factor>` — learner `<id>` runs `<factor>`× slower,
+///   persistently (factors multiply onto any sampled distribution);
+/// * `lognormal:<sigma>` — every learner's persistent factor is
+///   multiplied by exp(σ·N(0,1)) (median 1, right-skewed);
+/// * `pareto:<alpha>` — every learner's persistent factor is multiplied
+///   by a Pareto(α, xₘ = 1) draw (≥ 1, heavy-tailed: the Downpour-style
+///   commodity-cluster skew);
+/// * `markov:<p_degrade>:<p_recover>:<mult>` — the [`MarkovSpec`]
+///   transient process;
+///
+/// or `none` (the default). Repeating a distribution token overrides the
+/// earlier value (last wins, like config layering).
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct HeteroSpec {
+    /// Explicit persistent slowdowns, `(learner id, factor)`.
+    pub slow: Vec<(usize, f64)>,
+    pub lognormal_sigma: Option<f64>,
+    pub pareto_alpha: Option<f64>,
+    pub markov: Option<MarkovSpec>,
+}
+
+impl HeteroSpec {
+    pub fn none() -> HeteroSpec {
+        HeteroSpec::default()
+    }
+
+    /// True when the spec injects no heterogeneity at all.
+    pub fn is_quiet(&self) -> bool {
+        self.slow.is_empty()
+            && self.lognormal_sigma.is_none()
+            && self.pareto_alpha.is_none()
+            && self.markov.is_none()
+    }
+
+    /// Largest learner id referenced by a `slow:` entry, if any — config
+    /// validation checks it against λ.
+    pub fn max_learner_id(&self) -> Option<usize> {
+        self.slow.iter().map(|&(l, _)| l).max()
+    }
+
+    /// Parse the config DSL (see the type docs).
+    pub fn parse(s: &str) -> Result<HeteroSpec> {
+        let mut out = HeteroSpec::none();
+        let s = s.trim();
+        if s.is_empty() || s.eq_ignore_ascii_case("none") {
+            return Ok(out);
+        }
+        for tok in s.split(',') {
+            let tok = tok.trim();
+            if tok.is_empty() {
+                continue;
+            }
+            let (head, rest) = tok
+                .split_once(':')
+                .ok_or_else(|| anyhow::anyhow!("bad hetero token {tok:?} (want kind:…)"))?;
+            match head.to_ascii_lowercase().as_str() {
+                "slow" => {
+                    let (id, factor) = rest.split_once('x').ok_or_else(|| {
+                        anyhow::anyhow!("bad hetero entry {tok:?} (want slow:<id>x<factor>)")
+                    })?;
+                    let learner: usize = id
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad learner id {id:?} in {tok:?}"))?;
+                    let factor: f64 = factor
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad factor {factor:?} in {tok:?}"))?;
+                    if !factor.is_finite() || factor <= 0.0 {
+                        bail!("hetero factor must be a finite positive number in {tok:?}");
+                    }
+                    out.slow.push((learner, factor));
+                }
+                "lognormal" => {
+                    let sigma: f64 = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad lognormal sigma {rest:?}"))?;
+                    if !sigma.is_finite() || sigma < 0.0 {
+                        bail!("lognormal sigma must be >= 0");
+                    }
+                    out.lognormal_sigma = Some(sigma);
+                }
+                "pareto" => {
+                    let alpha: f64 = rest
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad pareto alpha {rest:?}"))?;
+                    if !alpha.is_finite() || alpha <= 0.0 {
+                        bail!("pareto alpha must be > 0");
+                    }
+                    out.pareto_alpha = Some(alpha);
+                }
+                "markov" => {
+                    let parts: Vec<&str> = rest.split(':').collect();
+                    if parts.len() != 3 {
+                        bail!(
+                            "bad hetero entry {tok:?} \
+                             (want markov:<p_degrade>:<p_recover>:<mult>)"
+                        );
+                    }
+                    let p_degrade: f64 = parts[0]
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad markov p_degrade in {tok:?}"))?;
+                    let p_recover: f64 = parts[1]
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad markov p_recover in {tok:?}"))?;
+                    let mult: f64 = parts[2]
+                        .parse()
+                        .map_err(|_| anyhow::anyhow!("bad markov mult in {tok:?}"))?;
+                    if !(0.0..=1.0).contains(&p_degrade) || !(0.0..=1.0).contains(&p_recover) {
+                        bail!("markov probabilities must be in [0, 1] in {tok:?}");
+                    }
+                    if !mult.is_finite() || mult < 1.0 {
+                        bail!("markov mult must be >= 1 in {tok:?}");
+                    }
+                    out.markov = Some(MarkovSpec { p_degrade, p_recover, mult });
+                }
+                other => bail!(
+                    "unknown hetero entry {other:?} (slow|lognormal|pareto|markov|none)"
+                ),
+            }
+        }
+        Ok(out)
+    }
+
+    /// Canonical label (round-trips through [`HeteroSpec::parse`]).
+    pub fn label(&self) -> String {
+        if self.is_quiet() {
+            return "none".to_string();
+        }
+        let mut parts: Vec<String> =
+            self.slow.iter().map(|(l, f)| format!("slow:{l}x{f}")).collect();
+        if let Some(s) = self.lognormal_sigma {
+            parts.push(format!("lognormal:{s}"));
+        }
+        if let Some(a) = self.pareto_alpha {
+            parts.push(format!("pareto:{a}"));
+        }
+        if let Some(m) = self.markov {
+            parts.push(format!("markov:{}:{}:{}", m.p_degrade, m.p_recover, m.mult));
+        }
+        parts.join(",")
+    }
+}
+
+/// Stream-decorrelation constant for the hetero RNG (distinct from the
+/// failure injector's).
+const HETERO_STREAM: u64 = 0x57A6_61E5_0C0D_E5D1;
+
+/// A realized heterogeneity model for one run: per-learner persistent
+/// factors plus the Markov transient state, all driven by a dedicated
+/// seeded RNG stream.
+#[derive(Debug, Clone)]
+pub struct HeteroModel {
+    /// Persistent slowdown factor per learner slot (1.0 = nominal).
+    factors: Vec<f64>,
+    markov: Option<MarkovSpec>,
+    degraded: Vec<bool>,
+    rng: Rng,
+    enabled: bool,
+}
+
+impl HeteroModel {
+    /// Realize `spec` for `lambda` learner slots. Sampling order is fixed
+    /// (lognormal for every slot, then pareto for every slot), so a given
+    /// (spec, λ, seed) always yields the same factors. `slow:` entries
+    /// referencing ids ≥ λ are ignored here — the engine rejects such a
+    /// config up front, before any event runs.
+    pub fn build(spec: &HeteroSpec, lambda: usize, seed: u64) -> HeteroModel {
+        let mut rng = Rng::new(seed ^ HETERO_STREAM);
+        let mut factors = vec![1.0f64; lambda];
+        if let Some(sigma) = spec.lognormal_sigma {
+            for f in factors.iter_mut() {
+                *f *= (sigma * rng.normal()).exp();
+            }
+        }
+        if let Some(alpha) = spec.pareto_alpha {
+            for f in factors.iter_mut() {
+                // Inverse-CDF Pareto(α, xₘ = 1): (1 − u)^(−1/α) ≥ 1.
+                let u = rng.f64();
+                *f *= (1.0 - u).max(f64::MIN_POSITIVE).powf(-1.0 / alpha);
+            }
+        }
+        for &(l, factor) in &spec.slow {
+            if l < lambda {
+                factors[l] *= factor;
+            }
+        }
+        HeteroModel {
+            factors,
+            markov: spec.markov,
+            degraded: vec![false; lambda],
+            rng,
+            enabled: !spec.is_quiet(),
+        }
+    }
+
+    /// Whether the model injects any heterogeneity. Disabled models never
+    /// touch their RNG after construction.
+    pub fn enabled(&self) -> bool {
+        self.enabled
+    }
+
+    /// The persistent per-learner factors (1.0 everywhere when quiet).
+    pub fn persistent(&self) -> &[f64] {
+        &self.factors
+    }
+
+    /// The RNG stream, for checkpointing by name.
+    pub fn rng(&self) -> &Rng {
+        &self.rng
+    }
+
+    /// Current slowdown factor for learner `l`'s next mini-batch,
+    /// advancing the learner's Markov transient state by one step.
+    pub fn draw(&mut self, l: usize) -> f64 {
+        if !self.enabled {
+            return 1.0;
+        }
+        let mut f = self.factors[l];
+        if let Some(m) = self.markov {
+            let p = if self.degraded[l] { m.p_recover } else { m.p_degrade };
+            if self.rng.f64() < p {
+                self.degraded[l] = !self.degraded[l];
+            }
+            if self.degraded[l] {
+                f *= m.mult;
+            }
+        }
+        f
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        let s =
+            HeteroSpec::parse("slow:0x10, slow:3x1.5, lognormal:0.3, pareto:2.5, markov:0.05:0.3:4")
+                .unwrap();
+        assert_eq!(s.slow, vec![(0, 10.0), (3, 1.5)]);
+        assert_eq!(s.lognormal_sigma, Some(0.3));
+        assert_eq!(s.pareto_alpha, Some(2.5));
+        assert_eq!(
+            s.markov,
+            Some(MarkovSpec { p_degrade: 0.05, p_recover: 0.3, mult: 4.0 })
+        );
+        assert_eq!(s.max_learner_id(), Some(3));
+        assert!(!s.is_quiet());
+        assert_eq!(HeteroSpec::parse(&s.label()).unwrap(), s);
+        assert!(HeteroSpec::parse("none").unwrap().is_quiet());
+        assert_eq!(HeteroSpec::parse("none").unwrap().label(), "none");
+    }
+
+    #[test]
+    fn parse_rejects_malformed_entries() {
+        assert!(HeteroSpec::parse("slow:2").is_err(), "missing factor");
+        assert!(HeteroSpec::parse("slow:2x0").is_err(), "zero factor");
+        assert!(HeteroSpec::parse("slow:2x-3").is_err(), "negative factor");
+        assert!(HeteroSpec::parse("lognormal:-0.1").is_err());
+        assert!(HeteroSpec::parse("pareto:0").is_err());
+        assert!(HeteroSpec::parse("markov:0.1:0.2").is_err(), "missing mult");
+        assert!(HeteroSpec::parse("markov:1.5:0.2:4").is_err(), "p > 1");
+        assert!(HeteroSpec::parse("markov:0.1:0.2:0.5").is_err(), "mult < 1");
+        assert!(HeteroSpec::parse("turbo:1x2").is_err(), "unknown kind");
+    }
+
+    #[test]
+    fn quiet_model_is_inert() {
+        let mut m = HeteroModel::build(&HeteroSpec::none(), 4, 42);
+        assert!(!m.enabled());
+        let before = m.rng().state();
+        for l in 0..4 {
+            assert_eq!(m.draw(l), 1.0);
+        }
+        assert_eq!(m.rng().state(), before, "quiet model must not consume draws");
+        assert_eq!(m.persistent(), &[1.0; 4]);
+    }
+
+    #[test]
+    fn explicit_slow_factors_apply() {
+        let spec = HeteroSpec::parse("slow:1x10,slow:3x2.5").unwrap();
+        let mut m = HeteroModel::build(&spec, 4, 7);
+        assert_eq!(m.draw(0), 1.0);
+        assert_eq!(m.draw(1), 10.0);
+        assert_eq!(m.draw(3), 2.5);
+        // persistent factors are stable across draws
+        assert_eq!(m.draw(1), 10.0);
+    }
+
+    #[test]
+    fn sampled_factors_are_deterministic_and_distributed() {
+        let spec = HeteroSpec::parse("lognormal:0.5").unwrap();
+        let a = HeteroModel::build(&spec, 64, 11);
+        let b = HeteroModel::build(&spec, 64, 11);
+        assert_eq!(a.persistent(), b.persistent(), "same seed ⇒ same factors");
+        let c = HeteroModel::build(&spec, 64, 12);
+        assert_ne!(a.persistent(), c.persistent(), "seed matters");
+        // median ≈ 1: roughly half the factors on each side
+        let above = a.persistent().iter().filter(|&&f| f > 1.0).count();
+        assert!((16..=48).contains(&above), "lognormal factors skewed: {above}/64 above 1");
+        // pareto draws are always ≥ 1
+        let p = HeteroModel::build(&HeteroSpec::parse("pareto:2").unwrap(), 64, 11);
+        assert!(p.persistent().iter().all(|&f| f >= 1.0));
+    }
+
+    #[test]
+    fn markov_transient_toggles_and_multiplies() {
+        let spec = HeteroSpec::parse("markov:0.5:0.5:8").unwrap();
+        let mut m = HeteroModel::build(&spec, 1, 3);
+        let draws: Vec<f64> = (0..200).map(|_| m.draw(0)).collect();
+        assert!(draws.iter().any(|&f| f == 1.0), "spends time nominal");
+        assert!(draws.iter().any(|&f| f == 8.0), "spends time degraded");
+        assert!(draws.iter().all(|&f| f == 1.0 || f == 8.0));
+        // deterministic replay
+        let mut m2 = HeteroModel::build(&spec, 1, 3);
+        let replay: Vec<f64> = (0..200).map(|_| m2.draw(0)).collect();
+        assert_eq!(draws, replay);
+    }
+
+    #[test]
+    fn out_of_range_slow_ids_are_ignored_by_build() {
+        // the engine rejects the config before running; build itself must
+        // not panic on a λ smaller than the spec references
+        let spec = HeteroSpec::parse("slow:9x5").unwrap();
+        let m = HeteroModel::build(&spec, 2, 1);
+        assert_eq!(m.persistent(), &[1.0, 1.0]);
+    }
+}

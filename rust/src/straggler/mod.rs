@@ -1,0 +1,43 @@
+//! Straggler subsystem: heterogeneous learner speeds, the backup-sync
+//! protocol, and adaptive staleness control.
+//!
+//! The paper's accuracy/runtime study assumes homogeneous learners — the
+//! P775 testbed's only speed variation is the uniform per-minibatch
+//! compute jitter — yet its softsync protocol exists precisely because
+//! real clusters have stragglers. This subsystem opens that scenario
+//! axis:
+//!
+//! * [`hetero`] — a per-learner heterogeneity model built from a spec DSL
+//!   (the `hetero` config knob): explicit `slow:<id>x<factor>` entries,
+//!   sampled `lognormal:<sigma>` / `pareto:<alpha>` persistent speed
+//!   distributions, and a `markov:<p_degrade>:<p_recover>:<mult>`
+//!   two-state transient-degradation process. Factors scale the netsim
+//!   compute-time draws; all randomness comes from the model's own named
+//!   RNG stream, so `hetero none` (the default) leaves fixed-seed
+//!   trajectories — and PR 2 checkpoints — bit-identical.
+//! * `Protocol::BackupSync { b }` (`backup:<b>`,
+//!   [`crate::coordinator::protocol`]) — Chen et al.'s *Revisiting
+//!   Distributed Synchronous SGD*: a hardsync barrier over the first
+//!   λ_active − b arrivals per round; the b slowest gradients are dropped
+//!   on arrival and the dropped learners are refreshed with current
+//!   weights. Integrated with the sharded server's accumulators, the
+//!   elastic rescaler (the checked quota rejects λ_active ≤ b on every
+//!   membership change), and the single-clock staleness analysis
+//!   (aggregated gradients are always fresh, so σ ≡ 0 like hardsync).
+//! * [`adaptive`] — a feedback controller (the `adaptive` config knob)
+//!   that retunes the n-softsync splitting parameter per epoch from the
+//!   observed staleness distribution and epoch time, holding a target
+//!   ⟨σ⟩ as heterogeneity and membership shift the operating point —
+//!   the Dutta et al. error–runtime tradeoff swept live.
+//!
+//! `benches/perf_stragglers.rs` sweeps slowdown factor × protocol
+//! (hardsync vs backup:b vs n-softsync vs async) and checks that
+//! backup-sync recovers most of the ideal hardsync epoch time under a
+//! 10× single-straggler scenario while plain hardsync degrades toward
+//! the straggler's speed.
+
+pub mod adaptive;
+pub mod hetero;
+
+pub use adaptive::{AdaptiveController, AdaptiveRecord, AdaptiveSpec};
+pub use hetero::{HeteroModel, HeteroSpec, MarkovSpec};

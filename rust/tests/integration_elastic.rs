@@ -17,6 +17,8 @@ use rudra::netsim::cost::{LearnerCompute, ModelCost};
 use rudra::params::lr::{LrPolicy, Modulation, Schedule};
 use rudra::params::optimizer::{Optimizer, OptimizerKind};
 use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::straggler::hetero::HeteroSpec;
 
 const DIM: usize = 4;
 
@@ -55,6 +57,8 @@ fn elastic_cfg(
         churn: ChurnSchedule::parse(churn).unwrap(),
         rescale,
         checkpoint_every_updates: 0,
+        hetero: HeteroSpec::none(),
+        adaptive: AdaptiveSpec::none(),
     }
 }
 
@@ -102,6 +106,43 @@ fn softsync_staleness_bounded_under_kills() {
     assert_eq!(r.staleness.frac_exceeding(bound), 0.0);
     // the epoch log carries the active-λ column: it must end at 8
     assert_eq!(r.epochs.last().unwrap().active_lambda, 8);
+}
+
+/// §5.1 under heterogeneous speeds: with mild persistent skew (a 1.4×
+/// and a 1.2× straggler on a zero-jitter cluster) *and* mid-run kills,
+/// n-softsync staleness still respects the σ ≤ 2n bound against the
+/// shrunk active set — the quota recomputation keeps the bound as λ_active
+/// falls, and mild heterogeneity stretches ⟨σ⟩ without breaching 2n.
+/// (Heavy skew is a different regime: a 10× straggler's gradients go far
+/// beyond 2n, which is exactly what `backup:<b>` exists to cut off.)
+#[test]
+fn softsync_sigma_bound_survives_mild_heterogeneity_and_kills() {
+    let n = 3;
+    let mut cfg = elastic_cfg(
+        Protocol::NSoftsync { n },
+        4,
+        12,
+        8,
+        "kill:5@0.004,kill:8@0.005",
+        RescalePolicy::None,
+    );
+    cfg.hetero = HeteroSpec::parse("slow:0x1.4,slow:3x1.2").unwrap();
+    let r = run(&cfg).unwrap();
+    assert_eq!(r.final_active_lambda, 10, "2 of 12 learners died");
+    assert_eq!(r.epochs.len(), 8, "completed under hetero + kills");
+    assert_eq!(r.hetero_factors[0], 1.4);
+    assert_eq!(r.hetero_factors[3], 1.2);
+    let bound = 2 * n as u64;
+    assert!(
+        r.staleness.max <= bound,
+        "σ_max = {} exceeds 2n = {bound} under mild heterogeneity",
+        r.staleness.max
+    );
+    assert_eq!(r.staleness.frac_exceeding(bound), 0.0);
+    // the slow learners actually ran slower: lower utilization-normalized
+    // throughput shows up as fewer dropped... here simply as determinism
+    let again = run(&cfg).unwrap();
+    assert_eq!(r.sim_seconds, again.sim_seconds, "hetero elastic runs replay exactly");
 }
 
 /// Acceptance (b): hardsync completes — no deadlock — when a learner dies

@@ -6,6 +6,8 @@
 use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
 use rudra::coordinator::learner::MockProvider;
 use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::server::ServerConfig;
+use rudra::coordinator::shard::ShardedServer;
 use rudra::coordinator::tree::Arch;
 use rudra::netsim::cost::ModelCost;
 use rudra::params::lr::{LrPolicy, Modulation, Schedule};
@@ -133,6 +135,104 @@ fn timing_only_sharded_runs_all_archs() {
         assert!(r.updates > 0, "{arch:?}");
         assert!(r.theta.is_none());
         assert_eq!(r.shard_updates, vec![r.updates; 4], "{arch:?}");
+    }
+}
+
+/// Property: `backup:0` is hardsync — for any shard count S, any λ, and
+/// any hardsync-legal push sequence, a BackupSync{b: 0} server produces
+/// the same outcomes and weights (within 1e-6) as a Hardsync server fed
+/// identically. (With b = 0 a round closes only once *every* learner has
+/// pushed, so no gradient can ever arrive stale and the drop rule is
+/// unreachable.)
+#[test]
+fn prop_backup_zero_equals_hardsync_any_shards() {
+    rudra::util::prop::check(
+        "backup0_is_hardsync",
+        2024,
+        60,
+        |rng| {
+            let lambda = 2 + rng.usize_below(5); // 2..=6
+            let shards = 1 + rng.usize_below(6); // 1..=6
+            let dim = 1 + rng.usize_below(12); // 1..=12
+            let rounds = 1 + rng.usize_below(6);
+            // per-round, per-learner, per-dim gradient values
+            let grads: Vec<f32> = (0..rounds * lambda * dim)
+                .map(|_| (rng.f64() * 2.0 - 1.0) as f32)
+                .collect();
+            (lambda, shards, dim, rounds, grads)
+        },
+        |&(lambda, shards, dim, rounds, ref grads)| {
+            let mk = |protocol| {
+                ShardedServer::new(
+                    ServerConfig {
+                        protocol,
+                        mu: 4,
+                        lambda,
+                        samples_per_epoch: 1_000_000,
+                        target_epochs: 100,
+                        shards,
+                    },
+                    FlatVec::from_vec((0..dim).map(|i| i as f32 * 0.1 - 0.3).collect()),
+                    Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, dim),
+                    LrPolicy::new(Schedule::constant(0.5), Modulation::None, 128),
+                )
+            };
+            let mut hard = mk(Protocol::Hardsync);
+            let mut backup = mk(Protocol::BackupSync { b: 0 });
+            for round in 0..rounds {
+                for l in 0..lambda {
+                    let ts = hard.timestamp();
+                    let g = FlatVec::from_vec(
+                        grads[(round * lambda + l) * dim..(round * lambda + l + 1) * dim]
+                            .to_vec(),
+                    );
+                    let a = hard.push_gradient(l, &g, ts).map_err(|e| e.to_string())?;
+                    let b = backup.push_gradient(l, &g, ts).map_err(|e| e.to_string())?;
+                    if a.updated != b.updated
+                        || a.avg_staleness != b.avg_staleness
+                        || b.dropped
+                    {
+                        return Err(format!(
+                            "outcome diverged at round {round}, learner {l}: \
+                             {a:?} vs {b:?}"
+                        ));
+                    }
+                }
+            }
+            let wa = hard.assemble_weights();
+            let wb = backup.assemble_weights();
+            for d in 0..dim {
+                if (wa.data[d] - wb.data[d]).abs() > 1e-6 {
+                    return Err(format!(
+                        "θ[{d}] diverged: {} vs {}",
+                        wa.data[d], wb.data[d]
+                    ));
+                }
+            }
+            if backup.dropped != 0 {
+                return Err("backup:0 dropped a gradient".to_string());
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Backup-sync composes with the sharded engine end to end: rounds close
+/// on λ − b folds, shard clocks stay in lockstep, drops are booked, and
+/// σ ≡ 0 at any S.
+#[test]
+fn backup_sync_survives_sharding() {
+    for shards in [1usize, 2, 4] {
+        let r = run_sharded(Protocol::BackupSync { b: 2 }, Arch::Base, 8, shards, 3, true, 13);
+        assert_eq!(r.staleness.max, 0, "S={shards}");
+        assert!(r.updates > 0, "S={shards}");
+        assert_eq!(r.shard_updates, vec![r.updates; shards], "S={shards}: lockstep");
+        assert_eq!(
+            r.dropped_by_learner.iter().sum::<u64>(),
+            r.dropped_gradients,
+            "S={shards}"
+        );
+        assert!(r.theta.unwrap().is_finite(), "S={shards}");
     }
 }
 

@@ -1,0 +1,273 @@
+//! Straggler-subsystem integration: heterogeneous learner speeds, the
+//! backup-sync protocol, and the adaptive-n controller, end to end
+//! through the virtual-time engine on a zero-jitter cluster (every
+//! trajectory exactly reproducible).
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::membership::ChurnSchedule;
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::{LearnerCompute, ModelCost};
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::straggler::hetero::HeteroSpec;
+
+const DIM: usize = 4;
+
+fn tiny_model(samples_per_epoch: u64) -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch }
+}
+
+fn quiet_cluster() -> ClusterSpec {
+    ClusterSpec { compute_jitter: 0.0, straggler_prob: 0.0, ..ClusterSpec::p775() }
+}
+
+fn straggler_cfg(
+    protocol: Protocol,
+    mu: usize,
+    lambda: usize,
+    epochs: usize,
+    samples_per_epoch: u64,
+    hetero: &str,
+) -> SimConfig {
+    SimConfig {
+        protocol,
+        arch: Arch::Base,
+        mu,
+        lambda,
+        epochs,
+        seed: 11,
+        cluster: quiet_cluster(),
+        compute: LearnerCompute::p775(),
+        model: tiny_model(samples_per_epoch),
+        shards: 1,
+        eval_each_epoch: false,
+        max_updates: None,
+        churn: ChurnSchedule::none(),
+        rescale: RescalePolicy::None,
+        checkpoint_every_updates: 0,
+        hetero: HeteroSpec::parse(hetero).unwrap(),
+        adaptive: AdaptiveSpec::none(),
+    }
+}
+
+fn run_numeric(cfg: &SimConfig) -> SimResult {
+    let mut provider = MockProvider::new(vec![0.0; DIM]);
+    run_sim(
+        cfg,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, DIM),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        Some(&mut provider),
+        None,
+    )
+    .unwrap()
+}
+
+fn run_timing(cfg: &SimConfig) -> SimResult {
+    run_sim(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+/// CI straggler smoke (fast): 2-epoch sim with a sampled lognormal
+/// heterogeneity plus one hard 4× straggler under `backup:1` — the whole
+/// subsystem end to end in milliseconds of virtual time.
+#[test]
+fn straggler_smoke() {
+    let cfg = straggler_cfg(
+        Protocol::BackupSync { b: 1 },
+        4,
+        6,
+        2,
+        240,
+        "lognormal:0.2,slow:0x4",
+    );
+    let r = run_numeric(&cfg);
+    assert_eq!(r.epochs.len(), 2, "completed");
+    assert_eq!(r.staleness.max, 0, "backup-sync folds only fresh gradients");
+    assert!(r.dropped_gradients > 0, "the 4× straggler must lose rounds");
+    assert_eq!(r.dropped_by_learner.iter().sum::<u64>(), r.dropped_gradients);
+    assert!(
+        r.dropped_by_learner[0] > 0,
+        "drops should land on the slow learner: {:?}",
+        r.dropped_by_learner
+    );
+    assert!(
+        r.hetero_factors[0] > 2.0,
+        "the explicit 4× multiplies the sampled lognormal draw: {:?}",
+        r.hetero_factors
+    );
+    assert!(r.theta.unwrap().is_finite());
+}
+
+/// The acceptance scenario: a single 10× straggler at λ = 8. Hardsync's
+/// barrier degrades toward the straggler's speed; backup:1 closes rounds
+/// without it and recovers ≥ 80% of the *ideal* (no-straggler) hardsync
+/// epoch time (the ~12% tax is the smaller per-round quota: λ − 1 of λ
+/// gradients count toward epoch samples).
+#[test]
+fn backup_sync_recovers_straggler_epoch_time() {
+    let samples = 1600; // 50 ideal hardsync rounds per epoch at μ=4, λ=8
+    let ideal = run_timing(&straggler_cfg(Protocol::Hardsync, 4, 8, 2, samples, "none"));
+    let hard10 =
+        run_timing(&straggler_cfg(Protocol::Hardsync, 4, 8, 2, samples, "slow:0x10"));
+    let backup10 = run_timing(&straggler_cfg(
+        Protocol::BackupSync { b: 1 },
+        4,
+        8,
+        2,
+        samples,
+        "slow:0x10",
+    ));
+    assert!(
+        hard10.sim_seconds > 4.0 * ideal.sim_seconds,
+        "hardsync must degrade toward the 10× straggler: {} vs ideal {}",
+        hard10.sim_seconds,
+        ideal.sim_seconds
+    );
+    let recovery = ideal.sim_seconds / backup10.sim_seconds;
+    assert!(
+        recovery >= 0.8,
+        "backup:1 should recover ≥ 80% of the ideal epoch time, got {:.1}% \
+         ({} vs {})",
+        recovery * 100.0,
+        backup10.sim_seconds,
+        ideal.sim_seconds
+    );
+    assert!(backup10.dropped_gradients > 0);
+    // the straggler's wasted work is attributed to it
+    let max_dropper = backup10
+        .dropped_by_learner
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, c)| c)
+        .unwrap()
+        .0;
+    assert_eq!(max_dropper, 0, "{:?}", backup10.dropped_by_learner);
+}
+
+/// `hetero none` preserves bit-identical fixed-seed trajectories: a spec
+/// that names a factor of exactly 1.0 takes the heterogeneity code path
+/// yet must reproduce the quiet run bit for bit (the model's RNG stream
+/// is separate from the engine's, and ×1.0 is exact in IEEE 754).
+#[test]
+fn hetero_none_is_bit_identical_to_unit_factor() {
+    let quiet = straggler_cfg(Protocol::NSoftsync { n: 2 }, 4, 6, 3, 240, "none");
+    let unit = straggler_cfg(Protocol::NSoftsync { n: 2 }, 4, 6, 3, 240, "slow:0x1");
+    let a = run_numeric(&quiet);
+    let b = run_numeric(&unit);
+    assert_eq!(a.sim_seconds, b.sim_seconds);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.updates, b.updates);
+    assert_eq!(a.theta.unwrap().data, b.theta.unwrap().data);
+    // and quiet runs replay themselves exactly
+    let c = run_numeric(&quiet);
+    assert_eq!(a.sim_seconds, c.sim_seconds);
+}
+
+/// Sampled + transient heterogeneity replays bit-identically for a fixed
+/// seed: the hetero model draws from its own seeded stream.
+#[test]
+fn hetero_runs_replay_deterministically() {
+    let cfg = straggler_cfg(
+        Protocol::NSoftsync { n: 1 },
+        4,
+        6,
+        3,
+        240,
+        "lognormal:0.5,markov:0.1:0.4:4",
+    );
+    let a = run_numeric(&cfg);
+    let b = run_numeric(&cfg);
+    assert_eq!(a.sim_seconds, b.sim_seconds);
+    assert_eq!(a.events_processed, b.events_processed);
+    assert_eq!(a.theta.unwrap().data, b.theta.unwrap().data);
+    assert_eq!(a.hetero_factors, b.hetero_factors);
+    assert!(
+        a.hetero_factors.iter().any(|&f| (f - 1.0).abs() > 1e-9),
+        "lognormal sampling actually produced skew: {:?}",
+        a.hetero_factors
+    );
+}
+
+/// The adaptive-n controller walks the splitting parameter toward the
+/// target ⟨σ⟩: starting at λ-softsync (n = 8, ⟨σ⟩ ≈ 8) with a target of
+/// 2, n must be halved epoch over epoch until the observed staleness
+/// lands inside the deadband.
+#[test]
+fn adaptive_controller_converges_to_target_sigma() {
+    let mut cfg = straggler_cfg(Protocol::NSoftsync { n: 8 }, 4, 8, 8, 256, "none");
+    cfg.adaptive = AdaptiveSpec::parse("sigma:2").unwrap();
+    let r = run_numeric(&cfg);
+    assert_eq!(r.epochs.len(), 8, "completed");
+    assert!(!r.adaptive.is_empty(), "one decision per epoch");
+    let first = r.adaptive.first().unwrap();
+    let last = r.adaptive.last().unwrap();
+    assert_eq!(first.old_n, 8);
+    assert!(
+        last.new_n <= 4,
+        "n should have walked down toward the target: {:?}",
+        r.adaptive.iter().map(|a| a.new_n).collect::<Vec<_>>()
+    );
+    assert!(last.new_n >= 1);
+    assert!(
+        last.observed_sigma < first.observed_sigma,
+        "⟨σ⟩ must fall as n falls: {} → {}",
+        first.observed_sigma,
+        last.observed_sigma
+    );
+    // the decisions carry the epoch timing signal for the log
+    assert!(r.adaptive.iter().all(|a| a.epoch_secs > 0.0));
+}
+
+/// A kill while the controller sits at the n = λ_active ceiling must
+/// retune n down with the quorum, not abort the run: a *static*
+/// λ-softsync run dies when λ_active falls below n (the checked quota),
+/// but the feedback-controlled run follows the membership down.
+#[test]
+fn adaptive_n_follows_quorum_down_on_kill() {
+    let mut cfg = straggler_cfg(Protocol::NSoftsync { n: 4 }, 4, 4, 4, 256, "none");
+    cfg.adaptive = AdaptiveSpec::parse("sigma:10").unwrap();
+    cfg.churn = ChurnSchedule::parse("kill:3@0.005").unwrap();
+    let r = run_numeric(&cfg);
+    assert_eq!(r.epochs.len(), 4, "run survives the kill at the n ceiling");
+    assert_eq!(r.final_active_lambda, 3);
+    assert!(!r.adaptive.is_empty());
+    // the kill (≈5 ms) lands before the first epoch boundary (≈19 ms of
+    // virtual time), so the controller's first decision already starts
+    // from the clamped n
+    assert!(r.adaptive[0].old_n <= 3, "{:?}", r.adaptive);
+    assert!(r.adaptive.iter().all(|a| a.new_n <= 3), "{:?}", r.adaptive);
+    assert!(r.theta.unwrap().is_finite());
+}
+
+/// Per-learner utilization exposes the barrier cost of a straggler: under
+/// hardsync with one 10× learner, the fast learners idle (low compute
+/// fraction) while the straggler stays near-fully busy.
+#[test]
+fn utilization_shows_barrier_idling() {
+    let r = run_timing(&straggler_cfg(Protocol::Hardsync, 4, 8, 2, 1600, "slow:0x10"));
+    assert_eq!(r.learner_utilization.len(), 8);
+    let slow = r.learner_utilization[0];
+    let fastest = r.learner_utilization[1..]
+        .iter()
+        .cloned()
+        .fold(f64::NEG_INFINITY, f64::max);
+    assert!(
+        slow > 5.0 * fastest,
+        "the straggler computes while the rest wait: slow {slow} vs fast {fastest}"
+    );
+    assert!(slow > 0.5, "straggler should be busy most of the run: {slow}");
+}

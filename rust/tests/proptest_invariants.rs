@@ -136,9 +136,10 @@ fn prop_server_state_machine() {
         120,
         |r| {
             let lambda = r.below(8) as usize + 1;
-            let proto = match r.below(3) {
+            let proto = match r.below(4) {
                 0 => Protocol::Hardsync,
                 1 => Protocol::NSoftsync { n: r.below(lambda as u64) as usize + 1 },
+                2 => Protocol::BackupSync { b: r.below(lambda as u64) as usize },
                 _ => Protocol::Async,
             };
             let pushes = r.below(60) as usize + lambda;
@@ -160,27 +161,38 @@ fn prop_server_state_machine() {
                 Optimizer::new(OptimizerKind::Sgd, 0.0, dim),
                 LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
             );
+            let backup = matches!(proto, Protocol::BackupSync { .. });
             let mut rng = Rng::new(seed);
             let mut ts_seen = 0u64;
             let mut folded = 0u64;
             // hardsync requires round-robin (one push per learner per
             // round); others are arbitrary
             let mut order: Vec<usize> = (0..lambda).collect();
+            // backup-sync learners all compute from the round-start
+            // weights (the broadcast), so the post-update pushes of a
+            // round are genuinely stale and get dropped
+            let mut round_ts = 0u64;
             for p in 0..pushes {
                 let learner = if proto.is_barrier() {
                     if p % lambda == 0 {
                         rng.shuffle(&mut order);
+                        round_ts = server.timestamp();
                     }
                     order[p % lambda]
                 } else {
                     rng.usize_below(lambda)
                 };
                 let g = FlatVec::from_vec(vec![0.1, -0.1, 0.05]);
-                let grad_ts = server.timestamp(); // fresh pull
+                let grad_ts = if backup { round_ts } else { server.timestamp() };
                 let out = server
                     .push_gradient(learner, &g, grad_ts)
                     .map_err(|e| e.to_string())?;
-                folded += 1;
+                if !out.dropped {
+                    folded += 1;
+                }
+                if out.dropped && !backup {
+                    return Err("only backup-sync may drop gradients".into());
+                }
                 if out.updated {
                     if server.timestamp() != ts_seen + 1 {
                         return Err("timestamp must advance by exactly 1".into());
@@ -203,14 +215,25 @@ fn prop_server_state_machine() {
                     expected_samples
                 ));
             }
-            let _ = folded;
+            // drop accounting is exact: every push either folded or was
+            // booked as dropped, and only stale backup pushes drop
+            if folded + server.dropped != pushes as u64 {
+                return Err(format!(
+                    "drop accounting lost pushes: {folded} folded + {} dropped != {pushes}",
+                    server.dropped
+                ));
+            }
+            if server.dropped_by().iter().sum::<u64>() != server.dropped {
+                return Err("per-learner drop attribution does not add up".into());
+            }
             Ok(())
         },
     );
 }
 
-/// Sharded server ≡ flat server: for any shard count S, any of the three
-/// protocols, any optimizer, and any valid push sequence, the
+/// Sharded server ≡ flat server: for any shard count S, any of the four
+/// protocols (including backup-sync's drop rule), any optimizer, and any
+/// valid push sequence, the
 /// [`ShardedServer`] produces the same update/epoch outcomes, the same
 /// timestamps, and weights equal within 1e-6 of the unsharded
 /// [`ParameterServer`] — and its per-shard update counters stay in
@@ -223,9 +246,10 @@ fn prop_sharded_server_matches_unsharded() {
         80,
         |r| {
             let lambda = r.below(6) as usize + 1;
-            let proto = match r.below(3) {
+            let proto = match r.below(4) {
                 0 => Protocol::Hardsync,
                 1 => Protocol::NSoftsync { n: r.below(lambda as u64 + 2) as usize + 1 },
+                2 => Protocol::BackupSync { b: r.below(lambda as u64) as usize },
                 _ => Protocol::Async,
             };
             let shards = r.below(8) as usize + 1;
@@ -268,12 +292,15 @@ fn prop_sharded_server_matches_unsharded() {
                 Optimizer::new(kind, 1e-4, dim),
                 lr,
             );
+            let backup = matches!(proto, Protocol::BackupSync { .. });
             let mut rng = Rng::new(seed);
             let mut order: Vec<usize> = (0..lambda).collect();
+            let mut round_ts = 0u64;
             for p in 0..pushes {
                 let learner = if proto.is_barrier() {
                     if p % lambda == 0 {
                         rng.shuffle(&mut order);
+                        round_ts = flat.timestamp();
                     }
                     order[p % lambda]
                 } else {
@@ -282,16 +309,37 @@ fn prop_sharded_server_matches_unsharded() {
                 let g = FlatVec::from_vec(
                     (0..dim).map(|_| (rng.f64() * 0.4 - 0.2) as f32).collect(),
                 );
-                // fresh or slightly stale pull (never ahead of the clock)
-                let ts = flat.timestamp().saturating_sub(rng.below(3));
+                // fresh or slightly stale pull (never ahead of the clock);
+                // backup-sync learners all compute from the round-start
+                // broadcast, so post-update pushes of a round are stale
+                // and must drop identically on both servers
+                let ts = if backup {
+                    round_ts
+                } else {
+                    flat.timestamp().saturating_sub(rng.below(3))
+                };
                 let a = flat.push_gradient(learner, &g, ts).map_err(|e| e.to_string())?;
                 let b = sharded.push_gradient(learner, &g, ts).map_err(|e| e.to_string())?;
-                if a.updated != b.updated || a.epoch_completed != b.epoch_completed {
+                if a.updated != b.updated
+                    || a.epoch_completed != b.epoch_completed
+                    || a.dropped != b.dropped
+                {
                     return Err(format!("outcome diverged at push {p}"));
                 }
                 if flat.timestamp() != sharded.timestamp() {
                     return Err("timestamps diverged".into());
                 }
+            }
+            if flat.dropped != sharded.dropped
+                || flat.dropped_by() != sharded.dropped_by()
+            {
+                return Err(format!(
+                    "drop counters diverged: flat {} {:?} vs sharded {} {:?}",
+                    flat.dropped,
+                    flat.dropped_by(),
+                    sharded.dropped,
+                    sharded.dropped_by()
+                ));
             }
             let want = flat.weights().0;
             let got = sharded.assemble_weights();
@@ -316,8 +364,9 @@ fn prop_sharded_server_matches_unsharded() {
 }
 
 /// Checkpoint → restore → resume reproduces the *bit-identical*
-/// fixed-seed trajectory of an uninterrupted run, for all three protocols
-/// and S ∈ {1, 4} shards, with the checkpoint taken at an arbitrary point
+/// fixed-seed trajectory of an uninterrupted run, for all four protocols
+/// (backup-sync's drop counters included) and S ∈ {1, 4} shards, with the
+/// checkpoint taken at an arbitrary point
 /// — including mid-accumulation and mid-hardsync-round (the pending sums
 /// and vector clock ride along in the checkpoint).
 #[test]
@@ -328,9 +377,10 @@ fn prop_checkpoint_restore_resumes_bit_identical() {
         72,
         |r| {
             let lambda = r.below(5) as usize + 2;
-            let proto = match r.below(3) {
+            let proto = match r.below(4) {
                 0 => Protocol::Hardsync,
                 1 => Protocol::NSoftsync { n: r.below(lambda as u64) as usize + 1 },
+                2 => Protocol::BackupSync { b: r.below(lambda as u64) as usize },
                 _ => Protocol::Async,
             };
             let shards = if r.below(2) == 0 { 1 } else { 4 };
@@ -381,22 +431,34 @@ fn prop_checkpoint_restore_resumes_bit_identical() {
                     (learner, g)
                 })
                 .collect();
-            let push = |s: &mut ShardedServer, (learner, g): &(usize, Vec<f32>)| {
-                let ts = s.timestamp();
+            let push = |s: &mut ShardedServer, (learner, g): &(usize, Vec<f32>), ts: u64| {
                 s.push_gradient(*learner, &FlatVec::from_vec(g.clone()), ts)
                     .map(|_| ())
                     .map_err(|e| e.to_string())
             };
-            // Run A: uninterrupted.
+            // Run A: uninterrupted. Gradient timestamps are recorded so
+            // run B replays the exact same inputs across the restore
+            // boundary: fresh pulls for the non-barrier protocols, the
+            // round-start broadcast for backup-sync (whose post-update
+            // pushes of a round are stale and get dropped — exercising the
+            // drop counters through the checkpoint format).
+            let backup = matches!(proto, Protocol::BackupSync { .. });
             let mut a = mk();
-            for item in &seq {
-                push(&mut a, item)?;
+            let mut ts_used = Vec::with_capacity(pushes);
+            let mut round_ts = 0u64;
+            for (p, item) in seq.iter().enumerate() {
+                if p % lambda == 0 {
+                    round_ts = a.timestamp();
+                }
+                let ts = if backup { round_ts } else { a.timestamp() };
+                ts_used.push(ts);
+                push(&mut a, item, ts)?;
             }
             // Run B: interrupted at `split`, checkpointed through the
             // JSON text form, restored, resumed.
             let mut b = mk();
-            for item in &seq[..split] {
-                push(&mut b, item)?;
+            for (item, &ts) in seq[..split].iter().zip(&ts_used) {
+                push(&mut b, item, ts)?;
             }
             let text = Checkpoint::capture("prop", &b, &[]).to_json_string();
             let mut b = Checkpoint::from_json_str(&text)
@@ -404,8 +466,8 @@ fn prop_checkpoint_restore_resumes_bit_identical() {
                 .restore()
                 .map_err(|e| format!("restore failed (S = {shards}): {e:#}"))?
                 .server;
-            for item in &seq[split..] {
-                push(&mut b, item)?;
+            for (item, &ts) in seq[split..].iter().zip(&ts_used[split..]) {
+                push(&mut b, item, ts)?;
             }
             if a.assemble_weights().data != b.assemble_weights().data {
                 return Err(format!(
@@ -424,6 +486,16 @@ fn prop_checkpoint_restore_resumes_bit_identical() {
                 || a.staleness.max != b.staleness.max
             {
                 return Err("staleness history diverged after restore".into());
+            }
+            if a.dropped != b.dropped || a.dropped_by() != b.dropped_by() {
+                return Err(format!(
+                    "backup-sync drop counters diverged after restore: \
+                     {} {:?} vs {} {:?}",
+                    a.dropped,
+                    a.dropped_by(),
+                    b.dropped,
+                    b.dropped_by()
+                ));
             }
             Ok(())
         },
