@@ -61,6 +61,7 @@ fn main() {
             checkpoint_every_updates: cfg.checkpoint_every,
             hetero: cfg.hetero.clone(),
             adaptive: cfg.adaptive.clone(),
+            compress: cfg.compress,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

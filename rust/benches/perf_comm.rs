@@ -1,0 +1,119 @@
+//! Communication sweep: codec × root shards × architecture/protocol on
+//! the Table 1 adversarial workload (300 MB model, λ = 32, Rudra-base
+//! flat push vs shard-striped Adv\*). Reports simulated time plus root
+//! bytes-on-wire per weight update, and asserts the PR 4 acceptance
+//! criterion: `topk:0.01` + the shard-striped Adv\* broadcast cut
+//! simulated root bytes ≥ 10× vs the flat uncompressed push at S = 4.
+//!
+//! Manual timing bench (like `perf_shards`): run with
+//! `cargo bench --bench perf_comm`.
+
+use rudra::comm::codec::CodecSpec;
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::stats::table::{f, Table};
+use rudra::util::{fmt_bytes, fmt_secs};
+
+const LAMBDA: usize = 32;
+const MAX_UPDATES: u64 = 30;
+
+fn run_point(arch: Arch, shards: usize, compress: &str, protocol: Protocol) -> SimResult {
+    let mut cfg = SimConfig::paper(
+        protocol,
+        arch,
+        4,
+        LAMBDA,
+        1,
+        ModelCost::adversarial_300mb(),
+    );
+    cfg.seed = 5;
+    cfg.shards = shards;
+    cfg.max_updates = Some(MAX_UPDATES);
+    cfg.compress = CodecSpec::parse(compress).expect("codec spec");
+    run_sim(
+        &cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.001), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim")
+}
+
+fn root_bytes_per_update(r: &SimResult) -> f64 {
+    (r.root_bytes_in + r.root_bytes_out) / r.updates.max(1) as f64
+}
+
+fn main() {
+    println!(
+        "=== perf_comm — codec × shards × protocol sweep \
+         (Table 1 adversarial model, λ = {LAMBDA}) ===\n"
+    );
+
+    let mut t = Table::new(&[
+        "codec",
+        "arch",
+        "S",
+        "protocol",
+        "sim time",
+        "root B/update",
+        "vs flat dense ×",
+    ]);
+    // the flat uncompressed push at S = 4: the acceptance baseline
+    let baseline = run_point(Arch::Base, 4, "none", Protocol::NSoftsync { n: 1 });
+    let base_bpu = root_bytes_per_update(&baseline);
+
+    let mut accept: Option<f64> = None;
+    for (codec, arch, shards, protocol) in [
+        ("none", Arch::Base, 1, Protocol::NSoftsync { n: 1 }),
+        ("none", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
+        ("qsgd:4", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
+        ("topk:0.01", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
+        ("none", Arch::AdvStar, 4, Protocol::NSoftsync { n: 1 }),
+        ("topk:0.01", Arch::AdvStar, 1, Protocol::NSoftsync { n: 1 }),
+        ("topk:0.01", Arch::AdvStar, 4, Protocol::NSoftsync { n: 1 }),
+        ("topk:0.01", Arch::AdvStar, 4, Protocol::NSoftsync { n: 4 }),
+        ("qsgd:4", Arch::Base, 4, Protocol::Hardsync),
+        ("topk:0.01", Arch::Base, 4, Protocol::Hardsync),
+    ] {
+        let r = run_point(arch, shards, codec, protocol);
+        let bpu = root_bytes_per_update(&r);
+        if codec == "topk:0.01"
+            && arch == Arch::AdvStar
+            && shards == 4
+            && protocol == (Protocol::NSoftsync { n: 1 })
+        {
+            accept = Some(base_bpu / bpu);
+        }
+        t.row(vec![
+            codec.to_string(),
+            arch.label().to_string(),
+            shards.to_string(),
+            protocol.label(),
+            fmt_secs(r.sim_seconds),
+            fmt_bytes(bpu),
+            f(base_bpu / bpu, 1),
+        ]);
+    }
+    t.print();
+
+    let reduction = accept.expect("acceptance configuration swept");
+    println!(
+        "\nbaseline (flat dense push, S=4): {} root bytes/update",
+        fmt_bytes(base_bpu)
+    );
+    println!(
+        "topk:0.01 + shard-striped Adv* broadcast at S=4: {reduction:.1}× fewer root \
+         bytes-on-wire (acceptance floor: 10×)"
+    );
+    assert!(
+        reduction >= 10.0,
+        "acceptance criterion failed: {reduction:.1}× < 10×"
+    );
+}

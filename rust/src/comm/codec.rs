@@ -1,0 +1,564 @@
+//! Gradient compression codecs with per-learner error feedback.
+//!
+//! A [`CodecSpec`] names the scheme (the `compress` config knob); a
+//! [`LearnerCodec`] realizes it for one learner: it owns the learner's
+//! error-feedback residual `r` and (for the stochastic quantizer) a
+//! dedicated RNG stream. Every encode works on the *accumulated* vector
+//! `a = g + r`: the transmitted part becomes the [`EncodedGrad`], the
+//! untransmitted part becomes the new residual, so
+//! `decoded + r' == g + r` holds **exactly** in f32 for `topk` (the
+//! partition moves entries, it never rounds them) — the lossless-in-
+//! aggregate property the tests pin — and within one quantization level
+//! per coordinate for `qsgd`.
+//!
+//! Determinism: the quantizer draws from its own named stream (seeded
+//! from the run seed and the learner id), never the engine's, so
+//! `compress none` keeps fixed-seed trajectories bit-identical and a
+//! quantized run replays exactly. [`CommState`] bundles one codec per
+//! learner slot and serializes residuals + RNG states for
+//! [`crate::elastic::checkpoint::Checkpoint`].
+
+use anyhow::{bail, Result};
+
+use crate::params::FlatVec;
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Stream-decorrelation constant for codec RNGs (distinct from the
+/// hetero model's and the failure injector's).
+const COMM_STREAM: u64 = 0x9E3C_0DEC_57A3_11B7;
+
+/// Compression scheme, parsed from the `compress` config knob:
+/// `none` (default), `topk:<frac>` (keep the ⌈frac·n⌉ largest-magnitude
+/// coordinates of g + r; 8 wire bytes per survivor), or `qsgd:<bits>`
+/// (stochastic quantization to 2^bits − 1 magnitude levels plus sign;
+/// bits + 1 wire bits per coordinate plus one f32 norm).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub enum CodecSpec {
+    #[default]
+    None,
+    TopK { frac: f64 },
+    Qsgd { bits: u32 },
+}
+
+impl CodecSpec {
+    pub fn none() -> CodecSpec {
+        CodecSpec::None
+    }
+
+    /// True when no codec is configured (the bit-identical baseline path).
+    pub fn is_quiet(&self) -> bool {
+        matches!(self, CodecSpec::None)
+    }
+
+    /// Parse the config DSL (see the type docs).
+    pub fn parse(s: &str) -> Result<CodecSpec> {
+        let s = s.trim().to_ascii_lowercase();
+        if s.is_empty() || s == "none" {
+            return Ok(CodecSpec::None);
+        }
+        if let Some(f) = s.strip_prefix("topk:") {
+            let frac: f64 = f
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad topk fraction {f:?} (want topk:<frac>)"))?;
+            if !frac.is_finite() || frac <= 0.0 || frac > 1.0 {
+                bail!("topk fraction must be in (0, 1], got {frac}");
+            }
+            return Ok(CodecSpec::TopK { frac });
+        }
+        if let Some(b) = s.strip_prefix("qsgd:") {
+            let bits: u32 = b
+                .parse()
+                .map_err(|_| anyhow::anyhow!("bad qsgd bit width {b:?} (want qsgd:<bits>)"))?;
+            if !(1..=8).contains(&bits) {
+                bail!("qsgd bit width must be in 1..=8, got {bits}");
+            }
+            return Ok(CodecSpec::Qsgd { bits });
+        }
+        bail!("unknown compress spec {s:?} (none | topk:<frac> | qsgd:<bits>)");
+    }
+
+    /// Canonical label (round-trips through [`CodecSpec::parse`]).
+    pub fn label(&self) -> String {
+        match *self {
+            CodecSpec::None => "none".to_string(),
+            CodecSpec::TopK { frac } => format!("topk:{frac}"),
+            CodecSpec::Qsgd { bits } => format!("qsgd:{bits}"),
+        }
+    }
+}
+
+/// One encoded gradient — what travels learner → (leaf) → root. The
+/// server decodes it back to a dense vector and then accumulates
+/// ([`crate::coordinator::shard::ShardedServer::push_encoded`]).
+#[derive(Debug, Clone)]
+pub enum EncodedGrad {
+    /// Uncompressed (the `none` codec, and the timing-only placeholder).
+    Dense(FlatVec),
+    /// top-k sparsification: the surviving (index, value) pairs.
+    Sparse { dim: usize, idx: Vec<u32>, val: Vec<f32> },
+    /// QSGD-style quantization: signed levels in [−s, s], s = 2^bits − 1,
+    /// against one max-norm scale.
+    Quant { dim: usize, norm: f32, bits: u32, levels: Vec<i32> },
+}
+
+/// Shared by encode (residual = a − decoded) and decode so the two
+/// always produce bit-identical values.
+fn qsgd_value(norm: f32, level: i32, s: f32) -> f32 {
+    norm * level as f32 / s
+}
+
+impl EncodedGrad {
+    /// Decoded gradient length.
+    pub fn dim(&self) -> usize {
+        match self {
+            EncodedGrad::Dense(v) => v.len(),
+            EncodedGrad::Sparse { dim, .. } | EncodedGrad::Quant { dim, .. } => *dim,
+        }
+    }
+
+    /// Decode to the dense vector the server folds. `Dense` payloads pass
+    /// through without a copy, which is what keeps the `none` path
+    /// allocation- and bit-identical to the pre-codec engine.
+    pub fn into_dense(self) -> FlatVec {
+        match self {
+            EncodedGrad::Dense(v) => v,
+            EncodedGrad::Sparse { dim, idx, val } => {
+                let mut out = FlatVec::zeros(dim);
+                for (&i, &v) in idx.iter().zip(val.iter()) {
+                    out.data[i as usize] = v;
+                }
+                out
+            }
+            EncodedGrad::Quant { dim, norm, bits, levels } => {
+                let s = ((1u32 << bits) - 1) as f32;
+                let mut out = FlatVec::zeros(dim);
+                for (o, &l) in out.data.iter_mut().zip(levels.iter()) {
+                    *o = qsgd_value(norm, l, s);
+                }
+                out
+            }
+        }
+    }
+
+    /// Actual encoded payload size in bytes (4 per dense f32, 4 + 4 per
+    /// sparse survivor, (bits + 1)/8 per quantized coordinate plus the
+    /// f32 norm). Engines price wire time off the *deterministic*
+    /// [`crate::comm::wire::WireModel`] instead, so numeric and
+    /// timing-only runs account bytes identically; this is the
+    /// ground-truth the wire model is validated against.
+    pub fn wire_bytes(&self) -> f64 {
+        match self {
+            EncodedGrad::Dense(v) => 4.0 * v.len() as f64,
+            EncodedGrad::Sparse { idx, .. } => 8.0 * idx.len() as f64,
+            EncodedGrad::Quant { dim, bits, .. } => {
+                4.0 + *dim as f64 * (*bits + 1) as f64 / 8.0
+            }
+        }
+    }
+}
+
+/// One learner's codec: the error-feedback residual plus the quantizer's
+/// RNG stream.
+#[derive(Debug, Clone)]
+pub struct LearnerCodec {
+    spec: CodecSpec,
+    residual: FlatVec,
+    /// Tracks whether the residual holds any non-zero entry. The quiet
+    /// case skips the `g + r` add entirely, so `topk:1.0` (which always
+    /// drains its residual) transmits `g` bit-for-bit — the identity the
+    /// `topk:1.0 ≡ baseline` property test pins.
+    has_residual: bool,
+    rng: Rng,
+}
+
+impl LearnerCodec {
+    /// Codec for learner `learner` over an `n_params` model. `seed` is
+    /// the run seed; each learner derives an independent stream from it.
+    pub fn new(spec: CodecSpec, n_params: usize, seed: u64, learner: usize) -> LearnerCodec {
+        LearnerCodec {
+            spec,
+            residual: FlatVec::zeros(n_params),
+            has_residual: false,
+            rng: Rng::new(seed ^ COMM_STREAM).split(learner as u64),
+        }
+    }
+
+    pub fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    /// L2 norm of the current error-feedback residual (0 for `none` and
+    /// for codecs that have drained it).
+    pub fn residual_norm(&self) -> f64 {
+        if self.has_residual {
+            self.residual.norm()
+        } else {
+            0.0
+        }
+    }
+
+    /// Reset the residual (a killed learner's untransmitted error dies
+    /// with its process; its rejoined incarnation starts clean).
+    pub fn reset_residual(&mut self) {
+        if self.has_residual {
+            self.residual.fill(0.0);
+            self.has_residual = false;
+        }
+    }
+
+    /// The accumulated vector a = g + r (skipping the add while the
+    /// residual is identically zero, so the quiet path is bitwise `g`).
+    fn accumulate(&self, grad: &FlatVec) -> FlatVec {
+        if self.has_residual {
+            let mut a = grad.clone();
+            a.add_assign(&self.residual);
+            a
+        } else {
+            grad.clone()
+        }
+    }
+
+    /// Encode one gradient, updating the residual: the returned payload
+    /// plus the new residual partition (or quantize-and-difference) the
+    /// accumulated `g + r` exactly.
+    pub fn encode(&mut self, grad: &FlatVec) -> EncodedGrad {
+        debug_assert_eq!(grad.len(), self.residual.len());
+        match self.spec {
+            CodecSpec::None => EncodedGrad::Dense(grad.clone()),
+            CodecSpec::TopK { frac } => {
+                let a = self.accumulate(grad);
+                let n = a.len();
+                let k = ((frac * n as f64).ceil() as usize).clamp(1, n.max(1));
+                let mut order: Vec<u32> = (0..n as u32).collect();
+                // Partition the k largest |a| to the front in O(n) —
+                // this runs on every push of every learner, so the full
+                // sort's O(n log n) would be pure waste. The comparator
+                // is a total order (magnitude desc, index asc), so the
+                // selected set is deterministic even with repeated
+                // magnitudes.
+                if k < n {
+                    order.select_nth_unstable_by(k - 1, |&x, &y| {
+                        let (ax, ay) = (a.data[x as usize].abs(), a.data[y as usize].abs());
+                        ay.total_cmp(&ax).then(x.cmp(&y))
+                    });
+                }
+                let mut idx: Vec<u32> = order[..k.min(n)].to_vec();
+                idx.sort_unstable();
+                let val: Vec<f32> = idx.iter().map(|&i| a.data[i as usize]).collect();
+                // residual := a with the transmitted entries zeroed
+                self.residual = a;
+                for &i in &idx {
+                    self.residual.data[i as usize] = 0.0;
+                }
+                self.has_residual = self.residual.data.iter().any(|&x| x != 0.0);
+                EncodedGrad::Sparse { dim: n, idx, val }
+            }
+            CodecSpec::Qsgd { bits } => {
+                let a = self.accumulate(grad);
+                let n = a.len();
+                let s_int = (1u32 << bits) - 1;
+                let s = s_int as f32;
+                let norm = a.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+                let mut levels = vec![0i32; n];
+                if norm > 0.0 {
+                    for (l, &x) in levels.iter_mut().zip(a.data.iter()) {
+                        let scaled = x.abs() / norm * s;
+                        let mut lv = scaled.floor();
+                        // stochastic rounding keeps the quantizer unbiased
+                        if self.rng.f64() < (scaled - lv) as f64 {
+                            lv += 1.0;
+                        }
+                        let lv = (lv as i32).min(s_int as i32);
+                        *l = if x < 0.0 { -lv } else { lv };
+                    }
+                }
+                // residual := a − decoded, with decode's exact arithmetic
+                self.residual = a;
+                for (r, &l) in self.residual.data.iter_mut().zip(levels.iter()) {
+                    *r -= qsgd_value(norm, l, s);
+                }
+                self.has_residual = self.residual.data.iter().any(|&x| x != 0.0);
+                EncodedGrad::Quant { dim: n, norm, bits, levels }
+            }
+        }
+    }
+
+    fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("residual", Json::arr_f32(&self.residual.data)),
+            ("rng", Json::str(format!("{:016x}", self.rng.state()))),
+        ])
+    }
+
+    fn from_json(spec: CodecSpec, j: &Json) -> Result<LearnerCodec> {
+        let residual = FlatVec::from_vec(j.get("residual")?.as_f32_vec()?);
+        let state = u64::from_str_radix(j.get("rng")?.as_str()?, 16)
+            .map_err(|_| anyhow::anyhow!("bad codec RNG state"))?;
+        let has_residual = residual.data.iter().any(|&x| x != 0.0);
+        Ok(LearnerCodec { spec, residual, has_residual, rng: Rng::from_state(state) })
+    }
+}
+
+/// All learner codecs of one run, engine-owned (the sim engine encodes at
+/// the push boundary; the live engine moves each codec into its learner
+/// thread instead and does not use this bundle). Serialized into
+/// checkpoints so a restore continues the exact error-feedback state.
+#[derive(Debug, Clone)]
+pub struct CommState {
+    spec: CodecSpec,
+    codecs: Vec<LearnerCodec>,
+}
+
+impl CommState {
+    /// One codec per learner slot; `None` for a quiet spec so the
+    /// baseline path stays untouched.
+    pub fn build(spec: CodecSpec, lambda: usize, n_params: usize, seed: u64) -> Option<CommState> {
+        if spec.is_quiet() {
+            return None;
+        }
+        let codecs =
+            (0..lambda).map(|l| LearnerCodec::new(spec, n_params, seed, l)).collect();
+        Some(CommState { spec, codecs })
+    }
+
+    pub fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    pub fn encode(&mut self, learner: usize, grad: &FlatVec) -> EncodedGrad {
+        self.codecs[learner].encode(grad)
+    }
+
+    pub fn reset_residual(&mut self, learner: usize) {
+        self.codecs[learner].reset_residual();
+    }
+
+    /// Final per-learner residual L2 norms (the stats column).
+    pub fn residual_norms(&self) -> Vec<f64> {
+        self.codecs.iter().map(|c| c.residual_norm()).collect()
+    }
+
+    /// Serialize spec + every learner's residual and RNG state (the
+    /// checkpoint payload; self-contained, so restore needs no config).
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("spec", Json::str(self.spec.label())),
+            ("codecs", Json::Arr(self.codecs.iter().map(|c| c.to_json()).collect())),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<CommState> {
+        let spec = CodecSpec::parse(j.get("spec")?.as_str()?)?;
+        anyhow::ensure!(!spec.is_quiet(), "comm checkpoint with a quiet codec spec");
+        let codecs = j
+            .get("codecs")?
+            .as_arr()?
+            .iter()
+            .map(|c| LearnerCodec::from_json(spec, c))
+            .collect::<Result<Vec<_>>>()?;
+        Ok(CommState { spec, codecs })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        for s in ["none", "topk:0.01", "topk:1", "qsgd:4", "qsgd:8"] {
+            let spec = CodecSpec::parse(s).unwrap();
+            assert_eq!(CodecSpec::parse(&spec.label()).unwrap(), spec, "{s}");
+        }
+        assert!(CodecSpec::parse("none").unwrap().is_quiet());
+        assert!(!CodecSpec::parse("topk:0.5").unwrap().is_quiet());
+        assert_eq!(CodecSpec::parse("").unwrap(), CodecSpec::None);
+    }
+
+    #[test]
+    fn parse_rejects_malformed_specs() {
+        assert!(CodecSpec::parse("topk:0").is_err());
+        assert!(CodecSpec::parse("topk:1.5").is_err());
+        assert!(CodecSpec::parse("topk:x").is_err());
+        assert!(CodecSpec::parse("qsgd:0").is_err());
+        assert!(CodecSpec::parse("qsgd:9").is_err());
+        assert!(CodecSpec::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn none_codec_is_bitwise_identity() {
+        let mut c = LearnerCodec::new(CodecSpec::None, 4, 7, 0);
+        let g = FlatVec::from_vec(vec![0.1, -2.5, 0.0, 3.0e-9]);
+        let enc = c.encode(&g);
+        assert_eq!(enc.wire_bytes(), 16.0);
+        assert_eq!(enc.into_dense().data, g.data);
+        assert_eq!(c.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn topk_full_fraction_is_bitwise_identity() {
+        let mut c = LearnerCodec::new(CodecSpec::TopK { frac: 1.0 }, 5, 7, 2);
+        let g = FlatVec::from_vec(vec![0.25, -1.5, 3.0, 0.0, -0.125]);
+        for _ in 0..3 {
+            let enc = c.encode(&g);
+            let dec = enc.into_dense();
+            assert_eq!(dec.data, g.data, "frac = 1 transmits everything");
+            assert_eq!(c.residual_norm(), 0.0, "residual fully drained");
+        }
+    }
+
+    #[test]
+    fn topk_partitions_exactly_and_picks_largest() {
+        let mut c = LearnerCodec::new(CodecSpec::TopK { frac: 0.4 }, 5, 7, 0);
+        let g = FlatVec::from_vec(vec![1.0, -4.0, 0.5, 3.0, -0.25]);
+        let enc = c.encode(&g);
+        // k = ⌈0.4·5⌉ = 2 ⇒ entries 1 (−4) and 3 (3) survive
+        match &enc {
+            EncodedGrad::Sparse { idx, val, dim } => {
+                assert_eq!(*dim, 5);
+                assert_eq!(idx, &[1, 3]);
+                assert_eq!(val, &[-4.0, 3.0]);
+            }
+            other => panic!("expected sparse, got {other:?}"),
+        }
+        let dec = enc.into_dense();
+        assert_eq!(dec.data, vec![0.0, -4.0, 0.0, 3.0, 0.0]);
+        // exact partition: decoded + residual == g (residual untouched: 0)
+        for i in 0..5 {
+            assert_eq!(dec.data[i] + c.residual.data[i], g.data[i]);
+        }
+        // the skipped mass re-enters on the next encode (k = 2: the two
+        // largest residual entries, 1.0 and 0.5, come back)
+        let z = FlatVec::zeros(5);
+        let dec2 = c.encode(&z).into_dense();
+        assert_eq!(dec2.data, vec![1.0, 0.0, 0.5, 0.0, 0.0], "residual mass returns");
+    }
+
+    #[test]
+    fn topk_error_feedback_is_lossless_in_aggregate() {
+        // Over a full accumulation cycle, transmitted + final residual
+        // equals the running f32 sum of the inputs, exactly: every encode
+        // partitions a = g ⊕ r without rounding any entry.
+        let n = 32;
+        let mut c = LearnerCodec::new(CodecSpec::TopK { frac: 0.25 }, n, 3, 1);
+        let mut rng = Rng::new(41);
+        let mut transmitted_sum = FlatVec::zeros(n);
+        for _ in 0..20 {
+            let g = FlatVec::from_vec(
+                (0..n).map(|_| (rng.range(-1.0, 1.0)) as f32).collect(),
+            );
+            // mirror the codec's exact add order: acc = g ⊕ residual_before
+            let before = c.residual.clone();
+            let mut acc = g.clone();
+            acc.add_assign(&before);
+            let dec = c.encode(&g).into_dense();
+            for i in 0..n {
+                assert_eq!(
+                    dec.data[i] + c.residual.data[i],
+                    acc.data[i],
+                    "partition must be exact at coord {i}"
+                );
+            }
+            transmitted_sum.add_assign(&dec);
+        }
+        assert!(c.residual_norm() > 0.0, "a 0.25 fraction leaves mass in the residual");
+        assert!(transmitted_sum.is_finite());
+    }
+
+    #[test]
+    fn qsgd_error_bounded_by_one_level_and_deterministic() {
+        let n = 64;
+        let bits = 4u32;
+        let s = ((1u32 << bits) - 1) as f32;
+        let mut a = LearnerCodec::new(CodecSpec::Qsgd { bits }, n, 9, 0);
+        let mut b = LearnerCodec::new(CodecSpec::Qsgd { bits }, n, 9, 0);
+        let mut rng = Rng::new(5);
+        for _ in 0..5 {
+            let g = FlatVec::from_vec((0..n).map(|_| rng.range(-2.0, 2.0) as f32).collect());
+            let acc_norm = {
+                let mut acc = g.clone();
+                if a.has_residual {
+                    acc.add_assign(&a.residual);
+                }
+                acc.data.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+            };
+            let ea = a.encode(&g);
+            let eb = b.encode(&g);
+            let (da, db) = (ea.into_dense(), eb.into_dense());
+            assert_eq!(da.data, db.data, "same seed ⇒ same quantization");
+            assert!(da.is_finite());
+            // per-coordinate error ≤ one level = norm/s
+            for &r in a.residual.data.iter() {
+                assert!(
+                    r.abs() <= acc_norm / s + 1e-6,
+                    "residual {r} exceeds one quantization level {}",
+                    acc_norm / s
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn qsgd_zero_gradient_encodes_to_zero() {
+        let mut c = LearnerCodec::new(CodecSpec::Qsgd { bits: 2 }, 3, 1, 0);
+        let dec = c.encode(&FlatVec::zeros(3)).into_dense();
+        assert_eq!(dec.data, vec![0.0; 3]);
+        assert_eq!(c.residual_norm(), 0.0);
+    }
+
+    #[test]
+    fn reset_residual_clears_error_feedback() {
+        let mut c = LearnerCodec::new(CodecSpec::TopK { frac: 0.5 }, 4, 1, 0);
+        c.encode(&FlatVec::from_vec(vec![1.0, 2.0, 3.0, 4.0]));
+        assert!(c.residual_norm() > 0.0);
+        c.reset_residual();
+        assert_eq!(c.residual_norm(), 0.0);
+        // and the next encode sees a clean slate
+        let dec = c.encode(&FlatVec::from_vec(vec![0.0, 0.0, 5.0, 6.0])).into_dense();
+        assert_eq!(dec.data, vec![0.0, 0.0, 5.0, 6.0]);
+    }
+
+    #[test]
+    fn comm_state_roundtrips_through_json() {
+        let mut cs = CommState::build(CodecSpec::Qsgd { bits: 3 }, 3, 6, 77).unwrap();
+        let mut rng = Rng::new(2);
+        for l in 0..3 {
+            for _ in 0..4 {
+                let g = FlatVec::from_vec((0..6).map(|_| rng.range(-1.0, 1.0) as f32).collect());
+                cs.encode(l, &g);
+            }
+        }
+        let text = cs.to_json().to_string();
+        let mut back = CommState::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(back.spec(), cs.spec());
+        assert_eq!(back.residual_norms(), cs.residual_norms());
+        // both continue bit-identically (residual AND rng restored)
+        let g = FlatVec::from_vec(vec![0.3, -0.7, 0.1, 0.9, -0.2, 0.5]);
+        for l in 0..3 {
+            let a = cs.encode(l, &g).into_dense();
+            let b = back.encode(l, &g).into_dense();
+            assert_eq!(a.data, b.data, "learner {l} diverged after restore");
+        }
+    }
+
+    #[test]
+    fn comm_state_quiet_spec_builds_nothing() {
+        assert!(CommState::build(CodecSpec::None, 4, 8, 1).is_none());
+        assert!(CommState::from_json(
+            &Json::parse(r#"{"spec": "none", "codecs": []}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn encoded_wire_bytes_match_the_format() {
+        let mut topk = LearnerCodec::new(CodecSpec::TopK { frac: 0.25 }, 16, 1, 0);
+        let g = FlatVec::from_vec((0..16).map(|i| i as f32 - 8.0).collect());
+        let enc = topk.encode(&g);
+        assert_eq!(enc.wire_bytes(), 8.0 * 4.0, "4 survivors × 8 bytes");
+        let mut q = LearnerCodec::new(CodecSpec::Qsgd { bits: 3 }, 16, 1, 0);
+        let enc = q.encode(&g);
+        assert_eq!(enc.wire_bytes(), 4.0 + 16.0 * 4.0 / 8.0, "norm + (3+1) bits/coord");
+    }
+}

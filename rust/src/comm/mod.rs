@@ -1,0 +1,42 @@
+//! Communication subsystem: gradient compression codecs + wire-cost
+//! model + shard-striped Adv\* broadcast.
+//!
+//! The paper's own analysis (§3.2–3.3, Table 1) pins the runtime ceiling
+//! on bytes through the root parameter server — every push carries the
+//! full model ([`crate::netsim::cost::ModelCost::bytes`]), and at
+//! λ = 16 × 300 MB the root NIC serializes the wave into a >1 s stall.
+//! This module adds the missing axis of the accuracy–runtime tradeoff:
+//! trade gradient *fidelity* for *wire time* (Dutta et al., *Slow and
+//! Stale Gradients Can Win the Race*; Chen et al., *Revisiting
+//! Distributed Synchronous SGD* motivate cheapening per-round cost to
+//! keep sync protocols viable).
+//!
+//! Three layers:
+//! * [`codec`] — the value path: `none`, `topk:<frac>` sparsification,
+//!   and `qsgd:<bits>` stochastic quantization, each with per-learner
+//!   error-feedback residuals (Karimireddy et al.'s EF-SGD scheme: the
+//!   untransmitted part of every gradient is carried forward into the
+//!   next encode, so compression error is fed back rather than lost).
+//!   Residuals and the quantizer's RNG stream are serialized through
+//!   [`crate::elastic::checkpoint`].
+//! * [`wire`] — the time path: deterministic compressed-payload sizes
+//!   reported to the [`crate::netsim`] fabric, so push/relay times shrink
+//!   with the codec while weight pulls stay model-sized. Byte accounting
+//!   is identical in numeric and timing-only runs.
+//! * [`stripe`] — the topology path (closes the ROADMAP "shard-aware
+//!   Adv\* broadcast tree" item): each root shard roots its own broadcast
+//!   subtree carrying only its θ slice, so the Adv\* weight-propagation
+//!   period scales with `bytes / S` and pull-side scaling matches the
+//!   sharded push path of PR 1.
+//!
+//! **Placement of encode/decode.** Learners encode (updating their
+//! residual); the root decodes and then accumulates
+//! ([`crate::coordinator::shard::ShardedServer::push_encoded`]), so
+//! staleness semantics and the single-clock analysis are untouched — a
+//! compressed gradient is still one gradient with one timestamp. The
+//! simulated fabric carries byte counts, not payloads, so the encoded
+//! form exists between the two calls and the wire model prices it.
+
+pub mod codec;
+pub mod stripe;
+pub mod wire;

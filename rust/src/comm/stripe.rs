@@ -1,0 +1,107 @@
+//! Shard-striped Adv\* broadcast: one weight-broadcast subtree per root
+//! shard.
+//!
+//! Closes the ROADMAP "shard-aware Adv\* broadcast tree" item. PR 1
+//! sharded the *push* path — S root endpoints each receiving a 1/S slice
+//! of every gradient — but the Adv\* learner-side broadcast still modeled
+//! the weight payload as one model-sized message per tree tier, so its
+//! propagation period did not improve with S. The fix mirrors the push
+//! striping: each root shard roots its **own** broadcast subtree over the
+//! learner tree and streams only its contiguous θ slice
+//! ([`crate::coordinator::shard::ShardSpec::range`]) down it. The S
+//! subtrees run concurrently over disjoint slices, so one tier hop moves
+//! `bytes/S` per link and the end-to-end period becomes
+//! `depth · wire_time(bytes/S)` — the same 1/S relief the push path got,
+//! now on the pull side. A learner holds the full weights once all S
+//! slice streams of an update have reached it (the completion rule the
+//! engines already use for striped pulls,
+//! [`crate::netsim::cluster::Fabric::send_from_shards`]).
+//!
+//! With S = 1 the plan degenerates to the flat broadcast, bit for bit —
+//! the depth and period arithmetic reproduce the pre-stripe engine
+//! formula exactly, which is what keeps `compress none`, S = 1
+//! fixed-seed trajectories identical to pre-comm builds.
+
+use crate::netsim::cluster::ClusterSpec;
+
+/// The striped broadcast topology for one run: λ learners in a tree of
+/// the given fan-out, fed by `shards` concurrent slice streams.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct StripePlan {
+    pub lambda: usize,
+    pub fanout: usize,
+    pub shards: usize,
+}
+
+impl StripePlan {
+    /// `shards` is clamped to ≥ 1 (0 would be a divide-by-zero typo, and
+    /// 1 is the flat broadcast).
+    pub fn new(lambda: usize, fanout: usize, shards: usize) -> StripePlan {
+        StripePlan { lambda, fanout, shards: shards.max(1) }
+    }
+
+    /// Tree depth in hops. Matches the engine's historical formula
+    /// exactly (same f64 operation sequence) so S = 1 periods are
+    /// bit-identical to pre-stripe builds.
+    pub fn depth(&self) -> f64 {
+        (self.lambda.max(2) as f64)
+            .log(self.fanout.max(2) as f64)
+            .ceil()
+            .max(1.0)
+    }
+
+    /// Bytes one tier hop carries per subtree: the shard's θ slice.
+    pub fn slice_bytes(&self, model_bytes: f64) -> f64 {
+        model_bytes / self.shards as f64
+    }
+
+    /// End-to-end broadcast period: the time for an update's weights to
+    /// reach the whole tree, all S slice streams propagating in parallel.
+    pub fn period(&self, cluster: &ClusterSpec, model_bytes: f64) -> f64 {
+        self.depth() * cluster.wire_time(self.slice_bytes(model_bytes))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn flat_plan_reproduces_the_legacy_period_formula() {
+        let cluster = ClusterSpec::p775();
+        let (lambda, lpn, bytes) = (54usize, 8usize, 289.0e6);
+        let plan = StripePlan::new(lambda, lpn, 1);
+        // the pre-stripe engine formula, verbatim
+        let fan = lpn.max(2) as f64;
+        let depth = (lambda.max(2) as f64).log(fan).ceil().max(1.0);
+        let legacy = depth * cluster.wire_time(bytes);
+        assert_eq!(plan.period(&cluster, bytes), legacy, "S = 1 must be bit-identical");
+    }
+
+    #[test]
+    fn striping_divides_the_period_payload_by_s() {
+        let cluster = ClusterSpec::p775();
+        let bytes = 300.0e6;
+        let flat = StripePlan::new(32, 8, 1).period(&cluster, bytes);
+        let striped = StripePlan::new(32, 8, 4).period(&cluster, bytes);
+        // latency is per-hop either way; the bandwidth term shrinks 4×
+        assert!(striped < flat / 3.0, "{striped} vs {flat}");
+        assert!(striped > flat / 5.0, "latency floor keeps it above exactly 1/4");
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_flat() {
+        let plan = StripePlan::new(8, 4, 0);
+        assert_eq!(plan.shards, 1);
+        assert_eq!(plan.slice_bytes(100.0), 100.0);
+    }
+
+    #[test]
+    fn depth_grows_with_lambda_and_shrinks_with_fanout() {
+        assert_eq!(StripePlan::new(8, 8, 1).depth(), 1.0);
+        assert_eq!(StripePlan::new(64, 8, 1).depth(), 2.0);
+        assert_eq!(StripePlan::new(64, 2, 1).depth(), 6.0);
+        // degenerate λ ≤ 2 / fanout ≤ 2 clamp instead of NaN-ing
+        assert_eq!(StripePlan::new(1, 1, 1).depth(), 1.0);
+    }
+}

@@ -1,0 +1,134 @@
+//! Deterministic wire-cost model for compressed gradient traffic.
+//!
+//! The [`crate::netsim`] fabric never carries payloads — every transfer
+//! is priced off a byte count derived from
+//! [`crate::netsim::cost::ModelCost::bytes`]. The [`WireModel`] is the
+//! single place that byte count is adjusted for a codec, so numeric and
+//! timing-only runs account communication identically (and the `none`
+//! spec reproduces today's sizes bit for bit):
+//!
+//! * **push** (gradient, learner → root or learner → leaf): the encoded
+//!   payload — `2·frac·M` for `topk:<frac>` (4 value + 4 index bytes per
+//!   survivor vs 4 bytes per dense f32), `M·(bits+1)/32 + 4` for
+//!   `qsgd:<bits>` (sign + level bits per coordinate plus the f32 norm,
+//!   matching [`crate::comm::codec::EncodedGrad::wire_bytes`] exactly),
+//!   both capped at the dense size `M` (a codec that inflates the
+//!   payload falls back to dense framing);
+//! * **relay** (leaf → root): a leaf cannot sum encoded gradients
+//!   without decompressing, so it forwards the batch's encodings back to
+//!   back — `batch · push` bytes, again capped at `M` (beyond which the
+//!   leaf's dense partial sum is the cheaper message, which is exactly
+//!   the uncompressed behavior);
+//! * **pull / broadcast** (weights, root → learner): always the full
+//!   model `M` — the codecs compress gradients, not weights; pull-side
+//!   relief comes from the shard-striped broadcast
+//!   ([`crate::comm::stripe`]) instead.
+
+use crate::comm::codec::CodecSpec;
+
+/// Compressed-payload sizes for one run's (codec, model) pair.
+#[derive(Debug, Clone, Copy)]
+pub struct WireModel {
+    spec: CodecSpec,
+    model_bytes: f64,
+}
+
+impl WireModel {
+    pub fn new(spec: CodecSpec, model_bytes: f64) -> WireModel {
+        WireModel { spec, model_bytes }
+    }
+
+    pub fn spec(&self) -> CodecSpec {
+        self.spec
+    }
+
+    /// Bytes of one encoded gradient push.
+    pub fn push_bytes(&self) -> f64 {
+        match self.spec {
+            CodecSpec::None => self.model_bytes,
+            CodecSpec::TopK { frac } => (2.0 * frac * self.model_bytes).min(self.model_bytes),
+            CodecSpec::Qsgd { bits } => {
+                (self.model_bytes * (bits + 1) as f64 / 32.0 + 4.0).min(self.model_bytes)
+            }
+        }
+    }
+
+    /// Bytes of one leaf → root relay carrying `batch` encoded gradients.
+    pub fn relay_bytes(&self, batch: usize) -> f64 {
+        (batch.max(1) as f64 * self.push_bytes()).min(self.model_bytes)
+    }
+
+    /// Bytes of one weight pull/broadcast hop (never compressed).
+    pub fn pull_bytes(&self) -> f64 {
+        self.model_bytes
+    }
+
+    /// Dense-to-compressed push ratio (1.0 for `none`).
+    pub fn compression_ratio(&self) -> f64 {
+        let p = self.push_bytes();
+        if p > 0.0 {
+            self.model_bytes / p
+        } else {
+            1.0
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const M: f64 = 300.0e6;
+
+    #[test]
+    fn none_is_dense_everywhere() {
+        let w = WireModel::new(CodecSpec::None, M);
+        assert_eq!(w.push_bytes(), M);
+        assert_eq!(w.pull_bytes(), M);
+        assert_eq!(w.relay_bytes(1), M);
+        assert_eq!(w.relay_bytes(8), M, "dense relays carry the partial sum: one model");
+        assert_eq!(w.compression_ratio(), 1.0);
+    }
+
+    #[test]
+    fn topk_scales_with_the_fraction_and_caps_at_dense() {
+        let w = WireModel::new(CodecSpec::TopK { frac: 0.01 }, M);
+        assert!((w.push_bytes() - 0.02 * M).abs() < 1e-6);
+        assert!((w.compression_ratio() - 50.0).abs() < 1e-9);
+        // 8 forwarded encodings of 0.02·M = 0.16·M
+        assert!((w.relay_bytes(8) - 0.16 * M).abs() < 1e-3);
+        // frac ≥ 0.5 would inflate past dense: capped
+        let w = WireModel::new(CodecSpec::TopK { frac: 1.0 }, M);
+        assert_eq!(w.push_bytes(), M);
+        assert_eq!(w.relay_bytes(4), M, "capped relay equals the dense partial sum");
+    }
+
+    #[test]
+    fn qsgd_scales_with_the_bit_width() {
+        // 4-bit levels + sign = 5 bits per 32-bit coordinate ≈ 6.4×
+        let w = WireModel::new(CodecSpec::Qsgd { bits: 4 }, M);
+        assert!((w.push_bytes() - (M * 5.0 / 32.0 + 4.0)).abs() < 1e-6);
+        assert!(w.compression_ratio() > 6.0 && w.compression_ratio() < 6.5);
+        // pulls stay dense under every codec
+        assert_eq!(w.pull_bytes(), M);
+    }
+
+    #[test]
+    fn wire_model_matches_actual_encodings() {
+        // the deterministic model must agree with a real encoded payload
+        // (for topk, up to the ⌈frac·n⌉ rounding of the survivor count)
+        use crate::comm::codec::LearnerCodec;
+        use crate::params::FlatVec;
+        let n = 1000usize;
+        let mb = 4.0 * n as f64;
+        let g = FlatVec::from_vec((0..n).map(|i| (i as f32 - 500.0) * 1e-3).collect());
+        let mut c = LearnerCodec::new(CodecSpec::TopK { frac: 0.05 }, n, 1, 0);
+        let actual = c.encode(&g).wire_bytes();
+        let modeled = WireModel::new(CodecSpec::TopK { frac: 0.05 }, mb).push_bytes();
+        assert!((actual - modeled).abs() <= 8.0, "{actual} vs {modeled}");
+        let mut c = LearnerCodec::new(CodecSpec::Qsgd { bits: 4 }, n, 1, 0);
+        let actual = c.encode(&g).wire_bytes();
+        let modeled = WireModel::new(CodecSpec::Qsgd { bits: 4 }, mb).push_bytes();
+        assert!((actual - modeled).abs() < 1e-9, "qsgd model must be exact: {actual} vs {modeled}");
+    }
+}

@@ -36,11 +36,14 @@ use std::time::{Duration, Instant};
 
 use anyhow::Result;
 
+use crate::comm::codec::{CodecSpec, EncodedGrad, LearnerCodec};
+use crate::comm::wire::WireModel;
 use crate::coordinator::clock::Timestamp;
 use crate::coordinator::learner::GradProvider;
 use crate::coordinator::protocol::Protocol;
 use crate::coordinator::server::ServerConfig;
 use crate::coordinator::shard::ShardedServer;
+use crate::elastic::checkpoint::Checkpoint;
 use crate::elastic::membership::{ChurnRecord, Membership, Phase};
 use crate::elastic::rescaler::{RescalePolicy, Rescaler};
 use crate::params::lr::LrPolicy;
@@ -93,6 +96,16 @@ pub struct LiveConfig {
     /// Elastic membership (heartbeat detection + churn schedules);
     /// `None` = the classic fixed-λ run.
     pub elastic: Option<LiveElastic>,
+    /// Gradient compression ([`crate::comm`]): learners encode in their
+    /// own threads (error-feedback residuals thread-local), the server
+    /// decodes then accumulates. `none` ships dense payloads as before.
+    pub compress: CodecSpec,
+    /// Capture a server checkpoint every this many weight updates
+    /// (0 = off). Captures happen on the server loop between messages —
+    /// a quiesced update boundary, so the checkpointed accumulators and
+    /// clock are exactly the post-update state (the ROADMAP "wire
+    /// checkpoint_every into train" item).
+    pub checkpoint_every: u64,
 }
 
 /// Live-run output.
@@ -117,13 +130,23 @@ pub struct LiveResult {
     pub dropped_gradients: u64,
     /// Backup-sync: dropped-gradient count per learner slot.
     pub dropped_by_learner: Vec<u64>,
+    /// Per-learner bytes pushed (compressed payload sizes; dense-sized
+    /// when `compress` is `none`).
+    pub comm_bytes_by_learner: Vec<f64>,
+    /// Checkpoints captured (per `LiveConfig::checkpoint_every`).
+    pub checkpoints_taken: u64,
+    /// The most recent captured checkpoint, if any.
+    pub last_checkpoint: Option<Checkpoint>,
 }
 
 enum ToServer {
     /// `inc` is the learner's incarnation at spawn time: a straggler push
     /// from a killed thread must not be credited to (or replied at) the
-    /// learner that later rejoined under the same id.
-    Push { learner: usize, inc: u64, grad: FlatVec, ts: Timestamp, loss: f32 },
+    /// learner that later rejoined under the same id. The gradient
+    /// travels encoded (learner-side codec); the server decodes then
+    /// accumulates. `compress none` ships it as `Dense`, which decodes
+    /// without a copy.
+    Push { learner: usize, inc: u64, grad: EncodedGrad, ts: Timestamp, loss: f32 },
 }
 
 enum ToLearner {
@@ -171,6 +194,7 @@ fn spawn_learner(
     id: usize,
     inc: u64,
     mut provider: Box<dyn GradProvider + Send>,
+    mut codec: Option<LearnerCodec>,
     mut theta: FlatVec,
     mut ts: Timestamp,
     push_tx: mpsc::Sender<ToServer>,
@@ -179,6 +203,13 @@ fn spawn_learner(
     let handle = std::thread::spawn(move || -> Result<()> {
         loop {
             let (grad, loss) = provider.compute(id, &theta)?;
+            // encode in the learner thread: the error-feedback residual
+            // is thread-local state, exactly like the paper's learner-side
+            // pushGradient staging buffer
+            let grad = match codec.as_mut() {
+                Some(c) => c.encode(&grad),
+                None => EncodedGrad::Dense(grad),
+            };
             if push_tx.send(ToServer::Push { learner: id, inc, grad, ts, loss }).is_err() {
                 return Ok(()); // server gone
             }
@@ -240,6 +271,24 @@ fn run_live_inner(
         elastic.as_ref().map(|e| e.rescale).unwrap_or(RescalePolicy::None);
     let rescaler = Rescaler::new(rescale_policy, cfg.mu, cfg.lambda);
     let mut membership = Membership::new(cfg.lambda);
+    // Wire accounting prices pushes off the deterministic model (the
+    // mpsc channel has no wire, but the stats column should match what
+    // the payload would cost on one); live runs are wall-clock
+    // nondeterministic, so codec RNG streams take a fixed seed.
+    let n_params = theta0.len();
+    let wire = WireModel::new(cfg.compress, 4.0 * n_params as f64);
+    const LIVE_COMM_SEED: u64 = 0x11FE_C0DE;
+    let mk_codec = |id: usize| {
+        if cfg.compress.is_quiet() {
+            None
+        } else {
+            Some(LearnerCodec::new(cfg.compress, n_params, LIVE_COMM_SEED, id))
+        }
+    };
+    let mut comm_bytes_by_learner: Vec<f64> = vec![0.0; cfg.lambda];
+    let mut checkpoints_taken: u64 = 0;
+    let mut last_checkpoint: Option<Checkpoint> = None;
+    let mut last_ckpt_at: u64 = 0;
 
     // Merge the deterministic churn into one pushes-ordered agenda.
     #[derive(Clone, Copy)]
@@ -270,7 +319,7 @@ fn run_live_inner(
     let mut incs: Vec<u64> = vec![0; cfg.lambda];
     for (id, provider) in providers.into_iter().enumerate() {
         let (handle, reply_tx) =
-            spawn_learner(id, 0, provider, theta0.clone(), 0, push_tx.clone());
+            spawn_learner(id, 0, provider, mk_codec(id), theta0.clone(), 0, push_tx.clone());
         handles.push(Some(handle));
         reply_txs.push(reply_tx);
     }
@@ -478,12 +527,15 @@ fn run_live_inner(
             membership.recover(learner, start.elapsed().as_secs_f64())?;
         }
         pushes += 1;
+        comm_bytes_by_learner[learner] += wire.push_bytes();
         recent_losses.push(loss as f64);
         if cfg.log_every > 0 && pushes % cfg.log_every == 0 {
             loss_log.push((pushes, crate::util::mean(&recent_losses) as f32));
             recent_losses.clear();
         }
-        let outcome = server.push_gradient(learner, &grad, ts)?;
+        // decode-then-accumulate: the codec's payload becomes one dense
+        // gradient with one timestamp, protocol semantics unchanged
+        let outcome = server.push_encoded(learner, grad, ts)?;
 
         if cfg.protocol.is_barrier() {
             if outcome.dropped {
@@ -532,10 +584,14 @@ fn run_live_inner(
                             .as_ref()
                             .expect("rejoin schedule keeps a sender")
                             .clone();
+                        // the rejoined incarnation's codec starts with a
+                        // clean residual: untransmitted error feedback
+                        // died with the old thread
                         let (handle, reply_tx) = spawn_learner(
                             l,
                             incs[l],
                             provider,
+                            mk_codec(l),
                             server.assemble_weights(),
                             server.timestamp(),
                             tx,
@@ -555,6 +611,21 @@ fn run_live_inner(
                 }
             }
             agenda_next += 1;
+        }
+
+        // Quiesced update boundary: the push — and any membership flush
+        // it triggered — is fully handled, so the serialized accumulators
+        // and clock are exactly the post-update state. (Comm residuals
+        // are learner-thread-local and not captured here; the sim
+        // engine's checkpoints carry them.)
+        if cfg.checkpoint_every > 0 && server.updates >= last_ckpt_at + cfg.checkpoint_every {
+            last_checkpoint = Some(Checkpoint::capture(
+                &format!("live-update-{}", server.updates),
+                &server,
+                &[],
+            ));
+            last_ckpt_at = server.updates;
+            checkpoints_taken += 1;
         }
 
         // Busy channels must not starve failure detection.
@@ -591,6 +662,9 @@ fn run_live_inner(
         final_active_lambda: server.active_lambda(),
         dropped_gradients: server.dropped,
         dropped_by_learner: server.dropped_by().to_vec(),
+        comm_bytes_by_learner,
+        checkpoints_taken,
+        last_checkpoint,
     })
 }
 
@@ -618,6 +692,8 @@ mod tests {
             shards,
             log_every: 4,
             elastic: None,
+            compress: CodecSpec::None,
+            checkpoint_every: 0,
         }
     }
 
@@ -808,6 +884,66 @@ mod tests {
                 continue; // dead before (or at) the retune — may have missed it
             }
             assert_eq!(s.load(Ordering::SeqCst), 11, "learner {l} missed the SetMu");
+        }
+    }
+
+    #[test]
+    fn checkpoint_every_captures_at_quiesced_boundaries() {
+        // Satellite (PR 4): checkpoint_every was sim-only; the live
+        // engine now captures at update boundaries too.
+        let dim = 8;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4, 2);
+        cfg.checkpoint_every = 3;
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(4, dim)).unwrap();
+        assert!(r.updates >= 3, "enough updates to cross a boundary");
+        assert!(r.checkpoints_taken > 0, "at least one checkpoint captured");
+        let ckpt = r.last_checkpoint.expect("last checkpoint retained");
+        let captured_updates = ckpt.updates().unwrap();
+        assert!(captured_updates >= 3 && captured_updates <= r.updates);
+        // the capture restores to a valid server mid-run (single-clock
+        // invariant re-validated on the way in)
+        let restored = ckpt.restore().unwrap();
+        assert_eq!(restored.server.updates, captured_updates);
+        assert!(restored.server.assemble_weights().is_finite());
+        assert_eq!(restored.server.shard_updates(), vec![captured_updates; 2]);
+        // off by default: no captures
+        let cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 2, 1);
+        let r = run_live(
+            &cfg,
+            FlatVec::zeros(4),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 4),
+            LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+            providers(2, 4),
+        )
+        .unwrap();
+        assert_eq!(r.checkpoints_taken, 0);
+        assert!(r.last_checkpoint.is_none());
+    }
+
+    #[test]
+    fn compressed_live_run_converges_and_books_bytes() {
+        let dim = 8;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4, 1);
+        cfg.compress = CodecSpec::TopK { frac: 0.5 };
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(4, dim)).unwrap();
+        assert!(r.updates > 0);
+        assert!(r.theta.is_finite());
+        // error feedback keeps top-k descent on the bowl convergent
+        assert!(r.theta.norm() < 7.0, "moved toward 0: {}", r.theta.norm());
+        // every learner's pushes were booked at the compressed size
+        let per_push = 2.0 * 0.5 * (4 * dim) as f64;
+        for (l, &b) in r.comm_bytes_by_learner.iter().enumerate() {
+            assert!(b > 0.0, "learner {l} booked no bytes");
+            assert!(
+                (b / per_push).fract().abs() < 1e-9,
+                "learner {l}: {b} not a multiple of the push size {per_push}"
+            );
         }
     }
 

@@ -46,6 +46,8 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
+use crate::comm::codec::{CodecSpec, CommState, EncodedGrad};
+use crate::comm::wire::WireModel;
 use crate::coordinator::clock::Timestamp;
 use crate::coordinator::learner::{GradProvider, LearnerState};
 use crate::coordinator::protocol::Protocol;
@@ -113,6 +115,12 @@ pub struct SimConfig {
     /// retune the n-softsync splitting parameter at epoch boundaries to
     /// hold a target ⟨σ⟩. Off by default.
     pub adaptive: AdaptiveSpec,
+    /// Gradient compression ([`crate::comm`]): learners encode pushes
+    /// (error-feedback residuals learner-side), the root decodes then
+    /// accumulates, and the wire model shrinks push/relay times to the
+    /// compressed payload. `none` (the default) takes the exact
+    /// pre-codec path, bit for bit.
+    pub compress: CodecSpec,
 }
 
 impl SimConfig {
@@ -143,6 +151,7 @@ impl SimConfig {
             checkpoint_every_updates: 0,
             hetero: HeteroSpec::none(),
             adaptive: AdaptiveSpec::none(),
+            compress: CodecSpec::None,
         }
     }
 
@@ -219,11 +228,26 @@ pub struct SimResult {
     pub hetero_factors: Vec<f64>,
     /// Adaptive-n controller decisions, one per epoch (empty when off).
     pub adaptive: Vec<AdaptiveRecord>,
+    /// Bytes delivered *into* the root tier (gradient pushes/relays,
+    /// compressed when a codec is on) — the §3.3 bottleneck quantity.
+    pub root_bytes_in: f64,
+    /// Bytes sent *out of* the root tier (weight pulls/broadcasts;
+    /// always dense — codecs compress gradients, not weights).
+    pub root_bytes_out: f64,
+    /// Per-learner bytes pushed onto the wire (compressed payload sizes;
+    /// the stats-server compressed-bytes column).
+    pub comm_bytes_by_learner: Vec<f64>,
+    /// Final per-learner error-feedback residual L2 norms (empty when
+    /// `compress` is `none` or the run is timing-only).
+    pub residual_norms: Vec<f64>,
 }
 
-/// (learner, incarnation, gradient, timestamp) — relayed leaf batches
-/// carry the incarnation so a crash invalidates in-flight gradients.
-type RelayBatch = Vec<(usize, u64, Option<FlatVec>, Timestamp)>;
+/// (learner, incarnation, encoded gradient, timestamp) — relayed leaf
+/// batches carry the incarnation so a crash invalidates in-flight
+/// gradients. Leaves forward encodings as-is (decoding happens at the
+/// root, [`ShardedServer::push_encoded`]); the `none` codec rides as
+/// `Dense`, which decodes without a copy.
+type RelayBatch = Vec<(usize, u64, Option<EncodedGrad>, Timestamp)>;
 
 /// Learner-loop events carry the learner's *incarnation* at schedule
 /// time: a kill bumps the slot's incarnation, so every event the dead
@@ -233,10 +257,14 @@ type RelayBatch = Vec<(usize, u64, Option<FlatVec>, Timestamp)>;
 enum Ev {
     /// Learner finished a mini-batch gradient.
     ComputeDone { learner: usize, inc: u64 },
-    /// Gradient delivered to the root (Base).
-    PushAtRoot { learner: usize, inc: u64 },
-    /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*).
-    PushAtLeaf { learner: usize, inc: u64 },
+    /// Gradient delivered to the root (Base). The payload travels *in*
+    /// the event — it is taken from the learner at send time, so an
+    /// adv*-style mini-batch finishing while the previous push is still
+    /// in flight can never clobber an untransmitted gradient.
+    PushAtRoot { learner: usize, inc: u64, grad: Option<EncodedGrad>, ts: Timestamp },
+    /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*);
+    /// payload in the event, as with [`Ev::PushAtRoot`].
+    PushAtLeaf { learner: usize, inc: u64, grad: Option<EncodedGrad>, ts: Timestamp },
     /// A leaf's aggregated batch arrived at the root.
     RelayAtRoot { leaf: usize, batch: RelayBatch },
     /// A pull completed at the learner.
@@ -251,7 +279,11 @@ enum Ev {
 
 struct Slot {
     state: LearnerState,
-    pending_grad: Option<FlatVec>,
+    /// Adv* staging buffer: the gradient (and its timestamp) waiting for
+    /// the push pipeline to free. The learner stalls once this is
+    /// occupied, so it holds at most one gradient; Base/Adv pushes carry
+    /// their payload in the push event instead.
+    pending_grad: Option<EncodedGrad>,
     pending_ts: Timestamp,
     compute_cost: f64,
     blocked_since: f64,
@@ -295,7 +327,18 @@ pub struct SimEngine<'a> {
     provider: Option<&'a mut dyn GradProvider>,
     evaluator: Option<&'a mut dyn Evaluator>,
     numeric: bool,
-    bytes: f64,
+    /// Compressed-payload sizes for every transfer (push/relay/pull);
+    /// with `compress none` each equals `cfg.model.bytes` exactly.
+    wire: WireModel,
+    /// Per-learner codecs (numeric runs with a codec on; `None` keeps
+    /// the baseline value path untouched).
+    comm: Option<CommState>,
+    /// Cumulative bytes into / out of the root tier (the §3.3 quantity
+    /// `benches/perf_comm.rs` sweeps).
+    root_bytes_in: f64,
+    root_bytes_out: f64,
+    /// Per-learner bytes pushed onto the wire.
+    comm_bytes_by_learner: Vec<f64>,
     base_compute: f64,
     /// Fabric endpoints of the root shards (one per shard; the flat
     /// server of the paper is the single-endpoint case).
@@ -374,9 +417,11 @@ impl<'a> SimEngine<'a> {
                 cache_snap: None,
             })
             .collect();
-        let fan = lpn.max(2) as f64;
-        let depth = (lambda.max(2) as f64).log(fan).ceil().max(1.0);
-        let bcast_period = depth * cfg.cluster.wire_time(cfg.model.bytes);
+        // Adv* weight propagation: one broadcast subtree per root shard,
+        // each carrying its θ slice ([`crate::comm::stripe`]). S = 1
+        // reproduces the classic single-tree period bit for bit.
+        let bcast_period = tree.broadcast_plan().period(&cfg.cluster, cfg.model.bytes);
+        let n_params = theta0.len();
         let lr_copy = lr.clone();
         let server = ShardedServer::new(
             cfg.server_config(),
@@ -408,7 +453,15 @@ impl<'a> SimEngine<'a> {
             provider,
             evaluator,
             numeric,
-            bytes: cfg.model.bytes,
+            wire: WireModel::new(cfg.compress, cfg.model.bytes),
+            comm: if numeric {
+                CommState::build(cfg.compress, lambda, n_params, cfg.seed)
+            } else {
+                None
+            },
+            root_bytes_in: 0.0,
+            root_bytes_out: 0.0,
+            comm_bytes_by_learner: vec![0.0; lambda],
             base_compute: cfg.compute.minibatch_secs(&cfg.model, cfg.mu),
             ps_eps,
             bcast_period,
@@ -533,8 +586,12 @@ impl<'a> SimEngine<'a> {
             }
             match ev {
                 Ev::ComputeDone { learner, inc } => self.on_compute_done(now, learner, inc)?,
-                Ev::PushAtRoot { learner, inc } => self.on_push_at_root(now, learner, inc)?,
-                Ev::PushAtLeaf { learner, inc } => self.on_push_at_leaf(now, learner, inc)?,
+                Ev::PushAtRoot { learner, inc, grad, ts } => {
+                    self.on_push_at_root(now, learner, inc, grad, ts)?
+                }
+                Ev::PushAtLeaf { learner, inc, grad, ts } => {
+                    self.on_push_at_leaf(now, learner, inc, grad, ts)?
+                }
                 Ev::RelayAtRoot { leaf, batch } => self.on_relay_at_root(now, leaf, batch)?,
                 Ev::PullDone { learner, inc, snapshot, ts } => {
                     self.on_pull_done(now, learner, inc, snapshot, ts)
@@ -593,6 +650,10 @@ impl<'a> SimEngine<'a> {
             learner_utilization,
             hetero_factors: self.hetero.persistent().to_vec(),
             adaptive: self.adaptive.map(|c| c.log).unwrap_or_default(),
+            root_bytes_in: self.root_bytes_in,
+            root_bytes_out: self.root_bytes_out,
+            comm_bytes_by_learner: self.comm_bytes_by_learner,
+            residual_norms: self.comm.map(|c| c.residual_norms()).unwrap_or_default(),
         })
     }
 
@@ -638,37 +699,56 @@ impl<'a> SimEngine<'a> {
         self.slots[l].overlap.add_compute(cost);
         self.slots[l].state.steps += 1;
         let grad_ts = self.slots[l].state.ts;
-        if self.provider.is_some() {
+        let enc = if self.provider.is_some() {
             let (g, loss) = {
                 let theta = &self.slots[l].state.theta;
                 self.provider.as_deref_mut().unwrap().compute(l, theta)?
             };
             self.epoch_losses.push(loss as f64);
-            self.slots[l].pending_grad = Some(g);
-        }
-        self.slots[l].pending_ts = grad_ts;
+            // Encode at the push boundary: the learner's error-feedback
+            // residual updates here; the root decodes at fold time.
+            Some(match self.comm.as_mut() {
+                Some(c) => c.encode(l, &g),
+                None => EncodedGrad::Dense(g),
+            })
+        } else {
+            None
+        };
         self.slots[l].blocked_since = now;
 
         match self.cfg.arch {
             Arch::Base => {
-                let t =
-                    self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, self.bytes);
-                self.q.schedule_at(t, Ev::PushAtRoot { learner: l, inc });
+                let bytes = self.wire.push_bytes();
+                self.comm_bytes_by_learner[l] += bytes;
+                self.root_bytes_in += bytes;
+                let t = self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, bytes);
+                self.q.schedule_at(
+                    t,
+                    Ev::PushAtRoot { learner: l, inc, grad: enc, ts: grad_ts },
+                );
             }
             Arch::Adv => {
                 let leaf = self.tree.leaf_of[l];
-                let t =
-                    self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
-                self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc });
+                let bytes = self.wire.push_bytes();
+                self.comm_bytes_by_learner[l] += bytes;
+                let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+                self.q.schedule_at(
+                    t,
+                    Ev::PushAtLeaf { learner: l, inc, grad: enc, ts: grad_ts },
+                );
             }
             Arch::AdvStar => {
                 if self.slots[l].pipe_busy {
                     // The §3.3 constraint: the pushGradient thread may not
                     // start the current gradient before the previous one is
-                    // delivered — the learner stalls here.
+                    // delivered — the gradient parks in the staging buffer
+                    // and the learner stalls here, so the buffer can never
+                    // be overwritten before its send.
+                    self.slots[l].pending_grad = enc;
+                    self.slots[l].pending_ts = grad_ts;
                     self.slots[l].pipe_waiting = true;
                 } else {
-                    self.start_advstar_push(now, l);
+                    self.start_advstar_push(now, l, enc, grad_ts);
                     self.start_compute(now, l);
                 }
             }
@@ -676,20 +756,33 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
-    fn start_advstar_push(&mut self, now: f64, l: usize) {
+    fn start_advstar_push(
+        &mut self,
+        now: f64,
+        l: usize,
+        grad: Option<EncodedGrad>,
+        ts: Timestamp,
+    ) {
         self.slots[l].pipe_busy = true;
         let leaf = self.tree.leaf_of[l];
         let inc = self.slots[l].inc;
-        let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), self.bytes);
-        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc });
+        let bytes = self.wire.push_bytes();
+        self.comm_bytes_by_learner[l] += bytes;
+        let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc, grad, ts });
     }
 
-    fn on_push_at_root(&mut self, now: f64, l: usize, inc: u64) -> Result<()> {
+    fn on_push_at_root(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        grad: Option<EncodedGrad>,
+        ts: Timestamp,
+    ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return Ok(()); // gradient of a dead incarnation is discarded
         }
-        let grad = self.slots[l].pending_grad.take();
-        let ts = self.slots[l].pending_ts;
         let out = self.fold(now, l, inc, grad, ts)?;
         if self.cfg.protocol.is_barrier() {
             if out.dropped {
@@ -707,13 +800,18 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
-    fn on_push_at_leaf(&mut self, now: f64, l: usize, inc: u64) -> Result<()> {
+    fn on_push_at_leaf(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        grad: Option<EncodedGrad>,
+        ts: Timestamp,
+    ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return Ok(());
         }
         let leaf = self.tree.leaf_of[l];
-        let grad = self.slots[l].pending_grad.take();
-        let ts = self.slots[l].pending_ts;
         self.leaves[leaf].queue.push((l, inc, grad, ts));
         self.try_relay(now, leaf);
 
@@ -733,7 +831,9 @@ impl<'a> SimEngine<'a> {
                     self.slots[l].pipe_waiting = false;
                     let stall = now - self.slots[l].blocked_since;
                     self.slots[l].overlap.add_exposed_comm(stall);
-                    self.start_advstar_push(now, l);
+                    let staged = self.slots[l].pending_grad.take();
+                    let staged_ts = self.slots[l].pending_ts;
+                    self.start_advstar_push(now, l, staged, staged_ts);
                     self.start_compute(now, l);
                 } else {
                     self.slots[l].pipe_busy = false;
@@ -751,8 +851,12 @@ impl<'a> SimEngine<'a> {
         let take = self.tree.fanout.min(self.leaves[leaf].queue.len());
         let batch: RelayBatch = self.leaves[leaf].queue.drain(..take).collect();
         self.leaves[leaf].relay_busy = true;
-        let t =
-            self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, self.bytes);
+        // Uncompressed, the relay is the leaf's dense partial sum (one
+        // model-sized message); compressed, the leaf forwards the batch's
+        // encodings, capped at the dense size (see WireModel::relay_bytes).
+        let bytes = self.wire.relay_bytes(batch.len());
+        self.root_bytes_in += bytes;
+        let t = self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, bytes);
         self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch });
     }
 
@@ -784,14 +888,16 @@ impl<'a> SimEngine<'a> {
         now: f64,
         l: usize,
         inc: u64,
-        grad: Option<FlatVec>,
+        grad: Option<EncodedGrad>,
         ts: Timestamp,
     ) -> Result<PushOutcome> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return Ok(PushOutcome::default());
         }
         let outcome: PushOutcome = match grad {
-            Some(g) => self.server.push_gradient(l, &g, ts)?,
+            // decode-then-accumulate at the root tier; `Dense` (the
+            // `none` codec) decodes without a copy
+            Some(enc) => self.server.push_encoded(l, enc, ts)?,
             None => self.server.push_gradient_timing_only(l, ts),
         };
         self.after_update(now, outcome.clone())?;
@@ -804,6 +910,10 @@ impl<'a> SimEngine<'a> {
     fn after_update(&mut self, now: f64, outcome: PushOutcome) -> Result<()> {
         if outcome.updated {
             if self.cfg.arch == Arch::AdvStar {
+                // Each update initiates a striped broadcast: the S root
+                // shards emit their θ slices (M bytes total) into their
+                // subtrees ([`crate::comm::stripe`]).
+                self.root_bytes_out += self.wire.pull_bytes();
                 let snap = self.server_snapshot();
                 self.recent.push_back((now, self.server.timestamp(), snap));
                 // prune entries older than the broadcast window (keep one
@@ -822,10 +932,12 @@ impl<'a> SimEngine<'a> {
                 if self.hetero.enabled() {
                     streams.push(("hetero", self.hetero.rng()));
                 }
-                self.last_checkpoint = Some(Checkpoint::capture(
+                self.last_checkpoint = Some(Checkpoint::capture_full(
                     &format!("update-{}", self.server.updates),
                     &self.server,
                     &streams,
+                    self.comm.as_ref(),
+                    self.adaptive.as_ref(),
                 ));
                 self.checkpoints_taken += 1;
             }
@@ -896,9 +1008,11 @@ impl<'a> SimEngine<'a> {
             Arch::Base => {
                 for l in waiting {
                     let inc = self.slots[l].inc;
+                    let bytes = self.wire.pull_bytes();
+                    self.root_bytes_out += bytes;
                     let t = self
                         .fabric
-                        .send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
+                        .send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
                     self.q.schedule_at(
                         t,
                         Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
@@ -924,13 +1038,15 @@ impl<'a> SimEngine<'a> {
                     if members.is_empty() {
                         continue;
                     }
+                    let bytes = self.wire.pull_bytes();
+                    self.root_bytes_out += bytes;
                     let t1 = self
                         .fabric
-                        .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), self.bytes);
+                        .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), bytes);
                     for l in members {
                         let inc = self.slots[l].inc;
                         let t =
-                            self.fabric.send(t1, self.leaf_node(leaf), self.node_of(l), self.bytes);
+                            self.fabric.send(t1, self.leaf_node(leaf), self.node_of(l), bytes);
                         self.q.schedule_at(
                             t,
                             Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
@@ -946,8 +1062,9 @@ impl<'a> SimEngine<'a> {
         if self.slots[l].state.needs_pull(self.server.timestamp()) {
             let ts = self.server.timestamp();
             let snap = self.server_snapshot();
-            let t =
-                self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
+            let bytes = self.wire.pull_bytes();
+            self.root_bytes_out += bytes;
+            let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
             self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
         } else {
             // timestamp inquiry only (§3.2's pull-skip)
@@ -975,16 +1092,19 @@ impl<'a> SimEngine<'a> {
         // is already in flight (one root egress serves all members).
         if self.leaves[leaf].cache_ts < server_ts && self.leaves[leaf].cache_ready <= now {
             let snap = self.server_snapshot();
+            let bytes = self.wire.pull_bytes();
+            self.root_bytes_out += bytes;
             let ready = self
                 .fabric
-                .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), self.bytes);
+                .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), bytes);
             self.leaves[leaf].cache_ts = server_ts;
             self.leaves[leaf].cache_ready = ready;
             self.leaves[leaf].cache_snap = snap;
         }
         // Join the cached/in-flight copy; final hop is node-local.
         let ready = self.leaves[leaf].cache_ready.max(now);
-        let t = self.fabric.send(ready, self.leaf_node(leaf), self.node_of(l), self.bytes);
+        let t =
+            self.fabric.send(ready, self.leaf_node(leaf), self.node_of(l), self.wire.pull_bytes());
         self.q.schedule_at(
             t,
             Ev::PullDone {
@@ -1095,6 +1215,11 @@ impl<'a> SimEngine<'a> {
         self.slots[l].pending_grad = None;
         self.slots[l].pipe_busy = false;
         self.slots[l].pipe_waiting = false;
+        // untransmitted error feedback dies with the learner process; the
+        // rejoined incarnation starts with a clean residual
+        if let Some(c) = self.comm.as_mut() {
+            c.reset_residual(l);
+        }
         self.barrier.retain(|&x| x != l);
         self.on_membership_change(now, Some(l))?;
         Ok(())
@@ -1136,7 +1261,9 @@ impl<'a> SimEngine<'a> {
         self.slots[l].blocked_since = now;
         let ts = self.server.timestamp();
         let snap = self.server_snapshot();
-        let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), self.bytes);
+        let bytes = self.wire.pull_bytes();
+        self.root_bytes_out += bytes;
+        let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
         self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
         Ok(())
     }
@@ -1495,6 +1622,102 @@ mod tests {
         assert!(err.to_string().contains("compute_jitter"), "{err}");
         cfg.cluster.compute_jitter = -0.2;
         assert!(run_cfg(&cfg).is_err());
+    }
+
+    #[test]
+    fn compression_shrinks_sim_time_and_root_bytes() {
+        // Timing-only on the Table 1 adversarial model: wire time
+        // dominates, so a 50× push codec must shorten the run and cut
+        // the root's ingress bytes accordingly.
+        let mut cfg = SimConfig::paper(
+            Protocol::NSoftsync { n: 1 },
+            Arch::Base,
+            4,
+            8,
+            1,
+            ModelCost::adversarial_300mb(),
+        );
+        cfg.seed = 7;
+        cfg.max_updates = Some(20);
+        let run_c = |compress: &str| {
+            let mut c = cfg.clone();
+            c.compress = CodecSpec::parse(compress).unwrap();
+            run_sim(
+                &c,
+                FlatVec::zeros(0),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+                LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+                None,
+                None,
+            )
+            .unwrap()
+        };
+        let dense = run_c("none");
+        let topk = run_c("topk:0.01");
+        assert!(dense.root_bytes_in > 0.0 && dense.root_bytes_out > 0.0);
+        assert!(
+            topk.sim_seconds < dense.sim_seconds,
+            "compressed pushes must finish sooner: {} vs {}",
+            topk.sim_seconds,
+            dense.sim_seconds
+        );
+        let per_update = |r: &SimResult| r.root_bytes_in / r.updates.max(1) as f64;
+        assert!(
+            per_update(&topk) < 0.05 * per_update(&dense),
+            "topk:0.01 ingress should be ~2% of dense: {} vs {}",
+            per_update(&topk),
+            per_update(&dense)
+        );
+        // pulls stay dense: out-bytes per update are the same order
+        assert!(topk.root_bytes_out > 0.0);
+        // timing-only runs have no codecs, so no residual column
+        assert!(topk.residual_norms.is_empty());
+        // per-learner accounting adds up to the ingress of the Base arch
+        let pushed: f64 = topk.comm_bytes_by_learner.iter().sum();
+        assert!((pushed - topk.root_bytes_in).abs() < 1e-6 * pushed.max(1.0));
+    }
+
+    #[test]
+    fn advstar_striped_broadcast_shortens_the_period_at_s4() {
+        // The ROADMAP stripe item, observable end to end: a comm-bound
+        // adv* run (fat model, negligible compute, zero jitter so the
+        // comparison is structural, not a different random sequence) must
+        // get faster when the root tier stripes — relays carry 1/S slices
+        // into S endpoints and the broadcast period scales with bytes/S.
+        let fat_model = ModelCost {
+            name: "fat-tiny-flops",
+            flops_per_sample: 1.0e6,
+            bytes: 300.0e6,
+            samples_per_epoch: 1_000_000,
+        };
+        let mut cfg =
+            SimConfig::paper(Protocol::NSoftsync { n: 1 }, Arch::AdvStar, 4, 16, 1, fat_model);
+        cfg.seed = 9;
+        cfg.max_updates = Some(30);
+        cfg.cluster.compute_jitter = 0.0;
+        let run_s = |shards: usize| {
+            let mut c = cfg.clone();
+            c.shards = shards;
+            run_sim(
+                &c,
+                FlatVec::zeros(0),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+                LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+                None,
+                None,
+            )
+            .unwrap()
+        };
+        let flat = run_s(1);
+        let striped = run_s(4);
+        assert_eq!(flat.updates, striped.updates, "same update budget either way");
+        assert!(
+            striped.sim_seconds < flat.sim_seconds,
+            "striping must speed a comm-bound adv* run: {} vs {}",
+            striped.sim_seconds,
+            flat.sim_seconds
+        );
+        assert!(striped.root_bytes_in > 0.0 && striped.root_bytes_out > 0.0);
     }
 
     #[test]

@@ -185,6 +185,20 @@ impl ParameterServer {
         Ok(out)
     }
 
+    /// Decode-then-accumulate mirror of
+    /// [`crate::coordinator::shard::ShardedServer::push_encoded`] (the
+    /// flat server stays the reference implementation): decode one
+    /// compressed gradient and fold it through the normal push path.
+    pub fn push_encoded(
+        &mut self,
+        learner: usize,
+        enc: crate::comm::codec::EncodedGrad,
+        grad_ts: Timestamp,
+    ) -> Result<PushOutcome> {
+        let dense = enc.into_dense();
+        self.push_gradient(learner, &dense, grad_ts)
+    }
+
     /// Timing-only variant: advances protocol/clock/epoch state without
     /// numeric work (used when simulating paper-scale models whose
     /// gradients we never materialize — e.g. the 289 MB AlexNet).
@@ -400,6 +414,28 @@ mod tests {
         s.push_gradient(0, &g, s.timestamp()).unwrap();
         let delta = theta_before - s.weights().0.data[0];
         assert!((delta - 1.0).abs() < 1e-6, "fresh push moved θ by {delta}");
+    }
+
+    #[test]
+    fn push_encoded_decodes_then_accumulates() {
+        // The flat server is the reference implementation for the sharded
+        // decode-then-accumulate path: an encoded push must fold exactly
+        // the decoded vector, and a Dense payload must be a plain push.
+        use crate::comm::codec::{CodecSpec, EncodedGrad, LearnerCodec};
+        let mut a = server(Protocol::NSoftsync { n: 1 }, 2);
+        let mut b = server(Protocol::NSoftsync { n: 1 }, 2);
+        let g = FlatVec::from_vec(vec![0.5, -1.5]);
+        let mut codec = LearnerCodec::new(CodecSpec::TopK { frac: 0.5 }, 2, 1, 0);
+        let enc = codec.encode(&g);
+        let dense = enc.clone().into_dense();
+        let oa = a.push_encoded(0, enc, 0).unwrap();
+        let ob = b.push_gradient(0, &dense, 0).unwrap();
+        assert_eq!(oa.updated, ob.updated);
+        let oa = a.push_encoded(1, EncodedGrad::Dense(g.clone()), 0).unwrap();
+        let ob = b.push_gradient(1, &g, 0).unwrap();
+        assert!(oa.updated && ob.updated);
+        assert_eq!(a.weights().0.data, b.weights().0.data, "bitwise-identical fold");
+        assert_eq!(a.timestamp(), b.timestamp());
     }
 
     #[test]

@@ -357,6 +357,24 @@ impl ShardedServer {
         Ok(out)
     }
 
+    /// Decode-then-accumulate ([`crate::comm`]): decode one compressed
+    /// gradient and fold it through the normal push path. The decoded
+    /// vector is what enters the accumulators, so protocol quotas,
+    /// staleness accounting, and the single-clock analysis are oblivious
+    /// to the codec — a compressed gradient is one gradient with one
+    /// timestamp. Error-feedback residual bookkeeping stays learner-side
+    /// ([`crate::comm::codec::LearnerCodec`]); `Dense` payloads (the
+    /// `none` codec) pass through without a copy.
+    pub fn push_encoded(
+        &mut self,
+        learner: usize,
+        enc: crate::comm::codec::EncodedGrad,
+        grad_ts: Timestamp,
+    ) -> Result<PushOutcome> {
+        let dense = enc.into_dense();
+        self.push_gradient(learner, &dense, grad_ts)
+    }
+
     /// Timing-only variant: advances protocol/clock/epoch state (including
     /// every shard's clock, so per-shard stats stay truthful) without
     /// numeric work.

@@ -91,6 +91,14 @@ impl PsTree {
     pub fn root_fan_in(&self) -> usize {
         self.n_leaves
     }
+
+    /// The Adv\* weight-broadcast topology implied by this tree: one
+    /// subtree per root shard, each streaming its θ slice
+    /// ([`crate::comm::stripe`]). With a flat root (`root_shards` = 1)
+    /// the plan reproduces the classic single-tree broadcast exactly.
+    pub fn broadcast_plan(&self) -> crate::comm::stripe::StripePlan {
+        crate::comm::stripe::StripePlan::new(self.lambda, self.fanout, self.root_shards)
+    }
 }
 
 /// Leaf-level partial aggregation: averages `k` gradients then relays.
@@ -186,6 +194,18 @@ mod tests {
         }
         total.scale(1.0 / count as f32);
         assert_eq!(total.data, vec![6.0]); // (3+6+9)/3
+    }
+
+    #[test]
+    fn broadcast_plan_mirrors_the_root_tier() {
+        let flat = PsTree::new(32, 8).broadcast_plan();
+        assert_eq!(flat.shards, 1);
+        assert_eq!(flat.slice_bytes(300.0e6), 300.0e6);
+        let striped = PsTree::with_shards(32, 8, 4).broadcast_plan();
+        assert_eq!(striped.shards, 4);
+        assert_eq!(striped.slice_bytes(300.0e6), 75.0e6);
+        assert_eq!(striped.lambda, 32);
+        assert_eq!(striped.fanout, 8);
     }
 
     #[test]

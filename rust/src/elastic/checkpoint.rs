@@ -37,12 +37,37 @@ pub struct Restored {
     pub server: ShardedServer,
     /// Named RNG streams, resumed mid-sequence.
     pub rngs: BTreeMap<String, Rng>,
+    /// Per-learner codec state (error-feedback residuals + quantizer RNG
+    /// streams), when the captured run compressed gradients. `None` for
+    /// `compress none` runs and for pre-comm checkpoints, both of which
+    /// restore exactly as before.
+    pub comm: Option<crate::comm::codec::CommState>,
+    /// The adaptive-n controller mid-run (retuned n + epoch-window
+    /// baselines), when the captured run had the controller on. `None`
+    /// for open-loop runs and pre-PR-4 checkpoints.
+    pub adaptive: Option<crate::straggler::adaptive::AdaptiveController>,
 }
 
 impl Checkpoint {
     /// Capture the server plus named RNG streams at the current instant.
     /// `label` is free-form provenance (run label, epoch, …).
     pub fn capture(label: &str, server: &ShardedServer, rngs: &[(&str, &Rng)]) -> Checkpoint {
+        Self::capture_full(label, server, rngs, None, None)
+    }
+
+    /// [`Checkpoint::capture`] plus the optional run-state the elastic
+    /// subsystems own: the communication codec bundle (error-feedback
+    /// residuals, [`crate::comm::codec::CommState`]) and the adaptive-n
+    /// controller. Both fields are omitted from the document when absent,
+    /// so quiet runs produce byte-identical checkpoints to
+    /// [`Checkpoint::capture`] and old checkpoints stay loadable.
+    pub fn capture_full(
+        label: &str,
+        server: &ShardedServer,
+        rngs: &[(&str, &Rng)],
+        comm: Option<&crate::comm::codec::CommState>,
+        adaptive: Option<&crate::straggler::adaptive::AdaptiveController>,
+    ) -> Checkpoint {
         let rng_obj = Json::Obj(
             rngs.iter()
                 .map(|(name, rng)| {
@@ -50,14 +75,19 @@ impl Checkpoint {
                 })
                 .collect(),
         );
-        Checkpoint {
-            payload: Json::obj(vec![
-                ("version", Json::num(VERSION as f64)),
-                ("label", Json::str(label)),
-                ("server", server.to_json()),
-                ("rngs", rng_obj),
-            ]),
+        let mut pairs = vec![
+            ("version", Json::num(VERSION as f64)),
+            ("label", Json::str(label)),
+            ("server", server.to_json()),
+            ("rngs", rng_obj),
+        ];
+        if let Some(c) = comm {
+            pairs.push(("comm", c.to_json()));
         }
+        if let Some(a) = adaptive {
+            pairs.push(("adaptive", a.to_json()));
+        }
+        Checkpoint { payload: Json::obj(pairs) }
     }
 
     /// Rebuild the server and RNG streams. Fails on version mismatch, a
@@ -73,7 +103,21 @@ impl Checkpoint {
                 .with_context(|| format!("bad RNG state for stream {name:?}"))?;
             rngs.insert(name.clone(), Rng::from_state(state));
         }
-        Ok(Restored { server, rngs })
+        let comm = match self.payload.opt("comm") {
+            Some(j) => Some(
+                crate::comm::codec::CommState::from_json(j)
+                    .context("restoring codec state from checkpoint")?,
+            ),
+            None => None,
+        };
+        let adaptive = match self.payload.opt("adaptive") {
+            Some(j) => Some(
+                crate::straggler::adaptive::AdaptiveController::from_json(j)
+                    .context("restoring adaptive-n controller from checkpoint")?,
+            ),
+            None => None,
+        };
+        Ok(Restored { server, rngs, comm, adaptive })
     }
 
     /// Provenance label recorded at capture time.
@@ -194,6 +238,39 @@ mod tests {
         let r = back.restore().unwrap();
         assert_eq!(r.server.assemble_weights().data, orig.assemble_weights().data);
         assert!(r.rngs.is_empty());
+    }
+
+    #[test]
+    fn capture_full_roundtrips_comm_and_adaptive_state() {
+        use crate::comm::codec::{CodecSpec, CommState};
+        use crate::straggler::adaptive::{AdaptiveController, AdaptiveSpec};
+        let orig = server(2);
+        // codec mid-run: residuals + quantizer streams in a known state
+        let mut comm = CommState::build(CodecSpec::TopK { frac: 0.5 }, 3, 9, 13).unwrap();
+        let g = FlatVec::from_vec((0..9).map(|i| (i as f32 - 4.0) * 0.3).collect());
+        for l in 0..3 {
+            comm.encode(l, &g);
+        }
+        // controller mid-run: retuned away from its config n
+        let spec = AdaptiveSpec::parse("sigma:2").unwrap();
+        let mut ctl = AdaptiveController::new(&spec, 8).unwrap();
+        assert_eq!(ctl.epoch_tick(1, 10.0, 100, 800.0, 8), Some(4));
+        let ckpt = Checkpoint::capture_full("full", &orig, &[], Some(&comm), Some(&ctl));
+        let restored = Checkpoint::from_json_str(&ckpt.to_json_string())
+            .unwrap()
+            .restore()
+            .unwrap();
+        let mut back_comm = restored.comm.expect("comm state restored");
+        assert_eq!(back_comm.residual_norms(), comm.residual_norms());
+        let a = comm.encode(1, &g).into_dense();
+        let b = back_comm.encode(1, &g).into_dense();
+        assert_eq!(a.data, b.data, "codec continues bit-identically");
+        let back_ctl = restored.adaptive.expect("controller restored");
+        assert_eq!(back_ctl.n(), 4, "restored at the retuned n");
+        // a plain capture carries neither, and old documents restore clean
+        let plain = Checkpoint::capture("plain", &orig, &[]).restore().unwrap();
+        assert!(plain.comm.is_none());
+        assert!(plain.adaptive.is_none());
     }
 
     #[test]

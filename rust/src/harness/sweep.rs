@@ -46,6 +46,14 @@ pub struct PointResult {
     pub learner_utilization: Vec<f64>,
     /// Adaptive-n decisions, one per epoch (empty when the knob is off).
     pub adaptive: Vec<crate::straggler::adaptive::AdaptiveRecord>,
+    /// Per-learner bytes pushed onto the wire (compressed sizes).
+    pub comm_bytes_by_learner: Vec<f64>,
+    /// Final per-learner error-feedback residual norms (empty when the
+    /// `compress` knob is quiet).
+    pub residual_norms: Vec<f64>,
+    /// Bytes into / out of the root tier over the numeric run.
+    pub root_bytes_in: f64,
+    pub root_bytes_out: f64,
 }
 
 /// Runs grid points with shared compiled executables.
@@ -92,6 +100,7 @@ impl<'a> Sweep<'a> {
             checkpoint_every_updates: cfg.checkpoint_every,
             hetero: cfg.hetero.clone(),
             adaptive: cfg.adaptive.clone(),
+            compress: cfg.compress,
         };
         let theta0 = warmstarted(self, cfg)?;
         let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
@@ -151,6 +160,10 @@ impl<'a> Sweep<'a> {
             dropped_by_learner: result.dropped_by_learner,
             learner_utilization: result.learner_utilization,
             adaptive: result.adaptive,
+            comm_bytes_by_learner: result.comm_bytes_by_learner,
+            residual_norms: result.residual_norms,
+            root_bytes_in: result.root_bytes_in,
+            root_bytes_out: result.root_bytes_out,
         })
     }
 
@@ -214,6 +227,7 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         checkpoint_every_updates: 0,
         hetero: crate::straggler::hetero::HeteroSpec::none(),
         adaptive: crate::straggler::adaptive::AdaptiveSpec::none(),
+        compress: crate::comm::codec::CodecSpec::None,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();

@@ -19,6 +19,7 @@
 //! See DESIGN.md for the experiment index mapping every table and figure
 //! of the paper to a bench target.
 
+pub mod comm;
 pub mod config;
 pub mod coordinator;
 pub mod data;

@@ -44,6 +44,11 @@ stragglers:   --hetero SPEC (slow:<id>x<f>,lognormal:<σ>,pareto:<α>,
                 [sim/sweep/timing]
               --adaptive sigma:<target>[,band:<f>] (retune n-softsync's n
                 per epoch to hold ⟨σ⟩) [sim/sweep/timing]
+comm:         --compress none|topk:<frac>|qsgd:<bits> (gradient codec with
+                per-learner error-feedback residuals; shrinks push wire
+                time) [all engines]
+              --comm-csv FILE (sim: per-learner compressed-bytes +
+                residual-norm rows)
 ";
 
 fn main() {
@@ -81,6 +86,32 @@ fn run() -> Result<()> {
         other => {
             anyhow::bail!("unknown command {other:?}\n{USAGE}");
         }
+    }
+}
+
+/// One comm line (quiet codecs print nothing): the byte/ratio/residual
+/// summary, plus the root-tier in/out breakdown when the engine tracked
+/// it (the sim paths; the live engine's fabric is a real channel).
+fn print_comm(
+    compress: rudra::comm::codec::CodecSpec,
+    model_bytes: f64,
+    bytes_by_learner: &[f64],
+    residual_norms: &[f64],
+    root_in_out: Option<(f64, f64)>,
+) {
+    if compress.is_quiet() {
+        return;
+    }
+    let ratio =
+        rudra::comm::wire::WireModel::new(compress, model_bytes).compression_ratio();
+    let summary = rudra::stats::comm_summary(bytes_by_learner, residual_norms, ratio);
+    match root_in_out {
+        Some((r_in, r_out)) => println!(
+            "{summary}  (root bytes: {} in / {} out)",
+            rudra::util::fmt_bytes(r_in),
+            rudra::util::fmt_bytes(r_out)
+        ),
+        None => println!("{summary}"),
     }
 }
 
@@ -157,6 +188,8 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         shards: cfg.shards,
         log_every: args.u64_or("log-every", 50)?,
         elastic: live_elastic(cfg, args)?,
+        compress: cfg.compress,
+        checkpoint_every: cfg.checkpoint_every,
     };
     let ws = Workspace::open_default()?;
     let theta0 = ws.cnn_init()?;
@@ -176,6 +209,16 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     );
     if cfg.shards > 1 {
         println!("server: {}", rudra::stats::shard_update_summary(&result.shard_updates));
+    }
+    print_comm(
+        cfg.compress,
+        4.0 * result.theta.len() as f64,
+        &result.comm_bytes_by_learner,
+        &[],
+        None,
+    );
+    if result.checkpoints_taken > 0 {
+        println!("checkpoints: {} captured (live engine)", result.checkpoints_taken);
     }
     if !result.churn.is_empty() {
         println!(
@@ -231,6 +274,13 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
     if !p.adaptive.is_empty() {
         println!("{}", rudra::stats::adaptive_summary(&p.adaptive));
     }
+    print_comm(
+        cfg.compress,
+        ws.cnn_cost().bytes,
+        &p.comm_bytes_by_learner,
+        &p.residual_norms,
+        Some((p.root_bytes_in, p.root_bytes_out)),
+    );
     for e in &p.epochs {
         if let Some(err) = e.test_error_pct {
             println!(
@@ -252,6 +302,20 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
             log.row(&rudra::stats::log::epoch_row(e))?;
         }
         println!("wrote {} epoch rows to {path}", p.epochs.len());
+    }
+    if let Some(path) = args.get("comm-csv") {
+        let mut log = rudra::stats::log::CsvLog::create(
+            std::path::Path::new(path),
+            &rudra::stats::log::COMM_COLUMNS,
+        )?;
+        for l in 0..p.comm_bytes_by_learner.len() {
+            log.row(&rudra::stats::log::comm_row(
+                l,
+                p.comm_bytes_by_learner[l],
+                p.residual_norms.get(l).copied().unwrap_or(0.0),
+            ))?;
+        }
+        println!("wrote {} comm rows to {path}", p.comm_bytes_by_learner.len());
     }
     Ok(())
 }
@@ -295,6 +359,7 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.checkpoint_every_updates = cfg.checkpoint_every;
     sim_cfg.hetero = cfg.hetero.clone();
     sim_cfg.adaptive = cfg.adaptive.clone();
+    sim_cfg.compress = cfg.compress;
     let r = run_sim(
         &sim_cfg,
         rudra::params::FlatVec::zeros(0),
@@ -335,6 +400,13 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     if !r.adaptive.is_empty() {
         println!("{}", rudra::stats::adaptive_summary(&r.adaptive));
     }
+    print_comm(
+        cfg.compress,
+        sim_cfg.model.bytes,
+        &r.comm_bytes_by_learner,
+        &r.residual_norms,
+        Some((r.root_bytes_in, r.root_bytes_out)),
+    );
     let _ = Protocol::Hardsync; // referenced for doc completeness
     Ok(())
 }

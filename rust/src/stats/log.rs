@@ -60,6 +60,20 @@ pub fn epoch_row(e: &crate::coordinator::engine_sim::EpochStat) -> Vec<String> {
     ]
 }
 
+/// Canonical per-learner communication CSV header: bytes pushed onto the
+/// wire (compressed sizes) and the final error-feedback residual norm
+/// (0 when no codec is on or residuals are not engine-observable).
+pub const COMM_COLUMNS: [&str; 3] = ["learner", "compressed_bytes", "residual_norm"];
+
+/// Render one learner's comm stats as a row under [`COMM_COLUMNS`].
+pub fn comm_row(learner: usize, compressed_bytes: f64, residual_norm: f64) -> Vec<String> {
+    vec![
+        learner.to_string(),
+        format!("{compressed_bytes}"),
+        format!("{residual_norm}"),
+    ]
+}
+
 /// Append-mode JSONL writer.
 pub struct JsonlLog {
     file: std::fs::File,
@@ -118,6 +132,19 @@ mod tests {
         let dir = std::env::temp_dir().join("rudra_test_log");
         std::fs::create_dir_all(&dir).unwrap();
         let mut log = CsvLog::create(&dir.join("epochs.csv"), &EPOCH_COLUMNS).unwrap();
+        log.row(&row).unwrap();
+    }
+
+    #[test]
+    fn comm_rows_fit_the_header() {
+        let row = comm_row(3, 48.0e6, 0.25);
+        assert_eq!(row.len(), COMM_COLUMNS.len());
+        assert_eq!(row[0], "3");
+        assert_eq!(row[1], "48000000");
+        assert_eq!(row[2], "0.25");
+        let dir = std::env::temp_dir().join("rudra_test_log");
+        std::fs::create_dir_all(&dir).unwrap();
+        let mut log = CsvLog::create(&dir.join("comm.csv"), &COMM_COLUMNS).unwrap();
         log.row(&row).unwrap();
     }
 

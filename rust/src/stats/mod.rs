@@ -190,6 +190,29 @@ pub fn adaptive_summary(log: &[crate::straggler::adaptive::AdaptiveRecord]) -> S
     )
 }
 
+/// One-line report of a compressed run's communication: total bytes
+/// pushed, the codec's dense-to-compressed ratio, and (when the engine
+/// owns the codecs — the sim path) the worst per-learner error-feedback
+/// residual, e.g. `comm: 48.0MB pushed (50.0× vs dense), max residual
+/// ‖r‖ 0.412`. Pass an empty `residual_norms` when residuals are not
+/// observable (the live engine keeps them learner-thread-local).
+pub fn comm_summary(
+    bytes_by_learner: &[f64],
+    residual_norms: &[f64],
+    compression_ratio: f64,
+) -> String {
+    let total: f64 = bytes_by_learner.iter().sum();
+    let mut out = format!(
+        "comm: {} pushed ({compression_ratio:.1}× vs dense)",
+        crate::util::fmt_bytes(total)
+    );
+    if !residual_norms.is_empty() {
+        let max = residual_norms.iter().cloned().fold(0.0f64, f64::max);
+        out.push_str(&format!(", max residual ‖r‖ {max:.3}"));
+    }
+    out
+}
+
 /// One-line report of per-shard applyUpdate counts from a sharded-server
 /// run. Lockstep shards render compactly (`4 shards × 120 updates`); any
 /// divergence — which would indicate a routing bug — is spelled out in
@@ -256,6 +279,18 @@ mod tests {
         assert!(s.contains("2 retunes"), "{s}");
         assert!(s.contains("n 8 → 2"), "{s}");
         assert!(s.contains("7.6 → 2.1"), "{s}");
+    }
+
+    #[test]
+    fn comm_summary_renders_bytes_ratio_and_residuals() {
+        let s = comm_summary(&[24.0e6, 24.0e6], &[0.1, 0.412], 50.0);
+        assert!(s.contains("48.0MB"), "{s}");
+        assert!(s.contains("50.0× vs dense"), "{s}");
+        assert!(s.contains("0.412"), "{s}");
+        // live engine path: no residual column
+        let s = comm_summary(&[1.0e3], &[], 6.4);
+        assert!(s.contains("6.4×"), "{s}");
+        assert!(!s.contains("residual"), "{s}");
     }
 
     #[test]

@@ -149,6 +149,43 @@ impl AdaptiveController {
         self.n
     }
 
+    /// Serialize the controller's feedback state for checkpointing: the
+    /// retuned n plus the epoch-window baselines (cumulative count/sum
+    /// and the last boundary's virtual time). Without this a restore
+    /// would rebuild the controller at the *config* n and with zeroed
+    /// baselines — silently undoing every retune and mis-differencing
+    /// the first post-restore window (the PR-4 regression). The decision
+    /// log is run-local reporting and is not serialized.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        Json::obj(vec![
+            ("target", Json::num(self.target)),
+            ("deadband", Json::num(self.deadband)),
+            ("n", Json::num(self.n as f64)),
+            ("last_count", Json::num(self.last_count as f64)),
+            ("last_sum", Json::num(self.last_sum)),
+            ("last_epoch_time", Json::num(self.last_epoch_time)),
+        ])
+    }
+
+    /// Rebuild a controller from [`AdaptiveController::to_json`] output
+    /// (self-contained: the target/deadband ride along, so restore needs
+    /// no config). The log starts empty — decisions before the
+    /// checkpoint were already reported by the run that made them.
+    pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<AdaptiveController> {
+        let n = j.get("n")?.as_usize()?;
+        anyhow::ensure!(n >= 1, "adaptive checkpoint with n = 0");
+        Ok(AdaptiveController {
+            target: j.get("target")?.as_f64()?,
+            deadband: j.get("deadband")?.as_f64()?,
+            n,
+            last_count: j.get("last_count")?.as_u64()?,
+            last_sum: j.get("last_sum")?.as_f64()?,
+            last_epoch_time: j.get("last_epoch_time")?.as_f64()?,
+            log: Vec::new(),
+        })
+    }
+
     /// Membership shrink: the active quorum fell to `active`, possibly
     /// below the controller's current n — follow it down (n ≤ λ_active is
     /// the checked quota's feasibility rule). Returns the new n when the
@@ -290,6 +327,38 @@ mod tests {
         // never below 1, even for a pathological quorum report
         assert_eq!(c.clamp_to_lambda(0), Some(1));
         assert_eq!(c.n(), 1);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_retuned_n_and_window_baselines() {
+        // Regression (PR 4): checkpoints never carried the controller's
+        // state, so a restore reset the retuned n to the config value and
+        // zeroed the window baselines.
+        let spec = AdaptiveSpec::parse("sigma:2,band:0.1").unwrap();
+        let mut c = AdaptiveController::new(&spec, 8).unwrap();
+        assert_eq!(c.epoch_tick(1, 10.0, 100, 800.0, 8), Some(4), "retuned 8 → 4");
+        let text = c.to_json().to_string();
+        let mut back =
+            AdaptiveController::from_json(&crate::util::json::Json::parse(&text).unwrap())
+                .unwrap();
+        assert_eq!(back.n(), 4, "restore must keep the retuned n, not the config n");
+        // both controllers difference the next epoch window identically
+        let a = c.epoch_tick(2, 20.0, 200, 1200.0, 8);
+        let b = back.epoch_tick(2, 20.0, 200, 1200.0, 8);
+        assert_eq!(a, b);
+        assert_eq!(c.n(), back.n());
+        let orig_sigma = c.log.last().unwrap().observed_sigma;
+        let back_sigma = back.log.last().unwrap().observed_sigma;
+        assert!(
+            (orig_sigma - back_sigma).abs() < 1e-12,
+            "window baselines must survive the round trip"
+        );
+        assert!((c.log.last().unwrap().epoch_secs - 10.0).abs() < 1e-12);
+        // garbage is rejected
+        assert!(AdaptiveController::from_json(
+            &crate::util::json::Json::parse(r#"{"n": 0}"#).unwrap()
+        )
+        .is_err());
     }
 
     #[test]

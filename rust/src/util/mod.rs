@@ -27,6 +27,19 @@ pub fn fmt_secs(s: f64) -> String {
     }
 }
 
+/// Format a byte count as a human-readable string (SI multiples).
+pub fn fmt_bytes(b: f64) -> String {
+    if b < 1e3 {
+        format!("{b:.0}B")
+    } else if b < 1e6 {
+        format!("{:.1}kB", b / 1e3)
+    } else if b < 1e9 {
+        format!("{:.1}MB", b / 1e6)
+    } else {
+        format!("{:.2}GB", b / 1e9)
+    }
+}
+
 /// Mean of a slice (0.0 for empty input).
 pub fn mean(xs: &[f64]) -> f64 {
     if xs.is_empty() {
@@ -73,6 +86,14 @@ mod tests {
         assert_eq!(fmt_secs(2.0), "2.00s");
         assert_eq!(fmt_secs(180.0), "3.0min");
         assert_eq!(fmt_secs(7200.0), "2.00h");
+    }
+
+    #[test]
+    fn fmt_bytes_ranges() {
+        assert_eq!(fmt_bytes(512.0), "512B");
+        assert_eq!(fmt_bytes(2.5e3), "2.5kB");
+        assert_eq!(fmt_bytes(300.0e6), "300.0MB");
+        assert_eq!(fmt_bytes(4.8e9), "4.80GB");
     }
 
     #[test]

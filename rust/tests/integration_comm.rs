@@ -1,0 +1,289 @@
+//! Integration tests for the communication subsystem (PR 4): codec
+//! bit-identity against the uncompressed baseline, error-feedback
+//! losslessness, checkpointed residual/controller state, and the
+//! shard-striped Adv\* broadcast — all through the public engine APIs.
+
+use rudra::comm::codec::{CodecSpec, LearnerCodec};
+use rudra::comm::stripe::StripePlan;
+use rudra::comm::wire::WireModel;
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::util::prop::check;
+use rudra::util::rng::Rng;
+
+const DIM: usize = 6;
+
+fn tiny_model() -> ModelCost {
+    ModelCost {
+        name: "tiny",
+        flops_per_sample: 1.0e6,
+        bytes: 1.0e3,
+        samples_per_epoch: 96,
+    }
+}
+
+fn cfg(
+    protocol: Protocol,
+    arch: Arch,
+    lambda: usize,
+    shards: usize,
+    compress: &str,
+) -> SimConfig {
+    let mut c = SimConfig::paper(protocol, arch, 4, lambda, 2, tiny_model());
+    c.seed = 13;
+    c.shards = shards;
+    c.compress = CodecSpec::parse(compress).unwrap();
+    c
+}
+
+fn run_numeric(c: &SimConfig) -> SimResult {
+    let mut provider = MockProvider::new(vec![0.25; DIM]);
+    run_sim(
+        c,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0, -1.0, 2.0]),
+        Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, DIM),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        Some(&mut provider),
+        None,
+    )
+    .unwrap()
+}
+
+/// Satellite: `compress none` (no codec built) and `topk:1.0` (codec
+/// built, everything transmitted, residual permanently drained) must be
+/// bit-identical to each other — same virtual time, same event count,
+/// same final weights — across all three protocols and S ∈ {1, 4}.
+#[test]
+fn compress_none_and_topk_full_are_bit_identical() {
+    for protocol in [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::Async] {
+        for shards in [1usize, 4] {
+            let base = run_numeric(&cfg(protocol, Arch::Base, 4, shards, "none"));
+            let full = run_numeric(&cfg(protocol, Arch::Base, 4, shards, "topk:1.0"));
+            let tag = format!("{} S={shards}", protocol.label());
+            assert_eq!(base.sim_seconds, full.sim_seconds, "{tag}: sim time");
+            assert_eq!(base.events_processed, full.events_processed, "{tag}: events");
+            assert_eq!(base.updates, full.updates, "{tag}: updates");
+            assert_eq!(
+                base.theta.unwrap().data,
+                full.theta.unwrap().data,
+                "{tag}: weights must match bit for bit"
+            );
+            // topk:1.0 never accumulates a residual
+            let norms = full.residual_norms;
+            assert!(norms.iter().all(|&r| r == 0.0), "{tag}: {norms:?}");
+            // and its wire accounting equals the dense sizes
+            assert_eq!(base.root_bytes_in, full.root_bytes_in, "{tag}: bytes in");
+            assert_eq!(base.root_bytes_out, full.root_bytes_out, "{tag}: bytes out");
+        }
+    }
+}
+
+/// The Adv (leaf-relay) path is also codec-transparent at `topk:1.0`.
+#[test]
+fn adv_relay_path_bit_identical_at_full_fraction() {
+    let base = run_numeric(&cfg(Protocol::NSoftsync { n: 1 }, Arch::Adv, 8, 2, "none"));
+    let full = run_numeric(&cfg(Protocol::NSoftsync { n: 1 }, Arch::Adv, 8, 2, "topk:1.0"));
+    assert_eq!(base.sim_seconds, full.sim_seconds);
+    assert_eq!(base.theta.unwrap().data, full.theta.unwrap().data);
+    assert_eq!(base.root_bytes_in, full.root_bytes_in);
+}
+
+/// Satellite: error feedback makes top-k lossless in aggregate — over a
+/// full accumulation cycle (T gradients plus the ⌈n/k⌉ drain encodes
+/// that flush the residual), the transmitted mass equals the input mass
+/// per coordinate, and the residual ends exactly empty.
+#[test]
+fn prop_topk_error_feedback_lossless_over_a_cycle() {
+    check(
+        "topk_cycle",
+        17,
+        40,
+        |rng| {
+            let n = 4 + rng.usize_below(60);
+            let frac = 0.05 + rng.f64() * 0.95;
+            let steps = 1 + rng.usize_below(12);
+            (n, frac, steps, rng.next_u64())
+        },
+        |&(n, frac, steps, seed)| {
+            let mut codec = LearnerCodec::new(CodecSpec::TopK { frac }, n, seed, 0);
+            let mut rng = Rng::new(seed);
+            let mut in_sum = vec![0.0f64; n];
+            let mut out_sum = vec![0.0f64; n];
+            for _ in 0..steps {
+                let g = FlatVec::from_vec(
+                    (0..n).map(|_| rng.range(-1.0, 1.0) as f32).collect(),
+                );
+                for (s, &x) in in_sum.iter_mut().zip(g.data.iter()) {
+                    *s += x as f64;
+                }
+                let dec = codec.encode(&g).into_dense();
+                for (s, &x) in out_sum.iter_mut().zip(dec.data.iter()) {
+                    *s += x as f64;
+                }
+            }
+            // drain: zero gradients only move residual mass out; each
+            // encode transmits k = ⌈frac·n⌉ entries, so ⌈n/k⌉ suffices
+            let k = ((frac * n as f64).ceil() as usize).clamp(1, n);
+            let zero = FlatVec::zeros(n);
+            for _ in 0..n.div_ceil(k) {
+                let dec = codec.encode(&zero).into_dense();
+                for (s, &x) in out_sum.iter_mut().zip(dec.data.iter()) {
+                    *s += x as f64;
+                }
+            }
+            if codec.residual_norm() != 0.0 {
+                return Err(format!(
+                    "residual not drained: ‖r‖ = {}",
+                    codec.residual_norm()
+                ));
+            }
+            for i in 0..n {
+                let err = (in_sum[i] - out_sum[i]).abs();
+                // partitions are exact in f32; only the f32 g ⊕ r adds
+                // round, so the aggregate agrees to f32 precision
+                if err > 1e-4 * (1.0 + in_sum[i].abs()) {
+                    return Err(format!(
+                        "coordinate {i}: in {} vs out {} (err {err})",
+                        in_sum[i], out_sum[i]
+                    ));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Compressed runs converge on the quadratic bowl (error feedback keeps
+/// the descent direction unbiased in aggregate) and book their traffic.
+#[test]
+fn compressed_numeric_runs_converge_and_account_bytes() {
+    for compress in ["topk:0.25", "qsgd:4"] {
+        let r = run_numeric(&cfg(Protocol::NSoftsync { n: 1 }, Arch::Base, 4, 2, compress));
+        assert!(r.updates > 0, "{compress}");
+        let theta = r.theta.unwrap();
+        assert!(theta.is_finite(), "{compress}");
+        // target is 0.25 everywhere; initial distance ≈ 3.9
+        let dist = {
+            let mut d = theta.clone();
+            d.axpy(-1.0, &FlatVec::from_vec(vec![0.25; DIM]));
+            d.norm()
+        };
+        assert!(dist < 3.5, "{compress}: distance to target {dist}");
+        assert_eq!(r.comm_bytes_by_learner.len(), 4, "{compress}");
+        assert!(r.comm_bytes_by_learner.iter().all(|&b| b > 0.0), "{compress}");
+        assert_eq!(r.residual_norms.len(), 4, "{compress}");
+        // compressed ingress is cheaper than the dense run's
+        let dense = run_numeric(&cfg(Protocol::NSoftsync { n: 1 }, Arch::Base, 4, 2, "none"));
+        assert!(
+            r.root_bytes_in < dense.root_bytes_in,
+            "{compress}: {} vs {}",
+            r.root_bytes_in,
+            dense.root_bytes_in
+        );
+    }
+}
+
+/// Checkpoints taken mid-run carry the codec residuals and the adaptive
+/// controller (satellite: the controller's retuned n used to be lost).
+#[test]
+fn checkpoint_carries_comm_and_adaptive_state() {
+    let mut c = cfg(Protocol::NSoftsync { n: 4 }, Arch::Base, 8, 2, "qsgd:4");
+    c.epochs = 4;
+    c.adaptive = AdaptiveSpec::parse("sigma:1,band:0.05").unwrap();
+    c.checkpoint_every_updates = 5;
+    let mut provider = MockProvider::new(vec![0.25; DIM]);
+    let r = run_sim(
+        &c,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0, -1.0, 2.0]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, DIM),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        Some(&mut provider),
+        None,
+    )
+    .unwrap();
+    assert!(r.checkpoints_taken > 0);
+    let restored = r.last_checkpoint.expect("checkpoint captured").restore().unwrap();
+    let comm = restored.comm.expect("codec state travels with the checkpoint");
+    assert_eq!(comm.residual_norms().len(), 8, "one codec per learner slot");
+    let ctl = restored.adaptive.expect("controller travels with the checkpoint");
+    match restored.server.protocol() {
+        Protocol::NSoftsync { n } => assert_eq!(
+            ctl.n(),
+            n,
+            "restored controller must agree with the restored server's retuned n"
+        ),
+        other => panic!("unexpected protocol {other:?}"),
+    }
+    // the controller actually moved off its configured n = 4 by then
+    assert!(ctl.n() < 4, "σ-target 1 must have stepped n down, got {}", ctl.n());
+}
+
+/// Smoke (CI: comm-smoke job): the acceptance-criteria configuration in
+/// miniature — topk:0.01 + shard-striped Adv\* at S = 4 on the Table 1
+/// adversarial model moves an order of magnitude fewer root bytes than
+/// the flat uncompressed push, and still completes.
+#[test]
+fn comm_smoke() {
+    let mk = |arch: Arch, shards: usize, compress: &str| {
+        let mut c = SimConfig::paper(
+            Protocol::NSoftsync { n: 1 },
+            arch,
+            4,
+            16,
+            1,
+            ModelCost::adversarial_300mb(),
+        );
+        c.seed = 5;
+        c.shards = shards;
+        c.max_updates = Some(20);
+        c.compress = CodecSpec::parse(compress).unwrap();
+        run_sim(
+            &c,
+            FlatVec::zeros(0),
+            Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+            LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+            None,
+            None,
+        )
+        .unwrap()
+    };
+    let flat = mk(Arch::Base, 4, "none");
+    let striped = mk(Arch::AdvStar, 4, "topk:0.01");
+    assert!(flat.updates > 0 && striped.updates > 0);
+    let per_update =
+        |r: &SimResult| (r.root_bytes_in + r.root_bytes_out) / r.updates.max(1) as f64;
+    assert!(
+        per_update(&striped) * 10.0 <= per_update(&flat),
+        "compressed+striped root traffic must be ≥10× below flat dense: {} vs {}",
+        per_update(&striped),
+        per_update(&flat)
+    );
+    assert!(
+        striped.sim_seconds < flat.sim_seconds,
+        "less wire time must mean less simulated time: {} vs {}",
+        striped.sim_seconds,
+        flat.sim_seconds
+    );
+}
+
+/// The stripe plan the engines consume: S = 1 reproduces the legacy
+/// broadcast period bit for bit; S = 4 divides the payload per hop.
+#[test]
+fn stripe_plan_consistency_with_wire_model() {
+    let cluster = rudra::netsim::cluster::ClusterSpec::p775();
+    let m = 300.0e6;
+    let flat = StripePlan::new(16, 8, 1).period(&cluster, m);
+    let striped = StripePlan::new(16, 8, 4).period(&cluster, m);
+    assert!(striped < flat);
+    // wire model: pulls stay dense regardless of codec
+    let w = WireModel::new(CodecSpec::TopK { frac: 0.01 }, m);
+    assert_eq!(w.pull_bytes(), m);
+    assert!(w.push_bytes() < m * 0.03);
+}

@@ -59,6 +59,7 @@ fn elastic_cfg(
         checkpoint_every_updates: 0,
         hetero: HeteroSpec::none(),
         adaptive: AdaptiveSpec::none(),
+        compress: rudra::comm::codec::CodecSpec::None,
     }
 }
 

@@ -53,6 +53,7 @@ fn straggler_cfg(
         checkpoint_every_updates: 0,
         hetero: HeteroSpec::parse(hetero).unwrap(),
         adaptive: AdaptiveSpec::none(),
+        compress: rudra::comm::codec::CodecSpec::None,
     }
 }
 

@@ -105,6 +105,8 @@ fn live_engine_trains_below_chance() {
         shards: 1,
         log_every: 0,
         elastic: None,
+        compress: rudra::comm::codec::CodecSpec::None,
+        checkpoint_every: 0,
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
