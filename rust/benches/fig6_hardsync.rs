@@ -21,7 +21,10 @@ fn main() {
     paper::banner("Figure 6 — (σ,μ,λ) tradeoff curves, hardsync");
     let ws = Workspace::open_default().expect("run `make artifacts` first");
     let (mus, lambdas, epochs) = paper::grid_axes();
-    let sweep = Sweep::new(&ws, epochs);
+    let mut sweep = Sweep::new(&ws, epochs);
+    // grid points run on scoped worker threads (RUDRA_JOBS overrides;
+    // 0/unset = available parallelism) — results are bit-identical
+    sweep.jobs = rudra::harness::sweep::env_jobs();
     let results = sweep.run_grid(&mus, &lambdas, |_| Protocol::Hardsync).expect("grid");
 
     let mut t = Table::new(&["μ", "λ", "test err", "sim time (paper geom)", "σ"]);

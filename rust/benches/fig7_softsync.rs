@@ -27,7 +27,9 @@ fn main() {
     ];
     for (name, proto_of) in families {
         println!("--- Figure 7 ({name}) ---");
-        let sweep = Sweep::new(&ws, epochs);
+        let mut sweep = Sweep::new(&ws, epochs);
+        // parallel point executor (RUDRA_JOBS overrides; bit-identical)
+        sweep.jobs = rudra::harness::sweep::env_jobs();
         let results = sweep.run_grid(&mus, &lambdas, proto_of).expect("grid");
         let mut t = Table::new(&["μ", "λ", "⟨σ⟩", "test err", "sim time (paper geom)"]);
         for r in &results {
@@ -69,7 +71,8 @@ fn main() {
     let (mus, lambdas, _) = paper::grid_axes();
     let min_mu = mus[0];
     let max_l = *lambdas.last().unwrap();
-    let sweep = Sweep::new(&ws, 1);
+    let mut sweep = Sweep::new(&ws, 1);
+    sweep.jobs = rudra::harness::sweep::env_jobs();
     let t_lambda = sweep
         .run_grid(&[min_mu], &[max_l], |l| Protocol::NSoftsync { n: l })
         .unwrap()[0]

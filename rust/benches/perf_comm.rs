@@ -65,14 +65,13 @@ fn main() {
         "root B/update",
         "vs flat dense ×",
     ]);
-    // the flat uncompressed push at S = 4: the acceptance baseline
-    let baseline = run_point(Arch::Base, 4, "none", Protocol::NSoftsync { n: 1 });
-    let base_bpu = root_bytes_per_update(&baseline);
-
-    let mut accept: Option<f64> = None;
-    for (codec, arch, shards, protocol) in [
-        ("none", Arch::Base, 1, Protocol::NSoftsync { n: 1 }),
+    // Every point (baseline first) reports virtual seconds and byte
+    // counters, so the sweep fans out over the parallel point executor
+    // (RUDRA_JOBS overrides; results land in grid order, bit-identical).
+    let grid = [
+        // the flat uncompressed push at S = 4: the acceptance baseline
         ("none", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
+        ("none", Arch::Base, 1, Protocol::NSoftsync { n: 1 }),
         ("qsgd:4", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
         ("topk:0.01", Arch::Base, 4, Protocol::NSoftsync { n: 1 }),
         ("none", Arch::AdvStar, 4, Protocol::NSoftsync { n: 1 }),
@@ -81,9 +80,21 @@ fn main() {
         ("topk:0.01", Arch::AdvStar, 4, Protocol::NSoftsync { n: 4 }),
         ("qsgd:4", Arch::Base, 4, Protocol::Hardsync),
         ("topk:0.01", Arch::Base, 4, Protocol::Hardsync),
-    ] {
-        let r = run_point(arch, shards, codec, protocol);
-        let bpu = root_bytes_per_update(&r);
+    ];
+    let results = rudra::harness::sweep::run_indexed(
+        rudra::harness::sweep::env_jobs(),
+        grid.len(),
+        |i| {
+            let (codec, arch, shards, protocol) = grid[i];
+            Ok(run_point(arch, shards, codec, protocol))
+        },
+    )
+    .expect("codec sweep");
+    let base_bpu = root_bytes_per_update(&results[0]);
+
+    let mut accept: Option<f64> = None;
+    for (&(codec, arch, shards, protocol), r) in grid.iter().zip(results.iter()) {
+        let bpu = root_bytes_per_update(r);
         if codec == "topk:0.01"
             && arch == Arch::AdvStar
             && shards == 4

@@ -55,32 +55,42 @@ fn main() {
         "final λ",
         "μ range",
     ]);
-    for protocol in [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::Async] {
-        for rate in [0.0, 25.0, 100.0] {
-            let r = run_point(protocol, rate);
-            let mean_rec = if r.recovery_secs.is_empty() {
-                "—".to_string()
-            } else {
-                fmt_secs(rudra::util::mean(&r.recovery_secs))
-            };
-            let mu_range = if r.rescales.is_empty() {
-                "128".to_string()
-            } else {
-                let lo = r.rescales.iter().map(|x| x.mu).min().unwrap();
-                let hi = r.rescales.iter().map(|x| x.mu).max().unwrap();
-                format!("{lo}–{hi}")
-            };
-            t.row(vec![
-                protocol.label(),
-                f(rate, 0),
-                fmt_secs(r.sim_seconds),
-                r.updates.to_string(),
-                r.churn.len().to_string(),
-                mean_rec,
-                r.final_active_lambda.to_string(),
-                mu_range,
-            ]);
-        }
+    // churn sims report virtual seconds and deterministic per-seed kill
+    // sequences, so the 3 × 3 grid fans out over the parallel point
+    // executor (RUDRA_JOBS overrides; bit-identical, grid order kept)
+    let protocols = [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::Async];
+    let rates = [0.0, 25.0, 100.0];
+    let results = rudra::harness::sweep::run_indexed(
+        rudra::harness::sweep::env_jobs(),
+        protocols.len() * rates.len(),
+        |i| Ok(run_point(protocols[i / rates.len()], rates[i % rates.len()])),
+    )
+    .expect("churn sweep");
+    for (i, r) in results.iter().enumerate() {
+        let protocol = protocols[i / rates.len()];
+        let rate = rates[i % rates.len()];
+        let mean_rec = if r.recovery_secs.is_empty() {
+            "—".to_string()
+        } else {
+            fmt_secs(rudra::util::mean(&r.recovery_secs))
+        };
+        let mu_range = if r.rescales.is_empty() {
+            "128".to_string()
+        } else {
+            let lo = r.rescales.iter().map(|x| x.mu).min().unwrap();
+            let hi = r.rescales.iter().map(|x| x.mu).max().unwrap();
+            format!("{lo}–{hi}")
+        };
+        t.row(vec![
+            protocol.label(),
+            f(rate, 0),
+            fmt_secs(r.sim_seconds),
+            r.updates.to_string(),
+            r.churn.len().to_string(),
+            mean_rec,
+            r.final_active_lambda.to_string(),
+            mu_range,
+        ]);
     }
     t.print();
 

@@ -1,17 +1,38 @@
 //! Hot-path micro-benchmarks (manual timing — criterion is not in the
 //! offline vendor set). Measures the L3 components that sit on the
-//! per-gradient path, plus the PJRT grad-execution latency per μ, which
-//! feeds the §Perf log in EXPERIMENTS.md.
+//! per-gradient path, the sim engine's event throughput, the serial-vs-
+//! parallel grid wall time, and the PJRT grad-execution latency per μ.
+//!
+//! Machine-readable output: every number is also written to
+//! `BENCH_hotpath.json` (override the path with `RUDRA_BENCH_JSON`), so
+//! the perf trajectory can be compared *across PRs* instead of living in
+//! scrollback. CI's `perf-smoke` job runs this bench in quick mode
+//! (`RUDRA_QUICK=1` — fewer iterations, a capped grid) and uploads the
+//! JSON as a build artifact.
+//!
+//! Acceptance assertion (parallel sweep executor): a 4-point timing-only
+//! grid at `jobs = 4` must run ≥ 1.5× faster than `jobs = 1` whenever
+//! the host has ≥ 2 cores (skipped on single-core runners), and both
+//! grids must agree bit-for-bit.
 
 use std::time::Instant;
 
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
 use rudra::coordinator::protocol::{Accumulator, Protocol};
 use rudra::coordinator::server::{ParameterServer, ServerConfig};
+use rudra::coordinator::tree::Arch;
+use rudra::harness::sweep::{default_jobs, run_indexed};
+use rudra::netsim::cost::ModelCost;
 use rudra::netsim::event::EventQueue;
 use rudra::params::lr::{LrPolicy, Modulation, Schedule};
 use rudra::params::optimizer::{Optimizer, OptimizerKind};
 use rudra::params::FlatVec;
 use rudra::stats::table::Table;
+use rudra::util::json::Json;
+
+fn quick() -> bool {
+    std::env::var("RUDRA_QUICK").map(|v| v == "1").unwrap_or(false)
+}
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
     // warmup
@@ -26,17 +47,64 @@ fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
     (name.to_string(), per)
 }
 
+/// One grid point for the serial-vs-parallel comparison: timing-only
+/// 1-softsync on the ImageNet geometry (a real per-figure workload shape,
+/// heavy enough that thread overhead is invisible). All four points are
+/// identical by construction so the load balance is perfect and the
+/// speedup reflects the executor, not the grid.
+fn grid_point() -> SimResult {
+    let mut cfg = SimConfig::paper(
+        Protocol::NSoftsync { n: 1 },
+        Arch::Base,
+        16,
+        16,
+        1,
+        ModelCost::imagenet(),
+    );
+    cfg.seed = 13;
+    if quick() {
+        cfg.max_updates = Some(1500);
+    }
+    run_sim(
+        &cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+        None,
+        None,
+    )
+    .expect("timing sim")
+}
+
+/// Wall-clock seconds for the 4-point grid at the given job count, plus
+/// the per-point (sim_seconds, updates, events) for the bit-identity
+/// check.
+fn grid_wall(jobs: usize) -> (f64, Vec<(f64, u64, u64)>) {
+    let start = Instant::now();
+    let results = run_indexed(jobs, 4, |_| {
+        let r = grid_point();
+        Ok((r.sim_seconds, r.updates, r.events_processed))
+    })
+    .expect("grid");
+    (start.elapsed().as_secs_f64(), results)
+}
+
 fn main() {
-    println!("=== perf_hotpath — L3 micro-benchmarks (manual timing) ===\n");
+    let quick_mode = quick();
+    println!(
+        "=== perf_hotpath — L3 micro-benchmarks (manual timing{}) ===\n",
+        if quick_mode { ", quick mode" } else { "" }
+    );
     let n_params = 24_234; // the synthetic CNN's size
     let big_params = 1_000_000; // ~the LM's order
+    let kernel_iters = if quick_mode { 200 } else { 2000 };
     let mut rows = Vec::new();
 
     // 1. PS applyUpdate (axpy) at both model sizes.
     for (label, p) in [("axpy 24k (CNN)", n_params), ("axpy 1M", big_params)] {
         let mut theta = FlatVec::from_vec(vec![0.5; p]);
         let grad = FlatVec::from_vec(vec![0.001; p]);
-        rows.push(bench(label, 2000, || theta.axpy(-0.01, &grad)));
+        rows.push(bench(label, kernel_iters, || theta.axpy(-0.01, &grad)));
     }
 
     // 2. Momentum and AdaGrad update kernels.
@@ -47,7 +115,7 @@ fn main() {
         let mut opt = Optimizer::new(kind, 0.0, n_params);
         let mut theta = FlatVec::from_vec(vec![0.5; n_params]);
         let grad = FlatVec::from_vec(vec![0.001; n_params]);
-        rows.push(bench(label, 2000, || opt.apply(&mut theta, &grad, 0.01)));
+        rows.push(bench(label, kernel_iters, || opt.apply(&mut theta, &grad, 0.01)));
     }
 
     // 3. Full server push (accumulate + update under 1-softsync, λ=8).
@@ -68,31 +136,33 @@ fn main() {
         );
         let grad = FlatVec::from_vec(vec![0.001; n_params]);
         let mut i = 0usize;
-        rows.push(bench("server push+update 24k (async)", 2000, || {
+        rows.push(bench("server push+update 24k (async)", kernel_iters, || {
             let ts = server.timestamp();
             server.push_gradient(i % 8, &grad, ts).unwrap();
             i += 1;
         }));
     }
 
-    // 4. Accumulator push throughput.
+    // 4. Accumulator push throughput (allocation-free drain path).
     {
         let mut acc = Accumulator::new(Protocol::NSoftsync { n: 1 }, 1024, n_params);
         let grad = FlatVec::from_vec(vec![0.001; n_params]);
+        let mut avg = FlatVec::zeros(0);
+        let mut clock = Vec::new();
         let mut i = 0usize;
-        rows.push(bench("accumulator push 24k", 2000, || {
+        rows.push(bench("accumulator push 24k", kernel_iters, || {
             acc.push(i % 1024, &grad, 0).unwrap();
             i += 1;
             if acc.ready() {
-                let _ = acc.take_update();
+                acc.drain_update(&mut avg, &mut clock);
             }
         }));
     }
 
     // 5. Event-queue throughput (the sim engine's backbone).
     {
-        let mut q: EventQueue<u32> = EventQueue::new();
-        rows.push(bench("event queue push+pop x1000", 500, || {
+        let mut q: EventQueue<u32> = EventQueue::with_capacity(1000);
+        rows.push(bench("event queue push+pop x1000", if quick_mode { 50 } else { 500 }, || {
             for i in 0..1000u32 {
                 q.schedule_in((i % 7) as f64 * 0.001, i);
             }
@@ -101,10 +171,7 @@ fn main() {
     }
 
     // 6. Timing-only sim engine: events/second on a 1-epoch CIFAR run.
-    {
-        use rudra::coordinator::engine_sim::{run_sim, SimConfig};
-        use rudra::coordinator::tree::Arch;
-        use rudra::netsim::cost::ModelCost;
+    let (sim_events, sim_wall) = {
         let cfg = SimConfig::paper(
             Protocol::NSoftsync { n: 1 },
             Arch::Base,
@@ -130,9 +197,35 @@ fn main() {
             dt,
             r.events_processed as f64 / dt / 1e6
         );
+        (r.events_processed, dt)
+    };
+
+    // 7. Serial vs parallel grid execution (the sweep-executor
+    // acceptance measurement): 4 identical timing-only ImageNet points.
+    let cores = default_jobs();
+    let (serial_secs, serial_points) = grid_wall(1);
+    let (parallel_secs, parallel_points) = grid_wall(4);
+    let speedup = serial_secs / parallel_secs.max(1e-12);
+    assert_eq!(
+        serial_points, parallel_points,
+        "jobs=4 grid must be bit-identical to jobs=1"
+    );
+    println!(
+        "grid (4 timing-only ImageNet points): jobs=1 {:.3}s, jobs=4 {:.3}s \
+         ({speedup:.2}× speedup on {cores} core(s))",
+        serial_secs, parallel_secs
+    );
+    if cores >= 2 {
+        assert!(
+            speedup >= 1.5,
+            "ACCEPTANCE: 4-point grid at jobs=4 must run >= 1.5x faster than \
+             jobs=1 on {cores} cores, got {speedup:.2}x"
+        );
+    } else {
+        println!("(single-core runner: skipping the >= 1.5x speedup assertion)");
     }
 
-    // 7. PJRT grad latency per μ (requires artifacts; skipped otherwise).
+    // 8. PJRT grad latency per μ (requires artifacts; skipped otherwise).
     match rudra::harness::Workspace::open_default() {
         Ok(ws) => {
             let theta = ws.cnn_init().unwrap();
@@ -140,13 +233,9 @@ fn main() {
                 let exec = ws.cnn_grad(mu).unwrap();
                 let mut s = rudra::data::sampler::BatchSampler::new(&ws.train, mu, 1, 0);
                 let b = s.next_batch();
-                rows.push(bench(
-                    &format!("PJRT cnn grad μ={mu}"),
-                    30,
-                    || {
-                        let _ = exec.run_images(&theta, &b.images, &b.labels).unwrap();
-                    },
-                ));
+                rows.push(bench(&format!("PJRT cnn grad μ={mu}"), 30, || {
+                    let _ = exec.run_images(&theta, &b.images, &b.labels).unwrap();
+                }));
             }
         }
         Err(e) => println!("(skipping PJRT latency rows: {e})"),
@@ -157,4 +246,37 @@ fn main() {
         t.row(vec![name.clone(), rudra::util::fmt_secs(*per)]);
     }
     t.print();
+
+    // 9. The machine-readable baseline (the bench trajectory across PRs).
+    let kernels = Json::Obj(
+        rows.iter().map(|(name, per)| (name.clone(), Json::num(*per))).collect(),
+    );
+    let out = Json::obj(vec![
+        ("schema", Json::num(1.0)),
+        ("quick", Json::Bool(quick_mode)),
+        ("cores", Json::num(cores as f64)),
+        ("kernels_secs_per_iter", kernels),
+        (
+            "sim_engine",
+            Json::obj(vec![
+                ("events", Json::num(sim_events as f64)),
+                ("wall_secs", Json::num(sim_wall)),
+                ("events_per_sec", Json::num(sim_events as f64 / sim_wall.max(1e-12))),
+            ]),
+        ),
+        (
+            "grid",
+            Json::obj(vec![
+                ("points", Json::num(4.0)),
+                ("jobs", Json::num(4.0)),
+                ("serial_secs", Json::num(serial_secs)),
+                ("parallel_secs", Json::num(parallel_secs)),
+                ("speedup", Json::num(speedup)),
+            ]),
+        ),
+    ]);
+    let path = std::env::var("RUDRA_BENCH_JSON")
+        .unwrap_or_else(|_| "BENCH_hotpath.json".to_string());
+    std::fs::write(&path, out.to_string()).expect("writing bench JSON");
+    println!("\nwrote machine-readable baselines to {path}");
 }

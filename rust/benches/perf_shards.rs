@@ -79,11 +79,22 @@ fn main() {
     println!("=== perf_shards — sharded applyUpdate sweep (manual timing) ===\n");
     let n_params = 1_000_000;
     let iters = 300;
+    let shard_axis = [1usize, 2, 4, 8];
 
+    // The adversarial sims report *virtual* seconds — host contention
+    // cannot perturb them — so they fan out over the parallel point
+    // executor (RUDRA_JOBS overrides). The wall-clock push measurements
+    // stay strictly serial: running them concurrently would let the
+    // points contend for the cores they are trying to time.
+    let sims = rudra::harness::sweep::run_indexed(
+        rudra::harness::sweep::env_jobs(),
+        shard_axis.len(),
+        |i| Ok(bench_adversarial_sim(shard_axis[i])),
+    )
+    .expect("adversarial sims");
     let mut rows = Vec::new();
-    for shards in [1usize, 2, 4, 8] {
+    for (&shards, &sim) in shard_axis.iter().zip(sims.iter()) {
         let per_push = bench_server_push(n_params, shards, iters);
-        let sim = bench_adversarial_sim(shards);
         rows.push((shards, per_push, sim));
     }
 

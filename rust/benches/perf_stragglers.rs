@@ -108,27 +108,53 @@ fn main() {
         "max σ",
         "util",
     ]);
-    for protocol in protocols {
-        for (label, hetero) in scenarios {
-            let r = run_timing(protocol, hetero);
-            t.row(vec![
-                protocol.label(),
-                label.to_string(),
-                fmt_secs(r.sim_seconds),
-                r.updates.to_string(),
-                r.dropped_gradients.to_string(),
-                f(r.staleness.overall_avg(), 2),
-                r.staleness.max.to_string(),
-                util_spread(&r),
-            ]);
-        }
+    // protocol-major × scenario-minor grid of timing-only points (virtual
+    // seconds — host contention cannot perturb them), fanned out over the
+    // parallel point executor (RUDRA_JOBS overrides; bit-identical).
+    let grid_results = rudra::harness::sweep::run_indexed(
+        rudra::harness::sweep::env_jobs(),
+        protocols.len() * scenarios.len(),
+        |i| {
+            let protocol = protocols[i / scenarios.len()];
+            let (_, hetero) = scenarios[i % scenarios.len()];
+            Ok(run_timing(protocol, hetero))
+        },
+    )
+    .expect("straggler sweep");
+    for (i, r) in grid_results.iter().enumerate() {
+        let protocol = protocols[i / scenarios.len()];
+        let (label, _) = scenarios[i % scenarios.len()];
+        t.row(vec![
+            protocol.label(),
+            label.to_string(),
+            fmt_secs(r.sim_seconds),
+            r.updates.to_string(),
+            r.dropped_gradients.to_string(),
+            f(r.staleness.overall_avg(), 2),
+            r.staleness.max.to_string(),
+            util_spread(r),
+        ]);
     }
     t.print();
 
     // ---- acceptance checks ------------------------------------------------
-    let ideal = run_timing(Protocol::Hardsync, "none");
-    let hard10 = run_timing(Protocol::Hardsync, "slow:0x10");
-    let backup10 = run_timing(Protocol::BackupSync { b: 1 }, "slow:0x10");
+    // Reuse the grid's own points instead of re-running; look the cells
+    // up by (protocol, hetero spec) so reordering the axes cannot
+    // silently retarget the assertions.
+    let at = |protocol: Protocol, hetero: &str| {
+        let pi = protocols
+            .iter()
+            .position(|&p| p == protocol)
+            .expect("protocol swept in the grid");
+        let si = scenarios
+            .iter()
+            .position(|&(_, h)| h == hetero)
+            .expect("scenario swept in the grid");
+        &grid_results[pi * scenarios.len() + si]
+    };
+    let ideal = at(Protocol::Hardsync, "none");
+    let hard10 = at(Protocol::Hardsync, "slow:0x10");
+    let backup10 = at(Protocol::BackupSync { b: 1 }, "slow:0x10");
     let recovery = ideal.sim_seconds / backup10.sim_seconds;
     println!(
         "\n10× single-straggler: ideal hardsync {}, hardsync {} ({:.1}× degraded), \

@@ -30,7 +30,9 @@ fn main() {
     // paper trains 140 epochs); undertrained runs separate by update
     // count instead, so the reduced run still needs a real budget.
     let epochs = if paper::full_grid() { 40 } else { 20 };
-    let sweep = Sweep::new(&ws, epochs);
+    let mut sweep = Sweep::new(&ws, epochs);
+    // parallel point executor (RUDRA_JOBS overrides; bit-identical)
+    sweep.jobs = rudra::harness::sweep::env_jobs();
 
     // Representative subset per μλ group (full = every paper row).
     let rows: Vec<(usize, usize, usize, f64, f64)> = if paper::full_grid() {
@@ -56,15 +58,19 @@ fn main() {
     ]);
     let mut by_group: std::collections::BTreeMap<usize, Vec<f64>> = Default::default();
     let mut results = Vec::new();
-    for &(sigma, mu, lambda, perr, ptime) in &rows {
-        let cfg = RunConfig {
+    // one parallel batch over every Table-2 row, results in row order
+    let cfgs: Vec<RunConfig> = rows
+        .iter()
+        .map(|&(sigma, mu, lambda, _, _)| RunConfig {
             protocol: protocol_of(sigma),
             mu,
             lambda,
             epochs,
             ..RunConfig::default()
-        };
-        let p = sweep.run_point(&cfg).expect("point");
+        })
+        .collect();
+    let points = sweep.run_points(&cfgs).expect("grid");
+    for (&(sigma, mu, lambda, perr, ptime), p) in rows.iter().zip(points) {
         // nearest group anchor by ratio distance (μλ=1152 → 1024, not 2048)
         let group = *[128usize, 256, 512, 1024]
             .iter()

@@ -19,22 +19,40 @@ fn main() {
     paper::banner("Table 3 — top-5 (σ,μ,λ) configurations");
     let ws = Workspace::open_default().expect("run `make artifacts` first");
     let epochs = if paper::full_grid() { 40 } else { 20 };
-    let sweep = Sweep::new(&ws, epochs);
+    let mut sweep = Sweep::new(&ws, epochs);
+    // parallel point executor (RUDRA_JOBS overrides; bit-identical)
+    sweep.jobs = rudra::harness::sweep::env_jobs();
 
     let mut t = Table::new(&[
         "σ", "μ", "λ", "protocol",
         "paper err", "repro err",
         "paper time", "repro time (sim)",
     ]);
+    // the five picks plus the (0,128,1) baseline in one parallel batch
+    let mut cfgs: Vec<RunConfig> = paper::TABLE3
+        .iter()
+        .map(|&(sigma, mu, lambda, _, _, _)| {
+            let protocol = if sigma == 0 {
+                Protocol::Hardsync
+            } else {
+                Protocol::NSoftsync { n: sigma }
+            };
+            RunConfig { protocol, mu, lambda, epochs, ..RunConfig::default() }
+        })
+        .collect();
+    cfgs.push(RunConfig {
+        protocol: Protocol::Hardsync,
+        mu: 128,
+        lambda: 1,
+        epochs,
+        ..RunConfig::default()
+    });
+    let mut points = sweep.run_points(&cfgs).expect("grid");
+    let base = points.pop().expect("baseline point");
     let mut ours = Vec::new();
-    for &(sigma, mu, lambda, proto_name, perr, ptime) in paper::TABLE3.iter() {
-        let protocol = if sigma == 0 {
-            Protocol::Hardsync
-        } else {
-            Protocol::NSoftsync { n: sigma }
-        };
-        let cfg = RunConfig { protocol, mu, lambda, epochs, ..RunConfig::default() };
-        let p = sweep.run_point(&cfg).expect("point");
+    for (&(sigma, mu, lambda, proto_name, perr, ptime), p) in
+        paper::TABLE3.iter().zip(points)
+    {
         t.row(vec![
             sigma.to_string(),
             mu.to_string(),
@@ -48,17 +66,6 @@ fn main() {
         ours.push((sigma, mu, lambda, p));
     }
     t.print();
-
-    // Baseline for the speed comparison.
-    let base = sweep
-        .run_point(&RunConfig {
-            protocol: Protocol::Hardsync,
-            mu: 128,
-            lambda: 1,
-            epochs,
-            ..RunConfig::default()
-        })
-        .expect("baseline");
     println!(
         "\nbaseline (0,128,1): {} err, {} sim time",
         pct(base.test_error_pct),

@@ -46,32 +46,47 @@ fn main() {
         "paper top-1", "repro err (synthetic)",
     ]);
     let epochs = if paper::full_grid() { 10 } else { 4 };
+    // Each ladder rung (timing sim at paper geometry + reduced-scale
+    // accuracy point) is index-determined, so the whole ladder runs on
+    // the parallel point executor (RUDRA_JOBS overrides; bit-identical).
+    let rungs = rudra::harness::sweep::run_indexed(
+        rudra::harness::sweep::env_jobs(),
+        paper::TABLE4.len(),
+        |i| {
+            let (_, arch_s, mu, lambda, proto_s, _, _, _) = paper::TABLE4[i];
+            let arch = rudra::coordinator::tree::Arch::parse(arch_s)?;
+            let protocol = Protocol::parse(proto_s)?;
+            let minutes = epoch_minutes(arch, protocol, mu, lambda);
+
+            // Accuracy ordering at reduced scale: same protocol/arch
+            // family, λ capped to the synthetic benchmark's range.
+            let mut sweep = Sweep::new(&ws, epochs);
+            sweep.arch = arch;
+            sweep.jobs = 1; // already inside a worker thread
+            let cfg = RunConfig {
+                protocol,
+                mu: mu.min(16),
+                lambda: lambda.min(30),
+                epochs,
+                warmstart_epochs: if protocol != Protocol::Hardsync { 1 } else { 0 },
+                optimizer: if protocol != Protocol::Hardsync {
+                    rudra::params::optimizer::OptimizerKind::Adagrad { eps: 1e-8 }
+                } else {
+                    rudra::params::optimizer::OptimizerKind::Momentum { momentum: 0.9 }
+                },
+                base_lr: if protocol != Protocol::Hardsync { 0.03 } else { 0.02 },
+                ..RunConfig::default()
+            };
+            let p = sweep.run_point(&cfg)?;
+            Ok((minutes, p))
+        },
+    )
+    .expect("ladder");
     let mut times = Vec::new();
     let mut errs = Vec::new();
-    for &(name, arch_s, mu, lambda, proto_s, top1, _top5, pmin) in paper::TABLE4.iter() {
-        let arch = rudra::coordinator::tree::Arch::parse(arch_s).unwrap();
-        let protocol = Protocol::parse(proto_s).unwrap();
-        let minutes = epoch_minutes(arch, protocol, mu, lambda);
-
-        // Accuracy ordering at reduced scale: same protocol/arch family,
-        // λ capped to the synthetic benchmark's sensible range.
-        let mut sweep = Sweep::new(&ws, epochs);
-        sweep.arch = arch;
-        let cfg = RunConfig {
-            protocol,
-            mu: mu.min(16),
-            lambda: lambda.min(30),
-            epochs,
-            warmstart_epochs: if protocol != Protocol::Hardsync { 1 } else { 0 },
-            optimizer: if protocol != Protocol::Hardsync {
-                rudra::params::optimizer::OptimizerKind::Adagrad { eps: 1e-8 }
-            } else {
-                rudra::params::optimizer::OptimizerKind::Momentum { momentum: 0.9 }
-            },
-            base_lr: if protocol != Protocol::Hardsync { 0.03 } else { 0.02 },
-            ..RunConfig::default()
-        };
-        let p = sweep.run_point(&cfg).expect("point");
+    for (&(name, arch_s, mu, lambda, proto_s, top1, _top5, pmin), (minutes, p)) in
+        paper::TABLE4.iter().zip(rungs)
+    {
         t.row(vec![
             name.to_string(),
             arch_s.to_string(),

@@ -123,20 +123,40 @@ impl EncodedGrad {
     pub fn into_dense(self) -> FlatVec {
         match self {
             EncodedGrad::Dense(v) => v,
+            other => {
+                let mut out = FlatVec::zeros(0);
+                other.decode_into(&mut out);
+                out
+            }
+        }
+    }
+
+    /// Decode into a reusable scratch buffer (the servers' per-push
+    /// decode pool): `out` is resized to the payload's dim and every
+    /// element overwritten, so a dirty buffer decodes bit-identically to
+    /// a fresh one. `Dense` payloads *copy* here — callers that can take
+    /// ownership should route them through [`EncodedGrad::into_dense`]
+    /// (or fold the vector directly) to keep the `none` path copy-free.
+    pub fn decode_into(&self, out: &mut FlatVec) {
+        match self {
+            EncodedGrad::Dense(v) => {
+                out.data.clear();
+                out.data.extend_from_slice(&v.data);
+            }
             EncodedGrad::Sparse { dim, idx, val } => {
-                let mut out = FlatVec::zeros(dim);
+                out.data.clear();
+                out.data.resize(*dim, 0.0);
                 for (&i, &v) in idx.iter().zip(val.iter()) {
                     out.data[i as usize] = v;
                 }
-                out
             }
             EncodedGrad::Quant { dim, norm, bits, levels } => {
                 let s = ((1u32 << bits) - 1) as f32;
-                let mut out = FlatVec::zeros(dim);
+                out.data.clear();
+                out.data.resize(*dim, 0.0);
                 for (o, &l) in out.data.iter_mut().zip(levels.iter()) {
-                    *o = qsgd_value(norm, l, s);
+                    *o = qsgd_value(*norm, l, s);
                 }
-                out
             }
         }
     }
@@ -384,6 +404,29 @@ mod tests {
         assert!(CodecSpec::parse("qsgd:0").is_err());
         assert!(CodecSpec::parse("qsgd:9").is_err());
         assert!(CodecSpec::parse("gzip").is_err());
+    }
+
+    #[test]
+    fn decode_into_matches_into_dense_on_a_dirty_buffer() {
+        // The servers' decode pool reuses one scratch buffer across
+        // pushes; a leftover from a previous (longer, garbage-filled)
+        // decode must not leak into the next one.
+        let g = FlatVec::from_vec(vec![1.0, -4.0, 0.5, 3.0, -0.25]);
+        let encs = [
+            EncodedGrad::Dense(g.clone()),
+            LearnerCodec::new(CodecSpec::TopK { frac: 0.4 }, 5, 7, 0).encode(&g),
+            LearnerCodec::new(CodecSpec::Qsgd { bits: 4 }, 5, 7, 1).encode(&g),
+        ];
+        for enc in encs {
+            let want = enc.clone().into_dense();
+            let mut dirty = FlatVec::from_vec(vec![9.0; 11]);
+            enc.decode_into(&mut dirty);
+            assert_eq!(dirty.data, want.data, "{enc:?}");
+            // and again from a too-short buffer
+            let mut short = FlatVec::zeros(1);
+            enc.decode_into(&mut short);
+            assert_eq!(short.data, want.data);
+        }
     }
 
     #[test]

@@ -98,6 +98,21 @@ pub struct RunConfig {
     /// ([`crate::comm::codec`]). Compressed pushes shrink wire time in
     /// both engines; weight pulls stay dense.
     pub compress: CodecSpec,
+    /// Parallel grid execution (JSON key / flag `jobs`): worker threads
+    /// for sweep grids ([`crate::harness::sweep::run_indexed`]). `0` (the
+    /// default) = available parallelism, `1` = the serial path. A
+    /// host-side scheduling knob only — grid points own their seeds and
+    /// RNG streams, so results are bit-identical at any value (which is
+    /// also why `jobs` never appears in [`RunConfig::label`]).
+    pub jobs: usize,
+    /// Sweep grid μ axis (JSON key `mus` / flag `--mus a,b,c`): the
+    /// per-learner mini-batch sizes the `sweep` subcommand runs. `None`
+    /// keeps the subcommand's built-in default axis; single-point
+    /// commands (`sim`/`train`/`timing`) ignore it.
+    pub sweep_mus: Option<Vec<usize>>,
+    /// Sweep grid λ axis (JSON key `lambdas` / flag `--lambdas`),
+    /// mirroring [`RunConfig::sweep_mus`].
+    pub sweep_lambdas: Option<Vec<usize>>,
 }
 
 impl Default for RunConfig {
@@ -125,8 +140,27 @@ impl Default for RunConfig {
             hetero: HeteroSpec::none(),
             adaptive: AdaptiveSpec::none(),
             compress: CodecSpec::None,
+            jobs: 0,
+            sweep_mus: None,
+            sweep_lambdas: None,
         }
     }
+}
+
+/// JSON array of integers (the sweep grid axes).
+fn parse_axis(v: &Json) -> Result<Vec<usize>> {
+    checked_axis(
+        "sweep axis",
+        v.as_arr()?.iter().map(|x| x.as_usize()).collect::<Result<Vec<usize>>>()?,
+    )
+}
+
+/// A sweep axis must name at least one point, each with μ/λ ≥ 1.
+fn checked_axis(name: &str, axis: Vec<usize>) -> Result<Vec<usize>> {
+    if axis.is_empty() || axis.contains(&0) {
+        bail!("{name}: sweep axes must be non-empty lists of integers >= 1, got {axis:?}");
+    }
+    Ok(axis)
 }
 
 impl RunConfig {
@@ -157,6 +191,9 @@ impl RunConfig {
                 "hetero" => self.hetero = HeteroSpec::parse(v.as_str()?)?,
                 "adaptive" => self.adaptive = AdaptiveSpec::parse(v.as_str()?)?,
                 "compress" => self.compress = CodecSpec::parse(v.as_str()?)?,
+                "jobs" => self.jobs = v.as_usize()?,
+                "mus" => self.sweep_mus = Some(parse_axis(v)?),
+                "lambdas" => self.sweep_lambdas = Some(parse_axis(v)?),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -206,6 +243,14 @@ impl RunConfig {
         }
         if let Some(v) = args.get("compress") {
             self.compress = CodecSpec::parse(v)?;
+        }
+        self.jobs = args.usize_or("jobs", self.jobs)?;
+        if args.get("mus").is_some() {
+            self.sweep_mus = Some(checked_axis("mus", args.usize_list_or("mus", &[])?)?);
+        }
+        if args.get("lambdas").is_some() {
+            self.sweep_lambdas =
+                Some(checked_axis("lambdas", args.usize_list_or("lambdas", &[])?)?);
         }
         self.validate()
     }
@@ -491,6 +536,39 @@ mod tests {
         // malformed specs are rejected at the parse boundary
         let mut bad = RunConfig::default();
         assert!(bad.apply_json(&Json::parse(r#"{"compress": "topk:2"}"#).unwrap()).is_err());
+    }
+
+    #[test]
+    fn jobs_and_grid_axes_layer_and_validate() {
+        let mut cfg = RunConfig::default();
+        assert_eq!(cfg.jobs, 0, "auto parallelism by default");
+        assert!(cfg.sweep_mus.is_none() && cfg.sweep_lambdas.is_none());
+        cfg.apply_json(
+            &Json::parse(r#"{"jobs": 4, "mus": [4, 16], "lambdas": [2, 8]}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.jobs, 4);
+        assert_eq!(cfg.sweep_mus, Some(vec![4, 16]));
+        assert_eq!(cfg.sweep_lambdas, Some(vec![2, 8]));
+        // CLI wins over JSON
+        let args = Args::parse(
+            ["--jobs", "1", "--mus", "8,32", "--lambdas", "4"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.jobs, 1);
+        assert_eq!(cfg.sweep_mus, Some(vec![8, 32]));
+        assert_eq!(cfg.sweep_lambdas, Some(vec![4]));
+        // jobs is host-side scheduling, not experiment identity
+        assert!(!cfg.label().contains("jobs"), "{}", cfg.label());
+        // degenerate axes are rejected at the parse boundary
+        let mut bad = RunConfig::default();
+        assert!(bad.apply_json(&Json::parse(r#"{"mus": []}"#).unwrap()).is_err());
+        assert!(bad.apply_json(&Json::parse(r#"{"lambdas": [0, 4]}"#).unwrap()).is_err());
+        let args =
+            Args::parse(["--mus", "0,4"].iter().map(|s| s.to_string()), &[]).unwrap();
+        assert!(RunConfig::default().apply_args(&args).is_err());
     }
 
     #[test]

@@ -7,6 +7,8 @@
 //! writes into the back buffer; the compute side swaps front/back at
 //! mini-batch boundaries if a fresher replica has landed.
 
+use anyhow::Result;
+
 use crate::coordinator::clock::Timestamp;
 use crate::params::FlatVec;
 
@@ -42,13 +44,31 @@ impl DoubleBuffer {
     /// Communication thread delivers a freshly received replica into the
     /// back buffer. Keeps the freshest replica if several land between
     /// swaps (later deliveries overwrite).
-    pub fn deliver(&mut self, theta: &FlatVec, ts: Timestamp) {
+    ///
+    /// Length-checked: a replica whose size disagrees with the buffers is
+    /// rejected as an error instead of panicking in `copy_from_slice`. A
+    /// rejected delivery leaves the buffers and freshness untouched.
+    ///
+    /// This module is the §3.3 reference implementation and is not yet
+    /// wired into an engine, so today nothing can hit the mismatch at
+    /// runtime — but the engines' μ·λ rescale paths do legitimately
+    /// resize θ views, so any future caller wiring a live adv* learner
+    /// loop through this buffer must get a `Result` to act on (rebuild
+    /// the pair or drop the replica), not a panic in its comm thread.
+    pub fn deliver(&mut self, theta: &FlatVec, ts: Timestamp) -> Result<()> {
+        anyhow::ensure!(
+            theta.len() == self.back.len(),
+            "deliver: replica has {} params, buffer holds {}",
+            theta.len(),
+            self.back.len()
+        );
         if ts <= self.back_ts && self.back_fresh {
-            return; // stale delivery, ignore
+            return Ok(()); // stale delivery, ignore
         }
         self.back.data.copy_from_slice(&theta.data);
         self.back_ts = ts;
         self.back_fresh = ts > self.front_ts;
+        Ok(())
     }
 
     /// Mini-batch boundary: swap to the fresher replica if one arrived.
@@ -73,7 +93,7 @@ mod tests {
     fn swap_only_when_fresh() {
         let mut db = DoubleBuffer::new(&FlatVec::zeros(2));
         assert!(!db.try_swap());
-        db.deliver(&FlatVec::from_vec(vec![1.0, 1.0]), 3);
+        db.deliver(&FlatVec::from_vec(vec![1.0, 1.0]), 3).unwrap();
         assert!(db.try_swap());
         assert_eq!(db.compute_view().1, 3);
         assert_eq!(db.compute_view().0.data, vec![1.0, 1.0]);
@@ -83,8 +103,8 @@ mod tests {
     #[test]
     fn later_delivery_wins() {
         let mut db = DoubleBuffer::new(&FlatVec::zeros(1));
-        db.deliver(&FlatVec::from_vec(vec![1.0]), 1);
-        db.deliver(&FlatVec::from_vec(vec![2.0]), 5);
+        db.deliver(&FlatVec::from_vec(vec![1.0]), 1).unwrap();
+        db.deliver(&FlatVec::from_vec(vec![2.0]), 5).unwrap();
         db.try_swap();
         assert_eq!(db.compute_view(), (&FlatVec::from_vec(vec![2.0]), 5));
     }
@@ -92,8 +112,8 @@ mod tests {
     #[test]
     fn stale_delivery_ignored() {
         let mut db = DoubleBuffer::new(&FlatVec::zeros(1));
-        db.deliver(&FlatVec::from_vec(vec![2.0]), 5);
-        db.deliver(&FlatVec::from_vec(vec![1.0]), 1); // stale
+        db.deliver(&FlatVec::from_vec(vec![2.0]), 5).unwrap();
+        db.deliver(&FlatVec::from_vec(vec![1.0]), 1).unwrap(); // stale
         db.try_swap();
         assert_eq!(db.compute_view().1, 5);
     }
@@ -101,10 +121,28 @@ mod tests {
     #[test]
     fn compute_view_stable_until_swap() {
         let mut db = DoubleBuffer::new(&FlatVec::from_vec(vec![7.0]));
-        db.deliver(&FlatVec::from_vec(vec![9.0]), 2);
+        db.deliver(&FlatVec::from_vec(vec![9.0]), 2).unwrap();
         // no swap yet — compute still sees the old replica
         assert_eq!(db.compute_view().0.data, vec![7.0]);
         db.try_swap();
         assert_eq!(db.compute_view().0.data, vec![9.0]);
+    }
+
+    #[test]
+    fn length_mismatched_replica_is_a_checked_error() {
+        // Regression: `deliver` used to panic in `copy_from_slice` when a
+        // μ·λ rescale path resized θ views mid-run. It must now return an
+        // error and leave the buffer pair (and its freshness) untouched.
+        let mut db = DoubleBuffer::new(&FlatVec::from_vec(vec![7.0, 7.0]));
+        let err = db.deliver(&FlatVec::from_vec(vec![1.0, 2.0, 3.0]), 4).unwrap_err();
+        assert!(err.to_string().contains("3 params"), "{err}");
+        assert!(db.deliver(&FlatVec::from_vec(vec![1.0]), 4).is_err(), "short replica too");
+        assert!(!db.try_swap(), "rejected delivery must not mark the back buffer fresh");
+        assert_eq!(db.compute_view(), (&FlatVec::from_vec(vec![7.0, 7.0]), 0));
+        assert_eq!(db.swaps, 0);
+        // a well-formed delivery still works afterwards
+        db.deliver(&FlatVec::from_vec(vec![1.0, 2.0]), 4).unwrap();
+        assert!(db.try_swap());
+        assert_eq!(db.compute_view().0.data, vec![1.0, 2.0]);
     }
 }

@@ -242,12 +242,19 @@ pub struct SimResult {
     pub residual_norms: Vec<f64>,
 }
 
+/// A gradient payload in flight. Boxed so timing-only runs (payload
+/// `None`, the common case for the paper-scale sweeps) pay one pointer
+/// per event instead of carrying the full [`EncodedGrad`] inline through
+/// every heap sift; numeric runs pay one small allocation per push next
+/// to the model-sized gradient they already allocate.
+type GradInFlight = Option<Box<EncodedGrad>>;
+
 /// (learner, incarnation, encoded gradient, timestamp) — relayed leaf
 /// batches carry the incarnation so a crash invalidates in-flight
 /// gradients. Leaves forward encodings as-is (decoding happens at the
 /// root, [`ShardedServer::push_encoded`]); the `none` codec rides as
 /// `Dense`, which decodes without a copy.
-type RelayBatch = Vec<(usize, u64, Option<EncodedGrad>, Timestamp)>;
+type RelayBatch = Vec<(usize, u64, GradInFlight, Timestamp)>;
 
 /// Learner-loop events carry the learner's *incarnation* at schedule
 /// time: a kill bumps the slot's incarnation, so every event the dead
@@ -261,10 +268,10 @@ enum Ev {
     /// the event — it is taken from the learner at send time, so an
     /// adv*-style mini-batch finishing while the previous push is still
     /// in flight can never clobber an untransmitted gradient.
-    PushAtRoot { learner: usize, inc: u64, grad: Option<EncodedGrad>, ts: Timestamp },
+    PushAtRoot { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp },
     /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*);
     /// payload in the event, as with [`Ev::PushAtRoot`].
-    PushAtLeaf { learner: usize, inc: u64, grad: Option<EncodedGrad>, ts: Timestamp },
+    PushAtLeaf { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp },
     /// A leaf's aggregated batch arrived at the root.
     RelayAtRoot { leaf: usize, batch: RelayBatch },
     /// A pull completed at the learner.
@@ -283,7 +290,7 @@ struct Slot {
     /// the push pipeline to free. The learner stalls once this is
     /// occupied, so it holds at most one gradient; Base/Adv pushes carry
     /// their payload in the push event instead.
-    pending_grad: Option<EncodedGrad>,
+    pending_grad: GradInFlight,
     pending_ts: Timestamp,
     compute_cost: f64,
     blocked_since: f64,
@@ -324,6 +331,11 @@ pub struct SimEngine<'a> {
     /// two updates, and cloning the full parameter vector per pull was
     /// the engine's top allocation cost (see EXPERIMENTS.md §Perf-L3).
     snap_cache: Option<(Timestamp, Arc<FlatVec>)>,
+    /// Retired snapshot buffers awaiting reuse: when a cache entry (or a
+    /// pruned adv* history entry) is the last reference to its `Arc`, the
+    /// buffer returns here and the next clock tick assembles into it
+    /// instead of allocating a fresh model-sized vector.
+    snap_pool: Vec<FlatVec>,
     provider: Option<&'a mut dyn GradProvider>,
     evaluator: Option<&'a mut dyn Evaluator>,
     numeric: bool,
@@ -441,7 +453,10 @@ impl<'a> SimEngine<'a> {
             cfg,
             server,
             fabric,
-            q: EventQueue::new(),
+            // Steady state holds a few events per live learner (compute,
+            // push, pull/broadcast, relays) plus the scheduled churn —
+            // pre-reserving spares the heap its doubling migrations.
+            q: EventQueue::with_capacity(4 * lambda + cfg.churn.events.len() + 8),
             slots,
             leaves,
             tree,
@@ -449,6 +464,7 @@ impl<'a> SimEngine<'a> {
             barrier: Vec::new(),
             last_bcast_ts: 0,
             snap_cache: None,
+            snap_pool: Vec::new(),
             recent: VecDeque::new(),
             provider,
             evaluator,
@@ -507,7 +523,11 @@ impl<'a> SimEngine<'a> {
     /// Snapshot of the server weights at its current timestamp, cached so
     /// repeated pulls between two updates share one allocation (the
     /// assembly from shards copies at the same rate the flat server
-    /// cloned θ).
+    /// cloned θ), and *pooled* so successive clock ticks recycle the same
+    /// buffer: a stale cache entry this engine holds the last reference
+    /// to is reclaimed instead of dropped, and the new snapshot assembles
+    /// into it ([`ShardedServer::assemble_weights_into`] overwrites every
+    /// element, so reuse is bit-identical to a fresh allocation).
     fn server_snapshot(&mut self) -> Option<Arc<FlatVec>> {
         if !self.numeric {
             return None;
@@ -518,9 +538,26 @@ impl<'a> SimEngine<'a> {
                 return Some(snap.clone());
             }
         }
-        let snap = Arc::new(self.server.assemble_weights());
+        if let Some((_, stale)) = self.snap_cache.take() {
+            self.reclaim_snapshot(stale);
+        }
+        let mut buf = self.snap_pool.pop().unwrap_or_else(|| FlatVec::zeros(0));
+        self.server.assemble_weights_into(&mut buf);
+        let snap = Arc::new(buf);
         self.snap_cache = Some((ts, snap.clone()));
         Some(snap)
+    }
+
+    /// Recycle a retired snapshot's buffer if nobody else (an in-flight
+    /// pull event, the adv* history, a leaf cache) still shares it. The
+    /// pool is bounded: one spare covers the steady per-tick cadence, a
+    /// second absorbs the cache/history handoff racing a tick.
+    fn reclaim_snapshot(&mut self, snap: Arc<FlatVec>) {
+        if self.snap_pool.len() < 2 {
+            if let Some(buf) = Arc::into_inner(snap) {
+                self.snap_pool.push(buf);
+            }
+        }
     }
 
     /// Run the simulation to completion.
@@ -566,7 +603,12 @@ impl<'a> SimEngine<'a> {
         if self.elastic_enabled() {
             self.on_membership_change(0.0, None)?;
         }
-        for ev in self.cfg.churn.events.clone() {
+        // `ChurnEvent` is `Copy` and `self.cfg` is a shared `'a` borrow:
+        // schedule straight off the config instead of cloning the whole
+        // event vector per run (it used to be re-cloned by every grid
+        // point and warm-start prologue).
+        let cfg = self.cfg;
+        for &ev in &cfg.churn.events {
             self.q.schedule_at(ev.at, Ev::Churn { event: ev });
         }
         if self.injector.enabled() {
@@ -699,7 +741,7 @@ impl<'a> SimEngine<'a> {
         self.slots[l].overlap.add_compute(cost);
         self.slots[l].state.steps += 1;
         let grad_ts = self.slots[l].state.ts;
-        let enc = if self.provider.is_some() {
+        let enc: GradInFlight = if self.provider.is_some() {
             let (g, loss) = {
                 let theta = &self.slots[l].state.theta;
                 self.provider.as_deref_mut().unwrap().compute(l, theta)?
@@ -707,10 +749,10 @@ impl<'a> SimEngine<'a> {
             self.epoch_losses.push(loss as f64);
             // Encode at the push boundary: the learner's error-feedback
             // residual updates here; the root decodes at fold time.
-            Some(match self.comm.as_mut() {
+            Some(Box::new(match self.comm.as_mut() {
                 Some(c) => c.encode(l, &g),
                 None => EncodedGrad::Dense(g),
-            })
+            }))
         } else {
             None
         };
@@ -756,13 +798,7 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
-    fn start_advstar_push(
-        &mut self,
-        now: f64,
-        l: usize,
-        grad: Option<EncodedGrad>,
-        ts: Timestamp,
-    ) {
+    fn start_advstar_push(&mut self, now: f64, l: usize, grad: GradInFlight, ts: Timestamp) {
         self.slots[l].pipe_busy = true;
         let leaf = self.tree.leaf_of[l];
         let inc = self.slots[l].inc;
@@ -777,7 +813,7 @@ impl<'a> SimEngine<'a> {
         now: f64,
         l: usize,
         inc: u64,
-        grad: Option<EncodedGrad>,
+        grad: GradInFlight,
         ts: Timestamp,
     ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
@@ -805,7 +841,7 @@ impl<'a> SimEngine<'a> {
         now: f64,
         l: usize,
         inc: u64,
-        grad: Option<EncodedGrad>,
+        grad: GradInFlight,
         ts: Timestamp,
     ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
@@ -888,7 +924,7 @@ impl<'a> SimEngine<'a> {
         now: f64,
         l: usize,
         inc: u64,
-        grad: Option<EncodedGrad>,
+        grad: GradInFlight,
         ts: Timestamp,
     ) -> Result<PushOutcome> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
@@ -897,7 +933,7 @@ impl<'a> SimEngine<'a> {
         let outcome: PushOutcome = match grad {
             // decode-then-accumulate at the root tier; `Dense` (the
             // `none` codec) decodes without a copy
-            Some(enc) => self.server.push_encoded(l, enc, ts)?,
+            Some(enc) => self.server.push_encoded(l, *enc, ts)?,
             None => self.server.push_gradient_timing_only(l, ts),
         };
         self.after_update(now, outcome.clone())?;
@@ -917,11 +953,14 @@ impl<'a> SimEngine<'a> {
                 let snap = self.server_snapshot();
                 self.recent.push_back((now, self.server.timestamp(), snap));
                 // prune entries older than the broadcast window (keep one
-                // older entry as the query floor)
+                // older entry as the query floor), recycling buffers the
+                // history held the last reference to
                 while self.recent.len() > 1
                     && self.recent[1].0 <= now - self.bcast_period - 1e-9
                 {
-                    self.recent.pop_front();
+                    if let Some((_, _, Some(snap))) = self.recent.pop_front() {
+                        self.reclaim_snapshot(snap);
+                    }
                 }
             }
             let every = self.cfg.checkpoint_every_updates;

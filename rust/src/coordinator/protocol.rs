@@ -296,16 +296,37 @@ impl Accumulator {
     /// Averages over the *actual* number collected, matching Eq. (5)'s
     /// 1/c prefactor (and Eq. 3's 1/λ under hardsync).
     pub fn take_update(&mut self) -> (crate::params::FlatVec, Vec<u64>) {
-        let c = self.pending().max(1);
-        let mut avg = std::mem::replace(
-            &mut self.sum,
-            crate::params::FlatVec::zeros(0),
-        );
-        avg.scale(1.0 / c as f32);
-        self.sum = crate::params::FlatVec::zeros(avg.len());
-        let clock = std::mem::take(&mut self.pending_ts);
-        self.pending_from.clear();
+        let mut avg = crate::params::FlatVec::zeros(0);
+        let mut clock = Vec::new();
+        self.drain_update(&mut avg, &mut clock);
         (avg, clock)
+    }
+
+    /// Allocation-free form of [`Accumulator::take_update`] for the
+    /// per-update hot path: the averaged Δθ and the vector clock land in
+    /// the caller's scratch buffers (overwritten, any prior length), and
+    /// the buffers they displace become the accumulator's next-round sum
+    /// and pending clock — so a warmed caller/accumulator pair recycles
+    /// the same two allocations for the whole run. Values are
+    /// bit-identical to `take_update` (same per-coordinate ops in the
+    /// same order; a recycled sum buffer is re-zeroed with `fill`, and
+    /// 0.0-filled equals freshly allocated zeros bitwise).
+    pub fn drain_update(
+        &mut self,
+        avg: &mut crate::params::FlatVec,
+        clock: &mut Vec<u64>,
+    ) {
+        std::mem::swap(&mut self.pending_ts, clock);
+        self.pending_ts.clear();
+        let c = clock.len().max(1);
+        std::mem::swap(&mut self.sum, avg);
+        if self.sum.len() == avg.len() {
+            self.sum.fill(0.0);
+        } else {
+            self.sum = crate::params::FlatVec::zeros(avg.len());
+        }
+        avg.scale(1.0 / c as f32);
+        self.pending_from.clear();
     }
 }
 
@@ -419,6 +440,31 @@ mod tests {
         assert_eq!(avg.data, vec![1.0, 2.0]);
         assert_eq!(clock, vec![0, 0]);
         assert_eq!(acc.pending(), 0);
+    }
+
+    #[test]
+    fn drain_update_matches_take_update_with_recycled_scratch() {
+        // The hot-path drain must be bitwise identical to the allocating
+        // reference form, *including* when its scratch buffers are dirty
+        // leftovers from earlier rounds.
+        let mut a = Accumulator::new(Protocol::NSoftsync { n: 1 }, 2, 3);
+        let mut b = Accumulator::new(Protocol::NSoftsync { n: 1 }, 2, 3);
+        let mut avg = FlatVec::zeros(0);
+        let mut clock = Vec::new();
+        for round in 0..4u64 {
+            for l in 0..2 {
+                let g =
+                    FlatVec::from_vec(vec![l as f32 + 0.5, -1.0, round as f32 * 0.25]);
+                a.push(l, &g, round).unwrap();
+                b.push(l, &g, round).unwrap();
+            }
+            assert!(a.ready() && b.ready());
+            let (want_avg, want_clock) = a.take_update();
+            b.drain_update(&mut avg, &mut clock);
+            assert_eq!(avg.data, want_avg.data, "round {round}: bitwise average");
+            assert_eq!(clock, want_clock, "round {round}: vector clock");
+            assert_eq!(b.pending(), 0);
+        }
     }
 
     #[test]

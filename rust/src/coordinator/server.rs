@@ -68,6 +68,16 @@ pub struct ParameterServer {
     /// Backup-sync: dropped-gradient count per learner slot (straggler
     /// attribution for the stats server).
     dropped_by: Vec<u64>,
+    /// Decode scratch for [`ParameterServer::push_encoded`], mirroring
+    /// the sharded server's pool: compressed payloads decode into one
+    /// reused buffer; `Dense` still passes through copy-free.
+    decode_buf: FlatVec,
+    /// applyUpdate scratch pair for [`Accumulator::drain_update`]: the
+    /// drained average and vector clock land here and the displaced
+    /// buffers become the accumulator's next round, so the per-update
+    /// path (the live engine's hot loop) stops allocating once warm.
+    avg_scratch: FlatVec,
+    clock_scratch: Vec<Timestamp>,
 }
 
 impl ParameterServer {
@@ -94,6 +104,9 @@ impl ParameterServer {
             timing_pending: Vec::new(),
             dropped: 0,
             dropped_by,
+            decode_buf: FlatVec::zeros(0),
+            avg_scratch: FlatVec::zeros(0),
+            clock_scratch: Vec::new(),
         }
     }
 
@@ -179,10 +192,22 @@ impl ParameterServer {
         self.acc.push_scaled(learner, grad, grad_ts, scale)?;
         let mut out = PushOutcome::default();
         if self.acc.ready() {
-            let (avg, vclock) = self.acc.take_update();
-            self.apply_update(avg, &vclock, &mut out);
+            self.drain_and_apply(&mut out);
         }
         Ok(out)
+    }
+
+    /// Drain the satisfied round through the recycled scratch pair and
+    /// apply it — the allocation-free twin of `take_update` +
+    /// `apply_update` (bit-identical values, see
+    /// [`Accumulator::drain_update`]).
+    fn drain_and_apply(&mut self, out: &mut PushOutcome) {
+        let mut avg = std::mem::replace(&mut self.avg_scratch, FlatVec::zeros(0));
+        let mut clock = std::mem::take(&mut self.clock_scratch);
+        self.acc.drain_update(&mut avg, &mut clock);
+        self.apply_update(&avg, &clock, out);
+        self.avg_scratch = avg;
+        self.clock_scratch = clock;
     }
 
     /// Decode-then-accumulate mirror of
@@ -195,8 +220,18 @@ impl ParameterServer {
         enc: crate::comm::codec::EncodedGrad,
         grad_ts: Timestamp,
     ) -> Result<PushOutcome> {
-        let dense = enc.into_dense();
-        self.push_gradient(learner, &dense, grad_ts)
+        match enc {
+            crate::comm::codec::EncodedGrad::Dense(dense) => {
+                self.push_gradient(learner, &dense, grad_ts)
+            }
+            enc => {
+                let mut buf = std::mem::replace(&mut self.decode_buf, FlatVec::zeros(0));
+                enc.decode_into(&mut buf);
+                let out = self.push_gradient(learner, &buf, grad_ts);
+                self.decode_buf = buf;
+                out
+            }
+        }
     }
 
     /// Timing-only variant: advances protocol/clock/epoch state without
@@ -222,12 +257,12 @@ impl ParameterServer {
         out
     }
 
-    fn apply_update(&mut self, avg: FlatVec, vclock: &[Timestamp], out: &mut PushOutcome) {
+    fn apply_update(&mut self, avg: &FlatVec, vclock: &[Timestamp], out: &mut PushOutcome) {
         let alpha =
             self.lr
                 .alpha(self.epochs_completed, self.cfg.protocol, self.cfg.mu, self.cfg.lambda);
         self.last_alpha = alpha;
-        self.optimizer.apply(&mut self.theta, &avg, alpha as f32);
+        self.optimizer.apply(&mut self.theta, avg, alpha as f32);
         self.advance_clock(vclock, out);
     }
 
@@ -271,8 +306,7 @@ impl ParameterServer {
         self.acc.set_active_lambda(lambda)?;
         let mut out = PushOutcome::default();
         if self.acc.pending() >= quota && self.acc.pending() > 0 {
-            let (avg, vclock) = self.acc.take_update();
-            self.apply_update(avg, &vclock, &mut out);
+            self.drain_and_apply(&mut out);
             return Ok(Some(out));
         }
         if self.timing_pending.len() >= quota && !self.timing_pending.is_empty() {

@@ -87,6 +87,14 @@ pub struct Shard {
     pub ts: Timestamp,
     /// applyUpdate count for this shard (stats reporting).
     pub updates: u64,
+    /// applyUpdate scratch: the drained average lands here and the
+    /// displaced buffer becomes the accumulator's next-round sum, so the
+    /// per-update path stops allocating once warm (not serialized — a
+    /// restored shard re-warms on its first update).
+    avg_scratch: FlatVec,
+    /// Vector-clock scratch for the same drain (the shard-level clock is
+    /// unused — the server's scalar clock is authoritative).
+    clock_scratch: Vec<Timestamp>,
 }
 
 impl Shard {
@@ -101,8 +109,8 @@ impl Shard {
 
     /// applyUpdate for this shard: drain the accumulator and step θ.
     fn apply(&mut self, alpha: f64) {
-        let (avg, _clock) = self.acc.take_update();
-        self.optimizer.apply(&mut self.theta, &avg, alpha as f32);
+        self.acc.drain_update(&mut self.avg_scratch, &mut self.clock_scratch);
+        self.optimizer.apply(&mut self.theta, &self.avg_scratch, alpha as f32);
         self.ts += 1;
         self.updates += 1;
     }
@@ -144,6 +152,14 @@ pub struct ShardedServer {
     /// Backup-sync: dropped-gradient count per learner slot (straggler
     /// attribution for the stats server).
     dropped_by: Vec<u64>,
+    /// Decode scratch for [`ShardedServer::push_encoded`]: sparse and
+    /// quantized payloads decode into this pooled buffer instead of a
+    /// fresh allocation per push (`Dense` still passes through copy-free).
+    decode_buf: FlatVec,
+    /// Vector-clock spare recycled through the update drains (pending and
+    /// timing paths are mutually exclusive per run, so one spare serves
+    /// both).
+    clock_spare: Vec<Timestamp>,
 }
 
 impl ShardedServer {
@@ -165,6 +181,8 @@ impl ShardedServer {
                 range,
                 ts: 0,
                 updates: 0,
+                avg_scratch: FlatVec::zeros(0),
+                clock_scratch: Vec::new(),
             })
             .collect();
         ShardedServer {
@@ -184,6 +202,8 @@ impl ShardedServer {
             last_alpha: 0.0,
             timing_pending: Vec::new(),
             dropped: 0,
+            decode_buf: FlatVec::zeros(0),
+            clock_spare: Vec::new(),
         }
     }
 
@@ -283,11 +303,21 @@ impl ShardedServer {
     /// pullWeights payload). Engines cache the result per timestamp, so
     /// this copies at the same rate the unsharded server cloned θ.
     pub fn assemble_weights(&self) -> FlatVec {
-        let mut out = FlatVec::zeros(self.spec.n_params);
+        let mut out = FlatVec::zeros(0);
+        self.assemble_weights_into(&mut out);
+        out
+    }
+
+    /// Pooled form of [`ShardedServer::assemble_weights`]: resize `out`
+    /// to the model and overwrite every element (the shard ranges
+    /// partition θ), so the engines' snapshot pool can recycle one buffer
+    /// per clock tick instead of allocating a model-sized vector each —
+    /// bit-identical output either way.
+    pub fn assemble_weights_into(&self, out: &mut FlatVec) {
+        out.data.resize(self.spec.n_params, 0.0);
         for shard in &self.shards {
             out.data[shard.range.clone()].copy_from_slice(&shard.theta.data);
         }
-        out
     }
 
     /// sumGradients: fold one learner's gradient into every shard;
@@ -346,15 +376,34 @@ impl ShardedServer {
 
         let mut out = PushOutcome::default();
         if will_update {
-            let clock = std::mem::take(&mut self.pending_ts);
+            let clock = self.take_pending_clock();
             self.pending_from.clear();
             self.advance_clock(&clock, &mut out);
+            self.return_clock(clock);
             debug_assert!(
                 self.shards.iter().all(|s| s.ts == self.ts),
                 "shard clocks must stay in lockstep with the scalar timestamp"
             );
         }
         Ok(out)
+    }
+
+    /// Swap the pending vector clock out against the recycled spare (the
+    /// drain side of the no-allocation update path); pair with
+    /// [`ShardedServer::return_clock`] once [`ShardedServer::advance_clock`]
+    /// has consumed it.
+    fn take_pending_clock(&mut self) -> Vec<Timestamp> {
+        std::mem::replace(&mut self.pending_ts, std::mem::take(&mut self.clock_spare))
+    }
+
+    /// Timing-path twin of [`ShardedServer::take_pending_clock`].
+    fn take_timing_clock(&mut self) -> Vec<Timestamp> {
+        std::mem::replace(&mut self.timing_pending, std::mem::take(&mut self.clock_spare))
+    }
+
+    fn return_clock(&mut self, mut clock: Vec<Timestamp>) {
+        clock.clear();
+        self.clock_spare = clock;
     }
 
     /// Decode-then-accumulate ([`crate::comm`]): decode one compressed
@@ -371,8 +420,22 @@ impl ShardedServer {
         enc: crate::comm::codec::EncodedGrad,
         grad_ts: Timestamp,
     ) -> Result<PushOutcome> {
-        let dense = enc.into_dense();
-        self.push_gradient(learner, &dense, grad_ts)
+        match enc {
+            // `Dense` (the `none` codec) folds without a copy
+            crate::comm::codec::EncodedGrad::Dense(dense) => {
+                self.push_gradient(learner, &dense, grad_ts)
+            }
+            enc => {
+                // sparse/quantized payloads decode into the pooled
+                // scratch (temporarily moved out to satisfy the borrow
+                // of `push_gradient(&mut self, &buf)`)
+                let mut buf = std::mem::replace(&mut self.decode_buf, FlatVec::zeros(0));
+                enc.decode_into(&mut buf);
+                let out = self.push_gradient(learner, &buf, grad_ts);
+                self.decode_buf = buf;
+                out
+            }
+        }
     }
 
     /// Timing-only variant: advances protocol/clock/epoch state (including
@@ -385,12 +448,13 @@ impl ShardedServer {
         self.timing_pending.push(grad_ts);
         let mut out = PushOutcome::default();
         if self.timing_pending.len() >= self.cfg.protocol.gradients_per_update(self.cfg.lambda) {
-            let vclock = std::mem::take(&mut self.timing_pending);
+            let vclock = self.take_timing_clock();
             for shard in self.shards.iter_mut() {
                 shard.ts += 1;
                 shard.updates += 1;
             }
             self.advance_clock(&vclock, &mut out);
+            self.return_clock(vclock);
         }
         out
     }
@@ -440,9 +504,10 @@ impl ShardedServer {
                 .alpha(self.epochs_completed, self.cfg.protocol, self.cfg.mu, self.cfg.lambda);
             self.last_alpha = alpha;
             self.for_each_shard(|shard| shard.apply(alpha));
-            let clock = std::mem::take(&mut self.pending_ts);
+            let clock = self.take_pending_clock();
             self.pending_from.clear();
             self.advance_clock(&clock, &mut out);
+            self.return_clock(clock);
             debug_assert!(
                 self.shards.iter().all(|s| s.ts == self.ts),
                 "shard clocks must stay in lockstep across a quota flush"
@@ -450,12 +515,13 @@ impl ShardedServer {
             return Ok(Some(out));
         }
         if self.timing_pending.len() >= quota && !self.timing_pending.is_empty() {
-            let vclock = std::mem::take(&mut self.timing_pending);
+            let vclock = self.take_timing_clock();
             for shard in self.shards.iter_mut() {
                 shard.ts += 1;
                 shard.updates += 1;
             }
             self.advance_clock(&vclock, &mut out);
+            self.return_clock(vclock);
             return Ok(Some(out));
         }
         Ok(None)
@@ -592,6 +658,8 @@ impl ShardedServer {
                 range,
                 ts: shard_ts,
                 updates: sj.get("updates")?.as_u64()?,
+                avg_scratch: FlatVec::zeros(0),
+                clock_scratch: Vec::new(),
             });
         }
         let id_bound = j.get("id_bound")?.as_usize()?;
@@ -626,6 +694,8 @@ impl ShardedServer {
             updates: j.get("updates")?.as_u64()?,
             last_alpha: j.get("last_alpha")?.as_f64()?,
             timing_pending: j.get("timing_pending")?.as_u64_vec()?,
+            decode_buf: FlatVec::zeros(0),
+            clock_spare: Vec::new(),
         })
     }
 

@@ -1,5 +1,14 @@
 //! (σ, μ, λ) sweep runner: executes one grid point end to end and
 //! collects everything the paper's tables/figures report.
+//!
+//! Grid points are *independent by construction* — each owns its seed,
+//! its provider, and its RNG streams — so [`Sweep::run_grid`] executes
+//! them on scoped worker threads bounded by the `jobs` knob
+//! ([`run_indexed`]), returning results in grid order and bit-identical
+//! to serial execution at any thread count.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
 
 use anyhow::Result;
 
@@ -56,6 +65,80 @@ pub struct PointResult {
     pub root_bytes_out: f64,
 }
 
+/// Host threads available for grid execution (the `jobs: 0` = auto
+/// resolution target).
+pub fn default_jobs() -> usize {
+    std::thread::available_parallelism().map(|n| n.get()).unwrap_or(1)
+}
+
+/// Resolve a `jobs` knob value: `0` means auto (available parallelism),
+/// anything else is taken literally (`1` = the serial path).
+pub fn resolve_jobs(jobs: usize) -> usize {
+    if jobs == 0 {
+        default_jobs()
+    } else {
+        jobs
+    }
+}
+
+/// Bench-side override of the auto default: `RUDRA_JOBS=<n>` pins the
+/// worker count (0/unset = auto). Lets CI and perf investigations run
+/// grids serially without editing the bench.
+pub fn env_jobs() -> usize {
+    std::env::var("RUDRA_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+}
+
+/// Parallel point executor: run `f(0..n)` on up to `jobs` scoped worker
+/// threads (`0` = auto, `1` = a plain serial loop) and return the results
+/// **in index order**.
+///
+/// Safe for deterministic grids by construction: workers only decide
+/// *which thread* computes each index (via an atomic work-stealing
+/// counter), never the inputs, so `f(i)` — which must derive all of its
+/// state from `i` — produces bit-identical output at any `jobs` value
+/// (property-tested in `tests/integration_sweep.rs`). Error semantics:
+/// the serial path stops at the first failing index; the parallel path
+/// may compute later points before noticing, but still reports the error
+/// of the *smallest* failing index.
+///
+/// A panicking `f` aborts the whole grid when the scope joins (same as
+/// the serial loop).
+pub fn run_indexed<T, F>(jobs: usize, n: usize, f: F) -> Result<Vec<T>>
+where
+    T: Send,
+    F: Fn(usize) -> Result<T> + Sync,
+{
+    let jobs = resolve_jobs(jobs).min(n.max(1));
+    if jobs <= 1 {
+        return (0..n).map(&f).collect();
+    }
+    let next = AtomicUsize::new(0);
+    let done: Mutex<Vec<(usize, Result<T>)>> = Mutex::new(Vec::with_capacity(n));
+    std::thread::scope(|scope| {
+        for _ in 0..jobs {
+            scope.spawn(|| {
+                let mut local: Vec<(usize, Result<T>)> = Vec::new();
+                loop {
+                    let i = next.fetch_add(1, Ordering::Relaxed);
+                    if i >= n {
+                        break;
+                    }
+                    local.push((i, f(i)));
+                }
+                done.lock().expect("sweep worker poisoned the result lock").extend(local);
+            });
+        }
+    });
+    let mut collected = done.into_inner().expect("sweep worker poisoned the result lock");
+    collected.sort_by_key(|(i, _)| *i);
+    debug_assert_eq!(collected.len(), n, "every grid index runs exactly once");
+    let mut out = Vec::with_capacity(n);
+    for (_, r) in collected {
+        out.push(r?);
+    }
+    Ok(out)
+}
+
 /// Runs grid points with shared compiled executables.
 pub struct Sweep<'a> {
     pub ws: &'a Workspace,
@@ -64,11 +147,21 @@ pub struct Sweep<'a> {
     pub arch: Arch,
     /// Evaluate at every epoch boundary (needed for Fig 5/9 curves).
     pub eval_each_epoch: bool,
+    /// Worker threads for grid execution (the `jobs` knob): `0` = auto
+    /// (available parallelism), `1` = the serial path. Points own their
+    /// seeds/providers/RNG streams, so any value is bit-identical.
+    ///
+    /// Caveat for the real-PJRT future: [`run_indexed`] shares `ws`
+    /// across worker threads, which the offline `xla` stub permits
+    /// (stateless). Real PJRT bindings are not `Sync` — swapping them in
+    /// means per-thread clients or the live engine's compute-service
+    /// pattern (see the ROADMAP `xla` item).
+    pub jobs: usize,
 }
 
 impl<'a> Sweep<'a> {
     pub fn new(ws: &'a Workspace, epochs: usize) -> Sweep<'a> {
-        Sweep { ws, epochs, seed: 42, arch: Arch::Base, eval_each_epoch: false }
+        Sweep { ws, epochs, seed: 42, arch: Arch::Base, eval_each_epoch: false, jobs: 0 }
     }
 
     /// Train the synthetic benchmark at one (protocol, μ, λ) point with
@@ -167,16 +260,25 @@ impl<'a> Sweep<'a> {
         })
     }
 
+    /// Run an explicit list of grid points, in order, on up to
+    /// [`Sweep::jobs`] worker threads ([`run_indexed`]). Results are
+    /// bit-identical to calling [`Sweep::run_point`] serially per config.
+    pub fn run_points(&self, cfgs: &[RunConfig]) -> Result<Vec<PointResult>> {
+        run_indexed(self.jobs, cfgs.len(), |i| self.run_point(&cfgs[i]))
+    }
+
     /// Run a (μ, λ) grid under one protocol family. For softsync, `n_of`
     /// maps λ to the splitting parameter (e.g. `|_| 1` for 1-softsync or
-    /// `|l| l` for λ-softsync).
+    /// `|l| l` for λ-softsync). Points execute on up to [`Sweep::jobs`]
+    /// worker threads; the returned vector is always in grid order
+    /// (λ-major, μ-minor — unchanged from the serial implementation).
     pub fn run_grid(
         &self,
         mus: &[usize],
         lambdas: &[usize],
         protocol_of: impl Fn(usize) -> Protocol,
     ) -> Result<Vec<PointResult>> {
-        let mut out = Vec::new();
+        let mut cfgs = Vec::with_capacity(mus.len() * lambdas.len());
         for &lambda in lambdas {
             for &mu in mus {
                 let mut cfg = RunConfig {
@@ -188,10 +290,10 @@ impl<'a> Sweep<'a> {
                     ..RunConfig::default()
                 };
                 cfg.arch = self.arch;
-                out.push(self.run_point(&cfg)?);
+                cfgs.push(cfg);
             }
         }
-        Ok(out)
+        self.run_points(&cfgs)
     }
 }
 
@@ -241,4 +343,41 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         None,
     )?;
     Ok(r.theta.expect("numeric warmstart returns weights"))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn run_indexed_returns_grid_order_at_any_job_count() {
+        let want: Vec<usize> = (0..17).map(|i| i * i).collect();
+        for jobs in [0usize, 1, 2, 4, 9, 64] {
+            let out = run_indexed(jobs, 17, |i| Ok(i * i)).unwrap();
+            assert_eq!(out, want, "jobs={jobs}");
+        }
+        assert!(run_indexed(4, 0, |_| Ok(0usize)).unwrap().is_empty());
+    }
+
+    #[test]
+    fn run_indexed_reports_smallest_failing_index() {
+        for jobs in [1usize, 2, 4] {
+            let err = run_indexed(jobs, 12, |i| {
+                if i == 3 || i == 9 {
+                    anyhow::bail!("boom at {i}");
+                }
+                Ok(i)
+            })
+            .unwrap_err();
+            assert!(err.to_string().contains("boom at 3"), "jobs={jobs}: {err}");
+        }
+    }
+
+    #[test]
+    fn jobs_resolution() {
+        assert!(default_jobs() >= 1);
+        assert_eq!(resolve_jobs(1), 1);
+        assert_eq!(resolve_jobs(7), 7);
+        assert_eq!(resolve_jobs(0), default_jobs());
+    }
 }

@@ -32,6 +32,10 @@ common flags: --protocol hardsync|async|<n>-softsync|backup:<b>
               --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
               --shards S (root parameter shards; 1 = flat server)
+sweep grid:   --mus a,b,c --lambdas a,b,c (grid axes; JSON keys mus/lambdas)
+              --jobs N (worker threads for grid points; 0 = auto
+                [available parallelism], 1 = serial — results are
+                bit-identical at any value)
 elasticity:   --churn SPEC (kill:<id>@<t>,rejoin:<id>@<t>,join:<id>@<t>,
                 rate:<kills/1000s>,downtime:<mean-s> | none) [sim/sweep/timing]
               --rescale none|mulambda (hold μ·λ_active ≈ μ₀·λ₀)
@@ -77,7 +81,7 @@ fn run() -> Result<()> {
         "info" => cmd_info(),
         "train" => cmd_train(&cfg, &args),
         "sim" => cmd_sim(&cfg, &args),
-        "sweep" => cmd_sweep(&cfg, &args),
+        "sweep" => cmd_sweep(&cfg),
         "timing" => cmd_timing(&cfg, &args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -320,13 +324,21 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
     Ok(())
 }
 
-fn cmd_sweep(cfg: &RunConfig, args: &Args) -> Result<()> {
+fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
     let ws = Workspace::open_default()?;
-    let mus = args.usize_list_or("mus", &[4, 32, 128])?;
-    let lambdas = args.usize_list_or("lambdas", &[1, 4, 30])?;
+    // Grid axes layer like every other knob: JSON config (`mus`/`lambdas`)
+    // under CLI (`--mus`/`--lambdas`), already merged into `cfg`.
+    let mus = cfg.sweep_mus.clone().unwrap_or_else(|| vec![4, 32, 128]);
+    let lambdas = cfg.sweep_lambdas.clone().unwrap_or_else(|| vec![1, 4, 30]);
     let mut sweep = Sweep::new(&ws, cfg.epochs);
     sweep.seed = cfg.seed;
     sweep.arch = cfg.arch;
+    sweep.jobs = cfg.jobs;
+    let points = mus.len() * lambdas.len();
+    println!(
+        "sweep: {points} grid points on {} worker thread(s)",
+        rudra::harness::sweep::resolve_jobs(cfg.jobs).min(points.max(1))
+    );
     let proto = cfg.protocol;
     let results = sweep.run_grid(&mus, &lambdas, |_lambda| proto)?;
     let mut t = Table::new(&["μ", "λ", "⟨σ⟩", "test err", "sim time (paper geom)"]);

@@ -59,6 +59,13 @@ impl<T> EventQueue<T> {
         Self::default()
     }
 
+    /// Pre-sized queue: the sim engine knows its steady-state event count
+    /// (a few per live learner), and reserving it up front spares the
+    /// heap its doubling migrations on the hot path.
+    pub fn with_capacity(cap: usize) -> Self {
+        EventQueue { heap: BinaryHeap::with_capacity(cap), now: 0.0, seq: 0, processed: 0 }
+    }
+
     /// Current virtual time (the timestamp of the last popped event).
     pub fn now(&self) -> f64 {
         self.now
@@ -77,8 +84,17 @@ impl<T> EventQueue<T> {
     }
 
     /// Schedule `payload` at absolute virtual time `at` (clamped to now).
+    ///
+    /// `at` must not be NaN: the heap's ordering falls back to `Equal`
+    /// for incomparable times, so a single NaN entry would silently
+    /// corrupt pop order for every event around it. Debug builds panic;
+    /// release builds clamp a NaN to `now` (the documented containment
+    /// behavior — the event fires immediately and deterministically, and
+    /// the heap order stays total). Infinities order correctly and pass
+    /// through: a `+∞` event simply sorts after everything finite.
     pub fn schedule_at(&mut self, at: f64, payload: T) {
-        let at = if at < self.now { self.now } else { at };
+        debug_assert!(!at.is_nan(), "schedule_at: NaN virtual time");
+        let at = if at.is_nan() || at < self.now { self.now } else { at };
         self.heap.push(Scheduled { at, seq: self.seq, payload });
         self.seq += 1;
     }
@@ -142,5 +158,55 @@ mod tests {
         q.schedule_at(1.0, 2); // in the past → clamped
         let (t, _) = q.pop().unwrap();
         assert_eq!(t, 5.0);
+    }
+
+    // Regression (NaN heap corruption): `schedule_at` used to accept a
+    // NaN timestamp verbatim; `partial_cmp(..).unwrap_or(Equal)` then
+    // made the NaN entry compare Equal to *everything*, silently
+    // breaking the heap's pop order around it. Debug builds now panic at
+    // the call site; release builds clamp the NaN to `now` so the order
+    // stays total.
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "NaN virtual time")]
+    fn nan_schedule_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::NAN, 1);
+    }
+
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn nan_schedule_clamps_to_now_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1);
+        q.pop(); // now = 5.0
+        q.schedule_at(9.0, 2);
+        q.schedule_at(f64::NAN, 3); // clamped to now = 5.0
+        q.schedule_at(7.0, 4);
+        // pop order stays strictly by (time, seq): the clamped NaN fires
+        // first at now, the rest in time order — no corruption.
+        let order: Vec<(f64, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(5.0, 3), (7.0, 4), (9.0, 2)]);
+    }
+
+    #[test]
+    fn infinite_times_order_after_everything_finite() {
+        let mut q = EventQueue::new();
+        q.schedule_at(f64::INFINITY, 1);
+        q.schedule_at(2.0, 2);
+        let (t, p) = q.pop().unwrap();
+        assert_eq!((t, p), (2.0, 2));
+        let (t, p) = q.pop().unwrap();
+        assert!(t.is_infinite() && p == 1);
+    }
+
+    #[test]
+    fn with_capacity_behaves_like_new() {
+        let mut q = EventQueue::with_capacity(64);
+        assert!(q.is_empty());
+        q.schedule_in(1.0, 7);
+        assert_eq!(q.len(), 1);
+        assert_eq!(q.pop(), Some((1.0, 7)));
+        assert_eq!(q.processed(), 1);
     }
 }

@@ -1,0 +1,177 @@
+//! Parallel sweep executor: `jobs: k` grids must be bit-identical to
+//! `jobs: 1` grids, per result field.
+//!
+//! Grid points derive *all* of their state from their index (seed,
+//! provider, RNG streams), so [`run_indexed`] only ever decides which
+//! host thread computes a point — never its inputs. These tests pin that
+//! contract across the three protocol families × shard counts, including
+//! a churn + heterogeneous-straggler point (the elastic and straggler
+//! subsystems draw from their own named RNG streams, which is what keeps
+//! them replayable off the main thread).
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimResult};
+use rudra::coordinator::learner::MockProvider;
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::membership::ChurnSchedule;
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::harness::sweep::run_indexed;
+use rudra::netsim::cost::ModelCost;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::hetero::HeteroSpec;
+
+const N_PARAMS: usize = 4;
+
+fn tiny_model() -> ModelCost {
+    ModelCost {
+        name: "tiny",
+        flops_per_sample: 1.0e6,
+        bytes: 1.0e3,
+        samples_per_epoch: 64,
+    }
+}
+
+/// The grid under test: (protocol, S) across the three protocol families
+/// × S ∈ {1, 4}, plus a churn + hetero point. Each point's config is a
+/// pure function of its index — the executor contract.
+fn grid_configs() -> Vec<SimConfig> {
+    let mut cfgs = Vec::new();
+    for protocol in [Protocol::Hardsync, Protocol::NSoftsync { n: 2 }, Protocol::Async] {
+        for shards in [1usize, 4] {
+            let mut cfg =
+                SimConfig::paper(protocol, Arch::Base, 4, 4, 2, tiny_model());
+            cfg.seed = 11 + cfgs.len() as u64;
+            cfg.shards = shards;
+            cfgs.push(cfg);
+        }
+    }
+    // The elastic + straggler point: a kill/rejoin cycle under μ·λ
+    // rescale with a persistent 3× straggler. 4 epochs so the 0.009 s
+    // rejoin is comfortably mid-run (the integration_elastic suite pins
+    // that schedule/epoch pairing).
+    let mut churny =
+        SimConfig::paper(Protocol::NSoftsync { n: 2 }, Arch::Base, 4, 4, 4, tiny_model());
+    churny.seed = 31;
+    churny.shards = 4;
+    churny.churn = ChurnSchedule::parse("kill:1@0.004,rejoin:1@0.009").unwrap();
+    churny.rescale = RescalePolicy::MuLambdaConst;
+    churny.hetero = HeteroSpec::parse("slow:0x3").unwrap();
+    cfgs.push(churny);
+    cfgs
+}
+
+fn run_point(cfg: &SimConfig) -> SimResult {
+    let mut provider = MockProvider::new(vec![0.0; N_PARAMS]);
+    run_sim(
+        cfg,
+        FlatVec::from_vec(vec![1.0, -2.0, 0.5, 3.0]),
+        Optimizer::new(OptimizerKind::Momentum { momentum: 0.9 }, 0.0, N_PARAMS),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+        Some(&mut provider),
+        None,
+    )
+    .expect("grid point")
+}
+
+/// Everything `PointResult` is built from, pinned field by field. f64s
+/// compare with `==`: bit-identical means bit-identical.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    sim_seconds: f64,
+    updates: u64,
+    events_processed: u64,
+    theta: Vec<f32>,
+    staleness_count: u64,
+    staleness_max: u64,
+    avg_staleness: f64,
+    final_train_loss: f64,
+    epochs: Vec<(usize, f64, f64, usize)>,
+    shard_updates: Vec<u64>,
+    churn_events: usize,
+    recovery_secs: Vec<f64>,
+    final_active_lambda: usize,
+    dropped_gradients: u64,
+    dropped_by_learner: Vec<u64>,
+    learner_utilization: Vec<f64>,
+    hetero_factors: Vec<f64>,
+    root_bytes_in: f64,
+    root_bytes_out: f64,
+    comm_bytes_by_learner: Vec<f64>,
+}
+
+fn fingerprint(r: &SimResult) -> Fingerprint {
+    Fingerprint {
+        sim_seconds: r.sim_seconds,
+        updates: r.updates,
+        events_processed: r.events_processed,
+        theta: r.theta.as_ref().expect("numeric run").data.clone(),
+        staleness_count: r.staleness.count,
+        staleness_max: r.staleness.max,
+        avg_staleness: r.staleness.overall_avg(),
+        final_train_loss: r.final_train_loss,
+        epochs: r
+            .epochs
+            .iter()
+            .map(|e| (e.epoch, e.sim_time, e.train_loss, e.active_lambda))
+            .collect(),
+        shard_updates: r.shard_updates.clone(),
+        churn_events: r.churn.len(),
+        recovery_secs: r.recovery_secs.clone(),
+        final_active_lambda: r.final_active_lambda,
+        dropped_gradients: r.dropped_gradients,
+        dropped_by_learner: r.dropped_by_learner.clone(),
+        learner_utilization: r.learner_utilization.clone(),
+        hetero_factors: r.hetero_factors.clone(),
+        root_bytes_in: r.root_bytes_in,
+        root_bytes_out: r.root_bytes_out,
+        comm_bytes_by_learner: r.comm_bytes_by_learner.clone(),
+    }
+}
+
+#[test]
+fn parallel_grid_is_bit_identical_to_serial_per_field() {
+    let cfgs = grid_configs();
+    let serial: Vec<Fingerprint> =
+        run_indexed(1, cfgs.len(), |i| Ok(fingerprint(&run_point(&cfgs[i]))))
+            .expect("serial grid");
+    for jobs in [2usize, 4] {
+        let parallel: Vec<Fingerprint> =
+            run_indexed(jobs, cfgs.len(), |i| Ok(fingerprint(&run_point(&cfgs[i]))))
+                .expect("parallel grid");
+        assert_eq!(parallel.len(), serial.len(), "jobs={jobs}: grid order and length");
+        for (i, (s, p)) in serial.iter().zip(parallel.iter()).enumerate() {
+            assert_eq!(
+                p, s,
+                "jobs={jobs}: point {i} ({}) diverged from serial",
+                cfgs[i].protocol.label()
+            );
+        }
+    }
+}
+
+#[test]
+fn parallel_grid_repeats_are_stable() {
+    // Two identical parallel runs must agree with each other too (the
+    // executor cannot leak cross-thread state into results).
+    let cfgs = grid_configs();
+    let a: Vec<Fingerprint> =
+        run_indexed(4, cfgs.len(), |i| Ok(fingerprint(&run_point(&cfgs[i])))).unwrap();
+    let b: Vec<Fingerprint> =
+        run_indexed(4, cfgs.len(), |i| Ok(fingerprint(&run_point(&cfgs[i])))).unwrap();
+    assert_eq!(a, b);
+}
+
+#[test]
+fn churny_point_actually_exercises_the_elastic_path() {
+    // Guard against the property test going vacuous: the churn + hetero
+    // point must really kill/rejoin and really slow learner 0.
+    let cfgs = grid_configs();
+    let churny = cfgs.last().expect("grid has the churn point");
+    let r = run_point(churny);
+    assert!(r.churn.len() >= 2, "kill + rejoin must both fire, saw {}", r.churn.len());
+    assert_eq!(r.recovery_secs.len(), 1, "one death→rejoin cycle");
+    assert_eq!(r.hetero_factors, vec![3.0, 1.0, 1.0, 1.0]);
+    assert_eq!(r.final_active_lambda, 4, "learner 1 is back by the end");
+}
