@@ -62,6 +62,8 @@ fn main() {
             hetero: cfg.hetero.clone(),
             adaptive: cfg.adaptive.clone(),
             compress: cfg.compress,
+            stop_after_events: None,
+            sim_checkpoint_path: None,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

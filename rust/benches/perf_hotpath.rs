@@ -31,7 +31,9 @@ use rudra::stats::table::Table;
 use rudra::util::json::Json;
 
 fn quick() -> bool {
-    std::env::var("RUDRA_QUICK").map(|v| v == "1").unwrap_or(false)
+    // Strict parse: `RUDRA_QUICK=ture` must abort, not silently run the
+    // full-size bench on a CI runner budgeted for the quick one.
+    rudra::harness::sweep::env_truthy("RUDRA_QUICK")
 }
 
 fn bench<F: FnMut()>(name: &str, iters: usize, mut f: F) -> (String, f64) {
@@ -170,35 +172,48 @@ fn main() {
         }));
     }
 
-    // 6. Timing-only sim engine: events/second on a 1-epoch CIFAR run.
-    let (sim_events, sim_wall) = {
-        let cfg = SimConfig::paper(
-            Protocol::NSoftsync { n: 1 },
-            Arch::Base,
-            16,
-            16,
-            1,
-            ModelCost::cifar10(),
-        );
-        let start = Instant::now();
-        let r = run_sim(
-            &cfg,
-            FlatVec::zeros(0),
-            Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
-            LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
-            None,
-            None,
-        )
-        .unwrap();
-        let dt = start.elapsed().as_secs_f64();
-        println!(
-            "sim engine: {} events in {:.3}s = {:.2}M events/s\n",
-            r.events_processed,
-            dt,
-            r.events_processed as f64 / dt / 1e6
-        );
-        (r.events_processed, dt)
-    };
+    // 6. Timing-only sim engine: events/second up the λ ladder — the
+    // paper's λ = 30 scale, then the datacenter-scale points the event
+    // loop must keep interactive (λ = 512 and λ = 4096). 1-softsync
+    // ImageNet, one epoch; quick mode caps the update budget (≈15k
+    // gradient arrivals per point, 1-softsync folds λ gradients per
+    // update) so CI measures per-event cost rather than epoch size.
+    let ladder: Vec<(usize, u64, f64)> = [30usize, 512, 4096]
+        .into_iter()
+        .map(|lambda| {
+            let mut cfg = SimConfig::paper(
+                Protocol::NSoftsync { n: 1 },
+                Arch::Base,
+                16,
+                lambda,
+                1,
+                ModelCost::imagenet(),
+            );
+            cfg.seed = 13;
+            if quick_mode {
+                cfg.max_updates = Some((15_000 / lambda).max(2) as u64);
+            }
+            let start = Instant::now();
+            let r = run_sim(
+                &cfg,
+                FlatVec::zeros(0),
+                Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+                LrPolicy::new(Schedule::constant(0.01), Modulation::Auto, 128),
+                None,
+                None,
+            )
+            .unwrap();
+            let dt = start.elapsed().as_secs_f64();
+            println!(
+                "sim engine λ={lambda:>4}: {} events in {:.3}s = {:.2}M events/s",
+                r.events_processed,
+                dt,
+                r.events_processed as f64 / dt.max(1e-12) / 1e6
+            );
+            (lambda, r.events_processed, dt)
+        })
+        .collect();
+    println!();
 
     // 7. Serial vs parallel grid execution (the sweep-executor
     // acceptance measurement): 4 identical timing-only ImageNet points.
@@ -252,17 +267,27 @@ fn main() {
         rows.iter().map(|(name, per)| (name.clone(), Json::num(*per))).collect(),
     );
     let out = Json::obj(vec![
-        ("schema", Json::num(1.0)),
+        // schema 2: `sim_engine` became the per-λ ladder (one row per
+        // lambda) instead of a single CIFAR point.
+        ("schema", Json::num(2.0)),
         ("quick", Json::Bool(quick_mode)),
         ("cores", Json::num(cores as f64)),
         ("kernels_secs_per_iter", kernels),
         (
             "sim_engine",
-            Json::obj(vec![
-                ("events", Json::num(sim_events as f64)),
-                ("wall_secs", Json::num(sim_wall)),
-                ("events_per_sec", Json::num(sim_events as f64 / sim_wall.max(1e-12))),
-            ]),
+            Json::Arr(
+                ladder
+                    .iter()
+                    .map(|&(lambda, events, wall)| {
+                        Json::obj(vec![
+                            ("lambda", Json::num(lambda as f64)),
+                            ("events", Json::num(events as f64)),
+                            ("wall_secs", Json::num(wall)),
+                            ("events_per_sec", Json::num(events as f64 / wall.max(1e-12))),
+                        ])
+                    })
+                    .collect(),
+            ),
         ),
         (
             "grid",

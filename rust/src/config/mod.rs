@@ -113,6 +113,16 @@ pub struct RunConfig {
     /// Sweep grid λ axis (JSON key `lambdas` / flag `--lambdas`),
     /// mirroring [`RunConfig::sweep_mus`].
     pub sweep_lambdas: Option<Vec<usize>>,
+    /// Timing-only early stop (JSON key `stop_after_events` / flag
+    /// `--stop-after-events`): halt the `timing` engine once this many
+    /// events have been processed and capture a mid-flight sim
+    /// checkpoint. The count is absolute, so a resumed run passes the
+    /// *total* target, not a remainder. `None` runs to completion.
+    pub stop_after_events: Option<u64>,
+    /// Where the `timing` engine writes the mid-flight sim checkpoint
+    /// when `stop_after_events` fires (JSON key `sim_checkpoint` / flag
+    /// `--sim-checkpoint`). `None` keeps the snapshot in memory only.
+    pub sim_checkpoint: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -143,6 +153,8 @@ impl Default for RunConfig {
             jobs: 0,
             sweep_mus: None,
             sweep_lambdas: None,
+            stop_after_events: None,
+            sim_checkpoint: None,
         }
     }
 }
@@ -194,6 +206,10 @@ impl RunConfig {
                 "jobs" => self.jobs = v.as_usize()?,
                 "mus" => self.sweep_mus = Some(parse_axis(v)?),
                 "lambdas" => self.sweep_lambdas = Some(parse_axis(v)?),
+                "stop_after_events" => self.stop_after_events = Some(v.as_u64()?),
+                "sim_checkpoint" => {
+                    self.sim_checkpoint = Some(std::path::PathBuf::from(v.as_str()?))
+                }
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -251,6 +267,12 @@ impl RunConfig {
         if args.get("lambdas").is_some() {
             self.sweep_lambdas =
                 Some(checked_axis("lambdas", args.usize_list_or("lambdas", &[])?)?);
+        }
+        if args.get("stop-after-events").is_some() {
+            self.stop_after_events = Some(args.u64_or("stop-after-events", 0)?);
+        }
+        if let Some(v) = args.get("sim-checkpoint") {
+            self.sim_checkpoint = Some(std::path::PathBuf::from(v));
         }
         self.validate()
     }
@@ -569,6 +591,56 @@ mod tests {
         let args =
             Args::parse(["--mus", "0,4"].iter().map(|s| s.to_string()), &[]).unwrap();
         assert!(RunConfig::default().apply_args(&args).is_err());
+    }
+
+    /// Regression: the CLI grid axes must flow through `checked_axis`
+    /// exactly like the JSON ones — `--mus 0` (a zero point) and
+    /// `--lambdas ""` (an empty value) are rejected at the parse
+    /// boundary instead of surfacing later as a degenerate grid point.
+    #[test]
+    fn cli_axis_validation_rejects_zero_and_empty() {
+        let mus0 = Args::parse(["--mus", "0"].iter().map(|s| s.to_string()), &[]).unwrap();
+        let err = RunConfig::default().apply_args(&mus0).unwrap_err();
+        assert!(err.to_string().contains("mus"), "{err}");
+        let empty =
+            Args::parse(["--lambdas", ""].iter().map(|s| s.to_string()), &[]).unwrap();
+        let err = RunConfig::default().apply_args(&empty).unwrap_err();
+        assert!(err.to_string().contains("lambdas"), "{err}");
+    }
+
+    #[test]
+    fn timing_resume_knobs_layer() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.stop_after_events.is_none() && cfg.sim_checkpoint.is_none());
+        cfg.apply_json(
+            &Json::parse(r#"{"stop_after_events": 5000, "sim_checkpoint": "out/sim.json"}"#)
+                .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.stop_after_events, Some(5000));
+        assert_eq!(
+            cfg.sim_checkpoint.as_deref(),
+            Some(std::path::Path::new("out/sim.json"))
+        );
+        // CLI wins over JSON
+        let args = Args::parse(
+            ["--stop-after-events", "250", "--sim-checkpoint", "other.json"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.stop_after_events, Some(250));
+        assert_eq!(cfg.sim_checkpoint.as_deref(), Some(std::path::Path::new("other.json")));
+        // host-side run-control knobs never enter the experiment label
+        assert!(!cfg.label().contains("checkpoint"), "{}", cfg.label());
+        let bad = Args::parse(
+            ["--stop-after-events", "x"].iter().map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        assert!(RunConfig::default().apply_args(&bad).is_err());
     }
 
     #[test]

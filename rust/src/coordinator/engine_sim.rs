@@ -54,7 +54,7 @@ use crate::coordinator::protocol::Protocol;
 use crate::coordinator::server::{PushOutcome, ServerConfig};
 use crate::coordinator::shard::ShardedServer;
 use crate::coordinator::tree::{Arch, PsTree};
-use crate::elastic::checkpoint::Checkpoint;
+use crate::elastic::checkpoint::{Checkpoint, SimCheckpoint};
 use crate::elastic::membership::{ChurnAction, ChurnEvent, ChurnRecord, ChurnSchedule, Membership};
 use crate::elastic::rescaler::{RescalePolicy, RescaleRecord, Rescaler};
 use crate::netsim::cluster::{jittered, ClusterSpec, Fabric};
@@ -67,6 +67,7 @@ use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
 use crate::straggler::adaptive::{AdaptiveController, AdaptiveRecord, AdaptiveSpec};
 use crate::straggler::hetero::{HeteroModel, HeteroSpec};
+use crate::util::json::Json;
 use crate::util::rng::Rng;
 
 /// Periodic model evaluation (the paper's Statistics Server, §3.2).
@@ -121,6 +122,16 @@ pub struct SimConfig {
     /// compressed payload. `none` (the default) takes the exact
     /// pre-codec path, bit for bit.
     pub compress: CodecSpec,
+    /// Stop the event loop after this many processed events and capture a
+    /// mid-flight [`SimCheckpoint`] into [`SimResult::sim_checkpoint`]
+    /// (timing-only runs; `None` = run to completion). Resume by
+    /// rebuilding the engine under the same config and calling
+    /// [`SimEngine::install_sim_checkpoint`] — the continued run is
+    /// bit-identical to an uninterrupted one.
+    pub stop_after_events: Option<u64>,
+    /// Where to write the mid-flight sim checkpoint when
+    /// `stop_after_events` fires (`None` = keep it in-memory only).
+    pub sim_checkpoint_path: Option<std::path::PathBuf>,
 }
 
 impl SimConfig {
@@ -152,6 +163,8 @@ impl SimConfig {
             hetero: HeteroSpec::none(),
             adaptive: AdaptiveSpec::none(),
             compress: CodecSpec::None,
+            stop_after_events: None,
+            sim_checkpoint_path: None,
         }
     }
 
@@ -240,6 +253,10 @@ pub struct SimResult {
     /// Final per-learner error-feedback residual L2 norms (empty when
     /// `compress` is `none` or the run is timing-only).
     pub residual_norms: Vec<f64>,
+    /// Mid-flight sim checkpoint, when [`SimConfig::stop_after_events`]
+    /// cut the run short (the other fields then describe the truncated
+    /// run, not a finished one).
+    pub sim_checkpoint: Option<SimCheckpoint>,
 }
 
 /// A gradient payload in flight. Boxed so timing-only runs (payload
@@ -284,6 +301,150 @@ enum Ev {
     RandomKill,
 }
 
+impl Ev {
+    /// Timing-only serialization for mid-flight sim checkpoints. Numeric
+    /// payloads (gradients, weight snapshots) never occur in timing runs;
+    /// [`SimEngine::capture_sim_checkpoint`] refuses numeric mode before
+    /// getting here, and the ensures below are the backstop.
+    fn to_json(&self) -> Result<Json> {
+        fn ev(kind: &str, rest: Vec<(&str, Json)>) -> Json {
+            let mut pairs = vec![("k", Json::str(kind))];
+            pairs.extend(rest);
+            Json::obj(pairs)
+        }
+        fn learner_ev(kind: &str, l: usize, inc: u64, ts: Timestamp) -> Json {
+            ev(
+                kind,
+                vec![
+                    ("l", Json::num(l as f64)),
+                    ("inc", Json::num(inc as f64)),
+                    ("ts", Json::num(ts as f64)),
+                ],
+            )
+        }
+        Ok(match self {
+            Ev::ComputeDone { learner, inc } => ev(
+                "compute",
+                vec![("l", Json::num(*learner as f64)), ("inc", Json::num(*inc as f64))],
+            ),
+            Ev::PushAtRoot { learner, inc, grad, ts } => {
+                anyhow::ensure!(grad.is_none(), "numeric gradient in a timing-only checkpoint");
+                learner_ev("push_root", *learner, *inc, *ts)
+            }
+            Ev::PushAtLeaf { learner, inc, grad, ts } => {
+                anyhow::ensure!(grad.is_none(), "numeric gradient in a timing-only checkpoint");
+                learner_ev("push_leaf", *learner, *inc, *ts)
+            }
+            Ev::RelayAtRoot { leaf, batch } => {
+                let mut flat = Vec::with_capacity(batch.len() * 3);
+                for (l, inc, grad, ts) in batch {
+                    anyhow::ensure!(
+                        grad.is_none(),
+                        "numeric gradient in a timing-only checkpoint"
+                    );
+                    flat.extend([*l as u64, *inc, *ts]);
+                }
+                ev(
+                    "relay",
+                    vec![("leaf", Json::num(*leaf as f64)), ("batch", Json::arr_u64(&flat))],
+                )
+            }
+            Ev::PullDone { learner, inc, snapshot, ts } => {
+                anyhow::ensure!(
+                    snapshot.is_none(),
+                    "weight snapshot in a timing-only checkpoint"
+                );
+                learner_ev("pull", *learner, *inc, *ts)
+            }
+            Ev::Broadcast { learner, inc, snapshot, ts } => {
+                anyhow::ensure!(
+                    snapshot.is_none(),
+                    "weight snapshot in a timing-only checkpoint"
+                );
+                learner_ev("bcast", *learner, *inc, *ts)
+            }
+            Ev::Churn { event } => ev(
+                "churn",
+                vec![
+                    ("at", Json::num(event.at)),
+                    ("l", Json::num(event.learner as f64)),
+                    (
+                        "action",
+                        Json::str(match event.action {
+                            ChurnAction::Kill => "kill",
+                            ChurnAction::Rejoin => "rejoin",
+                            ChurnAction::Join => "join",
+                        }),
+                    ),
+                ],
+            ),
+            Ev::RandomKill => ev("random_kill", vec![]),
+        })
+    }
+
+    fn from_json(v: &Json) -> Result<Ev> {
+        Ok(match v.get("k")?.as_str()? {
+            "compute" => Ev::ComputeDone {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+            },
+            "push_root" => Ev::PushAtRoot {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+                grad: None,
+                ts: v.get("ts")?.as_u64()?,
+            },
+            "push_leaf" => Ev::PushAtLeaf {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+                grad: None,
+                ts: v.get("ts")?.as_u64()?,
+            },
+            "relay" => {
+                let flat = v.get("batch")?.as_u64_vec()?;
+                anyhow::ensure!(
+                    flat.len() % 3 == 0,
+                    "relay batch length {} not a multiple of 3",
+                    flat.len()
+                );
+                Ev::RelayAtRoot {
+                    leaf: v.get("leaf")?.as_usize()?,
+                    batch: flat
+                        .chunks_exact(3)
+                        .map(|c| (c[0] as usize, c[1], None, c[2]))
+                        .collect(),
+                }
+            }
+            "pull" => Ev::PullDone {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+                snapshot: None,
+                ts: v.get("ts")?.as_u64()?,
+            },
+            "bcast" => Ev::Broadcast {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+                snapshot: None,
+                ts: v.get("ts")?.as_u64()?,
+            },
+            "churn" => Ev::Churn {
+                event: ChurnEvent {
+                    at: v.get("at")?.as_f64()?,
+                    learner: v.get("l")?.as_usize()?,
+                    action: match v.get("action")?.as_str()? {
+                        "kill" => ChurnAction::Kill,
+                        "rejoin" => ChurnAction::Rejoin,
+                        "join" => ChurnAction::Join,
+                        other => anyhow::bail!("unknown churn action {other:?}"),
+                    },
+                },
+            },
+            "random_kill" => Ev::RandomKill,
+            other => anyhow::bail!("unknown event kind {other:?}"),
+        })
+    }
+}
+
 struct Slot {
     state: LearnerState,
     /// Adv* staging buffer: the gradient (and its timestamp) waiting for
@@ -321,6 +482,21 @@ pub struct SimEngine<'a> {
     tree: PsTree,
     rng: Rng,
     barrier: Vec<usize>,
+    /// `in_barrier[l]` mirrors membership of `barrier` (the Vec keeps the
+    /// broadcast *order*, which fabric endpoint sequencing depends on; the
+    /// mask makes kill-time removal and backup-sync waiting checks O(1)
+    /// instead of O(λ) scans at datacenter scale).
+    in_barrier: Vec<bool>,
+    /// Reusable drain buffer for `maybe_broadcast` (swapped with
+    /// `barrier` so neither Vec surrenders its capacity per round).
+    waiting_scratch: Vec<usize>,
+    /// Scratch mask: backup-sync "is this learner in the waiting set".
+    waiting_mask: Vec<bool>,
+    /// Reusable live-learner list for the random failure process.
+    live_scratch: Vec<usize>,
+    /// Leaf → member learner ids, precomputed once ([`PsTree::members`]
+    /// is an O(λ) scan per call — ruinous per broadcast at λ ≈ 4096).
+    leaf_members: Vec<Vec<usize>>,
     /// Timestamp as of the last hardsync broadcast (guards against
     /// broadcasting before the root has folded every relayed gradient).
     last_bcast_ts: Timestamp,
@@ -383,6 +559,11 @@ pub struct SimEngine<'a> {
     /// all-dead run would spin on self-scheduled kills forever) and is
     /// re-armed by the next revive.
     random_armed: bool,
+    /// Set by [`SimEngine::install_sim_checkpoint`]: `run` then skips its
+    /// cold-start prologue (churn scheduling, injector arm, initial
+    /// compute kicks) — the restored event queue already holds the
+    /// mid-flight continuation.
+    resumed: bool,
 }
 
 impl<'a> SimEngine<'a> {
@@ -433,6 +614,10 @@ impl<'a> SimEngine<'a> {
         // each carrying its θ slice ([`crate::comm::stripe`]). S = 1
         // reproduces the classic single-tree period bit for bit.
         let bcast_period = tree.broadcast_plan().period(&cfg.cluster, cfg.model.bytes);
+        // Leaf membership is static for the life of the run: precompute it
+        // so broadcasts stop paying `tree.members`' O(λ) scan per leaf.
+        let leaf_members: Vec<Vec<usize>> =
+            (0..tree.n_leaves).map(|leaf| tree.members(leaf).collect()).collect();
         let n_params = theta0.len();
         let lr_copy = lr.clone();
         let server = ShardedServer::new(
@@ -461,7 +646,12 @@ impl<'a> SimEngine<'a> {
             leaves,
             tree,
             rng: Rng::new(cfg.seed),
-            barrier: Vec::new(),
+            barrier: Vec::with_capacity(lambda),
+            in_barrier: vec![false; lambda],
+            waiting_scratch: Vec::with_capacity(lambda),
+            waiting_mask: vec![false; lambda],
+            live_scratch: Vec::with_capacity(lambda),
+            leaf_members,
             last_bcast_ts: 0,
             snap_cache: None,
             snap_pool: Vec::new(),
@@ -502,6 +692,7 @@ impl<'a> SimEngine<'a> {
                 cfg.protocol.effective_n(lambda).max(1),
             ),
             random_armed: false,
+            resumed: false,
         }
     }
 
@@ -594,35 +785,51 @@ impl<'a> SimEngine<'a> {
             // the checked quota is the single source of the b < λ rule
             self.cfg.protocol.try_gradients_per_update(self.cfg.lambda)?;
         }
-        anyhow::ensure!(
-            self.membership.active_count() > 0,
-            "churn schedule defers every learner's join: nothing can start"
-        );
-        // Elastic runs normalize the server's quota/μ to the *initial*
-        // active set (deferred joins may make it smaller than λ).
-        if self.elastic_enabled() {
-            self.on_membership_change(0.0, None)?;
-        }
-        // `ChurnEvent` is `Copy` and `self.cfg` is a shared `'a` borrow:
-        // schedule straight off the config instead of cloning the whole
-        // event vector per run (it used to be re-cloned by every grid
-        // point and warm-start prologue).
-        let cfg = self.cfg;
-        for &ev in &cfg.churn.events {
-            self.q.schedule_at(ev.at, Ev::Churn { event: ev });
-        }
-        if self.injector.enabled() {
-            let dt = self.injector.next_kill_delay();
-            self.q.schedule_in(dt, Ev::RandomKill);
-            self.random_armed = true;
-        }
-        for l in 0..self.cfg.lambda {
-            if self.membership.is_live(l) {
-                self.start_compute(0.0, l);
+        // A resumed engine skips the cold-start prologue entirely: the
+        // restored event queue already carries the scheduled churn, the
+        // armed failure process, and every in-flight compute/push/pull.
+        // (The active-count check belongs to the prologue too — a resume
+        // may legitimately land mid-outage, with a rejoin still queued.)
+        if !self.resumed {
+            anyhow::ensure!(
+                self.membership.active_count() > 0,
+                "churn schedule defers every learner's join: nothing can start"
+            );
+            // Elastic runs normalize the server's quota/μ to the *initial*
+            // active set (deferred joins may make it smaller than λ).
+            if self.elastic_enabled() {
+                self.on_membership_change(0.0, None)?;
+            }
+            // `ChurnEvent` is `Copy` and `self.cfg` is a shared `'a`
+            // borrow: schedule straight off the config instead of cloning
+            // the whole event vector per run (it used to be re-cloned by
+            // every grid point and warm-start prologue).
+            let cfg = self.cfg;
+            for &ev in &cfg.churn.events {
+                self.q.schedule_at(ev.at, Ev::Churn { event: ev });
+            }
+            if self.injector.enabled() {
+                let dt = self.injector.next_kill_delay();
+                self.q.schedule_in(dt, Ev::RandomKill);
+                self.random_armed = true;
+            }
+            for l in 0..self.cfg.lambda {
+                if self.membership.is_live(l) {
+                    self.start_compute(0.0, l);
+                }
             }
         }
         let max_updates = self.cfg.max_updates.unwrap_or(u64::MAX);
-        while let Some((now, ev)) = self.q.pop() {
+        let stop_after = self.cfg.stop_after_events.unwrap_or(u64::MAX);
+        let mut stopped_early = false;
+        loop {
+            // Checked *before* the pop: event k+1 must still be pending
+            // when the checkpoint is cut, so the resumed run replays it.
+            if self.q.processed() >= stop_after {
+                stopped_early = !self.q.is_empty();
+                break;
+            }
+            let Some((now, ev)) = self.q.pop() else { break };
             if self.server.done() || self.server.updates >= max_updates {
                 break;
             }
@@ -646,6 +853,15 @@ impl<'a> SimEngine<'a> {
             }
         }
 
+        let sim_checkpoint = if stopped_early {
+            let ckpt = self.capture_sim_checkpoint()?;
+            if let Some(path) = &self.cfg.sim_checkpoint_path {
+                ckpt.save(path)?;
+            }
+            Some(ckpt)
+        } else {
+            None
+        };
         let final_eval = if self.numeric {
             let theta = self.server.assemble_weights();
             match &mut self.evaluator {
@@ -696,7 +912,422 @@ impl<'a> SimEngine<'a> {
             root_bytes_out: self.root_bytes_out,
             comm_bytes_by_learner: self.comm_bytes_by_learner,
             residual_norms: self.comm.map(|c| c.residual_norms()).unwrap_or_default(),
+            sim_checkpoint,
         })
+    }
+
+    /// Canonical label of the run configuration, recorded in mid-flight
+    /// sim checkpoints. Everything that shapes the trajectory
+    /// participates; `stop_after_events`, `sim_checkpoint_path`, and
+    /// `max_updates` deliberately do not (a resume legitimately changes
+    /// them).
+    fn config_fingerprint(cfg: &SimConfig) -> String {
+        format!(
+            "timing|{}|{:?}|mu{}|lambda{}|epochs{}|seed{}|shards{}|{:?}|{:?}|{:?}|{:?}|{:?}|ckpt{}|{:?}|{:?}|{:?}",
+            cfg.protocol.label(),
+            cfg.arch,
+            cfg.mu,
+            cfg.lambda,
+            cfg.epochs,
+            cfg.seed,
+            cfg.shards,
+            cfg.cluster,
+            cfg.compute,
+            cfg.model,
+            cfg.churn,
+            cfg.rescale,
+            cfg.checkpoint_every_updates,
+            cfg.hetero,
+            cfg.adaptive,
+            cfg.compress,
+        )
+    }
+
+    /// Capture the full mid-flight simulation state: the pending event
+    /// queue, per-learner slots, leaf relay queues and caches, the adv*
+    /// broadcast history, fabric contention horizons, membership ledger,
+    /// and a nested server checkpoint with every RNG stream. Timing-only
+    /// — numeric runs carry model-sized payloads in flight and checkpoint
+    /// at update boundaries instead (`checkpoint_every_updates`).
+    fn capture_sim_checkpoint(&self) -> Result<SimCheckpoint> {
+        anyhow::ensure!(
+            !self.numeric,
+            "mid-flight sim checkpoints cover timing-only runs; numeric runs \
+             checkpoint at update boundaries (checkpoint_every_updates)"
+        );
+        let mut streams: Vec<(&str, &Rng)> = vec![("engine", &self.rng)];
+        if self.hetero.enabled() {
+            streams.push(("hetero", self.hetero.rng()));
+        }
+        let server = Checkpoint::capture_full(
+            "sim-resume",
+            &self.server,
+            &streams,
+            self.comm.as_ref(),
+            self.adaptive.as_ref(),
+        );
+
+        let mut q_rows = Vec::new();
+        for (at, seq, ev) in self.q.entries() {
+            q_rows.push(Json::obj(vec![
+                ("at", Json::num(at)),
+                ("seq", Json::num(seq as f64)),
+                ("ev", ev.to_json()?),
+            ]));
+        }
+
+        let lambda = self.cfg.lambda;
+        let mut compute_cost = Vec::with_capacity(lambda);
+        let mut blocked_since = Vec::with_capacity(lambda);
+        let mut pipe_busy = Vec::with_capacity(lambda);
+        let mut pipe_waiting = Vec::with_capacity(lambda);
+        let mut inc = Vec::with_capacity(lambda);
+        let mut pending_ts = Vec::with_capacity(lambda);
+        let mut state_ts = Vec::with_capacity(lambda);
+        let mut state_steps = Vec::with_capacity(lambda);
+        let mut ov_compute = Vec::with_capacity(lambda);
+        let mut ov_exposed = Vec::with_capacity(lambda);
+        let mut ov_hidden = Vec::with_capacity(lambda);
+        for s in &self.slots {
+            anyhow::ensure!(
+                s.pending_grad.is_none(),
+                "numeric gradient staged in a timing-only checkpoint"
+            );
+            compute_cost.push(s.compute_cost);
+            blocked_since.push(s.blocked_since);
+            pipe_busy.push(s.pipe_busy as u64);
+            pipe_waiting.push(s.pipe_waiting as u64);
+            inc.push(s.inc);
+            pending_ts.push(s.pending_ts);
+            state_ts.push(s.state.ts);
+            state_steps.push(s.state.steps);
+            ov_compute.push(s.overlap.compute);
+            ov_exposed.push(s.overlap.comm_exposed);
+            ov_hidden.push(s.overlap.comm_hidden);
+        }
+        let slots = Json::obj(vec![
+            ("compute_cost", Json::arr_f64(&compute_cost)),
+            ("blocked_since", Json::arr_f64(&blocked_since)),
+            ("pipe_busy", Json::arr_u64(&pipe_busy)),
+            ("pipe_waiting", Json::arr_u64(&pipe_waiting)),
+            ("inc", Json::arr_u64(&inc)),
+            ("pending_ts", Json::arr_u64(&pending_ts)),
+            ("state_ts", Json::arr_u64(&state_ts)),
+            ("state_steps", Json::arr_u64(&state_steps)),
+            ("overlap_compute", Json::arr_f64(&ov_compute)),
+            ("overlap_exposed", Json::arr_f64(&ov_exposed)),
+            ("overlap_hidden", Json::arr_f64(&ov_hidden)),
+        ]);
+
+        let mut leaf_rows = Vec::with_capacity(self.leaves.len());
+        for leaf in &self.leaves {
+            anyhow::ensure!(
+                leaf.cache_snap.is_none(),
+                "weight snapshot cached in a timing-only checkpoint"
+            );
+            let mut flat = Vec::with_capacity(leaf.queue.len() * 3);
+            for (l, linc, grad, ts) in &leaf.queue {
+                anyhow::ensure!(
+                    grad.is_none(),
+                    "numeric gradient queued in a timing-only checkpoint"
+                );
+                flat.extend([*l as u64, *linc, *ts]);
+            }
+            leaf_rows.push(Json::obj(vec![
+                ("queue", Json::arr_u64(&flat)),
+                ("relay_busy", Json::Bool(leaf.relay_busy)),
+                ("cache_ts", Json::num(leaf.cache_ts as f64)),
+                ("cache_ready", Json::num(leaf.cache_ready)),
+            ]));
+        }
+
+        let mut recent_t = Vec::with_capacity(self.recent.len());
+        let mut recent_ts = Vec::with_capacity(self.recent.len());
+        for (t, ts, snap) in &self.recent {
+            anyhow::ensure!(
+                snap.is_none(),
+                "weight snapshot in the adv* history of a timing-only checkpoint"
+            );
+            recent_t.push(*t);
+            recent_ts.push(*ts);
+        }
+
+        let epoch_rows: Vec<Json> = self
+            .epoch_stats
+            .iter()
+            .map(|e| {
+                // train_loss is NaN in timing mode (no losses to average),
+                // which JSON cannot carry as a number — store the bits.
+                Json::obj(vec![
+                    ("epoch", Json::num(e.epoch as f64)),
+                    ("sim_time", Json::num(e.sim_time)),
+                    ("train_loss_bits", Json::str(format!("{:016x}", e.train_loss.to_bits()))),
+                    ("active_lambda", Json::num(e.active_lambda as f64)),
+                ])
+            })
+            .collect();
+
+        let rescale_rows: Vec<Json> = self
+            .rescale_log
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("at", Json::num(r.at)),
+                    ("active_lambda", Json::num(r.active_lambda as f64)),
+                    ("mu", Json::num(r.mu as f64)),
+                    ("quota", Json::num(r.quota as f64)),
+                    ("lr_factor", Json::num(r.lr_factor)),
+                ])
+            })
+            .collect();
+
+        let mut fab = Vec::new();
+        for (a, b, c, d) in self.fabric.endpoint_state() {
+            fab.extend([a, b, c, d]);
+        }
+
+        let barrier: Vec<u64> = self.barrier.iter().map(|&l| l as u64).collect();
+        let mut engine = vec![
+            ("events_processed", Json::num(self.q.processed() as f64)),
+            (
+                "queue",
+                Json::obj(vec![
+                    ("now", Json::num(self.q.now())),
+                    ("seq", Json::num(self.q.seq() as f64)),
+                    ("processed", Json::num(self.q.processed() as f64)),
+                    ("entries", Json::Arr(q_rows)),
+                ]),
+            ),
+            ("slots", slots),
+            ("leaves", Json::Arr(leaf_rows)),
+            ("barrier", Json::arr_u64(&barrier)),
+            ("last_bcast_ts", Json::num(self.last_bcast_ts as f64)),
+            ("recent_t", Json::arr_f64(&recent_t)),
+            ("recent_ts", Json::arr_u64(&recent_ts)),
+            ("membership", self.membership.to_json()),
+            ("injector_rng", Json::str(format!("{:016x}", self.injector.rng_state()))),
+            ("cur_mu", Json::num(self.cur_mu as f64)),
+            ("rescales", Json::Arr(rescale_rows)),
+            ("checkpoints_taken", Json::num(self.checkpoints_taken as f64)),
+            ("root_bytes_in", Json::num(self.root_bytes_in)),
+            ("root_bytes_out", Json::num(self.root_bytes_out)),
+            ("comm_bytes", Json::arr_f64(&self.comm_bytes_by_learner)),
+            ("epochs", Json::Arr(epoch_rows)),
+            (
+                "last_epoch_loss_bits",
+                Json::str(format!("{:016x}", self.last_epoch_loss.to_bits())),
+            ),
+            ("random_armed", Json::Bool(self.random_armed)),
+            ("fabric", Json::arr_f64(&fab)),
+        ];
+        if self.hetero.enabled() {
+            let degraded: Vec<u64> =
+                self.hetero.degraded_state().iter().map(|&d| d as u64).collect();
+            engine.push(("hetero_degraded", Json::arr_u64(&degraded)));
+        }
+        if let Some(c) = &self.last_checkpoint {
+            engine.push(("last_checkpoint", Json::str(c.to_json_string())));
+        }
+        Ok(SimCheckpoint::new(
+            &Self::config_fingerprint(self.cfg),
+            server,
+            Json::obj(engine),
+        ))
+    }
+
+    /// Install a mid-flight checkpoint into a freshly constructed engine
+    /// (same config, timing-only). The subsequent [`SimEngine::run`]
+    /// skips the cold-start prologue and continues the event stream
+    /// bit-identically to an uninterrupted run.
+    pub fn install_sim_checkpoint(&mut self, ckpt: &SimCheckpoint) -> Result<()> {
+        use anyhow::Context;
+        anyhow::ensure!(
+            !self.numeric,
+            "sim-checkpoint resume is timing-only (numeric runs restore \
+             server checkpoints at update boundaries)"
+        );
+        ckpt.ensure_fingerprint(&Self::config_fingerprint(self.cfg))?;
+        let restored = ckpt.server_checkpoint()?.restore()?;
+        self.server = restored.server;
+        self.rng = restored
+            .rngs
+            .get("engine")
+            .cloned()
+            .context("sim checkpoint missing the engine RNG stream")?;
+        if restored.adaptive.is_some() {
+            self.adaptive = restored.adaptive;
+        }
+        let e = ckpt.engine_state()?;
+
+        let qj = e.get("queue")?;
+        let mut entries = Vec::new();
+        for row in qj.get("entries")?.as_arr()? {
+            entries.push((
+                row.get("at")?.as_f64()?,
+                row.get("seq")?.as_u64()?,
+                Ev::from_json(row.get("ev")?)?,
+            ));
+        }
+        self.q = EventQueue::restore(
+            qj.get("now")?.as_f64()?,
+            qj.get("seq")?.as_u64()?,
+            qj.get("processed")?.as_u64()?,
+            entries,
+        );
+
+        let lambda = self.cfg.lambda;
+        let s = e.get("slots")?;
+        let compute_cost = s.get("compute_cost")?.as_f64_vec()?;
+        let blocked_since = s.get("blocked_since")?.as_f64_vec()?;
+        let pipe_busy = s.get("pipe_busy")?.as_u64_vec()?;
+        let pipe_waiting = s.get("pipe_waiting")?.as_u64_vec()?;
+        let inc = s.get("inc")?.as_u64_vec()?;
+        let pending_ts = s.get("pending_ts")?.as_u64_vec()?;
+        let state_ts = s.get("state_ts")?.as_u64_vec()?;
+        let state_steps = s.get("state_steps")?.as_u64_vec()?;
+        let ov_compute = s.get("overlap_compute")?.as_f64_vec()?;
+        let ov_exposed = s.get("overlap_exposed")?.as_f64_vec()?;
+        let ov_hidden = s.get("overlap_hidden")?.as_f64_vec()?;
+        anyhow::ensure!(
+            compute_cost.len() == lambda && inc.len() == lambda && state_ts.len() == lambda,
+            "sim checkpoint has {} learner slots, config has {lambda}",
+            compute_cost.len()
+        );
+        for (l, slot) in self.slots.iter_mut().enumerate() {
+            slot.compute_cost = compute_cost[l];
+            slot.blocked_since = blocked_since[l];
+            slot.pipe_busy = pipe_busy[l] != 0;
+            slot.pipe_waiting = pipe_waiting[l] != 0;
+            slot.inc = inc[l];
+            slot.pending_ts = pending_ts[l];
+            slot.state.ts = state_ts[l];
+            slot.state.steps = state_steps[l];
+            slot.overlap.compute = ov_compute[l];
+            slot.overlap.comm_exposed = ov_exposed[l];
+            slot.overlap.comm_hidden = ov_hidden[l];
+        }
+
+        let leaf_rows = e.get("leaves")?.as_arr()?;
+        anyhow::ensure!(
+            leaf_rows.len() == self.leaves.len(),
+            "sim checkpoint has {} leaves, tree has {}",
+            leaf_rows.len(),
+            self.leaves.len()
+        );
+        for (leaf, row) in self.leaves.iter_mut().zip(leaf_rows) {
+            let flat = row.get("queue")?.as_u64_vec()?;
+            anyhow::ensure!(flat.len() % 3 == 0, "leaf queue length not a multiple of 3");
+            leaf.queue =
+                flat.chunks_exact(3).map(|c| (c[0] as usize, c[1], None, c[2])).collect();
+            leaf.relay_busy = row.get("relay_busy")?.as_bool()?;
+            leaf.cache_ts = row.get("cache_ts")?.as_u64()?;
+            leaf.cache_ready = row.get("cache_ready")?.as_f64()?;
+            leaf.cache_snap = None;
+        }
+
+        self.barrier.clear();
+        self.in_barrier.iter_mut().for_each(|b| *b = false);
+        for x in e.get("barrier")?.as_u64_vec()? {
+            let l = x as usize;
+            anyhow::ensure!(l < lambda, "barrier learner {l} out of range (λ = {lambda})");
+            self.barrier.push(l);
+            self.in_barrier[l] = true;
+        }
+        self.last_bcast_ts = e.get("last_bcast_ts")?.as_u64()?;
+
+        self.recent.clear();
+        let recent_t = e.get("recent_t")?.as_f64_vec()?;
+        let recent_ts = e.get("recent_ts")?.as_u64_vec()?;
+        anyhow::ensure!(
+            recent_t.len() == recent_ts.len(),
+            "adv* history time/ts length mismatch"
+        );
+        for (t, ts) in recent_t.into_iter().zip(recent_ts) {
+            self.recent.push_back((t, ts, None));
+        }
+
+        let membership = Membership::from_json(e.get("membership")?)?;
+        anyhow::ensure!(
+            membership.total() == lambda,
+            "sim checkpoint membership covers {} learners, config has {lambda}",
+            membership.total()
+        );
+        self.membership = membership;
+        self.injector.restore_rng_state(
+            u64::from_str_radix(e.get("injector_rng")?.as_str()?, 16)
+                .context("bad injector RNG state")?,
+        );
+        if self.hetero.enabled() {
+            let h = restored
+                .rngs
+                .get("hetero")
+                .context("sim checkpoint missing the hetero RNG stream")?;
+            let degraded: Vec<bool> =
+                e.get("hetero_degraded")?.as_u64_vec()?.iter().map(|&x| x != 0).collect();
+            self.hetero.restore_state(h.state(), &degraded)?;
+        }
+        self.cur_mu = e.get("cur_mu")?.as_usize()?;
+        self.base_compute = self.cfg.compute.minibatch_secs(&self.cfg.model, self.cur_mu);
+        self.rescale_log = e
+            .get("rescales")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(RescaleRecord {
+                    at: r.get("at")?.as_f64()?,
+                    active_lambda: r.get("active_lambda")?.as_usize()?,
+                    mu: r.get("mu")?.as_usize()?,
+                    quota: r.get("quota")?.as_usize()?,
+                    lr_factor: r.get("lr_factor")?.as_f64()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.checkpoints_taken = e.get("checkpoints_taken")?.as_u64()?;
+        self.last_checkpoint = match e.opt("last_checkpoint") {
+            Some(c) => Some(Checkpoint::from_json_str(c.as_str()?)?),
+            None => None,
+        };
+        self.root_bytes_in = e.get("root_bytes_in")?.as_f64()?;
+        self.root_bytes_out = e.get("root_bytes_out")?.as_f64()?;
+        self.comm_bytes_by_learner = e.get("comm_bytes")?.as_f64_vec()?;
+        anyhow::ensure!(
+            self.comm_bytes_by_learner.len() == lambda,
+            "comm-bytes vector length mismatch"
+        );
+        self.epoch_stats = e
+            .get("epochs")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(EpochStat {
+                    epoch: r.get("epoch")?.as_usize()?,
+                    sim_time: r.get("sim_time")?.as_f64()?,
+                    train_loss: f64::from_bits(
+                        u64::from_str_radix(r.get("train_loss_bits")?.as_str()?, 16)
+                            .context("bad train-loss bits")?,
+                    ),
+                    test_loss: None,
+                    test_error_pct: None,
+                    active_lambda: r.get("active_lambda")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        self.last_epoch_loss = f64::from_bits(
+            u64::from_str_radix(e.get("last_epoch_loss_bits")?.as_str()?, 16)
+                .context("bad last-epoch-loss bits")?,
+        );
+        self.random_armed = e.get("random_armed")?.as_bool()?;
+
+        let fab = e.get("fabric")?.as_f64_vec()?;
+        anyhow::ensure!(fab.len() % 4 == 0, "fabric state length not a multiple of 4");
+        let rows: Vec<(f64, f64, f64, f64)> =
+            fab.chunks_exact(4).map(|c| (c[0], c[1], c[2], c[3])).collect();
+        self.fabric.restore_endpoint_state(&rows)?;
+
+        self.epoch_losses.clear();
+        self.snap_cache = None;
+        self.resumed = true;
+        Ok(())
     }
 
     /// Begin a new mini-batch: adv* learners first swap in the weights a
@@ -828,6 +1459,7 @@ impl<'a> SimEngine<'a> {
                 self.start_pull_base(now, l);
             } else {
                 self.barrier.push(l);
+                self.in_barrier[l] = true;
                 self.maybe_broadcast(now);
             }
         } else {
@@ -855,6 +1487,7 @@ impl<'a> SimEngine<'a> {
             Arch::Adv => {
                 if self.cfg.protocol.is_barrier() {
                     self.barrier.push(l);
+                    self.in_barrier[l] = true;
                     // broadcast fires from on_relay_at_root once the root
                     // has folded all λ gradients
                 } else {
@@ -1042,10 +1675,17 @@ impl<'a> SimEngine<'a> {
         let ts = self.server.timestamp();
         self.last_bcast_ts = ts;
         let snap = self.server_snapshot();
-        let waiting = std::mem::take(&mut self.barrier);
+        // Drain the barrier into a reusable scratch buffer, preserving
+        // arrival order — fabric endpoint sequencing depends on it. The
+        // swap (instead of `mem::take`) keeps both Vecs' capacity, so the
+        // hot path stops reallocating a λ-sized buffer every round.
+        std::mem::swap(&mut self.barrier, &mut self.waiting_scratch);
+        for &l in &self.waiting_scratch {
+            self.in_barrier[l] = false;
+        }
         match self.cfg.arch {
             Arch::Base => {
-                for l in waiting {
+                for &l in &self.waiting_scratch {
                     let inc = self.slots[l].inc;
                     let bytes = self.wire.pull_bytes();
                     self.root_bytes_out += bytes;
@@ -1066,34 +1706,54 @@ impl<'a> SimEngine<'a> {
                 // under backup-sync only the *waiting* set may be served —
                 // a learner still computing (one of the b stragglers)
                 // must not have a second compute loop started for it.
-                for leaf in 0..self.tree.n_leaves {
-                    let members: Vec<usize> = self
-                        .tree
-                        .members(leaf)
-                        .filter(|&l| {
-                            self.membership.is_live(l) && (!backup || waiting.contains(&l))
-                        })
-                        .collect();
-                    if members.is_empty() {
-                        continue;
+                if backup {
+                    for &l in &self.waiting_scratch {
+                        self.waiting_mask[l] = true;
                     }
-                    let bytes = self.wire.pull_bytes();
-                    self.root_bytes_out += bytes;
-                    let t1 = self
-                        .fabric
-                        .send_from_shards(now, &self.ps_eps, self.leaf_node(leaf), bytes);
-                    for l in members {
+                }
+                for (leaf, members) in self.leaf_members.iter().enumerate() {
+                    // The shards→leaf hop fires lazily on the first
+                    // eligible member, so skipped leaves cost nothing and
+                    // the fabric call order matches the old collect-first
+                    // code exactly (one send_from_shards, then the member
+                    // sends in member order).
+                    let mut t1: Option<f64> = None;
+                    for &l in members {
+                        if !self.membership.is_live(l) || (backup && !self.waiting_mask[l]) {
+                            continue;
+                        }
+                        let bytes = self.wire.pull_bytes();
+                        let start = match t1 {
+                            Some(t) => t,
+                            None => {
+                                self.root_bytes_out += bytes;
+                                let t = self.fabric.send_from_shards(
+                                    now,
+                                    &self.ps_eps,
+                                    self.leaf_node(leaf),
+                                    bytes,
+                                );
+                                t1 = Some(t);
+                                t
+                            }
+                        };
                         let inc = self.slots[l].inc;
                         let t =
-                            self.fabric.send(t1, self.leaf_node(leaf), self.node_of(l), bytes);
+                            self.fabric.send(start, self.leaf_node(leaf), self.node_of(l), bytes);
                         self.q.schedule_at(
                             t,
                             Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
                         );
                     }
                 }
+                if backup {
+                    for &l in &self.waiting_scratch {
+                        self.waiting_mask[l] = false;
+                    }
+                }
             }
         }
+        self.waiting_scratch.clear();
     }
 
     fn start_pull_base(&mut self, now: f64, l: usize) {
@@ -1215,9 +1875,16 @@ impl<'a> SimEngine<'a> {
     /// spinning on self-scheduled kills forever; a later revive re-arms.
     fn on_random_kill(&mut self, now: f64) -> Result<()> {
         self.random_armed = false;
-        let live = self.membership.live_ids();
-        if live.len() > 1 {
-            if let Some(victim) = self.injector.pick(&live) {
+        // fill the reusable scratch list instead of allocating a fresh
+        // live_ids() Vec per kill event
+        self.live_scratch.clear();
+        for l in 0..self.cfg.lambda {
+            if self.membership.is_live(l) {
+                self.live_scratch.push(l);
+            }
+        }
+        if self.live_scratch.len() > 1 {
+            if let Some(victim) = self.injector.pick(&self.live_scratch) {
                 self.apply_kill(now, victim)?;
                 if let Some(downtime) = self.injector.downtime() {
                     self.q.schedule_in(
@@ -1233,7 +1900,7 @@ impl<'a> SimEngine<'a> {
                 }
             }
         }
-        if !live.is_empty() {
+        if !self.live_scratch.is_empty() {
             let dt = self.injector.next_kill_delay();
             self.q.schedule_in(dt, Ev::RandomKill);
             self.random_armed = true;
@@ -1259,7 +1926,14 @@ impl<'a> SimEngine<'a> {
         if let Some(c) = self.comm.as_mut() {
             c.reset_residual(l);
         }
-        self.barrier.retain(|&x| x != l);
+        // O(λ) removal scan only when the victim is actually parked there
+        // (the common kill races a learner that is mid-compute or
+        // mid-push, where the old unconditional retain walked the whole
+        // barrier for nothing)
+        if self.in_barrier[l] {
+            self.in_barrier[l] = false;
+            self.barrier.retain(|&x| x != l);
+        }
         self.on_membership_change(now, Some(l))?;
         Ok(())
     }

@@ -166,6 +166,103 @@ impl Checkpoint {
     }
 }
 
+/// Sim-checkpoint file format version (independent of the server format —
+/// the server document is nested, with its own version field).
+pub const SIM_VERSION: u64 = 1;
+
+/// A mid-flight snapshot of the *whole* discrete-event simulation: the
+/// server checkpoint plus the engine's live state (pending event queue,
+/// in-flight messages, leaf caches, adv* broadcast history, fabric
+/// contention horizons, membership ledger, RNG streams). The sim engine
+/// builds and consumes the engine document; this type owns the envelope —
+/// versioning, config fingerprinting, and atomic save/load — so a resume
+/// against the wrong config or a truncated file fails up front instead of
+/// silently diverging.
+#[derive(Debug, Clone)]
+pub struct SimCheckpoint {
+    payload: Json,
+}
+
+impl SimCheckpoint {
+    /// Assemble the envelope. `fingerprint` is the canonical label of the
+    /// config the snapshot belongs to; restore requires an exact match.
+    pub fn new(fingerprint: &str, server: Checkpoint, engine: Json) -> SimCheckpoint {
+        SimCheckpoint {
+            payload: Json::obj(vec![
+                ("version", Json::num(SIM_VERSION as f64)),
+                ("fingerprint", Json::str(fingerprint)),
+                ("server_checkpoint", server.payload),
+                ("engine", engine),
+            ]),
+        }
+    }
+
+    /// The config fingerprint recorded at capture time.
+    pub fn fingerprint(&self) -> Result<&str> {
+        self.payload.get("fingerprint")?.as_str()
+    }
+
+    /// Error unless the snapshot was captured under `expected` — resuming
+    /// under a different (protocol, μ, λ, …) would replay nonsense.
+    pub fn ensure_fingerprint(&self, expected: &str) -> Result<()> {
+        let got = self.fingerprint()?;
+        anyhow::ensure!(
+            got == expected,
+            "sim checkpoint belongs to config {got:?}, resuming under {expected:?}"
+        );
+        Ok(())
+    }
+
+    /// The nested server checkpoint (weights, optimizer, staleness, …).
+    pub fn server_checkpoint(&self) -> Result<Checkpoint> {
+        Ok(Checkpoint { payload: self.payload.get("server_checkpoint")?.clone() })
+    }
+
+    /// The engine-state document (the sim engine interprets it).
+    pub fn engine_state(&self) -> Result<&Json> {
+        self.payload.get("engine")
+    }
+
+    /// Events the captured run had processed (provenance, no restore).
+    pub fn events_processed(&self) -> Result<u64> {
+        self.payload.get("engine")?.get("events_processed")?.as_u64()
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.payload.to_string()
+    }
+
+    pub fn from_json_str(text: &str) -> Result<SimCheckpoint> {
+        let payload = Json::parse(text).context("parsing sim checkpoint")?;
+        let c = SimCheckpoint { payload };
+        let version = c.payload.get("version")?.as_u64()?;
+        anyhow::ensure!(version == SIM_VERSION, "unsupported sim checkpoint version {version}");
+        c.fingerprint()?;
+        Ok(c)
+    }
+
+    /// Atomic write (temp file + rename), same contract as
+    /// [`Checkpoint::save`].
+    pub fn save(&self, path: &Path) -> Result<()> {
+        if let Some(parent) = path.parent() {
+            std::fs::create_dir_all(parent).ok();
+        }
+        let tmp = path.with_extension("tmp");
+        std::fs::write(&tmp, self.to_json_string())
+            .with_context(|| format!("writing {}", tmp.display()))?;
+        std::fs::rename(&tmp, path)
+            .with_context(|| format!("renaming into {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<SimCheckpoint> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        SimCheckpoint::from_json_str(&text)
+            .with_context(|| format!("loading {}", path.display()))
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -271,6 +368,37 @@ mod tests {
         let plain = Checkpoint::capture("plain", &orig, &[]).restore().unwrap();
         assert!(plain.comm.is_none());
         assert!(plain.adaptive.is_none());
+    }
+
+    #[test]
+    fn sim_checkpoint_envelope_roundtrips_and_guards() {
+        let orig = server(2);
+        let inner = Checkpoint::capture("sim-resume", &orig, &[]);
+        let engine = Json::obj(vec![
+            ("events_processed", Json::num(1234.0)),
+            ("queue", Json::obj(vec![("now", Json::num(7.5))])),
+        ]);
+        let fp = "timing:imagenet/1-softsync/mu16/lambda30";
+        let sim = SimCheckpoint::new(fp, inner, engine);
+        let back = SimCheckpoint::from_json_str(&sim.to_json_string()).unwrap();
+        assert_eq!(back.fingerprint().unwrap(), fp);
+        assert_eq!(back.events_processed().unwrap(), 1234);
+        back.ensure_fingerprint(fp).unwrap();
+        assert!(
+            back.ensure_fingerprint("timing:cifar10/hardsync/mu4/lambda8").is_err(),
+            "resume under a different config must be rejected"
+        );
+        let r = back.server_checkpoint().unwrap().restore().unwrap();
+        assert_eq!(r.server.assemble_weights().data, orig.assemble_weights().data);
+        let now = back.engine_state().unwrap().get("queue").unwrap().get("now").unwrap();
+        assert_eq!(now.as_f64().unwrap(), 7.5);
+
+        let path = std::env::temp_dir().join("rudra_test_sim_ckpt").join("s.json");
+        back.save(&path).unwrap();
+        let loaded = SimCheckpoint::load(&path).unwrap();
+        assert_eq!(loaded.to_json_string(), back.to_json_string());
+        assert!(SimCheckpoint::from_json_str(r#"{"version": 99, "fingerprint": "x"}"#).is_err());
+        assert!(SimCheckpoint::from_json_str("{").is_err());
     }
 
     #[test]

@@ -94,6 +94,10 @@ pub struct Membership {
     phases: Vec<Phase>,
     /// Death time per slot (meaningful while Dead).
     died_at: Vec<f64>,
+    /// Cached λ_active, maintained by every transition — the sim engine
+    /// reads the quorum size on each gradient push, which must not cost
+    /// an O(λ) scan at λ ≈ 4096.
+    live: usize,
     pub log: Vec<ChurnRecord>,
     /// death → rejoin gaps, in event-time seconds.
     pub recovery_secs: Vec<f64>,
@@ -105,6 +109,7 @@ impl Membership {
         Membership {
             phases: vec![Phase::Active; total],
             died_at: vec![0.0; total],
+            live: total,
             log: Vec::new(),
             recovery_secs: Vec::new(),
         }
@@ -117,6 +122,9 @@ impl Membership {
         for &l in joining {
             if l >= total {
                 bail!("joining learner id {l} out of range (λ slots = {total})");
+            }
+            if m.phases[l].is_live() {
+                m.live -= 1;
             }
             m.phases[l] = Phase::Joining;
         }
@@ -135,9 +143,15 @@ impl Membership {
         self.phases[l].is_live()
     }
 
-    /// λ_active: learners counted in the protocol quorum.
+    /// λ_active: learners counted in the protocol quorum. O(1) — the
+    /// count is maintained incrementally by the transition methods.
     pub fn active_count(&self) -> usize {
-        self.phases.iter().filter(|p| p.is_live()).count()
+        debug_assert_eq!(
+            self.live,
+            self.phases.iter().filter(|p| p.is_live()).count(),
+            "cached live count out of sync"
+        );
+        self.live
     }
 
     /// Ids currently counted in the quorum, ascending.
@@ -155,6 +169,7 @@ impl Membership {
         match self.phases[l] {
             Phase::Joining => {
                 self.phases[l] = Phase::Active;
+                self.live += 1;
                 self.record(at, l, ChurnKind::Join);
                 Ok(())
             }
@@ -191,6 +206,9 @@ impl Membership {
     pub fn kill(&mut self, l: usize, at: f64) -> Result<()> {
         match self.phases[l] {
             Phase::Active | Phase::Suspect | Phase::Rejoined | Phase::Joining => {
+                if self.phases[l].is_live() {
+                    self.live -= 1;
+                }
                 self.phases[l] = Phase::Dead;
                 self.died_at[l] = at;
                 self.record(at, l, ChurnKind::Kill);
@@ -206,6 +224,7 @@ impl Membership {
         match self.phases[l] {
             Phase::Dead => {
                 self.phases[l] = Phase::Rejoined;
+                self.live += 1;
                 let downtime = (at - self.died_at[l]).max(0.0);
                 self.recovery_secs.push(downtime);
                 self.record(at, l, ChurnKind::Rejoin);
@@ -214,6 +233,86 @@ impl Membership {
             p => bail!("learner {l} cannot rejoin from {:?}", p.label()),
         }
     }
+
+    /// Serialize the full ledger (phases, death times, churn log,
+    /// recovery gaps) for a mid-flight sim checkpoint. The cached live
+    /// count is recomputed on restore rather than stored.
+    pub fn to_json(&self) -> crate::util::json::Json {
+        use crate::util::json::Json;
+        let log: Vec<Json> = self
+            .log
+            .iter()
+            .map(|r| {
+                Json::obj(vec![
+                    ("at", Json::num(r.at)),
+                    ("learner", Json::num(r.learner as f64)),
+                    ("kind", Json::str(r.kind.label())),
+                    ("active_after", Json::num(r.active_after as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            (
+                "phases",
+                Json::Arr(self.phases.iter().map(|p| Json::str(p.label())).collect()),
+            ),
+            ("died_at", Json::arr_f64(&self.died_at)),
+            ("log", Json::Arr(log)),
+            ("recovery_secs", Json::arr_f64(&self.recovery_secs)),
+        ])
+    }
+
+    /// Rebuild a ledger from [`Membership::to_json`].
+    pub fn from_json(v: &crate::util::json::Json) -> Result<Membership> {
+        let phases = v
+            .get("phases")?
+            .as_arr()?
+            .iter()
+            .map(|p| phase_from_label(p.as_str()?))
+            .collect::<Result<Vec<Phase>>>()?;
+        let died_at = v.get("died_at")?.as_f64_vec()?;
+        if died_at.len() != phases.len() {
+            bail!("membership checkpoint: phases/died_at length mismatch");
+        }
+        let log = v
+            .get("log")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(ChurnRecord {
+                    at: r.get("at")?.as_f64()?,
+                    learner: r.get("learner")?.as_usize()?,
+                    kind: churn_kind_from_label(r.get("kind")?.as_str()?)?,
+                    active_after: r.get("active_after")?.as_usize()?,
+                })
+            })
+            .collect::<Result<Vec<ChurnRecord>>>()?;
+        let recovery_secs = v.get("recovery_secs")?.as_f64_vec()?;
+        let live = phases.iter().filter(|p| p.is_live()).count();
+        Ok(Membership { phases, died_at, live, log, recovery_secs })
+    }
+}
+
+fn phase_from_label(s: &str) -> Result<Phase> {
+    Ok(match s {
+        "joining" => Phase::Joining,
+        "active" => Phase::Active,
+        "suspect" => Phase::Suspect,
+        "dead" => Phase::Dead,
+        "rejoined" => Phase::Rejoined,
+        other => bail!("unknown membership phase {other:?}"),
+    })
+}
+
+fn churn_kind_from_label(s: &str) -> Result<ChurnKind> {
+    Ok(match s {
+        "join" => ChurnKind::Join,
+        "suspect" => ChurnKind::Suspect,
+        "recover" => ChurnKind::Recover,
+        "kill" => ChurnKind::Kill,
+        "rejoin" => ChurnKind::Rejoin,
+        other => bail!("unknown churn kind {other:?}"),
+    })
 }
 
 /// A scheduled churn action.
@@ -417,6 +516,31 @@ mod tests {
             ]
         );
         assert_eq!(m.log[3].active_after, 3);
+    }
+
+    #[test]
+    fn ledger_json_roundtrip_preserves_state() {
+        let mut m = Membership::with_joining(4, &[3]).unwrap();
+        m.activate(3, 1.0).unwrap();
+        m.kill(2, 3.0).unwrap();
+        m.rejoin(2, 7.5).unwrap();
+        m.suspect(1, 8.0).unwrap();
+        m.kill(0, 9.0).unwrap();
+        let back = Membership::from_json(&m.to_json()).unwrap();
+        assert_eq!(back.active_count(), m.active_count());
+        for l in 0..4 {
+            assert_eq!(back.phase(l), m.phase(l), "learner {l}");
+        }
+        assert_eq!(back.recovery_secs, m.recovery_secs);
+        let kinds: Vec<ChurnKind> = back.log.iter().map(|r| r.kind).collect();
+        let want: Vec<ChurnKind> = m.log.iter().map(|r| r.kind).collect();
+        assert_eq!(kinds, want);
+        // died_at survives: a post-restore rejoin computes the same gap
+        // an uninterrupted run would have.
+        let mut a = m.clone();
+        let mut b = back;
+        assert_eq!(a.rejoin(0, 12.25).unwrap(), b.rejoin(0, 12.25).unwrap());
+        assert_eq!(a.recovery_secs, b.recovery_secs);
     }
 
     #[test]

@@ -82,10 +82,51 @@ pub fn resolve_jobs(jobs: usize) -> usize {
 }
 
 /// Bench-side override of the auto default: `RUDRA_JOBS=<n>` pins the
-/// worker count (0/unset = auto). Lets CI and perf investigations run
-/// grids serially without editing the bench.
+/// worker count (0/unset/empty = auto). Lets CI and perf investigations
+/// run grids serially without editing the bench.
+///
+/// Malformed values abort with a clear message instead of silently
+/// falling back to auto — a typo'd CI variable must not quietly change
+/// the benchmark shape.
 pub fn env_jobs() -> usize {
-    std::env::var("RUDRA_JOBS").ok().and_then(|v| v.parse().ok()).unwrap_or(0)
+    match parse_jobs(std::env::var("RUDRA_JOBS").ok().as_deref()) {
+        Ok(jobs) => jobs,
+        Err(e) => panic!("RUDRA_JOBS: {e}"),
+    }
+}
+
+/// Strict parse for a worker-count env override: unset or empty means
+/// auto (`0`); otherwise the value must be a non-negative integer.
+pub fn parse_jobs(value: Option<&str>) -> Result<usize, String> {
+    let Some(v) = value else { return Ok(0) };
+    let t = v.trim();
+    if t.is_empty() {
+        return Ok(0);
+    }
+    t.parse::<usize>()
+        .map_err(|_| format!("expected a non-negative integer, got {v:?}"))
+}
+
+/// Boolean env knob (`RUDRA_QUICK` and friends): accepts the standard
+/// truthy/falsy spellings and aborts on anything else, so `=true` can
+/// never silently mean *off*.
+pub fn env_truthy(name: &str) -> bool {
+    match parse_truthy(std::env::var(name).ok().as_deref()) {
+        Ok(b) => b,
+        Err(e) => panic!("{name}: {e}"),
+    }
+}
+
+/// Strict parse for a boolean env value: unset/empty/`0`/`false`/`no`/
+/// `off` are false, `1`/`true`/`yes`/`on` are true (case-insensitive);
+/// anything else is an error naming the offending value.
+pub fn parse_truthy(value: Option<&str>) -> Result<bool, String> {
+    let Some(v) = value else { return Ok(false) };
+    match v.trim().to_ascii_lowercase().as_str() {
+        "" | "0" | "false" | "no" | "off" => Ok(false),
+        "1" | "true" | "yes" | "on" => Ok(true),
+        _ => Err(format!("expected a boolean (1/0/true/false/yes/no/on/off), got {v:?}")),
+    }
 }
 
 /// Parallel point executor: run `f(0..n)` on up to `jobs` scoped worker
@@ -102,7 +143,10 @@ pub fn env_jobs() -> usize {
 /// of the *smallest* failing index.
 ///
 /// A panicking `f` aborts the whole grid when the scope joins (same as
-/// the serial loop).
+/// the serial loop), and the *original* panic is what propagates: the
+/// results Mutex is poisoned by the first panic, so sibling workers and
+/// the final collection recover the inner value instead of stacking
+/// unrelated "poisoned lock" panics on top of the real one.
 pub fn run_indexed<T, F>(jobs: usize, n: usize, f: F) -> Result<Vec<T>>
 where
     T: Send,
@@ -125,11 +169,15 @@ where
                     }
                     local.push((i, f(i)));
                 }
-                done.lock().expect("sweep worker poisoned the result lock").extend(local);
+                // A sibling's panic poisons the lock; the data is still
+                // intact, and dying here would bury the original panic
+                // under ours. Recover and keep going — the scope join
+                // re-raises the first panic.
+                done.lock().unwrap_or_else(|e| e.into_inner()).extend(local);
             });
         }
     });
-    let mut collected = done.into_inner().expect("sweep worker poisoned the result lock");
+    let mut collected = done.into_inner().unwrap_or_else(|e| e.into_inner());
     collected.sort_by_key(|(i, _)| *i);
     debug_assert_eq!(collected.len(), n, "every grid index runs exactly once");
     let mut out = Vec::with_capacity(n);
@@ -194,6 +242,8 @@ impl<'a> Sweep<'a> {
             hetero: cfg.hetero.clone(),
             adaptive: cfg.adaptive.clone(),
             compress: cfg.compress,
+            stop_after_events: None,
+            sim_checkpoint_path: None,
         };
         let theta0 = warmstarted(self, cfg)?;
         let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
@@ -330,6 +380,8 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         hetero: crate::straggler::hetero::HeteroSpec::none(),
         adaptive: crate::straggler::adaptive::AdaptiveSpec::none(),
         compress: crate::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();
@@ -373,11 +425,69 @@ mod tests {
         }
     }
 
+    // Regression (panic masking): a panicking grid point used to poison
+    // the results Mutex, so sibling workers died on an `expect` and the
+    // scope join surfaced *their* "poisoned lock" panic instead of the
+    // original one. The executor now recovers the poisoned lock, and the
+    // first panic is what propagates.
+    #[test]
+    fn run_indexed_propagates_the_original_panic() {
+        for jobs in [2usize, 4] {
+            let caught = std::panic::catch_unwind(|| {
+                let _ = run_indexed(jobs, 8, |i| {
+                    if i == 2 {
+                        panic!("deliberate grid-point panic at {i}");
+                    }
+                    Ok(i)
+                });
+            })
+            .expect_err("the grid-point panic must reach the caller");
+            let msg = caught
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| caught.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_default();
+            assert!(
+                msg.contains("deliberate grid-point panic"),
+                "jobs={jobs}: original panic buried, got {msg:?}"
+            );
+        }
+    }
+
     #[test]
     fn jobs_resolution() {
         assert!(default_jobs() >= 1);
         assert_eq!(resolve_jobs(1), 1);
         assert_eq!(resolve_jobs(7), 7);
         assert_eq!(resolve_jobs(0), default_jobs());
+    }
+
+    // Regression (silent env misparse): `RUDRA_JOBS=4x` used to fall
+    // back to auto without a word; malformed values are now hard errors.
+    #[test]
+    fn jobs_env_parse_is_strict() {
+        assert_eq!(parse_jobs(None), Ok(0));
+        assert_eq!(parse_jobs(Some("")), Ok(0));
+        assert_eq!(parse_jobs(Some(" 4 ")), Ok(4));
+        assert_eq!(parse_jobs(Some("0")), Ok(0));
+        assert!(parse_jobs(Some("4x")).is_err());
+        assert!(parse_jobs(Some("-1")).is_err());
+        assert!(parse_jobs(Some("auto")).is_err());
+    }
+
+    // Regression (silent env misparse): `RUDRA_QUICK=true`/`yes` used to
+    // mean *off* (only "1" counted). Standard truthy spellings now parse;
+    // anything unrecognized is a hard error.
+    #[test]
+    fn truthy_env_parse_accepts_standard_forms() {
+        for v in ["1", "true", "TRUE", "yes", "on", " Yes "] {
+            assert_eq!(parse_truthy(Some(v)), Ok(true), "{v:?}");
+        }
+        for v in ["0", "false", "no", "off", ""] {
+            assert_eq!(parse_truthy(Some(v)), Ok(false), "{v:?}");
+        }
+        assert_eq!(parse_truthy(None), Ok(false));
+        assert!(parse_truthy(Some("quick")).is_err());
+        assert!(parse_truthy(Some("2")).is_err());
     }
 }

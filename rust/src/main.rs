@@ -11,8 +11,9 @@ use anyhow::Result;
 
 use rudra::config::RunConfig;
 use rudra::coordinator::engine_live::{run_live, LiveConfig, LiveElastic};
-use rudra::coordinator::engine_sim::{run_sim, SimConfig};
+use rudra::coordinator::engine_sim::{SimConfig, SimEngine};
 use rudra::coordinator::protocol::Protocol;
+use rudra::elastic::checkpoint::SimCheckpoint;
 use rudra::elastic::rescaler::RescalePolicy;
 use rudra::harness::sweep::Sweep;
 use rudra::harness::Workspace;
@@ -53,6 +54,15 @@ comm:         --compress none|topk:<frac>|qsgd:<bits> (gradient codec with
                 time) [all engines]
               --comm-csv FILE (sim: per-learner compressed-bytes +
                 residual-norm rows)
+scale/resume: --max-updates N (timing: hard cap on weight updates — quick
+                CI points at datacenter λ)
+              --stop-after-events N (timing: halt after N processed events
+                and capture a mid-flight sim checkpoint; the count is
+                absolute, so a resume passes the total, not a remainder)
+              --sim-checkpoint FILE (timing: where that checkpoint is
+                written; JSON keys stop_after_events / sim_checkpoint)
+              --resume FILE (timing: install a sim checkpoint captured
+                under the *same* config and continue bit-identically)
 ";
 
 fn main() {
@@ -372,14 +382,28 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.hetero = cfg.hetero.clone();
     sim_cfg.adaptive = cfg.adaptive.clone();
     sim_cfg.compress = cfg.compress;
-    let r = run_sim(
+    sim_cfg.stop_after_events = cfg.stop_after_events;
+    sim_cfg.sim_checkpoint_path = cfg.sim_checkpoint.clone();
+    if args.get("max-updates").is_some() {
+        sim_cfg.max_updates = Some(args.u64_or("max-updates", 0)?);
+    }
+    let mut engine = SimEngine::new(
         &sim_cfg,
         rudra::params::FlatVec::zeros(0),
         Optimizer::new(rudra::params::optimizer::OptimizerKind::Sgd, 0.0, 0),
         cfg.lr_policy(),
         None,
         None,
-    )?;
+    );
+    if let Some(path) = args.get("resume") {
+        let ckpt = SimCheckpoint::load(std::path::Path::new(path))?;
+        println!(
+            "resuming from {path} ({} events already processed)",
+            ckpt.events_processed()?
+        );
+        engine.install_sim_checkpoint(&ckpt)?;
+    }
+    let r = engine.run()?;
     println!(
         "{}: {} epochs in simulated {}  ({} updates, ⟨σ⟩={:.2}, overlap {:.2}%, {} events)",
         cfg.label(),
@@ -402,6 +426,20 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     }
     if r.checkpoints_taken > 0 {
         println!("checkpoints: {} captured", r.checkpoints_taken);
+    }
+    if r.sim_checkpoint.is_some() {
+        match &sim_cfg.sim_checkpoint_path {
+            Some(p) => println!(
+                "sim checkpoint: stopped after {} events → {}",
+                r.events_processed,
+                p.display()
+            ),
+            None => println!(
+                "sim checkpoint: stopped after {} events (in-memory only; \
+                 pass --sim-checkpoint FILE to persist)",
+                r.events_processed
+            ),
+        }
     }
     if !cfg.hetero.is_quiet() || r.dropped_gradients > 0 {
         println!(

@@ -235,6 +235,38 @@ impl Fabric {
             self.ingress[e].busy_total / horizon
         }
     }
+
+    /// Dump every endpoint's mutable state as
+    /// `(egress_busy_until, egress_busy_total, ingress_busy_until,
+    /// ingress_busy_total)` rows, for a mid-flight sim checkpoint. The
+    /// topology (endpoint count, single-duplex marks) is derived from
+    /// config and not included.
+    pub fn endpoint_state(&self) -> Vec<(f64, f64, f64, f64)> {
+        self.egress
+            .iter()
+            .zip(&self.ingress)
+            .map(|(e, i)| (e.busy_until, e.busy_total, i.busy_until, i.busy_total))
+            .collect()
+    }
+
+    /// Install endpoint state captured by [`Fabric::endpoint_state`] into
+    /// a freshly built fabric of the same topology.
+    pub fn restore_endpoint_state(&mut self, rows: &[(f64, f64, f64, f64)]) -> Result<()> {
+        if rows.len() != self.egress.len() {
+            bail!(
+                "fabric checkpoint has {} endpoints, topology has {}",
+                rows.len(),
+                self.egress.len()
+            );
+        }
+        for (n, &(eb, et, ib, it)) in rows.iter().enumerate() {
+            self.egress[n].busy_until = eb;
+            self.egress[n].busy_total = et;
+            self.ingress[n].busy_until = ib;
+            self.ingress[n].busy_total = it;
+        }
+        Ok(())
+    }
 }
 
 /// Draw a jittered compute duration (with optional straggler injection).
@@ -371,6 +403,24 @@ mod tests {
         assert_eq!(d2, 2.0);
         let d3 = e.reserve(5.0, 1.0); // idle gap then new reservation
         assert_eq!(d3, 6.0);
+    }
+
+    #[test]
+    fn endpoint_state_roundtrip_replays_contention() {
+        let mut a = Fabric::new(ClusterSpec::p775(), 4);
+        a.set_single_duplex(0);
+        a.send(0.0, 1, 0, 300.0e6);
+        a.send(0.1, 2, 0, 300.0e6);
+        let rows = a.endpoint_state();
+        let mut b = Fabric::new(ClusterSpec::p775(), 4);
+        b.set_single_duplex(0);
+        b.restore_endpoint_state(&rows).unwrap();
+        // identical queueing from here on, to the bit
+        let ta = a.send(0.2, 3, 0, 300.0e6);
+        let tb = b.send(0.2, 3, 0, 300.0e6);
+        assert_eq!(ta.to_bits(), tb.to_bits());
+        assert_eq!(a.ingress_utilization(0, 10.0), b.ingress_utilization(0, 10.0));
+        assert!(b.restore_endpoint_state(&rows[..2]).is_err(), "topology mismatch rejected");
     }
 
     #[test]

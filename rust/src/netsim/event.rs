@@ -100,6 +100,13 @@ impl<T> EventQueue<T> {
     }
 
     /// Schedule `payload` `delay` seconds from now.
+    ///
+    /// `delay` must be non-negative. Debug builds panic on a negative
+    /// delay; release builds delegate to [`EventQueue::schedule_at`],
+    /// whose past-time clamp fires the event at `now` — immediately and
+    /// deterministically, mirroring the NaN containment above. (A NaN
+    /// delay follows the same NaN contract: debug panic, release clamp
+    /// to `now`.)
     pub fn schedule_in(&mut self, delay: f64, payload: T) {
         debug_assert!(delay >= 0.0, "negative delay {delay}");
         self.schedule_at(self.now + delay, payload);
@@ -112,6 +119,49 @@ impl<T> EventQueue<T> {
         self.now = ev.at;
         self.processed += 1;
         Some((ev.at, ev.payload))
+    }
+
+    /// Next sequence number to be assigned (part of the queue's
+    /// checkpointable state — ties between a restored event and a newly
+    /// scheduled one must break exactly as they would have uninterrupted).
+    pub fn seq(&self) -> u64 {
+        self.seq
+    }
+
+    /// Non-destructive snapshot of every pending event as
+    /// `(at, seq, payload)` triples sorted in pop order. Feeding the
+    /// triples to [`EventQueue::restore`] rebuilds a queue that pops the
+    /// identical sequence.
+    pub fn snapshot(&self) -> Vec<(f64, u64, T)>
+    where
+        T: Clone,
+    {
+        self.entries().into_iter().map(|(at, seq, p)| (at, seq, p.clone())).collect()
+    }
+
+    /// Borrowing variant of [`EventQueue::snapshot`] for payloads that are
+    /// expensive (or impossible) to clone — the caller serializes through
+    /// the references.
+    pub fn entries(&self) -> Vec<(f64, u64, &T)> {
+        let mut entries: Vec<&Scheduled<T>> = self.heap.iter().collect();
+        entries.sort_by(|a, b| {
+            a.at.partial_cmp(&b.at)
+                .unwrap_or(Ordering::Equal)
+                .then_with(|| a.seq.cmp(&b.seq))
+        });
+        entries.into_iter().map(|s| (s.at, s.seq, &s.payload)).collect()
+    }
+
+    /// Rebuild a queue from checkpointed state: `now`/`seq`/`processed`
+    /// counters plus the pending `(at, seq, payload)` entries from
+    /// [`EventQueue::snapshot`]. Sequence numbers are installed verbatim
+    /// so FIFO tie-breaks replay bit-identically.
+    pub fn restore(now: f64, seq: u64, processed: u64, entries: Vec<(f64, u64, T)>) -> Self {
+        let mut heap = BinaryHeap::with_capacity(entries.len().max(16));
+        for (at, s, payload) in entries {
+            heap.push(Scheduled { at, seq: s, payload });
+        }
+        EventQueue { heap, now, seq, processed }
     }
 }
 
@@ -187,6 +237,61 @@ mod tests {
         // first at now, the rest in time order — no corruption.
         let order: Vec<(f64, i32)> = std::iter::from_fn(|| q.pop()).collect();
         assert_eq!(order, vec![(5.0, 3), (7.0, 4), (9.0, 2)]);
+    }
+
+    // Regression (release clamp contract): `schedule_in` with a negative
+    // delay only `debug_assert`s; release builds clamp via `schedule_at`
+    // so the event fires at `now`. Pin the clamp the same way the NaN
+    // tests above pin theirs — the containment behavior is part of the
+    // method's documented contract, not an accident.
+    #[cfg(not(debug_assertions))]
+    #[test]
+    fn negative_delay_clamps_to_now_in_release() {
+        let mut q = EventQueue::new();
+        q.schedule_at(5.0, 1);
+        q.pop(); // now = 5.0
+        q.schedule_at(9.0, 2);
+        q.schedule_in(-3.0, 3); // clamped to now = 5.0
+        q.schedule_in(2.0, 4);
+        let order: Vec<(f64, i32)> = std::iter::from_fn(|| q.pop()).collect();
+        assert_eq!(order, vec![(5.0, 3), (7.0, 4), (9.0, 2)]);
+    }
+
+    #[cfg(debug_assertions)]
+    #[test]
+    #[should_panic(expected = "negative delay")]
+    fn negative_delay_panics_in_debug() {
+        let mut q = EventQueue::new();
+        q.schedule_in(-1.0, 1);
+    }
+
+    #[test]
+    fn snapshot_restore_replays_identically() {
+        let mut q = EventQueue::new();
+        q.schedule_at(2.0, "b");
+        q.schedule_at(1.0, "a");
+        q.pop(); // now = 1.0, processed = 1
+        q.schedule_in(0.5, "tie1");
+        q.schedule_at(1.5, "tie2"); // same time, later seq
+        q.schedule_at(3.0, "d");
+
+        let snap = q.snapshot();
+        let mut restored = EventQueue::restore(q.now(), q.seq(), q.processed(), snap);
+        assert_eq!(restored.now(), q.now());
+        assert_eq!(restored.seq(), q.seq());
+        assert_eq!(restored.processed(), q.processed());
+
+        // Both queues must pop the same sequence, including the FIFO
+        // tie-break at t=1.5, and assign the same seq to new events.
+        restored.schedule_at(1.5, "tie3");
+        q.schedule_at(1.5, "tie3");
+        loop {
+            let (a, b) = (q.pop(), restored.pop());
+            assert_eq!(a, b);
+            if a.is_none() {
+                break;
+            }
+        }
     }
 
     #[test]

@@ -45,6 +45,17 @@ impl FailureInjector {
         self.mean_interarrival > 0.0
     }
 
+    /// Raw RNG state, for mid-flight sim checkpoints.
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    /// Install a checkpointed [`FailureInjector::rng_state`], resuming
+    /// the exact kill/downtime/victim stream.
+    pub fn restore_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+
     /// Seconds until the next random kill (exponential interarrival).
     /// Only meaningful when [`FailureInjector::enabled`].
     pub fn next_kill_delay(&mut self) -> f64 {

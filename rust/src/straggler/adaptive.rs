@@ -155,7 +155,10 @@ impl AdaptiveController {
     /// would rebuild the controller at the *config* n and with zeroed
     /// baselines — silently undoing every retune and mis-differencing
     /// the first post-restore window (the PR-4 regression). The decision
-    /// log is run-local reporting and is not serialized.
+    /// log rides along too: a mid-flight resume must report the same
+    /// [`AdaptiveRecord`] history an uninterrupted run would, so pre-cut
+    /// decisions cannot be dropped on the floor. Floats in the log are
+    /// stored as IEEE 754 bit patterns (hex) so resume stays bit-exact.
     pub fn to_json(&self) -> crate::util::json::Json {
         use crate::util::json::Json;
         Json::obj(vec![
@@ -165,16 +168,58 @@ impl AdaptiveController {
             ("last_count", Json::num(self.last_count as f64)),
             ("last_sum", Json::num(self.last_sum)),
             ("last_epoch_time", Json::num(self.last_epoch_time)),
+            (
+                "log",
+                Json::Arr(
+                    self.log
+                        .iter()
+                        .map(|r| {
+                            Json::obj(vec![
+                                ("epoch", Json::num(r.epoch as f64)),
+                                (
+                                    "observed_sigma_bits",
+                                    Json::str(format!("{:016x}", r.observed_sigma.to_bits())),
+                                ),
+                                (
+                                    "epoch_secs_bits",
+                                    Json::str(format!("{:016x}", r.epoch_secs.to_bits())),
+                                ),
+                                ("old_n", Json::num(r.old_n as f64)),
+                                ("new_n", Json::num(r.new_n as f64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
     /// Rebuild a controller from [`AdaptiveController::to_json`] output
     /// (self-contained: the target/deadband ride along, so restore needs
-    /// no config). The log starts empty — decisions before the
-    /// checkpoint were already reported by the run that made them.
+    /// no config).
     pub fn from_json(j: &crate::util::json::Json) -> anyhow::Result<AdaptiveController> {
         let n = j.get("n")?.as_usize()?;
         anyhow::ensure!(n >= 1, "adaptive checkpoint with n = 0");
+        let bits = |r: &crate::util::json::Json, key: &str| -> anyhow::Result<f64> {
+            let s = r.get(key)?.as_str()?;
+            let raw = u64::from_str_radix(s, 16)
+                .map_err(|_| anyhow::anyhow!("bad float bits {s:?} for {key}"))?;
+            Ok(f64::from_bits(raw))
+        };
+        let log = j
+            .get("log")?
+            .as_arr()?
+            .iter()
+            .map(|r| {
+                Ok(AdaptiveRecord {
+                    epoch: r.get("epoch")?.as_usize()?,
+                    observed_sigma: bits(r, "observed_sigma_bits")?,
+                    epoch_secs: bits(r, "epoch_secs_bits")?,
+                    old_n: r.get("old_n")?.as_usize()?,
+                    new_n: r.get("new_n")?.as_usize()?,
+                })
+            })
+            .collect::<anyhow::Result<Vec<_>>>()?;
         Ok(AdaptiveController {
             target: j.get("target")?.as_f64()?,
             deadband: j.get("deadband")?.as_f64()?,
@@ -182,7 +227,7 @@ impl AdaptiveController {
             last_count: j.get("last_count")?.as_u64()?,
             last_sum: j.get("last_sum")?.as_f64()?,
             last_epoch_time: j.get("last_epoch_time")?.as_f64()?,
-            log: Vec::new(),
+            log,
         })
     }
 
@@ -342,6 +387,16 @@ mod tests {
             AdaptiveController::from_json(&crate::util::json::Json::parse(&text).unwrap())
                 .unwrap();
         assert_eq!(back.n(), 4, "restore must keep the retuned n, not the config n");
+        // the decision log survives the round trip bit for bit: a resumed
+        // run must report the same history an uninterrupted one would
+        assert_eq!(back.log.len(), 1, "pre-checkpoint decisions must be restored");
+        assert_eq!(
+            back.log[0].observed_sigma.to_bits(),
+            c.log[0].observed_sigma.to_bits(),
+            "observed sigma restores bit-exactly"
+        );
+        assert_eq!(back.log[0].epoch_secs.to_bits(), c.log[0].epoch_secs.to_bits());
+        assert_eq!((back.log[0].old_n, back.log[0].new_n), (8, 4));
         // both controllers difference the next epoch window identically
         let a = c.epoch_tick(2, 20.0, 200, 1200.0, 8);
         let b = back.epoch_tick(2, 20.0, 200, 1200.0, 8);

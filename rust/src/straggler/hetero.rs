@@ -245,6 +245,31 @@ impl HeteroModel {
         &self.rng
     }
 
+    /// Which learners are currently in the degraded Markov state (always
+    /// all-false without a `markov:` spec) — the mutable half of the
+    /// model alongside the RNG stream.
+    pub fn degraded_state(&self) -> &[bool] {
+        &self.degraded
+    }
+
+    /// Install mid-flight state captured from another model of the same
+    /// (spec, λ, seed): the RNG stream position and the per-learner
+    /// Markov degradation flags. The persistent factors are already
+    /// identical because `build` samples them deterministically before
+    /// any draw.
+    pub fn restore_state(&mut self, rng_state: u64, degraded: &[bool]) -> Result<()> {
+        if degraded.len() != self.degraded.len() {
+            bail!(
+                "hetero checkpoint has {} learner slots, model has {}",
+                degraded.len(),
+                self.degraded.len()
+            );
+        }
+        self.rng = Rng::from_state(rng_state);
+        self.degraded.copy_from_slice(degraded);
+        Ok(())
+    }
+
     /// Current slowdown factor for learner `l`'s next mini-batch,
     /// advancing the learner's Markov transient state by one step.
     pub fn draw(&mut self, l: usize) -> f64 {
@@ -352,6 +377,26 @@ mod tests {
         let mut m2 = HeteroModel::build(&spec, 1, 3);
         let replay: Vec<f64> = (0..200).map(|_| m2.draw(0)).collect();
         assert_eq!(draws, replay);
+    }
+
+    #[test]
+    fn restore_state_resumes_markov_stream_exactly() {
+        let spec = HeteroSpec::parse("lognormal:0.3,markov:0.3:0.3:5").unwrap();
+        let mut a = HeteroModel::build(&spec, 4, 9);
+        for _ in 0..50 {
+            for l in 0..4 {
+                a.draw(l);
+            }
+        }
+        let (state, degraded) = (a.rng().state(), a.degraded_state().to_vec());
+        let mut b = HeteroModel::build(&spec, 4, 9);
+        b.restore_state(state, &degraded).unwrap();
+        for _ in 0..50 {
+            for l in 0..4 {
+                assert_eq!(a.draw(l), b.draw(l));
+            }
+        }
+        assert!(b.restore_state(state, &[false; 2]).is_err(), "λ mismatch rejected");
     }
 
     #[test]

@@ -60,6 +60,8 @@ fn elastic_cfg(
         hetero: HeteroSpec::none(),
         adaptive: AdaptiveSpec::none(),
         compress: rudra::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
     }
 }
 

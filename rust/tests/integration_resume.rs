@@ -1,0 +1,232 @@
+//! Mid-flight sim resume: stop-at-event-k + resume must be bit-identical
+//! to an uninterrupted run. Timing-only (the numeric path checkpoints at
+//! update boundaries via `checkpoint_every_updates`), on a zero-jitter
+//! cluster so every trajectory is exactly reproducible.
+//!
+//! The matrix covers the three protocol families (hardsync, n-softsync,
+//! backup-sync) × root shards S ∈ {1, 4}, plus a loaded point with
+//! churn + heterogeneity + adaptive-n + rescaling all live at the cut.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimEngine, SimResult};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::checkpoint::SimCheckpoint;
+use rudra::elastic::membership::ChurnSchedule;
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::{LearnerCompute, ModelCost};
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::straggler::hetero::HeteroSpec;
+
+fn tiny_model(samples_per_epoch: u64) -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch }
+}
+
+fn quiet_cluster() -> ClusterSpec {
+    ClusterSpec { compute_jitter: 0.0, straggler_prob: 0.0, ..ClusterSpec::p775() }
+}
+
+fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
+    SimConfig {
+        protocol,
+        arch: Arch::Base,
+        mu: 4,
+        lambda: 6,
+        epochs: 2,
+        seed: 17,
+        cluster: quiet_cluster(),
+        compute: LearnerCompute::p775(),
+        model: tiny_model(240),
+        shards,
+        eval_each_epoch: false,
+        max_updates: None,
+        churn: ChurnSchedule::none(),
+        rescale: RescalePolicy::None,
+        checkpoint_every_updates: 0,
+        hetero: HeteroSpec::parse("none").unwrap(),
+        adaptive: AdaptiveSpec::none(),
+        compress: rudra::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
+    }
+}
+
+fn new_engine(cfg: &SimConfig) -> SimEngine<'_> {
+    SimEngine::new(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+}
+
+fn run_timing(cfg: &SimConfig) -> SimResult {
+    run_sim(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every observable SimResult field must match bit for bit (floats are
+/// compared by their IEEE 754 bit patterns, not tolerance).
+fn assert_same(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits(), "{ctx}: sim_seconds");
+    assert_eq!(a.updates, b.updates, "{ctx}: updates");
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: events_processed");
+    assert_eq!(a.shard_updates, b.shard_updates, "{ctx}: shard_updates");
+    assert_eq!(a.staleness.totals(), b.staleness.totals(), "{ctx}: staleness totals");
+    assert_eq!(a.staleness.max, b.staleness.max, "{ctx}: staleness max");
+    assert_eq!(a.staleness.histogram, b.staleness.histogram, "{ctx}: staleness histogram");
+    assert_eq!(
+        bits(&a.staleness.per_update_avg),
+        bits(&b.staleness.per_update_avg),
+        "{ctx}: staleness series"
+    );
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{ctx}: epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch, "{ctx}: epoch index");
+        assert_eq!(ea.sim_time.to_bits(), eb.sim_time.to_bits(), "{ctx}: epoch time");
+        assert_eq!(ea.active_lambda, eb.active_lambda, "{ctx}: epoch λ_active");
+    }
+    assert_eq!(format!("{:?}", a.churn), format!("{:?}", b.churn), "{ctx}: churn log");
+    assert_eq!(bits(&a.recovery_secs), bits(&b.recovery_secs), "{ctx}: recovery");
+    assert_eq!(format!("{:?}", a.rescales), format!("{:?}", b.rescales), "{ctx}: rescales");
+    assert_eq!(format!("{:?}", a.adaptive), format!("{:?}", b.adaptive), "{ctx}: adaptive");
+    assert_eq!(format!("{:?}", a.overlap), format!("{:?}", b.overlap), "{ctx}: overlap");
+    assert_eq!(a.final_active_lambda, b.final_active_lambda, "{ctx}: λ_active");
+    assert_eq!(a.checkpoints_taken, b.checkpoints_taken, "{ctx}: checkpoints");
+    assert_eq!(a.dropped_gradients, b.dropped_gradients, "{ctx}: dropped");
+    assert_eq!(a.dropped_by_learner, b.dropped_by_learner, "{ctx}: dropped by learner");
+    assert_eq!(
+        bits(&a.learner_utilization),
+        bits(&b.learner_utilization),
+        "{ctx}: utilization"
+    );
+    assert_eq!(bits(&a.hetero_factors), bits(&b.hetero_factors), "{ctx}: hetero factors");
+    assert_eq!(a.root_bytes_in.to_bits(), b.root_bytes_in.to_bits(), "{ctx}: root bytes in");
+    assert_eq!(a.root_bytes_out.to_bits(), b.root_bytes_out.to_bits(), "{ctx}: root bytes out");
+    assert_eq!(
+        bits(&a.comm_bytes_by_learner),
+        bits(&b.comm_bytes_by_learner),
+        "{ctx}: comm bytes"
+    );
+}
+
+/// Stop the run after `k` processed events, capture the in-memory sim
+/// checkpoint, install it into a fresh engine under the original config,
+/// and run to completion.
+fn stop_and_resume(cfg: &SimConfig, k: u64, ctx: &str) -> SimResult {
+    let mut stop_cfg = cfg.clone();
+    stop_cfg.stop_after_events = Some(k);
+    let stopped = run_timing(&stop_cfg);
+    assert_eq!(stopped.events_processed, k, "{ctx}: stop lands exactly at k");
+    let ckpt = stopped.sim_checkpoint.expect("mid-flight stop must capture a checkpoint");
+    assert_eq!(ckpt.events_processed().unwrap(), k, "{ctx}: checkpoint event count");
+    let mut engine = new_engine(cfg);
+    engine.install_sim_checkpoint(&ckpt).unwrap();
+    engine.run().unwrap()
+}
+
+/// The core acceptance property: stop-at-event-k + resume reproduces the
+/// uninterrupted run bit for bit across the three protocol families and
+/// root shards S ∈ {1, 4}.
+#[test]
+fn resume_is_bit_identical_across_protocols_and_shards() {
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let full = run_timing(&cfg);
+            assert_eq!(full.epochs.len(), 2, "baseline completes");
+            // cut early (mid cold-start traffic) and late (steady state)
+            for k in [full.events_processed / 4, (3 * full.events_processed) / 4] {
+                let ctx = format!("{protocol:?} S={shards} k={k}");
+                let resumed = stop_and_resume(&cfg, k.max(1), &ctx);
+                assert_same(&full, &resumed, &ctx);
+            }
+        }
+    }
+}
+
+/// The loaded point: a scheduled kill, sampled + transient heterogeneity,
+/// the adaptive-n controller, and μ·λ rescaling all in force when the
+/// run is cut. Everything that carries engine state across the cut —
+/// membership phases, hetero RNG + degraded flags, controller state,
+/// rescale history — must survive the round trip.
+#[test]
+fn resume_under_churn_hetero_and_adaptive_is_bit_identical() {
+    let mut cfg = base_cfg(Protocol::NSoftsync { n: 2 }, 1);
+    cfg.epochs = 3;
+    cfg.churn = ChurnSchedule::parse("kill:3@0.005").unwrap();
+    cfg.rescale = RescalePolicy::MuLambdaConst;
+    cfg.hetero = HeteroSpec::parse("lognormal:0.3,markov:0.1:0.4:4").unwrap();
+    cfg.adaptive = AdaptiveSpec::parse("sigma:2").unwrap();
+    let full = run_timing(&cfg);
+    assert_eq!(full.epochs.len(), 3, "baseline completes");
+    assert_eq!(full.churn.len(), 1, "the kill landed");
+    for k in [full.events_processed / 5, (4 * full.events_processed) / 5] {
+        let ctx = format!("churn+hetero+adaptive k={k}");
+        let resumed = stop_and_resume(&cfg, k.max(1), &ctx);
+        assert_same(&full, &resumed, &ctx);
+    }
+}
+
+/// The checkpoint must survive the disk round trip (save → load →
+/// install), not just the in-memory hand-off: this is the `--resume FILE`
+/// CLI path.
+#[test]
+fn resume_from_disk_matches_uninterrupted_run() {
+    let cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4);
+    let full = run_timing(&cfg);
+    let k = full.events_processed / 2;
+
+    let dir = std::env::temp_dir().join(format!("rudra_resume_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("sim.ckpt.json");
+
+    let mut stop_cfg = cfg.clone();
+    stop_cfg.stop_after_events = Some(k);
+    stop_cfg.sim_checkpoint_path = Some(path.clone());
+    let stopped = run_timing(&stop_cfg);
+    assert!(stopped.sim_checkpoint.is_some());
+    let ckpt = SimCheckpoint::load(&path).unwrap();
+    assert_eq!(ckpt.events_processed().unwrap(), k);
+
+    let mut engine = new_engine(&cfg);
+    engine.install_sim_checkpoint(&ckpt).unwrap();
+    let resumed = engine.run().unwrap();
+    assert_same(&full, &resumed, "disk roundtrip");
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// A checkpoint captured under one config must refuse to install under
+/// another: resuming λ = 6 state into a λ = 8 engine would silently
+/// corrupt the trajectory, so the fingerprint check has to catch it.
+#[test]
+fn resume_rejects_config_mismatch() {
+    let cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+    let mut stop_cfg = cfg.clone();
+    stop_cfg.stop_after_events = Some(50);
+    let ckpt = run_timing(&stop_cfg).sim_checkpoint.unwrap();
+
+    let mut other = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+    other.lambda = 8;
+    let mut engine = new_engine(&other);
+    let err = engine.install_sim_checkpoint(&ckpt).unwrap_err().to_string();
+    assert!(err.contains("belongs to config"), "mismatch must name both configs: {err}");
+}

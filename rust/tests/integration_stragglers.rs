@@ -54,6 +54,8 @@ fn straggler_cfg(
         hetero: HeteroSpec::parse(hetero).unwrap(),
         adaptive: AdaptiveSpec::none(),
         compress: rudra::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
     }
 }
 
