@@ -64,6 +64,9 @@ fn main() {
             compress: cfg.compress,
             stop_after_events: None,
             sim_checkpoint_path: None,
+            trace: false,
+            trace_path: None,
+            collect_metrics: false,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

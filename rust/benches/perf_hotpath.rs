@@ -8,7 +8,10 @@
 //! the perf trajectory can be compared *across PRs* instead of living in
 //! scrollback. CI's `perf-smoke` job runs this bench in quick mode
 //! (`RUDRA_QUICK=1` — fewer iterations, a capped grid) and uploads the
-//! JSON as a build artifact.
+//! JSON as a build artifact. Compare two captures with
+//! `rudra bench-diff OLD.json NEW.json` ([`rudra::obs::benchdiff`]) —
+//! non-zero exit when a kernel regresses past its noise threshold; CI
+//! gates on it whenever a prior baseline is available.
 //!
 //! Acceptance assertion (parallel sweep executor): a 4-point timing-only
 //! grid at `jobs = 4` must run ≥ 1.5× faster than `jobs = 1` whenever

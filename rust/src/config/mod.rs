@@ -123,6 +123,24 @@ pub struct RunConfig {
     /// when `stop_after_events` fires (JSON key `sim_checkpoint` / flag
     /// `--sim-checkpoint`). `None` keeps the snapshot in memory only.
     pub sim_checkpoint: Option<std::path::PathBuf>,
+    /// Chrome trace-event output path (JSON key `trace` / flag `--trace`;
+    /// `"none"` clears a config-file value). Single-point commands
+    /// (`sim`/`timing`) record spans over virtual sim time and write the
+    /// file at run end ([`crate::obs::trace`]); `sweep` rejects it —
+    /// parallel grid points cannot share one trace file. Purely
+    /// observational, so trajectories stay bit-identical; like the resume
+    /// knobs above, it never enters [`RunConfig::label`].
+    pub trace: Option<std::path::PathBuf>,
+    /// Metrics snapshot output path (JSON key `metrics_json` / flag
+    /// `--metrics-json`; `"none"` clears). Enables the
+    /// [`crate::obs::metrics`] registry and dumps its end-of-run snapshot
+    /// as JSON.
+    pub metrics_json: Option<std::path::PathBuf>,
+    /// Persistent run index (JSON key `run_index` / flag `--run-index`;
+    /// `"none"` clears). Every sim/sweep/timing point appends one record
+    /// to this JSONL file ([`crate::obs::runindex`]; query with
+    /// `rudra runs`).
+    pub run_index: Option<std::path::PathBuf>,
 }
 
 impl Default for RunConfig {
@@ -155,7 +173,21 @@ impl Default for RunConfig {
             sweep_lambdas: None,
             stop_after_events: None,
             sim_checkpoint: None,
+            trace: None,
+            metrics_json: None,
+            run_index: None,
         }
+    }
+}
+
+/// Path-valued observability knobs accept `"none"` to clear a value set
+/// earlier in the layering (so a CLI flag can switch off a config-file
+/// default).
+fn path_or_none(s: &str) -> Option<std::path::PathBuf> {
+    if s.trim().eq_ignore_ascii_case("none") {
+        None
+    } else {
+        Some(std::path::PathBuf::from(s))
     }
 }
 
@@ -210,6 +242,9 @@ impl RunConfig {
                 "sim_checkpoint" => {
                     self.sim_checkpoint = Some(std::path::PathBuf::from(v.as_str()?))
                 }
+                "trace" => self.trace = path_or_none(v.as_str()?),
+                "metrics_json" => self.metrics_json = path_or_none(v.as_str()?),
+                "run_index" => self.run_index = path_or_none(v.as_str()?),
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -274,6 +309,15 @@ impl RunConfig {
         if let Some(v) = args.get("sim-checkpoint") {
             self.sim_checkpoint = Some(std::path::PathBuf::from(v));
         }
+        if let Some(v) = args.get("trace") {
+            self.trace = path_or_none(v);
+        }
+        if let Some(v) = args.get("metrics-json") {
+            self.metrics_json = path_or_none(v);
+        }
+        if let Some(v) = args.get("run-index") {
+            self.run_index = path_or_none(v);
+        }
         self.validate()
     }
 
@@ -323,6 +367,13 @@ impl RunConfig {
             );
         }
         Ok(())
+    }
+
+    /// Whether any enabled observability sink needs the metrics registry
+    /// (the snapshot feeds both the `--metrics-json` dump and the run
+    /// index records).
+    pub fn collect_metrics(&self) -> bool {
+        self.metrics_json.is_some() || self.run_index.is_some()
     }
 
     /// The LR policy implied by this config.
@@ -641,6 +692,42 @@ mod tests {
         )
         .unwrap();
         assert!(RunConfig::default().apply_args(&bad).is_err());
+    }
+
+    /// The observability knobs layer like the resume knobs: JSON under
+    /// CLI, `"none"` clears, and none of them are experiment identity
+    /// (they never reach the label).
+    #[test]
+    fn obs_knobs_layer_and_none_clears() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.trace.is_none() && cfg.metrics_json.is_none() && cfg.run_index.is_none());
+        assert!(!cfg.collect_metrics());
+        cfg.apply_json(
+            &Json::parse(
+                r#"{"trace": "out/trace.json", "metrics_json": "out/metrics.json",
+                    "run_index": "runs.jsonl"}"#,
+            )
+            .unwrap(),
+        )
+        .unwrap();
+        assert_eq!(cfg.trace.as_deref(), Some(std::path::Path::new("out/trace.json")));
+        assert!(cfg.collect_metrics());
+        // CLI wins over JSON; "none" clears a config-file value
+        let args = Args::parse(
+            ["--trace", "none", "--metrics-json", "m2.json", "--run-index", "none"]
+                .iter()
+                .map(|s| s.to_string()),
+            &[],
+        )
+        .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.trace.is_none());
+        assert_eq!(cfg.metrics_json.as_deref(), Some(std::path::Path::new("m2.json")));
+        assert!(cfg.run_index.is_none());
+        assert!(cfg.collect_metrics(), "metrics sink still armed");
+        // host-side observation, not experiment identity
+        assert!(!cfg.label().contains("trace"), "{}", cfg.label());
+        assert!(!cfg.label().contains("m2"), "{}", cfg.label());
     }
 
     #[test]

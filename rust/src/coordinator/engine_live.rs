@@ -106,6 +106,11 @@ pub struct LiveConfig {
     /// clock are exactly the post-update state (the ROADMAP "wire
     /// checkpoint_every into train" item).
     pub checkpoint_every: u64,
+    /// Snapshot a [`crate::obs::metrics`] registry into
+    /// [`LiveResult::metrics`] at shutdown (`--metrics-json` /
+    /// `--run-index`). Purely observational: the live loop is untouched,
+    /// the snapshot is assembled from server-side tallies after joins.
+    pub collect_metrics: bool,
 }
 
 /// Live-run output.
@@ -137,6 +142,9 @@ pub struct LiveResult {
     pub checkpoints_taken: u64,
     /// The most recent captured checkpoint, if any.
     pub last_checkpoint: Option<Checkpoint>,
+    /// Metrics snapshot ([`crate::obs::metrics`] schema); `None` unless
+    /// [`LiveConfig::collect_metrics`] was set.
+    pub metrics: Option<crate::util::json::Json>,
 }
 
 enum ToServer {
@@ -649,6 +657,22 @@ fn run_live_inner(
         }
     }
 
+    // The live loop keeps no registry of its own (no virtual clock, no
+    // event queue); the snapshot is assembled once from the server-side
+    // tallies, which exist regardless.
+    let metrics = if cfg.collect_metrics {
+        let bytes_in: f64 = comm_bytes_by_learner.iter().sum();
+        Some(crate::obs::metrics::MetricsRegistry::default().snapshot(
+            &server.staleness,
+            &server.shard_updates(),
+            server.pushes_by(),
+            bytes_in,
+            0.0,
+        ))
+    } else {
+        None
+    };
+
     Ok(LiveResult {
         wall_seconds: start.elapsed().as_secs_f64(),
         updates: server.updates,
@@ -665,6 +689,7 @@ fn run_live_inner(
         comm_bytes_by_learner,
         checkpoints_taken,
         last_checkpoint,
+        metrics,
     })
 }
 
@@ -694,6 +719,7 @@ mod tests {
             elastic: None,
             compress: CodecSpec::None,
             checkpoint_every: 0,
+            collect_metrics: false,
         }
     }
 
@@ -708,6 +734,28 @@ mod tests {
         let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
         let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
         run_live(&cfg, theta0, opt, lr, providers(lambda, dim)).unwrap()
+    }
+
+    #[test]
+    fn live_metrics_snapshot_rides_along() {
+        let dim = 8;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 2, 1);
+        cfg.collect_metrics = true;
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(2, dim)).unwrap();
+        let m = r.metrics.as_ref().expect("collect_metrics was on");
+        let pushes_by = m.get("pushes_by_learner").unwrap().as_u64_vec().unwrap();
+        assert_eq!(pushes_by.len(), 2);
+        assert!(pushes_by.iter().sum::<u64>() > 0, "{pushes_by:?}");
+        assert_eq!(
+            m.get("staleness").unwrap().get("count").unwrap().as_u64().unwrap(),
+            r.staleness.count
+        );
+        // and the default stays quiet
+        let r2 = run(Protocol::NSoftsync { n: 1 }, 2);
+        assert!(r2.metrics.is_none());
     }
 
     #[test]

@@ -132,6 +132,17 @@ pub struct SimConfig {
     /// Where to write the mid-flight sim checkpoint when
     /// `stop_after_events` fires (`None` = keep it in-memory only).
     pub sim_checkpoint_path: Option<std::path::PathBuf>,
+    /// Record a Chrome trace-event timeline over virtual sim time
+    /// ([`crate::obs::trace`]). Off by default: the no-op recorder keeps
+    /// quiet runs bit-identical (a host-side observation knob, excluded
+    /// from the config fingerprint like `stop_after_events`).
+    pub trace: bool,
+    /// Where to write the recorded trace (`None` = keep it in
+    /// [`SimResult::trace`] only).
+    pub trace_path: Option<std::path::PathBuf>,
+    /// Collect the metrics registry ([`crate::obs::metrics`]) into
+    /// [`SimResult::metrics`]. Off by default; purely observational.
+    pub collect_metrics: bool,
 }
 
 impl SimConfig {
@@ -165,6 +176,9 @@ impl SimConfig {
             compress: CodecSpec::None,
             stop_after_events: None,
             sim_checkpoint_path: None,
+            trace: false,
+            trace_path: None,
+            collect_metrics: false,
         }
     }
 
@@ -257,6 +271,11 @@ pub struct SimResult {
     /// cut the run short (the other fields then describe the truncated
     /// run, not a finished one).
     pub sim_checkpoint: Option<SimCheckpoint>,
+    /// Recorded trace events (when [`SimConfig::trace`] is on; also
+    /// written to [`SimConfig::trace_path`] as Chrome trace JSON).
+    pub trace: Option<Vec<crate::obs::trace::TraceEvent>>,
+    /// Metrics snapshot (when [`SimConfig::collect_metrics`] is on).
+    pub metrics: Option<Json>,
 }
 
 /// A gradient payload in flight. Boxed so timing-only runs (payload
@@ -564,6 +583,12 @@ pub struct SimEngine<'a> {
     /// compute kicks) — the restored event queue already holds the
     /// mid-flight continuation.
     resumed: bool,
+    /// Observability (trace recorder + metrics registry;
+    /// [`crate::obs::Obs::off`] — one branch per site — when both knobs
+    /// are quiet). Strictly observational: it never draws from an engine
+    /// RNG or perturbs event order, so trajectories are bit-identical
+    /// either way.
+    obs: crate::obs::Obs,
 }
 
 impl<'a> SimEngine<'a> {
@@ -693,6 +718,7 @@ impl<'a> SimEngine<'a> {
             ),
             random_armed: false,
             resumed: false,
+            obs: crate::obs::Obs::new(cfg.trace, cfg.collect_metrics, lambda),
         }
     }
 
@@ -833,6 +859,7 @@ impl<'a> SimEngine<'a> {
             if self.server.done() || self.server.updates >= max_updates {
                 break;
             }
+            self.obs.queue_depth(self.q.len());
             match ev {
                 Ev::ComputeDone { learner, inc } => self.on_compute_done(now, learner, inc)?,
                 Ev::PushAtRoot { learner, inc, grad, ts } => {
@@ -886,6 +913,20 @@ impl<'a> SimEngine<'a> {
         } else {
             crate::util::mean(&self.epoch_losses)
         };
+        // The queue tracks its own schedule-time peak; fold it in so the
+        // gauge reflects the true high water, not just post-pop depths.
+        self.obs.queue_depth(self.q.high_water());
+        let metrics = self.obs.metrics_snapshot(
+            &self.server.staleness,
+            &self.server.shard_updates(),
+            self.server.pushes_by(),
+            self.root_bytes_in,
+            self.root_bytes_out,
+        );
+        let trace = self.obs.take_trace();
+        if let (Some(events), Some(path)) = (&trace, &self.cfg.trace_path) {
+            crate::obs::trace::write(path, events)?;
+        }
         Ok(SimResult {
             sim_seconds: self.q.now(),
             updates: self.server.updates,
@@ -913,15 +954,19 @@ impl<'a> SimEngine<'a> {
             comm_bytes_by_learner: self.comm_bytes_by_learner,
             residual_norms: self.comm.map(|c| c.residual_norms()).unwrap_or_default(),
             sim_checkpoint,
+            trace,
+            metrics,
         })
     }
 
     /// Canonical label of the run configuration, recorded in mid-flight
-    /// sim checkpoints. Everything that shapes the trajectory
-    /// participates; `stop_after_events`, `sim_checkpoint_path`, and
-    /// `max_updates` deliberately do not (a resume legitimately changes
-    /// them).
-    fn config_fingerprint(cfg: &SimConfig) -> String {
+    /// sim checkpoints and the persistent run index
+    /// ([`crate::obs::runindex`]). Everything that shapes the trajectory
+    /// participates; `stop_after_events`, `sim_checkpoint_path`,
+    /// `max_updates`, and the obs knobs (`trace`/`collect_metrics`)
+    /// deliberately do not (a resume legitimately changes them — a traced
+    /// resume of an untraced checkpoint is valid).
+    pub fn config_fingerprint(cfg: &SimConfig) -> String {
         format!(
             "timing|{}|{:?}|mu{}|lambda{}|epochs{}|seed{}|shards{}|{:?}|{:?}|{:?}|{:?}|{:?}|ckpt{}|{:?}|{:?}|{:?}",
             cfg.protocol.label(),
@@ -1370,6 +1415,8 @@ impl<'a> SimEngine<'a> {
         }
         let cost = self.slots[l].compute_cost;
         self.slots[l].overlap.add_compute(cost);
+        // the engine caches the jittered cost, so the span start is exact
+        self.obs.compute(l, now - cost, now);
         self.slots[l].state.steps += 1;
         let grad_ts = self.slots[l].state.ts;
         let enc: GradInFlight = if self.provider.is_some() {
@@ -1395,6 +1442,7 @@ impl<'a> SimEngine<'a> {
                 self.comm_bytes_by_learner[l] += bytes;
                 self.root_bytes_in += bytes;
                 let t = self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, bytes);
+                self.obs.push(l, now, t);
                 self.q.schedule_at(
                     t,
                     Ev::PushAtRoot { learner: l, inc, grad: enc, ts: grad_ts },
@@ -1405,6 +1453,7 @@ impl<'a> SimEngine<'a> {
                 let bytes = self.wire.push_bytes();
                 self.comm_bytes_by_learner[l] += bytes;
                 let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+                self.obs.push(l, now, t);
                 self.q.schedule_at(
                     t,
                     Ev::PushAtLeaf { learner: l, inc, grad: enc, ts: grad_ts },
@@ -1436,6 +1485,7 @@ impl<'a> SimEngine<'a> {
         let bytes = self.wire.push_bytes();
         self.comm_bytes_by_learner[l] += bytes;
         let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+        self.obs.push(l, now, t);
         self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc, grad, ts });
     }
 
@@ -1460,6 +1510,7 @@ impl<'a> SimEngine<'a> {
             } else {
                 self.barrier.push(l);
                 self.in_barrier[l] = true;
+                self.obs.barrier_enter(l, now);
                 self.maybe_broadcast(now);
             }
         } else {
@@ -1488,6 +1539,7 @@ impl<'a> SimEngine<'a> {
                 if self.cfg.protocol.is_barrier() {
                     self.barrier.push(l);
                     self.in_barrier[l] = true;
+                    self.obs.barrier_enter(l, now);
                     // broadcast fires from on_relay_at_root once the root
                     // has folded all λ gradients
                 } else {
@@ -1526,6 +1578,7 @@ impl<'a> SimEngine<'a> {
         let bytes = self.wire.relay_bytes(batch.len());
         self.root_bytes_in += bytes;
         let t = self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, bytes);
+        self.obs.relay(leaf, now, t);
         self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch });
     }
 
@@ -1578,10 +1631,12 @@ impl<'a> SimEngine<'a> {
     /// checkpoints, and epoch-boundary stats/eval.
     fn after_update(&mut self, now: f64, outcome: PushOutcome) -> Result<()> {
         if outcome.updated {
+            self.obs.apply_update(self.cfg.shards, now);
             if self.cfg.arch == Arch::AdvStar {
                 // Each update initiates a striped broadcast: the S root
                 // shards emit their θ slices (M bytes total) into their
                 // subtrees ([`crate::comm::stripe`]).
+                self.obs.advstar_broadcast(now);
                 self.root_bytes_out += self.wire.pull_bytes();
                 let snap = self.server_snapshot();
                 self.recent.push_back((now, self.server.timestamp(), snap));
@@ -1612,6 +1667,7 @@ impl<'a> SimEngine<'a> {
                     self.adaptive.as_ref(),
                 ));
                 self.checkpoints_taken += 1;
+                self.obs.checkpoint(now);
             }
         }
         if let Some(epoch) = outcome.epoch_completed {
@@ -1682,7 +1738,11 @@ impl<'a> SimEngine<'a> {
         std::mem::swap(&mut self.barrier, &mut self.waiting_scratch);
         for &l in &self.waiting_scratch {
             self.in_barrier[l] = false;
+            // the wait ends when the round closes; the delivery itself is
+            // the broadcast span below
+            self.obs.barrier_release(l, now);
         }
+        self.obs.barrier_round_end();
         match self.cfg.arch {
             Arch::Base => {
                 for &l in &self.waiting_scratch {
@@ -1692,6 +1752,7 @@ impl<'a> SimEngine<'a> {
                     let t = self
                         .fabric
                         .send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
+                    self.obs.broadcast(l, now, t);
                     self.q.schedule_at(
                         t,
                         Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
@@ -1740,6 +1801,8 @@ impl<'a> SimEngine<'a> {
                         let inc = self.slots[l].inc;
                         let t =
                             self.fabric.send(start, self.leaf_node(leaf), self.node_of(l), bytes);
+                        // span covers both hops: round close → delivery
+                        self.obs.broadcast(l, now, t);
                         self.q.schedule_at(
                             t,
                             Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
@@ -1764,10 +1827,12 @@ impl<'a> SimEngine<'a> {
             let bytes = self.wire.pull_bytes();
             self.root_bytes_out += bytes;
             let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
+            self.obs.pull(l, now, t);
             self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
         } else {
             // timestamp inquiry only (§3.2's pull-skip)
             let ts = self.slots[l].state.ts;
+            self.obs.pull(l, now, now + self.cfg.cluster.latency);
             self.q.schedule_at(
                 now + self.cfg.cluster.latency,
                 Ev::PullDone { learner: l, inc, snapshot: None, ts },
@@ -1781,6 +1846,7 @@ impl<'a> SimEngine<'a> {
         let server_ts = self.server.timestamp();
         if !self.slots[l].state.needs_pull(server_ts) {
             let ts = self.slots[l].state.ts;
+            self.obs.pull(l, now, now + self.cfg.cluster.latency);
             self.q.schedule_at(
                 now + self.cfg.cluster.latency,
                 Ev::PullDone { learner: l, inc, snapshot: None, ts },
@@ -1804,6 +1870,7 @@ impl<'a> SimEngine<'a> {
         let ready = self.leaves[leaf].cache_ready.max(now);
         let t =
             self.fabric.send(ready, self.leaf_node(leaf), self.node_of(l), self.wire.pull_bytes());
+        self.obs.pull(l, now, t);
         self.q.schedule_at(
             t,
             Ev::PullDone {

@@ -152,6 +152,10 @@ pub struct ShardedServer {
     /// Backup-sync: dropped-gradient count per learner slot (straggler
     /// attribution for the stats server).
     dropped_by: Vec<u64>,
+    /// Gradients actually folded per learner slot (drops excluded) — the
+    /// per-learner contribution distribution the metrics registry
+    /// snapshots ([`crate::obs::metrics`]).
+    pushes_by: Vec<u64>,
     /// Decode scratch for [`ShardedServer::push_encoded`]: sparse and
     /// quantized payloads decode into this pooled buffer instead of a
     /// fresh allocation per push (`Dense` still passes through copy-free).
@@ -188,6 +192,7 @@ impl ShardedServer {
         ShardedServer {
             id_bound: cfg.lambda,
             dropped_by: vec![0; cfg.lambda],
+            pushes_by: vec![0; cfg.lambda],
             cfg,
             spec,
             shards,
@@ -218,6 +223,13 @@ impl ShardedServer {
     /// attribution; all zeros for the other protocols).
     pub fn dropped_by(&self) -> &[u64] {
         &self.dropped_by
+    }
+
+    /// Per-learner folded-gradient counts (dropped gradients excluded; a
+    /// straggler under backup-sync shows up low here and high in
+    /// [`ShardedServer::dropped_by`]).
+    pub fn pushes_by(&self) -> &[u64] {
+        &self.pushes_by
     }
 
     /// Backup-sync's drop rule (see
@@ -373,6 +385,7 @@ impl ShardedServer {
         }
         self.pending_ts.push(grad_ts);
         self.pending_from.push(learner);
+        self.pushes_by[learner] += 1;
 
         let mut out = PushOutcome::default();
         if will_update {
@@ -446,6 +459,9 @@ impl ShardedServer {
             return PushOutcome { dropped: true, ..PushOutcome::default() };
         }
         self.timing_pending.push(grad_ts);
+        if let Some(p) = self.pushes_by.get_mut(learner) {
+            *p += 1;
+        }
         let mut out = PushOutcome::default();
         if self.timing_pending.len() >= self.cfg.protocol.gradients_per_update(self.cfg.lambda) {
             let vclock = self.take_timing_clock();
@@ -597,6 +613,7 @@ impl ShardedServer {
             ("timing_pending", Json::arr_u64(&self.timing_pending)),
             ("dropped", Json::num(self.dropped as f64)),
             ("dropped_by", Json::arr_u64(&self.dropped_by)),
+            ("pushes_by", Json::arr_u64(&self.pushes_by)),
             ("staleness", self.staleness.to_json()),
             ("lr", self.lr.to_json()),
             ("shard_state", Json::Arr(shard_state)),
@@ -670,10 +687,17 @@ impl ShardedServer {
             Ok(v) => v.as_u64_vec()?,
             Err(_) => vec![0; id_bound],
         };
+        // Push-contribution counters arrived with the obs layer; same
+        // absent-reads-as-zero rule as the drop counters above.
+        let pushes_by = match j.get("pushes_by") {
+            Ok(v) => v.as_u64_vec()?,
+            Err(_) => vec![0; id_bound],
+        };
         Ok(ShardedServer {
             id_bound,
             dropped,
             dropped_by,
+            pushes_by,
             cfg,
             spec,
             shards,

@@ -40,6 +40,8 @@ pub struct PointResult {
     pub avg_staleness: f64,
     pub max_staleness: u64,
     pub updates: u64,
+    /// Events the numeric run's sim engine processed.
+    pub events: u64,
     pub epochs: Vec<crate::coordinator::engine_sim::EpochStat>,
     /// Churn events observed (kills/rejoins/joins; 0 for static runs).
     pub churn_events: usize,
@@ -63,6 +65,16 @@ pub struct PointResult {
     /// Bytes into / out of the root tier over the numeric run.
     pub root_bytes_in: f64,
     pub root_bytes_out: f64,
+    /// Metrics snapshot of the numeric run ([`crate::obs::metrics`]
+    /// schema); `None` unless a metrics sink was armed.
+    pub metrics: Option<crate::util::json::Json>,
+    /// Config fingerprint of the numeric run
+    /// ([`crate::coordinator::engine_sim::SimEngine::config_fingerprint`])
+    /// — the run-index comparability key.
+    pub fingerprint: String,
+    /// Host wall-clock the numeric run took (the run index records both
+    /// time axes).
+    pub wall_seconds: f64,
 }
 
 /// Host threads available for grid execution (the `jobs: 0` = auto
@@ -205,11 +217,24 @@ pub struct Sweep<'a> {
     /// means per-thread clients or the live engine's compute-service
     /// pattern (see the ROADMAP `xla` item).
     pub jobs: usize,
+    /// Collect a metrics snapshot per point even when the point's own
+    /// config has no metrics sink (the `sweep` subcommand arms this when
+    /// a run index is being written). Purely observational — grid results
+    /// stay bit-identical either way.
+    pub collect_metrics: bool,
 }
 
 impl<'a> Sweep<'a> {
     pub fn new(ws: &'a Workspace, epochs: usize) -> Sweep<'a> {
-        Sweep { ws, epochs, seed: 42, arch: Arch::Base, eval_each_epoch: false, jobs: 0 }
+        Sweep {
+            ws,
+            epochs,
+            seed: 42,
+            arch: Arch::Base,
+            eval_each_epoch: false,
+            jobs: 0,
+            collect_metrics: false,
+        }
     }
 
     /// Train the synthetic benchmark at one (protocol, μ, λ) point with
@@ -244,7 +269,13 @@ impl<'a> Sweep<'a> {
             compress: cfg.compress,
             stop_after_events: None,
             sim_checkpoint_path: None,
+            trace: cfg.trace.is_some(),
+            trace_path: cfg.trace.clone(),
+            collect_metrics: self.collect_metrics || cfg.collect_metrics(),
         };
+        let fingerprint =
+            crate::coordinator::engine_sim::SimEngine::config_fingerprint(&sim_cfg);
+        let started = std::time::Instant::now();
         let theta0 = warmstarted(self, cfg)?;
         let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
         let result: SimResult = run_sim(
@@ -255,6 +286,7 @@ impl<'a> Sweep<'a> {
             Some(&mut provider),
             Some(&mut evaluator),
         )?;
+        let wall_seconds = started.elapsed().as_secs_f64();
         let (test_loss, test_error_pct) = result.final_eval.unwrap_or((f64::NAN, f64::NAN));
 
         // Paper-scale timing overlay: same (protocol, μ, λ, arch) on the
@@ -262,8 +294,12 @@ impl<'a> Sweep<'a> {
         // overlay is the *paper's* static-λ reference time, and a churn
         // schedule calibrated (in seconds) to the short numeric run would
         // replay nonsensically — or kill λ_active below a softsync n —
-        // over the 140-epoch horizon.
+        // over the 140-epoch horizon. Observation belongs to the numeric
+        // run: the overlay must not overwrite its trace or snapshot.
         let paper_cfg = SimConfig {
+            trace: false,
+            trace_path: None,
+            collect_metrics: false,
             model: ModelCost::cifar10(),
             epochs: 140,
             eval_each_epoch: false,
@@ -295,6 +331,7 @@ impl<'a> Sweep<'a> {
             avg_staleness: result.staleness.overall_avg(),
             max_staleness: result.staleness.max,
             updates: result.updates,
+            events: result.events_processed,
             epochs: result.epochs,
             churn_events: result.churn.len(),
             recovery_secs: result.recovery_secs,
@@ -307,6 +344,9 @@ impl<'a> Sweep<'a> {
             residual_norms: result.residual_norms,
             root_bytes_in: result.root_bytes_in,
             root_bytes_out: result.root_bytes_out,
+            metrics: result.metrics,
+            fingerprint,
+            wall_seconds,
         })
     }
 
@@ -382,6 +422,9 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         compress: crate::comm::codec::CodecSpec::None,
         stop_after_events: None,
         sim_checkpoint_path: None,
+        trace: false,
+        trace_path: None,
+        collect_metrics: false,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();

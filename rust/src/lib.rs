@@ -26,6 +26,7 @@ pub mod data;
 pub mod elastic;
 pub mod harness;
 pub mod netsim;
+pub mod obs;
 pub mod params;
 pub mod runtime;
 pub mod stats;

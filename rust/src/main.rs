@@ -6,6 +6,8 @@
 //! * `sim`               — one (σ, μ, λ) point: real SGD + simulated time
 //! * `sweep`             — (μ, λ) grid under one protocol
 //! * `timing`            — timing-only simulation at paper scale
+//! * `runs`              — list/diff the persistent run index (runs.jsonl)
+//! * `bench-diff`        — perf-trajectory gate over two BENCH_hotpath.json
 
 use anyhow::Result;
 
@@ -23,12 +25,16 @@ use rudra::stats::table::{f, pct, Table};
 use rudra::util::cli::Args;
 use rudra::util::fmt_secs;
 
-const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing> [--flags]
+const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|bench-diff> [--flags]
   info                      show artifacts, platform, model sizes
   train                     live engine (real threads) on the synthetic CNN
   sim                       one (σ,μ,λ) point: real SGD + simulated P775 time
   sweep                     (μ,λ) grid under one protocol
   timing                    timing-only simulation at paper scale
+  runs [list|diff I J]      query the persistent run index
+                            (--index FILE [runs.jsonl], --filter SUBSTR)
+  bench-diff OLD NEW        compare two BENCH_hotpath.json baselines; exits
+                            non-zero on perf regressions (--threshold F)
 common flags: --protocol hardsync|async|<n>-softsync|backup:<b>
               --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
@@ -54,6 +60,14 @@ comm:         --compress none|topk:<frac>|qsgd:<bits> (gradient codec with
                 time) [all engines]
               --comm-csv FILE (sim: per-learner compressed-bytes +
                 residual-norm rows)
+observability: --trace FILE (sim/timing: Chrome trace-event JSON over
+                virtual sim time — load in Perfetto/chrome://tracing;
+                'none' clears a config-file value; JSON key trace)
+              --metrics-json FILE (metrics snapshot: staleness histogram,
+                barrier waits, queue depth, per-shard updates, root
+                bytes; JSON key metrics_json)
+              --run-index FILE (append one record per point to a JSONL
+                run index; query with `rudra runs`; JSON key run_index)
 scale/resume: --max-updates N (timing: hard cap on weight updates — quick
                 CI points at datacenter λ)
               --stop-after-events N (timing: halt after N processed events
@@ -93,6 +107,8 @@ fn run() -> Result<()> {
         "sim" => cmd_sim(&cfg, &args),
         "sweep" => cmd_sweep(&cfg),
         "timing" => cmd_timing(&cfg, &args),
+        "runs" => cmd_runs(&args),
+        "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
             Ok(())
@@ -127,6 +143,59 @@ fn print_comm(
         ),
         None => println!("{summary}"),
     }
+}
+
+/// Write a metrics snapshot where `--metrics-json` asked.
+fn write_metrics_json(path: &std::path::Path, metrics: &rudra::util::json::Json) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent).map_err(|e| {
+                anyhow::anyhow!("creating metrics directory {}: {e}", parent.display())
+            })?;
+        }
+    }
+    std::fs::write(path, metrics.to_string())
+        .map_err(|e| anyhow::anyhow!("writing metrics snapshot {}: {e}", path.display()))?;
+    println!("wrote metrics snapshot to {}", path.display());
+    Ok(())
+}
+
+/// Run-index record for one sim/sweep point (`point_cfg` is the config
+/// that shaped the point — for sweeps, the reconstructed grid-order
+/// config, not the top-level one).
+fn point_record(
+    kind: &str,
+    point_cfg: &RunConfig,
+    p: &rudra::harness::sweep::PointResult,
+) -> rudra::obs::runindex::RunRecord {
+    rudra::obs::runindex::RunRecord {
+        kind: kind.to_string(),
+        label: point_cfg.label(),
+        fingerprint: p.fingerprint.clone(),
+        seed: point_cfg.seed,
+        mu: p.mu,
+        lambda: p.lambda,
+        shards: point_cfg.shards,
+        epochs: point_cfg.epochs,
+        test_error_pct: Some(p.test_error_pct),
+        train_loss: Some(p.train_loss),
+        sim_seconds: p.sim_seconds,
+        wall_seconds: p.wall_seconds,
+        updates: p.updates,
+        events: p.events,
+        avg_staleness: p.avg_staleness,
+        max_staleness: p.max_staleness,
+        root_bytes_in: p.root_bytes_in,
+        root_bytes_out: p.root_bytes_out,
+        metrics: p.metrics.clone(),
+    }
+}
+
+/// Append one record to the run index and say where it went.
+fn index_run(index: &std::path::Path, record: &rudra::obs::runindex::RunRecord) -> Result<()> {
+    rudra::obs::runindex::append(index, record)?;
+    println!("indexed run in {}", index.display());
+    Ok(())
 }
 
 /// Live-engine elasticity from the config + CLI: `--heartbeat-ms` arms
@@ -204,7 +273,14 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         elastic: live_elastic(cfg, args)?,
         compress: cfg.compress,
         checkpoint_every: cfg.checkpoint_every,
+        collect_metrics: cfg.collect_metrics(),
     };
+    if cfg.trace.is_some() {
+        anyhow::bail!(
+            "--trace records spans over *virtual* sim time; the live engine has \
+             none (use `rudra sim --trace` or `rudra timing --trace`)"
+        );
+    }
     let ws = Workspace::open_default()?;
     let theta0 = ws.cnn_init()?;
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
@@ -242,6 +318,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         );
     }
 
+    let mut final_eval: Option<(f64, f64)> = None;
     if !args.flag("no-eval") {
         let eval = ws.cnn_eval()?;
         let mut ev =
@@ -249,6 +326,39 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         use rudra::coordinator::engine_sim::Evaluator;
         let (loss, err) = ev.eval(&result.theta)?;
         println!("test: loss {loss:.4}, error {err:.2}%");
+        final_eval = Some((loss, err));
+    }
+
+    if let (Some(path), Some(m)) = (&cfg.metrics_json, &result.metrics) {
+        write_metrics_json(path, m)?;
+    }
+    if let Some(index) = &cfg.run_index {
+        index_run(
+            index,
+            &rudra::obs::runindex::RunRecord {
+                kind: "train".to_string(),
+                label: cfg.label(),
+                // Live runs have no sim-engine fingerprint; mark the
+                // engine so `runs diff` refuses cross-engine comparisons.
+                fingerprint: format!("live|{}", cfg.label()),
+                seed: cfg.seed,
+                mu: cfg.mu,
+                lambda: cfg.lambda,
+                shards: cfg.shards,
+                epochs: cfg.epochs,
+                test_error_pct: final_eval.map(|(_, err)| err),
+                train_loss: result.loss_log.last().map(|&(_, l)| l as f64),
+                sim_seconds: 0.0,
+                wall_seconds: result.wall_seconds,
+                updates: result.updates,
+                events: 0,
+                avg_staleness: result.staleness.overall_avg(),
+                max_staleness: result.staleness.max,
+                root_bytes_in: result.comm_bytes_by_learner.iter().sum(),
+                root_bytes_out: 0.0,
+                metrics: result.metrics.clone(),
+            },
+        )?;
     }
     Ok(())
 }
@@ -331,10 +441,28 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
         }
         println!("wrote {} comm rows to {path}", p.comm_bytes_by_learner.len());
     }
+    if let Some(path) = &cfg.trace {
+        println!(
+            "wrote trace to {} (load in Perfetto / chrome://tracing)",
+            path.display()
+        );
+    }
+    if let (Some(path), Some(m)) = (&cfg.metrics_json, &p.metrics) {
+        write_metrics_json(path, m)?;
+    }
+    if let Some(index) = &cfg.run_index {
+        index_run(index, &point_record("sim", cfg, &p))?;
+    }
     Ok(())
 }
 
 fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
+    if cfg.trace.is_some() {
+        anyhow::bail!(
+            "--trace is per-run; parallel grid points cannot share one trace \
+             file (use `rudra sim --trace` or `rudra timing --trace`)"
+        );
+    }
     let ws = Workspace::open_default()?;
     // Grid axes layer like every other knob: JSON config (`mus`/`lambdas`)
     // under CLI (`--mus`/`--lambdas`), already merged into `cfg`.
@@ -344,6 +472,7 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
     sweep.seed = cfg.seed;
     sweep.arch = cfg.arch;
     sweep.jobs = cfg.jobs;
+    sweep.collect_metrics = cfg.collect_metrics();
     let points = mus.len() * lambdas.len();
     println!(
         "sweep: {points} grid points on {} worker thread(s)",
@@ -362,6 +491,49 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
         ]);
     }
     t.print();
+
+    if cfg.metrics_json.is_some() || cfg.run_index.is_some() {
+        // Reconstruct the grid-order point configs (λ-major, μ-minor —
+        // [`Sweep::run_grid`]'s construction) so each record carries the
+        // label and seed of the point that produced it.
+        let mut point_cfgs = Vec::with_capacity(results.len());
+        for &lambda in &lambdas {
+            for &mu in &mus {
+                let mut c = RunConfig {
+                    mu,
+                    lambda,
+                    protocol: proto,
+                    epochs: cfg.epochs,
+                    seed: cfg.seed,
+                    ..RunConfig::default()
+                };
+                c.arch = cfg.arch;
+                point_cfgs.push(c);
+            }
+        }
+        if let Some(path) = &cfg.metrics_json {
+            use rudra::util::json::Json;
+            let arr = Json::Arr(
+                results
+                    .iter()
+                    .zip(&point_cfgs)
+                    .map(|(r, c)| {
+                        Json::obj(vec![
+                            ("label", Json::str(c.label())),
+                            ("metrics", r.metrics.clone().unwrap_or(Json::Null)),
+                        ])
+                    })
+                    .collect(),
+            );
+            write_metrics_json(path, &arr)?;
+        }
+        if let Some(index) = &cfg.run_index {
+            for (r, c) in results.iter().zip(&point_cfgs) {
+                rudra::obs::runindex::append(index, &point_record("sweep", c, r))?;
+            }
+            println!("indexed {} sweep points in {}", results.len(), index.display());
+        }
+    }
     Ok(())
 }
 
@@ -384,6 +556,9 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.compress = cfg.compress;
     sim_cfg.stop_after_events = cfg.stop_after_events;
     sim_cfg.sim_checkpoint_path = cfg.sim_checkpoint.clone();
+    sim_cfg.trace = cfg.trace.is_some();
+    sim_cfg.trace_path = cfg.trace.clone();
+    sim_cfg.collect_metrics = cfg.collect_metrics();
     if args.get("max-updates").is_some() {
         sim_cfg.max_updates = Some(args.u64_or("max-updates", 0)?);
     }
@@ -403,7 +578,9 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
         );
         engine.install_sim_checkpoint(&ckpt)?;
     }
+    let started = std::time::Instant::now();
     let r = engine.run()?;
+    let wall_seconds = started.elapsed().as_secs_f64();
     println!(
         "{}: {} epochs in simulated {}  ({} updates, ⟨σ⟩={:.2}, overlap {:.2}%, {} events)",
         cfg.label(),
@@ -457,6 +634,127 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
         &r.residual_norms,
         Some((r.root_bytes_in, r.root_bytes_out)),
     );
+    if let Some(path) = &cfg.trace {
+        println!(
+            "wrote trace to {} (load in Perfetto / chrome://tracing)",
+            path.display()
+        );
+    }
+    if let (Some(path), Some(m)) = (&cfg.metrics_json, &r.metrics) {
+        write_metrics_json(path, m)?;
+    }
+    if let Some(index) = &cfg.run_index {
+        index_run(
+            index,
+            &rudra::obs::runindex::RunRecord {
+                kind: "timing".to_string(),
+                label: cfg.label(),
+                fingerprint: SimEngine::config_fingerprint(&sim_cfg),
+                seed: cfg.seed,
+                mu: cfg.mu,
+                lambda: cfg.lambda,
+                shards: cfg.shards,
+                epochs,
+                test_error_pct: r.final_eval.map(|(_, err)| err),
+                train_loss: Some(r.final_train_loss),
+                sim_seconds: r.sim_seconds,
+                wall_seconds,
+                updates: r.updates,
+                events: r.events_processed,
+                avg_staleness: r.staleness.overall_avg(),
+                max_staleness: r.staleness.max,
+                root_bytes_in: r.root_bytes_in,
+                root_bytes_out: r.root_bytes_out,
+                metrics: r.metrics.clone(),
+            },
+        )?;
+    }
     let _ = Protocol::Hardsync; // referenced for doc completeness
+    Ok(())
+}
+
+/// `rudra runs [list|diff I J]` — query the persistent run index.
+fn cmd_runs(args: &Args) -> Result<()> {
+    use rudra::obs::runindex;
+    let index = std::path::PathBuf::from(args.str_or("index", runindex::DEFAULT_INDEX));
+    let records = runindex::load(&index)?;
+    let action = args.positional.first().map(|s| s.as_str()).unwrap_or("list");
+    match action {
+        "list" => {
+            let filter = args.get("filter").map(|s| s.to_lowercase());
+            let rows: Vec<(usize, &runindex::RunRecord)> = records
+                .iter()
+                .enumerate()
+                .filter(|(_, r)| match &filter {
+                    Some(f) => {
+                        r.label.to_lowercase().contains(f.as_str())
+                            || r.kind.to_lowercase().contains(f.as_str())
+                    }
+                    None => true,
+                })
+                .collect();
+            if records.is_empty() {
+                println!(
+                    "no runs indexed in {} (pass --run-index {} to sim/sweep/timing)",
+                    index.display(),
+                    runindex::DEFAULT_INDEX
+                );
+                return Ok(());
+            }
+            runindex::render_list(&rows).print();
+            println!("{} of {} records in {}", rows.len(), records.len(), index.display());
+        }
+        "diff" => {
+            let parse_idx = |pos: usize, name: &str| -> Result<usize> {
+                let raw = args
+                    .positional
+                    .get(pos)
+                    .ok_or_else(|| anyhow::anyhow!("usage: rudra runs diff I J"))?;
+                let i: usize = raw
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("{name}: bad record number {raw:?}"))?;
+                anyhow::ensure!(
+                    i < records.len(),
+                    "{name}: record #{i} out of range (index has {} records)",
+                    records.len()
+                );
+                Ok(i)
+            };
+            let (i, j) = (parse_idx(1, "I")?, parse_idx(2, "J")?);
+            println!("runs diff #{i} -> #{j} ({}):", index.display());
+            for line in runindex::render_diff(&records[i], &records[j]) {
+                println!("{line}");
+            }
+        }
+        other => anyhow::bail!("unknown runs action {other:?} (list | diff I J)"),
+    }
+    Ok(())
+}
+
+/// `rudra bench-diff OLD.json NEW.json` — the perf-trajectory gate over
+/// two `BENCH_hotpath.json` baselines; exits non-zero on regression.
+fn cmd_bench_diff(args: &Args) -> Result<()> {
+    use rudra::obs::benchdiff;
+    use rudra::util::json::Json;
+    let (Some(old_path), Some(new_path)) =
+        (args.positional.first(), args.positional.get(1))
+    else {
+        anyhow::bail!("usage: rudra bench-diff OLD.json NEW.json [--threshold F]");
+    };
+    let threshold = args.f64_or("threshold", benchdiff::DEFAULT_THRESHOLD)?;
+    let old = Json::parse_file(std::path::Path::new(old_path))?;
+    let new = Json::parse_file(std::path::Path::new(new_path))?;
+    let report = benchdiff::compare(&old, &new, threshold)?;
+    for line in &report.lines {
+        println!("{line}");
+    }
+    if !report.passed() {
+        anyhow::bail!(
+            "{} perf regression(s) past the {threshold}x noise threshold:\n  {}",
+            report.regressions.len(),
+            report.regressions.join("\n  ")
+        );
+    }
+    println!("bench-diff: OK ({old_path} -> {new_path}, threshold {threshold}x)");
     Ok(())
 }

@@ -46,11 +46,14 @@ pub struct EventQueue<T> {
     now: f64,
     seq: u64,
     processed: u64,
+    /// Deepest the queue has ever been (observability gauge — one `max`
+    /// per schedule, never consulted by scheduling itself).
+    high_water: usize,
 }
 
 impl<T> Default for EventQueue<T> {
     fn default() -> Self {
-        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0 }
+        EventQueue { heap: BinaryHeap::new(), now: 0.0, seq: 0, processed: 0, high_water: 0 }
     }
 }
 
@@ -63,7 +66,13 @@ impl<T> EventQueue<T> {
     /// (a few per live learner), and reserving it up front spares the
     /// heap its doubling migrations on the hot path.
     pub fn with_capacity(cap: usize) -> Self {
-        EventQueue { heap: BinaryHeap::with_capacity(cap), now: 0.0, seq: 0, processed: 0 }
+        EventQueue {
+            heap: BinaryHeap::with_capacity(cap),
+            now: 0.0,
+            seq: 0,
+            processed: 0,
+            high_water: 0,
+        }
     }
 
     /// Current virtual time (the timestamp of the last popped event).
@@ -83,6 +92,13 @@ impl<T> EventQueue<T> {
         self.processed
     }
 
+    /// Deepest the queue has ever been (pending events, not lifetime
+    /// total). Restored queues restart the mark from their restored
+    /// depth: a resumed segment reports *its own* high water.
+    pub fn high_water(&self) -> usize {
+        self.high_water
+    }
+
     /// Schedule `payload` at absolute virtual time `at` (clamped to now).
     ///
     /// `at` must not be NaN: the heap's ordering falls back to `Equal`
@@ -97,6 +113,9 @@ impl<T> EventQueue<T> {
         let at = if at.is_nan() || at < self.now { self.now } else { at };
         self.heap.push(Scheduled { at, seq: self.seq, payload });
         self.seq += 1;
+        if self.heap.len() > self.high_water {
+            self.high_water = self.heap.len();
+        }
     }
 
     /// Schedule `payload` `delay` seconds from now.
@@ -161,7 +180,8 @@ impl<T> EventQueue<T> {
         for (at, s, payload) in entries {
             heap.push(Scheduled { at, seq: s, payload });
         }
-        EventQueue { heap, now, seq, processed }
+        let high_water = heap.len();
+        EventQueue { heap, now, seq, processed, high_water }
     }
 }
 
@@ -303,6 +323,22 @@ mod tests {
         assert_eq!((t, p), (2.0, 2));
         let (t, p) = q.pop().unwrap();
         assert!(t.is_infinite() && p == 1);
+    }
+
+    #[test]
+    fn high_water_tracks_peak_depth() {
+        let mut q = EventQueue::new();
+        assert_eq!(q.high_water(), 0);
+        q.schedule_at(1.0, 1);
+        q.schedule_at(2.0, 2);
+        q.schedule_at(3.0, 3);
+        assert_eq!(q.high_water(), 3);
+        q.pop();
+        q.pop();
+        q.schedule_at(4.0, 4); // depth back to 2 — the mark stays at 3
+        assert_eq!(q.high_water(), 3);
+        let restored = EventQueue::restore(q.now(), q.seq(), q.processed(), q.snapshot());
+        assert_eq!(restored.high_water(), 2, "restored queues restart from restored depth");
     }
 
     #[test]

@@ -1,0 +1,247 @@
+//! `BENCH_hotpath.json` comparator: the perf-trajectory gate.
+//!
+//! `rudra bench-diff OLD.json NEW.json` diffs two machine-readable bench
+//! baselines (schema 2, written by `benches/perf_hotpath.rs`) and exits
+//! non-zero when a kernel slows past its noise threshold or the sim
+//! engine's event throughput collapses — CI wires it against the
+//! previous run's uploaded artifact, so perf regressions go red instead
+//! of requiring manual artifact archaeology.
+//!
+//! Thresholds are deliberately loose (shared CI runners jitter hard):
+//! the default flags ≥ 1.75× kernel slowdowns, and sub-microsecond
+//! kernels — where a single cache miss moves the number — get a 3×
+//! floor. An injected 2× regression on a normal kernel must fail; a
+//! self-diff must pass.
+
+use anyhow::Result;
+
+use crate::util::json::Json;
+
+/// Default slowdown ratio that counts as a regression.
+pub const DEFAULT_THRESHOLD: f64 = 1.75;
+/// Noise floor for kernels faster than [`FAST_KERNEL_SECS`] per iter.
+pub const FAST_KERNEL_THRESHOLD: f64 = 3.0;
+/// "Too fast to trust a tight threshold" cutoff (1 µs/iter).
+pub const FAST_KERNEL_SECS: f64 = 1e-6;
+
+/// Outcome of one comparison: human-readable lines plus the regressions
+/// that should fail the gate.
+#[derive(Debug, Default)]
+pub struct DiffReport {
+    pub lines: Vec<String>,
+    pub regressions: Vec<String>,
+}
+
+impl DiffReport {
+    pub fn passed(&self) -> bool {
+        self.regressions.is_empty()
+    }
+}
+
+fn kernel_threshold(old_secs: f64, base: f64) -> f64 {
+    if old_secs < FAST_KERNEL_SECS {
+        base.max(FAST_KERNEL_THRESHOLD)
+    } else {
+        base
+    }
+}
+
+/// Compare two bench baselines. `threshold` is the base slowdown ratio
+/// (see [`DEFAULT_THRESHOLD`]).
+pub fn compare(old: &Json, new: &Json, threshold: f64) -> Result<DiffReport> {
+    anyhow::ensure!(threshold > 1.0, "threshold must be > 1.0, got {threshold}");
+    let old_schema = old.get("schema")?.as_u64()?;
+    let new_schema = new.get("schema")?.as_u64()?;
+    let mut report = DiffReport::default();
+    if old_schema != new_schema {
+        report
+            .lines
+            .push(format!("schema changed {old_schema} -> {new_schema}; comparing shared keys"));
+    }
+    // Quick-mode runs use reduced iteration counts: numbers from the two
+    // modes measure different things and must never gate each other.
+    let old_quick = old.get("quick")?.as_bool()?;
+    let new_quick = new.get("quick")?.as_bool()?;
+    anyhow::ensure!(
+        old_quick == new_quick,
+        "refusing to diff a quick-mode baseline against a full one \
+         (old quick={old_quick}, new quick={new_quick})"
+    );
+
+    // Kernels: intersect by name (a renamed/added kernel is reported but
+    // cannot regress).
+    let (old_kernels, new_kernels) =
+        (old.get("kernels_secs_per_iter")?, new.get("kernels_secs_per_iter")?);
+    if let (Json::Obj(old_map), Json::Obj(new_map)) = (old_kernels, new_kernels) {
+        for (name, old_v) in old_map {
+            let old_secs = old_v.as_f64()?;
+            let Some(new_v) = new_map.get(name) else {
+                report.lines.push(format!("kernel {name}: removed"));
+                continue;
+            };
+            let new_secs = new_v.as_f64()?;
+            if old_secs <= 0.0 {
+                report.lines.push(format!("kernel {name}: old time {old_secs} s — skipped"));
+                continue;
+            }
+            let ratio = new_secs / old_secs;
+            let thr = kernel_threshold(old_secs, threshold);
+            let verdict = if ratio > thr {
+                report.regressions.push(format!(
+                    "kernel {name}: {old_secs:.3e} s -> {new_secs:.3e} s \
+                     ({ratio:.2}x > {thr:.2}x threshold)"
+                ));
+                "REGRESSED"
+            } else if ratio < 1.0 / thr {
+                "improved"
+            } else {
+                "ok"
+            };
+            report.lines.push(format!(
+                "kernel {name}: {old_secs:.3e} -> {new_secs:.3e} s/iter ({ratio:.2}x) {verdict}"
+            ));
+        }
+        for name in new_map.keys() {
+            if !old_map.contains_key(name) {
+                report.lines.push(format!("kernel {name}: new (no baseline)"));
+            }
+        }
+    } else {
+        anyhow::bail!("kernels_secs_per_iter must be an object in both files");
+    }
+
+    // Sim-engine ladder: events/s per λ; a throughput *drop* past the
+    // threshold regresses (ratios invert vs kernel times).
+    let ladder = |v: &Json| -> Result<Vec<(u64, f64)>> {
+        match v.get("sim_engine")? {
+            Json::Arr(rows) => rows
+                .iter()
+                .map(|r| Ok((r.get("lambda")?.as_u64()?, r.get("events_per_sec")?.as_f64()?)))
+                .collect(),
+            _ => anyhow::bail!("sim_engine must be an array"),
+        }
+    };
+    let old_ladder = ladder(old)?;
+    for (lambda, new_eps) in ladder(new)? {
+        let Some(&(_, old_eps)) = old_ladder.iter().find(|(l, _)| *l == lambda) else {
+            report.lines.push(format!("sim engine lambda={lambda}: new (no baseline)"));
+            continue;
+        };
+        if old_eps <= 0.0 {
+            continue;
+        }
+        let ratio = old_eps / new_eps.max(1e-12);
+        let verdict = if ratio > threshold {
+            report.regressions.push(format!(
+                "sim engine lambda={lambda}: {old_eps:.3e} -> {new_eps:.3e} events/s \
+                 ({ratio:.2}x slower > {threshold:.2}x threshold)"
+            ));
+            "REGRESSED"
+        } else {
+            "ok"
+        };
+        report.lines.push(format!(
+            "sim engine lambda={lambda}: {old_eps:.3e} -> {new_eps:.3e} events/s {verdict}"
+        ));
+    }
+
+    // Grid speedup is informational only: it measures runner core count
+    // as much as our executor.
+    if let (Ok(old_g), Ok(new_g)) = (old.get("grid"), new.get("grid")) {
+        if let (Ok(a), Ok(b)) = (old_g.get("speedup"), new_g.get("speedup")) {
+            report.lines.push(format!(
+                "grid speedup: {:.2}x -> {:.2}x (informational)",
+                a.as_f64()?,
+                b.as_f64()?
+            ));
+        }
+    }
+    Ok(report)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn baseline() -> Json {
+        Json::parse(
+            r#"{
+              "schema": 2, "quick": true, "cores": 4,
+              "kernels_secs_per_iter": {
+                "axpy 24k (CNN)": 2.0e-5,
+                "event queue push+pop x1000": 5.0e-7
+              },
+              "sim_engine": [
+                {"lambda": 30, "events": 1000, "wall_secs": 0.001, "events_per_sec": 1.0e6},
+                {"lambda": 512, "events": 2000, "wall_secs": 0.002, "events_per_sec": 1.0e6}
+              ],
+              "grid": {"points": 4, "jobs": 4, "serial_secs": 4.0, "parallel_secs": 1.5,
+                       "speedup": 2.67}
+            }"#,
+        )
+        .unwrap()
+    }
+
+    fn with_kernel(base: &Json, name: &str, secs: f64) -> Json {
+        let mut v = base.clone();
+        if let Json::Obj(top) = &mut v {
+            if let Some(Json::Obj(kernels)) = top.get_mut("kernels_secs_per_iter") {
+                kernels.insert(name.to_string(), Json::num(secs));
+            }
+        }
+        v
+    }
+
+    #[test]
+    fn self_diff_passes() {
+        let b = baseline();
+        let report = compare(&b, &b, DEFAULT_THRESHOLD).unwrap();
+        assert!(report.passed(), "self-diff must pass: {:?}", report.regressions);
+    }
+
+    #[test]
+    fn injected_2x_kernel_regression_fails() {
+        let b = baseline();
+        let worse = with_kernel(&b, "axpy 24k (CNN)", 4.0e-5);
+        let report = compare(&b, &worse, DEFAULT_THRESHOLD).unwrap();
+        assert!(!report.passed());
+        assert!(report.regressions[0].contains("axpy"), "{:?}", report.regressions);
+    }
+
+    #[test]
+    fn sub_microsecond_kernels_get_a_wider_noise_floor() {
+        // 2x on a 0.5 µs kernel is cache-miss noise, not a regression...
+        let b = baseline();
+        let jittery = with_kernel(&b, "event queue push+pop x1000", 1.0e-6);
+        assert!(compare(&b, &jittery, DEFAULT_THRESHOLD).unwrap().passed());
+        // ...but 4x still fails even there.
+        let bad = with_kernel(&b, "event queue push+pop x1000", 2.0e-6);
+        assert!(!compare(&b, &bad, DEFAULT_THRESHOLD).unwrap().passed());
+    }
+
+    #[test]
+    fn sim_engine_throughput_collapse_fails() {
+        let b = baseline();
+        let mut worse = b.clone();
+        if let Json::Obj(top) = &mut worse {
+            if let Some(Json::Arr(rows)) = top.get_mut("sim_engine") {
+                if let Json::Obj(row) = &mut rows[1] {
+                    row.insert("events_per_sec".to_string(), Json::num(4.0e5));
+                }
+            }
+        }
+        let report = compare(&b, &worse, DEFAULT_THRESHOLD).unwrap();
+        assert!(!report.passed());
+        assert!(report.regressions[0].contains("lambda=512"), "{:?}", report.regressions);
+    }
+
+    #[test]
+    fn quick_vs_full_refuses_to_compare() {
+        let b = baseline();
+        let mut full = b.clone();
+        if let Json::Obj(top) = &mut full {
+            top.insert("quick".to_string(), Json::Bool(false));
+        }
+        assert!(compare(&b, &full, DEFAULT_THRESHOLD).is_err());
+    }
+}

@@ -1,0 +1,176 @@
+//! Metrics registry: counters/gauges/histograms the engines accumulate
+//! while running and snapshot into their results.
+//!
+//! The paper's tradeoff study needs *distributions*, not just means —
+//! Zhang et al.'s staleness-aware tuning works off the staleness
+//! histogram, and the §3.3 bottleneck analysis needs root byte flows and
+//! barrier wait time, none of which the per-epoch CSV rows carry. The
+//! registry is purely observational: it reads engine state and never
+//! draws from an engine RNG or touches event order, so metrics-on runs
+//! stay bit-identical to metrics-off ones (property-tested).
+
+use std::collections::BTreeMap;
+
+use crate::coordinator::clock::StalenessStats;
+use crate::util::json::Json;
+
+/// Counter/gauge store. Counter names are `&'static str`: the vocabulary
+/// is the engines' closed set of event kinds, and incrementing must not
+/// allocate on the event hot path.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsRegistry {
+    counters: BTreeMap<&'static str, u64>,
+    /// Event-queue depth high-water mark (gauge).
+    queue_depth_high_water: u64,
+    /// Barrier rounds closed (hardsync/backup-sync broadcasts).
+    barrier_rounds: u64,
+    /// Individual learner barrier waits observed.
+    barrier_waits: u64,
+    barrier_wait_sum: f64,
+    barrier_wait_max: f64,
+    /// Mean barrier wait per round, in virtual seconds (one entry per
+    /// round — the same unbounded-series precedent as
+    /// [`StalenessStats::per_update_avg`]).
+    barrier_round_mean_wait: Vec<f64>,
+}
+
+impl MetricsRegistry {
+    #[inline]
+    pub fn count(&mut self, name: &'static str) {
+        *self.counters.entry(name).or_insert(0) += 1;
+    }
+
+    #[inline]
+    pub fn gauge_queue_depth(&mut self, depth: u64) {
+        if depth > self.queue_depth_high_water {
+            self.queue_depth_high_water = depth;
+        }
+    }
+
+    /// Close one barrier round with the per-learner waits it released.
+    pub fn barrier_round(&mut self, waits: &[f64]) {
+        if waits.is_empty() {
+            return;
+        }
+        self.barrier_rounds += 1;
+        let mut sum = 0.0;
+        for &w in waits {
+            self.barrier_waits += 1;
+            self.barrier_wait_sum += w;
+            if w > self.barrier_wait_max {
+                self.barrier_wait_max = w;
+            }
+            sum += w;
+        }
+        self.barrier_round_mean_wait.push(sum / waits.len() as f64);
+    }
+
+    pub fn queue_depth_high_water(&self) -> u64 {
+        self.queue_depth_high_water
+    }
+
+    /// Snapshot everything into one JSON object, folding in the
+    /// server-side distributions (staleness histogram, per-shard update
+    /// counts, per-learner push contributions, root byte flows) that live
+    /// outside the registry.
+    pub fn snapshot(
+        &self,
+        staleness: &StalenessStats,
+        shard_updates: &[u64],
+        pushes_by_learner: &[u64],
+        root_bytes_in: f64,
+        root_bytes_out: f64,
+    ) -> Json {
+        let counters = Json::Obj(
+            self.counters.iter().map(|(k, v)| (k.to_string(), Json::num(*v as f64))).collect(),
+        );
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("counters", counters),
+            ("queue_depth_high_water", Json::num(self.queue_depth_high_water as f64)),
+            (
+                "barrier",
+                Json::obj(vec![
+                    ("rounds", Json::num(self.barrier_rounds as f64)),
+                    ("waits", Json::num(self.barrier_waits as f64)),
+                    ("wait_secs_sum", Json::num(self.barrier_wait_sum)),
+                    ("wait_secs_max", Json::num(self.barrier_wait_max)),
+                    (
+                        "wait_secs_mean",
+                        Json::num(if self.barrier_waits == 0 {
+                            0.0
+                        } else {
+                            self.barrier_wait_sum / self.barrier_waits as f64
+                        }),
+                    ),
+                    ("round_mean_wait_secs", Json::arr_f64(&self.barrier_round_mean_wait)),
+                ]),
+            ),
+            (
+                "staleness",
+                Json::obj(vec![
+                    ("avg", Json::num(staleness.overall_avg())),
+                    ("max", Json::num(staleness.max as f64)),
+                    ("count", Json::num(staleness.count as f64)),
+                    ("histogram", Json::arr_u64(&staleness.histogram)),
+                ]),
+            ),
+            ("shard_updates", Json::arr_u64(shard_updates)),
+            ("pushes_by_learner", Json::arr_u64(pushes_by_learner)),
+            ("root_bytes_in", Json::num(root_bytes_in)),
+            ("root_bytes_out", Json::num(root_bytes_out)),
+        ])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_and_gauges_accumulate() {
+        let mut m = MetricsRegistry::default();
+        m.count("compute_done");
+        m.count("compute_done");
+        m.count("push");
+        m.gauge_queue_depth(3);
+        m.gauge_queue_depth(9);
+        m.gauge_queue_depth(5);
+        assert_eq!(m.counters["compute_done"], 2);
+        assert_eq!(m.counters["push"], 1);
+        assert_eq!(m.queue_depth_high_water(), 9);
+    }
+
+    #[test]
+    fn barrier_rounds_track_wait_distribution() {
+        let mut m = MetricsRegistry::default();
+        m.barrier_round(&[1.0, 3.0]);
+        m.barrier_round(&[0.0, 2.0]);
+        m.barrier_round(&[]); // released nobody: not a round
+        assert_eq!(m.barrier_rounds, 2);
+        assert_eq!(m.barrier_waits, 4);
+        assert_eq!(m.barrier_wait_sum, 6.0);
+        assert_eq!(m.barrier_wait_max, 3.0);
+        assert_eq!(m.barrier_round_mean_wait, vec![2.0, 1.0]);
+    }
+
+    #[test]
+    fn snapshot_round_trips_through_json_text() {
+        let mut m = MetricsRegistry::default();
+        m.count("apply_update");
+        m.gauge_queue_depth(17);
+        m.barrier_round(&[0.5]);
+        let mut staleness = StalenessStats::default();
+        staleness.record(2, &[1, 0]);
+        let snap = m.snapshot(&staleness, &[4, 4], &[3, 5], 100.0, 200.0);
+        let parsed = Json::parse(&snap.to_string()).unwrap();
+        assert_eq!(parsed.get("queue_depth_high_water").unwrap().as_u64().unwrap(), 17);
+        assert_eq!(parsed.get("barrier").unwrap().get("rounds").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(
+            parsed.get("staleness").unwrap().get("histogram").unwrap().as_u64_vec().unwrap(),
+            vec![1, 1]
+        );
+        assert_eq!(parsed.get("pushes_by_learner").unwrap().as_u64_vec().unwrap(), vec![3, 5]);
+        assert_eq!(parsed.get("root_bytes_in").unwrap().as_f64().unwrap(), 100.0);
+    }
+}

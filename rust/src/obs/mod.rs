@@ -1,0 +1,283 @@
+//! Observability: run tracing, metrics, and the persistent run index.
+//!
+//! Three layers, all *purely observational* — nothing here draws from an
+//! engine RNG, touches event order, or mutates server state, so enabling
+//! any of it leaves trajectories bit-identical (pinned by
+//! `tests/integration_obs.rs`):
+//!
+//! * [`trace`] — Chrome trace-event recording over virtual sim time
+//!   (`--trace FILE`, loadable in Perfetto / `chrome://tracing`).
+//! * [`metrics`] — counters/gauges/histograms snapshotted into run
+//!   results (`--metrics-json FILE`).
+//! * [`runindex`] — append-only `runs.jsonl` of every sim/sweep/timing
+//!   point (`--run-index FILE`, `rudra runs`), plus [`benchdiff`], the
+//!   `rudra bench-diff` perf-trajectory gate over `BENCH_hotpath.json`.
+//!
+//! [`Obs`] is the engines' single integration point: one call per event
+//! site feeds both the trace and the metrics, and the quiet default
+//! costs one branch per site.
+
+pub mod benchdiff;
+pub mod metrics;
+pub mod runindex;
+pub mod trace;
+
+use metrics::MetricsRegistry;
+use trace::{TraceEvent, TraceRecorder};
+
+/// Per-engine observability state. `Obs::off()` (the default) makes every
+/// method an early-return branch.
+#[derive(Debug, Default)]
+pub struct Obs {
+    trace: TraceRecorder,
+    metrics: Option<MetricsRegistry>,
+    /// Observer-side barrier bookkeeping: when each learner's gradient
+    /// entered the barrier (engine state is not consulted at release
+    /// time, so recording cannot perturb it).
+    barrier_entered: Vec<f64>,
+    /// Scratch: waits released by the round being closed.
+    round_waits: Vec<f64>,
+    active: bool,
+}
+
+impl Obs {
+    /// The quiet default: records nothing, collects nothing.
+    pub fn off() -> Obs {
+        Obs::default()
+    }
+
+    pub fn new(trace_on: bool, metrics_on: bool, lambda: usize) -> Obs {
+        if !trace_on && !metrics_on {
+            return Obs::off();
+        }
+        Obs {
+            trace: if trace_on { TraceRecorder::on() } else { TraceRecorder::off() },
+            metrics: if metrics_on { Some(MetricsRegistry::default()) } else { None },
+            barrier_entered: vec![0.0; lambda],
+            round_waits: Vec::new(),
+            active: true,
+        }
+    }
+
+    #[inline]
+    pub fn active(&self) -> bool {
+        self.active
+    }
+
+    pub fn metrics(&self) -> Option<&MetricsRegistry> {
+        self.metrics.as_ref()
+    }
+
+    /// Mini-batch compute span (reconstructed at completion: the engine
+    /// caches the jittered cost, so the start is `end - cost`).
+    #[inline]
+    pub fn compute(&mut self, l: usize, start: f64, end: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.span("compute", trace::PID_LEARNERS, l as u64, start, end);
+        if let Some(m) = &mut self.metrics {
+            m.count("compute_done");
+        }
+    }
+
+    /// Gradient push wire transit (learner → root or learner → leaf).
+    #[inline]
+    pub fn push(&mut self, l: usize, start: f64, end: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.span("push", trace::PID_LEARNERS, l as u64, start, end);
+        if let Some(m) = &mut self.metrics {
+            m.count("push_wire");
+        }
+    }
+
+    /// Leaf aggregator relay hop (leaf → root).
+    #[inline]
+    pub fn relay(&mut self, leaf: usize, start: f64, end: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.span("relay", trace::PID_LEAVES, leaf as u64, start, end);
+        if let Some(m) = &mut self.metrics {
+            m.count("relay");
+        }
+    }
+
+    /// Weight pull (request → delivery at the learner).
+    #[inline]
+    pub fn pull(&mut self, l: usize, start: f64, end: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.span("pull", trace::PID_LEARNERS, l as u64, start, end);
+        if let Some(m) = &mut self.metrics {
+            m.count("pull");
+        }
+    }
+
+    /// Broadcast delivery span (root/leaf egress → learner).
+    #[inline]
+    pub fn broadcast(&mut self, l: usize, start: f64, end: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.span("broadcast", trace::PID_LEARNERS, l as u64, start, end);
+        if let Some(m) = &mut self.metrics {
+            m.count("broadcast");
+        }
+    }
+
+    /// Adv* striped per-update broadcast initiation (modeled, not an
+    /// event — recorded as an instant at the root tier).
+    #[inline]
+    pub fn advstar_broadcast(&mut self, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("broadcast", trace::PID_SHARDS, 0, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("broadcast");
+        }
+    }
+
+    /// applyUpdate fired on every root shard (lockstep).
+    #[inline]
+    pub fn apply_update(&mut self, shards: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        for s in 0..shards {
+            self.trace.instant("apply_update", trace::PID_SHARDS, s as u64, now);
+        }
+        if let Some(m) = &mut self.metrics {
+            m.count("apply_update");
+        }
+    }
+
+    /// Periodic checkpoint capture.
+    #[inline]
+    pub fn checkpoint(&mut self, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("checkpoint", trace::PID_SHARDS, 0, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("checkpoint");
+        }
+    }
+
+    /// A learner's gradient reached the barrier (starts its wait).
+    #[inline]
+    pub fn barrier_enter(&mut self, l: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        if let Some(e) = self.barrier_entered.get_mut(l) {
+            *e = now;
+        }
+    }
+
+    /// The closing broadcast released learner `l` from the barrier.
+    #[inline]
+    pub fn barrier_release(&mut self, l: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        let entered = self.barrier_entered.get(l).copied().unwrap_or(now);
+        self.trace.span("barrier_wait", trace::PID_LEARNERS, l as u64, entered, now);
+        if self.metrics.is_some() {
+            self.round_waits.push((now - entered).max(0.0));
+        }
+    }
+
+    /// All releases for the current round are in; fold them into the
+    /// per-round barrier histogram.
+    #[inline]
+    pub fn barrier_round_end(&mut self) {
+        if !self.active {
+            return;
+        }
+        if let Some(m) = &mut self.metrics {
+            m.barrier_round(&self.round_waits);
+        }
+        self.round_waits.clear();
+    }
+
+    /// Event-queue depth gauge (called per loop iteration; a no-op
+    /// unless metrics are on).
+    #[inline]
+    pub fn queue_depth(&mut self, depth: usize) {
+        if let Some(m) = &mut self.metrics {
+            m.gauge_queue_depth(depth as u64);
+        }
+    }
+
+    /// Snapshot the metrics (if collecting) with the server-side
+    /// distributions folded in.
+    pub fn metrics_snapshot(
+        &self,
+        staleness: &crate::coordinator::clock::StalenessStats,
+        shard_updates: &[u64],
+        pushes_by_learner: &[u64],
+        root_bytes_in: f64,
+        root_bytes_out: f64,
+    ) -> Option<crate::util::json::Json> {
+        self.metrics.as_ref().map(|m| {
+            m.snapshot(staleness, shard_updates, pushes_by_learner, root_bytes_in, root_bytes_out)
+        })
+    }
+
+    /// Take the recorded trace (None when tracing was off).
+    pub fn take_trace(&mut self) -> Option<Vec<TraceEvent>> {
+        self.trace.take()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_is_inert() {
+        let mut obs = Obs::off();
+        obs.compute(0, 0.0, 1.0);
+        obs.barrier_enter(0, 1.0);
+        obs.barrier_release(0, 2.0);
+        obs.barrier_round_end();
+        obs.queue_depth(100);
+        assert!(!obs.active());
+        assert!(obs.take_trace().is_none());
+        assert!(obs.metrics().is_none());
+    }
+
+    #[test]
+    fn barrier_waits_span_entry_to_release() {
+        let mut obs = Obs::new(true, true, 2);
+        obs.barrier_enter(0, 1.0);
+        obs.barrier_enter(1, 3.0);
+        obs.barrier_release(0, 4.0);
+        obs.barrier_release(1, 4.0);
+        obs.barrier_round_end();
+        let trace = obs.take_trace().unwrap();
+        assert_eq!(trace.len(), 2);
+        assert_eq!(trace[0].name, "barrier_wait");
+        assert_eq!(trace[0].dur_us, 3.0e6);
+        assert_eq!(trace[1].dur_us, 1.0e6);
+        let snap = obs
+            .metrics_snapshot(&Default::default(), &[], &[], 0.0, 0.0)
+            .expect("metrics were on");
+        let barrier = snap.get("barrier").unwrap();
+        assert_eq!(barrier.get("rounds").unwrap().as_u64().unwrap(), 1);
+        assert_eq!(barrier.get("wait_secs_max").unwrap().as_f64().unwrap(), 3.0);
+    }
+
+    #[test]
+    fn trace_only_still_skips_metrics() {
+        let mut obs = Obs::new(true, false, 1);
+        obs.compute(0, 0.0, 0.5);
+        assert!(obs.metrics_snapshot(&Default::default(), &[], &[], 0.0, 0.0).is_none());
+        assert_eq!(obs.take_trace().unwrap().len(), 1);
+    }
+}

@@ -1,0 +1,323 @@
+//! Persistent run index: one appended JSONL record per sim/sweep/timing
+//! point, so results outlive the process that produced them.
+//!
+//! Every record carries enough to reconstruct the paper's tradeoff
+//! frontier later — config fingerprint + label + seed (identity),
+//! accuracy (test error / train loss when numeric), virtual and wall
+//! time, root byte flows, staleness stats, and the full metrics snapshot
+//! when one was collected. `rudra runs list` / `rudra runs diff` read
+//! the index back; the file is append-only (concatenating indexes from
+//! two machines is a valid merge).
+
+use std::io::Write;
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::stats::table::Table;
+use crate::util::json::Json;
+
+/// Default index path (workspace-relative, like `BENCH_hotpath.json`).
+pub const DEFAULT_INDEX: &str = "runs.jsonl";
+
+/// One indexed run (or sweep point).
+#[derive(Debug, Clone)]
+pub struct RunRecord {
+    /// Which command produced it: "sim", "sweep", or "timing".
+    pub kind: String,
+    /// Human-readable run label ([`crate::config::RunConfig::label`]).
+    pub label: String,
+    /// Trajectory-shaping config fingerprint
+    /// ([`crate::coordinator::engine_sim::SimEngine::config_fingerprint`]).
+    pub fingerprint: String,
+    pub seed: u64,
+    pub mu: usize,
+    pub lambda: usize,
+    pub shards: usize,
+    pub epochs: usize,
+    /// Final held-out error % (numeric runs only).
+    pub test_error_pct: Option<f64>,
+    /// Final training loss (numeric runs only).
+    pub train_loss: Option<f64>,
+    /// Virtual (simulated) seconds.
+    pub sim_seconds: f64,
+    /// Host wall-clock seconds the point took to run.
+    pub wall_seconds: f64,
+    pub updates: u64,
+    pub events: u64,
+    pub avg_staleness: f64,
+    pub max_staleness: u64,
+    pub root_bytes_in: f64,
+    pub root_bytes_out: f64,
+    /// Metrics snapshot ([`crate::obs::metrics::MetricsRegistry`]), when
+    /// the run collected one.
+    pub metrics: Option<Json>,
+}
+
+impl RunRecord {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("kind", Json::str(&self.kind)),
+            ("label", Json::str(&self.label)),
+            ("fingerprint", Json::str(&self.fingerprint)),
+            ("seed", Json::num(self.seed as f64)),
+            ("mu", Json::num(self.mu as f64)),
+            ("lambda", Json::num(self.lambda as f64)),
+            ("shards", Json::num(self.shards as f64)),
+            ("epochs", Json::num(self.epochs as f64)),
+            ("sim_seconds", Json::num(self.sim_seconds)),
+            ("wall_seconds", Json::num(self.wall_seconds)),
+            ("updates", Json::num(self.updates as f64)),
+            ("events", Json::num(self.events as f64)),
+            ("avg_staleness", Json::num(self.avg_staleness)),
+            ("max_staleness", Json::num(self.max_staleness as f64)),
+            ("root_bytes_in", Json::num(self.root_bytes_in)),
+            ("root_bytes_out", Json::num(self.root_bytes_out)),
+        ];
+        // Optional accuracy fields are *omitted* when absent or non-finite
+        // (timing-only runs report NaN train loss; NaN has no JSON form).
+        if let Some(e) = self.test_error_pct.filter(|e| e.is_finite()) {
+            pairs.push(("test_error_pct", Json::num(e)));
+        }
+        if let Some(l) = self.train_loss.filter(|l| l.is_finite()) {
+            pairs.push(("train_loss", Json::num(l)));
+        }
+        if let Some(m) = &self.metrics {
+            pairs.push(("metrics", m.clone()));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(v: &Json) -> Result<RunRecord> {
+        Ok(RunRecord {
+            kind: v.get("kind")?.as_str()?.to_string(),
+            label: v.get("label")?.as_str()?.to_string(),
+            fingerprint: v.get("fingerprint")?.as_str()?.to_string(),
+            seed: v.get("seed")?.as_u64()?,
+            mu: v.get("mu")?.as_usize()?,
+            lambda: v.get("lambda")?.as_usize()?,
+            shards: v.get("shards")?.as_usize()?,
+            epochs: v.get("epochs")?.as_usize()?,
+            test_error_pct: match v.opt("test_error_pct") {
+                Some(e) => Some(e.as_f64()?),
+                None => None,
+            },
+            train_loss: match v.opt("train_loss") {
+                Some(l) => Some(l.as_f64()?),
+                None => None,
+            },
+            sim_seconds: v.get("sim_seconds")?.as_f64()?,
+            wall_seconds: v.get("wall_seconds")?.as_f64()?,
+            updates: v.get("updates")?.as_u64()?,
+            events: v.get("events")?.as_u64()?,
+            avg_staleness: v.get("avg_staleness")?.as_f64()?,
+            max_staleness: v.get("max_staleness")?.as_u64()?,
+            root_bytes_in: v.get("root_bytes_in")?.as_f64()?,
+            root_bytes_out: v.get("root_bytes_out")?.as_f64()?,
+            metrics: v.opt("metrics").cloned(),
+        })
+    }
+}
+
+/// Append one record. The file is opened in append mode (not the
+/// truncating [`crate::stats::log::JsonlLog`] writer): the whole point is
+/// that records from *successive processes* accumulate.
+pub fn append(path: &Path, record: &RunRecord) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating run-index directory {}", parent.display()))?;
+        }
+    }
+    let mut file = std::fs::OpenOptions::new()
+        .create(true)
+        .append(true)
+        .open(path)
+        .with_context(|| format!("opening run index {}", path.display()))?;
+    writeln!(file, "{}", record.to_json().to_string())
+        .with_context(|| format!("appending to run index {}", path.display()))
+}
+
+/// Load every record (empty if the index does not exist yet).
+pub fn load(path: &Path) -> Result<Vec<RunRecord>> {
+    if !path.exists() {
+        return Ok(Vec::new());
+    }
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading run index {}", path.display()))?;
+    let mut records = Vec::new();
+    for (i, line) in text.lines().enumerate() {
+        if line.trim().is_empty() {
+            continue;
+        }
+        let v = Json::parse(line)
+            .with_context(|| format!("{}:{}: bad JSONL line", path.display(), i + 1))?;
+        records.push(
+            RunRecord::from_json(&v)
+                .with_context(|| format!("{}:{}: bad run record", path.display(), i + 1))?,
+        );
+    }
+    Ok(records)
+}
+
+fn fmt_opt_pct(v: Option<f64>) -> String {
+    match v {
+        Some(e) => format!("{e:.2}"),
+        None => "-".to_string(),
+    }
+}
+
+/// Render records as the `rudra runs list` table. Row numbers are the
+/// record's position in the *full* index (stable diff handles even when
+/// a filter hides rows).
+pub fn render_list(records: &[(usize, &RunRecord)]) -> Table {
+    let mut t = Table::new(&[
+        "#",
+        "kind",
+        "label",
+        "seed",
+        "err%",
+        "<sigma>",
+        "sim s",
+        "wall s",
+        "updates",
+        "events",
+    ]);
+    for (i, r) in records {
+        t.row(vec![
+            i.to_string(),
+            r.kind.clone(),
+            r.label.clone(),
+            r.seed.to_string(),
+            fmt_opt_pct(r.test_error_pct),
+            format!("{:.3}", r.avg_staleness),
+            format!("{:.1}", r.sim_seconds),
+            format!("{:.2}", r.wall_seconds),
+            r.updates.to_string(),
+            r.events.to_string(),
+        ]);
+    }
+    t
+}
+
+fn diff_num(lines: &mut Vec<String>, name: &str, a: f64, b: f64) {
+    // Both-NaN means "absent on both sides" (timing records carry no
+    // accuracy) — not a difference.
+    if a == b || (a.is_nan() && b.is_nan()) {
+        return;
+    }
+    let rel = if a != 0.0 {
+        format!(" ({:+.1}%)", (b - a) / a * 100.0)
+    } else {
+        String::new()
+    };
+    lines.push(format!("  {name}: {a} -> {b}{rel}"));
+}
+
+/// Field-by-field diff of two records (the `rudra runs diff I J` body).
+pub fn render_diff(a: &RunRecord, b: &RunRecord) -> Vec<String> {
+    let mut lines = Vec::new();
+    if a.label != b.label {
+        lines.push(format!("  label: {} -> {}", a.label, b.label));
+    }
+    if a.fingerprint != b.fingerprint {
+        lines.push("  fingerprint: DIFFERENT (configs are not comparable point-for-point)".into());
+    }
+    diff_num(&mut lines, "seed", a.seed as f64, b.seed as f64);
+    diff_num(
+        &mut lines,
+        "test_error_pct",
+        a.test_error_pct.unwrap_or(f64::NAN),
+        b.test_error_pct.unwrap_or(f64::NAN),
+    );
+    diff_num(&mut lines, "sim_seconds", a.sim_seconds, b.sim_seconds);
+    diff_num(&mut lines, "wall_seconds", a.wall_seconds, b.wall_seconds);
+    diff_num(&mut lines, "updates", a.updates as f64, b.updates as f64);
+    diff_num(&mut lines, "events", a.events as f64, b.events as f64);
+    diff_num(&mut lines, "avg_staleness", a.avg_staleness, b.avg_staleness);
+    diff_num(&mut lines, "max_staleness", a.max_staleness as f64, b.max_staleness as f64);
+    diff_num(&mut lines, "root_bytes_in", a.root_bytes_in, b.root_bytes_in);
+    diff_num(&mut lines, "root_bytes_out", a.root_bytes_out, b.root_bytes_out);
+    if lines.is_empty() {
+        lines.push("  (identical)".into());
+    }
+    lines
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample(kind: &str, seed: u64) -> RunRecord {
+        RunRecord {
+            kind: kind.to_string(),
+            label: format!("sim-1-softsync-mu4-lambda8-seed{seed}"),
+            fingerprint: "timing|1-softsync|Base|...".to_string(),
+            seed,
+            mu: 4,
+            lambda: 8,
+            shards: 1,
+            epochs: 2,
+            test_error_pct: Some(12.5),
+            train_loss: Some(0.42),
+            sim_seconds: 100.0,
+            wall_seconds: 1.5,
+            updates: 2000,
+            events: 60_000,
+            avg_staleness: 3.25,
+            max_staleness: 9,
+            root_bytes_in: 1e9,
+            root_bytes_out: 2e9,
+            metrics: Some(Json::obj(vec![("queue_depth_high_water", Json::num(33.0))])),
+        }
+    }
+
+    fn tmp(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!("rudra_runindex_{}", std::process::id()));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(name)
+    }
+
+    #[test]
+    fn append_is_cumulative_and_loads_back() {
+        let path = tmp("append.jsonl");
+        std::fs::remove_file(&path).ok();
+        append(&path, &sample("sim", 1)).unwrap();
+        append(&path, &sample("sweep", 2)).unwrap();
+        let records = load(&path).unwrap();
+        assert_eq!(records.len(), 2);
+        assert_eq!(records[0].kind, "sim");
+        assert_eq!(records[1].seed, 2);
+        assert!(records[1].metrics.is_some());
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn timing_records_omit_nan_accuracy() {
+        let mut r = sample("timing", 3);
+        r.test_error_pct = Some(f64::NAN);
+        r.train_loss = None;
+        let text = r.to_json().to_string();
+        assert!(!text.contains("test_error_pct"), "NaN must be omitted: {text}");
+        let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
+        assert!(back.test_error_pct.is_none());
+        assert!(back.train_loss.is_none());
+    }
+
+    #[test]
+    fn missing_index_loads_empty() {
+        assert!(load(Path::new("/nonexistent/runs.jsonl")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn diff_reports_changed_fields_only() {
+        let a = sample("sim", 1);
+        let mut b = sample("sim", 1);
+        b.sim_seconds = 110.0;
+        let lines = render_diff(&a, &b);
+        assert_eq!(lines.len(), 1);
+        assert!(lines[0].contains("sim_seconds"), "{lines:?}");
+        assert!(lines[0].contains("+10.0%"), "{lines:?}");
+        assert_eq!(render_diff(&a, &a.clone()), vec!["  (identical)".to_string()]);
+    }
+}

@@ -1,0 +1,195 @@
+//! Chrome trace-event recorder over *virtual* sim time.
+//!
+//! Emits the trace-event JSON format (`{"traceEvents": [...]}`) that
+//! Perfetto and `chrome://tracing` load directly: complete spans
+//! (`ph: "X"`) for mini-batch compute, gradient push wire transit,
+//! barrier waits, leaf relay hops, pulls, and broadcasts, plus instant
+//! events (`ph: "i"`) for per-shard applyUpdate and checkpoint capture.
+//! Timestamps are virtual sim seconds converted to microseconds (the
+//! format's unit), so the timeline a viewer shows *is* the simulated
+//! schedule, not host wall time.
+//!
+//! The recorder is off by default and costs one branch per call site
+//! when off — `trace none` runs take the exact pre-obs path, which the
+//! bit-identity property tests in `tests/integration_obs.rs` pin down.
+
+use std::path::Path;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Trace process ids group the timeline rows: one lane per learner under
+/// the "learners" process, per root shard under "root shards", per leaf
+/// aggregator under "leaf aggregators".
+pub const PID_LEARNERS: u64 = 1;
+pub const PID_SHARDS: u64 = 2;
+pub const PID_LEAVES: u64 = 3;
+
+/// One recorded event. `name` is a `&'static str` on purpose: span names
+/// form a small closed vocabulary and recording must not allocate per
+/// event on the sim hot path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceEvent {
+    pub name: &'static str,
+    /// Trace-event phase: `'X'` complete span, `'i'` instant.
+    pub ph: char,
+    /// Start, in virtual microseconds.
+    pub ts_us: f64,
+    /// Duration in microseconds (0 for instants).
+    pub dur_us: f64,
+    pub pid: u64,
+    pub tid: u64,
+}
+
+/// Span recorder: `None` events = disabled (the no-op recorder). Every
+/// record method is an early-return branch when off, so quiet runs pay
+/// nothing but the check.
+#[derive(Debug, Default)]
+pub struct TraceRecorder {
+    events: Option<Vec<TraceEvent>>,
+}
+
+impl TraceRecorder {
+    /// The no-op recorder (default): records nothing.
+    pub fn off() -> TraceRecorder {
+        TraceRecorder { events: None }
+    }
+
+    pub fn on() -> TraceRecorder {
+        TraceRecorder { events: Some(Vec::new()) }
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.events.is_some()
+    }
+
+    /// Record a complete span over `[start_s, end_s]` virtual seconds.
+    #[inline]
+    pub fn span(&mut self, name: &'static str, pid: u64, tid: u64, start_s: f64, end_s: f64) {
+        if let Some(events) = &mut self.events {
+            events.push(TraceEvent {
+                name,
+                ph: 'X',
+                ts_us: start_s * 1e6,
+                dur_us: (end_s - start_s).max(0.0) * 1e6,
+                pid,
+                tid,
+            });
+        }
+    }
+
+    /// Record an instant event at `at_s` virtual seconds.
+    #[inline]
+    pub fn instant(&mut self, name: &'static str, pid: u64, tid: u64, at_s: f64) {
+        if let Some(events) = &mut self.events {
+            events.push(TraceEvent { name, ph: 'i', ts_us: at_s * 1e6, dur_us: 0.0, pid, tid });
+        }
+    }
+
+    /// Take the recorded events, leaving the recorder disabled.
+    pub fn take(&mut self) -> Option<Vec<TraceEvent>> {
+        self.events.take()
+    }
+}
+
+fn metadata_event(pid: u64, name: &str) -> Json {
+    Json::obj(vec![
+        ("name", Json::str("process_name")),
+        ("ph", Json::str("M")),
+        ("pid", Json::num(pid as f64)),
+        ("args", Json::obj(vec![("name", Json::str(name))])),
+    ])
+}
+
+/// Render events as the Chrome trace-event JSON object.
+pub fn to_json(events: &[TraceEvent]) -> Json {
+    let mut rows = vec![
+        metadata_event(PID_LEARNERS, "learners"),
+        metadata_event(PID_SHARDS, "root shards"),
+        metadata_event(PID_LEAVES, "leaf aggregators"),
+    ];
+    for e in events {
+        let mut pairs = vec![
+            ("name", Json::str(e.name)),
+            ("ph", Json::str(e.ph.to_string())),
+            ("ts", Json::num(e.ts_us)),
+            ("pid", Json::num(e.pid as f64)),
+            ("tid", Json::num(e.tid as f64)),
+        ];
+        if e.ph == 'X' {
+            pairs.push(("dur", Json::num(e.dur_us)));
+        } else {
+            // instant scope: thread-local marker
+            pairs.push(("s", Json::str("t")));
+        }
+        rows.push(Json::obj(pairs));
+    }
+    Json::obj(vec![("traceEvents", Json::Arr(rows))])
+}
+
+/// Write the trace file (creating parent directories).
+pub fn write(path: &Path, events: &[TraceEvent]) -> Result<()> {
+    if let Some(parent) = path.parent() {
+        if !parent.as_os_str().is_empty() {
+            std::fs::create_dir_all(parent)
+                .with_context(|| format!("creating trace directory {}", parent.display()))?;
+        }
+    }
+    std::fs::write(path, to_json(events).to_string())
+        .with_context(|| format!("writing trace {}", path.display()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn off_recorder_records_nothing() {
+        let mut r = TraceRecorder::off();
+        r.span("compute", PID_LEARNERS, 0, 0.0, 1.0);
+        r.instant("checkpoint", PID_SHARDS, 0, 2.0);
+        assert!(!r.enabled());
+        assert!(r.take().is_none());
+    }
+
+    #[test]
+    fn spans_convert_seconds_to_microseconds() {
+        let mut r = TraceRecorder::on();
+        r.span("compute", PID_LEARNERS, 3, 0.5, 0.75);
+        let events = r.take().unwrap();
+        assert_eq!(events.len(), 1);
+        assert_eq!(events[0].ts_us, 0.5e6);
+        assert_eq!(events[0].dur_us, 0.25e6);
+        assert_eq!(events[0].tid, 3);
+    }
+
+    #[test]
+    fn json_has_trace_events_array_with_metadata() {
+        let mut r = TraceRecorder::on();
+        r.span("push", PID_LEARNERS, 1, 0.0, 0.1);
+        r.instant("apply_update", PID_SHARDS, 0, 0.1);
+        let json = to_json(&r.take().unwrap());
+        let text = json.to_string();
+        let parsed = Json::parse(&text).expect("trace JSON must re-parse");
+        let rows = match parsed.get("traceEvents").unwrap() {
+            Json::Arr(rows) => rows.clone(),
+            other => panic!("traceEvents must be an array, got {other:?}"),
+        };
+        // 3 process_name metadata rows + 2 recorded events
+        assert_eq!(rows.len(), 5);
+        assert_eq!(rows[0].get("ph").unwrap().as_str().unwrap(), "M");
+        assert_eq!(rows[3].get("name").unwrap().as_str().unwrap(), "push");
+        assert_eq!(rows[4].get("ph").unwrap().as_str().unwrap(), "i");
+    }
+
+    #[test]
+    fn negative_durations_clamp_to_zero() {
+        // Defensive: a span whose end precedes its start (should not
+        // happen, but a viewer would reject a negative dur) clamps.
+        let mut r = TraceRecorder::on();
+        r.span("push", PID_LEARNERS, 0, 1.0, 0.5);
+        assert_eq!(r.take().unwrap()[0].dur_us, 0.0);
+    }
+}

@@ -12,13 +12,34 @@ pub struct CsvLog {
     columns: usize,
 }
 
+/// Quote a CSV field per RFC 4180 *only when it needs it* (embedded
+/// comma, double quote, or newline) — plain numeric fields pass through
+/// byte-identical, so existing logs keep their exact shape.
+fn csv_field(value: &str) -> String {
+    if value.contains(',') || value.contains('"') || value.contains('\n') || value.contains('\r')
+    {
+        format!("\"{}\"", value.replace('"', "\"\""))
+    } else {
+        value.to_string()
+    }
+}
+
 impl CsvLog {
     pub fn create(path: &Path, header: &[&str]) -> Result<CsvLog> {
+        // Failing to create the directory used to be swallowed with
+        // `.ok()`, deferring to a baffling "No such file" from the file
+        // create below; surface the real cause. Bare filenames have an
+        // empty parent, which is not a directory to create.
         if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent).ok();
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating log directory {}", parent.display())
+                })?;
+            }
         }
         let mut file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
+        let header: Vec<String> = header.iter().map(|h| csv_field(h)).collect();
         writeln!(file, "{}", header.join(","))?;
         Ok(CsvLog { file, columns: header.len() })
     }
@@ -30,7 +51,8 @@ impl CsvLog {
             values.len(),
             self.columns
         );
-        writeln!(self.file, "{}", values.join(","))?;
+        let quoted: Vec<String> = values.iter().map(|v| csv_field(v)).collect();
+        writeln!(self.file, "{}", quoted.join(","))?;
         Ok(())
     }
 
@@ -81,8 +103,14 @@ pub struct JsonlLog {
 
 impl JsonlLog {
     pub fn create(path: &Path) -> Result<JsonlLog> {
+        // Same deferred-error bug as [`CsvLog::create`]: propagate the
+        // directory failure instead of `.ok()`-ing it away.
         if let Some(parent) = path.parent() {
-            std::fs::create_dir_all(parent).ok();
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent).with_context(|| {
+                    format!("creating log directory {}", parent.display())
+                })?;
+            }
         }
         let file = std::fs::File::create(path)
             .with_context(|| format!("creating {}", path.display()))?;
@@ -146,6 +174,48 @@ mod tests {
         std::fs::create_dir_all(&dir).unwrap();
         let mut log = CsvLog::create(&dir.join("comm.csv"), &COMM_COLUMNS).unwrap();
         log.row(&row).unwrap();
+    }
+
+    // Regression: `create_dir_all` failures were `.ok()`-ed away, so a
+    // parent path blocked by a regular *file* surfaced later as a
+    // baffling error from `File::create`. Both writers now propagate the
+    // directory error with the actual path in context.
+    #[test]
+    fn create_surfaces_directory_errors() {
+        let dir = std::env::temp_dir().join("rudra_test_log_direrr");
+        std::fs::create_dir_all(&dir).unwrap();
+        let blocker = dir.join("not_a_dir");
+        std::fs::write(&blocker, b"file, not directory").unwrap();
+        let under = blocker.join("x.csv");
+        let err = CsvLog::create(&under, &["a"]).unwrap_err();
+        assert!(err.to_string().contains("log directory"), "{err:#}");
+        let err = JsonlLog::create(&blocker.join("x.jsonl")).unwrap_err();
+        assert!(err.to_string().contains("log directory"), "{err:#}");
+        // bare filenames (empty parent) must not trip the directory path
+        // (`create_dir_all("")` errors, which the old `.ok()` also hid)
+        CsvLog::create(Path::new("rudra_test_bare_tmp.csv"), &["a"]).unwrap();
+        std::fs::remove_file("rudra_test_bare_tmp.csv").ok();
+    }
+
+    // Regression: fields with embedded commas/quotes/newlines were
+    // written raw, silently corrupting the column structure. They now get
+    // RFC-4180 quoting; plain fields stay byte-identical (see
+    // `csv_roundtrip`).
+    #[test]
+    fn csv_quotes_special_fields_only() {
+        assert_eq!(csv_field("1.25"), "1.25");
+        assert_eq!(csv_field("a,b"), "\"a,b\"");
+        assert_eq!(csv_field("say \"hi\""), "\"say \"\"hi\"\"\"");
+        assert_eq!(csv_field("two\nlines"), "\"two\nlines\"");
+        let dir = std::env::temp_dir().join("rudra_test_log");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("quoted.csv");
+        let mut log = CsvLog::create(&path, &["label", "loss"]).unwrap();
+        log.row(&["(σ̄=1, μ=4, λ=30) 1-softsync/base".to_string(), "0.5".to_string()])
+            .unwrap();
+        drop(log);
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "label,loss\n\"(σ̄=1, μ=4, λ=30) 1-softsync/base\",0.5\n");
     }
 
     #[test]

@@ -62,6 +62,9 @@ fn elastic_cfg(
         compress: rudra::comm::codec::CodecSpec::None,
         stop_after_events: None,
         sim_checkpoint_path: None,
+        trace: false,
+        trace_path: None,
+        collect_metrics: false,
     }
 }
 

@@ -1,0 +1,284 @@
+//! Observability is purely observational: turning tracing and metrics on
+//! must leave every SimResult field bit-identical to a quiet run, the
+//! same property `hetero none` pins. Also checks the traces themselves
+//! are well-formed Chrome trace JSON — including across a mid-flight
+//! stop + resume — and that the metrics snapshot agrees with the
+//! engine's own counts.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimEngine, SimResult};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::membership::ChurnSchedule;
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::{LearnerCompute, ModelCost};
+use rudra::obs::trace::{self, TraceEvent};
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::straggler::hetero::HeteroSpec;
+use rudra::util::json::Json;
+
+fn tiny_model(samples_per_epoch: u64) -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch }
+}
+
+fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
+    SimConfig {
+        protocol,
+        arch: Arch::Base,
+        mu: 4,
+        lambda: 6,
+        epochs: 2,
+        seed: 23,
+        cluster: ClusterSpec::p775(),
+        compute: LearnerCompute::p775(),
+        model: tiny_model(240),
+        shards,
+        eval_each_epoch: false,
+        max_updates: None,
+        churn: ChurnSchedule::none(),
+        rescale: RescalePolicy::None,
+        checkpoint_every_updates: 0,
+        hetero: HeteroSpec::parse("none").unwrap(),
+        adaptive: AdaptiveSpec::none(),
+        compress: rudra::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
+        trace: false,
+        trace_path: None,
+        collect_metrics: false,
+    }
+}
+
+fn run_timing(cfg: &SimConfig) -> SimResult {
+    run_sim(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Every observable SimResult field must match bit for bit (floats are
+/// compared by their IEEE 754 bit patterns, not tolerance). The trace
+/// and metrics fields themselves are excluded — they are exactly what
+/// differs between an observed and a quiet run.
+fn assert_same(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits(), "{ctx}: sim_seconds");
+    assert_eq!(a.updates, b.updates, "{ctx}: updates");
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: events_processed");
+    assert_eq!(a.shard_updates, b.shard_updates, "{ctx}: shard_updates");
+    assert_eq!(a.staleness.totals(), b.staleness.totals(), "{ctx}: staleness totals");
+    assert_eq!(a.staleness.max, b.staleness.max, "{ctx}: staleness max");
+    assert_eq!(a.staleness.histogram, b.staleness.histogram, "{ctx}: staleness histogram");
+    assert_eq!(
+        bits(&a.staleness.per_update_avg),
+        bits(&b.staleness.per_update_avg),
+        "{ctx}: staleness series"
+    );
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{ctx}: epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch, "{ctx}: epoch index");
+        assert_eq!(ea.sim_time.to_bits(), eb.sim_time.to_bits(), "{ctx}: epoch time");
+        assert_eq!(ea.active_lambda, eb.active_lambda, "{ctx}: epoch λ_active");
+    }
+    assert_eq!(format!("{:?}", a.churn), format!("{:?}", b.churn), "{ctx}: churn log");
+    assert_eq!(bits(&a.recovery_secs), bits(&b.recovery_secs), "{ctx}: recovery");
+    assert_eq!(format!("{:?}", a.rescales), format!("{:?}", b.rescales), "{ctx}: rescales");
+    assert_eq!(format!("{:?}", a.adaptive), format!("{:?}", b.adaptive), "{ctx}: adaptive");
+    assert_eq!(format!("{:?}", a.overlap), format!("{:?}", b.overlap), "{ctx}: overlap");
+    assert_eq!(a.final_active_lambda, b.final_active_lambda, "{ctx}: λ_active");
+    assert_eq!(a.checkpoints_taken, b.checkpoints_taken, "{ctx}: checkpoints");
+    assert_eq!(a.dropped_gradients, b.dropped_gradients, "{ctx}: dropped");
+    assert_eq!(a.dropped_by_learner, b.dropped_by_learner, "{ctx}: dropped by learner");
+    assert_eq!(
+        bits(&a.learner_utilization),
+        bits(&b.learner_utilization),
+        "{ctx}: utilization"
+    );
+    assert_eq!(bits(&a.hetero_factors), bits(&b.hetero_factors), "{ctx}: hetero factors");
+    assert_eq!(a.root_bytes_in.to_bits(), b.root_bytes_in.to_bits(), "{ctx}: root bytes in");
+    assert_eq!(a.root_bytes_out.to_bits(), b.root_bytes_out.to_bits(), "{ctx}: root bytes out");
+    assert_eq!(
+        bits(&a.comm_bytes_by_learner),
+        bits(&b.comm_bytes_by_learner),
+        "{ctx}: comm bytes"
+    );
+}
+
+fn span_names(events: &[TraceEvent]) -> Vec<&'static str> {
+    let mut names: Vec<&'static str> = events.iter().map(|e| e.name).collect();
+    names.sort_unstable();
+    names.dedup();
+    names
+}
+
+/// The core acceptance property: tracing on, metrics on, and both on
+/// reproduce the quiet run bit for bit across the three protocol
+/// families and root shards S ∈ {1, 4}. The jittery default cluster is
+/// deliberate — identical results prove observation never draws from an
+/// engine RNG or reorders events.
+#[test]
+fn observed_runs_are_bit_identical_to_quiet_runs() {
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let quiet = run_timing(&cfg);
+            assert!(quiet.trace.is_none(), "quiet run must not carry a trace");
+            assert!(quiet.metrics.is_none(), "quiet run must not carry metrics");
+
+            for (trace_on, metrics_on) in [(true, false), (false, true), (true, true)] {
+                let mut obs_cfg = cfg.clone();
+                obs_cfg.trace = trace_on;
+                obs_cfg.collect_metrics = metrics_on;
+                let observed = run_timing(&obs_cfg);
+                let ctx =
+                    format!("{protocol:?} S={shards} trace={trace_on} metrics={metrics_on}");
+                assert_same(&quiet, &observed, &ctx);
+                assert_eq!(observed.trace.is_some(), trace_on, "{ctx}: trace presence");
+                assert_eq!(observed.metrics.is_some(), metrics_on, "{ctx}: metrics presence");
+            }
+        }
+    }
+}
+
+/// A traced hardsync run must produce the full span vocabulary and
+/// re-parse as Chrome trace JSON.
+#[test]
+fn hardsync_trace_covers_the_span_vocabulary() {
+    let mut cfg = base_cfg(Protocol::Hardsync, 2);
+    cfg.trace = true;
+    cfg.checkpoint_every_updates = 5;
+    let r = run_timing(&cfg);
+    let events = r.trace.expect("trace was on");
+    assert!(!events.is_empty());
+    let names = span_names(&events);
+    for expect in ["apply_update", "barrier_wait", "broadcast", "checkpoint", "compute", "push"]
+    {
+        assert!(names.contains(&expect), "missing span {expect:?}, got {names:?}");
+    }
+    // and the rendered JSON is loadable trace-event format
+    let text = trace::to_json(&events).to_string();
+    let parsed = Json::parse(&text).expect("trace JSON must re-parse");
+    let rows = parsed.get("traceEvents").unwrap().as_arr().unwrap();
+    // 3 process-name metadata rows lead the event stream
+    assert_eq!(rows.len(), events.len() + 3);
+    assert!(rows.iter().skip(3).all(|e| {
+        let ph = e.get("ph").unwrap().as_str().unwrap();
+        ph == "X" || ph == "i"
+    }));
+}
+
+/// Async protocols exercise the pull path instead of the barrier.
+#[test]
+fn softsync_trace_has_pull_spans_not_barrier_waits() {
+    let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+    cfg.trace = true;
+    let r = run_timing(&cfg);
+    let names = span_names(&r.trace.expect("trace was on"));
+    assert!(names.contains(&"pull"), "got {names:?}");
+    assert!(!names.contains(&"barrier_wait"), "got {names:?}");
+}
+
+/// `--trace FILE` writes the timeline to disk as well.
+#[test]
+fn trace_path_writes_a_loadable_file() {
+    let dir = std::env::temp_dir().join(format!("rudra_obs_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("trace.json");
+    let mut cfg = base_cfg(Protocol::Hardsync, 1);
+    cfg.trace = true;
+    cfg.trace_path = Some(path.clone());
+    let r = run_timing(&cfg);
+    assert!(r.trace.is_some());
+    let text = std::fs::read_to_string(&path).unwrap();
+    let parsed = Json::parse(&text).unwrap();
+    assert!(!parsed.get("traceEvents").unwrap().as_arr().unwrap().is_empty());
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Traced stop + resume: both segments yield well-formed traces, the
+/// resumed segment picks up at virtual times past the cut, and the
+/// resumed trajectory still matches the uninterrupted one bit for bit.
+#[test]
+fn traced_stop_and_resume_produces_well_formed_segments() {
+    let cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+    let full = run_timing(&cfg);
+    let k = (full.events_processed / 2).max(1);
+
+    let mut stop_cfg = cfg.clone();
+    stop_cfg.trace = true;
+    stop_cfg.stop_after_events = Some(k);
+    let stopped = run_timing(&stop_cfg);
+    assert_eq!(stopped.events_processed, k);
+    let first = stopped.trace.expect("stopped segment records a trace");
+    assert!(!first.is_empty(), "first segment has spans");
+    Json::parse(&trace::to_json(&first).to_string()).expect("first segment re-parses");
+    let ckpt = stopped.sim_checkpoint.expect("mid-flight stop captures a checkpoint");
+
+    let mut resume_cfg = cfg.clone();
+    resume_cfg.trace = true;
+    let mut engine = SimEngine::new(
+        &resume_cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    );
+    engine.install_sim_checkpoint(&ckpt).unwrap();
+    let resumed = engine.run().unwrap();
+    assert_same(&full, &resumed, "traced resume");
+    let second = resumed.trace.expect("resumed segment records a trace");
+    assert!(!second.is_empty(), "second segment has spans");
+    Json::parse(&trace::to_json(&second).to_string()).expect("second segment re-parses");
+    // the resumed timeline continues past the cut, it does not restart
+    let cut_us = stopped.sim_seconds * 1e6;
+    assert!(
+        second.iter().any(|e| e.ts_us >= cut_us),
+        "resumed spans should extend beyond the cut at {cut_us}µs"
+    );
+}
+
+/// The metrics snapshot must agree with the engine's own counts: one
+/// apply_update per update, λ push lanes, staleness totals, byte flows.
+#[test]
+fn metrics_snapshot_agrees_with_engine_counts() {
+    let mut cfg = base_cfg(Protocol::Hardsync, 2);
+    cfg.collect_metrics = true;
+    let r = run_timing(&cfg);
+    let m = r.metrics.expect("metrics were on");
+
+    let counters = m.get("counters").unwrap();
+    assert_eq!(counters.get("apply_update").unwrap().as_u64().unwrap(), r.updates);
+    assert!(counters.get("compute_done").unwrap().as_u64().unwrap() > 0);
+
+    let pushes = m.get("pushes_by_learner").unwrap().as_u64_vec().unwrap();
+    assert_eq!(pushes.len(), cfg.lambda);
+    assert!(pushes.iter().all(|&p| p > 0), "every learner pushed: {pushes:?}");
+
+    let staleness = m.get("staleness").unwrap();
+    assert_eq!(staleness.get("count").unwrap().as_u64().unwrap(), r.staleness.totals().0);
+
+    let shard_updates = m.get("shard_updates").unwrap().as_u64_vec().unwrap();
+    assert_eq!(shard_updates, r.shard_updates);
+
+    assert_eq!(m.get("root_bytes_in").unwrap().as_f64().unwrap(), r.root_bytes_in);
+    assert_eq!(m.get("root_bytes_out").unwrap().as_f64().unwrap(), r.root_bytes_out);
+
+    // hardsync rounds barrier-synchronize: the wait histogram must fill
+    let barrier = m.get("barrier").unwrap();
+    assert!(barrier.get("rounds").unwrap().as_u64().unwrap() > 0);
+    assert!(m.get("queue_depth_high_water").unwrap().as_u64().unwrap() > 0);
+}

@@ -51,6 +51,9 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         compress: rudra::comm::codec::CodecSpec::None,
         stop_after_events: None,
         sim_checkpoint_path: None,
+        trace: false,
+        trace_path: None,
+        collect_metrics: false,
     }
 }
 

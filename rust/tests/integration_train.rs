@@ -107,6 +107,7 @@ fn live_engine_trains_below_chance() {
         elastic: None,
         compress: rudra::comm::codec::CodecSpec::None,
         checkpoint_every: 0,
+        collect_metrics: false,
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
