@@ -67,6 +67,7 @@ fn main() {
             trace: false,
             trace_path: None,
             collect_metrics: false,
+            metrics_every: None,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

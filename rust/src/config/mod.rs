@@ -6,7 +6,7 @@
 //! the "real config system" a framework needs, sized to the offline
 //! dependency set (our own JSON, no serde).
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 use std::path::Path;
 
 use crate::comm::codec::CodecSpec;
@@ -125,22 +125,32 @@ pub struct RunConfig {
     pub sim_checkpoint: Option<std::path::PathBuf>,
     /// Chrome trace-event output path (JSON key `trace` / flag `--trace`;
     /// `"none"` clears a config-file value). Single-point commands
-    /// (`sim`/`timing`) record spans over virtual sim time and write the
-    /// file at run end ([`crate::obs::trace`]); `sweep` rejects it —
-    /// parallel grid points cannot share one trace file. Purely
-    /// observational, so trajectories stay bit-identical; like the resume
-    /// knobs above, it never enters [`RunConfig::label`].
+    /// (`sim`/`timing`) record spans over virtual sim time, `train`
+    /// records over wall time ([`crate::obs::trace::TimeBase`]), and the
+    /// file lands at run end ([`crate::obs::trace`]). For `sweep` the
+    /// path is a *directory*: each grid point writes its own
+    /// `<label>.trace.json` from its worker thread. Purely observational,
+    /// so trajectories stay bit-identical; like the resume knobs above,
+    /// it never enters [`RunConfig::label`].
     pub trace: Option<std::path::PathBuf>,
     /// Metrics snapshot output path (JSON key `metrics_json` / flag
     /// `--metrics-json`; `"none"` clears). Enables the
     /// [`crate::obs::metrics`] registry and dumps its end-of-run snapshot
-    /// as JSON.
+    /// as JSON. For `sweep` the path is a directory holding per-point
+    /// `<label>.metrics.json` files, mirroring `trace`.
     pub metrics_json: Option<std::path::PathBuf>,
     /// Persistent run index (JSON key `run_index` / flag `--run-index`;
     /// `"none"` clears). Every sim/sweep/timing point appends one record
     /// to this JSONL file ([`crate::obs::runindex`]; query with
-    /// `rudra runs`).
+    /// `rudra runs` or render with `rudra report`).
     pub run_index: Option<std::path::PathBuf>,
+    /// Time-series sampling interval in engine seconds (JSON key
+    /// `metrics_every` / flag `--metrics-every SECS`; `"none"` clears).
+    /// Arms the [`crate::obs::series`] recorder: windowed staleness /
+    /// queue-depth / active-λ / byte-rate samples over virtual time
+    /// (sim/timing) or wall time (train), attached to the metrics
+    /// snapshot under `"series"`. Off by default; purely observational.
+    pub metrics_every: Option<f64>,
 }
 
 impl Default for RunConfig {
@@ -176,6 +186,7 @@ impl Default for RunConfig {
             trace: None,
             metrics_json: None,
             run_index: None,
+            metrics_every: None,
         }
     }
 }
@@ -189,6 +200,16 @@ fn path_or_none(s: &str) -> Option<std::path::PathBuf> {
     } else {
         Some(std::path::PathBuf::from(s))
     }
+}
+
+/// Seconds-valued knob that, like the path knobs, accepts `"none"` to
+/// clear a value set earlier in the layering.
+fn secs_or_none(s: &str) -> Result<Option<f64>> {
+    if s.trim().eq_ignore_ascii_case("none") {
+        return Ok(None);
+    }
+    let v: f64 = s.trim().parse().map_err(|_| anyhow!("bad seconds value {s:?}"))?;
+    Ok(Some(v))
 }
 
 /// JSON array of integers (the sweep grid axes).
@@ -245,6 +266,12 @@ impl RunConfig {
                 "trace" => self.trace = path_or_none(v.as_str()?),
                 "metrics_json" => self.metrics_json = path_or_none(v.as_str()?),
                 "run_index" => self.run_index = path_or_none(v.as_str()?),
+                "metrics_every" => {
+                    self.metrics_every = match v {
+                        Json::Str(s) => secs_or_none(s)?,
+                        _ => Some(v.as_f64()?),
+                    }
+                }
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -318,6 +345,9 @@ impl RunConfig {
         if let Some(v) = args.get("run-index") {
             self.run_index = path_or_none(v);
         }
+        if let Some(v) = args.get("metrics-every") {
+            self.metrics_every = secs_or_none(v)?;
+        }
         self.validate()
     }
 
@@ -365,6 +395,11 @@ impl RunConfig {
                  parameter; protocol {} has none",
                 self.protocol.label()
             );
+        }
+        if let Some(every) = self.metrics_every {
+            if !every.is_finite() || every <= 0.0 {
+                bail!("metrics_every must be a finite number of seconds > 0, got {every}");
+            }
         }
         Ok(())
     }
@@ -728,6 +763,42 @@ mod tests {
         // host-side observation, not experiment identity
         assert!(!cfg.label().contains("trace"), "{}", cfg.label());
         assert!(!cfg.label().contains("m2"), "{}", cfg.label());
+    }
+
+    /// `metrics_every` layers like the other obs knobs (JSON under CLI,
+    /// `"none"` clears), validates positivity, and stays host-side (no
+    /// label participation).
+    #[test]
+    fn metrics_every_layers_validates_and_clears() {
+        let mut cfg = RunConfig::default();
+        assert!(cfg.metrics_every.is_none());
+        cfg.apply_json(&Json::parse(r#"{"metrics_every": 2.5}"#).unwrap()).unwrap();
+        assert_eq!(cfg.metrics_every, Some(2.5));
+        // CLI wins over JSON
+        let args = Args::parse(["--metrics-every", "0.5"].iter().map(|s| s.to_string()), &[])
+            .unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert_eq!(cfg.metrics_every, Some(0.5));
+        // "none" clears
+        let none = Args::parse(["--metrics-every", "none"].iter().map(|s| s.to_string()), &[])
+            .unwrap();
+        cfg.apply_args(&none).unwrap();
+        assert!(cfg.metrics_every.is_none());
+        // JSON string form accepts "none" too
+        cfg.apply_json(&Json::parse(r#"{"metrics_every": "none"}"#).unwrap()).unwrap();
+        assert!(cfg.metrics_every.is_none());
+        // not experiment identity
+        cfg.metrics_every = Some(1.0);
+        assert!(!cfg.label().contains("metrics"), "{}", cfg.label());
+        // zero/negative/garbage rejected
+        for bad in ["0", "-1", "inf", "x"] {
+            let args =
+                Args::parse(["--metrics-every", bad].iter().map(|s| s.to_string()), &[]).unwrap();
+            assert!(
+                RunConfig::default().apply_args(&args).is_err(),
+                "--metrics-every {bad} must be rejected"
+            );
+        }
     }
 
     #[test]

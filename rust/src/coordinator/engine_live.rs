@@ -46,6 +46,8 @@ use crate::coordinator::shard::ShardedServer;
 use crate::elastic::checkpoint::Checkpoint;
 use crate::elastic::membership::{ChurnRecord, Membership, Phase};
 use crate::elastic::rescaler::{RescalePolicy, Rescaler};
+use crate::obs::series::{SeriesInputs, SeriesRecorder};
+use crate::obs::trace::{TraceEvent, TraceRecorder, PID_LEARNERS, PID_SHARDS};
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
@@ -111,6 +113,16 @@ pub struct LiveConfig {
     /// `--run-index`). Purely observational: the live loop is untouched,
     /// the snapshot is assembled from server-side tallies after joins.
     pub collect_metrics: bool,
+    /// Record Chrome trace-event spans over *wall* time (seconds since
+    /// the run epoch): learner threads stamp their own compute/send
+    /// offsets against the shared epoch, the single-threaded server loop
+    /// records them on receipt — no cross-thread sink. Off = the exact
+    /// pre-trace path (timing fields ride as zeros, never read).
+    pub trace: bool,
+    /// Sample a [`crate::obs::series`] time-series window every this many
+    /// *wall* seconds into the metrics snapshot (`--metrics-every`).
+    /// `Some` implies a metrics snapshot even if `collect_metrics` is off.
+    pub metrics_every: Option<f64>,
 }
 
 /// Live-run output.
@@ -143,8 +155,13 @@ pub struct LiveResult {
     /// The most recent captured checkpoint, if any.
     pub last_checkpoint: Option<Checkpoint>,
     /// Metrics snapshot ([`crate::obs::metrics`] schema); `None` unless
-    /// [`LiveConfig::collect_metrics`] was set.
+    /// [`LiveConfig::collect_metrics`] or [`LiveConfig::metrics_every`]
+    /// was set.
     pub metrics: Option<crate::util::json::Json>,
+    /// Wall-clock trace spans (seconds since the run epoch, recorded as
+    /// microseconds per the trace-event format); `None` unless
+    /// [`LiveConfig::trace`] was set.
+    pub trace: Option<Vec<TraceEvent>>,
 }
 
 enum ToServer {
@@ -153,8 +170,18 @@ enum ToServer {
     /// learner that later rejoined under the same id. The gradient
     /// travels encoded (learner-side codec); the server decodes then
     /// accumulates. `compress none` ships it as `Dense`, which decodes
-    /// without a copy.
-    Push { learner: usize, inc: u64, grad: EncodedGrad, ts: Timestamp, loss: f32 },
+    /// without a copy. `t_compute` / `t_sent` are wall offsets from the
+    /// run epoch stamped in the learner thread (compute start/end and
+    /// send time) — zeros when tracing is off, and never read then.
+    Push {
+        learner: usize,
+        inc: u64,
+        grad: EncodedGrad,
+        ts: Timestamp,
+        loss: f32,
+        t_compute: (f64, f64),
+        t_sent: f64,
+    },
 }
 
 enum ToLearner {
@@ -206,11 +233,17 @@ fn spawn_learner(
     mut theta: FlatVec,
     mut ts: Timestamp,
     push_tx: mpsc::Sender<ToServer>,
+    epoch: Option<Instant>,
 ) -> (std::thread::JoinHandle<Result<()>>, mpsc::Sender<ToLearner>) {
     let (reply_tx, reply_rx) = mpsc::channel::<ToLearner>();
     let handle = std::thread::spawn(move || -> Result<()> {
+        // wall offset from the shared run epoch (0.0 untraced: the server
+        // never reads the stamps then)
+        let stamp = |e: &Option<Instant>| e.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0);
         loop {
+            let t0 = stamp(&epoch);
             let (grad, loss) = provider.compute(id, &theta)?;
+            let t1 = stamp(&epoch);
             // encode in the learner thread: the error-feedback residual
             // is thread-local state, exactly like the paper's learner-side
             // pushGradient staging buffer
@@ -218,7 +251,17 @@ fn spawn_learner(
                 Some(c) => c.encode(&grad),
                 None => EncodedGrad::Dense(grad),
             };
-            if push_tx.send(ToServer::Push { learner: id, inc, grad, ts, loss }).is_err() {
+            let t_sent = stamp(&epoch);
+            let msg = ToServer::Push {
+                learner: id,
+                inc,
+                grad,
+                ts,
+                loss,
+                t_compute: (t0, t1),
+                t_sent,
+            };
+            if push_tx.send(msg).is_err() {
                 return Ok(()); // server gone
             }
             // Drain control messages (SetMu) until the actual pull reply;
@@ -321,13 +364,30 @@ fn run_live_inner(
     let mut handles: Vec<Option<std::thread::JoinHandle<Result<()>>>> =
         Vec::with_capacity(cfg.lambda);
     let start = Instant::now();
+    // Wall-clock observability (tentpole: the live engine used to have no
+    // trace story at all — "no virtual clock" — so spans are measured
+    // against the run epoch instead). Both are pure observers: learner
+    // threads stamp their own offsets against the shared epoch, the
+    // single-threaded server loop records them on receipt.
+    let mut rec = if cfg.trace { TraceRecorder::on_wall(start) } else { TraceRecorder::off() };
+    let trace_epoch = cfg.trace.then_some(start);
+    let mut series: Option<SeriesRecorder> = cfg.metrics_every.map(SeriesRecorder::new);
+    let mut bytes_in_total: f64 = 0.0;
 
     // Per-learner incarnation counters (bumped at kill); pushes from a
     // dead incarnation are dropped even after the id rejoins.
     let mut incs: Vec<u64> = vec![0; cfg.lambda];
     for (id, provider) in providers.into_iter().enumerate() {
-        let (handle, reply_tx) =
-            spawn_learner(id, 0, provider, mk_codec(id), theta0.clone(), 0, push_tx.clone());
+        let (handle, reply_tx) = spawn_learner(
+            id,
+            0,
+            provider,
+            mk_codec(id),
+            theta0.clone(),
+            0,
+            push_tx.clone(),
+            trace_epoch,
+        );
         handles.push(Some(handle));
         reply_txs.push(reply_tx);
     }
@@ -379,8 +439,9 @@ fn run_live_inner(
     let mut pushes: u64 = 0;
     let mut recent_losses: Vec<f64> = Vec::new();
     let mut loss_log: Vec<(u64, f32)> = Vec::new();
-    // Hardsync holds replies until the barrier update fires.
-    let mut barrier_waiting: Vec<usize> = Vec::new();
+    // Hardsync holds replies until the barrier update fires; each entry
+    // remembers its wall offset so the series can window barrier waits.
+    let mut barrier_waiting: Vec<(usize, f64)> = Vec::new();
 
     // Per-learner μ currently in force (retuned by the rescaler; pushed
     // to live providers over the SetMu control channel).
@@ -429,11 +490,16 @@ fn run_live_inner(
                 Some(d) => server.remove_learner(d, active)?,
                 None => server.set_active_lambda(active)?,
             };
+            rec.instant("rescale", PID_SHARDS, 0, rec.now_s());
             if let Some(out) = flush {
                 if out.updated && cfg.protocol.is_barrier() {
                     let new_ts = server.timestamp();
                     let snap = snapshot!();
-                    for l in barrier_waiting.drain(..) {
+                    let now_off = start.elapsed().as_secs_f64();
+                    for (l, entered) in barrier_waiting.drain(..) {
+                        if let Some(s) = &mut series {
+                            s.note_barrier_wait(now_off - entered);
+                        }
                         let _ = reply_txs[l]
                             .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
                     }
@@ -454,7 +520,8 @@ fn run_live_inner(
                 if let Some(h) = handles[l].take() {
                     drop(h);
                 }
-                barrier_waiting.retain(|&x| x != l);
+                rec.instant("evict", PID_LEARNERS, l as u64, rec.now_s());
+                barrier_waiting.retain(|&(x, _)| x != l);
                 rescale_members!(Some(l));
             }
         }};
@@ -481,6 +548,7 @@ fn run_live_inner(
                     };
                     if silent > suspect_after && membership.phase(l) != Phase::Suspect {
                         membership.suspect(l, start.elapsed().as_secs_f64())?;
+                        rec.instant("suspect", PID_LEARNERS, l as u64, rec.now_s());
                     }
                     if silent > evict_after
                         && stalest.map(|(_, s)| silent > s).unwrap_or(true)
@@ -499,7 +567,25 @@ fn run_live_inner(
         }};
     }
 
+    macro_rules! series_tick {
+        () => {{
+            if let Some(s) = &mut series {
+                let (stale_count, stale_sum) = server.staleness.totals();
+                let inputs = SeriesInputs {
+                    queue_depth: 0, // mpsc exposes no queue length
+                    active_lambda: membership.active_count() as u64,
+                    stale_count,
+                    stale_sum,
+                    stale_max: server.staleness.max,
+                    bytes_in: bytes_in_total,
+                };
+                s.maybe_sample(start.elapsed().as_secs_f64(), &inputs);
+            }
+        }};
+    }
+
     while !server.done() {
+        series_tick!();
         let msg = if let Some(poll) = poll {
             match push_rx.recv_timeout(poll) {
                 Ok(m) => Some(m),
@@ -524,9 +610,16 @@ fn run_live_inner(
             continue;
         };
 
-        let ToServer::Push { learner, inc, grad, ts, loss } = msg;
+        let ToServer::Push { learner, inc, grad, ts, loss, t_compute, t_sent } = msg;
         if inc != incs[learner] || !membership.is_live(learner) {
             continue; // a dead incarnation's final push: message lost
+        }
+        if rec.enabled() {
+            // spans land at receipt: the learner stamped its own compute
+            // window, the push span is send → server pickup (wire +
+            // queue time on the mpsc channel)
+            rec.span("compute", PID_LEARNERS, learner as u64, t_compute.0, t_compute.1);
+            rec.span("push", PID_LEARNERS, learner as u64, t_sent, rec.now_s());
         }
         last_heard[learner] = Instant::now();
         heard[learner] = true;
@@ -536,7 +629,11 @@ fn run_live_inner(
         }
         pushes += 1;
         comm_bytes_by_learner[learner] += wire.push_bytes();
+        bytes_in_total += wire.push_bytes();
         recent_losses.push(loss as f64);
+        if let Some(s) = &mut series {
+            s.note_loss(loss as f64);
+        }
         if cfg.log_every > 0 && pushes % cfg.log_every == 0 {
             loss_log.push((pushes, crate::util::mean(&recent_losses) as f32));
             recent_losses.clear();
@@ -544,6 +641,9 @@ fn run_live_inner(
         // decode-then-accumulate: the codec's payload becomes one dense
         // gradient with one timestamp, protocol semantics unchanged
         let outcome = server.push_encoded(learner, grad, ts)?;
+        if outcome.updated {
+            rec.instant("apply_update", PID_SHARDS, 0, rec.now_s());
+        }
 
         if cfg.protocol.is_barrier() {
             if outcome.dropped {
@@ -556,11 +656,15 @@ fn run_live_inner(
                 let _ = reply_txs[learner]
                     .send(ToLearner::Weights { theta: snap, ts: server.timestamp() });
             } else {
-                barrier_waiting.push(learner);
+                barrier_waiting.push((learner, start.elapsed().as_secs_f64()));
                 if outcome.updated {
                     let new_ts = server.timestamp();
                     let snap = snapshot!();
-                    for l in barrier_waiting.drain(..) {
+                    let now_off = start.elapsed().as_secs_f64();
+                    for (l, entered) in barrier_waiting.drain(..) {
+                        if let Some(s) = &mut series {
+                            s.note_barrier_wait(now_off - entered);
+                        }
                         let _ = reply_txs[l]
                             .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
                     }
@@ -603,10 +707,12 @@ fn run_live_inner(
                             server.assemble_weights(),
                             server.timestamp(),
                             tx,
+                            trace_epoch,
                         );
                         handles[l] = Some(handle);
                         reply_txs[l] = reply_tx;
                         membership.rejoin(l, start.elapsed().as_secs_f64())?;
+                        rec.instant("rejoin", PID_LEARNERS, l as u64, rec.now_s());
                         last_heard[l] = Instant::now();
                         heard[l] = false; // fresh warm-up grace for the new thread
                         // the factory builds providers at the spawn-time μ;
@@ -634,6 +740,7 @@ fn run_live_inner(
             ));
             last_ckpt_at = server.updates;
             checkpoints_taken += 1;
+            rec.instant("checkpoint", PID_SHARDS, 0, rec.now_s());
         }
 
         // Busy channels must not starve failure detection.
@@ -659,16 +766,31 @@ fn run_live_inner(
 
     // The live loop keeps no registry of its own (no virtual clock, no
     // event queue); the snapshot is assembled once from the server-side
-    // tallies, which exist regardless.
-    let metrics = if cfg.collect_metrics {
+    // tallies, which exist regardless. A `metrics_every` series implies
+    // a snapshot to ride in, even with collect_metrics off.
+    let metrics = if cfg.collect_metrics || series.is_some() {
         let bytes_in: f64 = comm_bytes_by_learner.iter().sum();
-        Some(crate::obs::metrics::MetricsRegistry::default().snapshot(
+        let mut snap = crate::obs::metrics::MetricsRegistry::default().snapshot(
             &server.staleness,
             &server.shard_updates(),
             server.pushes_by(),
             bytes_in,
             0.0,
-        ))
+        );
+        if let Some(s) = &mut series {
+            let (stale_count, stale_sum) = server.staleness.totals();
+            let inputs = SeriesInputs {
+                queue_depth: 0,
+                active_lambda: membership.active_count() as u64,
+                stale_count,
+                stale_sum,
+                stale_max: server.staleness.max,
+                bytes_in: bytes_in_total,
+            };
+            s.final_flush(start.elapsed().as_secs_f64(), &inputs);
+            crate::obs::metrics::attach_series(&mut snap, s.to_json());
+        }
+        Some(snap)
     } else {
         None
     };
@@ -690,6 +812,7 @@ fn run_live_inner(
         checkpoints_taken,
         last_checkpoint,
         metrics,
+        trace: rec.take(),
     })
 }
 
@@ -720,6 +843,8 @@ mod tests {
             compress: CodecSpec::None,
             checkpoint_every: 0,
             collect_metrics: false,
+            trace: false,
+            metrics_every: None,
         }
     }
 
@@ -755,6 +880,37 @@ mod tests {
         );
         // and the default stays quiet
         let r2 = run(Protocol::NSoftsync { n: 1 }, 2);
+        assert!(r2.metrics.is_none());
+    }
+
+    #[test]
+    fn live_trace_and_series_ride_along() {
+        let dim = 8;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 2, 1);
+        cfg.trace = true;
+        cfg.metrics_every = Some(1e-4);
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(2, dim)).unwrap();
+        let tr = r.trace.as_ref().expect("trace was on");
+        assert!(tr.iter().any(|e| e.name == "compute" && e.ph == 'X'));
+        assert!(tr.iter().any(|e| e.name == "push" && e.ph == 'X'));
+        assert!(tr.iter().any(|e| e.name == "apply_update" && e.ph == 'i'));
+        assert!(
+            tr.iter().all(|e| e.ts_us >= 0.0 && e.dur_us >= 0.0),
+            "wall offsets are non-negative"
+        );
+        // metrics_every implies a snapshot even with collect_metrics off,
+        // and the series rides inside it
+        let m = r.metrics.as_ref().expect("series implies a snapshot");
+        let series = m.get("series").unwrap();
+        let t = series.get("t").unwrap().as_f64_vec().unwrap();
+        assert!(!t.is_empty(), "final_flush guarantees a sample");
+        assert!(t.windows(2).all(|w| w[0] < w[1]), "wall sample times advance");
+        // the default stays exactly as quiet as before
+        let r2 = run(Protocol::NSoftsync { n: 1 }, 2);
+        assert!(r2.trace.is_none());
         assert!(r2.metrics.is_none());
     }
 

@@ -143,6 +143,11 @@ pub struct SimConfig {
     /// Collect the metrics registry ([`crate::obs::metrics`]) into
     /// [`SimResult::metrics`]. Off by default; purely observational.
     pub collect_metrics: bool,
+    /// Sample windowed time series ([`crate::obs::series`]) every this
+    /// many virtual seconds, attached to the metrics snapshot under
+    /// `"series"` (arms the registry by itself). Off by default; purely
+    /// observational like the other obs knobs.
+    pub metrics_every: Option<f64>,
 }
 
 impl SimConfig {
@@ -179,6 +184,7 @@ impl SimConfig {
             trace: false,
             trace_path: None,
             collect_metrics: false,
+            metrics_every: None,
         }
     }
 
@@ -718,7 +724,7 @@ impl<'a> SimEngine<'a> {
             ),
             random_armed: false,
             resumed: false,
-            obs: crate::obs::Obs::new(cfg.trace, cfg.collect_metrics, lambda),
+            obs: crate::obs::Obs::new(cfg.trace, cfg.collect_metrics, cfg.metrics_every, lambda),
         }
     }
 
@@ -775,6 +781,26 @@ impl<'a> SimEngine<'a> {
                 self.snap_pool.push(buf);
             }
         }
+    }
+
+    /// Gather the time-series gauges from state the engine already
+    /// tracks ([`crate::obs::series::SeriesInputs`]); pure reads, so the
+    /// sampler cannot perturb the trajectory.
+    fn series_inputs(&self) -> crate::obs::series::SeriesInputs {
+        let (stale_count, stale_sum) = self.server.staleness.totals();
+        crate::obs::series::SeriesInputs {
+            queue_depth: self.q.len() as u64,
+            active_lambda: self.membership.active_count() as u64,
+            stale_count,
+            stale_sum,
+            stale_max: self.server.staleness.max,
+            bytes_in: self.root_bytes_in,
+        }
+    }
+
+    fn series_tick(&mut self, now: f64) {
+        let inputs = self.series_inputs();
+        self.obs.series_tick(now, &inputs);
     }
 
     /// Run the simulation to completion.
@@ -860,6 +886,9 @@ impl<'a> SimEngine<'a> {
                 break;
             }
             self.obs.queue_depth(self.q.len());
+            if self.obs.series_enabled() {
+                self.series_tick(now);
+            }
             match ev {
                 Ev::ComputeDone { learner, inc } => self.on_compute_done(now, learner, inc)?,
                 Ev::PushAtRoot { learner, inc, grad, ts } => {
@@ -916,6 +945,11 @@ impl<'a> SimEngine<'a> {
         // The queue tracks its own schedule-time peak; fold it in so the
         // gauge reflects the true high water, not just post-pop depths.
         self.obs.queue_depth(self.q.high_water());
+        if self.obs.series_enabled() {
+            let now = self.q.now();
+            let inputs = self.series_inputs();
+            self.obs.series_finish(now, &inputs);
+        }
         let metrics = self.obs.metrics_snapshot(
             &self.server.staleness,
             &self.server.shard_updates(),
@@ -963,9 +997,10 @@ impl<'a> SimEngine<'a> {
     /// sim checkpoints and the persistent run index
     /// ([`crate::obs::runindex`]). Everything that shapes the trajectory
     /// participates; `stop_after_events`, `sim_checkpoint_path`,
-    /// `max_updates`, and the obs knobs (`trace`/`collect_metrics`)
-    /// deliberately do not (a resume legitimately changes them — a traced
-    /// resume of an untraced checkpoint is valid).
+    /// `max_updates`, and the obs knobs
+    /// (`trace`/`collect_metrics`/`metrics_every`) deliberately do not
+    /// (a resume legitimately changes them — a traced resume of an
+    /// untraced checkpoint is valid).
     pub fn config_fingerprint(cfg: &SimConfig) -> String {
         format!(
             "timing|{}|{:?}|mu{}|lambda{}|epochs{}|seed{}|shards{}|{:?}|{:?}|{:?}|{:?}|{:?}|ckpt{}|{:?}|{:?}|{:?}",
@@ -1425,6 +1460,7 @@ impl<'a> SimEngine<'a> {
                 self.provider.as_deref_mut().unwrap().compute(l, theta)?
             };
             self.epoch_losses.push(loss as f64);
+            self.obs.series_loss(loss as f64);
             // Encode at the push boundary: the learner's error-feedback
             // residual updates here; the root decodes at fold time.
             Some(Box::new(match self.comm.as_mut() {
@@ -1694,6 +1730,12 @@ impl<'a> SimEngine<'a> {
                 test_error_pct: test_err,
                 active_lambda: self.membership.active_count(),
             });
+            self.obs.series_epoch(
+                now,
+                epoch as u64,
+                train_loss,
+                test_err.unwrap_or(f64::NAN),
+            );
             // Adaptive-n control: close the loop at the epoch boundary —
             // measure the epoch's ⟨σ⟩ window and retune the softsync
             // splitting parameter on the server (between updates; the
@@ -1704,6 +1746,7 @@ impl<'a> SimEngine<'a> {
                 let ctl = self.adaptive.as_mut().expect("checked above");
                 if let Some(new_n) = ctl.epoch_tick(epoch, now, count, sum, active) {
                     self.server.set_softsync_n(new_n)?;
+                    self.obs.series_adaptive(now, new_n as u64);
                 }
             }
         }

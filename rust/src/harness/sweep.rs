@@ -222,6 +222,29 @@ pub struct Sweep<'a> {
     /// a run index is being written). Purely observational — grid results
     /// stay bit-identical either way.
     pub collect_metrics: bool,
+    /// Per-point trace directory (`sweep --trace DIR`): each grid point's
+    /// engine writes `<label>.trace.json` here from its own worker
+    /// thread — parallel points never share a file, so traces compose
+    /// with any `jobs` value. `None` = no sweep tracing.
+    pub trace_dir: Option<std::path::PathBuf>,
+    /// Per-point metrics directory (`sweep --metrics-json DIR`): each
+    /// point writes `<label>.metrics.json` (atomic tmp + rename) from its
+    /// worker thread. Setting it arms metrics collection for every point.
+    pub metrics_dir: Option<std::path::PathBuf>,
+    /// Time-series sampling cadence handed to every point
+    /// (`--metrics-every`, virtual seconds); layered over each point
+    /// config's own knob.
+    pub metrics_every: Option<f64>,
+}
+
+/// Filesystem-safe slug for one grid point's output files: the point's
+/// label with anything outside `[A-Za-z0-9._-]` replaced by `_` (labels
+/// contain `·`, `*`, `:` — fine on a terminal, hostile in a path).
+pub fn point_slug(cfg: &RunConfig) -> String {
+    cfg.label()
+        .chars()
+        .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
+        .collect()
 }
 
 impl<'a> Sweep<'a> {
@@ -234,6 +257,9 @@ impl<'a> Sweep<'a> {
             eval_each_epoch: false,
             jobs: 0,
             collect_metrics: false,
+            trace_dir: None,
+            metrics_dir: None,
+            metrics_every: None,
         }
     }
 
@@ -269,9 +295,15 @@ impl<'a> Sweep<'a> {
             compress: cfg.compress,
             stop_after_events: None,
             sim_checkpoint_path: None,
-            trace: cfg.trace.is_some(),
-            trace_path: cfg.trace.clone(),
-            collect_metrics: self.collect_metrics || cfg.collect_metrics(),
+            trace: cfg.trace.is_some() || self.trace_dir.is_some(),
+            trace_path: match &self.trace_dir {
+                Some(dir) => Some(dir.join(format!("{}.trace.json", point_slug(cfg)))),
+                None => cfg.trace.clone(),
+            },
+            collect_metrics: self.collect_metrics
+                || self.metrics_dir.is_some()
+                || cfg.collect_metrics(),
+            metrics_every: self.metrics_every.or(cfg.metrics_every),
         };
         let fingerprint =
             crate::coordinator::engine_sim::SimEngine::config_fingerprint(&sim_cfg);
@@ -289,6 +321,14 @@ impl<'a> Sweep<'a> {
         let wall_seconds = started.elapsed().as_secs_f64();
         let (test_loss, test_error_pct) = result.final_eval.unwrap_or((f64::NAN, f64::NAN));
 
+        // Per-point sweep observability: the snapshot lands next to its
+        // siblings, written from this worker thread (atomic tmp + rename)
+        // so parallel points never contend on one file.
+        if let (Some(dir), Some(m)) = (&self.metrics_dir, &result.metrics) {
+            let path = dir.join(format!("{}.metrics.json", point_slug(cfg)));
+            crate::util::write_atomic(&path, &m.to_string())?;
+        }
+
         // Paper-scale timing overlay: same (protocol, μ, λ, arch) on the
         // CIFAR10 cost geometry, timing-only. Deliberately churn-free: the
         // overlay is the *paper's* static-λ reference time, and a churn
@@ -300,6 +340,7 @@ impl<'a> Sweep<'a> {
             trace: false,
             trace_path: None,
             collect_metrics: false,
+            metrics_every: None,
             model: ModelCost::cifar10(),
             epochs: 140,
             eval_each_epoch: false,
@@ -425,6 +466,7 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         trace: false,
         trace_path: None,
         collect_metrics: false,
+        metrics_every: None,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();
@@ -495,6 +537,23 @@ mod tests {
                 "jobs={jobs}: original panic buried, got {msg:?}"
             );
         }
+    }
+
+    #[test]
+    fn point_slug_is_filesystem_safe_and_distinct_per_point() {
+        let mut cfg = RunConfig::default();
+        cfg.mu = 8;
+        cfg.lambda = 30;
+        let slug = point_slug(&cfg);
+        assert!(!slug.is_empty());
+        assert!(
+            slug.chars()
+                .all(|c| c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-')),
+            "label chars must be path-safe: {slug:?}"
+        );
+        let mut other = cfg.clone();
+        other.lambda = 4;
+        assert_ne!(slug, point_slug(&other), "grid points get distinct files");
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! * `sweep`             — (μ, λ) grid under one protocol
 //! * `timing`            — timing-only simulation at paper scale
 //! * `runs`              — list/diff the persistent run index (runs.jsonl)
+//! * `report`            — render the run index into a self-contained HTML dashboard
 //! * `bench-diff`        — perf-trajectory gate over two BENCH_hotpath.json
 
 use anyhow::Result;
@@ -25,14 +26,21 @@ use rudra::stats::table::{f, pct, Table};
 use rudra::util::cli::Args;
 use rudra::util::fmt_secs;
 
-const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|bench-diff> [--flags]
+const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|report|bench-diff> [--flags]
   info                      show artifacts, platform, model sizes
   train                     live engine (real threads) on the synthetic CNN
+                            (--synthetic: deterministic mock gradients, no
+                            artifacts needed — CI smoke for trace/series)
   sim                       one (σ,μ,λ) point: real SGD + simulated P775 time
   sweep                     (μ,λ) grid under one protocol
   timing                    timing-only simulation at paper scale
   runs [list|diff I J]      query the persistent run index
                             (--index FILE [runs.jsonl], --filter SUBSTR)
+  report                    render the run index (+ embedded time series)
+                            into one dependency-free HTML dashboard
+                            (--index FILE [runs.jsonl], --out FILE
+                            [report.html], --bench A.json,B.json for the
+                            events/sec trajectory panel)
   bench-diff OLD NEW        compare two BENCH_hotpath.json baselines; exits
                             non-zero on perf regressions (--threshold F)
 common flags: --protocol hardsync|async|<n>-softsync|backup:<b>
@@ -60,14 +68,24 @@ comm:         --compress none|topk:<frac>|qsgd:<bits> (gradient codec with
                 time) [all engines]
               --comm-csv FILE (sim: per-learner compressed-bytes +
                 residual-norm rows)
-observability: --trace FILE (sim/timing: Chrome trace-event JSON over
-                virtual sim time — load in Perfetto/chrome://tracing;
+observability: --trace PATH (Chrome trace-event JSON — load in Perfetto/
+                chrome://tracing. sim/timing: spans over virtual sim
+                time; train: spans over wall time; sweep: PATH is a
+                directory, one <label>.trace.json per grid point.
                 'none' clears a config-file value; JSON key trace)
-              --metrics-json FILE (metrics snapshot: staleness histogram,
+              --metrics-json PATH (metrics snapshot: staleness histogram,
                 barrier waits, queue depth, per-shard updates, root
-                bytes; JSON key metrics_json)
+                bytes. sweep: PATH is a directory, one
+                <label>.metrics.json per grid point; JSON key
+                metrics_json)
+              --metrics-every SECS (sample a time series — staleness,
+                queue depth, active λ, bytes/s, losses — every SECS
+                virtual seconds [sim/sweep/timing] or wall seconds
+                [train] into the metrics snapshot; JSON key
+                metrics_every; 'none' clears)
               --run-index FILE (append one record per point to a JSONL
-                run index; query with `rudra runs`; JSON key run_index)
+                run index; query with `rudra runs`, render with
+                `rudra report`; JSON key run_index)
 scale/resume: --max-updates N (timing: hard cap on weight updates — quick
                 CI points at datacenter λ)
               --stop-after-events N (timing: halt after N processed events
@@ -93,7 +111,7 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv, &["verbose", "eval-each-epoch", "no-eval"])?;
+    let args = Args::parse(argv, &["verbose", "eval-each-epoch", "no-eval", "synthetic"])?;
 
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -108,6 +126,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&cfg),
         "timing" => cmd_timing(&cfg, &args),
         "runs" => cmd_runs(&args),
+        "report" => cmd_report(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
             print!("{USAGE}");
@@ -145,17 +164,10 @@ fn print_comm(
     }
 }
 
-/// Write a metrics snapshot where `--metrics-json` asked.
+/// Write a metrics snapshot where `--metrics-json` asked (atomically: a
+/// crash mid-write cannot leave a truncated snapshot behind).
 fn write_metrics_json(path: &std::path::Path, metrics: &rudra::util::json::Json) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent).map_err(|e| {
-                anyhow::anyhow!("creating metrics directory {}: {e}", parent.display())
-            })?;
-        }
-    }
-    std::fs::write(path, metrics.to_string())
-        .map_err(|e| anyhow::anyhow!("writing metrics snapshot {}: {e}", path.display()))?;
+    rudra::util::write_atomic(path, &metrics.to_string())?;
     println!("wrote metrics snapshot to {}", path.display());
     Ok(())
 }
@@ -243,46 +255,72 @@ fn cmd_info() -> Result<()> {
 
 fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     use rudra::harness::providers::{ComputeService, ServiceProvider};
-    let manifest_path = std::env::var("RUDRA_MANIFEST")
-        .map(std::path::PathBuf::from)
-        .unwrap_or_else(|_| rudra::runtime::Manifest::default_path());
-    println!("live training {}", cfg.label());
+    use rudra::params::FlatVec;
+    let synthetic = args.flag("synthetic");
+    println!(
+        "live training {}{}",
+        cfg.label(),
+        if synthetic { " (synthetic gradients)" } else { "" }
+    );
 
-    // PJRT is not Send: gradient execution runs on a dedicated compute
-    // service thread; learner threads talk to it over channels.
-    let service = ComputeService::start_cnn(manifest_path.clone(), cfg.mu)?;
-    let train = std::sync::Arc::new(rudra::data::loader::ImageSet::load(
-        &rudra::runtime::Manifest::load(&manifest_path)?.data.train,
-    )?);
-    let providers: Vec<Box<dyn rudra::coordinator::learner::GradProvider + Send>> = (0
-        ..cfg.lambda)
-        .map(|id| {
-            Box::new(ServiceProvider::new(&service, train.clone(), cfg.mu, cfg.seed, id))
-                as Box<dyn rudra::coordinator::learner::GradProvider + Send>
-        })
-        .collect();
+    // `--synthetic` swaps the CNN workload for deterministic mock
+    // gradient providers: no artifacts, no PJRT, no eval — a cheap way
+    // for CI to drive the live engine's trace/series machinery for real.
+    // PJRT is not Send: in the real mode gradient execution runs on a
+    // dedicated compute service thread that must outlive the run;
+    // learner threads talk to it over channels.
+    let mut _service: Option<ComputeService> = None;
+    let mut ws: Option<Workspace> = None;
+    let (providers, theta0, samples_per_epoch) = if synthetic {
+        let dim = 64usize;
+        let theta0 =
+            FlatVec::from_vec((0..dim).map(|i| (i as f32) * 0.01 - 0.32).collect());
+        let providers: Vec<Box<dyn rudra::coordinator::learner::GradProvider + Send>> = (0
+            ..cfg.lambda)
+            .map(|_| {
+                Box::new(rudra::coordinator::learner::MockProvider::new(vec![0.0; dim]))
+                    as Box<dyn rudra::coordinator::learner::GradProvider + Send>
+            })
+            .collect();
+        (providers, theta0, 256u64)
+    } else {
+        let manifest_path = std::env::var("RUDRA_MANIFEST")
+            .map(std::path::PathBuf::from)
+            .unwrap_or_else(|_| rudra::runtime::Manifest::default_path());
+        let service = ComputeService::start_cnn(manifest_path.clone(), cfg.mu)?;
+        let train = std::sync::Arc::new(rudra::data::loader::ImageSet::load(
+            &rudra::runtime::Manifest::load(&manifest_path)?.data.train,
+        )?);
+        let providers: Vec<Box<dyn rudra::coordinator::learner::GradProvider + Send>> = (0
+            ..cfg.lambda)
+            .map(|id| {
+                Box::new(ServiceProvider::new(&service, train.clone(), cfg.mu, cfg.seed, id))
+                    as Box<dyn rudra::coordinator::learner::GradProvider + Send>
+            })
+            .collect();
+        _service = Some(service);
+        let workspace = Workspace::open_default()?;
+        let theta0 = workspace.cnn_init()?;
+        let n = train.n as u64;
+        ws = Some(workspace);
+        (providers, theta0, n)
+    };
 
     let live_cfg = LiveConfig {
         protocol: cfg.protocol,
         mu: cfg.mu,
         lambda: cfg.lambda,
         epochs: cfg.epochs,
-        samples_per_epoch: train.n as u64,
+        samples_per_epoch,
         shards: cfg.shards,
         log_every: args.u64_or("log-every", 50)?,
         elastic: live_elastic(cfg, args)?,
         compress: cfg.compress,
         checkpoint_every: cfg.checkpoint_every,
         collect_metrics: cfg.collect_metrics(),
+        trace: cfg.trace.is_some(),
+        metrics_every: cfg.metrics_every,
     };
-    if cfg.trace.is_some() {
-        anyhow::bail!(
-            "--trace records spans over *virtual* sim time; the live engine has \
-             none (use `rudra sim --trace` or `rudra timing --trace`)"
-        );
-    }
-    let ws = Workspace::open_default()?;
-    let theta0 = ws.cnn_init()?;
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let result = run_live(&live_cfg, theta0, optimizer, cfg.lr_policy(), providers)?;
 
@@ -319,7 +357,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
     }
 
     let mut final_eval: Option<(f64, f64)> = None;
-    if !args.flag("no-eval") {
+    if let (false, Some(ws)) = (args.flag("no-eval"), &ws) {
         let eval = ws.cnn_eval()?;
         let mut ev =
             rudra::stats::ImageEvaluator::new(&eval, &ws.test, ws.manifest.cnn.eval_batch);
@@ -329,6 +367,13 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         final_eval = Some((loss, err));
     }
 
+    if let (Some(path), Some(events)) = (&cfg.trace, &result.trace) {
+        rudra::obs::trace::write(path, events)?;
+        println!(
+            "wrote live trace to {} (wall-clock spans; load in Perfetto / chrome://tracing)",
+            path.display()
+        );
+    }
     if let (Some(path), Some(m)) = (&cfg.metrics_json, &result.metrics) {
         write_metrics_json(path, m)?;
     }
@@ -457,12 +502,6 @@ fn cmd_sim(cfg: &RunConfig, args: &Args) -> Result<()> {
 }
 
 fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
-    if cfg.trace.is_some() {
-        anyhow::bail!(
-            "--trace is per-run; parallel grid points cannot share one trace \
-             file (use `rudra sim --trace` or `rudra timing --trace`)"
-        );
-    }
     let ws = Workspace::open_default()?;
     // Grid axes layer like every other knob: JSON config (`mus`/`lambdas`)
     // under CLI (`--mus`/`--lambdas`), already merged into `cfg`.
@@ -473,6 +512,13 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
     sweep.arch = cfg.arch;
     sweep.jobs = cfg.jobs;
     sweep.collect_metrics = cfg.collect_metrics();
+    // Sweep observability is per point: `--trace DIR` / `--metrics-json
+    // DIR` name *directories*, and every grid point writes its own
+    // `<label>.trace.json` / `<label>.metrics.json` from its worker
+    // thread — parallel points never share a file.
+    sweep.trace_dir = cfg.trace.clone();
+    sweep.metrics_dir = cfg.metrics_json.clone();
+    sweep.metrics_every = cfg.metrics_every;
     let points = mus.len() * lambdas.len();
     println!(
         "sweep: {points} grid points on {} worker thread(s)",
@@ -492,7 +538,16 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
     }
     t.print();
 
-    if cfg.metrics_json.is_some() || cfg.run_index.is_some() {
+    if let Some(dir) = &cfg.trace {
+        println!("wrote {points} per-point traces under {} (<label>.trace.json)", dir.display());
+    }
+    if let Some(dir) = &cfg.metrics_json {
+        println!(
+            "wrote {points} per-point metrics snapshots under {} (<label>.metrics.json)",
+            dir.display()
+        );
+    }
+    if let Some(index) = &cfg.run_index {
         // Reconstruct the grid-order point configs (λ-major, μ-minor —
         // [`Sweep::run_grid`]'s construction) so each record carries the
         // label and seed of the point that produced it.
@@ -511,28 +566,10 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
                 point_cfgs.push(c);
             }
         }
-        if let Some(path) = &cfg.metrics_json {
-            use rudra::util::json::Json;
-            let arr = Json::Arr(
-                results
-                    .iter()
-                    .zip(&point_cfgs)
-                    .map(|(r, c)| {
-                        Json::obj(vec![
-                            ("label", Json::str(c.label())),
-                            ("metrics", r.metrics.clone().unwrap_or(Json::Null)),
-                        ])
-                    })
-                    .collect(),
-            );
-            write_metrics_json(path, &arr)?;
+        for (r, c) in results.iter().zip(&point_cfgs) {
+            rudra::obs::runindex::append(index, &point_record("sweep", c, r))?;
         }
-        if let Some(index) = &cfg.run_index {
-            for (r, c) in results.iter().zip(&point_cfgs) {
-                rudra::obs::runindex::append(index, &point_record("sweep", c, r))?;
-            }
-            println!("indexed {} sweep points in {}", results.len(), index.display());
-        }
+        println!("indexed {} sweep points in {}", results.len(), index.display());
     }
     Ok(())
 }
@@ -559,6 +596,7 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.trace = cfg.trace.is_some();
     sim_cfg.trace_path = cfg.trace.clone();
     sim_cfg.collect_metrics = cfg.collect_metrics();
+    sim_cfg.metrics_every = cfg.metrics_every;
     if args.get("max-updates").is_some() {
         sim_cfg.max_updates = Some(args.u64_or("max-updates", 0)?);
     }
@@ -728,6 +766,32 @@ fn cmd_runs(args: &Args) -> Result<()> {
         }
         other => anyhow::bail!("unknown runs action {other:?} (list | diff I J)"),
     }
+    Ok(())
+}
+
+/// `rudra report` — render the run index (plus any time series embedded
+/// in its metrics snapshots) into one self-contained, dependency-free
+/// HTML dashboard.
+fn cmd_report(args: &Args) -> Result<()> {
+    use rudra::obs::{report, runindex};
+    use rudra::util::json::Json;
+    let index = std::path::PathBuf::from(args.str_or("index", runindex::DEFAULT_INDEX));
+    let out = std::path::PathBuf::from(args.str_or("out", "report.html"));
+    let records = runindex::load(&index)?;
+    let mut benches: Vec<(String, Json)> = Vec::new();
+    if let Some(list) = args.get("bench") {
+        for path in list.split(',').map(str::trim).filter(|s| !s.is_empty()) {
+            benches.push((path.to_string(), Json::parse_file(std::path::Path::new(path))?));
+        }
+    }
+    let html = report::render(&records, &benches, &index.display().to_string());
+    rudra::util::write_atomic(&out, &html)?;
+    println!(
+        "wrote report over {} run(s) / {} bench baseline(s) to {}",
+        records.len(),
+        benches.len(),
+        out.display()
+    );
     Ok(())
 }
 

@@ -123,6 +123,15 @@ impl MetricsRegistry {
     }
 }
 
+/// Attach a recorded time series ([`super::series`]) to a snapshot under
+/// the `"series"` key. Both engines call this so the key name and
+/// placement stay consistent across sim/timing/live outputs.
+pub fn attach_series(snapshot: &mut Json, series: Json) {
+    if let Json::Obj(m) = snapshot {
+        m.insert("series".to_string(), series);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -172,5 +181,13 @@ mod tests {
         );
         assert_eq!(parsed.get("pushes_by_learner").unwrap().as_u64_vec().unwrap(), vec![3, 5]);
         assert_eq!(parsed.get("root_bytes_in").unwrap().as_f64().unwrap(), 100.0);
+    }
+
+    #[test]
+    fn attach_series_inserts_under_the_series_key() {
+        let m = MetricsRegistry::default();
+        let mut snap = m.snapshot(&StalenessStats::default(), &[], &[], 0.0, 0.0);
+        attach_series(&mut snap, Json::obj(vec![("schema", Json::num(1.0))]));
+        assert_eq!(snap.get("series").unwrap().get("schema").unwrap().as_u64().unwrap(), 1);
     }
 }

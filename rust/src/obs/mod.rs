@@ -1,28 +1,39 @@
-//! Observability: run tracing, metrics, and the persistent run index.
+//! Observability: run tracing, metrics, time series, and the persistent
+//! run index with its report renderer.
 //!
-//! Three layers, all *purely observational* — nothing here draws from an
+//! All layers are *purely observational* — nothing here draws from an
 //! engine RNG, touches event order, or mutates server state, so enabling
 //! any of it leaves trajectories bit-identical (pinned by
 //! `tests/integration_obs.rs`):
 //!
-//! * [`trace`] — Chrome trace-event recording over virtual sim time
-//!   (`--trace FILE`, loadable in Perfetto / `chrome://tracing`).
+//! * [`trace`] — Chrome trace-event recording (`--trace FILE`, loadable
+//!   in Perfetto / `chrome://tracing`) over virtual sim time, or wall
+//!   time in the live engine via [`trace::TimeBase::Wall`].
 //! * [`metrics`] — counters/gauges/histograms snapshotted into run
 //!   results (`--metrics-json FILE`).
+//! * [`series`] — windowed time series (`--metrics-every SECS`) sampled
+//!   over the run and attached to the metrics snapshot.
 //! * [`runindex`] — append-only `runs.jsonl` of every sim/sweep/timing
 //!   point (`--run-index FILE`, `rudra runs`), plus [`benchdiff`], the
 //!   `rudra bench-diff` perf-trajectory gate over `BENCH_hotpath.json`.
+//! * [`report`] — `rudra report`: the index (+ per-run series) rendered
+//!   into one self-contained HTML dashboard.
 //!
-//! [`Obs`] is the engines' single integration point: one call per event
-//! site feeds both the trace and the metrics, and the quiet default
-//! costs one branch per site.
+//! [`Obs`] is the sim engines' single integration point: one call per
+//! event site feeds the trace, the metrics, and the series, and the
+//! quiet default costs one branch per site. The live engine drives
+//! [`trace::TraceRecorder`] / [`series::SeriesRecorder`] directly — its
+//! spans come from OS threads, not an event loop.
 
 pub mod benchdiff;
 pub mod metrics;
+pub mod report;
 pub mod runindex;
+pub mod series;
 pub mod trace;
 
 use metrics::MetricsRegistry;
+use series::{SeriesInputs, SeriesRecorder};
 use trace::{TraceEvent, TraceRecorder};
 
 /// Per-engine observability state. `Obs::off()` (the default) makes every
@@ -31,6 +42,9 @@ use trace::{TraceEvent, TraceRecorder};
 pub struct Obs {
     trace: TraceRecorder,
     metrics: Option<MetricsRegistry>,
+    /// Windowed time series (`metrics_every`), attached to the metrics
+    /// snapshot when on.
+    series: Option<SeriesRecorder>,
     /// Observer-side barrier bookkeeping: when each learner's gradient
     /// entered the barrier (engine state is not consulted at release
     /// time, so recording cannot perturb it).
@@ -46,13 +60,26 @@ impl Obs {
         Obs::default()
     }
 
-    pub fn new(trace_on: bool, metrics_on: bool, lambda: usize) -> Obs {
-        if !trace_on && !metrics_on {
+    /// `metrics_every` (seconds of engine time between series samples)
+    /// arms the metrics registry too: a series without its enclosing
+    /// snapshot has nowhere to be serialized.
+    pub fn new(
+        trace_on: bool,
+        metrics_on: bool,
+        metrics_every: Option<f64>,
+        lambda: usize,
+    ) -> Obs {
+        if !trace_on && !metrics_on && metrics_every.is_none() {
             return Obs::off();
         }
         Obs {
             trace: if trace_on { TraceRecorder::on() } else { TraceRecorder::off() },
-            metrics: if metrics_on { Some(MetricsRegistry::default()) } else { None },
+            metrics: if metrics_on || metrics_every.is_some() {
+                Some(MetricsRegistry::default())
+            } else {
+                None
+            },
+            series: metrics_every.map(SeriesRecorder::new),
             barrier_entered: vec![0.0; lambda],
             round_waits: Vec::new(),
             active: true,
@@ -190,6 +217,9 @@ impl Obs {
         if self.metrics.is_some() {
             self.round_waits.push((now - entered).max(0.0));
         }
+        if let Some(s) = &mut self.series {
+            s.note_barrier_wait(now - entered);
+        }
     }
 
     /// All releases for the current round are in; fold them into the
@@ -214,8 +244,57 @@ impl Obs {
         }
     }
 
+    /// Whether the time-series recorder is armed (gates the per-event
+    /// sampling site: assembling [`SeriesInputs`] costs a few reads, so
+    /// quiet runs skip even that).
+    #[inline]
+    pub fn series_enabled(&self) -> bool {
+        self.series.is_some()
+    }
+
+    /// Per-event series sampling site (no-op between window boundaries).
+    #[inline]
+    pub fn series_tick(&mut self, now: f64, inputs: &SeriesInputs) {
+        if let Some(s) = &mut self.series {
+            s.maybe_sample(now, inputs);
+        }
+    }
+
+    /// A minibatch training-loss observation for the open window.
+    #[inline]
+    pub fn series_loss(&mut self, loss: f64) {
+        if let Some(s) = &mut self.series {
+            s.note_loss(loss);
+        }
+    }
+
+    /// Epoch boundary crossed (event-aligned sub-series).
+    #[inline]
+    pub fn series_epoch(&mut self, now: f64, epoch: u64, train_loss: f64, test_error_pct: f64) {
+        if let Some(s) = &mut self.series {
+            s.note_epoch(now, epoch, train_loss, test_error_pct);
+        }
+    }
+
+    /// Adaptive-n retune decision (event-aligned sub-series).
+    #[inline]
+    pub fn series_adaptive(&mut self, now: f64, n: u64) {
+        if let Some(s) = &mut self.series {
+            s.note_adaptive(now, n);
+        }
+    }
+
+    /// Final sample at end of run, so runs shorter than one window still
+    /// register a point. Call before [`Obs::metrics_snapshot`].
+    pub fn series_finish(&mut self, now: f64, inputs: &SeriesInputs) {
+        if let Some(s) = &mut self.series {
+            s.final_flush(now, inputs);
+        }
+    }
+
     /// Snapshot the metrics (if collecting) with the server-side
-    /// distributions folded in.
+    /// distributions folded in and the recorded series (if any) attached
+    /// under `"series"`.
     pub fn metrics_snapshot(
         &self,
         staleness: &crate::coordinator::clock::StalenessStats,
@@ -225,7 +304,17 @@ impl Obs {
         root_bytes_out: f64,
     ) -> Option<crate::util::json::Json> {
         self.metrics.as_ref().map(|m| {
-            m.snapshot(staleness, shard_updates, pushes_by_learner, root_bytes_in, root_bytes_out)
+            let mut snap = m.snapshot(
+                staleness,
+                shard_updates,
+                pushes_by_learner,
+                root_bytes_in,
+                root_bytes_out,
+            );
+            if let Some(s) = &self.series {
+                metrics::attach_series(&mut snap, s.to_json());
+            }
+            snap
         })
     }
 
@@ -254,7 +343,7 @@ mod tests {
 
     #[test]
     fn barrier_waits_span_entry_to_release() {
-        let mut obs = Obs::new(true, true, 2);
+        let mut obs = Obs::new(true, true, None, 2);
         obs.barrier_enter(0, 1.0);
         obs.barrier_enter(1, 3.0);
         obs.barrier_release(0, 4.0);
@@ -275,9 +364,37 @@ mod tests {
 
     #[test]
     fn trace_only_still_skips_metrics() {
-        let mut obs = Obs::new(true, false, 1);
+        let mut obs = Obs::new(true, false, None, 1);
         obs.compute(0, 0.0, 0.5);
         assert!(obs.metrics_snapshot(&Default::default(), &[], &[], 0.0, 0.0).is_none());
         assert_eq!(obs.take_trace().unwrap().len(), 1);
+    }
+
+    #[test]
+    fn metrics_every_arms_the_registry_and_attaches_series() {
+        let mut obs = Obs::new(false, false, Some(1.0), 2);
+        assert!(obs.active() && obs.series_enabled());
+        let inputs = SeriesInputs {
+            queue_depth: 5,
+            active_lambda: 2,
+            stale_count: 3,
+            stale_sum: 6.0,
+            stale_max: 4,
+            bytes_in: 50.0,
+        };
+        obs.series_tick(0.5, &inputs); // below the first boundary
+        obs.series_tick(1.5, &inputs);
+        obs.series_epoch(1.5, 1, 0.8, f64::NAN);
+        obs.series_finish(2.0, &inputs);
+        let snap = obs
+            .metrics_snapshot(&Default::default(), &[], &[], 50.0, 0.0)
+            .expect("metrics_every alone must arm the registry");
+        let series = snap.get("series").unwrap();
+        assert_eq!(series.get("t").unwrap().as_f64_vec().unwrap(), vec![1.5, 2.0]);
+        assert_eq!(
+            series.get("epoch").unwrap().get("epoch").unwrap().as_u64_vec().unwrap(),
+            vec![1]
+        );
+        assert_eq!(series.get("mean_staleness").unwrap().as_f64_vec().unwrap()[0], 2.0);
     }
 }

@@ -1,0 +1,497 @@
+//! `rudra report`: render the run index into one self-contained HTML
+//! dashboard.
+//!
+//! Dependency-free on both ends — the input is `runs.jsonl` (+ optional
+//! `BENCH_hotpath.json` baselines) parsed with the in-tree JSON reader,
+//! and the output is a single HTML file with inline CSS and inline-SVG
+//! plots, so it opens anywhere a browser exists (CI artifact viewers
+//! included) with no JS, no CDN, no image files.
+//!
+//! Panels: the runs table, the paper's μ·λ-vs-error scatter (the
+//! tradeoff frontier at a glance), per-run staleness histograms, per-run
+//! time-series sparklines when `--metrics-every` was on, and the
+//! `bench-diff` events/sec ladder when baselines are supplied.
+
+use crate::stats::finite_min_max;
+use crate::util::json::Json;
+
+use super::runindex::RunRecord;
+
+/// Escape text destined for an HTML context.
+fn esc(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '&' => out.push_str("&amp;"),
+            '<' => out.push_str("&lt;"),
+            '>' => out.push_str("&gt;"),
+            '"' => out.push_str("&quot;"),
+            '\'' => out.push_str("&#39;"),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn fmt_opt(v: Option<f64>) -> String {
+    match v {
+        Some(x) if x.is_finite() => format!("{x:.2}"),
+        _ => "–".to_string(),
+    }
+}
+
+/// Map data coordinates into an SVG viewport with padding.
+struct Scale {
+    x0: f64,
+    x1: f64,
+    y0: f64,
+    y1: f64,
+    w: f64,
+    h: f64,
+    pad: f64,
+}
+
+impl Scale {
+    fn new(xr: (f64, f64), yr: (f64, f64), w: f64, h: f64) -> Scale {
+        // Degenerate ranges (single point) get a unit span so division
+        // stays finite and the point lands mid-axis.
+        let widen = |(lo, hi): (f64, f64)| if hi > lo { (lo, hi) } else { (lo - 0.5, lo + 0.5) };
+        let (x0, x1) = widen(xr);
+        let (y0, y1) = widen(yr);
+        Scale { x0, x1, y0, y1, w, h, pad: 34.0 }
+    }
+
+    fn x(&self, v: f64) -> f64 {
+        self.pad + (v - self.x0) / (self.x1 - self.x0) * (self.w - 2.0 * self.pad)
+    }
+
+    /// SVG y grows downward; data y grows upward.
+    fn y(&self, v: f64) -> f64 {
+        self.h - self.pad - (v - self.y0) / (self.y1 - self.y0) * (self.h - 2.0 * self.pad)
+    }
+}
+
+/// The μ·λ-vs-test-error scatter (numeric runs only).
+fn scatter_mu_lambda(records: &[RunRecord]) -> String {
+    let pts: Vec<(f64, f64, &RunRecord)> = records
+        .iter()
+        .filter_map(|r| {
+            let err = r.test_error_pct.filter(|e| e.is_finite())?;
+            Some(((r.mu * r.lambda) as f64, err, r))
+        })
+        .collect();
+    if pts.is_empty() {
+        return "<p class=\"note\">No numeric runs with a final test error — \
+                run <code>rudra sim</code> points with <code>--run-index</code> \
+                to populate this panel.</p>"
+            .to_string();
+    }
+    let xs: Vec<f64> = pts.iter().map(|p| p.0).collect();
+    let ys: Vec<f64> = pts.iter().map(|p| p.1).collect();
+    let (w, h) = (560.0, 300.0);
+    let sc = Scale::new(
+        finite_min_max(&xs).unwrap_or((0.0, 1.0)),
+        finite_min_max(&ys).unwrap_or((0.0, 1.0)),
+        w,
+        h,
+    );
+    let mut svg = svg_open(w, h);
+    svg.push_str(&axes(&sc, "μ·λ", "test error %"));
+    for (x, y, r) in &pts {
+        svg.push_str(&format!(
+            "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"4\" class=\"pt\">\
+             <title>{} (seed {}): μ·λ={} err={:.2}%</title></circle>",
+            sc.x(*x),
+            sc.y(*y),
+            esc(&r.label),
+            r.seed,
+            *x as u64,
+            y
+        ));
+    }
+    svg.push_str("</svg>");
+    svg
+}
+
+fn svg_open(w: f64, h: f64) -> String {
+    format!(
+        "<svg xmlns=\"http://www.w3.org/2000/svg\" width=\"{w}\" height=\"{h}\" \
+         viewBox=\"0 0 {w} {h}\">"
+    )
+}
+
+fn axes(sc: &Scale, xlabel: &str, ylabel: &str) -> String {
+    format!(
+        "<line x1=\"{p}\" y1=\"{yb}\" x2=\"{xe}\" y2=\"{yb}\" class=\"axis\"/>\
+         <line x1=\"{p}\" y1=\"{p}\" x2=\"{p}\" y2=\"{yb}\" class=\"axis\"/>\
+         <text x=\"{xm}\" y=\"{ybl}\" class=\"lbl\">{xl}</text>\
+         <text x=\"10\" y=\"{ym}\" class=\"lbl\" transform=\"rotate(-90 10 {ym})\">{yl}</text>\
+         <text x=\"{p}\" y=\"{ybl}\" class=\"tick\">{x0}</text>\
+         <text x=\"{xe}\" y=\"{ybl}\" class=\"tick\" text-anchor=\"end\">{x1}</text>\
+         <text x=\"{pl}\" y=\"{yb}\" class=\"tick\" text-anchor=\"end\">{y0}</text>\
+         <text x=\"{pl}\" y=\"{pt}\" class=\"tick\" text-anchor=\"end\">{y1}</text>",
+        p = sc.pad,
+        pl = sc.pad - 4.0,
+        pt = sc.pad + 4.0,
+        yb = sc.h - sc.pad,
+        ybl = sc.h - sc.pad + 16.0,
+        xe = sc.w - sc.pad,
+        xm = sc.w / 2.0,
+        ym = sc.h / 2.0,
+        xl = esc(xlabel),
+        yl = esc(ylabel),
+        x0 = trim_num(sc.x0),
+        x1 = trim_num(sc.x1),
+        y0 = trim_num(sc.y0),
+        y1 = trim_num(sc.y1),
+    )
+}
+
+fn trim_num(v: f64) -> String {
+    if v == v.trunc() && v.abs() < 1e15 {
+        format!("{}", v as i64)
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Pull an f64 series out of a JSON array that may contain nulls (empty
+/// sample windows serialize as `null`); nulls become NaN and are skipped
+/// at plot time.
+fn f64_series(v: &Json) -> Vec<f64> {
+    match v {
+        Json::Arr(xs) => xs.iter().map(|x| x.as_f64().unwrap_or(f64::NAN)).collect(),
+        _ => Vec::new(),
+    }
+}
+
+/// A small inline sparkline of `ys` over `t` (NaN gaps break the line).
+fn sparkline(t: &[f64], ys: &[f64], label: &str) -> String {
+    let finite: Vec<f64> = ys.iter().copied().filter(|y| y.is_finite()).collect();
+    let (Some(xr), Some(yr)) = (finite_min_max(t), finite_min_max(&finite)) else {
+        return String::new();
+    };
+    let (w, h) = (180.0, 44.0);
+    let sc = Scale { x0: xr.0, x1: xr.1.max(xr.0 + 1e-12), y0: yr.0, y1: yr.1, w, h, pad: 3.0 };
+    // Degenerate y-range: flat line mid-panel.
+    let ymid = h / 2.0;
+    let flat = yr.0 == yr.1;
+    let mut segs: Vec<Vec<(f64, f64)>> = vec![Vec::new()];
+    for (x, y) in t.iter().zip(ys.iter()) {
+        if y.is_finite() {
+            let py = if flat { ymid } else { sc.y(*y) };
+            segs.last_mut().unwrap().push((sc.x(*x), py));
+        } else if !segs.last().unwrap().is_empty() {
+            segs.push(Vec::new());
+        }
+    }
+    let mut svg = svg_open(w, h);
+    for seg in segs.iter().filter(|s| !s.is_empty()) {
+        let pts: Vec<String> = seg.iter().map(|(x, y)| format!("{x:.1},{y:.1}")).collect();
+        if seg.len() == 1 {
+            svg.push_str(&format!(
+                "<circle cx=\"{:.1}\" cy=\"{:.1}\" r=\"2\" class=\"pt\"/>",
+                seg[0].0, seg[0].1
+            ));
+        } else {
+            svg.push_str(&format!("<polyline points=\"{}\" class=\"spark\"/>", pts.join(" ")));
+        }
+    }
+    svg.push_str("</svg>");
+    format!(
+        "<div class=\"spark-cell\"><div class=\"spark-label\">{} \
+         <span class=\"tick\">[{} … {}]</span></div>{}</div>",
+        esc(label),
+        trim_num(yr.0),
+        trim_num(yr.1),
+        svg
+    )
+}
+
+/// Per-run series panel (only for records whose metrics carry `series`).
+fn series_panel(r: &RunRecord, idx: usize) -> Option<String> {
+    let series = r.metrics.as_ref()?.opt("series")?;
+    let t = f64_series(series.opt("t")?);
+    if t.is_empty() {
+        return None;
+    }
+    let mut cells = String::new();
+    for (key, label) in [
+        ("mean_staleness", "mean staleness"),
+        ("max_staleness", "max staleness"),
+        ("queue_depth", "queue depth"),
+        ("active_lambda", "active λ"),
+        ("bytes_per_sec", "root bytes/s"),
+        ("barrier_wait_mean", "barrier wait (s)"),
+        ("loss_mean", "train loss"),
+    ] {
+        if let Some(v) = series.opt(key) {
+            cells.push_str(&sparkline(&t, &f64_series(v), label));
+        }
+    }
+    if let Some(ep) = series.opt("epoch") {
+        let et = f64_series(ep.opt("t")?);
+        if !et.is_empty() {
+            if let Some(v) = ep.opt("train_loss") {
+                cells.push_str(&sparkline(&et, &f64_series(v), "epoch train loss"));
+            }
+            if let Some(v) = ep.opt("test_error_pct") {
+                cells.push_str(&sparkline(&et, &f64_series(v), "epoch test error %"));
+            }
+        }
+    }
+    if let Some(ad) = series.opt("adaptive_n") {
+        if let (Some(at), Some(an)) = (ad.opt("t"), ad.opt("n")) {
+            let at = f64_series(at);
+            if !at.is_empty() {
+                cells.push_str(&sparkline(&at, &f64_series(an), "adaptive n"));
+            }
+        }
+    }
+    if cells.is_empty() {
+        return None;
+    }
+    Some(format!(
+        "<div class=\"run-series\"><h3>#{idx} {} <span class=\"tick\">seed {}</span></h3>\
+         <div class=\"spark-row\">{cells}</div></div>",
+        esc(&r.label),
+        r.seed
+    ))
+}
+
+/// Staleness histogram bars from a record's metrics snapshot.
+fn staleness_panel(r: &RunRecord, idx: usize) -> Option<String> {
+    let hist = r.metrics.as_ref()?.opt("staleness")?.opt("histogram")?;
+    let counts: Vec<f64> = f64_series(hist);
+    let total: f64 = counts.iter().sum();
+    if total <= 0.0 {
+        return None;
+    }
+    let (w, h) = (280.0, 90.0);
+    let peak = counts.iter().cloned().fold(0.0_f64, f64::max);
+    let bw = (w - 20.0) / counts.len() as f64;
+    let mut svg = svg_open(w, h);
+    for (i, &c) in counts.iter().enumerate() {
+        let bh = if peak > 0.0 { c / peak * (h - 24.0) } else { 0.0 };
+        svg.push_str(&format!(
+            "<rect x=\"{:.1}\" y=\"{:.1}\" width=\"{:.1}\" height=\"{:.1}\" class=\"bar\">\
+             <title>σ={i}: {c:.0}</title></rect>",
+            10.0 + i as f64 * bw,
+            h - 14.0 - bh,
+            (bw - 1.0).max(0.5),
+            bh
+        ));
+    }
+    svg.push_str(&format!(
+        "<text x=\"10\" y=\"{:.1}\" class=\"tick\">σ 0…{}</text></svg>",
+        h - 2.0,
+        counts.len() - 1
+    ));
+    Some(format!(
+        "<div class=\"hist-cell\"><div class=\"spark-label\">#{idx} {} \
+         <span class=\"tick\">⟨σ⟩={:.3}</span></div>{svg}</div>",
+        esc(&r.label),
+        r.avg_staleness
+    ))
+}
+
+/// Bench events/sec ladder from `BENCH_hotpath.json` baselines.
+fn bench_panel(benches: &[(String, Json)]) -> String {
+    let mut rows = String::new();
+    for (name, bench) in benches {
+        let Some(Json::Arr(ladder)) = bench.opt("sim_engine") else { continue };
+        for row in ladder {
+            let (Ok(lambda), Ok(eps)) = (
+                row.get("lambda").and_then(|v| v.as_u64()),
+                row.get("events_per_sec").and_then(|v| v.as_f64()),
+            ) else {
+                continue;
+            };
+            rows.push_str(&format!(
+                "<tr><td>{}</td><td>{lambda}</td><td>{eps:.3e}</td></tr>",
+                esc(name)
+            ));
+        }
+    }
+    if rows.is_empty() {
+        return String::new();
+    }
+    format!(
+        "<h2>Sim-engine throughput (bench baselines)</h2>\
+         <table><thead><tr><th>baseline</th><th>λ</th><th>events/s</th></tr></thead>\
+         <tbody>{rows}</tbody></table>"
+    )
+}
+
+const STYLE: &str = "\
+ body{font:14px/1.5 system-ui,sans-serif;margin:24px auto;max-width:1080px;\
+      color:#1a1a2e;background:#fafafa}\
+ h1{font-size:20px} h2{font-size:16px;margin-top:28px} h3{font-size:14px;margin:10px 0 4px}\
+ table{border-collapse:collapse;width:100%;font-size:12px;background:#fff}\
+ th,td{border:1px solid #ddd;padding:3px 7px;text-align:right}\
+ th:first-child,td:first-child,th:nth-child(2),td:nth-child(2),\
+ th:nth-child(3),td:nth-child(3){text-align:left}\
+ thead{background:#eef} .note{color:#666;font-style:italic}\
+ .axis{stroke:#888;stroke-width:1} .lbl{font-size:11px;fill:#444;text-anchor:middle}\
+ .tick{font-size:10px;fill:#888;font-style:normal}\
+ .pt{fill:#3b6fd4;opacity:.75} .bar{fill:#3b6fd4;opacity:.75}\
+ .spark{fill:none;stroke:#3b6fd4;stroke-width:1.4}\
+ .spark-row{display:flex;flex-wrap:wrap;gap:10px}\
+ .spark-cell,.hist-cell{background:#fff;border:1px solid #ddd;padding:6px}\
+ .spark-label{font-size:11px;color:#444;margin-bottom:2px}\
+ svg{display:block}";
+
+/// Render the full report. `source` names the index the records came
+/// from (shown in the header); `benches` are (name, parsed JSON) pairs.
+pub fn render(records: &[RunRecord], benches: &[(String, Json)], source: &str) -> String {
+    let mut table_rows = String::new();
+    for (i, r) in records.iter().enumerate() {
+        let has_series =
+            r.metrics.as_ref().and_then(|m| m.opt("series")).is_some();
+        table_rows.push_str(&format!(
+            "<tr><td>{i}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td><td>{}</td>\
+             <td>{}</td><td>{}</td><td>{}</td><td>{:.3}</td><td>{}</td><td>{:.1}</td>\
+             <td>{:.2}</td><td>{}</td><td>{}</td><td>{}</td></tr>",
+            esc(&r.kind),
+            esc(&r.label),
+            r.seed,
+            r.mu,
+            r.lambda,
+            r.shards,
+            r.epochs,
+            fmt_opt(r.test_error_pct),
+            r.avg_staleness,
+            r.max_staleness,
+            r.sim_seconds,
+            r.wall_seconds,
+            r.updates,
+            r.events,
+            if has_series { "✓" } else { "" },
+        ));
+    }
+    let series_panels: String =
+        records.iter().enumerate().filter_map(|(i, r)| series_panel(r, i)).collect();
+    let hist_panels: String =
+        records.iter().enumerate().filter_map(|(i, r)| staleness_panel(r, i)).collect();
+    format!(
+        "<!DOCTYPE html><html><head><meta charset=\"utf-8\">\
+         <title>rudra report</title><style>{STYLE}</style></head><body>\
+         <h1>rudra report</h1>\
+         <p class=\"note\">{} record{} from <code>{}</code></p>\
+         <h2>Runs</h2>\
+         <table><thead><tr><th>#</th><th>kind</th><th>label</th><th>seed</th>\
+         <th>μ</th><th>λ</th><th>S</th><th>epochs</th><th>err%</th><th>⟨σ⟩</th>\
+         <th>σ max</th><th>sim s</th><th>wall s</th><th>updates</th><th>events</th>\
+         <th>series</th></tr></thead><tbody>{table_rows}</tbody></table>\
+         <h2>μ·λ vs test error</h2>{}\
+         {}{}{}\
+         </body></html>",
+        records.len(),
+        if records.len() == 1 { "" } else { "s" },
+        esc(source),
+        scatter_mu_lambda(records),
+        if hist_panels.is_empty() {
+            String::new()
+        } else {
+            format!("<h2>Staleness histograms</h2><div class=\"spark-row\">{hist_panels}</div>")
+        },
+        if series_panels.is_empty() {
+            String::new()
+        } else {
+            format!("<h2>Time series (--metrics-every)</h2>{series_panels}")
+        },
+        bench_panel(benches),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn record(seed: u64, err: Option<f64>, metrics: Option<Json>) -> RunRecord {
+        RunRecord {
+            kind: "sim".to_string(),
+            label: format!("sim-1-softsync-mu4-lambda8-seed{seed} <unsafe>"),
+            fingerprint: "fp".to_string(),
+            seed,
+            mu: 4,
+            lambda: 8,
+            shards: 1,
+            epochs: 2,
+            test_error_pct: err,
+            train_loss: Some(0.4),
+            sim_seconds: 100.0,
+            wall_seconds: 1.0,
+            updates: 500,
+            events: 9000,
+            avg_staleness: 2.5,
+            max_staleness: 6,
+            root_bytes_in: 1e8,
+            root_bytes_out: 2e8,
+            metrics,
+        }
+    }
+
+    fn metrics_with_series() -> Json {
+        Json::parse(
+            r#"{"staleness": {"histogram": [5, 3, 1]},
+                "series": {"schema": 1, "every_secs": 1,
+                           "t": [1.0, 2.0, 3.0],
+                           "mean_staleness": [2.0, null, 3.0],
+                           "queue_depth": [4, 5, 6],
+                           "active_lambda": [8, 8, 8],
+                           "bytes_per_sec": [10.0, 20.0, 30.0],
+                           "epoch": {"t": [2.5], "epoch": [1],
+                                     "train_loss": [0.5], "test_error_pct": [null]},
+                           "adaptive_n": {"t": [], "n": []}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn report_is_self_contained_html_with_escaped_labels() {
+        let records =
+            vec![record(1, Some(12.5), Some(metrics_with_series())), record(2, None, None)];
+        let html = render(&records, &[], "out/runs.jsonl");
+        assert!(html.starts_with("<!DOCTYPE html>"));
+        assert!(html.ends_with("</body></html>"));
+        assert!(html.contains("&lt;unsafe&gt;"), "labels must be escaped");
+        assert!(!html.contains("<unsafe>"), "raw label text must not leak into markup");
+        // Self-contained: no external references of any kind.
+        assert!(!html.contains("http-equiv"));
+        assert!(!html.contains("src="));
+        assert!(!html.contains("href="));
+        // Panels present: scatter point, histogram bars, sparklines.
+        assert!(html.contains("<circle"), "scatter needs at least one point");
+        assert!(html.contains("class=\"bar\""), "histogram bars expected");
+        assert!(html.contains("class=\"spark\""), "series sparklines expected");
+    }
+
+    #[test]
+    fn empty_index_still_renders_a_document() {
+        let html = render(&[], &[], "runs.jsonl");
+        assert!(html.contains("0 records"));
+        assert!(html.contains("No numeric runs"));
+    }
+
+    #[test]
+    fn nan_series_windows_break_the_line_not_the_report() {
+        let records = vec![record(1, Some(10.0), Some(metrics_with_series()))];
+        let html = render(&records, &[], "runs.jsonl");
+        assert!(!html.contains("NaN"), "NaN must never reach the markup");
+    }
+
+    #[test]
+    fn bench_ladder_renders_when_given_baselines() {
+        let bench = Json::parse(
+            r#"{"schema": 2, "quick": true,
+                "sim_engine": [{"lambda": 512, "events": 2000,
+                                "wall_secs": 0.002, "events_per_sec": 1.0e6}]}"#,
+        )
+        .unwrap();
+        let html = render(&[], &[("old.json".to_string(), bench)], "runs.jsonl");
+        assert!(html.contains("Sim-engine throughput"));
+        assert!(html.contains("512"));
+        assert!(html.contains("1.000e6"));
+    }
+}

@@ -139,22 +139,57 @@ pub fn append(path: &Path, record: &RunRecord) -> Result<()> {
 }
 
 /// Load every record (empty if the index does not exist yet).
+///
+/// Streams line by line instead of slurping the whole file (indexes
+/// accumulate across processes and machines). A malformed *final* line is
+/// the signature of a crash-truncated append: it is skipped with a
+/// warning so `rudra runs` keeps working over everything that did land.
+/// A malformed line with more records after it is real corruption and
+/// stays a hard error.
 pub fn load(path: &Path) -> Result<Vec<RunRecord>> {
-    if !path.exists() {
-        return Ok(Vec::new());
-    }
-    let text = std::fs::read_to_string(path)
-        .with_context(|| format!("reading run index {}", path.display()))?;
+    use std::io::BufRead;
+    let file = match std::fs::File::open(path) {
+        Ok(f) => f,
+        Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(Vec::new()),
+        Err(e) => {
+            return Err(e).with_context(|| format!("opening run index {}", path.display()))
+        }
+    };
+    let mut reader = std::io::BufReader::new(file);
     let mut records = Vec::new();
-    for (i, line) in text.lines().enumerate() {
+    let mut pending_error: Option<(usize, anyhow::Error)> = None;
+    let mut line = String::new();
+    let mut lineno = 0usize;
+    loop {
+        line.clear();
+        let n = reader
+            .read_line(&mut line)
+            .with_context(|| format!("reading run index {}", path.display()))?;
+        if n == 0 {
+            break;
+        }
+        lineno += 1;
         if line.trim().is_empty() {
             continue;
         }
-        let v = Json::parse(line)
-            .with_context(|| format!("{}:{}: bad JSONL line", path.display(), i + 1))?;
-        records.push(
-            RunRecord::from_json(&v)
-                .with_context(|| format!("{}:{}: bad run record", path.display(), i + 1))?,
+        // A bad line earlier than the last non-blank one is corruption,
+        // not truncation: surface the original error.
+        if let Some((bad_line, err)) = pending_error.take() {
+            return Err(err)
+                .with_context(|| format!("{}:{}: bad JSONL line", path.display(), bad_line));
+        }
+        let parsed = Json::parse(line.trim_end())
+            .and_then(|v| RunRecord::from_json(&v).context("bad run record"));
+        match parsed {
+            Ok(r) => records.push(r),
+            Err(e) => pending_error = Some((lineno, e)),
+        }
+    }
+    if let Some((bad_line, _)) = pending_error {
+        eprintln!(
+            "warning: {}:{}: skipping trailing partial record (crash-truncated append?)",
+            path.display(),
+            bad_line
         );
     }
     Ok(records)
@@ -307,6 +342,36 @@ mod tests {
     #[test]
     fn missing_index_loads_empty() {
         assert!(load(Path::new("/nonexistent/runs.jsonl")).unwrap().is_empty());
+    }
+
+    #[test]
+    fn truncated_last_line_is_tolerated_with_the_rest_intact() {
+        let path = tmp("truncated.jsonl");
+        std::fs::remove_file(&path).ok();
+        append(&path, &sample("sim", 1)).unwrap();
+        append(&path, &sample("timing", 2)).unwrap();
+        // Simulate a crash mid-append: half a record, no newline.
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("{\"kind\": \"sim\", \"label\": \"cut-off-mid");
+        std::fs::write(&path, &text).unwrap();
+        let records = load(&path).unwrap();
+        assert_eq!(records.len(), 2, "intact records must survive the torn tail");
+        assert_eq!(records[1].seed, 2);
+        std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn garbage_before_the_end_is_still_a_hard_error() {
+        let path = tmp("corrupt.jsonl");
+        std::fs::remove_file(&path).ok();
+        append(&path, &sample("sim", 1)).unwrap();
+        let mut text = std::fs::read_to_string(&path).unwrap();
+        text.push_str("not json at all\n");
+        std::fs::write(&path, &text).unwrap();
+        append(&path, &sample("sim", 2)).unwrap();
+        let err = load(&path).unwrap_err().to_string();
+        assert!(err.contains("bad JSONL line"), "{err}");
+        std::fs::remove_file(&path).ok();
     }
 
     #[test]

@@ -1,0 +1,320 @@
+//! Windowed time-series telemetry (`--metrics-every SECS`).
+//!
+//! The end-of-run metrics snapshot ([`super::metrics`]) answers "what did
+//! the run total up to"; the paper's argument is about *trajectories* —
+//! the staleness distribution drifting over epochs, the μ·λ rescaler
+//! reacting to churn, the queue filling behind a straggler. The
+//! [`SeriesRecorder`] samples those quantities every `every` seconds of
+//! engine time (virtual seconds in the sim engines, wall seconds in the
+//! live engine) into parallel arrays serialized under the `"series"` key
+//! of the metrics snapshot.
+//!
+//! Purely observational, like every other obs layer: sampling reads
+//! engine state the engine computed anyway, draws from no RNG, and the
+//! off default ([`None`] recorder) costs one branch per event.
+
+use crate::util::json::Json;
+
+/// The gauges sampled at each window boundary. The engine fills this from
+/// state it already tracks; the recorder differentiates the monotone
+/// totals (`stale_count`/`stale_sum`/`bytes_in`) into per-window rates.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct SeriesInputs {
+    /// Pending event-queue depth (0 in the live engine — an OS channel
+    /// has no observable depth).
+    pub queue_depth: u64,
+    /// Live learner count (λ_active).
+    pub active_lambda: u64,
+    /// Cumulative staleness observation count.
+    pub stale_count: u64,
+    /// Cumulative staleness sum.
+    pub stale_sum: f64,
+    /// Running maximum staleness.
+    pub stale_max: u64,
+    /// Cumulative bytes delivered into the root tier.
+    pub bytes_in: f64,
+}
+
+/// Accumulates windowed samples over engine time. Create with
+/// [`SeriesRecorder::new`], feed [`SeriesRecorder::maybe_sample`] from a
+/// per-event (or per-loop) site, and call [`SeriesRecorder::final_flush`]
+/// before snapshotting so even a run shorter than one window gets a
+/// sample.
+#[derive(Debug, Clone)]
+pub struct SeriesRecorder {
+    every: f64,
+    next_at: f64,
+    // Window-boundary state for differencing the monotone inputs.
+    last_count: u64,
+    last_sum: f64,
+    last_bytes: f64,
+    last_t: f64,
+    // In-window accumulators fed by dedicated note_* hooks.
+    win_barrier_sum: f64,
+    win_barrier_n: u64,
+    win_loss_sum: f64,
+    win_loss_n: u64,
+    // The series proper.
+    t: Vec<f64>,
+    mean_staleness: Vec<f64>,
+    max_staleness: Vec<u64>,
+    queue_depth: Vec<u64>,
+    active_lambda: Vec<u64>,
+    bytes_per_sec: Vec<f64>,
+    barrier_wait_mean: Vec<f64>,
+    loss_mean: Vec<f64>,
+    // Event-aligned sub-series (epoch boundaries, adaptive-n decisions).
+    epoch_t: Vec<f64>,
+    epoch_no: Vec<u64>,
+    epoch_train_loss: Vec<f64>,
+    epoch_test_error: Vec<f64>,
+    adaptive_t: Vec<f64>,
+    adaptive_n: Vec<u64>,
+}
+
+impl SeriesRecorder {
+    /// `every` must be finite and positive (config validation enforces
+    /// this before an engine is built).
+    pub fn new(every: f64) -> SeriesRecorder {
+        SeriesRecorder {
+            every,
+            next_at: every,
+            last_count: 0,
+            last_sum: 0.0,
+            last_bytes: 0.0,
+            last_t: 0.0,
+            win_barrier_sum: 0.0,
+            win_barrier_n: 0,
+            win_loss_sum: 0.0,
+            win_loss_n: 0,
+            t: Vec::new(),
+            mean_staleness: Vec::new(),
+            max_staleness: Vec::new(),
+            queue_depth: Vec::new(),
+            active_lambda: Vec::new(),
+            bytes_per_sec: Vec::new(),
+            barrier_wait_mean: Vec::new(),
+            loss_mean: Vec::new(),
+            epoch_t: Vec::new(),
+            epoch_no: Vec::new(),
+            epoch_train_loss: Vec::new(),
+            epoch_test_error: Vec::new(),
+            adaptive_t: Vec::new(),
+            adaptive_n: Vec::new(),
+        }
+    }
+
+    /// Sample if `now` crossed the current window boundary. Samples land
+    /// at the *actual* event times that crossed the boundary (event time
+    /// is discrete; the next window opens relative to `now`, so an idle
+    /// stretch yields no empty samples).
+    #[inline]
+    pub fn maybe_sample(&mut self, now: f64, inputs: &SeriesInputs) {
+        if now < self.next_at {
+            return;
+        }
+        self.sample(now, inputs);
+        self.next_at = now + self.every;
+    }
+
+    /// One last sample at end of run, so short runs (or the tail window)
+    /// still register. Skipped if nothing advanced since the last sample.
+    pub fn final_flush(&mut self, now: f64, inputs: &SeriesInputs) {
+        if now > self.last_t || self.t.is_empty() {
+            self.sample(now, inputs);
+        }
+    }
+
+    fn sample(&mut self, now: f64, inputs: &SeriesInputs) {
+        let d_count = inputs.stale_count.saturating_sub(self.last_count);
+        let d_sum = inputs.stale_sum - self.last_sum;
+        let d_bytes = inputs.bytes_in - self.last_bytes;
+        let d_t = now - self.last_t;
+        self.t.push(now);
+        // Windowed mean staleness: NaN when no updates landed in the
+        // window (serialized as null — see to_json).
+        self.mean_staleness
+            .push(if d_count > 0 { d_sum / d_count as f64 } else { f64::NAN });
+        self.max_staleness.push(inputs.stale_max);
+        self.queue_depth.push(inputs.queue_depth);
+        self.active_lambda.push(inputs.active_lambda);
+        self.bytes_per_sec.push(if d_t > 0.0 { d_bytes / d_t } else { f64::NAN });
+        self.barrier_wait_mean.push(if self.win_barrier_n > 0 {
+            self.win_barrier_sum / self.win_barrier_n as f64
+        } else {
+            f64::NAN
+        });
+        self.loss_mean.push(if self.win_loss_n > 0 {
+            self.win_loss_sum / self.win_loss_n as f64
+        } else {
+            f64::NAN
+        });
+        self.last_count = inputs.stale_count;
+        self.last_sum = inputs.stale_sum;
+        self.last_bytes = inputs.bytes_in;
+        self.last_t = now;
+        self.win_barrier_sum = 0.0;
+        self.win_barrier_n = 0;
+        self.win_loss_sum = 0.0;
+        self.win_loss_n = 0;
+    }
+
+    /// A barrier release happened; fold the wait into the open window.
+    #[inline]
+    pub fn note_barrier_wait(&mut self, wait: f64) {
+        self.win_barrier_sum += wait.max(0.0);
+        self.win_barrier_n += 1;
+    }
+
+    /// A training loss observation (per minibatch) for the open window.
+    #[inline]
+    pub fn note_loss(&mut self, loss: f64) {
+        if loss.is_finite() {
+            self.win_loss_sum += loss;
+            self.win_loss_n += 1;
+        }
+    }
+
+    /// Epoch boundary crossed (event-aligned sub-series).
+    #[inline]
+    pub fn note_epoch(&mut self, now: f64, epoch: u64, train_loss: f64, test_error_pct: f64) {
+        self.epoch_t.push(now);
+        self.epoch_no.push(epoch);
+        self.epoch_train_loss.push(train_loss);
+        self.epoch_test_error.push(test_error_pct);
+    }
+
+    /// The adaptive-n controller retuned the splitting parameter.
+    #[inline]
+    pub fn note_adaptive(&mut self, now: f64, n: u64) {
+        self.adaptive_t.push(now);
+        self.adaptive_n.push(n);
+    }
+
+    /// Number of window samples taken so far.
+    pub fn len(&self) -> usize {
+        self.t.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.t.is_empty()
+    }
+
+    /// Serialize. Non-finite values (empty-window means) become `null`:
+    /// the hand-rolled writer would print `NaN` bare, which is not JSON.
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("every_secs", Json::num(self.every)),
+            ("t", Json::arr_f64(&self.t)),
+            ("mean_staleness", arr_or_null(&self.mean_staleness)),
+            ("max_staleness", Json::arr_u64(&self.max_staleness)),
+            ("queue_depth", Json::arr_u64(&self.queue_depth)),
+            ("active_lambda", Json::arr_u64(&self.active_lambda)),
+            ("bytes_per_sec", arr_or_null(&self.bytes_per_sec)),
+            ("barrier_wait_mean", arr_or_null(&self.barrier_wait_mean)),
+            ("loss_mean", arr_or_null(&self.loss_mean)),
+            (
+                "epoch",
+                Json::obj(vec![
+                    ("t", Json::arr_f64(&self.epoch_t)),
+                    ("epoch", Json::arr_u64(&self.epoch_no)),
+                    ("train_loss", arr_or_null(&self.epoch_train_loss)),
+                    ("test_error_pct", arr_or_null(&self.epoch_test_error)),
+                ]),
+            ),
+            (
+                "adaptive_n",
+                Json::obj(vec![
+                    ("t", Json::arr_f64(&self.adaptive_t)),
+                    ("n", Json::arr_u64(&self.adaptive_n)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// f64 array with non-finite entries mapped to `null`.
+fn arr_or_null(xs: &[f64]) -> Json {
+    Json::Arr(
+        xs.iter()
+            .map(|&x| if x.is_finite() { Json::Num(x) } else { Json::Null })
+            .collect(),
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(count: u64, sum: f64, bytes: f64) -> SeriesInputs {
+        SeriesInputs {
+            queue_depth: 3,
+            active_lambda: 4,
+            stale_count: count,
+            stale_sum: sum,
+            stale_max: 7,
+            bytes_in: bytes,
+        }
+    }
+
+    #[test]
+    fn windows_difference_the_monotone_totals() {
+        let mut s = SeriesRecorder::new(1.0);
+        s.maybe_sample(0.5, &inputs(1, 2.0, 10.0)); // below boundary: no sample
+        assert_eq!(s.len(), 0);
+        s.maybe_sample(1.25, &inputs(4, 10.0, 100.0));
+        s.maybe_sample(2.5, &inputs(10, 40.0, 300.0));
+        assert_eq!(s.len(), 2);
+        let j = s.to_json();
+        let means = j.get("mean_staleness").unwrap().as_f64_vec().unwrap();
+        // Window 1: 10/4 = 2.5; window 2: (40-10)/(10-4) = 5.
+        assert!((means[0] - 2.5).abs() < 1e-12);
+        assert!((means[1] - 5.0).abs() < 1e-12);
+        let bps = j.get("bytes_per_sec").unwrap().as_f64_vec().unwrap();
+        assert!((bps[0] - 100.0 / 1.25).abs() < 1e-9);
+        assert!((bps[1] - 200.0 / 1.25).abs() < 1e-9);
+    }
+
+    #[test]
+    fn empty_windows_serialize_null_not_nan() {
+        let mut s = SeriesRecorder::new(1.0);
+        s.maybe_sample(1.5, &inputs(0, 0.0, 0.0));
+        let text = s.to_json().to_string();
+        assert!(!text.contains("NaN"), "bare NaN is not JSON: {text}");
+        assert!(text.contains("null"));
+        // And it must re-parse.
+        Json::parse(&text).unwrap();
+    }
+
+    #[test]
+    fn final_flush_gives_short_runs_a_sample() {
+        let mut s = SeriesRecorder::new(1e9);
+        s.note_loss(2.0);
+        s.note_loss(4.0);
+        s.note_barrier_wait(0.5);
+        s.final_flush(0.01, &inputs(2, 3.0, 8.0));
+        assert_eq!(s.len(), 1);
+        let j = s.to_json();
+        assert_eq!(j.get("loss_mean").unwrap().as_f64_vec().unwrap()[0], 3.0);
+        assert_eq!(j.get("barrier_wait_mean").unwrap().as_f64_vec().unwrap()[0], 0.5);
+        // Flushing again without progress adds nothing.
+        s.final_flush(0.01, &inputs(2, 3.0, 8.0));
+        assert_eq!(s.len(), 1);
+    }
+
+    #[test]
+    fn event_subseries_record_epochs_and_adaptive_n() {
+        let mut s = SeriesRecorder::new(10.0);
+        s.note_epoch(3.0, 1, 0.9, f64::NAN);
+        s.note_epoch(6.0, 2, 0.7, 12.5);
+        s.note_adaptive(6.0, 4);
+        let j = s.to_json();
+        let ep = j.get("epoch").unwrap();
+        assert_eq!(ep.get("epoch").unwrap().as_u64_vec().unwrap(), vec![1, 2]);
+        assert_eq!(ep.get("test_error_pct").unwrap().as_arr().unwrap()[0], Json::Null);
+        let ad = j.get("adaptive_n").unwrap();
+        assert_eq!(ad.get("n").unwrap().as_u64_vec().unwrap(), vec![4]);
+        Json::parse(&j.to_string()).unwrap();
+    }
+}

@@ -1,21 +1,24 @@
-//! Chrome trace-event recorder over *virtual* sim time.
+//! Chrome trace-event recorder with a pluggable time base.
 //!
 //! Emits the trace-event JSON format (`{"traceEvents": [...]}`) that
 //! Perfetto and `chrome://tracing` load directly: complete spans
 //! (`ph: "X"`) for mini-batch compute, gradient push wire transit,
 //! barrier waits, leaf relay hops, pulls, and broadcasts, plus instant
 //! events (`ph: "i"`) for per-shard applyUpdate and checkpoint capture.
-//! Timestamps are virtual sim seconds converted to microseconds (the
-//! format's unit), so the timeline a viewer shows *is* the simulated
-//! schedule, not host wall time.
+//! Timestamps are seconds converted to microseconds (the format's unit)
+//! over the recorder's [`TimeBase`]: the sim engines record *virtual*
+//! sim seconds (the timeline a viewer shows is the simulated schedule),
+//! while the live engine ([`crate::coordinator::engine_live`]) records
+//! wall seconds since its run epoch ([`TraceRecorder::on_wall`]).
 //!
 //! The recorder is off by default and costs one branch per call site
 //! when off — `trace none` runs take the exact pre-obs path, which the
 //! bit-identity property tests in `tests/integration_obs.rs` pin down.
 
 use std::path::Path;
+use std::time::Instant;
 
-use anyhow::{Context, Result};
+use anyhow::Result;
 
 use crate::util::json::Json;
 
@@ -42,22 +45,52 @@ pub struct TraceEvent {
     pub tid: u64,
 }
 
+/// What a recorded timestamp *means*. The sim engines pass virtual
+/// seconds straight from the event queue; the live engine measures wall
+/// offsets from a run epoch.
+#[derive(Debug, Clone, Copy, Default)]
+pub enum TimeBase {
+    /// Timestamps are virtual sim seconds supplied by the caller.
+    #[default]
+    Virtual,
+    /// Timestamps are wall seconds since this epoch ([`TraceRecorder::now_s`]).
+    Wall(Instant),
+}
+
 /// Span recorder: `None` events = disabled (the no-op recorder). Every
 /// record method is an early-return branch when off, so quiet runs pay
 /// nothing but the check.
 #[derive(Debug, Default)]
 pub struct TraceRecorder {
     events: Option<Vec<TraceEvent>>,
+    time_base: TimeBase,
 }
 
 impl TraceRecorder {
     /// The no-op recorder (default): records nothing.
     pub fn off() -> TraceRecorder {
-        TraceRecorder { events: None }
+        TraceRecorder::default()
     }
 
     pub fn on() -> TraceRecorder {
-        TraceRecorder { events: Some(Vec::new()) }
+        TraceRecorder { events: Some(Vec::new()), time_base: TimeBase::Virtual }
+    }
+
+    /// A recorder over wall time: timestamps are seconds since `epoch`.
+    /// Callers either pass offsets they measured themselves (threads
+    /// sharing the epoch) or read [`TraceRecorder::now_s`].
+    pub fn on_wall(epoch: Instant) -> TraceRecorder {
+        TraceRecorder { events: Some(Vec::new()), time_base: TimeBase::Wall(epoch) }
+    }
+
+    /// Current time on the recorder's base: wall seconds since the epoch
+    /// for [`TimeBase::Wall`]; 0.0 for [`TimeBase::Virtual`] (virtual
+    /// time lives in the engine's event queue, not here).
+    pub fn now_s(&self) -> f64 {
+        match self.time_base {
+            TimeBase::Virtual => 0.0,
+            TimeBase::Wall(epoch) => epoch.elapsed().as_secs_f64(),
+        }
     }
 
     #[inline]
@@ -129,16 +162,10 @@ pub fn to_json(events: &[TraceEvent]) -> Json {
     Json::obj(vec![("traceEvents", Json::Arr(rows))])
 }
 
-/// Write the trace file (creating parent directories).
+/// Write the trace file atomically (tmp + rename, creating parent
+/// directories) — a crash mid-flush cannot leave a truncated trace.
 pub fn write(path: &Path, events: &[TraceEvent]) -> Result<()> {
-    if let Some(parent) = path.parent() {
-        if !parent.as_os_str().is_empty() {
-            std::fs::create_dir_all(parent)
-                .with_context(|| format!("creating trace directory {}", parent.display()))?;
-        }
-    }
-    std::fs::write(path, to_json(events).to_string())
-        .with_context(|| format!("writing trace {}", path.display()))
+    crate::util::write_atomic(path, &to_json(events).to_string())
 }
 
 #[cfg(test)]
@@ -182,6 +209,17 @@ mod tests {
         assert_eq!(rows[0].get("ph").unwrap().as_str().unwrap(), "M");
         assert_eq!(rows[3].get("name").unwrap().as_str().unwrap(), "push");
         assert_eq!(rows[4].get("ph").unwrap().as_str().unwrap(), "i");
+    }
+
+    #[test]
+    fn wall_base_reports_monotone_now() {
+        let r = TraceRecorder::on_wall(Instant::now());
+        assert!(r.enabled());
+        let a = r.now_s();
+        let b = r.now_s();
+        assert!(a >= 0.0 && b >= a);
+        // A virtual-base recorder has no wall clock to consult.
+        assert_eq!(TraceRecorder::on().now_s(), 0.0);
     }
 
     #[test]

@@ -229,9 +229,34 @@ pub fn shard_update_summary(shard_updates: &[u64]) -> String {
     }
 }
 
+/// Minimum and maximum over the *finite* entries of a slice (`None` if no
+/// entry is finite). Axis scaling for the report plots: series legally
+/// carry NaN (empty sample windows) and a NaN must never poison an axis.
+pub fn finite_min_max(xs: &[f64]) -> Option<(f64, f64)> {
+    let mut out: Option<(f64, f64)> = None;
+    for &x in xs {
+        if !x.is_finite() {
+            continue;
+        }
+        out = Some(match out {
+            None => (x, x),
+            Some((lo, hi)) => (lo.min(x), hi.max(x)),
+        });
+    }
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+
+    #[test]
+    fn finite_min_max_skips_non_finite() {
+        assert_eq!(finite_min_max(&[]), None);
+        assert_eq!(finite_min_max(&[f64::NAN, f64::INFINITY]), None);
+        assert_eq!(finite_min_max(&[2.0, f64::NAN, -1.0, 5.0]), Some((-1.0, 5.0)));
+        assert_eq!(finite_min_max(&[3.0]), Some((3.0, 3.0)));
+    }
 
     #[test]
     fn churn_summary_renders_counts_and_recovery() {

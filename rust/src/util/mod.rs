@@ -12,6 +12,25 @@ pub mod json;
 pub mod prop;
 pub mod rng;
 
+/// Write `contents` to `path` atomically: write a sibling `.tmp` file,
+/// then rename over the target (the same crash-safety pattern
+/// [`crate::elastic::checkpoint`] uses). A crash mid-flush leaves the
+/// previous file intact instead of a truncated, unloadable one.
+pub fn write_atomic(path: &std::path::Path, contents: &str) -> anyhow::Result<()> {
+    use anyhow::Context;
+    if let Some(dir) = path.parent() {
+        if !dir.as_os_str().is_empty() {
+            std::fs::create_dir_all(dir)
+                .with_context(|| format!("creating directory {}", dir.display()))?;
+        }
+    }
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, contents).with_context(|| format!("writing {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("renaming {} into place", path.display()))?;
+    Ok(())
+}
+
 /// Format a `f64` duration in seconds as a human-readable string.
 pub fn fmt_secs(s: f64) -> String {
     if s < 1e-3 {
@@ -94,6 +113,20 @@ mod tests {
         assert_eq!(fmt_bytes(2.5e3), "2.5kB");
         assert_eq!(fmt_bytes(300.0e6), "300.0MB");
         assert_eq!(fmt_bytes(4.8e9), "4.80GB");
+    }
+
+    #[test]
+    fn write_atomic_creates_parents_and_replaces() {
+        let dir = std::env::temp_dir()
+            .join(format!("rudra_util_atomic_{}", std::process::id()))
+            .join("nested");
+        let path = dir.join("out.json");
+        write_atomic(&path, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "first");
+        write_atomic(&path, "second").unwrap();
+        assert_eq!(std::fs::read_to_string(&path).unwrap(), "second");
+        assert!(!path.with_extension("tmp").exists(), "tmp file must not linger");
+        std::fs::remove_dir_all(dir.parent().unwrap()).ok();
     }
 
     #[test]

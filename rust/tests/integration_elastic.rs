@@ -65,6 +65,7 @@ fn elastic_cfg(
         trace: false,
         trace_path: None,
         collect_metrics: false,
+        metrics_every: None,
     }
 }
 

@@ -49,6 +49,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         trace: false,
         trace_path: None,
         collect_metrics: false,
+        metrics_every: None,
     }
 }
 
@@ -249,6 +250,201 @@ fn traced_stop_and_resume_produces_well_formed_segments() {
         second.iter().any(|e| e.ts_us >= cut_us),
         "resumed spans should extend beyond the cut at {cut_us}µs"
     );
+}
+
+/// Time-series collection (`--metrics-every`) is as observational as the
+/// rest: a sampled run reproduces the quiet trajectory bit for bit across
+/// the protocol families and shard counts, and the series itself obeys
+/// its schema (windows over monotone virtual time, aligned arrays).
+#[test]
+fn series_sampled_runs_are_bit_identical_to_quiet_runs() {
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let quiet = run_timing(&cfg);
+
+            let mut series_cfg = cfg.clone();
+            series_cfg.metrics_every = Some(0.5);
+            let sampled = run_timing(&series_cfg);
+            let ctx = format!("{protocol:?} S={shards} series");
+            assert_same(&quiet, &sampled, &ctx);
+
+            // metrics_every alone arms a snapshot, and the series rides
+            // inside it
+            let m = sampled.metrics.expect("metrics_every implies a snapshot");
+            let series = m.get("series").unwrap();
+            assert_eq!(series.get("every_secs").unwrap().as_f64().unwrap(), 0.5, "{ctx}");
+            let t = series.get("t").unwrap().as_f64_vec().unwrap();
+            assert!(!t.is_empty(), "{ctx}: final_flush guarantees a sample");
+            assert!(t.windows(2).all(|w| w[0] < w[1]), "{ctx}: sample times advance: {t:?}");
+            for key in [
+                "mean_staleness",
+                "max_staleness",
+                "queue_depth",
+                "active_lambda",
+                "bytes_per_sec",
+                "barrier_wait_mean",
+                "loss_mean",
+            ] {
+                let col = series.get(key).unwrap().as_arr().unwrap();
+                assert_eq!(col.len(), t.len(), "{ctx}: {key} aligns with t");
+            }
+            assert!(series.get("epoch").is_ok(), "{ctx}: epoch sub-series present");
+            assert!(series.get("adaptive_n").is_ok(), "{ctx}: adaptive sub-series present");
+        }
+    }
+}
+
+/// The live engine's wall-clock trace (tentpole 2): spans arrive with the
+/// expected vocabulary, non-negative wall offsets, and per-lane monotone
+/// start times (learner stamps are causally ordered: compute → send →
+/// server receipt → reply → next compute).
+#[test]
+fn live_trace_spans_are_well_formed_over_wall_time() {
+    use rudra::coordinator::engine_live::{run_live, LiveConfig};
+    use rudra::coordinator::learner::{GradProvider, MockProvider};
+
+    let dim = 8;
+    let cfg = LiveConfig {
+        protocol: Protocol::NSoftsync { n: 1 },
+        mu: 4,
+        lambda: 3,
+        epochs: 3,
+        samples_per_epoch: 96,
+        shards: 1,
+        log_every: 0,
+        elastic: None,
+        compress: rudra::comm::codec::CodecSpec::None,
+        checkpoint_every: 0,
+        collect_metrics: false,
+        trace: true,
+        metrics_every: None,
+    };
+    let providers: Vec<Box<dyn GradProvider + Send>> = (0..cfg.lambda)
+        .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
+        .collect();
+    let r = run_live(
+        &cfg,
+        FlatVec::from_vec(vec![1.0; dim]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, dim),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+        providers,
+    )
+    .unwrap();
+    let events = r.trace.expect("trace was on");
+    let names = span_names(&events);
+    for expect in ["apply_update", "compute", "push"] {
+        assert!(names.contains(&expect), "missing {expect:?}, got {names:?}");
+    }
+    assert!(
+        events.iter().all(|e| e.ts_us >= 0.0 && e.dur_us >= 0.0),
+        "wall offsets from the run epoch are non-negative"
+    );
+    // per-lane causal order: each (pid, tid) lane's start times advance
+    let mut lanes: std::collections::BTreeMap<(u64, u64), f64> = std::collections::BTreeMap::new();
+    for e in &events {
+        let last = lanes.entry((e.pid, e.tid)).or_insert(0.0);
+        assert!(
+            e.ts_us >= *last,
+            "lane ({}, {}) went backwards: {} after {}",
+            e.pid,
+            e.tid,
+            e.ts_us,
+            last
+        );
+        *last = e.ts_us;
+    }
+    // and the rendered JSON is loadable trace-event format
+    Json::parse(&trace::to_json(&events).to_string()).expect("live trace re-parses");
+    // untraced runs stay exactly as quiet as before
+    let mut quiet_cfg = cfg.clone();
+    quiet_cfg.trace = false;
+    let providers2: Vec<Box<dyn GradProvider + Send>> = (0..quiet_cfg.lambda)
+        .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
+        .collect();
+    let r2 = run_live(
+        &quiet_cfg,
+        FlatVec::from_vec(vec![1.0; dim]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, dim),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+        providers2,
+    )
+    .unwrap();
+    assert!(r2.trace.is_none());
+}
+
+/// Per-point sweep observability (tentpole 3), tested through the same
+/// machinery `Sweep::run_point` uses — `run_indexed` workers each running
+/// a traced sim with its own per-slug output file. Every grid label gets
+/// a file, and the bytes are identical at any `jobs` value.
+#[test]
+fn sweep_style_per_point_files_exist_for_every_label_and_are_jobs_invariant() {
+    use rudra::config::RunConfig;
+    use rudra::harness::sweep::{point_slug, run_indexed};
+
+    let dir = std::env::temp_dir().join(format!("rudra_obs_sweep_{}", std::process::id()));
+    std::fs::remove_dir_all(&dir).ok();
+
+    // a small λ grid, like `sweep --lambdas 2,4`
+    let lambdas = [2usize, 4];
+    let slugs: Vec<String> = lambdas
+        .iter()
+        .map(|&lambda| {
+            let mut rc = RunConfig::default();
+            rc.mu = 4;
+            rc.lambda = lambda;
+            point_slug(&rc)
+        })
+        .collect();
+
+    let run_grid = |jobs: usize, sub: &str| -> Vec<(String, String)> {
+        let out = dir.join(sub);
+        let results = run_indexed(jobs, lambdas.len(), |i| {
+            let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+            cfg.lambda = lambdas[i];
+            cfg.trace = true;
+            cfg.trace_path = Some(out.join(format!("{}.trace.json", slugs[i])));
+            cfg.metrics_every = Some(0.5);
+            let r = run_timing(&cfg);
+            let m = r.metrics.expect("metrics_every arms the snapshot");
+            rudra::util::write_atomic(
+                &out.join(format!("{}.metrics.json", slugs[i])),
+                &m.to_string(),
+            )?;
+            Ok(())
+        });
+        results.unwrap();
+        slugs
+            .iter()
+            .map(|s| {
+                let trace =
+                    std::fs::read_to_string(out.join(format!("{s}.trace.json"))).unwrap();
+                let metrics =
+                    std::fs::read_to_string(out.join(format!("{s}.metrics.json"))).unwrap();
+                (trace, metrics)
+            })
+            .collect()
+    };
+
+    let serial = run_grid(1, "serial");
+    let parallel = run_grid(2, "parallel");
+    for (i, slug) in slugs.iter().enumerate() {
+        assert!(
+            Json::parse(&serial[i].0).is_ok() && Json::parse(&serial[i].1).is_ok(),
+            "{slug}: per-point files re-parse"
+        );
+        assert_eq!(serial[i], parallel[i], "{slug}: jobs-invariant bytes");
+    }
+    // no stray .tmp files survive the atomic writes
+    for sub in ["serial", "parallel"] {
+        for entry in std::fs::read_dir(dir.join(sub)).unwrap() {
+            let name = entry.unwrap().file_name().into_string().unwrap();
+            assert!(!name.ends_with(".tmp"), "leftover temp file {name}");
+        }
+    }
+    std::fs::remove_dir_all(&dir).ok();
 }
 
 /// The metrics snapshot must agree with the engine's own counts: one

@@ -54,6 +54,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         trace: false,
         trace_path: None,
         collect_metrics: false,
+        metrics_every: None,
     }
 }
 

@@ -59,6 +59,7 @@ fn straggler_cfg(
         trace: false,
         trace_path: None,
         collect_metrics: false,
+        metrics_every: None,
     }
 }
 

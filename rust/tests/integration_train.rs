@@ -108,6 +108,8 @@ fn live_engine_trains_below_chance() {
         compress: rudra::comm::codec::CodecSpec::None,
         checkpoint_every: 0,
         collect_metrics: false,
+        trace: false,
+        metrics_every: None,
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
