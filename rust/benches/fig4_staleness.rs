@@ -68,6 +68,7 @@ fn main() {
             trace_path: None,
             collect_metrics: false,
             metrics_every: None,
+            profile: false,
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

@@ -151,6 +151,14 @@ pub struct RunConfig {
     /// (sim/timing) or wall time (train), attached to the metrics
     /// snapshot under `"series"`. Off by default; purely observational.
     pub metrics_every: Option<f64>,
+    /// Critical-path profiler (JSON key `profile` / flag `--profile`).
+    /// Attributes every weight update's causal chain to categories
+    /// (compute, wire, barrier wait, …) with per-learner blame and
+    /// Amdahl-style what-if projections, attached to the metrics snapshot
+    /// under `"profile"` and read back by `rudra analyze`. Off by
+    /// default; purely observational (bit-identical trajectories), so —
+    /// like the other obs knobs — it never enters [`RunConfig::label`].
+    pub profile: bool,
 }
 
 impl Default for RunConfig {
@@ -187,6 +195,7 @@ impl Default for RunConfig {
             metrics_json: None,
             run_index: None,
             metrics_every: None,
+            profile: false,
         }
     }
 }
@@ -272,6 +281,7 @@ impl RunConfig {
                         _ => Some(v.as_f64()?),
                     }
                 }
+                "profile" => self.profile = v.as_bool()?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -347,6 +357,9 @@ impl RunConfig {
         }
         if let Some(v) = args.get("metrics-every") {
             self.metrics_every = secs_or_none(v)?;
+        }
+        if args.flag("profile") {
+            self.profile = true;
         }
         self.validate()
     }
@@ -799,6 +812,27 @@ mod tests {
                 "--metrics-every {bad} must be rejected"
             );
         }
+    }
+
+    /// `profile` layers like the other boolean obs knobs: JSON sets it,
+    /// the CLI flag turns it on, and it stays host-side (no label).
+    #[test]
+    fn profile_knob_layers_and_stays_out_of_the_label() {
+        let mut cfg = RunConfig::default();
+        assert!(!cfg.profile, "off by default");
+        cfg.apply_json(&Json::parse(r#"{"profile": true}"#).unwrap()).unwrap();
+        assert!(cfg.profile);
+        cfg.apply_json(&Json::parse(r#"{"profile": false}"#).unwrap()).unwrap();
+        assert!(!cfg.profile);
+        let args =
+            Args::parse(["--profile"].iter().map(|s| s.to_string()), &["profile"]).unwrap();
+        cfg.apply_args(&args).unwrap();
+        assert!(cfg.profile, "CLI flag arms it");
+        // host-side observation, not experiment identity
+        assert!(!cfg.label().contains("profile"), "{}", cfg.label());
+        // non-boolean values are rejected
+        let mut bad = RunConfig::default();
+        assert!(bad.apply_json(&Json::parse(r#"{"profile": 1}"#).unwrap()).is_err());
     }
 
     #[test]

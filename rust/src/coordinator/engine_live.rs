@@ -123,6 +123,12 @@ pub struct LiveConfig {
     /// *wall* seconds into the metrics snapshot (`--metrics-every`).
     /// `Some` implies a metrics snapshot even if `collect_metrics` is off.
     pub metrics_every: Option<f64>,
+    /// Accumulate a [`crate::obs::profile::WallProfiler`] attribution
+    /// (`--profile`): aggregate wall-clock category totals from the same
+    /// receipt-side stamps the trace uses — no critical-path claim (threads
+    /// overlap), so the profile rides as `mode: "aggregate"`. Implies a
+    /// metrics snapshot to ride in.
+    pub profile: bool,
 }
 
 /// Live-run output.
@@ -172,7 +178,8 @@ enum ToServer {
     /// accumulates. `compress none` ships it as `Dense`, which decodes
     /// without a copy. `t_compute` / `t_sent` are wall offsets from the
     /// run epoch stamped in the learner thread (compute start/end and
-    /// send time) — zeros when tracing is off, and never read then.
+    /// send time) — zeros when both tracing and profiling are off, and
+    /// never read then.
     Push {
         learner: usize,
         inc: u64,
@@ -370,7 +377,10 @@ fn run_live_inner(
     // threads stamp their own offsets against the shared epoch, the
     // single-threaded server loop records them on receipt.
     let mut rec = if cfg.trace { TraceRecorder::on_wall(start) } else { TraceRecorder::off() };
-    let trace_epoch = cfg.trace.then_some(start);
+    // The profiler consumes the same learner-side stamps the trace does, so
+    // either knob arms them (off = both zeros, never read).
+    let trace_epoch = (cfg.trace || cfg.profile).then_some(start);
+    let mut wprof = cfg.profile.then(|| crate::obs::profile::WallProfiler::new(cfg.lambda));
     let mut series: Option<SeriesRecorder> = cfg.metrics_every.map(SeriesRecorder::new);
     let mut bytes_in_total: f64 = 0.0;
 
@@ -500,6 +510,9 @@ fn run_live_inner(
                         if let Some(s) = &mut series {
                             s.note_barrier_wait(now_off - entered);
                         }
+                        if let Some(p) = &mut wprof {
+                            p.barrier_wait(now_off - entered);
+                        }
                         let _ = reply_txs[l]
                             .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
                     }
@@ -621,6 +634,10 @@ fn run_live_inner(
             rec.span("compute", PID_LEARNERS, learner as u64, t_compute.0, t_compute.1);
             rec.span("push", PID_LEARNERS, learner as u64, t_sent, rec.now_s());
         }
+        if let Some(p) = &mut wprof {
+            let wire = start.elapsed().as_secs_f64() - t_sent;
+            p.push(learner, t_compute.1 - t_compute.0, wire);
+        }
         last_heard[learner] = Instant::now();
         heard[learner] = true;
         last_progress = Instant::now();
@@ -643,6 +660,9 @@ fn run_live_inner(
         let outcome = server.push_encoded(learner, grad, ts)?;
         if outcome.updated {
             rec.instant("apply_update", PID_SHARDS, 0, rec.now_s());
+            if let Some(p) = &mut wprof {
+                p.commit(learner);
+            }
         }
 
         if cfg.protocol.is_barrier() {
@@ -664,6 +684,9 @@ fn run_live_inner(
                     for (l, entered) in barrier_waiting.drain(..) {
                         if let Some(s) = &mut series {
                             s.note_barrier_wait(now_off - entered);
+                        }
+                        if let Some(p) = &mut wprof {
+                            p.barrier_wait(now_off - entered);
                         }
                         let _ = reply_txs[l]
                             .send(ToLearner::Weights { theta: snap.clone(), ts: new_ts });
@@ -766,9 +789,9 @@ fn run_live_inner(
 
     // The live loop keeps no registry of its own (no virtual clock, no
     // event queue); the snapshot is assembled once from the server-side
-    // tallies, which exist regardless. A `metrics_every` series implies
-    // a snapshot to ride in, even with collect_metrics off.
-    let metrics = if cfg.collect_metrics || series.is_some() {
+    // tallies, which exist regardless. A `metrics_every` series or a
+    // profile implies a snapshot to ride in, even with collect_metrics off.
+    let metrics = if cfg.collect_metrics || series.is_some() || wprof.is_some() {
         let bytes_in: f64 = comm_bytes_by_learner.iter().sum();
         let mut snap = crate::obs::metrics::MetricsRegistry::default().snapshot(
             &server.staleness,
@@ -789,6 +812,10 @@ fn run_live_inner(
             };
             s.final_flush(start.elapsed().as_secs_f64(), &inputs);
             crate::obs::metrics::attach_series(&mut snap, s.to_json());
+        }
+        if let Some(p) = &wprof {
+            let profile = p.to_json(start.elapsed().as_secs_f64());
+            crate::obs::metrics::attach_profile(&mut snap, profile);
         }
         Some(snap)
     } else {
@@ -845,6 +872,7 @@ mod tests {
             collect_metrics: false,
             trace: false,
             metrics_every: None,
+            profile: false,
         }
     }
 

@@ -148,6 +148,12 @@ pub struct SimConfig {
     /// `"series"` (arms the registry by itself). Off by default; purely
     /// observational like the other obs knobs.
     pub metrics_every: Option<f64>,
+    /// Critical-path profiler ([`crate::obs::profile`]): exact
+    /// per-category runtime attribution, per-learner blame, and what-if
+    /// projections, attached to the metrics snapshot under `"profile"`
+    /// (arms the registry by itself). Off by default; purely
+    /// observational like the other obs knobs.
+    pub profile: bool,
 }
 
 impl SimConfig {
@@ -185,6 +191,7 @@ impl SimConfig {
             trace_path: None,
             collect_metrics: false,
             metrics_every: None,
+            profile: false,
         }
     }
 
@@ -724,7 +731,13 @@ impl<'a> SimEngine<'a> {
             ),
             random_armed: false,
             resumed: false,
-            obs: crate::obs::Obs::new(cfg.trace, cfg.collect_metrics, cfg.metrics_every, lambda),
+            obs: crate::obs::Obs::new(
+                cfg.trace,
+                cfg.collect_metrics,
+                cfg.metrics_every,
+                cfg.profile,
+                lambda,
+            ),
         }
     }
 
@@ -950,6 +963,16 @@ impl<'a> SimEngine<'a> {
             let inputs = self.series_inputs();
             self.obs.series_finish(now, &inputs);
         }
+        if self.obs.profile_enabled() {
+            // Per-shard ingress busy seconds (a pure read off the wire
+            // model) ride the profile as per-shard blame.
+            let shard_busy: Vec<f64> = self
+                .ps_eps
+                .iter()
+                .map(|&e| self.fabric.ingress_utilization(e, horizon) * horizon)
+                .collect();
+            self.obs.profile_finish(horizon, shard_busy);
+        }
         let metrics = self.obs.metrics_snapshot(
             &self.server.staleness,
             &self.server.shard_updates(),
@@ -998,7 +1021,8 @@ impl<'a> SimEngine<'a> {
     /// ([`crate::obs::runindex`]). Everything that shapes the trajectory
     /// participates; `stop_after_events`, `sim_checkpoint_path`,
     /// `max_updates`, and the obs knobs
-    /// (`trace`/`collect_metrics`/`metrics_every`) deliberately do not
+    /// (`trace`/`collect_metrics`/`metrics_every`/`profile`) deliberately
+    /// do not
     /// (a resume legitimately changes them — a traced resume of an
     /// untraced checkpoint is valid).
     pub fn config_fingerprint(cfg: &SimConfig) -> String {
@@ -1615,6 +1639,13 @@ impl<'a> SimEngine<'a> {
         self.root_bytes_in += bytes;
         let t = self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, bytes);
         self.obs.relay(leaf, now, t);
+        if self.obs.profile_enabled() {
+            // The relay span is keyed by leaf; the profiler needs it per
+            // carried gradient to walk the commit chain back through it.
+            for (l, _, _, _) in &batch {
+                self.obs.profile_relay(*l, now, t);
+            }
+        }
         self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch });
     }
 
@@ -1658,16 +1689,19 @@ impl<'a> SimEngine<'a> {
             Some(enc) => self.server.push_encoded(l, *enc, ts)?,
             None => self.server.push_gradient_timing_only(l, ts),
         };
-        self.after_update(now, outcome.clone())?;
+        self.after_update(now, Some(l), outcome.clone())?;
         Ok(outcome)
     }
 
     /// Post-applyUpdate bookkeeping shared by the push path and the
     /// membership-change quota flush: adv* broadcast history, periodic
-    /// checkpoints, and epoch-boundary stats/eval.
-    fn after_update(&mut self, now: f64, outcome: PushOutcome) -> Result<()> {
+    /// checkpoints, and epoch-boundary stats/eval. `by` names the learner
+    /// whose gradient triggered the outcome (None for quota flushes —
+    /// those commits have no causal chain to profile).
+    fn after_update(&mut self, now: f64, by: Option<usize>, outcome: PushOutcome) -> Result<()> {
         if outcome.updated {
             self.obs.apply_update(self.cfg.shards, now);
+            self.obs.profile_commit(by, now);
             if self.cfg.arch == Arch::AdvStar {
                 // Each update initiates a striped broadcast: the S root
                 // shards emit their θ slices (M bytes total) into their
@@ -1736,6 +1770,9 @@ impl<'a> SimEngine<'a> {
                 train_loss,
                 test_err.unwrap_or(f64::NAN),
             );
+            // After the commit accounting above, so the epoch delta tiles
+            // the commit windows exactly.
+            self.obs.profile_epoch(epoch as u64);
             // Adaptive-n control: close the loop at the epoch boundary —
             // measure the epoch's ⟨σ⟩ window and retune the softsync
             // splitting parameter on the server (between updates; the
@@ -2043,6 +2080,9 @@ impl<'a> SimEngine<'a> {
         if self.in_barrier[l] {
             self.in_barrier[l] = false;
             self.barrier.retain(|&x| x != l);
+            // the profiler's occupancy tracking must see the abandonment,
+            // or the dead learner would count as parked forever
+            self.obs.barrier_abandon(l, now);
         }
         self.on_membership_change(now, Some(l))?;
         Ok(())
@@ -2132,7 +2172,7 @@ impl<'a> SimEngine<'a> {
         let record = self.rescaler.record(now, &self.lr, self.server.protocol(), active)?;
         self.rescale_log.push(record);
         if let Some(outcome) = flush {
-            self.after_update(now, outcome)?;
+            self.after_update(now, None, outcome)?;
         }
         if self.cfg.protocol.is_barrier() {
             self.maybe_broadcast(now);

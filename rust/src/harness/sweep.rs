@@ -223,28 +223,49 @@ pub struct Sweep<'a> {
     /// stay bit-identical either way.
     pub collect_metrics: bool,
     /// Per-point trace directory (`sweep --trace DIR`): each grid point's
-    /// engine writes `<label>.trace.json` here from its own worker
-    /// thread — parallel points never share a file, so traces compose
-    /// with any `jobs` value. `None` = no sweep tracing.
+    /// engine writes `<idx>-<label>.trace.json` here ([`point_file_name`])
+    /// from its own worker thread — parallel points never share a file,
+    /// so traces compose with any `jobs` value. `None` = no sweep tracing.
     pub trace_dir: Option<std::path::PathBuf>,
     /// Per-point metrics directory (`sweep --metrics-json DIR`): each
-    /// point writes `<label>.metrics.json` (atomic tmp + rename) from its
-    /// worker thread. Setting it arms metrics collection for every point.
+    /// point writes `<idx>-<label>.metrics.json` (atomic tmp + rename)
+    /// from its worker thread. Setting it arms metrics collection for
+    /// every point.
     pub metrics_dir: Option<std::path::PathBuf>,
     /// Time-series sampling cadence handed to every point
     /// (`--metrics-every`, virtual seconds); layered over each point
     /// config's own knob.
     pub metrics_every: Option<f64>,
+    /// Critical-path profiling (`--profile`) for every point: each
+    /// point's attribution rides inside its metrics snapshot. Layered
+    /// over each point config's own knob; purely observational.
+    pub profile: bool,
 }
 
 /// Filesystem-safe slug for one grid point's output files: the point's
 /// label with anything outside `[A-Za-z0-9._-]` replaced by `_` (labels
 /// contain `·`, `*`, `:` — fine on a terminal, hostile in a path).
+///
+/// The mapping is lossy — labels differing only in punctuation collide —
+/// so grid output files are named through [`point_file_name`], which
+/// prefixes the grid index to keep every point's files distinct.
 pub fn point_slug(cfg: &RunConfig) -> String {
     cfg.label()
         .chars()
         .map(|c| if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') { c } else { '_' })
         .collect()
+}
+
+/// Output file name for one grid point: `"<idx>-<slug>.<kind>.json"`
+/// inside a sweep (the zero-padded grid index keeps colliding slugs —
+/// labels differing only in punctuation, or outright duplicate grid
+/// entries — from overwriting each other), or `"<slug>.<kind>.json"` for
+/// a standalone `run_point` with no grid position.
+pub fn point_file_name(index: Option<usize>, cfg: &RunConfig, kind: &str) -> String {
+    match index {
+        Some(i) => format!("{i:04}-{}.{kind}.json", point_slug(cfg)),
+        None => format!("{}.{kind}.json", point_slug(cfg)),
+    }
 }
 
 impl<'a> Sweep<'a> {
@@ -260,6 +281,7 @@ impl<'a> Sweep<'a> {
             trace_dir: None,
             metrics_dir: None,
             metrics_every: None,
+            profile: false,
         }
     }
 
@@ -267,6 +289,13 @@ impl<'a> Sweep<'a> {
     /// real gradients under simulated cluster timing, then overlay the
     /// paper-scale timing run (CIFAR10 geometry) for the time axis.
     pub fn run_point(&self, cfg: &RunConfig) -> Result<PointResult> {
+        self.run_point_at(None, cfg)
+    }
+
+    /// [`Sweep::run_point`] with a grid position: per-point output files
+    /// are index-prefixed ([`point_file_name`]) so colliding slugs never
+    /// overwrite each other.
+    fn run_point_at(&self, index: Option<usize>, cfg: &RunConfig) -> Result<PointResult> {
         let grad = self.ws.cnn_grad(cfg.mu)?;
         let eval = self.ws.cnn_eval()?;
         let mut provider =
@@ -297,13 +326,14 @@ impl<'a> Sweep<'a> {
             sim_checkpoint_path: None,
             trace: cfg.trace.is_some() || self.trace_dir.is_some(),
             trace_path: match &self.trace_dir {
-                Some(dir) => Some(dir.join(format!("{}.trace.json", point_slug(cfg)))),
+                Some(dir) => Some(dir.join(point_file_name(index, cfg, "trace"))),
                 None => cfg.trace.clone(),
             },
             collect_metrics: self.collect_metrics
                 || self.metrics_dir.is_some()
                 || cfg.collect_metrics(),
             metrics_every: self.metrics_every.or(cfg.metrics_every),
+            profile: self.profile || cfg.profile,
         };
         let fingerprint =
             crate::coordinator::engine_sim::SimEngine::config_fingerprint(&sim_cfg);
@@ -325,7 +355,7 @@ impl<'a> Sweep<'a> {
         // siblings, written from this worker thread (atomic tmp + rename)
         // so parallel points never contend on one file.
         if let (Some(dir), Some(m)) = (&self.metrics_dir, &result.metrics) {
-            let path = dir.join(format!("{}.metrics.json", point_slug(cfg)));
+            let path = dir.join(point_file_name(index, cfg, "metrics"));
             crate::util::write_atomic(&path, &m.to_string())?;
         }
 
@@ -341,6 +371,7 @@ impl<'a> Sweep<'a> {
             trace_path: None,
             collect_metrics: false,
             metrics_every: None,
+            profile: false,
             model: ModelCost::cifar10(),
             epochs: 140,
             eval_each_epoch: false,
@@ -395,7 +426,7 @@ impl<'a> Sweep<'a> {
     /// [`Sweep::jobs`] worker threads ([`run_indexed`]). Results are
     /// bit-identical to calling [`Sweep::run_point`] serially per config.
     pub fn run_points(&self, cfgs: &[RunConfig]) -> Result<Vec<PointResult>> {
-        run_indexed(self.jobs, cfgs.len(), |i| self.run_point(&cfgs[i]))
+        run_indexed(self.jobs, cfgs.len(), |i| self.run_point_at(Some(i), &cfgs[i]))
     }
 
     /// Run a (μ, λ) grid under one protocol family. For softsync, `n_of`
@@ -467,6 +498,7 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         trace_path: None,
         collect_metrics: false,
         metrics_every: None,
+        profile: false,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();
@@ -554,6 +586,29 @@ mod tests {
         let mut other = cfg.clone();
         other.lambda = 4;
         assert_ne!(slug, point_slug(&other), "grid points get distinct files");
+    }
+
+    // Regression (silent overwrite): the slug sanitizer maps every char
+    // outside [A-Za-z0-9._-] to '_', so labels differing only in
+    // punctuation — or grids listing the same point twice — collided on
+    // one `<slug>.trace.json` and the points overwrote each other's
+    // files. Grid output names now carry the grid index.
+    #[test]
+    fn point_file_names_are_distinct_even_when_slugs_collide() {
+        let mut cfg = RunConfig::default();
+        cfg.mu = 4;
+        cfg.lambda = 30;
+        // the same config at two grid positions: identical slugs...
+        assert_eq!(point_slug(&cfg), point_slug(&cfg.clone()));
+        // ...but distinct files once the index participates
+        let a = point_file_name(Some(3), &cfg, "trace");
+        let b = point_file_name(Some(7), &cfg, "trace");
+        assert_ne!(a, b, "colliding slugs must not share an output file");
+        assert!(a.starts_with("0003-") && a.ends_with(".trace.json"), "{a:?}");
+        assert!(b.starts_with("0007-") && b.ends_with(".trace.json"), "{b:?}");
+        // standalone points (no grid position) keep the bare slug name
+        let solo = point_file_name(None, &cfg, "metrics");
+        assert_eq!(solo, format!("{}.metrics.json", point_slug(&cfg)));
     }
 
     #[test]

@@ -7,6 +7,7 @@
 //! * `sweep`             — (μ, λ) grid under one protocol
 //! * `timing`            — timing-only simulation at paper scale
 //! * `runs`              — list/diff the persistent run index (runs.jsonl)
+//! * `analyze`           — bottleneck attribution from a profiled run (--profile)
 //! * `report`            — render the run index into a self-contained HTML dashboard
 //! * `bench-diff`        — perf-trajectory gate over two BENCH_hotpath.json
 
@@ -26,7 +27,7 @@ use rudra::stats::table::{f, pct, Table};
 use rudra::util::cli::Args;
 use rudra::util::fmt_secs;
 
-const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|report|bench-diff> [--flags]
+const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|analyze|report|bench-diff> [--flags]
   info                      show artifacts, platform, model sizes
   train                     live engine (real threads) on the synthetic CNN
                             (--synthetic: deterministic mock gradients, no
@@ -36,13 +37,21 @@ const USAGE: &str = "usage: rudra <info|train|sim|sweep|timing|runs|report|bench
   timing                    timing-only simulation at paper scale
   runs [list|diff I J]      query the persistent run index
                             (--index FILE [runs.jsonl], --filter SUBSTR)
+  analyze METRICS.json      bottleneck attribution for a profiled run: the
+                            per-category critical-path breakdown, per-learner
+                            blame, and Amdahl-style what-if projections
+                            (needs a run made with --profile)
+  analyze --index F I [J]   same over run-index records — one record, or a
+                            side-by-side diff of two
   report                    render the run index (+ embedded time series)
                             into one dependency-free HTML dashboard
                             (--index FILE [runs.jsonl], --out FILE
                             [report.html], --bench A.json,B.json for the
                             events/sec trajectory panel)
   bench-diff OLD NEW        compare two BENCH_hotpath.json baselines; exits
-                            non-zero on perf regressions (--threshold F)
+                            non-zero on perf regressions (--threshold F;
+                            --strict also fails on kernels or λ rungs
+                            removed from the new baseline)
 common flags: --protocol hardsync|async|<n>-softsync|backup:<b>
               --arch base|adv|adv*
               --mu N --lambda N --epochs N --seed N --lr F --config FILE
@@ -86,6 +95,13 @@ observability: --trace PATH (Chrome trace-event JSON — load in Perfetto/
               --run-index FILE (append one record per point to a JSONL
                 run index; query with `rudra runs`, render with
                 `rudra report`; JSON key run_index)
+              --profile (critical-path profiler: attribute every weight
+                update's causal chain to compute/wire/barrier/delivery
+                categories with per-learner blame and what-if
+                projections, attached to the metrics snapshot under
+                \"profile\" — read back with `rudra analyze`. sim/timing:
+                exact virtual-time attribution; train: aggregate
+                wall-clock totals; JSON key profile)
 scale/resume: --max-updates N (timing: hard cap on weight updates — quick
                 CI points at datacenter λ)
               --stop-after-events N (timing: halt after N processed events
@@ -111,7 +127,10 @@ fn run() -> Result<()> {
         return Ok(());
     }
     let cmd = argv.remove(0);
-    let args = Args::parse(argv, &["verbose", "eval-each-epoch", "no-eval", "synthetic"])?;
+    let args = Args::parse(
+        argv,
+        &["verbose", "eval-each-epoch", "no-eval", "synthetic", "profile", "strict"],
+    )?;
 
     let mut cfg = RunConfig::default();
     if let Some(path) = args.get("config") {
@@ -126,6 +145,7 @@ fn run() -> Result<()> {
         "sweep" => cmd_sweep(&cfg),
         "timing" => cmd_timing(&cfg, &args),
         "runs" => cmd_runs(&args),
+        "analyze" => cmd_analyze(&args),
         "report" => cmd_report(&args),
         "bench-diff" => cmd_bench_diff(&args),
         "help" | "--help" | "-h" => {
@@ -320,6 +340,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         collect_metrics: cfg.collect_metrics(),
         trace: cfg.trace.is_some(),
         metrics_every: cfg.metrics_every,
+        profile: cfg.profile,
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let result = run_live(&live_cfg, theta0, optimizer, cfg.lr_policy(), providers)?;
@@ -519,6 +540,7 @@ fn cmd_sweep(cfg: &RunConfig) -> Result<()> {
     sweep.trace_dir = cfg.trace.clone();
     sweep.metrics_dir = cfg.metrics_json.clone();
     sweep.metrics_every = cfg.metrics_every;
+    sweep.profile = cfg.profile;
     let points = mus.len() * lambdas.len();
     println!(
         "sweep: {points} grid points on {} worker thread(s)",
@@ -597,6 +619,7 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.trace_path = cfg.trace.clone();
     sim_cfg.collect_metrics = cfg.collect_metrics();
     sim_cfg.metrics_every = cfg.metrics_every;
+    sim_cfg.profile = cfg.profile;
     if args.get("max-updates").is_some() {
         sim_cfg.max_updates = Some(args.u64_or("max-updates", 0)?);
     }
@@ -769,6 +792,75 @@ fn cmd_runs(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rudra analyze` — bottleneck attribution for a profiled run: render
+/// the per-category critical-path breakdown, per-learner blame, and
+/// what-if projections from a `"profile"` section (produced with
+/// `--profile`), read either from a metrics snapshot file or from
+/// run-index records (`--index runs.jsonl I [J]` — two records render a
+/// side-by-side diff).
+fn cmd_analyze(args: &Args) -> Result<()> {
+    use rudra::obs::profile;
+    use rudra::util::json::Json;
+    if let Some(index) = args.get("index") {
+        use rudra::obs::runindex;
+        let index = std::path::PathBuf::from(index);
+        let records = runindex::load(&index)?;
+        let parse_idx = |pos: usize, name: &str| -> Result<usize> {
+            let raw = args.positional.get(pos).ok_or_else(|| {
+                anyhow::anyhow!("usage: rudra analyze --index {} I [J]", index.display())
+            })?;
+            let i: usize = raw
+                .parse()
+                .map_err(|_| anyhow::anyhow!("{name}: bad record number {raw:?}"))?;
+            anyhow::ensure!(
+                i < records.len(),
+                "{name}: record #{i} out of range (index has {} records)",
+                records.len()
+            );
+            Ok(i)
+        };
+        let profile_of = |i: usize| -> Result<&Json> {
+            records[i].metrics.as_ref().and_then(|m| m.opt("profile")).ok_or_else(|| {
+                anyhow::anyhow!(
+                    "record #{i} ({}) carries no profile — rerun it with --profile",
+                    records[i].label
+                )
+            })
+        };
+        let i = parse_idx(0, "I")?;
+        if args.positional.len() > 1 {
+            let j = parse_idx(1, "J")?;
+            println!("analyze #{i} vs #{j} ({}):", index.display());
+            let (a_title, b_title) =
+                (format!("#{i} {}", records[i].label), format!("#{j} {}", records[j].label));
+            for line in profile::render_diff(profile_of(i)?, &a_title, profile_of(j)?, &b_title)
+            {
+                println!("{line}");
+            }
+        } else {
+            for line in
+                profile::render_analysis(profile_of(i)?, &format!("#{i} {}", records[i].label))
+            {
+                println!("{line}");
+            }
+        }
+    } else {
+        let Some(path) = args.positional.first() else {
+            anyhow::bail!(
+                "usage: rudra analyze METRICS.json | rudra analyze --index runs.jsonl I [J]"
+            );
+        };
+        let metrics = Json::parse_file(std::path::Path::new(path))?;
+        let profile_j = metrics.opt("profile").ok_or_else(|| {
+            anyhow::anyhow!("{path}: no \"profile\" section — rerun the point with --profile")
+        })?;
+        for line in profile::render_analysis(profile_j, path) {
+            println!("{line}");
+        }
+    }
+    Ok(())
+}
+
 /// `rudra report` — render the run index (plus any time series embedded
 /// in its metrics snapshots) into one self-contained, dependency-free
 /// HTML dashboard.
@@ -803,12 +895,12 @@ fn cmd_bench_diff(args: &Args) -> Result<()> {
     let (Some(old_path), Some(new_path)) =
         (args.positional.first(), args.positional.get(1))
     else {
-        anyhow::bail!("usage: rudra bench-diff OLD.json NEW.json [--threshold F]");
+        anyhow::bail!("usage: rudra bench-diff OLD.json NEW.json [--threshold F] [--strict]");
     };
     let threshold = args.f64_or("threshold", benchdiff::DEFAULT_THRESHOLD)?;
     let old = Json::parse_file(std::path::Path::new(old_path))?;
     let new = Json::parse_file(std::path::Path::new(new_path))?;
-    let report = benchdiff::compare(&old, &new, threshold)?;
+    let report = benchdiff::compare(&old, &new, threshold, args.flag("strict"))?;
     for line in &report.lines {
         println!("{line}");
     }

@@ -12,6 +12,11 @@
 //! kernels — where a single cache miss moves the number — get a 3×
 //! floor. An injected 2× regression on a normal kernel must fail; a
 //! self-diff must pass.
+//!
+//! Coverage changes are first-class: kernels or sim-engine ladder rows
+//! present in only one baseline are always reported (a silently dropped
+//! benchmark looks exactly like a fixed one), and `--strict` turns
+//! removals into gate failures.
 
 use anyhow::Result;
 
@@ -47,8 +52,10 @@ fn kernel_threshold(old_secs: f64, base: f64) -> f64 {
 }
 
 /// Compare two bench baselines. `threshold` is the base slowdown ratio
-/// (see [`DEFAULT_THRESHOLD`]).
-pub fn compare(old: &Json, new: &Json, threshold: f64) -> Result<DiffReport> {
+/// (see [`DEFAULT_THRESHOLD`]); `strict` additionally fails the gate
+/// when a kernel or sim-engine ladder row vanishes from the new
+/// baseline (lost coverage instead of lost performance).
+pub fn compare(old: &Json, new: &Json, threshold: f64, strict: bool) -> Result<DiffReport> {
     anyhow::ensure!(threshold > 1.0, "threshold must be > 1.0, got {threshold}");
     let old_schema = old.get("schema")?.as_u64()?;
     let new_schema = new.get("schema")?.as_u64()?;
@@ -77,6 +84,11 @@ pub fn compare(old: &Json, new: &Json, threshold: f64) -> Result<DiffReport> {
             let old_secs = old_v.as_f64()?;
             let Some(new_v) = new_map.get(name) else {
                 report.lines.push(format!("kernel {name}: removed"));
+                if strict {
+                    report
+                        .regressions
+                        .push(format!("kernel {name}: removed from the new baseline (--strict)"));
+                }
                 continue;
             };
             let new_secs = new_v.as_f64()?;
@@ -122,7 +134,20 @@ pub fn compare(old: &Json, new: &Json, threshold: f64) -> Result<DiffReport> {
         }
     };
     let old_ladder = ladder(old)?;
-    for (lambda, new_eps) in ladder(new)? {
+    let new_ladder = ladder(new)?;
+    // A ladder row that exists only in the old baseline is lost coverage
+    // at that λ — say so instead of silently shrinking the gate.
+    for &(lambda, _) in &old_ladder {
+        if !new_ladder.iter().any(|&(l, _)| l == lambda) {
+            report.lines.push(format!("sim engine lambda={lambda}: removed"));
+            if strict {
+                report.regressions.push(format!(
+                    "sim engine lambda={lambda}: removed from the new baseline (--strict)"
+                ));
+            }
+        }
+    }
+    for (lambda, new_eps) in new_ladder {
         let Some(&(_, old_eps)) = old_ladder.iter().find(|(l, _)| *l == lambda) else {
             report.lines.push(format!("sim engine lambda={lambda}: new (no baseline)"));
             continue;
@@ -195,7 +220,7 @@ mod tests {
     #[test]
     fn self_diff_passes() {
         let b = baseline();
-        let report = compare(&b, &b, DEFAULT_THRESHOLD).unwrap();
+        let report = compare(&b, &b, DEFAULT_THRESHOLD, false).unwrap();
         assert!(report.passed(), "self-diff must pass: {:?}", report.regressions);
     }
 
@@ -203,7 +228,7 @@ mod tests {
     fn injected_2x_kernel_regression_fails() {
         let b = baseline();
         let worse = with_kernel(&b, "axpy 24k (CNN)", 4.0e-5);
-        let report = compare(&b, &worse, DEFAULT_THRESHOLD).unwrap();
+        let report = compare(&b, &worse, DEFAULT_THRESHOLD, false).unwrap();
         assert!(!report.passed());
         assert!(report.regressions[0].contains("axpy"), "{:?}", report.regressions);
     }
@@ -213,10 +238,10 @@ mod tests {
         // 2x on a 0.5 µs kernel is cache-miss noise, not a regression...
         let b = baseline();
         let jittery = with_kernel(&b, "event queue push+pop x1000", 1.0e-6);
-        assert!(compare(&b, &jittery, DEFAULT_THRESHOLD).unwrap().passed());
+        assert!(compare(&b, &jittery, DEFAULT_THRESHOLD, false).unwrap().passed());
         // ...but 4x still fails even there.
         let bad = with_kernel(&b, "event queue push+pop x1000", 2.0e-6);
-        assert!(!compare(&b, &bad, DEFAULT_THRESHOLD).unwrap().passed());
+        assert!(!compare(&b, &bad, DEFAULT_THRESHOLD, false).unwrap().passed());
     }
 
     #[test]
@@ -230,7 +255,7 @@ mod tests {
                 }
             }
         }
-        let report = compare(&b, &worse, DEFAULT_THRESHOLD).unwrap();
+        let report = compare(&b, &worse, DEFAULT_THRESHOLD, false).unwrap();
         assert!(!report.passed());
         assert!(report.regressions[0].contains("lambda=512"), "{:?}", report.regressions);
     }
@@ -242,6 +267,48 @@ mod tests {
         if let Json::Obj(top) = &mut full {
             top.insert("quick".to_string(), Json::Bool(false));
         }
-        assert!(compare(&b, &full, DEFAULT_THRESHOLD).is_err());
+        assert!(compare(&b, &full, DEFAULT_THRESHOLD, false).is_err());
+    }
+
+    /// A baseline missing a kernel and a λ rung from the other one: both
+    /// directions are reported as coverage changes, and only `strict`
+    /// turns the *removals* into gate failures.
+    #[test]
+    fn removed_rows_are_reported_and_fail_only_under_strict() {
+        let b = baseline();
+        let mut shrunk = b.clone();
+        if let Json::Obj(top) = &mut shrunk {
+            if let Some(Json::Obj(kernels)) = top.get_mut("kernels_secs_per_iter") {
+                kernels.remove("axpy 24k (CNN)");
+            }
+            if let Some(Json::Arr(rows)) = top.get_mut("sim_engine") {
+                rows.retain(|r| {
+                    r.get("lambda").and_then(|l| l.as_u64()).map(|l| l != 512).unwrap_or(true)
+                });
+            }
+        }
+        let report = compare(&b, &shrunk, DEFAULT_THRESHOLD, false).unwrap();
+        assert!(report.passed(), "loose mode only reports: {:?}", report.regressions);
+        assert!(
+            report.lines.iter().any(|l| l.contains("axpy") && l.contains("removed")),
+            "{:?}",
+            report.lines
+        );
+        assert!(
+            report.lines.iter().any(|l| l.contains("lambda=512") && l.contains("removed")),
+            "{:?}",
+            report.lines
+        );
+        let strict = compare(&b, &shrunk, DEFAULT_THRESHOLD, true).unwrap();
+        assert!(!strict.passed(), "strict mode fails on removals");
+        assert_eq!(strict.regressions.len(), 2, "{:?}", strict.regressions);
+        // additions are coverage *gains*: reported, never failed, even strict
+        let grown = compare(&shrunk, &b, DEFAULT_THRESHOLD, true).unwrap();
+        assert!(grown.passed(), "{:?}", grown.regressions);
+        assert!(
+            grown.lines.iter().any(|l| l.contains("new (no baseline)")),
+            "{:?}",
+            grown.lines
+        );
     }
 }

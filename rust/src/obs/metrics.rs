@@ -132,6 +132,15 @@ pub fn attach_series(snapshot: &mut Json, series: Json) {
     }
 }
 
+/// Attach a critical-path profile ([`super::profile`]) to a snapshot
+/// under the `"profile"` key — the same placement contract as
+/// [`attach_series`], shared by both engines and `rudra analyze`.
+pub fn attach_profile(snapshot: &mut Json, profile: Json) {
+    if let Json::Obj(m) = snapshot {
+        m.insert("profile".to_string(), profile);
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -189,5 +198,13 @@ mod tests {
         let mut snap = m.snapshot(&StalenessStats::default(), &[], &[], 0.0, 0.0);
         attach_series(&mut snap, Json::obj(vec![("schema", Json::num(1.0))]));
         assert_eq!(snap.get("series").unwrap().get("schema").unwrap().as_u64().unwrap(), 1);
+    }
+
+    #[test]
+    fn attach_profile_inserts_under_the_profile_key() {
+        let m = MetricsRegistry::default();
+        let mut snap = m.snapshot(&StalenessStats::default(), &[], &[], 0.0, 0.0);
+        attach_profile(&mut snap, Json::obj(vec![("schema", Json::num(1.0))]));
+        assert_eq!(snap.get("profile").unwrap().get("schema").unwrap().as_u64().unwrap(), 1);
     }
 }

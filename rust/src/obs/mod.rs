@@ -27,6 +27,7 @@
 
 pub mod benchdiff;
 pub mod metrics;
+pub mod profile;
 pub mod report;
 pub mod runindex;
 pub mod series;
@@ -45,6 +46,9 @@ pub struct Obs {
     /// Windowed time series (`metrics_every`), attached to the metrics
     /// snapshot when on.
     series: Option<SeriesRecorder>,
+    /// Critical-path profiler (`profile`), attached to the metrics
+    /// snapshot when on.
+    profile: Option<profile::Profiler>,
     /// Observer-side barrier bookkeeping: when each learner's gradient
     /// entered the barrier (engine state is not consulted at release
     /// time, so recording cannot perturb it).
@@ -62,24 +66,27 @@ impl Obs {
 
     /// `metrics_every` (seconds of engine time between series samples)
     /// arms the metrics registry too: a series without its enclosing
-    /// snapshot has nowhere to be serialized.
+    /// snapshot has nowhere to be serialized. `profile` arms it for the
+    /// same reason — the attribution rides inside the snapshot.
     pub fn new(
         trace_on: bool,
         metrics_on: bool,
         metrics_every: Option<f64>,
+        profile_on: bool,
         lambda: usize,
     ) -> Obs {
-        if !trace_on && !metrics_on && metrics_every.is_none() {
+        if !trace_on && !metrics_on && metrics_every.is_none() && !profile_on {
             return Obs::off();
         }
         Obs {
             trace: if trace_on { TraceRecorder::on() } else { TraceRecorder::off() },
-            metrics: if metrics_on || metrics_every.is_some() {
+            metrics: if metrics_on || metrics_every.is_some() || profile_on {
                 Some(MetricsRegistry::default())
             } else {
                 None
             },
             series: metrics_every.map(SeriesRecorder::new),
+            profile: profile_on.then(|| profile::Profiler::new(lambda)),
             barrier_entered: vec![0.0; lambda],
             round_waits: Vec::new(),
             active: true,
@@ -106,6 +113,9 @@ impl Obs {
         if let Some(m) = &mut self.metrics {
             m.count("compute_done");
         }
+        if let Some(p) = &mut self.profile {
+            p.note_compute(l, start, end);
+        }
     }
 
     /// Gradient push wire transit (learner → root or learner → leaf).
@@ -117,6 +127,9 @@ impl Obs {
         self.trace.span("push", trace::PID_LEARNERS, l as u64, start, end);
         if let Some(m) = &mut self.metrics {
             m.count("push_wire");
+        }
+        if let Some(p) = &mut self.profile {
+            p.note_push(l, start, end);
         }
     }
 
@@ -142,6 +155,9 @@ impl Obs {
         if let Some(m) = &mut self.metrics {
             m.count("pull");
         }
+        if let Some(p) = &mut self.profile {
+            p.note_deliver(l, start, end);
+        }
     }
 
     /// Broadcast delivery span (root/leaf egress → learner).
@@ -153,6 +169,9 @@ impl Obs {
         self.trace.span("broadcast", trace::PID_LEARNERS, l as u64, start, end);
         if let Some(m) = &mut self.metrics {
             m.count("broadcast");
+        }
+        if let Some(p) = &mut self.profile {
+            p.note_deliver(l, start, end);
         }
     }
 
@@ -204,6 +223,9 @@ impl Obs {
         if let Some(e) = self.barrier_entered.get_mut(l) {
             *e = now;
         }
+        if let Some(p) = &mut self.profile {
+            p.barrier_enter(l, now);
+        }
     }
 
     /// The closing broadcast released learner `l` from the barrier.
@@ -220,6 +242,9 @@ impl Obs {
         if let Some(s) = &mut self.series {
             s.note_barrier_wait(now - entered);
         }
+        if let Some(p) = &mut self.profile {
+            p.barrier_leave(l, now);
+        }
     }
 
     /// All releases for the current round are in; fold them into the
@@ -233,6 +258,58 @@ impl Obs {
             m.barrier_round(&self.round_waits);
         }
         self.round_waits.clear();
+    }
+
+    /// Whether the critical-path profiler is armed (gates the engine
+    /// sites that exist only for profiling, like the per-gradient relay
+    /// association loop).
+    #[inline]
+    pub fn profile_enabled(&self) -> bool {
+        self.profile.is_some()
+    }
+
+    /// Associate a relay hop with the learner whose gradient it carries
+    /// (the [`Obs::relay`] span is keyed by leaf, not learner).
+    #[inline]
+    pub fn profile_relay(&mut self, l: usize, start: f64, end: f64) {
+        if let Some(p) = &mut self.profile {
+            p.note_relay(l, start, end);
+        }
+    }
+
+    /// A weight update committed at `now`, triggered by learner `by`
+    /// (None for membership-change flushes).
+    #[inline]
+    pub fn profile_commit(&mut self, by: Option<usize>, now: f64) {
+        if let Some(p) = &mut self.profile {
+            p.commit(by, now);
+        }
+    }
+
+    /// Epoch boundary crossed (records the per-epoch category delta).
+    #[inline]
+    pub fn profile_epoch(&mut self, epoch: u64) {
+        if let Some(p) = &mut self.profile {
+            p.epoch(epoch);
+        }
+    }
+
+    /// A parked learner was killed: its barrier occupancy ends without a
+    /// release, so the profiler must not count it parked forever.
+    #[inline]
+    pub fn barrier_abandon(&mut self, l: usize, now: f64) {
+        if let Some(p) = &mut self.profile {
+            p.barrier_leave(l, now);
+        }
+    }
+
+    /// End of run: attribute the tail past the last commit and record
+    /// per-shard ingress busy seconds. Call before
+    /// [`Obs::metrics_snapshot`].
+    pub fn profile_finish(&mut self, now: f64, shard_busy: Vec<f64>) {
+        if let Some(p) = &mut self.profile {
+            p.finish(now, shard_busy);
+        }
     }
 
     /// Event-queue depth gauge (called per loop iteration; a no-op
@@ -314,6 +391,9 @@ impl Obs {
             if let Some(s) = &self.series {
                 metrics::attach_series(&mut snap, s.to_json());
             }
+            if let Some(p) = &self.profile {
+                metrics::attach_profile(&mut snap, p.to_json());
+            }
             snap
         })
     }
@@ -343,7 +423,7 @@ mod tests {
 
     #[test]
     fn barrier_waits_span_entry_to_release() {
-        let mut obs = Obs::new(true, true, None, 2);
+        let mut obs = Obs::new(true, true, None, false, 2);
         obs.barrier_enter(0, 1.0);
         obs.barrier_enter(1, 3.0);
         obs.barrier_release(0, 4.0);
@@ -364,7 +444,7 @@ mod tests {
 
     #[test]
     fn trace_only_still_skips_metrics() {
-        let mut obs = Obs::new(true, false, None, 1);
+        let mut obs = Obs::new(true, false, None, false, 1);
         obs.compute(0, 0.0, 0.5);
         assert!(obs.metrics_snapshot(&Default::default(), &[], &[], 0.0, 0.0).is_none());
         assert_eq!(obs.take_trace().unwrap().len(), 1);
@@ -372,7 +452,7 @@ mod tests {
 
     #[test]
     fn metrics_every_arms_the_registry_and_attaches_series() {
-        let mut obs = Obs::new(false, false, Some(1.0), 2);
+        let mut obs = Obs::new(false, false, Some(1.0), false, 2);
         assert!(obs.active() && obs.series_enabled());
         let inputs = SeriesInputs {
             queue_depth: 5,
@@ -396,5 +476,29 @@ mod tests {
             vec![1]
         );
         assert_eq!(series.get("mean_staleness").unwrap().as_f64_vec().unwrap()[0], 2.0);
+    }
+
+    #[test]
+    fn profile_alone_arms_the_registry_and_attaches_the_profile() {
+        let mut obs = Obs::new(false, false, None, true, 2);
+        assert!(obs.active() && obs.profile_enabled());
+        obs.compute(0, 0.0, 2.0);
+        obs.push(0, 2.0, 3.0);
+        obs.profile_commit(Some(0), 3.0);
+        obs.profile_epoch(1);
+        obs.profile_finish(3.5, vec![0.25]);
+        let snap = obs
+            .metrics_snapshot(&Default::default(), &[], &[], 0.0, 0.0)
+            .expect("profile alone must arm the registry");
+        let p = snap.get("profile").unwrap();
+        assert_eq!(p.get("mode").unwrap().as_str().unwrap(), "critical_path");
+        let total = p.get("total_secs").unwrap().as_f64().unwrap();
+        let cats = p.get("categories").unwrap();
+        let sum: f64 = profile::CATEGORY_NAMES
+            .iter()
+            .map(|&n| cats.get(n).unwrap().as_f64().unwrap())
+            .sum();
+        assert!((sum - total).abs() < 1e-9, "partition must be exact: {sum} vs {total}");
+        assert!(obs.take_trace().is_none(), "profile must not arm tracing");
     }
 }

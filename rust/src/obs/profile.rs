@@ -1,0 +1,925 @@
+//! Critical-path profiler: exact per-category attribution of sim
+//! runtime, per-learner blame, and Amdahl-style what-if projections.
+//!
+//! The discrete-event engine already knows the causal chain behind every
+//! weight update — broadcast receipt → compute → push wire → barrier or
+//! quota wait → shard apply, plus relay hops for the Adv\* trees. The
+//! profiler replays that chain *backwards* from each commit: the window
+//! between consecutive commits is the critical path of that update, and
+//! walking the triggering learner's most recent spans downstream →
+//! upstream partitions the window into categories **exactly** (the slices
+//! are constructed to tile `[last_commit, now]` with no gaps and no
+//! overlap, so the category totals sum to the final virtual time to the
+//! last bit — an invariant the integration tests pin at 1e-9).
+//!
+//! Categories:
+//!
+//! * `compute` — mini-batch gradient computation on the critical chain.
+//! * `push_wire` — gradient transit, learner → root (or learner → leaf).
+//! * `relay_wire` — leaf-aggregator relay hop (Adv\* only).
+//! * `barrier_wait` — any non-wire critical time during which at least
+//!   one *other* learner sat parked in a sync barrier. Hardsync rounds
+//!   convert straggler compute into this category; 1-softsync never
+//!   parks anyone, so its share is exactly zero.
+//! * `weight_delivery` — broadcast/pull transit of fresh weights back to
+//!   the critical learner.
+//! * `pipeline_wait` — gaps inside the chain (gradient queued at a leaf
+//!   before its relay departed, compute finished before its push left).
+//! * `other` — critical time not covered by the chain (quota waits
+//!   between async commits, scheduling slack, the pre-chain remainder).
+//!
+//! Blame: the whole inter-commit window is charged to the learner whose
+//! arrival closed it — stragglers accumulate wall share for free.
+//! What-ifs are subset subtractions of the partition, so every
+//! projection is guaranteed `0 ≤ whatif ≤ total`.
+//!
+//! Off by default (`profile` / `--profile`), one branch per site when
+//! off, and purely observational: profile-on runs are bit-identical to
+//! quiet runs (property-tested in `tests/integration_obs.rs`).
+
+use crate::util::json::Json;
+
+/// Attribution categories, in report order.
+pub const CATEGORY_NAMES: [&str; 7] = [
+    "compute",
+    "push_wire",
+    "relay_wire",
+    "barrier_wait",
+    "weight_delivery",
+    "pipeline_wait",
+    "other",
+];
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Cat {
+    Compute,
+    PushWire,
+    RelayWire,
+    BarrierWait,
+    WeightDelivery,
+    PipelineWait,
+    Other,
+}
+
+/// Per-category accumulated seconds.
+#[derive(Debug, Default, Clone, Copy, PartialEq)]
+pub struct Categories {
+    pub compute: f64,
+    pub push_wire: f64,
+    pub relay_wire: f64,
+    pub barrier_wait: f64,
+    pub weight_delivery: f64,
+    pub pipeline_wait: f64,
+    pub other: f64,
+}
+
+impl Categories {
+    fn add(&mut self, cat: Cat, secs: f64) {
+        match cat {
+            Cat::Compute => self.compute += secs,
+            Cat::PushWire => self.push_wire += secs,
+            Cat::RelayWire => self.relay_wire += secs,
+            Cat::BarrierWait => self.barrier_wait += secs,
+            Cat::WeightDelivery => self.weight_delivery += secs,
+            Cat::PipelineWait => self.pipeline_wait += secs,
+            Cat::Other => self.other += secs,
+        }
+    }
+
+    pub fn total(&self) -> f64 {
+        self.compute
+            + self.push_wire
+            + self.relay_wire
+            + self.barrier_wait
+            + self.weight_delivery
+            + self.pipeline_wait
+            + self.other
+    }
+
+    fn minus(&self, other: &Categories) -> Categories {
+        Categories {
+            compute: self.compute - other.compute,
+            push_wire: self.push_wire - other.push_wire,
+            relay_wire: self.relay_wire - other.relay_wire,
+            barrier_wait: self.barrier_wait - other.barrier_wait,
+            weight_delivery: self.weight_delivery - other.weight_delivery,
+            pipeline_wait: self.pipeline_wait - other.pipeline_wait,
+            other: self.other - other.other,
+        }
+    }
+
+    fn to_json(self) -> Json {
+        Json::obj(vec![
+            ("compute", Json::num(self.compute)),
+            ("push_wire", Json::num(self.push_wire)),
+            ("relay_wire", Json::num(self.relay_wire)),
+            ("barrier_wait", Json::num(self.barrier_wait)),
+            ("weight_delivery", Json::num(self.weight_delivery)),
+            ("pipeline_wait", Json::num(self.pipeline_wait)),
+            ("other", Json::num(self.other)),
+        ])
+    }
+}
+
+/// Most recent chain spans per learner, recorded as the engine schedules
+/// the corresponding events. `(start, end)` with `end <= start` meaning
+/// "not seen yet".
+#[derive(Debug, Default, Clone, Copy)]
+struct Chain {
+    deliver: (f64, f64),
+    compute: (f64, f64),
+    push: (f64, f64),
+    relay: (f64, f64),
+}
+
+/// The profiler proper. All inputs are virtual-time stamps the engine
+/// already computes; nothing here reads engine RNGs or reorders events.
+#[derive(Debug)]
+pub struct Profiler {
+    chains: Vec<Chain>,
+    last_commit: f64,
+    cats: Categories,
+    /// Cumulative categories at the last epoch boundary.
+    epoch_mark: Categories,
+    epochs: Vec<(u64, Categories)>,
+    blame_secs: Vec<f64>,
+    blame_commits: Vec<u64>,
+    /// Barrier occupancy since the last commit: closed intervals plus the
+    /// open one (while any learner is parked).
+    parked: Vec<bool>,
+    parked_count: usize,
+    busy: Vec<(f64, f64)>,
+    busy_open: Option<f64>,
+    /// All-learner compute span statistics (for the balanced-learners
+    /// projection) and the raw critical compute actually claimed.
+    compute_span_sum: f64,
+    compute_span_count: u64,
+    crit_compute_raw: f64,
+    crit_compute_commits: u64,
+    updates: u64,
+    total: f64,
+    shard_busy: Vec<f64>,
+}
+
+impl Profiler {
+    pub fn new(lambda: usize) -> Profiler {
+        Profiler {
+            chains: vec![Chain::default(); lambda],
+            last_commit: 0.0,
+            cats: Categories::default(),
+            epoch_mark: Categories::default(),
+            epochs: Vec::new(),
+            blame_secs: vec![0.0; lambda],
+            blame_commits: vec![0; lambda],
+            parked: vec![false; lambda],
+            parked_count: 0,
+            busy: Vec::new(),
+            busy_open: None,
+            compute_span_sum: 0.0,
+            compute_span_count: 0,
+            crit_compute_raw: 0.0,
+            crit_compute_commits: 0,
+            updates: 0,
+            total: 0.0,
+            shard_busy: Vec::new(),
+        }
+    }
+
+    fn chain_mut(&mut self, l: usize) -> Option<&mut Chain> {
+        self.chains.get_mut(l)
+    }
+
+    pub fn note_deliver(&mut self, l: usize, start: f64, end: f64) {
+        if let Some(c) = self.chain_mut(l) {
+            c.deliver = (start, end);
+        }
+    }
+
+    pub fn note_compute(&mut self, l: usize, start: f64, end: f64) {
+        if end > start {
+            self.compute_span_sum += end - start;
+            self.compute_span_count += 1;
+        }
+        if let Some(c) = self.chain_mut(l) {
+            c.compute = (start, end);
+        }
+    }
+
+    pub fn note_push(&mut self, l: usize, start: f64, end: f64) {
+        if let Some(c) = self.chain_mut(l) {
+            c.push = (start, end);
+        }
+    }
+
+    pub fn note_relay(&mut self, l: usize, start: f64, end: f64) {
+        if let Some(c) = self.chain_mut(l) {
+            c.relay = (start, end);
+        }
+    }
+
+    pub fn barrier_enter(&mut self, l: usize, now: f64) {
+        if let Some(p) = self.parked.get_mut(l) {
+            if !*p {
+                *p = true;
+                self.parked_count += 1;
+                if self.parked_count == 1 {
+                    self.busy_open = Some(now);
+                }
+            }
+        }
+    }
+
+    /// Release or abandonment (a parked learner was killed) — both end
+    /// the learner's occupancy.
+    pub fn barrier_leave(&mut self, l: usize, now: f64) {
+        if let Some(p) = self.parked.get_mut(l) {
+            if *p {
+                *p = false;
+                self.parked_count -= 1;
+                if self.parked_count == 0 {
+                    if let Some(s) = self.busy_open.take() {
+                        if now > s {
+                            self.busy.push((s, now));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Busy intervals covering `[last_commit, now]`, including the
+    /// still-open one.
+    fn busy_upto(&self, now: f64) -> Vec<(f64, f64)> {
+        let mut v = self.busy.clone();
+        if let Some(s) = self.busy_open {
+            if now > s {
+                v.push((s, now));
+            }
+        }
+        v
+    }
+
+    /// One weight update committed at `now`, triggered by learner `by`
+    /// (None for membership-change flushes, which have no causal chain).
+    pub fn commit(&mut self, by: Option<usize>, now: f64) {
+        let c = self.last_commit;
+        if now < c {
+            return;
+        }
+        let slices = self.slice_window(by, c, now);
+        self.accumulate(&slices, now);
+        if let Some(l) = by {
+            if let Some(b) = self.blame_secs.get_mut(l) {
+                *b += now - c;
+            }
+            if let Some(b) = self.blame_commits.get_mut(l) {
+                *b += 1;
+            }
+        }
+        self.updates += 1;
+        self.last_commit = now;
+        self.busy.clear();
+        if self.parked_count > 0 {
+            self.busy_open = Some(now);
+        }
+    }
+
+    /// Epoch boundary: snapshot the cumulative categories and record the
+    /// delta since the previous boundary. Called right after the commit
+    /// that completed the epoch, so the epoch rows tile the commit
+    /// windows exactly.
+    pub fn epoch(&mut self, epoch: u64) {
+        let delta = self.cats.minus(&self.epoch_mark);
+        self.epochs.push((epoch, delta));
+        self.epoch_mark = self.cats;
+    }
+
+    /// End of run at virtual time `now`: attribute the tail past the
+    /// last commit, store per-shard ingress busy seconds, and freeze the
+    /// total.
+    pub fn finish(&mut self, now: f64, shard_busy: Vec<f64>) {
+        let c = self.last_commit;
+        if now > c {
+            let slices = self.slice_window(None, c, now);
+            self.accumulate(&slices, now);
+            self.last_commit = now;
+        }
+        self.busy.clear();
+        self.busy_open = None;
+        self.total = self.total.max(now);
+        self.shard_busy = shard_busy;
+    }
+
+    /// Partition `[c, now]` into raw category slices by walking the
+    /// triggering learner's chain downstream → upstream. The slices tile
+    /// the window exactly: each claim advances a cursor monotonically
+    /// from `now` toward `c`, and the remainder is `other`.
+    fn slice_window(&self, by: Option<usize>, c: f64, now: f64) -> Vec<(Cat, f64, f64)> {
+        let mut slices: Vec<(Cat, f64, f64)> = Vec::new();
+        let mut cursor = now;
+        {
+            let mut claim = |cat: Cat, from: f64| {
+                let s = from.max(c).min(cursor);
+                if cursor > s {
+                    slices.push((cat, s, cursor));
+                    cursor = s;
+                }
+            };
+            if let Some(ch) = by.and_then(|l| self.chains.get(l)) {
+                // Terminal relay hop (Adv* commits land via RelayAtRoot);
+                // a relay ending before the commit instant is a stale
+                // stamp from an earlier round and is skipped.
+                let (r0, r1) = ch.relay;
+                if r1 > r0 && r1 >= now - 1e-12 {
+                    claim(Cat::RelayWire, r0);
+                }
+                let (p0, p1) = ch.push;
+                if p1 > p0 && p1 > c {
+                    claim(Cat::PipelineWait, p1);
+                    claim(Cat::PushWire, p0);
+                }
+                let (c0, c1) = ch.compute;
+                if c1 > c0 && c1 > c {
+                    claim(Cat::PipelineWait, c1);
+                    claim(Cat::Compute, c0);
+                }
+                let (d0, d1) = ch.deliver;
+                if d1 > d0 && d1 > c {
+                    claim(Cat::Other, d1);
+                    claim(Cat::WeightDelivery, d0);
+                }
+            }
+        }
+        if cursor > c {
+            slices.push((Cat::Other, c, cursor));
+        }
+        slices
+    }
+
+    /// Fold raw slices into the category totals, reassigning the parts of
+    /// non-wire slices that overlap barrier occupancy to `barrier_wait`
+    /// (wire transit is wire transit whether or not someone is parked).
+    fn accumulate(&mut self, slices: &[(Cat, f64, f64)], now: f64) {
+        let busy = self.busy_upto(now);
+        let mut saw_compute = false;
+        for &(cat, s, e) in slices {
+            let len = e - s;
+            if cat == Cat::PushWire || cat == Cat::RelayWire {
+                self.cats.add(cat, len);
+                continue;
+            }
+            if cat == Cat::Compute {
+                self.crit_compute_raw += len;
+                saw_compute = true;
+            }
+            let mut overlapped = 0.0;
+            for &(bs, be) in &busy {
+                let ov = e.min(be) - s.max(bs);
+                if ov > 0.0 {
+                    overlapped += ov;
+                }
+            }
+            let overlapped = overlapped.min(len);
+            self.cats.add(Cat::BarrierWait, overlapped);
+            self.cats.add(cat, len - overlapped);
+        }
+        if saw_compute {
+            self.crit_compute_commits += 1;
+        }
+    }
+
+    /// What-if projections: each subtracts a subset of the partition, so
+    /// every value lies in `[0, total]`.
+    fn whatif(&self) -> (f64, f64, f64, f64) {
+        let t = self.total;
+        let c = &self.cats;
+        let zero_wire = t - c.push_wire - c.relay_wire - c.weight_delivery;
+        let zero_barrier = t - c.barrier_wait;
+        // Perfectly balanced learners: barrier waits vanish and critical
+        // compute spans shrink to the all-learner mean; the excess is
+        // capped at the compute seconds still attributed post-override.
+        let mean_span = if self.compute_span_count > 0 {
+            self.compute_span_sum / self.compute_span_count as f64
+        } else {
+            0.0
+        };
+        let expected = mean_span * self.crit_compute_commits as f64;
+        let excess = (self.crit_compute_raw - expected).max(0.0).min(c.compute);
+        let balanced = (t - c.barrier_wait - excess).max(0.0);
+        let fast_root = t - c.relay_wire - c.weight_delivery;
+        (zero_wire, zero_barrier, balanced, fast_root)
+    }
+
+    /// Serialize for the metrics snapshot (`"profile"` key). `timebase`
+    /// is `"sim"` and `mode` `"critical_path"`: the live engine's
+    /// aggregate wall-clock variant marks itself differently so readers
+    /// never confuse exact partitions with overlapping thread sums.
+    pub fn to_json(&self) -> Json {
+        let (zero_wire, zero_barrier, balanced, fast_root) = self.whatif();
+        let epochs: Vec<Json> = self
+            .epochs
+            .iter()
+            .map(|(e, cats)| {
+                Json::obj(vec![
+                    ("epoch", Json::num(*e as f64)),
+                    ("categories", cats.to_json()),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("timebase", Json::str("sim")),
+            ("mode", Json::str("critical_path")),
+            ("total_secs", Json::num(self.total)),
+            ("updates", Json::num(self.updates as f64)),
+            ("categories", self.cats.to_json()),
+            ("epochs", Json::Arr(epochs)),
+            (
+                "blame",
+                Json::obj(vec![
+                    ("learner_secs", Json::arr_f64(&self.blame_secs)),
+                    (
+                        "learner_commits",
+                        Json::Arr(
+                            self.blame_commits.iter().map(|&c| Json::num(c as f64)).collect(),
+                        ),
+                    ),
+                    ("shard_busy_secs", Json::arr_f64(&self.shard_busy)),
+                ]),
+            ),
+            (
+                "whatif",
+                Json::obj(vec![
+                    ("zero_wire_secs", Json::num(zero_wire)),
+                    ("zero_barrier_secs", Json::num(zero_barrier)),
+                    ("balanced_learners_secs", Json::num(balanced)),
+                    ("fast_root_secs", Json::num(fast_root)),
+                ]),
+            ),
+        ])
+    }
+}
+
+/// Aggregate wall-clock attribution for the live engine. OS threads
+/// overlap, so there is no single critical path — sums here are
+/// per-category wall seconds *summed across learners* and the JSON marks
+/// itself `mode: "aggregate"` / `timebase: "wall"` to keep readers
+/// honest.
+#[derive(Debug)]
+pub struct WallProfiler {
+    compute: f64,
+    push_wire: f64,
+    barrier_wait: f64,
+    blame_secs: Vec<f64>,
+    blame_commits: Vec<u64>,
+    updates: u64,
+}
+
+impl WallProfiler {
+    pub fn new(lambda: usize) -> WallProfiler {
+        WallProfiler {
+            compute: 0.0,
+            push_wire: 0.0,
+            barrier_wait: 0.0,
+            blame_secs: vec![0.0; lambda],
+            blame_commits: vec![0; lambda],
+            updates: 0,
+        }
+    }
+
+    /// One gradient receipt: compute span + wire transit (send → server
+    /// receipt), charged to the pushing learner.
+    pub fn push(&mut self, l: usize, compute_secs: f64, wire_secs: f64) {
+        let compute_secs = compute_secs.max(0.0);
+        let wire_secs = wire_secs.max(0.0);
+        self.compute += compute_secs;
+        self.push_wire += wire_secs;
+        if let Some(b) = self.blame_secs.get_mut(l) {
+            *b += compute_secs + wire_secs;
+        }
+    }
+
+    pub fn commit(&mut self, l: usize) {
+        self.updates += 1;
+        if let Some(b) = self.blame_commits.get_mut(l) {
+            *b += 1;
+        }
+    }
+
+    pub fn barrier_wait(&mut self, secs: f64) {
+        self.barrier_wait += secs.max(0.0);
+    }
+
+    pub fn to_json(&self, wall_secs: f64) -> Json {
+        let cats = Categories {
+            compute: self.compute,
+            push_wire: self.push_wire,
+            barrier_wait: self.barrier_wait,
+            ..Categories::default()
+        };
+        Json::obj(vec![
+            ("schema", Json::num(1.0)),
+            ("timebase", Json::str("wall")),
+            ("mode", Json::str("aggregate")),
+            ("total_secs", Json::num(wall_secs)),
+            ("updates", Json::num(self.updates as f64)),
+            ("categories", cats.to_json()),
+            ("epochs", Json::Arr(Vec::new())),
+            (
+                "blame",
+                Json::obj(vec![
+                    ("learner_secs", Json::arr_f64(&self.blame_secs)),
+                    (
+                        "learner_commits",
+                        Json::Arr(
+                            self.blame_commits.iter().map(|&c| Json::num(c as f64)).collect(),
+                        ),
+                    ),
+                    ("shard_busy_secs", Json::arr_f64(&[])),
+                ]),
+            ),
+        ])
+    }
+}
+
+// ---------------------------------------------------------------------
+// `rudra analyze` rendering: plain-text attribution tables over the
+// profile JSON (from a metrics file or a run-index record).
+// ---------------------------------------------------------------------
+
+fn get_f64(profile: &Json, path: &[&str]) -> Option<f64> {
+    let mut v = profile;
+    for key in path {
+        v = v.opt(key)?;
+    }
+    v.as_f64().ok()
+}
+
+/// Category (name, seconds) rows in report order.
+pub fn category_rows(profile: &Json) -> Vec<(String, f64)> {
+    CATEGORY_NAMES
+        .iter()
+        .map(|&name| {
+            (name.to_string(), get_f64(profile, &["categories", name]).unwrap_or(0.0))
+        })
+        .collect()
+}
+
+fn fmt_secs(v: f64) -> String {
+    if v.abs() >= 1000.0 {
+        format!("{v:.1}")
+    } else {
+        format!("{v:.3}")
+    }
+}
+
+/// Render one profile as the `rudra analyze` text block.
+pub fn render_analysis(profile: &Json, title: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let total = get_f64(profile, &["total_secs"]).unwrap_or(0.0);
+    let updates = get_f64(profile, &["updates"]).unwrap_or(0.0);
+    let timebase = profile.opt("timebase").and_then(|v| v.as_str().ok()).unwrap_or("sim");
+    let mode = profile.opt("mode").and_then(|v| v.as_str().ok()).unwrap_or("critical_path");
+    out.push(format!("analysis: {title}"));
+    out.push(format!(
+        "  {mode} attribution over {timebase} time: {} s across {} updates",
+        fmt_secs(total),
+        updates as u64
+    ));
+    out.push(format!("  {:<16} {:>12} {:>8}", "category", "seconds", "share"));
+    for (name, secs) in category_rows(profile) {
+        let share = if total > 0.0 { 100.0 * secs / total } else { 0.0 };
+        out.push(format!("  {name:<16} {:>12} {share:>7.1}%", fmt_secs(secs)));
+    }
+    if mode == "critical_path" {
+        let sum: f64 = category_rows(profile).iter().map(|(_, s)| s).sum();
+        out.push(format!(
+            "  {:<16} {:>12} {:>7.1}%  (exact partition of runtime)",
+            "sum",
+            fmt_secs(sum),
+            if total > 0.0 { 100.0 * sum / total } else { 0.0 }
+        ));
+    }
+    // Blame: top learners by critical-path seconds.
+    if let Some(blame) = profile.opt("blame") {
+        let secs = blame.opt("learner_secs").and_then(|v| v.as_f64_vec().ok()).unwrap_or_default();
+        let commits: Vec<f64> = blame
+            .opt("learner_commits")
+            .and_then(|v| v.as_f64_vec().ok())
+            .unwrap_or_default();
+        let mut order: Vec<usize> = (0..secs.len()).collect();
+        order.sort_by(|&a, &b| secs[b].partial_cmp(&secs[a]).unwrap_or(std::cmp::Ordering::Equal));
+        if !order.is_empty() {
+            out.push("  blame (top learners on the critical path):".to_string());
+            for &l in order.iter().take(5) {
+                let share = if total > 0.0 { 100.0 * secs[l] / total } else { 0.0 };
+                let n = commits.get(l).copied().unwrap_or(0.0) as u64;
+                out.push(format!(
+                    "    learner {l:<4} {:>10} s {share:>6.1}%  ({n} commits closed)",
+                    fmt_secs(secs[l])
+                ));
+            }
+        }
+        if let Some(shards) = blame.opt("shard_busy_secs").and_then(|v| v.as_f64_vec().ok()) {
+            if !shards.is_empty() {
+                let row = shards
+                    .iter()
+                    .enumerate()
+                    .map(|(s, &b)| format!("S{s}={}", fmt_secs(b)))
+                    .collect::<Vec<_>>()
+                    .join(" ");
+                out.push(format!("  shard ingress busy seconds: {row}"));
+            }
+        }
+    }
+    // What-ifs.
+    if let Some(w) = profile.opt("whatif") {
+        out.push("  what-if projections (optimistic lower bounds):".to_string());
+        for (key, label) in [
+            ("zero_wire_secs", "zero wire cost"),
+            ("zero_barrier_secs", "zero barrier wait"),
+            ("balanced_learners_secs", "perfectly balanced learners"),
+            ("fast_root_secs", "infinitely fast root"),
+        ] {
+            if let Some(v) = w.opt(key).and_then(|v| v.as_f64().ok()) {
+                let speedup = if v > 0.0 { total / v } else { f64::INFINITY };
+                out.push(format!(
+                    "    {label:<28} {:>10} s  ({speedup:.2}x)",
+                    fmt_secs(v)
+                ));
+            }
+        }
+    }
+    out
+}
+
+/// Side-by-side attribution diff of two profiles (`rudra analyze --index
+/// runs.jsonl I J`).
+pub fn render_diff(a: &Json, a_title: &str, b: &Json, b_title: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let ta = get_f64(a, &["total_secs"]).unwrap_or(0.0);
+    let tb = get_f64(b, &["total_secs"]).unwrap_or(0.0);
+    out.push(format!("attribution diff: [A] {a_title}  vs  [B] {b_title}"));
+    out.push(format!(
+        "  total: A {} s, B {} s ({})",
+        fmt_secs(ta),
+        fmt_secs(tb),
+        if ta > 0.0 { format!("B/A = {:.2}x", tb / ta) } else { "–".to_string() }
+    ));
+    out.push(format!(
+        "  {:<16} {:>12} {:>7} {:>12} {:>7} {:>9}",
+        "category", "A secs", "A %", "B secs", "B %", "Δ share"
+    ));
+    let rows_a = category_rows(a);
+    let rows_b = category_rows(b);
+    for ((name, sa), (_, sb)) in rows_a.iter().zip(rows_b.iter()) {
+        let pa = if ta > 0.0 { 100.0 * sa / ta } else { 0.0 };
+        let pb = if tb > 0.0 { 100.0 * sb / tb } else { 0.0 };
+        out.push(format!(
+            "  {name:<16} {:>12} {pa:>6.1}% {:>12} {pb:>6.1}% {:>+8.1}pp",
+            fmt_secs(*sa),
+            fmt_secs(*sb),
+            pb - pa
+        ));
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const EPS: f64 = 1e-9;
+
+    fn total_of(p: &Profiler) -> f64 {
+        p.cats.total()
+    }
+
+    /// A base-architecture round: deliver → compute → push, commit at the
+    /// push arrival. The window partitions into delivery, compute, wire,
+    /// and the pre-chain remainder.
+    #[test]
+    fn walkback_partitions_a_base_round_exactly() {
+        let mut p = Profiler::new(2);
+        p.note_deliver(0, 1.0, 2.0);
+        p.note_compute(0, 2.0, 5.0);
+        p.note_push(0, 5.0, 6.0);
+        p.commit(Some(0), 6.0);
+        assert!((p.cats.weight_delivery - 1.0).abs() < EPS);
+        assert!((p.cats.compute - 3.0).abs() < EPS);
+        assert!((p.cats.push_wire - 1.0).abs() < EPS);
+        assert!((p.cats.other - 1.0).abs() < EPS, "pre-chain [0,1] is other");
+        assert!((total_of(&p) - 6.0).abs() < EPS);
+    }
+
+    /// Adv* commit via a relay hop, with the gradient queued at the leaf
+    /// between push arrival and relay departure.
+    #[test]
+    fn relay_and_leaf_queue_gap_are_attributed() {
+        let mut p = Profiler::new(1);
+        p.note_compute(0, 0.0, 4.0);
+        p.note_push(0, 4.0, 5.0);
+        p.note_relay(0, 7.0, 9.0);
+        p.commit(Some(0), 9.0);
+        assert!((p.cats.relay_wire - 2.0).abs() < EPS);
+        assert!((p.cats.pipeline_wait - 2.0).abs() < EPS, "[5,7] queued at leaf");
+        assert!((p.cats.push_wire - 1.0).abs() < EPS);
+        assert!((p.cats.compute - 4.0).abs() < EPS);
+        assert!((total_of(&p) - 9.0).abs() < EPS);
+    }
+
+    /// A stale relay stamp from an earlier round must not be claimed by a
+    /// direct-push commit.
+    #[test]
+    fn stale_relay_is_skipped() {
+        let mut p = Profiler::new(1);
+        p.note_relay(0, 0.5, 1.0);
+        p.commit(Some(0), 2.0); // earlier round commits via relay
+        p.note_compute(0, 2.0, 3.0);
+        p.note_push(0, 3.0, 4.0);
+        p.commit(Some(0), 4.0);
+        assert!((p.cats.compute - 1.0).abs() < EPS);
+        assert!((p.cats.push_wire - 1.0).abs() < EPS);
+        assert!((total_of(&p) - 4.0).abs() < EPS);
+    }
+
+    /// Non-wire critical time while another learner sits parked in the
+    /// barrier is reassigned to barrier_wait; wire slices keep their
+    /// category.
+    #[test]
+    fn barrier_occupancy_overrides_non_wire_slices() {
+        let mut p = Profiler::new(2);
+        p.note_deliver(0, 0.0, 1.0);
+        p.note_compute(0, 1.0, 8.0);
+        p.note_push(0, 8.0, 10.0);
+        // learner 1 parks from t=4 to the commit
+        p.barrier_enter(1, 4.0);
+        p.commit(Some(0), 10.0);
+        // compute [1,8] overlaps busy [4,10] on [4,8] → 4s barrier; wire
+        // [8,10] overlaps too but stays wire.
+        assert!((p.cats.compute - 3.0).abs() < EPS);
+        assert!((p.cats.barrier_wait - 4.0).abs() < EPS);
+        assert!((p.cats.push_wire - 2.0).abs() < EPS);
+        assert!((p.cats.weight_delivery - 1.0).abs() < EPS);
+        assert!((total_of(&p) - 10.0).abs() < EPS);
+    }
+
+    /// No barrier entries (1-softsync) means the barrier share is exactly
+    /// zero, however long the run.
+    #[test]
+    fn no_barrier_entries_means_zero_barrier_share() {
+        let mut p = Profiler::new(4);
+        for round in 0..10 {
+            let t0 = round as f64 * 5.0;
+            p.note_compute(0, t0, t0 + 4.0);
+            p.note_push(0, t0 + 4.0, t0 + 5.0);
+            p.commit(Some(0), t0 + 5.0);
+        }
+        p.finish(50.0, vec![]);
+        assert_eq!(p.cats.barrier_wait, 0.0);
+        assert!((p.cats.total() - 50.0).abs() < EPS);
+    }
+
+    /// A killed learner abandons the barrier: occupancy closes and later
+    /// windows are not poisoned.
+    #[test]
+    fn barrier_abandon_closes_occupancy() {
+        let mut p = Profiler::new(2);
+        p.barrier_enter(1, 1.0);
+        p.barrier_leave(1, 2.0); // killed
+        p.note_compute(0, 3.0, 5.0);
+        p.note_push(0, 5.0, 6.0);
+        p.commit(Some(0), 6.0);
+        // only [1,2] was occupied; compute [3,5] stays compute
+        assert!((p.cats.compute - 2.0).abs() < EPS);
+        assert!((p.cats.barrier_wait - 0.0).abs() < EPS);
+        assert!((total_of(&p) - 6.0).abs() < EPS);
+    }
+
+    /// The chainless flush (membership change) and the run tail both land
+    /// in `other`, preserving the partition.
+    #[test]
+    fn chainless_commit_and_tail_partition_exactly() {
+        let mut p = Profiler::new(2);
+        p.commit(None, 3.0);
+        p.finish(7.5, vec![1.0, 2.0]);
+        assert!((p.cats.other - 7.5).abs() < EPS);
+        assert!((p.cats.total() - p.total).abs() < EPS);
+        assert_eq!(p.shard_busy, vec![1.0, 2.0]);
+    }
+
+    /// Epoch deltas tile the cumulative totals.
+    #[test]
+    fn epoch_deltas_sum_to_cumulative() {
+        let mut p = Profiler::new(1);
+        p.note_compute(0, 0.0, 2.0);
+        p.note_push(0, 2.0, 3.0);
+        p.commit(Some(0), 3.0);
+        p.epoch(1);
+        p.note_compute(0, 3.0, 6.0);
+        p.note_push(0, 6.0, 7.0);
+        p.commit(Some(0), 7.0);
+        p.epoch(2);
+        assert_eq!(p.epochs.len(), 2);
+        let sum: f64 = p.epochs.iter().map(|(_, c)| c.total()).sum();
+        assert!((sum - p.cats.total()).abs() < EPS);
+        assert!((p.epochs[1].1.compute - 3.0).abs() < EPS);
+    }
+
+    /// Every what-if is a subset subtraction: 0 ≤ projection ≤ total.
+    #[test]
+    fn whatifs_are_bounded_by_baseline() {
+        let mut p = Profiler::new(3);
+        p.note_deliver(0, 0.0, 1.0);
+        p.note_compute(0, 1.0, 9.0);
+        p.note_push(0, 9.0, 10.0);
+        p.barrier_enter(1, 2.0);
+        p.barrier_enter(2, 3.0);
+        p.commit(Some(0), 10.0);
+        p.finish(11.0, vec![]);
+        let (zw, zb, bal, fr) = p.whatif();
+        for v in [zw, zb, bal, fr] {
+            assert!(v >= -EPS && v <= p.total + EPS, "projection {v} outside [0, {}]", p.total);
+        }
+        // barrier occupancy was present, so zero-barrier must project a
+        // real saving
+        assert!(zb < p.total);
+    }
+
+    /// Blame charges the whole window to the closing learner.
+    #[test]
+    fn blame_charges_the_closing_learner() {
+        let mut p = Profiler::new(2);
+        p.note_compute(1, 0.0, 2.0);
+        p.note_push(1, 2.0, 3.0);
+        p.commit(Some(1), 3.0);
+        assert_eq!(p.blame_commits, vec![0, 1]);
+        assert!((p.blame_secs[1] - 3.0).abs() < EPS);
+        assert_eq!(p.blame_secs[0], 0.0);
+    }
+
+    /// JSON round-trips with the schema the analyzer expects.
+    #[test]
+    fn profile_json_round_trips() {
+        let mut p = Profiler::new(2);
+        p.note_compute(0, 0.0, 1.0);
+        p.note_push(0, 1.0, 2.0);
+        p.commit(Some(0), 2.0);
+        p.epoch(1);
+        p.finish(2.5, vec![0.5]);
+        let j = Json::parse(&p.to_json().to_string()).unwrap();
+        assert_eq!(j.get("timebase").unwrap().as_str().unwrap(), "sim");
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "critical_path");
+        assert_eq!(j.get("updates").unwrap().as_u64().unwrap(), 1);
+        let cats = category_rows(&j);
+        let sum: f64 = cats.iter().map(|(_, s)| s).sum();
+        let total = j.get("total_secs").unwrap().as_f64().unwrap();
+        assert!((sum - total).abs() < EPS);
+        assert_eq!(
+            j.get("blame").unwrap().get("shard_busy_secs").unwrap().as_f64_vec().unwrap(),
+            vec![0.5]
+        );
+        for key in
+            ["zero_wire_secs", "zero_barrier_secs", "balanced_learners_secs", "fast_root_secs"]
+        {
+            let v = j.get("whatif").unwrap().get(key).unwrap().as_f64().unwrap();
+            assert!(v >= 0.0 && v <= total + EPS, "{key} = {v}");
+        }
+    }
+
+    /// The wall-clock aggregate variant marks itself and never claims an
+    /// exact partition.
+    #[test]
+    fn wall_profiler_marks_aggregate_mode() {
+        let mut p = WallProfiler::new(2);
+        p.push(0, 0.5, 0.1);
+        p.push(1, 0.7, 0.2);
+        p.commit(1);
+        p.barrier_wait(0.3);
+        let j = Json::parse(&p.to_json(1.5).to_string()).unwrap();
+        assert_eq!(j.get("mode").unwrap().as_str().unwrap(), "aggregate");
+        assert_eq!(j.get("timebase").unwrap().as_str().unwrap(), "wall");
+        assert!((j.get("categories").unwrap().get("compute").unwrap().as_f64().unwrap() - 1.2).abs() < EPS);
+        assert_eq!(j.get("updates").unwrap().as_u64().unwrap(), 1);
+    }
+
+    /// The analyzer renders both single and diff views without panicking
+    /// and carries the category vocabulary.
+    #[test]
+    fn analyzer_renders_tables() {
+        let mut p = Profiler::new(2);
+        p.note_compute(0, 0.0, 3.0);
+        p.note_push(0, 3.0, 4.0);
+        p.commit(Some(0), 4.0);
+        p.finish(4.0, vec![1.0]);
+        let j = p.to_json();
+        let lines = render_analysis(&j, "hardsync λ=2");
+        let text = lines.join("\n");
+        for name in CATEGORY_NAMES {
+            assert!(text.contains(name), "missing {name} in analysis:\n{text}");
+        }
+        assert!(text.contains("what-if"));
+        let diff = render_diff(&j, "A", &j, "B").join("\n");
+        assert!(diff.contains("Δ share") && diff.contains("compute"));
+    }
+}

@@ -9,8 +9,9 @@
 //!
 //! Panels: the runs table, the paper's μ·λ-vs-error scatter (the
 //! tradeoff frontier at a glance), per-run staleness histograms, per-run
-//! time-series sparklines when `--metrics-every` was on, and the
-//! `bench-diff` events/sec ladder when baselines are supplied.
+//! time-series sparklines when `--metrics-every` was on, per-run stacked
+//! attribution bars + what-if projections when `--profile` was on, and
+//! the `bench-diff` events/sec ladder when baselines are supplied.
 
 use crate::stats::finite_min_max;
 use crate::util::json::Json;
@@ -259,6 +260,76 @@ fn series_panel(r: &RunRecord, idx: usize) -> Option<String> {
     ))
 }
 
+/// Per-run stacked attribution bar + what-ifs (only for records whose
+/// metrics carry `profile`, i.e. runs made with `--profile`).
+fn profile_panel(r: &RunRecord, idx: usize) -> Option<String> {
+    let profile = r.metrics.as_ref()?.opt("profile")?;
+    let total = profile.opt("total_secs").and_then(|v| v.as_f64().ok())?;
+    if !(total > 0.0) {
+        return None;
+    }
+    let rows = super::profile::category_rows(profile);
+    let mode = profile.opt("mode").and_then(|v| v.as_str().ok()).unwrap_or("critical_path");
+    let timebase = profile.opt("timebase").and_then(|v| v.as_str().ok()).unwrap_or("sim");
+    let (w, h) = (560.0, 22.0);
+    let mut svg = svg_open(w, h);
+    let mut x = 0.0;
+    let mut legend = String::new();
+    for (i, (name, secs)) in rows.iter().enumerate() {
+        let frac = (secs / total).clamp(0.0, 1.0);
+        let bw = frac * w;
+        if bw > 0.05 {
+            svg.push_str(&format!(
+                "<rect x=\"{x:.1}\" y=\"0\" width=\"{bw:.1}\" height=\"{h}\" class=\"cat{i}\">\
+                 <title>{}: {secs:.4}s ({:.1}%)</title></rect>",
+                esc(name),
+                frac * 100.0
+            ));
+            x += bw;
+        }
+        if *secs > 0.0 {
+            legend.push_str(&format!(
+                "<span class=\"chip\"><span class=\"swatch cat{i}\"></span>{} {:.1}%</span>",
+                esc(name),
+                frac * 100.0
+            ));
+        }
+    }
+    svg.push_str("</svg>");
+    let mut whatifs = String::new();
+    if let Some(w) = profile.opt("whatif") {
+        for (key, label) in [
+            ("zero_wire_secs", "zero wire cost"),
+            ("zero_barrier_secs", "zero barrier wait"),
+            ("balanced_learners_secs", "perfectly balanced learners"),
+            ("fast_root_secs", "infinitely fast root"),
+        ] {
+            if let Some(secs) = w.opt(key).and_then(|v| v.as_f64().ok()) {
+                let speedup = if secs > 0.0 { total / secs } else { f64::INFINITY };
+                whatifs.push_str(&format!(
+                    "<tr><td>{label}</td><td>{secs:.4}</td><td>{speedup:.2}×</td></tr>"
+                ));
+            }
+        }
+    }
+    let whatif_table = if whatifs.is_empty() {
+        String::new()
+    } else {
+        format!(
+            "<table class=\"whatif\"><thead><tr><th>what-if</th><th>projected s</th>\
+             <th>speedup</th></tr></thead><tbody>{whatifs}</tbody></table>"
+        )
+    };
+    Some(format!(
+        "<div class=\"run-profile\"><h3>#{idx} {} \
+         <span class=\"tick\">{total:.4}s total · {} over {} time</span></h3>\
+         {svg}<div class=\"chips\">{legend}</div>{whatif_table}</div>",
+        esc(&r.label),
+        esc(mode),
+        esc(timebase),
+    ))
+}
+
 /// Staleness histogram bars from a record's metrics snapshot.
 fn staleness_panel(r: &RunRecord, idx: usize) -> Option<String> {
     let hist = r.metrics.as_ref()?.opt("staleness")?.opt("histogram")?;
@@ -339,6 +410,15 @@ const STYLE: &str = "\
  .spark-row{display:flex;flex-wrap:wrap;gap:10px}\
  .spark-cell,.hist-cell{background:#fff;border:1px solid #ddd;padding:6px}\
  .spark-label{font-size:11px;color:#444;margin-bottom:2px}\
+ .run-profile{background:#fff;border:1px solid #ddd;padding:6px;margin:8px 0}\
+ .chips{font-size:11px;color:#444;margin-top:4px}\
+ .chip{margin-right:10px;white-space:nowrap}\
+ .swatch{display:inline-block;width:9px;height:9px;margin-right:3px}\
+ .whatif{width:auto;margin-top:6px}\
+ .cat0{fill:#3b6fd4;background:#3b6fd4} .cat1{fill:#d47a3b;background:#d47a3b}\
+ .cat2{fill:#d4b13b;background:#d4b13b} .cat3{fill:#c23b3b;background:#c23b3b}\
+ .cat4{fill:#3bae8a;background:#3bae8a} .cat5{fill:#8a5fd4;background:#8a5fd4}\
+ .cat6{fill:#999;background:#999}\
  svg{display:block}";
 
 /// Render the full report. `source` names the index the records came
@@ -373,6 +453,8 @@ pub fn render(records: &[RunRecord], benches: &[(String, Json)], source: &str) -
         records.iter().enumerate().filter_map(|(i, r)| series_panel(r, i)).collect();
     let hist_panels: String =
         records.iter().enumerate().filter_map(|(i, r)| staleness_panel(r, i)).collect();
+    let profile_panels: String =
+        records.iter().enumerate().filter_map(|(i, r)| profile_panel(r, i)).collect();
     format!(
         "<!DOCTYPE html><html><head><meta charset=\"utf-8\">\
          <title>rudra report</title><style>{STYLE}</style></head><body>\
@@ -384,7 +466,7 @@ pub fn render(records: &[RunRecord], benches: &[(String, Json)], source: &str) -
          <th>σ max</th><th>sim s</th><th>wall s</th><th>updates</th><th>events</th>\
          <th>series</th></tr></thead><tbody>{table_rows}</tbody></table>\
          <h2>μ·λ vs test error</h2>{}\
-         {}{}{}\
+         {}{}{}{}\
          </body></html>",
         records.len(),
         if records.len() == 1 { "" } else { "s" },
@@ -399,6 +481,11 @@ pub fn render(records: &[RunRecord], benches: &[(String, Json)], source: &str) -
             String::new()
         } else {
             format!("<h2>Time series (--metrics-every)</h2>{series_panels}")
+        },
+        if profile_panels.is_empty() {
+            String::new()
+        } else {
+            format!("<h2>Bottleneck attribution (--profile)</h2>{profile_panels}")
         },
         bench_panel(benches),
     )
@@ -465,6 +552,37 @@ mod tests {
         assert!(html.contains("<circle"), "scatter needs at least one point");
         assert!(html.contains("class=\"bar\""), "histogram bars expected");
         assert!(html.contains("class=\"spark\""), "series sparklines expected");
+    }
+
+    fn metrics_with_profile() -> Json {
+        Json::parse(
+            r#"{"profile": {"schema": 1, "timebase": "sim", "mode": "critical_path",
+                "total_secs": 100.0, "updates": 500,
+                "categories": {"compute": 60.0, "push_wire": 10.0, "relay_wire": 5.0,
+                               "barrier_wait": 15.0, "weight_delivery": 5.0,
+                               "pipeline_wait": 3.0, "other": 2.0},
+                "epochs": [], "blame": {"learner_secs": [], "learner_commits": [],
+                                        "shard_busy_secs": []},
+                "whatif": {"zero_wire_secs": 80.0, "zero_barrier_secs": 85.0,
+                           "balanced_learners_secs": 90.0, "fast_root_secs": 90.0}}}"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn profile_panel_renders_attribution_and_whatifs() {
+        let records = vec![record(1, Some(12.5), Some(metrics_with_profile()))];
+        let html = render(&records, &[], "runs.jsonl");
+        assert!(html.contains("Bottleneck attribution (--profile)"));
+        assert!(html.contains("class=\"cat0\""), "stacked bar segments expected");
+        assert!(html.contains("barrier_wait"), "legend names the busy categories");
+        assert!(html.contains("zero barrier wait"), "what-if rows expected");
+        assert!(html.contains("1.18×"), "100/85 speedup for zero barrier");
+        assert!(html.starts_with("<!DOCTYPE html>") && html.ends_with("</body></html>"));
+        assert!(!html.contains("src=") && !html.contains("href="));
+        // A record without a profile stays out of the section.
+        let html = render(&[record(1, None, None)], &[], "runs.jsonl");
+        assert!(!html.contains("Bottleneck attribution"));
     }
 
     #[test]

@@ -66,6 +66,7 @@ fn elastic_cfg(
         trace_path: None,
         collect_metrics: false,
         metrics_every: None,
+        profile: false,
     }
 }
 

@@ -50,6 +50,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         trace_path: None,
         collect_metrics: false,
         metrics_every: None,
+        profile: false,
     }
 }
 
@@ -321,6 +322,7 @@ fn live_trace_spans_are_well_formed_over_wall_time() {
         collect_metrics: false,
         trace: true,
         metrics_every: None,
+        profile: false,
     };
     let providers: Vec<Box<dyn GradProvider + Send>> = (0..cfg.lambda)
         .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
@@ -477,4 +479,179 @@ fn metrics_snapshot_agrees_with_engine_counts() {
     let barrier = m.get("barrier").unwrap();
     assert!(barrier.get("rounds").unwrap().as_u64().unwrap() > 0);
     assert!(m.get("queue_depth_high_water").unwrap().as_u64().unwrap() > 0);
+}
+
+/// The critical-path profiler (tentpole) is as observational as the rest:
+/// a profiled run reproduces the quiet trajectory bit for bit across the
+/// protocol families and shard counts, and the profile rides the metrics
+/// snapshot without arming anything else.
+#[test]
+fn profiled_runs_are_bit_identical_to_quiet_runs() {
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let quiet = run_timing(&cfg);
+
+            let mut prof_cfg = cfg.clone();
+            prof_cfg.profile = true;
+            let profiled = run_timing(&prof_cfg);
+            let ctx = format!("{protocol:?} S={shards} profile");
+            assert_same(&quiet, &profiled, &ctx);
+            assert!(profiled.trace.is_none(), "{ctx}: profiling must not arm the trace");
+            let m = profiled.metrics.expect("profile implies a metrics snapshot");
+            let p = m.get("profile").unwrap();
+            assert_eq!(p.get("mode").unwrap().as_str().unwrap(), "critical_path", "{ctx}");
+            assert_eq!(p.get("timebase").unwrap().as_str().unwrap(), "sim", "{ctx}");
+        }
+    }
+}
+
+/// The attribution is an exact partition: the seven category totals sum
+/// to `total_secs`, which is the run's own virtual time, and the per-
+/// learner blame covers the same span.
+#[test]
+fn profile_categories_exactly_partition_the_runtime() {
+    use rudra::obs::profile::CATEGORY_NAMES;
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        for shards in [1usize, 4] {
+            let mut cfg = base_cfg(protocol, shards);
+            cfg.profile = true;
+            let r = run_timing(&cfg);
+            let ctx = format!("{protocol:?} S={shards}");
+            let m = r.metrics.expect("profile implies a metrics snapshot");
+            let p = m.get("profile").unwrap();
+
+            let total = p.get("total_secs").unwrap().as_f64().unwrap();
+            assert_eq!(
+                total.to_bits(),
+                r.sim_seconds.to_bits(),
+                "{ctx}: total_secs is the run's own clock"
+            );
+            let cats = p.get("categories").unwrap();
+            let mut sum = 0.0;
+            for name in CATEGORY_NAMES {
+                let secs = cats.get(name).unwrap().as_f64().unwrap();
+                assert!(secs >= 0.0, "{ctx}: {name} is non-negative, got {secs}");
+                sum += secs;
+            }
+            let tol = 1e-9 * total.max(1.0);
+            assert!(
+                (sum - total).abs() <= tol,
+                "{ctx}: categories must sum to total: {sum} vs {total}"
+            );
+            assert_eq!(
+                p.get("updates").unwrap().as_u64().unwrap(),
+                r.updates,
+                "{ctx}: one chain per weight update"
+            );
+        }
+    }
+}
+
+/// Every what-if projection is a lower bound on a shorter run: within
+/// [0, total_secs], and removing a cost never projects longer.
+#[test]
+fn profile_whatifs_stay_within_bounds() {
+    for protocol in
+        [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }]
+    {
+        let mut cfg = base_cfg(protocol, 2);
+        cfg.profile = true;
+        let r = run_timing(&cfg);
+        let m = r.metrics.expect("profile implies a metrics snapshot");
+        let p = m.get("profile").unwrap();
+        let total = p.get("total_secs").unwrap().as_f64().unwrap();
+        let w = p.get("whatif").unwrap();
+        for key in
+            ["zero_wire_secs", "zero_barrier_secs", "balanced_learners_secs", "fast_root_secs"]
+        {
+            let secs = w.get(key).unwrap().as_f64().unwrap();
+            assert!(
+                (0.0..=total).contains(&secs),
+                "{protocol:?}: {key}={secs} outside [0, {total}]"
+            );
+        }
+    }
+}
+
+/// The acceptance contrast: at λ=30, hardsync's critical path carries at
+/// least twice the barrier-wait share of 1-softsync's (softsync has no
+/// barrier at all, so its share is exactly zero and hardsync's positive).
+#[test]
+fn hardsync_attributes_more_barrier_wait_than_softsync() {
+    let barrier_share = |protocol: Protocol| -> f64 {
+        let mut cfg = base_cfg(protocol, 2);
+        cfg.lambda = 30;
+        cfg.profile = true;
+        let r = run_timing(&cfg);
+        let m = r.metrics.expect("profile implies a metrics snapshot");
+        let p = m.get("profile").unwrap();
+        let total = p.get("total_secs").unwrap().as_f64().unwrap();
+        p.get("categories").unwrap().get("barrier_wait").unwrap().as_f64().unwrap() / total
+    };
+    let hard = barrier_share(Protocol::Hardsync);
+    let soft = barrier_share(Protocol::NSoftsync { n: 1 });
+    assert_eq!(soft, 0.0, "1-softsync never waits at a barrier");
+    assert!(hard > 0.0, "hardsync at λ=30 must blame the barrier");
+    assert!(
+        hard >= 2.0 * soft,
+        "hardsync barrier share {hard} should be ≥ 2× softsync's {soft}"
+    );
+}
+
+/// The live engine's profile (wall-clock side): aggregate category totals
+/// ride the metrics snapshot with the honest `aggregate` mode tag.
+#[test]
+fn live_profile_rides_the_metrics_snapshot_as_aggregate() {
+    use rudra::coordinator::engine_live::{run_live, LiveConfig};
+    use rudra::coordinator::learner::{GradProvider, MockProvider};
+    use rudra::obs::profile::CATEGORY_NAMES;
+
+    let dim = 8;
+    let cfg = LiveConfig {
+        protocol: Protocol::Hardsync,
+        mu: 4,
+        lambda: 3,
+        epochs: 2,
+        samples_per_epoch: 96,
+        shards: 1,
+        log_every: 0,
+        elastic: None,
+        compress: rudra::comm::codec::CodecSpec::None,
+        checkpoint_every: 0,
+        collect_metrics: false,
+        trace: false,
+        metrics_every: None,
+        profile: true,
+    };
+    let providers: Vec<Box<dyn GradProvider + Send>> = (0..cfg.lambda)
+        .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
+        .collect();
+    let r = run_live(
+        &cfg,
+        FlatVec::from_vec(vec![1.0; dim]),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, dim),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128),
+        providers,
+    )
+    .unwrap();
+    assert!(r.trace.is_none(), "profiling must not arm the trace");
+    let m = r.metrics.expect("profile implies a metrics snapshot");
+    let p = m.get("profile").unwrap();
+    assert_eq!(p.get("mode").unwrap().as_str().unwrap(), "aggregate");
+    assert_eq!(p.get("timebase").unwrap().as_str().unwrap(), "wall");
+    assert!(p.get("whatif").is_err(), "no critical-path claim, no what-ifs");
+    let cats = p.get("categories").unwrap();
+    let mut sum = 0.0;
+    for name in CATEGORY_NAMES {
+        let secs = cats.get(name).unwrap().as_f64().unwrap();
+        assert!(secs >= 0.0, "{name} is non-negative, got {secs}");
+        sum += secs;
+    }
+    assert!(sum > 0.0, "a real run accumulates some attributed time");
+    assert!(p.get("updates").unwrap().as_u64().unwrap() > 0);
 }

@@ -55,6 +55,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         trace_path: None,
         collect_metrics: false,
         metrics_every: None,
+        profile: false,
     }
 }
 

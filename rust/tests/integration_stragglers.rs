@@ -60,6 +60,7 @@ fn straggler_cfg(
         trace_path: None,
         collect_metrics: false,
         metrics_every: None,
+        profile: false,
     }
 }
 

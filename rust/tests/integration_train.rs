@@ -110,6 +110,7 @@ fn live_engine_trains_below_chance() {
         collect_metrics: false,
         trace: false,
         metrics_every: None,
+        profile: false,
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
