@@ -69,6 +69,7 @@ fn main() {
             collect_metrics: false,
             metrics_every: None,
             profile: false,
+            faults: cfg.faults.clone(),
         };
         let theta0 = ws.cnn_init().unwrap();
         let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());

@@ -14,6 +14,7 @@ use crate::coordinator::protocol::Protocol;
 use crate::coordinator::tree::Arch;
 use crate::elastic::membership::ChurnSchedule;
 use crate::elastic::rescaler::RescalePolicy;
+use crate::netsim::faults::FaultSpec;
 use crate::params::lr::Modulation;
 use crate::params::optimizer::OptimizerKind;
 use crate::straggler::adaptive::AdaptiveSpec;
@@ -159,6 +160,14 @@ pub struct RunConfig {
     /// default; purely observational (bit-identical trajectories), so —
     /// like the other obs knobs — it never enters [`RunConfig::label`].
     pub profile: bool,
+    /// Network chaos (JSON key `faults` / flag `--faults SPEC`): a
+    /// message-fault DSL such as
+    /// `loss:0.05,dup:0.01,reorder:0.02,delayspike:0.1x20,partition:rack0-rack1@30s+15s`,
+    /// driving the sim engine's fault plane ([`crate::netsim::faults`])
+    /// and the live engine's synthetic loss layer. `none` (the default)
+    /// is bit-identical to the pre-chaos engine; unlike the obs knobs it
+    /// changes trajectories, so it *does* enter [`RunConfig::label`].
+    pub faults: FaultSpec,
 }
 
 impl Default for RunConfig {
@@ -196,6 +205,7 @@ impl Default for RunConfig {
             run_index: None,
             metrics_every: None,
             profile: false,
+            faults: FaultSpec::none(),
         }
     }
 }
@@ -282,6 +292,7 @@ impl RunConfig {
                     }
                 }
                 "profile" => self.profile = v.as_bool()?,
+                "faults" => self.faults = FaultSpec::parse(v.as_str()?)?,
                 other => bail!("unknown config key {other:?}"),
             }
         }
@@ -361,6 +372,9 @@ impl RunConfig {
         if args.flag("profile") {
             self.profile = true;
         }
+        if let Some(v) = args.get("faults") {
+            self.faults = FaultSpec::parse(v)?;
+        }
         self.validate()
     }
 
@@ -414,6 +428,15 @@ impl RunConfig {
                 bail!("metrics_every must be a finite number of seconds > 0, got {every}");
             }
         }
+        if !self.faults.partitions.is_empty() && self.faults.racks() > self.lambda {
+            bail!(
+                "fault spec names rack {} but lambda = {} supports at most {} racks \
+                 (one learner per rack minimum)",
+                self.faults.racks() - 1,
+                self.lambda,
+                self.lambda
+            );
+        }
         Ok(())
     }
 
@@ -464,8 +487,13 @@ impl RunConfig {
         } else {
             format!(" comm[{}]", self.compress.label())
         };
+        let faults_suffix = if self.faults.is_quiet() {
+            String::new()
+        } else {
+            format!(" faults[{}]", self.faults.label())
+        };
         format!(
-            "(σ̄={}, μ={}, λ={}) {}/{}{}{}{}{}{}{}",
+            "(σ̄={}, μ={}, λ={}) {}/{}{}{}{}{}{}{}{}",
             self.protocol.effective_n(self.lambda),
             self.mu,
             self.lambda,
@@ -477,6 +505,7 @@ impl RunConfig {
             hetero_suffix,
             adaptive_suffix,
             compress_suffix,
+            faults_suffix,
         )
     }
 }

@@ -45,6 +45,8 @@ use crate::coordinator::server::ServerConfig;
 use crate::coordinator::shard::ShardedServer;
 use crate::elastic::checkpoint::Checkpoint;
 use crate::elastic::membership::{ChurnRecord, Membership, Phase};
+use crate::netsim::faults::FaultSpec;
+use crate::netsim::reliable::FaultStats;
 use crate::elastic::rescaler::{RescalePolicy, Rescaler};
 use crate::obs::series::{SeriesInputs, SeriesRecorder};
 use crate::obs::trace::{TraceEvent, TraceRecorder, PID_LEARNERS, PID_SHARDS};
@@ -129,6 +131,14 @@ pub struct LiveConfig {
     /// overlap), so the profile rides as `mode: "aggregate"`. Implies a
     /// metrics snapshot to ride in.
     pub profile: bool,
+    /// Message-level chaos ([`crate::netsim::faults`]). The mpsc channel
+    /// cannot drop, so `loss`/`dup` are emulated at receipt — where the
+    /// wire would have applied them — with the same per-sender sequence
+    /// numbers and server-side dedup window the sim engine uses. A push
+    /// whose retry budget is exhausted is abandoned and the blocked
+    /// learner refreshed with current weights. Partitions are a
+    /// sim-engine feature; the quiet spec takes the exact legacy path.
+    pub faults: FaultSpec,
 }
 
 /// Live-run output.
@@ -168,6 +178,9 @@ pub struct LiveResult {
     /// microseconds per the trace-event format); `None` unless
     /// [`LiveConfig::trace`] was set.
     pub trace: Option<Vec<TraceEvent>>,
+    /// Fault-plane accounting; `None` unless [`LiveConfig::faults`] was
+    /// armed.
+    pub faults: Option<FaultStats>,
 }
 
 enum ToServer {
@@ -179,10 +192,13 @@ enum ToServer {
     /// without a copy. `t_compute` / `t_sent` are wall offsets from the
     /// run epoch stamped in the learner thread (compute start/end and
     /// send time) — zeros when both tracing and profiling are off, and
-    /// never read then.
+    /// never read then. `seq` is the per-incarnation send sequence number
+    /// the fault plane's dedup window keys on (stamped always; only read
+    /// when faults are armed).
     Push {
         learner: usize,
         inc: u64,
+        seq: u64,
         grad: EncodedGrad,
         ts: Timestamp,
         loss: f32,
@@ -205,6 +221,33 @@ enum ToLearner {
 }
 
 type ProviderFactory<'f> = Box<dyn FnMut(usize) -> Box<dyn GradProvider + Send> + 'f>;
+
+/// What one heartbeat sweep should do with one live learner, given how
+/// long it has been silent. Factored out of the scan so the lifecycle
+/// rule is unit-testable: silence past the suspicion threshold raises
+/// suspicion exactly once, and a Suspect learner whose heartbeats
+/// resumed inside the threshold returns to Active (it used to linger
+/// Suspect until its next push or its eviction).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum HeartbeatAction {
+    None,
+    Suspect,
+    Recover,
+}
+
+fn heartbeat_action(silent: Duration, suspect_after: Duration, phase: Phase) -> HeartbeatAction {
+    if silent > suspect_after {
+        if phase == Phase::Suspect {
+            HeartbeatAction::None
+        } else {
+            HeartbeatAction::Suspect
+        }
+    } else if phase == Phase::Suspect {
+        HeartbeatAction::Recover
+    } else {
+        HeartbeatAction::None
+    }
+}
 
 /// Run a live training session. `providers` supplies one gradient source
 /// per learner (each moved into its thread).
@@ -232,9 +275,11 @@ pub fn run_live_elastic(
     run_live_inner(cfg, theta0, optimizer, lr, providers, Some(factory))
 }
 
+#[allow(clippy::too_many_arguments)]
 fn spawn_learner(
     id: usize,
     inc: u64,
+    seq0: u64,
     mut provider: Box<dyn GradProvider + Send>,
     mut codec: Option<LearnerCodec>,
     mut theta: FlatVec,
@@ -247,6 +292,10 @@ fn spawn_learner(
         // wall offset from the shared run epoch (0.0 untraced: the server
         // never reads the stamps then)
         let stamp = |e: &Option<Instant>| e.map(|e| e.elapsed().as_secs_f64()).unwrap_or(0.0);
+        // rejoined incarnations start past the old incarnation's highest
+        // sequence number so the server's dedup window never mistakes a
+        // fresh push for a replay
+        let mut seq = seq0;
         loop {
             let t0 = stamp(&epoch);
             let (grad, loss) = provider.compute(id, &theta)?;
@@ -262,12 +311,14 @@ fn spawn_learner(
             let msg = ToServer::Push {
                 learner: id,
                 inc,
+                seq,
                 grad,
                 ts,
                 loss,
                 t_compute: (t0, t1),
                 t_sent,
             };
+            seq += 1;
             if push_tx.send(msg).is_err() {
                 return Ok(()); // server gone
             }
@@ -348,6 +399,31 @@ fn run_live_inner(
     let mut last_checkpoint: Option<Checkpoint> = None;
     let mut last_ckpt_at: u64 = 0;
 
+    // Receipt-side chaos (tentpole): the mpsc channel cannot drop, so
+    // loss/dup are emulated where a real wire would have applied them —
+    // at receipt, before the fold. Like the codec streams above, live
+    // runs are wall-clock nondeterministic, so the fault RNG takes a
+    // fixed seed.
+    const LIVE_FAULT_SEED: u64 = 0xFA17_11FE;
+    let mut faults = if cfg.faults.is_quiet() {
+        None
+    } else {
+        anyhow::ensure!(
+            cfg.faults.partitions.is_empty(),
+            "live-engine faults support loss/dup/retries only \
+             (partitions need the sim engine's rack topology)"
+        );
+        server.arm_dedup();
+        Some((
+            FaultStats::new(cfg.lambda),
+            crate::util::rng::Rng::new(LIVE_FAULT_SEED),
+        ))
+    };
+    // Highest sequence number seen per learner slot, across incarnations:
+    // a rejoined thread starts past it so the dedup window never mistakes
+    // a fresh push for a replay.
+    let mut seq_hwm: Vec<u64> = vec![0; cfg.lambda];
+
     // Merge the deterministic churn into one pushes-ordered agenda.
     #[derive(Clone, Copy)]
     enum Planned {
@@ -390,6 +466,7 @@ fn run_live_inner(
     for (id, provider) in providers.into_iter().enumerate() {
         let (handle, reply_tx) = spawn_learner(
             id,
+            0,
             0,
             provider,
             mk_codec(id),
@@ -559,9 +636,16 @@ fn run_live_inner(
                     } else {
                         (timeout * 5, timeout * 10)
                     };
-                    if silent > suspect_after && membership.phase(l) != Phase::Suspect {
-                        membership.suspect(l, start.elapsed().as_secs_f64())?;
-                        rec.instant("suspect", PID_LEARNERS, l as u64, rec.now_s());
+                    match heartbeat_action(silent, suspect_after, membership.phase(l)) {
+                        HeartbeatAction::Suspect => {
+                            membership.suspect(l, start.elapsed().as_secs_f64())?;
+                            rec.instant("suspect", PID_LEARNERS, l as u64, rec.now_s());
+                        }
+                        HeartbeatAction::Recover => {
+                            membership.recover(l, start.elapsed().as_secs_f64())?;
+                            rec.instant("recover", PID_LEARNERS, l as u64, rec.now_s());
+                        }
+                        HeartbeatAction::None => {}
                     }
                     if silent > evict_after
                         && stalest.map(|(_, s)| silent > s).unwrap_or(true)
@@ -623,10 +707,11 @@ fn run_live_inner(
             continue;
         };
 
-        let ToServer::Push { learner, inc, grad, ts, loss, t_compute, t_sent } = msg;
+        let ToServer::Push { learner, inc, seq, grad, ts, loss, t_compute, t_sent } = msg;
         if inc != incs[learner] || !membership.is_live(learner) {
             continue; // a dead incarnation's final push: message lost
         }
+        seq_hwm[learner] = seq_hwm[learner].max(seq + 1);
         if rec.enabled() {
             // spans land at receipt: the learner stamped its own compute
             // window, the push span is send → server pickup (wire +
@@ -643,6 +728,63 @@ fn run_live_inner(
         last_progress = Instant::now();
         if membership.phase(learner) == Phase::Suspect {
             membership.recover(learner, start.elapsed().as_secs_f64())?;
+        }
+        if let Some((st, rng)) = faults.as_mut() {
+            st.sent += 1;
+            // Each attempt drops with p(loss); the reliability layer
+            // retransmits up to the budget. Retry bytes are booked into
+            // the same per-learner column the original occupies.
+            let mut drops: u32 = 0;
+            while rng.f64() < cfg.faults.loss {
+                drops += 1;
+                if drops > cfg.faults.retries {
+                    break;
+                }
+            }
+            let retried = drops.min(cfg.faults.retries);
+            st.retransmits += u64::from(retried);
+            st.retransmits_by[learner] += u64::from(retried);
+            st.dropped += u64::from(drops);
+            let overhead = f64::from(retried) * wire.push_bytes();
+            st.retry_bytes += overhead;
+            comm_bytes_by_learner[learner] += overhead;
+            bytes_in_total += overhead;
+            if retried > 0 {
+                rec.instant("retransmit", PID_LEARNERS, learner as u64, rec.now_s());
+            }
+            if drops > cfg.faults.retries {
+                // Retry budget exhausted: the push is abandoned. The
+                // learner is blocked on its reply, so refresh it with
+                // current weights (mirrors the backup-sync drop path) and
+                // keep training instead of wedging it forever.
+                st.exhausted += 1;
+                comm_bytes_by_learner[learner] += wire.push_bytes();
+                bytes_in_total += wire.push_bytes();
+                rec.instant("drop", PID_LEARNERS, learner as u64, rec.now_s());
+                let snap = snapshot!();
+                let _ = reply_txs[learner]
+                    .send(ToLearner::Weights { theta: snap, ts: server.timestamp() });
+                continue;
+            }
+            st.delivered += 1;
+            if !server.dedup_accept(learner, seq) {
+                // replay of an already-folded sequence number: the
+                // idempotency backstop rejects it before accumulation
+                rec.instant("dedup", PID_LEARNERS, learner as u64, rec.now_s());
+                let _ = reply_txs[learner].send(ToLearner::Unchanged);
+                continue;
+            }
+            if rng.f64() < cfg.faults.dup {
+                // inject a duplicate delivery; the dedup window must
+                // reject it, proving a dup can never double-fold
+                st.dups_injected += 1;
+                st.delivered += 1;
+                anyhow::ensure!(
+                    !server.dedup_accept(learner, seq),
+                    "dup of a folded push must be rejected by the dedup window"
+                );
+                rec.instant("dedup", PID_LEARNERS, learner as u64, rec.now_s());
+            }
         }
         pushes += 1;
         comm_bytes_by_learner[learner] += wire.push_bytes();
@@ -725,6 +867,7 @@ fn run_live_inner(
                         let (handle, reply_tx) = spawn_learner(
                             l,
                             incs[l],
+                            seq_hwm[l],
                             provider,
                             mk_codec(l),
                             server.assemble_weights(),
@@ -787,6 +930,13 @@ fn run_live_inner(
         }
     }
 
+    // The receiver-side dedup tally lives at the server; fold it into the
+    // run's fault accounting before the stats are published.
+    let fault_stats = faults.map(|(mut st, _)| {
+        st.dedup_dropped = server.dedup_dropped;
+        st
+    });
+
     // The live loop keeps no registry of its own (no virtual clock, no
     // event queue); the snapshot is assembled once from the server-side
     // tallies, which exist regardless. A `metrics_every` series or a
@@ -817,6 +967,9 @@ fn run_live_inner(
             let profile = p.to_json(start.elapsed().as_secs_f64());
             crate::obs::metrics::attach_profile(&mut snap, profile);
         }
+        if let Some(st) = &fault_stats {
+            crate::obs::metrics::attach_faults(&mut snap, st.to_json());
+        }
         Some(snap)
     } else {
         None
@@ -840,6 +993,7 @@ fn run_live_inner(
         last_checkpoint,
         metrics,
         trace: rec.take(),
+        faults: fault_stats,
     })
 }
 
@@ -873,6 +1027,7 @@ mod tests {
             trace: false,
             metrics_every: None,
             profile: false,
+            faults: FaultSpec::none(),
         }
     }
 
@@ -1177,6 +1332,64 @@ mod tests {
                 "learner {l}: {b} not a multiple of the push size {per_push}"
             );
         }
+    }
+
+    #[test]
+    fn heartbeat_action_recovers_fresh_suspects() {
+        // The regression the scan fix targets: a Suspect learner whose
+        // heartbeats resumed inside the suspicion threshold (e.g. after
+        // the post-eviction grace refresh) returns to Active instead of
+        // lingering Suspect until its next push.
+        let th = Duration::from_millis(150);
+        let fresh = Duration::from_millis(10);
+        let stale = Duration::from_millis(200);
+        assert_eq!(heartbeat_action(fresh, th, Phase::Suspect), HeartbeatAction::Recover);
+        assert_eq!(heartbeat_action(fresh, th, Phase::Active), HeartbeatAction::None);
+        assert_eq!(heartbeat_action(fresh, th, Phase::Rejoined), HeartbeatAction::None);
+        assert_eq!(heartbeat_action(stale, th, Phase::Active), HeartbeatAction::Suspect);
+        assert_eq!(heartbeat_action(stale, th, Phase::Rejoined), HeartbeatAction::Suspect);
+        // already Suspect: suspicion is raised exactly once
+        assert_eq!(heartbeat_action(stale, th, Phase::Suspect), HeartbeatAction::None);
+        // the threshold itself is not yet suspicious
+        assert_eq!(heartbeat_action(th, th, Phase::Active), HeartbeatAction::None);
+        assert_eq!(heartbeat_action(th, th, Phase::Suspect), HeartbeatAction::Recover);
+    }
+
+    #[test]
+    fn synthetic_faults_never_double_fold_and_balance() {
+        // Synthetic-mode chaos: heavy loss + dup on the mpsc push path.
+        // Every injected dup must bounce off the server's dedup window,
+        // the conservation law must balance, and training must still
+        // finish with finite weights.
+        let dim = 8;
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 4, 1);
+        cfg.epochs = 4;
+        cfg.samples_per_epoch = 128;
+        cfg.faults = FaultSpec::parse("loss:0.2,dup:0.3,retries:1").unwrap();
+        let theta0 = FlatVec::from_vec((0..dim).map(|i| i as f32 - 3.5).collect());
+        let opt = Optimizer::new(OptimizerKind::Sgd, 0.0, dim);
+        let lr = LrPolicy::new(Schedule::constant(0.05), Modulation::Auto, 128);
+        let r = run_live(&cfg, theta0, opt, lr, providers(4, dim)).unwrap();
+        assert!(r.updates > 0);
+        assert!(r.theta.is_finite());
+        let st = r.faults.as_ref().expect("fault plane was armed");
+        assert!(st.sent > 0);
+        assert!(st.balances(), "conservation law: {st:?}");
+        assert!(st.dups_injected > 0, "dup:0.3 over {} sends must fire", st.sent);
+        assert_eq!(
+            st.dedup_dropped, st.dups_injected,
+            "every injected dup is rejected by the window, nothing else is"
+        );
+        assert!(st.retransmits > 0, "loss:0.2 over {} sends must retry", st.sent);
+        assert_eq!(
+            st.retransmits,
+            st.retransmits_by.iter().sum::<u64>(),
+            "per-learner retransmit attribution must add up"
+        );
+        assert!(st.retry_bytes > 0.0);
+        // the quiet default books no fault stats at all
+        let quiet = run(Protocol::NSoftsync { n: 1 }, 4);
+        assert!(quiet.faults.is_none());
     }
 
     #[test]

@@ -61,7 +61,9 @@ use crate::netsim::cluster::{jittered, ClusterSpec, Fabric};
 use crate::netsim::cost::{LearnerCompute, ModelCost};
 use crate::netsim::event::EventQueue;
 use crate::netsim::failure::FailureInjector;
+use crate::netsim::faults::{FaultPlane, FaultSpec, RouteOutcome};
 use crate::netsim::overlap::OverlapTracker;
+use crate::netsim::reliable::{windows_from_json, windows_to_json, DedupWindow, FaultStats};
 use crate::params::lr::LrPolicy;
 use crate::params::optimizer::Optimizer;
 use crate::params::FlatVec;
@@ -154,6 +156,13 @@ pub struct SimConfig {
     /// (arms the registry by itself). Off by default; purely
     /// observational like the other obs knobs.
     pub profile: bool,
+    /// Message-level network chaos ([`crate::netsim::faults`]): loss,
+    /// duplication, reordering, delay spikes, and rack partitions on the
+    /// learner↔root links, with ack/retry retransmission and
+    /// receiver-side dedup ([`crate::netsim::reliable`]). Draws from its
+    /// own named RNG stream; quiet (`none`, the default) takes the exact
+    /// pre-chaos path, bit for bit.
+    pub faults: FaultSpec,
 }
 
 impl SimConfig {
@@ -192,6 +201,7 @@ impl SimConfig {
             collect_metrics: false,
             metrics_every: None,
             profile: false,
+            faults: FaultSpec::none(),
         }
     }
 
@@ -289,6 +299,9 @@ pub struct SimResult {
     pub trace: Option<Vec<crate::obs::trace::TraceEvent>>,
     /// Metrics snapshot (when [`SimConfig::collect_metrics`] is on).
     pub metrics: Option<Json>,
+    /// Fault/retry/dedup accounting when [`SimConfig::faults`] is
+    /// non-quiet (`None` for clean-network runs).
+    pub faults: Option<FaultStats>,
 }
 
 /// A gradient payload in flight. Boxed so timing-only runs (payload
@@ -310,6 +323,10 @@ type RelayBatch = Vec<(usize, u64, GradInFlight, Timestamp)>;
 /// incarnation left in flight (its compute completion, its gradient on
 /// the wire, its pending pull) is dropped on arrival instead of acting on
 /// the rejoined learner — message-loss semantics with no queue surgery.
+/// Delivery events additionally carry a per-link sequence number (`seq` /
+/// `rseq`) stamped at send time when the fault plane is armed, so
+/// receiver dedup windows can reject duplicated and retried messages;
+/// quiet runs stamp 0 everywhere and never consult the windows.
 enum Ev {
     /// Learner finished a mini-batch gradient.
     ComputeDone { learner: usize, inc: u64 },
@@ -317,20 +334,38 @@ enum Ev {
     /// the event — it is taken from the learner at send time, so an
     /// adv*-style mini-batch finishing while the previous push is still
     /// in flight can never clobber an untransmitted gradient.
-    PushAtRoot { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp },
+    PushAtRoot { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp, seq: u64 },
     /// Gradient delivered to the learner's leaf aggregator (Adv/Adv*);
     /// payload in the event, as with [`Ev::PushAtRoot`].
-    PushAtLeaf { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp },
+    PushAtLeaf { learner: usize, inc: u64, grad: GradInFlight, ts: Timestamp, seq: u64 },
     /// A leaf's aggregated batch arrived at the root.
-    RelayAtRoot { leaf: usize, batch: RelayBatch },
+    RelayAtRoot { leaf: usize, batch: RelayBatch, rseq: u64 },
     /// A pull completed at the learner.
-    PullDone { learner: usize, inc: u64, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    PullDone {
+        learner: usize,
+        inc: u64,
+        snapshot: Option<Arc<FlatVec>>,
+        ts: Timestamp,
+        seq: u64,
+    },
     /// Hardsync broadcast delivery.
-    Broadcast { learner: usize, inc: u64, snapshot: Option<Arc<FlatVec>>, ts: Timestamp },
+    Broadcast {
+        learner: usize,
+        inc: u64,
+        snapshot: Option<Arc<FlatVec>>,
+        ts: Timestamp,
+        seq: u64,
+    },
     /// A scheduled membership change (kill/rejoin/join).
     Churn { event: ChurnEvent },
     /// The random failure process fires (self re-arming).
     RandomKill,
+    /// A learner's retry chain exhausted its budget: the sender gives the
+    /// peer up for unreachable and hands it to the membership path
+    /// (Suspect → Dead) instead of letting a barrier deadlock on it.
+    FaultDead { learner: usize, inc: u64, by_partition: bool },
+    /// A partition window closed: revive the learners it evicted.
+    PartitionHeal,
 }
 
 impl Ev {
@@ -344,13 +379,14 @@ impl Ev {
             pairs.extend(rest);
             Json::obj(pairs)
         }
-        fn learner_ev(kind: &str, l: usize, inc: u64, ts: Timestamp) -> Json {
+        fn learner_ev(kind: &str, l: usize, inc: u64, ts: Timestamp, seq: u64) -> Json {
             ev(
                 kind,
                 vec![
                     ("l", Json::num(l as f64)),
                     ("inc", Json::num(inc as f64)),
                     ("ts", Json::num(ts as f64)),
+                    ("seq", Json::num(seq as f64)),
                 ],
             )
         }
@@ -359,15 +395,15 @@ impl Ev {
                 "compute",
                 vec![("l", Json::num(*learner as f64)), ("inc", Json::num(*inc as f64))],
             ),
-            Ev::PushAtRoot { learner, inc, grad, ts } => {
+            Ev::PushAtRoot { learner, inc, grad, ts, seq } => {
                 anyhow::ensure!(grad.is_none(), "numeric gradient in a timing-only checkpoint");
-                learner_ev("push_root", *learner, *inc, *ts)
+                learner_ev("push_root", *learner, *inc, *ts, *seq)
             }
-            Ev::PushAtLeaf { learner, inc, grad, ts } => {
+            Ev::PushAtLeaf { learner, inc, grad, ts, seq } => {
                 anyhow::ensure!(grad.is_none(), "numeric gradient in a timing-only checkpoint");
-                learner_ev("push_leaf", *learner, *inc, *ts)
+                learner_ev("push_leaf", *learner, *inc, *ts, *seq)
             }
-            Ev::RelayAtRoot { leaf, batch } => {
+            Ev::RelayAtRoot { leaf, batch, rseq } => {
                 let mut flat = Vec::with_capacity(batch.len() * 3);
                 for (l, inc, grad, ts) in batch {
                     anyhow::ensure!(
@@ -378,22 +414,26 @@ impl Ev {
                 }
                 ev(
                     "relay",
-                    vec![("leaf", Json::num(*leaf as f64)), ("batch", Json::arr_u64(&flat))],
+                    vec![
+                        ("leaf", Json::num(*leaf as f64)),
+                        ("batch", Json::arr_u64(&flat)),
+                        ("rseq", Json::num(*rseq as f64)),
+                    ],
                 )
             }
-            Ev::PullDone { learner, inc, snapshot, ts } => {
+            Ev::PullDone { learner, inc, snapshot, ts, seq } => {
                 anyhow::ensure!(
                     snapshot.is_none(),
                     "weight snapshot in a timing-only checkpoint"
                 );
-                learner_ev("pull", *learner, *inc, *ts)
+                learner_ev("pull", *learner, *inc, *ts, *seq)
             }
-            Ev::Broadcast { learner, inc, snapshot, ts } => {
+            Ev::Broadcast { learner, inc, snapshot, ts, seq } => {
                 anyhow::ensure!(
                     snapshot.is_none(),
                     "weight snapshot in a timing-only checkpoint"
                 );
-                learner_ev("bcast", *learner, *inc, *ts)
+                learner_ev("bcast", *learner, *inc, *ts, *seq)
             }
             Ev::Churn { event } => ev(
                 "churn",
@@ -411,10 +451,27 @@ impl Ev {
                 ],
             ),
             Ev::RandomKill => ev("random_kill", vec![]),
+            Ev::FaultDead { learner, inc, by_partition } => ev(
+                "fault_dead",
+                vec![
+                    ("l", Json::num(*learner as f64)),
+                    ("inc", Json::num(*inc as f64)),
+                    ("bp", Json::Bool(*by_partition)),
+                ],
+            ),
+            Ev::PartitionHeal => ev("heal", vec![]),
         })
     }
 
     fn from_json(v: &Json) -> Result<Ev> {
+        // `seq`/`rseq` default to 0 when absent, so checkpoints written
+        // before the fault layer existed still load.
+        fn seq_of(v: &Json, key: &str) -> Result<u64> {
+            Ok(match v.opt(key) {
+                Some(x) => x.as_u64()?,
+                None => 0,
+            })
+        }
         Ok(match v.get("k")?.as_str()? {
             "compute" => Ev::ComputeDone {
                 learner: v.get("l")?.as_usize()?,
@@ -425,12 +482,14 @@ impl Ev {
                 inc: v.get("inc")?.as_u64()?,
                 grad: None,
                 ts: v.get("ts")?.as_u64()?,
+                seq: seq_of(v, "seq")?,
             },
             "push_leaf" => Ev::PushAtLeaf {
                 learner: v.get("l")?.as_usize()?,
                 inc: v.get("inc")?.as_u64()?,
                 grad: None,
                 ts: v.get("ts")?.as_u64()?,
+                seq: seq_of(v, "seq")?,
             },
             "relay" => {
                 let flat = v.get("batch")?.as_u64_vec()?;
@@ -445,6 +504,7 @@ impl Ev {
                         .chunks_exact(3)
                         .map(|c| (c[0] as usize, c[1], None, c[2]))
                         .collect(),
+                    rseq: seq_of(v, "rseq")?,
                 }
             }
             "pull" => Ev::PullDone {
@@ -452,12 +512,14 @@ impl Ev {
                 inc: v.get("inc")?.as_u64()?,
                 snapshot: None,
                 ts: v.get("ts")?.as_u64()?,
+                seq: seq_of(v, "seq")?,
             },
             "bcast" => Ev::Broadcast {
                 learner: v.get("l")?.as_usize()?,
                 inc: v.get("inc")?.as_u64()?,
                 snapshot: None,
                 ts: v.get("ts")?.as_u64()?,
+                seq: seq_of(v, "seq")?,
             },
             "churn" => Ev::Churn {
                 event: ChurnEvent {
@@ -472,6 +534,12 @@ impl Ev {
                 },
             },
             "random_kill" => Ev::RandomKill,
+            "fault_dead" => Ev::FaultDead {
+                learner: v.get("l")?.as_usize()?,
+                inc: v.get("inc")?.as_u64()?,
+                by_partition: v.get("bp")?.as_bool()?,
+            },
+            "heal" => Ev::PartitionHeal,
             other => anyhow::bail!("unknown event kind {other:?}"),
         })
     }
@@ -502,6 +570,95 @@ struct LeafSim {
     cache_ts: Timestamp,
     cache_ready: f64,
     cache_snap: Option<Arc<FlatVec>>,
+}
+
+/// A routed-message verdict with the byte overhead already booked into
+/// the plane's ledger; the caller adds `extra_bytes` to the direction's
+/// root-byte counter (retransmissions and injected duplicates re-cross
+/// the same link as the original).
+enum Routed {
+    Deliver { at: f64, dup_at: Option<f64>, retries: u32, extra_bytes: f64 },
+    Lost { give_up_at: f64, by_partition: bool, extra_bytes: f64 },
+}
+
+/// Everything the engine tracks only when the fault plane is armed: the
+/// plane itself, per-link sequence counters (stamped at send time), the
+/// receiver-side dedup windows, and which learners fault-eviction took
+/// down (partition victims revive on heal; loss victims stay dead).
+struct FaultRuntime {
+    plane: FaultPlane,
+    /// Next upstream (gradient push) sequence per learner.
+    up_next: Vec<u64>,
+    /// Next downstream sequence per learner (pulls and broadcasts share
+    /// one stream — a learner waits on at most one of them at a time).
+    down_next: Vec<u64>,
+    /// Next relay sequence per aggregation leaf.
+    rseq_next: Vec<u64>,
+    /// Dedup windows: root/leaf gradient ingress per learner.
+    up_win: Vec<DedupWindow>,
+    /// Dedup windows: weight deliveries per learner.
+    down_win: Vec<DedupWindow>,
+    /// Dedup windows: relayed leaf batches at the root.
+    relay_win: Vec<DedupWindow>,
+    /// Learner evicted by retry exhaustion (still down).
+    evicted: Vec<bool>,
+    /// The eviction was partition-blocked, so the next heal revives it.
+    evicted_by_partition: Vec<bool>,
+}
+
+impl FaultRuntime {
+    fn new(spec: FaultSpec, seed: u64, lambda: usize, n_leaves: usize) -> FaultRuntime {
+        FaultRuntime {
+            plane: FaultPlane::new(spec, seed, lambda),
+            up_next: vec![0; lambda],
+            down_next: vec![0; lambda],
+            rseq_next: vec![0; n_leaves],
+            up_win: vec![DedupWindow::new(); lambda],
+            down_win: vec![DedupWindow::new(); lambda],
+            relay_win: vec![DedupWindow::new(); n_leaves],
+            evicted: vec![false; lambda],
+            evicted_by_partition: vec![false; lambda],
+        }
+    }
+
+    /// Route a learner↔infra message (capped retries; partitions apply).
+    fn route(
+        &mut self,
+        now: f64,
+        l: usize,
+        bytes: f64,
+        price: impl FnMut(f64) -> f64,
+    ) -> Routed {
+        match self.plane.route(now, l, price) {
+            RouteOutcome::Deliver { at, dup_at, retries } => {
+                let extra = (f64::from(retries) + f64::from(dup_at.is_some() as u8)) * bytes;
+                self.plane.stats.retry_bytes += extra;
+                Routed::Deliver { at, dup_at, retries, extra_bytes: extra }
+            }
+            RouteOutcome::Lost { give_up_at, retries, by_partition } => {
+                let extra = f64::from(retries) * bytes;
+                self.plane.stats.retry_bytes += extra;
+                Routed::Lost { give_up_at, by_partition, extra_bytes: extra }
+            }
+        }
+    }
+
+    /// Route an infra↔infra relay (delivery guaranteed at the safety cap).
+    fn route_reliable(
+        &mut self,
+        now: f64,
+        bytes: f64,
+        price: impl FnMut(f64) -> f64,
+    ) -> (f64, Option<f64>, f64) {
+        match self.plane.route_reliable(now, price) {
+            RouteOutcome::Deliver { at, dup_at, retries } => {
+                let extra = (f64::from(retries) + f64::from(dup_at.is_some() as u8)) * bytes;
+                self.plane.stats.retry_bytes += extra;
+                (at, dup_at, extra)
+            }
+            RouteOutcome::Lost { .. } => unreachable!("reliable routing never loses"),
+        }
+    }
 }
 
 pub struct SimEngine<'a> {
@@ -602,6 +759,10 @@ pub struct SimEngine<'a> {
     /// RNG or perturbs event order, so trajectories are bit-identical
     /// either way.
     obs: crate::obs::Obs,
+    /// Fault plane + reliability state, armed only when
+    /// [`SimConfig::faults`] is non-quiet — `None` keeps every send site
+    /// on the exact pre-chaos path.
+    faults: Option<FaultRuntime>,
 }
 
 impl<'a> SimEngine<'a> {
@@ -656,6 +817,7 @@ impl<'a> SimEngine<'a> {
         // so broadcasts stop paying `tree.members`' O(λ) scan per leaf.
         let leaf_members: Vec<Vec<usize>> =
             (0..tree.n_leaves).map(|leaf| tree.members(leaf).collect()).collect();
+        let n_leaves = tree.n_leaves;
         let n_params = theta0.len();
         let lr_copy = lr.clone();
         let server = ShardedServer::new(
@@ -738,14 +900,23 @@ impl<'a> SimEngine<'a> {
                 cfg.profile,
                 lambda,
             ),
+            faults: if cfg.faults.is_quiet() {
+                None
+            } else {
+                Some(FaultRuntime::new(cfg.faults.clone(), cfg.seed, lambda, n_leaves))
+            },
         }
     }
 
     /// Whether this run exercises the elastic machinery at all. Quiet
     /// runs skip the initial membership normalization so churn-free
-    /// trajectories stay bit-identical with pre-elastic builds.
+    /// trajectories stay bit-identical with pre-elastic builds. A faulted
+    /// network counts: retry exhaustion evicts through the same
+    /// membership path a churn kill takes.
     fn elastic_enabled(&self) -> bool {
-        !self.cfg.churn.is_quiet() || self.cfg.rescale != RescalePolicy::None
+        !self.cfg.churn.is_quiet()
+            || self.cfg.rescale != RescalePolicy::None
+            || self.faults.is_some()
     }
 
     fn node_of(&self, l: usize) -> usize {
@@ -850,6 +1021,15 @@ impl<'a> SimEngine<'a> {
             // the checked quota is the single source of the b < λ rule
             self.cfg.protocol.try_gradients_per_update(self.cfg.lambda)?;
         }
+        if !self.cfg.faults.partitions.is_empty() {
+            anyhow::ensure!(
+                self.cfg.faults.racks() <= self.cfg.lambda,
+                "fault spec names {} racks, but λ = {} learners cannot \
+                 populate them",
+                self.cfg.faults.racks(),
+                self.cfg.lambda
+            );
+        }
         // A resumed engine skips the cold-start prologue entirely: the
         // restored event queue already carries the scheduled churn, the
         // armed failure process, and every in-flight compute/push/pull.
@@ -878,6 +1058,16 @@ impl<'a> SimEngine<'a> {
                 self.q.schedule_in(dt, Ev::RandomKill);
                 self.random_armed = true;
             }
+            // Every partition window gets a heal event at its close, so
+            // partition-evicted learners come back deterministically.
+            let heals: Vec<f64> = self
+                .faults
+                .as_ref()
+                .map(|rt| rt.plane.spec().partitions.iter().map(|w| w.end()).collect())
+                .unwrap_or_default();
+            for at in heals {
+                self.q.schedule_at(at, Ev::PartitionHeal);
+            }
             for l in 0..self.cfg.lambda {
                 if self.membership.is_live(l) {
                     self.start_compute(0.0, l);
@@ -904,21 +1094,27 @@ impl<'a> SimEngine<'a> {
             }
             match ev {
                 Ev::ComputeDone { learner, inc } => self.on_compute_done(now, learner, inc)?,
-                Ev::PushAtRoot { learner, inc, grad, ts } => {
-                    self.on_push_at_root(now, learner, inc, grad, ts)?
+                Ev::PushAtRoot { learner, inc, grad, ts, seq } => {
+                    self.on_push_at_root(now, learner, inc, grad, ts, seq)?
                 }
-                Ev::PushAtLeaf { learner, inc, grad, ts } => {
-                    self.on_push_at_leaf(now, learner, inc, grad, ts)?
+                Ev::PushAtLeaf { learner, inc, grad, ts, seq } => {
+                    self.on_push_at_leaf(now, learner, inc, grad, ts, seq)?
                 }
-                Ev::RelayAtRoot { leaf, batch } => self.on_relay_at_root(now, leaf, batch)?,
-                Ev::PullDone { learner, inc, snapshot, ts } => {
-                    self.on_pull_done(now, learner, inc, snapshot, ts)
+                Ev::RelayAtRoot { leaf, batch, rseq } => {
+                    self.on_relay_at_root(now, leaf, batch, rseq)?
                 }
-                Ev::Broadcast { learner, inc, snapshot, ts } => {
-                    self.on_broadcast(now, learner, inc, snapshot, ts)
+                Ev::PullDone { learner, inc, snapshot, ts, seq } => {
+                    self.on_pull_done(now, learner, inc, snapshot, ts, seq)
+                }
+                Ev::Broadcast { learner, inc, snapshot, ts, seq } => {
+                    self.on_broadcast(now, learner, inc, snapshot, ts, seq)
                 }
                 Ev::Churn { event } => self.on_churn(now, event)?,
                 Ev::RandomKill => self.on_random_kill(now)?,
+                Ev::FaultDead { learner, inc, by_partition } => {
+                    self.on_fault_dead(now, learner, inc, by_partition)?
+                }
+                Ev::PartitionHeal => self.on_partition_heal(now)?,
             }
         }
 
@@ -973,13 +1169,16 @@ impl<'a> SimEngine<'a> {
                 .collect();
             self.obs.profile_finish(horizon, shard_busy);
         }
-        let metrics = self.obs.metrics_snapshot(
+        let mut metrics = self.obs.metrics_snapshot(
             &self.server.staleness,
             &self.server.shard_updates(),
             self.server.pushes_by(),
             self.root_bytes_in,
             self.root_bytes_out,
         );
+        if let (Some(m), Some(rt)) = (&mut metrics, &self.faults) {
+            crate::obs::metrics::attach_faults(m, rt.plane.stats.to_json());
+        }
         let trace = self.obs.take_trace();
         if let (Some(events), Some(path)) = (&trace, &self.cfg.trace_path) {
             crate::obs::trace::write(path, events)?;
@@ -1013,6 +1212,7 @@ impl<'a> SimEngine<'a> {
             sim_checkpoint,
             trace,
             metrics,
+            faults: self.faults.map(|rt| rt.plane.stats),
         })
     }
 
@@ -1026,7 +1226,7 @@ impl<'a> SimEngine<'a> {
     /// (a resume legitimately changes them — a traced resume of an
     /// untraced checkpoint is valid).
     pub fn config_fingerprint(cfg: &SimConfig) -> String {
-        format!(
+        let mut fp = format!(
             "timing|{}|{:?}|mu{}|lambda{}|epochs{}|seed{}|shards{}|{:?}|{:?}|{:?}|{:?}|{:?}|ckpt{}|{:?}|{:?}|{:?}",
             cfg.protocol.label(),
             cfg.arch,
@@ -1044,7 +1244,15 @@ impl<'a> SimEngine<'a> {
             cfg.hetero,
             cfg.adaptive,
             cfg.compress,
-        )
+        );
+        // Appended only when armed, so pre-chaos checkpoints of quiet
+        // configs keep their exact historical fingerprint.
+        if !cfg.faults.is_quiet() {
+            fp.push_str("|faults[");
+            fp.push_str(&cfg.faults.label());
+            fp.push(']');
+        }
+        fp
     }
 
     /// Capture the full mid-flight simulation state: the pending event
@@ -1229,6 +1437,23 @@ impl<'a> SimEngine<'a> {
                 self.hetero.degraded_state().iter().map(|&d| d as u64).collect();
             engine.push(("hetero_degraded", Json::arr_u64(&degraded)));
         }
+        if let Some(rt) = &self.faults {
+            // In-flight retry chains need no extra state: retries are
+            // priced at send time, so their deliveries/give-ups already
+            // sit in the event queue and the RNG has advanced past them.
+            engine.push(("fault_rng", Json::str(format!("{:016x}", rt.plane.rng_state()))));
+            engine.push(("fault_stats", rt.plane.stats.to_json()));
+            engine.push(("fault_up_next", Json::arr_u64(&rt.up_next)));
+            engine.push(("fault_down_next", Json::arr_u64(&rt.down_next)));
+            engine.push(("fault_rseq_next", Json::arr_u64(&rt.rseq_next)));
+            engine.push(("fault_up_win", windows_to_json(&rt.up_win)));
+            engine.push(("fault_down_win", windows_to_json(&rt.down_win)));
+            engine.push(("fault_relay_win", windows_to_json(&rt.relay_win)));
+            let ev: Vec<u64> = rt.evicted.iter().map(|&b| b as u64).collect();
+            let evp: Vec<u64> = rt.evicted_by_partition.iter().map(|&b| b as u64).collect();
+            engine.push(("fault_evicted", Json::arr_u64(&ev)));
+            engine.push(("fault_evicted_bp", Json::arr_u64(&evp)));
+        }
         if let Some(c) = &self.last_checkpoint {
             engine.push(("last_checkpoint", Json::str(c.to_json_string())));
         }
@@ -1370,6 +1595,41 @@ impl<'a> SimEngine<'a> {
                 e.get("hetero_degraded")?.as_u64_vec()?.iter().map(|&x| x != 0).collect();
             self.hetero.restore_state(h.state(), &degraded)?;
         }
+        // Armed-ness matches by construction: the faults label is part of
+        // the fingerprint checked above.
+        if let Some(rt) = self.faults.as_mut() {
+            rt.plane.restore_rng_state(
+                u64::from_str_radix(e.get("fault_rng")?.as_str()?, 16)
+                    .context("bad fault RNG state")?,
+            );
+            rt.plane.stats = FaultStats::from_json(e.get("fault_stats")?)?;
+            anyhow::ensure!(
+                rt.plane.stats.retransmits_by.len() == lambda,
+                "fault stats cover {} learners, config has {lambda}",
+                rt.plane.stats.retransmits_by.len()
+            );
+            let n_leaves = rt.relay_win.len();
+            rt.up_next = e.get("fault_up_next")?.as_u64_vec()?;
+            rt.down_next = e.get("fault_down_next")?.as_u64_vec()?;
+            rt.rseq_next = e.get("fault_rseq_next")?.as_u64_vec()?;
+            anyhow::ensure!(
+                rt.up_next.len() == lambda
+                    && rt.down_next.len() == lambda
+                    && rt.rseq_next.len() == n_leaves,
+                "fault sequence-counter length mismatch"
+            );
+            rt.up_win = windows_from_json(e.get("fault_up_win")?, lambda)?;
+            rt.down_win = windows_from_json(e.get("fault_down_win")?, lambda)?;
+            rt.relay_win = windows_from_json(e.get("fault_relay_win")?, n_leaves)?;
+            rt.evicted =
+                e.get("fault_evicted")?.as_u64_vec()?.iter().map(|&x| x != 0).collect();
+            rt.evicted_by_partition =
+                e.get("fault_evicted_bp")?.as_u64_vec()?.iter().map(|&x| x != 0).collect();
+            anyhow::ensure!(
+                rt.evicted.len() == lambda && rt.evicted_by_partition.len() == lambda,
+                "fault eviction-flag length mismatch"
+            );
+        }
         self.cur_mu = e.get("cur_mu")?.as_usize()?;
         self.base_compute = self.cfg.compute.minibatch_secs(&self.cfg.model, self.cur_mu);
         self.rescale_log = e
@@ -1501,23 +1761,78 @@ impl<'a> SimEngine<'a> {
                 let bytes = self.wire.push_bytes();
                 self.comm_bytes_by_learner[l] += bytes;
                 self.root_bytes_in += bytes;
-                let t = self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, bytes);
-                self.obs.push(l, now, t);
-                self.q.schedule_at(
-                    t,
-                    Ev::PushAtRoot { learner: l, inc, grad: enc, ts: grad_ts },
-                );
+                if self.faults.is_some() {
+                    let src = self.node_of(l);
+                    let fabric = &mut self.fabric;
+                    let ps_eps = &self.ps_eps;
+                    let rt = self.faults.as_mut().expect("checked above");
+                    let seq = rt.up_next[l];
+                    rt.up_next[l] += 1;
+                    let routed =
+                        rt.route(now, l, bytes, |t| fabric.send_to_shards(t, src, ps_eps, bytes));
+                    let (times, extra) = self.note_routed(now, l, inc, routed);
+                    self.comm_bytes_by_learner[l] += extra;
+                    self.root_bytes_in += extra;
+                    if let Some((at, dup_at)) = times {
+                        self.obs.push(l, now, at);
+                        self.q.schedule_at(
+                            at,
+                            Ev::PushAtRoot { learner: l, inc, grad: enc, ts: grad_ts, seq },
+                        );
+                        if let Some(d) = dup_at {
+                            // The duplicate trails the original (and ties
+                            // break by insertion order), so the dedup window
+                            // always rejects it — it never needs the payload.
+                            self.q.schedule_at(
+                                d,
+                                Ev::PushAtRoot { learner: l, inc, grad: None, ts: grad_ts, seq },
+                            );
+                        }
+                    }
+                } else {
+                    let t = self.fabric.send_to_shards(now, self.node_of(l), &self.ps_eps, bytes);
+                    self.obs.push(l, now, t);
+                    self.q.schedule_at(
+                        t,
+                        Ev::PushAtRoot { learner: l, inc, grad: enc, ts: grad_ts, seq: 0 },
+                    );
+                }
             }
             Arch::Adv => {
                 let leaf = self.tree.leaf_of[l];
                 let bytes = self.wire.push_bytes();
                 self.comm_bytes_by_learner[l] += bytes;
-                let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
-                self.obs.push(l, now, t);
-                self.q.schedule_at(
-                    t,
-                    Ev::PushAtLeaf { learner: l, inc, grad: enc, ts: grad_ts },
-                );
+                if self.faults.is_some() {
+                    let src = self.node_of(l);
+                    let dst = self.leaf_node(leaf);
+                    let fabric = &mut self.fabric;
+                    let rt = self.faults.as_mut().expect("checked above");
+                    let seq = rt.up_next[l];
+                    rt.up_next[l] += 1;
+                    let routed = rt.route(now, l, bytes, |t| fabric.send(t, src, dst, bytes));
+                    let (times, extra) = self.note_routed(now, l, inc, routed);
+                    self.comm_bytes_by_learner[l] += extra;
+                    if let Some((at, dup_at)) = times {
+                        self.obs.push(l, now, at);
+                        self.q.schedule_at(
+                            at,
+                            Ev::PushAtLeaf { learner: l, inc, grad: enc, ts: grad_ts, seq },
+                        );
+                        if let Some(d) = dup_at {
+                            self.q.schedule_at(
+                                d,
+                                Ev::PushAtLeaf { learner: l, inc, grad: None, ts: grad_ts, seq },
+                            );
+                        }
+                    }
+                } else {
+                    let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+                    self.obs.push(l, now, t);
+                    self.q.schedule_at(
+                        t,
+                        Ev::PushAtLeaf { learner: l, inc, grad: enc, ts: grad_ts, seq: 0 },
+                    );
+                }
             }
             Arch::AdvStar => {
                 if self.slots[l].pipe_busy {
@@ -1544,11 +1859,62 @@ impl<'a> SimEngine<'a> {
         let inc = self.slots[l].inc;
         let bytes = self.wire.push_bytes();
         self.comm_bytes_by_learner[l] += bytes;
-        let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
-        self.obs.push(l, now, t);
-        self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc, grad, ts });
+        if self.faults.is_some() {
+            let src = self.node_of(l);
+            let dst = self.leaf_node(leaf);
+            let fabric = &mut self.fabric;
+            let rt = self.faults.as_mut().expect("checked above");
+            let seq = rt.up_next[l];
+            rt.up_next[l] += 1;
+            let routed = rt.route(now, l, bytes, |t| fabric.send(t, src, dst, bytes));
+            let (times, extra) = self.note_routed(now, l, inc, routed);
+            self.comm_bytes_by_learner[l] += extra;
+            if let Some((at, dup_at)) = times {
+                self.obs.push(l, now, at);
+                self.q.schedule_at(at, Ev::PushAtLeaf { learner: l, inc, grad, ts, seq });
+                if let Some(d) = dup_at {
+                    self.q.schedule_at(
+                        d,
+                        Ev::PushAtLeaf { learner: l, inc, grad: None, ts, seq },
+                    );
+                }
+            }
+            // on Lost the pipeline slot stays busy until the FaultDead
+            // eviction resets it in apply_kill — the learner is gone anyway
+        } else {
+            let t = self.fabric.send(now, self.node_of(l), self.leaf_node(leaf), bytes);
+            self.obs.push(l, now, t);
+            self.q.schedule_at(t, Ev::PushAtLeaf { learner: l, inc, grad, ts, seq: 0 });
+        }
     }
 
+    /// Book one fault-plane routing outcome: the retransmit/drop trace
+    /// instants plus, on retry exhaustion, the deferred [`Ev::FaultDead`]
+    /// eviction. Returns the delivery times `(at, dup_at)` — `None` when
+    /// the message was lost — and the retry/dup byte overhead, which the
+    /// caller adds to exactly the counters the original message was
+    /// booked into.
+    fn note_routed(
+        &mut self,
+        now: f64,
+        l: usize,
+        inc: u64,
+        routed: Routed,
+    ) -> (Option<(f64, Option<f64>)>, f64) {
+        match routed {
+            Routed::Deliver { at, dup_at, retries, extra_bytes } => {
+                self.obs.fault_retransmit(l, now, u64::from(retries));
+                (Some((at, dup_at)), extra_bytes)
+            }
+            Routed::Lost { give_up_at, by_partition, extra_bytes } => {
+                self.obs.fault_drop(l, give_up_at);
+                self.q.schedule_at(give_up_at, Ev::FaultDead { learner: l, inc, by_partition });
+                (None, extra_bytes)
+            }
+        }
+    }
+
+    #[allow(clippy::too_many_arguments)]
     fn on_push_at_root(
         &mut self,
         now: f64,
@@ -1556,9 +1922,17 @@ impl<'a> SimEngine<'a> {
         inc: u64,
         grad: GradInFlight,
         ts: Timestamp,
+        seq: u64,
     ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return Ok(()); // gradient of a dead incarnation is discarded
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            if !rt.up_win[l].accept(seq) {
+                rt.plane.stats.dedup_dropped += 1;
+                self.obs.fault_dedup(l, now);
+                return Ok(()); // duplicate/replayed gradient: never folded twice
+            }
         }
         let out = self.fold(now, l, inc, grad, ts)?;
         if self.cfg.protocol.is_barrier() {
@@ -1579,6 +1953,7 @@ impl<'a> SimEngine<'a> {
         Ok(())
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_push_at_leaf(
         &mut self,
         now: f64,
@@ -1586,9 +1961,19 @@ impl<'a> SimEngine<'a> {
         inc: u64,
         grad: GradInFlight,
         ts: Timestamp,
+        seq: u64,
     ) -> Result<()> {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return Ok(());
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            if !rt.up_win[l].accept(seq) {
+                rt.plane.stats.dedup_dropped += 1;
+                self.obs.fault_dedup(l, now);
+                // rejected before the barrier/pipeline bookkeeping below:
+                // the original delivery already did all of it
+                return Ok(());
+            }
         }
         let leaf = self.tree.leaf_of[l];
         self.leaves[leaf].queue.push((l, inc, grad, ts));
@@ -1637,19 +2022,62 @@ impl<'a> SimEngine<'a> {
         // encodings, capped at the dense size (see WireModel::relay_bytes).
         let bytes = self.wire.relay_bytes(batch.len());
         self.root_bytes_in += bytes;
-        let t = self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, bytes);
-        self.obs.relay(leaf, now, t);
-        if self.obs.profile_enabled() {
-            // The relay span is keyed by leaf; the profiler needs it per
-            // carried gradient to walk the commit chain back through it.
-            for (l, _, _, _) in &batch {
-                self.obs.profile_relay(*l, now, t);
+        if self.faults.is_some() {
+            // The leaf→root trunk uses the *reliable* routing path: it
+            // retries past the learner budget and is never lost (a lost
+            // relay would wedge `relay_busy` forever — the trunk link is
+            // infra-to-infra, not a learner that membership can evict).
+            let src = self.leaf_node(leaf);
+            let fabric = &mut self.fabric;
+            let ps_eps = &self.ps_eps;
+            let rt = self.faults.as_mut().expect("checked above");
+            let rseq = rt.rseq_next[leaf];
+            rt.rseq_next[leaf] += 1;
+            let (t, dup_at, extra) =
+                rt.route_reliable(now, bytes, |at| fabric.send_to_shards(at, src, ps_eps, bytes));
+            self.root_bytes_in += extra;
+            self.obs.relay(leaf, now, t);
+            if self.obs.profile_enabled() {
+                for (l, _, _, _) in &batch {
+                    self.obs.profile_relay(*l, now, t);
+                }
             }
+            self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch, rseq });
+            if let Some(d) = dup_at {
+                // payload-free duplicate: it trails the original, so the
+                // rseq window rejects it before the batch would be needed
+                self.q.schedule_at(d, Ev::RelayAtRoot { leaf, batch: Vec::new(), rseq });
+            }
+        } else {
+            let t = self.fabric.send_to_shards(now, self.leaf_node(leaf), &self.ps_eps, bytes);
+            self.obs.relay(leaf, now, t);
+            if self.obs.profile_enabled() {
+                // The relay span is keyed by leaf; the profiler needs it per
+                // carried gradient to walk the commit chain back through it.
+                for (l, _, _, _) in &batch {
+                    self.obs.profile_relay(*l, now, t);
+                }
+            }
+            self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch, rseq: 0 });
         }
-        self.q.schedule_at(t, Ev::RelayAtRoot { leaf, batch });
     }
 
-    fn on_relay_at_root(&mut self, now: f64, leaf: usize, batch: RelayBatch) -> Result<()> {
+    fn on_relay_at_root(
+        &mut self,
+        now: f64,
+        leaf: usize,
+        batch: RelayBatch,
+        rseq: u64,
+    ) -> Result<()> {
+        if let Some(rt) = self.faults.as_mut() {
+            if !rt.relay_win[leaf].accept(rseq) {
+                rt.plane.stats.dedup_dropped += 1;
+                self.obs.fault_dedup(leaf, now);
+                // rejected before relay_busy is cleared: the original
+                // delivery already released the trunk
+                return Ok(());
+            }
+        }
         for (l, inc, grad, ts) in batch {
             // A backup-sync drop needs no action here: the learner either
             // already took the round's broadcast (its stale gradient was
@@ -1825,18 +2253,52 @@ impl<'a> SimEngine<'a> {
         self.obs.barrier_round_end();
         match self.cfg.arch {
             Arch::Base => {
-                for &l in &self.waiting_scratch {
-                    let inc = self.slots[l].inc;
-                    let bytes = self.wire.pull_bytes();
-                    self.root_bytes_out += bytes;
-                    let t = self
-                        .fabric
-                        .send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
-                    self.obs.broadcast(l, now, t);
-                    self.q.schedule_at(
-                        t,
-                        Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
-                    );
+                if self.faults.is_some() {
+                    // index loop: `note_routed` needs `&mut self`, which an
+                    // iterator borrow of `waiting_scratch` would forbid
+                    for i in 0..self.waiting_scratch.len() {
+                        let l = self.waiting_scratch[i];
+                        let inc = self.slots[l].inc;
+                        let bytes = self.wire.pull_bytes();
+                        self.root_bytes_out += bytes;
+                        let dst = self.node_of(l);
+                        let fabric = &mut self.fabric;
+                        let ps_eps = &self.ps_eps;
+                        let rt = self.faults.as_mut().expect("checked above");
+                        let seq = rt.down_next[l];
+                        rt.down_next[l] += 1;
+                        let routed = rt
+                            .route(now, l, bytes, |t| fabric.send_from_shards(t, ps_eps, dst, bytes));
+                        let (times, extra) = self.note_routed(now, l, inc, routed);
+                        self.root_bytes_out += extra;
+                        if let Some((t, dup_at)) = times {
+                            self.obs.broadcast(l, now, t);
+                            self.q.schedule_at(
+                                t,
+                                Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts, seq },
+                            );
+                            if let Some(d) = dup_at {
+                                self.q.schedule_at(
+                                    d,
+                                    Ev::Broadcast { learner: l, inc, snapshot: None, ts, seq },
+                                );
+                            }
+                        }
+                    }
+                } else {
+                    for &l in &self.waiting_scratch {
+                        let inc = self.slots[l].inc;
+                        let bytes = self.wire.pull_bytes();
+                        self.root_bytes_out += bytes;
+                        let t = self
+                            .fabric
+                            .send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
+                        self.obs.broadcast(l, now, t);
+                        self.q.schedule_at(
+                            t,
+                            Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts, seq: 0 },
+                        );
+                    }
                 }
             }
             Arch::Adv | Arch::AdvStar => {
@@ -1852,14 +2314,19 @@ impl<'a> SimEngine<'a> {
                         self.waiting_mask[l] = true;
                     }
                 }
-                for (leaf, members) in self.leaf_members.iter().enumerate() {
+                // Index loops (not iterator borrows): the fault path calls
+                // `note_routed(&mut self)` per member. Iteration order is
+                // identical to the old iterator form, so quiet runs are
+                // unchanged bit for bit.
+                for leaf in 0..self.leaf_members.len() {
                     // The shards→leaf hop fires lazily on the first
                     // eligible member, so skipped leaves cost nothing and
                     // the fabric call order matches the old collect-first
                     // code exactly (one send_from_shards, then the member
                     // sends in member order).
                     let mut t1: Option<f64> = None;
-                    for &l in members {
+                    for mi in 0..self.leaf_members[leaf].len() {
+                        let l = self.leaf_members[leaf][mi];
                         if !self.membership.is_live(l) || (backup && !self.waiting_mask[l]) {
                             continue;
                         }
@@ -1879,14 +2346,58 @@ impl<'a> SimEngine<'a> {
                             }
                         };
                         let inc = self.slots[l].inc;
-                        let t =
-                            self.fabric.send(start, self.leaf_node(leaf), self.node_of(l), bytes);
-                        // span covers both hops: round close → delivery
-                        self.obs.broadcast(l, now, t);
-                        self.q.schedule_at(
-                            t,
-                            Ev::Broadcast { learner: l, inc, snapshot: snap.clone(), ts },
-                        );
+                        if self.faults.is_some() {
+                            let src = self.leaf_node(leaf);
+                            let dst = self.node_of(l);
+                            let fabric = &mut self.fabric;
+                            let rt = self.faults.as_mut().expect("checked above");
+                            let seq = rt.down_next[l];
+                            rt.down_next[l] += 1;
+                            let routed =
+                                rt.route(start, l, bytes, |t| fabric.send(t, src, dst, bytes));
+                            let (times, _extra) = self.note_routed(start, l, inc, routed);
+                            // the member hop books no root bytes (only the
+                            // shared shards→leaf hop does), so neither does
+                            // its retry overhead
+                            if let Some((t, dup_at)) = times {
+                                self.obs.broadcast(l, now, t);
+                                self.q.schedule_at(
+                                    t,
+                                    Ev::Broadcast {
+                                        learner: l,
+                                        inc,
+                                        snapshot: snap.clone(),
+                                        ts,
+                                        seq,
+                                    },
+                                );
+                                if let Some(d) = dup_at {
+                                    self.q.schedule_at(
+                                        d,
+                                        Ev::Broadcast { learner: l, inc, snapshot: None, ts, seq },
+                                    );
+                                }
+                            }
+                        } else {
+                            let t = self.fabric.send(
+                                start,
+                                self.leaf_node(leaf),
+                                self.node_of(l),
+                                bytes,
+                            );
+                            // span covers both hops: round close → delivery
+                            self.obs.broadcast(l, now, t);
+                            self.q.schedule_at(
+                                t,
+                                Ev::Broadcast {
+                                    learner: l,
+                                    inc,
+                                    snapshot: snap.clone(),
+                                    ts,
+                                    seq: 0,
+                                },
+                            );
+                        }
                     }
                 }
                 if backup {
@@ -1906,17 +2417,67 @@ impl<'a> SimEngine<'a> {
             let snap = self.server_snapshot();
             let bytes = self.wire.pull_bytes();
             self.root_bytes_out += bytes;
-            let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
-            self.obs.pull(l, now, t);
-            self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
+            if self.faults.is_some() {
+                let dst = self.node_of(l);
+                let fabric = &mut self.fabric;
+                let ps_eps = &self.ps_eps;
+                let rt = self.faults.as_mut().expect("checked above");
+                let seq = rt.down_next[l];
+                rt.down_next[l] += 1;
+                let routed =
+                    rt.route(now, l, bytes, |t| fabric.send_from_shards(t, ps_eps, dst, bytes));
+                let (times, extra) = self.note_routed(now, l, inc, routed);
+                self.root_bytes_out += extra;
+                if let Some((t, dup_at)) = times {
+                    self.obs.pull(l, now, t);
+                    self.q.schedule_at(
+                        t,
+                        Ev::PullDone { learner: l, inc, snapshot: snap, ts, seq },
+                    );
+                    if let Some(d) = dup_at {
+                        self.q.schedule_at(
+                            d,
+                            Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                        );
+                    }
+                }
+            } else {
+                let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
+                self.obs.pull(l, now, t);
+                self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts, seq: 0 });
+            }
         } else {
             // timestamp inquiry only (§3.2's pull-skip)
             let ts = self.slots[l].state.ts;
-            self.obs.pull(l, now, now + self.cfg.cluster.latency);
-            self.q.schedule_at(
-                now + self.cfg.cluster.latency,
-                Ev::PullDone { learner: l, inc, snapshot: None, ts },
-            );
+            if self.faults.is_some() {
+                // latency-only pricing, zero bytes: the inquiry is still a
+                // message — it can be lost, retried, and duplicated
+                let lat = self.cfg.cluster.latency;
+                let rt = self.faults.as_mut().expect("checked above");
+                let seq = rt.down_next[l];
+                rt.down_next[l] += 1;
+                let routed = rt.route(now, l, 0.0, |t| t + lat);
+                let (times, _extra) = self.note_routed(now, l, inc, routed);
+                if let Some((t, dup_at)) = times {
+                    self.obs.pull(l, now, t);
+                    self.q.schedule_at(
+                        t,
+                        Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                    );
+                    if let Some(d) = dup_at {
+                        self.q.schedule_at(
+                            d,
+                            Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                        );
+                    }
+                }
+            } else {
+                self.obs.pull(l, now, now + self.cfg.cluster.latency);
+                self.q.schedule_at(
+                    now + self.cfg.cluster.latency,
+                    Ev::PullDone { learner: l, inc, snapshot: None, ts, seq: 0 },
+                );
+            }
         }
     }
 
@@ -1926,11 +2487,33 @@ impl<'a> SimEngine<'a> {
         let server_ts = self.server.timestamp();
         if !self.slots[l].state.needs_pull(server_ts) {
             let ts = self.slots[l].state.ts;
-            self.obs.pull(l, now, now + self.cfg.cluster.latency);
-            self.q.schedule_at(
-                now + self.cfg.cluster.latency,
-                Ev::PullDone { learner: l, inc, snapshot: None, ts },
-            );
+            if self.faults.is_some() {
+                let lat = self.cfg.cluster.latency;
+                let rt = self.faults.as_mut().expect("checked above");
+                let seq = rt.down_next[l];
+                rt.down_next[l] += 1;
+                let routed = rt.route(now, l, 0.0, |t| t + lat);
+                let (times, _extra) = self.note_routed(now, l, inc, routed);
+                if let Some((t, dup_at)) = times {
+                    self.obs.pull(l, now, t);
+                    self.q.schedule_at(
+                        t,
+                        Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                    );
+                    if let Some(d) = dup_at {
+                        self.q.schedule_at(
+                            d,
+                            Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                        );
+                    }
+                }
+            } else {
+                self.obs.pull(l, now, now + self.cfg.cluster.latency);
+                self.q.schedule_at(
+                    now + self.cfg.cluster.latency,
+                    Ev::PullDone { learner: l, inc, snapshot: None, ts, seq: 0 },
+                );
+            }
             return;
         }
         // Refresh the leaf cache from the root if it is stale and no fetch
@@ -1948,20 +2531,52 @@ impl<'a> SimEngine<'a> {
         }
         // Join the cached/in-flight copy; final hop is node-local.
         let ready = self.leaves[leaf].cache_ready.max(now);
-        let t =
-            self.fabric.send(ready, self.leaf_node(leaf), self.node_of(l), self.wire.pull_bytes());
-        self.obs.pull(l, now, t);
-        self.q.schedule_at(
-            t,
-            Ev::PullDone {
-                learner: l,
-                inc,
-                snapshot: self.leaves[leaf].cache_snap.clone(),
-                ts: self.leaves[leaf].cache_ts,
-            },
-        );
+        if self.faults.is_some() {
+            let src = self.leaf_node(leaf);
+            let dst = self.node_of(l);
+            let bytes = self.wire.pull_bytes();
+            let fabric = &mut self.fabric;
+            let rt = self.faults.as_mut().expect("checked above");
+            let seq = rt.down_next[l];
+            rt.down_next[l] += 1;
+            let routed = rt.route(ready, l, bytes, |t| fabric.send(t, src, dst, bytes));
+            let (times, _extra) = self.note_routed(ready, l, inc, routed);
+            // the leaf→learner hop books no root bytes, so neither does
+            // its retry overhead
+            if let Some((t, dup_at)) = times {
+                self.obs.pull(l, now, t);
+                let snap = self.leaves[leaf].cache_snap.clone();
+                let ts = self.leaves[leaf].cache_ts;
+                self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts, seq });
+                if let Some(d) = dup_at {
+                    self.q.schedule_at(
+                        d,
+                        Ev::PullDone { learner: l, inc, snapshot: None, ts, seq },
+                    );
+                }
+            }
+        } else {
+            let t = self.fabric.send(
+                ready,
+                self.leaf_node(leaf),
+                self.node_of(l),
+                self.wire.pull_bytes(),
+            );
+            self.obs.pull(l, now, t);
+            self.q.schedule_at(
+                t,
+                Ev::PullDone {
+                    learner: l,
+                    inc,
+                    snapshot: self.leaves[leaf].cache_snap.clone(),
+                    ts: self.leaves[leaf].cache_ts,
+                    seq: 0,
+                },
+            );
+        }
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_pull_done(
         &mut self,
         now: f64,
@@ -1969,9 +2584,17 @@ impl<'a> SimEngine<'a> {
         inc: u64,
         snapshot: Option<Arc<FlatVec>>,
         ts: Timestamp,
+        seq: u64,
     ) {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return; // pulled weights for a dead incarnation: dropped
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            if !rt.down_win[l].accept(seq) {
+                rt.plane.stats.dedup_dropped += 1;
+                self.obs.fault_dedup(l, now);
+                return; // a duplicated pull must not restart the compute loop
+            }
         }
         if let Some(s) = snapshot {
             self.slots[l].state.install(&s, ts);
@@ -1983,6 +2606,7 @@ impl<'a> SimEngine<'a> {
         self.start_compute(now, l);
     }
 
+    #[allow(clippy::too_many_arguments)]
     fn on_broadcast(
         &mut self,
         now: f64,
@@ -1990,9 +2614,17 @@ impl<'a> SimEngine<'a> {
         inc: u64,
         snapshot: Option<Arc<FlatVec>>,
         ts: Timestamp,
+        seq: u64,
     ) {
         if inc != self.slots[l].inc || !self.membership.is_live(l) {
             return;
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            if !rt.down_win[l].accept(seq) {
+                rt.plane.stats.dedup_dropped += 1;
+                self.obs.fault_dedup(l, now);
+                return; // a duplicated broadcast must not start a second loop
+            }
         }
         if let Some(s) = snapshot {
             self.slots[l].state.install(&s, ts);
@@ -2126,8 +2758,73 @@ impl<'a> SimEngine<'a> {
         let snap = self.server_snapshot();
         let bytes = self.wire.pull_bytes();
         self.root_bytes_out += bytes;
-        let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
-        self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts });
+        if self.faults.is_some() {
+            let dst = self.node_of(l);
+            let fabric = &mut self.fabric;
+            let ps_eps = &self.ps_eps;
+            let rt = self.faults.as_mut().expect("checked above");
+            let seq = rt.down_next[l];
+            rt.down_next[l] += 1;
+            let routed =
+                rt.route(now, l, bytes, |t| fabric.send_from_shards(t, ps_eps, dst, bytes));
+            let (times, extra) = self.note_routed(now, l, inc, routed);
+            self.root_bytes_out += extra;
+            if let Some((t, dup_at)) = times {
+                self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts, seq });
+                if let Some(d) = dup_at {
+                    self.q
+                        .schedule_at(d, Ev::PullDone { learner: l, inc, snapshot: None, ts, seq });
+                }
+            }
+        } else {
+            let t = self.fabric.send_from_shards(now, &self.ps_eps, self.node_of(l), bytes);
+            self.q.schedule_at(t, Ev::PullDone { learner: l, inc, snapshot: snap, ts, seq: 0 });
+        }
+        Ok(())
+    }
+
+    // ---- network chaos -----------------------------------------------------
+
+    /// Retry exhaustion: the fault plane has given learner `l` up for
+    /// unreachable. Route it through the same Suspect → Dead membership
+    /// path a churn death takes (barrier removal, μ rescale, quota
+    /// flush), so barrier protocols shed the learner instead of
+    /// deadlocking on it. Partition victims are remembered for revival
+    /// when their window heals; loss-exhausted learners stay down.
+    fn on_fault_dead(&mut self, now: f64, l: usize, inc: u64, by_partition: bool) -> Result<()> {
+        if inc != self.slots[l].inc || !self.membership.is_live(l) {
+            return Ok(()); // a churn event got there first, or a stale chain
+        }
+        use crate::elastic::membership::Phase;
+        if matches!(self.membership.phase(l), Phase::Active | Phase::Rejoined) {
+            self.membership.suspect(l, now)?;
+        }
+        if let Some(rt) = self.faults.as_mut() {
+            rt.evicted[l] = true;
+            rt.evicted_by_partition[l] = by_partition;
+        }
+        self.obs.fault_evict(l, now);
+        self.apply_kill(now, l)
+    }
+
+    /// A partition window closed: revive every learner that partition
+    /// blocking evicted, provided no other window still cuts it off.
+    fn on_partition_heal(&mut self, now: f64) -> Result<()> {
+        self.obs.fault_heal(now);
+        let mut healed = Vec::new();
+        if let Some(rt) = self.faults.as_mut() {
+            for l in 0..rt.evicted.len() {
+                if rt.evicted[l] && rt.evicted_by_partition[l] && !rt.plane.partitioned(l, now) {
+                    rt.evicted[l] = false;
+                    rt.evicted_by_partition[l] = false;
+                    healed.push(l);
+                }
+            }
+        }
+        for l in healed {
+            // apply_revive is lenient about races with churn rejoins
+            self.apply_revive(now, l, true)?;
+        }
         Ok(())
     }
 

@@ -164,6 +164,14 @@ pub struct ShardedServer {
     /// timing paths are mutually exclusive per run, so one spare serves
     /// both).
     clock_spare: Vec<Timestamp>,
+    /// Server-side dedup backstop ([`crate::netsim::reliable`]): one
+    /// window per learner slot over push sequence numbers, armed only
+    /// when a fault plane can deliver duplicates (the live engine's
+    /// receipt path checks here, where the accumulator lives). `None` =
+    /// reliable transport, zero cost.
+    dedup: Option<Vec<crate::netsim::reliable::DedupWindow>>,
+    /// Pushes the dedup backstop rejected (arrived but not folded).
+    pub dedup_dropped: u64,
 }
 
 impl ShardedServer {
@@ -209,6 +217,35 @@ impl ShardedServer {
             dropped: 0,
             decode_buf: FlatVec::zeros(0),
             clock_spare: Vec::new(),
+            dedup: None,
+            dedup_dropped: 0,
+        }
+    }
+
+    /// Arm the per-learner dedup backstop (idempotent). The live engine
+    /// calls this when its fault plane can duplicate or retry pushes.
+    pub fn arm_dedup(&mut self) {
+        if self.dedup.is_none() {
+            self.dedup =
+                Some(vec![crate::netsim::reliable::DedupWindow::new(); self.id_bound]);
+        }
+    }
+
+    /// Returns `true` iff the push stamped `seq` from learner `l` should
+    /// be folded. Unarmed servers accept everything (exactly-once
+    /// transport needs no window); armed ones reject replays and count
+    /// them in [`ShardedServer::dedup_dropped`].
+    pub fn dedup_accept(&mut self, l: usize, seq: u64) -> bool {
+        match self.dedup.as_mut() {
+            None => true,
+            Some(wins) => {
+                if wins[l].accept(seq) {
+                    true
+                } else {
+                    self.dedup_dropped += 1;
+                    false
+                }
+            }
         }
     }
 
@@ -590,7 +627,7 @@ impl ShardedServer {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::num(1.0)),
             ("protocol", Json::str(self.cfg.protocol.label())),
             ("mu", Json::num(self.cfg.mu as f64)),
@@ -617,7 +654,14 @@ impl ShardedServer {
             ("staleness", self.staleness.to_json()),
             ("lr", self.lr.to_json()),
             ("shard_state", Json::Arr(shard_state)),
-        ])
+        ];
+        // Dedup state rides only when armed, so fault-free checkpoints
+        // keep the exact pre-chaos byte layout.
+        if let Some(wins) = &self.dedup {
+            pairs.push(("dedup", crate::netsim::reliable::windows_to_json(wins)));
+            pairs.push(("dedup_dropped", Json::num(self.dedup_dropped as f64)));
+        }
+        Json::obj(pairs)
     }
 
     /// Restore a server from [`ShardedServer::to_json`] output. Enforces
@@ -693,6 +737,13 @@ impl ShardedServer {
             Ok(v) => v.as_u64_vec()?,
             Err(_) => vec![0; id_bound],
         };
+        // Dedup backstop state is present only in fault-armed checkpoints
+        // (absent = unarmed, the historical format).
+        let dedup = match j.get("dedup") {
+            Ok(v) => Some(crate::netsim::reliable::windows_from_json(v, id_bound)?),
+            Err(_) => None,
+        };
+        let dedup_dropped = j.get("dedup_dropped").and_then(|v| v.as_u64()).unwrap_or(0);
         Ok(ShardedServer {
             id_bound,
             dropped,
@@ -720,6 +771,8 @@ impl ShardedServer {
             timing_pending: j.get("timing_pending")?.as_u64_vec()?,
             decode_buf: FlatVec::zeros(0),
             clock_spare: Vec::new(),
+            dedup,
+            dedup_dropped,
         })
     }
 

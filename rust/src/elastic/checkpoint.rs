@@ -26,6 +26,61 @@ use crate::util::rng::Rng;
 /// Checkpoint file format version.
 pub const VERSION: u64 = 1;
 
+/// Envelope key carrying the content checksum. Stored alongside the
+/// document's own keys; stripped before the body is hashed, so the
+/// checksum covers exactly the rest of the file.
+const CHECKSUM_KEY: &str = "checksum";
+
+/// FNV-1a over the serialized body — cheap, dependency-free, and enough
+/// to catch a truncated or bit-rotted file (it is not an integrity MAC).
+fn fnv1a(text: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in text.as_bytes() {
+        h ^= u64::from(*b);
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Serialize an envelope with a content checksum over its body. The
+/// in-memory payload stays checksum-free; the key exists only in the
+/// file form, so nesting one document inside another never double-seals.
+fn seal(payload: &Json) -> String {
+    let body = payload.to_string();
+    match payload {
+        Json::Obj(m) => {
+            let mut sealed = m.clone();
+            sealed.insert(
+                CHECKSUM_KEY.to_string(),
+                Json::str(format!("{:016x}", fnv1a(&body))),
+            );
+            Json::Obj(sealed).to_string()
+        }
+        _ => body,
+    }
+}
+
+/// Parse an envelope and verify its content checksum. A file without the
+/// checksum key is the pre-seal format and is accepted as-is; a present
+/// but mismatching checksum — or unparseable JSON, the signature of a
+/// torn write — fails with a "truncated or corrupt" error naming `what`.
+fn open_envelope(text: &str, what: &str) -> Result<Json> {
+    let mut payload = Json::parse(text)
+        .map_err(|e| anyhow::anyhow!("truncated or corrupt {what}: {e}"))?;
+    if let Json::Obj(m) = &mut payload {
+        if let Some(stored) = m.remove(CHECKSUM_KEY) {
+            let stored = stored.as_str().context("checkpoint checksum must be a string")?;
+            let computed = format!("{:016x}", fnv1a(&payload.to_string()));
+            anyhow::ensure!(
+                stored == computed,
+                "truncated or corrupt {what}: checksum mismatch \
+                 (stored {stored}, computed {computed})"
+            );
+        }
+    }
+    Ok(payload)
+}
+
 /// A captured checkpoint (an owned JSON document).
 #[derive(Debug, Clone)]
 pub struct Checkpoint {
@@ -131,12 +186,13 @@ impl Checkpoint {
         self.payload.get("server")?.get("updates")?.as_u64()
     }
 
+    /// File form: the payload sealed with a content checksum.
     pub fn to_json_string(&self) -> String {
-        self.payload.to_string()
+        seal(&self.payload)
     }
 
     pub fn from_json_str(text: &str) -> Result<Checkpoint> {
-        let payload = Json::parse(text).context("parsing checkpoint")?;
+        let payload = open_envelope(text, "checkpoint")?;
         // validate eagerly so a bad file fails at load, not first use
         let c = Checkpoint { payload };
         let version = c.payload.get("version")?.as_u64()?;
@@ -228,12 +284,13 @@ impl SimCheckpoint {
         self.payload.get("engine")?.get("events_processed")?.as_u64()
     }
 
+    /// File form: the payload sealed with a content checksum.
     pub fn to_json_string(&self) -> String {
-        self.payload.to_string()
+        seal(&self.payload)
     }
 
     pub fn from_json_str(text: &str) -> Result<SimCheckpoint> {
-        let payload = Json::parse(text).context("parsing sim checkpoint")?;
+        let payload = open_envelope(text, "sim checkpoint")?;
         let c = SimCheckpoint { payload };
         let version = c.payload.get("version")?.as_u64()?;
         anyhow::ensure!(version == SIM_VERSION, "unsupported sim checkpoint version {version}");
@@ -399,6 +456,53 @@ mod tests {
         assert_eq!(loaded.to_json_string(), back.to_json_string());
         assert!(SimCheckpoint::from_json_str(r#"{"version": 99, "fingerprint": "x"}"#).is_err());
         assert!(SimCheckpoint::from_json_str("{").is_err());
+    }
+
+    #[test]
+    fn checksum_detects_bit_flip_and_truncation() {
+        let orig = server(2);
+        let text = Checkpoint::capture("sealed", &orig, &[]).to_json_string();
+        assert!(text.contains("\"checksum\""), "file form carries the seal");
+        Checkpoint::from_json_str(&text).unwrap().restore().unwrap();
+        // a single flipped character in the body fails with the clear error
+        let flipped = text.replace("sealed", "zealed");
+        assert_ne!(flipped, text);
+        let err = Checkpoint::from_json_str(&flipped).unwrap_err().to_string();
+        assert!(err.contains("corrupt checkpoint"), "{err}");
+        assert!(err.contains("checksum mismatch"), "{err}");
+        // a torn write (truncated file) is named as such, not a raw parse error
+        let err = Checkpoint::from_json_str(&text[..text.len() - 10])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated or corrupt checkpoint"), "{err}");
+        // pre-seal files (no checksum key) still load
+        let plain = Checkpoint::capture("old", &orig, &[]);
+        let unsealed = {
+            // what a pre-checksum build would have written: the raw payload
+            let sealed = Json::parse(&plain.to_json_string()).unwrap();
+            let Json::Obj(mut m) = sealed else { unreachable!() };
+            m.remove("checksum");
+            Json::Obj(m).to_string()
+        };
+        Checkpoint::from_json_str(&unsealed).unwrap().restore().unwrap();
+    }
+
+    #[test]
+    fn sim_checksum_detects_bit_flip_and_truncation() {
+        let orig = server(2);
+        let inner = Checkpoint::capture("sim", &orig, &[]);
+        let engine = Json::obj(vec![("events_processed", Json::num(7.0))]);
+        let text = SimCheckpoint::new("fp:unit", inner, engine).to_json_string();
+        SimCheckpoint::from_json_str(&text).unwrap();
+        let err = SimCheckpoint::from_json_str(&text.replace("fp:unit", "fq:unit"))
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("corrupt sim checkpoint"), "{err}");
+        assert!(err.contains("checksum mismatch"), "{err}");
+        let err = SimCheckpoint::from_json_str(&text[..text.len() - 4])
+            .unwrap_err()
+            .to_string();
+        assert!(err.contains("truncated or corrupt sim checkpoint"), "{err}");
     }
 
     #[test]

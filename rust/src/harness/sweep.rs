@@ -334,6 +334,7 @@ impl<'a> Sweep<'a> {
                 || cfg.collect_metrics(),
             metrics_every: self.metrics_every.or(cfg.metrics_every),
             profile: self.profile || cfg.profile,
+            faults: cfg.faults.clone(),
         };
         let fingerprint =
             crate::coordinator::engine_sim::SimEngine::config_fingerprint(&sim_cfg);
@@ -380,6 +381,7 @@ impl<'a> Sweep<'a> {
             checkpoint_every_updates: 0,
             hetero: crate::straggler::hetero::HeteroSpec::none(),
             adaptive: crate::straggler::adaptive::AdaptiveSpec::none(),
+            faults: crate::netsim::faults::FaultSpec::none(),
             ..sim_cfg.clone()
         };
         let paper_time = run_sim(
@@ -499,6 +501,7 @@ fn warmstarted(sweep: &Sweep, cfg: &RunConfig) -> Result<crate::params::FlatVec>
         collect_metrics: false,
         metrics_every: None,
         profile: false,
+        faults: crate::netsim::faults::FaultSpec::none(),
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let mut lr_cfg = cfg.clone();

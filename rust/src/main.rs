@@ -77,6 +77,13 @@ comm:         --compress none|topk:<frac>|qsgd:<bits> (gradient codec with
                 time) [all engines]
               --comm-csv FILE (sim: per-learner compressed-bytes +
                 residual-norm rows)
+chaos:        --faults SPEC (message-level network faults with ack/retry +
+                dedup: loss:<p>,dup:<p>,reorder:<p>,delayspike:<p>x<mult>,
+                partition:rack<A>-rack<B>@<T>s+<D>s,retries:<n>,rto:<secs>
+                | none. Deterministic per seed; exhausted retries evict
+                via Suspect→Dead; partitions heal and the learner
+                rejoins; JSON key faults) [sim/sweep/timing; train
+                --synthetic takes loss/dup/retries/rto]
 observability: --trace PATH (Chrome trace-event JSON — load in Perfetto/
                 chrome://tracing. sim/timing: spans over virtual sim
                 time; train: spans over wall time; sweep: PATH is a
@@ -341,6 +348,7 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
         trace: cfg.trace.is_some(),
         metrics_every: cfg.metrics_every,
         profile: cfg.profile,
+        faults: cfg.faults.clone(),
     };
     let optimizer = Optimizer::new(cfg.optimizer, cfg.weight_decay, theta0.len());
     let result = run_live(&live_cfg, theta0, optimizer, cfg.lr_policy(), providers)?;
@@ -375,6 +383,9 @@ fn cmd_train(cfg: &RunConfig, args: &Args) -> Result<()> {
             rudra::stats::churn_summary(&result.churn, &result.recovery_secs),
             result.final_active_lambda
         );
+    }
+    if let Some(f) = &result.faults {
+        println!("faults: {}", rudra::stats::fault_summary(f));
     }
 
     let mut final_eval: Option<(f64, f64)> = None;
@@ -620,6 +631,7 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     sim_cfg.collect_metrics = cfg.collect_metrics();
     sim_cfg.metrics_every = cfg.metrics_every;
     sim_cfg.profile = cfg.profile;
+    sim_cfg.faults = cfg.faults.clone();
     if args.get("max-updates").is_some() {
         sim_cfg.max_updates = Some(args.u64_or("max-updates", 0)?);
     }
@@ -687,6 +699,9 @@ fn cmd_timing(cfg: &RunConfig, args: &Args) -> Result<()> {
     }
     if !r.adaptive.is_empty() {
         println!("{}", rudra::stats::adaptive_summary(&r.adaptive));
+    }
+    if let Some(f) = &r.faults {
+        println!("faults: {}", rudra::stats::fault_summary(f));
     }
     print_comm(
         cfg.compress,

@@ -1,0 +1,642 @@
+//! Message-level network fault injection over the simulated fabric.
+//!
+//! The paper's protocols are analyzed over a network that always
+//! delivers; real parameter-server deployments drop, duplicate, reorder,
+//! and partition traffic constantly. [`FaultSpec`] is the experiment
+//! knob — a compact DSL parsed from `--faults` / config JSON — and
+//! [`FaultPlane`] is the runtime: it perturbs per-message delivery on the
+//! learner↔infrastructure links and prices a capped, jittered
+//! exponential-backoff retry chain for every message, all from its own
+//! named RNG stream so a fault schedule replays bit-identically per seed
+//! and `faults none` leaves the legacy code path untouched.
+//!
+//! Routing is *planned at send time*: the caller hands the plane a
+//! pricing closure over the fabric, and the plane walks the whole attempt
+//! chain (attempt → drop? → back off → retry …) immediately, booking
+//! fabric contention for every attempt. The outcome — a delivery time, an
+//! optional duplicate delivery, or a give-up time — is scheduled as
+//! ordinary events, so in-flight retries live in the event queue and
+//! stop/resume needs no extra machinery beyond the plane's RNG state.
+//!
+//! Two routing disciplines:
+//! * **unreliable** ([`FaultPlane::route`]) for learner↔infra messages:
+//!   the retry budget is capped; exhaustion means the learner is
+//!   unreachable and the engine hands it to the membership path
+//!   (Suspect → Dead) instead of deadlocking a barrier;
+//! * **reliable** ([`FaultPlane::route_reliable`]) for infra↔infra relay
+//!   links: retries continue until delivery (bounded by a large safety
+//!   cap), so an aggregating leaf can never wedge behind a lost batch.
+//!
+//! Partitions model rack cuts: learner ids map onto `R` contiguous rack
+//! blocks, the root/shards/leaves live on rack 0, and a
+//! `partition:rackA-rackB@T s+D s` window blocks every attempt between
+//! the two racks for its duration. Like the failure injector, the plane
+//! is policy-light: *what* to do about an unreachable learner is the
+//! engine's call.
+
+use anyhow::{bail, Context, Result};
+
+use crate::netsim::reliable::FaultStats;
+use crate::util::rng::Rng;
+
+/// Domain-separation constant for the fault RNG stream (distinct from the
+/// failure injector's `0xE1A5_71C0_FA17_0B3D`, so churn and chaos draws
+/// never correlate under a shared seed).
+const FAULT_STREAM_SALT: u64 = 0xFA17_5EED_C4A0_55E7;
+
+/// Floor for the retransmission timeout when neither the DSL nor the
+/// first attempt's round-trip estimate provides one.
+const RTO_FLOOR_SECS: f64 = 1e-3;
+
+/// Backoff jitter span: each retry waits `rto · 2^k · (1 + j·u)` with
+/// `u ~ U[0,1)`, desynchronizing retry storms.
+const BACKOFF_JITTER: f64 = 0.25;
+
+/// Safety cap on reliable-route attempts. At any loss rate the DSL
+/// accepts, 64 consecutive drops is astronomically unlikely; the cap only
+/// guarantees termination, after which the message delivers regardless.
+const RELIABLE_MAX_ATTEMPTS: u32 = 64;
+
+/// Default unreliable retry budget when the DSL omits `retries:<n>`.
+pub const DEFAULT_RETRIES: u32 = 6;
+
+/// One rack-cut window: traffic between `rack_a` and `rack_b` is blocked
+/// for `[start, start + dur)`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct PartitionWindow {
+    pub rack_a: usize,
+    pub rack_b: usize,
+    pub start: f64,
+    pub dur: f64,
+}
+
+impl PartitionWindow {
+    pub fn end(&self) -> f64 {
+        self.start + self.dur
+    }
+
+    fn active(&self, at: f64) -> bool {
+        at >= self.start && at < self.end()
+    }
+
+    fn cuts(&self, r1: usize, r2: usize) -> bool {
+        (self.rack_a == r1 && self.rack_b == r2) || (self.rack_a == r2 && self.rack_b == r1)
+    }
+}
+
+/// Parsed `faults` knob. `FaultSpec::none()` (the default) is the quiet
+/// spec: engines skip fault-plane construction entirely, so quiet runs
+/// take the exact legacy code path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FaultSpec {
+    /// Per-attempt drop probability.
+    pub loss: f64,
+    /// Probability a delivered message is also delivered a second time.
+    pub dup: f64,
+    /// Probability a delivered message is held back (delivered late,
+    /// after messages sent later).
+    pub reorder: f64,
+    /// Probability a delivered message's network time is multiplied by
+    /// `delayspike_mult` (tail-latency spikes).
+    pub delayspike_p: f64,
+    pub delayspike_mult: f64,
+    /// Rack-cut windows, kept sorted by start time.
+    pub partitions: Vec<PartitionWindow>,
+    /// Unreliable-route retry budget (retransmissions after the
+    /// original attempt).
+    pub retries: u32,
+    /// Retransmission-timeout floor in seconds; 0 = derive from the first
+    /// attempt's round-trip estimate.
+    pub rto: f64,
+}
+
+impl Default for FaultSpec {
+    fn default() -> FaultSpec {
+        FaultSpec::none()
+    }
+}
+
+impl FaultSpec {
+    pub fn none() -> FaultSpec {
+        FaultSpec {
+            loss: 0.0,
+            dup: 0.0,
+            reorder: 0.0,
+            delayspike_p: 0.0,
+            delayspike_mult: 1.0,
+            partitions: Vec::new(),
+            retries: DEFAULT_RETRIES,
+            rto: 0.0,
+        }
+    }
+
+    /// Quiet ⇔ no perturbation is ever drawn: engines skip the fault
+    /// plane entirely. Retry knobs alone do not arm faults (there is
+    /// nothing to retry).
+    pub fn is_quiet(&self) -> bool {
+        self.loss == 0.0
+            && self.dup == 0.0
+            && self.reorder == 0.0
+            && self.delayspike_p == 0.0
+            && self.partitions.is_empty()
+    }
+
+    /// Parse the DSL: comma-separated `key:value` tokens, e.g.
+    /// `loss:0.05,dup:0.01,reorder:0.02,delayspike:0.1x20,partition:rack0-rack1@30s+15s,retries:6,rto:0.5`.
+    /// `none` (or empty) is the quiet spec.
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let s = s.trim();
+        let mut spec = FaultSpec::none();
+        if s.is_empty() || s == "none" {
+            return Ok(spec);
+        }
+        for token in s.split(',') {
+            let token = token.trim();
+            let Some((key, val)) = token.split_once(':') else {
+                bail!("fault token '{token}' is not key:value (see `faults` docs)");
+            };
+            match key {
+                "loss" => spec.loss = parse_prob(val, "loss")?,
+                "dup" => spec.dup = parse_prob(val, "dup")?,
+                "reorder" => spec.reorder = parse_prob(val, "reorder")?,
+                "delayspike" => {
+                    let Some((p, mult)) = val.split_once('x') else {
+                        bail!("delayspike wants <p>x<mult>, got '{val}'");
+                    };
+                    spec.delayspike_p = parse_prob(p, "delayspike")?;
+                    spec.delayspike_mult = mult
+                        .parse::<f64>()
+                        .with_context(|| format!("delayspike multiplier '{mult}'"))?;
+                    if !spec.delayspike_mult.is_finite() || spec.delayspike_mult < 1.0 {
+                        bail!("delayspike multiplier must be ≥ 1, got {mult}");
+                    }
+                }
+                "partition" => spec.partitions.push(parse_partition(val)?),
+                "retries" => {
+                    spec.retries =
+                        val.parse::<u32>().with_context(|| format!("retries '{val}'"))?;
+                }
+                "rto" => {
+                    spec.rto = val.parse::<f64>().with_context(|| format!("rto '{val}'"))?;
+                    if !spec.rto.is_finite() || spec.rto < 0.0 {
+                        bail!("rto must be a non-negative number of seconds, got {val}");
+                    }
+                }
+                other => bail!(
+                    "unknown fault knob '{other}' (want loss/dup/reorder/delayspike/partition/retries/rto)"
+                ),
+            }
+        }
+        spec.partitions.sort_by(|a, b| {
+            a.start.total_cmp(&b.start).then(a.rack_a.cmp(&b.rack_a)).then(a.rack_b.cmp(&b.rack_b))
+        });
+        Ok(spec)
+    }
+
+    /// Canonical label: round-trips through [`FaultSpec::parse`], and is
+    /// the experiment-identity string (config labels, fingerprints).
+    pub fn label(&self) -> String {
+        if self.is_quiet() {
+            return "none".to_string();
+        }
+        let mut parts = Vec::new();
+        if self.loss > 0.0 {
+            parts.push(format!("loss:{}", self.loss));
+        }
+        if self.dup > 0.0 {
+            parts.push(format!("dup:{}", self.dup));
+        }
+        if self.reorder > 0.0 {
+            parts.push(format!("reorder:{}", self.reorder));
+        }
+        if self.delayspike_p > 0.0 {
+            parts.push(format!("delayspike:{}x{}", self.delayspike_p, self.delayspike_mult));
+        }
+        for p in &self.partitions {
+            parts.push(format!(
+                "partition:rack{}-rack{}@{}s+{}s",
+                p.rack_a, p.rack_b, p.start, p.dur
+            ));
+        }
+        if self.retries != DEFAULT_RETRIES {
+            parts.push(format!("retries:{}", self.retries));
+        }
+        if self.rto != 0.0 {
+            parts.push(format!("rto:{}", self.rto));
+        }
+        parts.join(",")
+    }
+
+    /// Number of racks the learner-id space is carved into: the highest
+    /// rack a partition names, plus one (minimum two once any partition
+    /// exists — a cut needs two sides). One rack when no partitions.
+    pub fn racks(&self) -> usize {
+        let max = self.partitions.iter().map(|p| p.rack_a.max(p.rack_b)).max();
+        match max {
+            Some(m) => (m + 1).max(2),
+            None => 1,
+        }
+    }
+}
+
+fn parse_prob(val: &str, knob: &str) -> Result<f64> {
+    let p = val.parse::<f64>().with_context(|| format!("{knob} probability '{val}'"))?;
+    if !p.is_finite() || !(0.0..1.0).contains(&p) {
+        bail!("{knob} probability must be in [0, 1), got {val}");
+    }
+    Ok(p)
+}
+
+fn parse_partition(val: &str) -> Result<PartitionWindow> {
+    let err = || format!("partition wants rack<A>-rack<B>@<T>s+<D>s, got '{val}'");
+    let (racks, timing) = val.split_once('@').with_context(err)?;
+    let (a, b) = racks.split_once('-').with_context(err)?;
+    let rack_a =
+        a.strip_prefix("rack").with_context(err)?.parse::<usize>().with_context(err)?;
+    let rack_b =
+        b.strip_prefix("rack").with_context(err)?.parse::<usize>().with_context(err)?;
+    if rack_a == rack_b {
+        bail!("partition must name two different racks, got '{val}'");
+    }
+    let (start, dur) = timing.split_once('+').with_context(err)?;
+    let start =
+        start.strip_suffix('s').with_context(err)?.parse::<f64>().with_context(err)?;
+    let dur = dur.strip_suffix('s').with_context(err)?.parse::<f64>().with_context(err)?;
+    if !start.is_finite() || start < 0.0 || !dur.is_finite() || dur <= 0.0 {
+        bail!("partition window needs start ≥ 0 and duration > 0, got '{val}'");
+    }
+    Ok(PartitionWindow { rack_a, rack_b, start, dur })
+}
+
+/// Outcome of routing one message through the fault plane. All times are
+/// absolute simulation times; `retries` is the number of retransmission
+/// attempts (0 = the original went through).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum RouteOutcome {
+    Deliver {
+        at: f64,
+        /// A second delivery of the same payload/sequence, when the
+        /// plane injected a duplicate.
+        dup_at: Option<f64>,
+        retries: u32,
+    },
+    Lost {
+        /// When the sender gives up (the final retry timeout expiring) —
+        /// the moment the engine learns the peer is unreachable.
+        give_up_at: f64,
+        retries: u32,
+        /// Whether an active partition (rather than random loss) blocked
+        /// the final attempt; partition-evicted learners revive on heal.
+        by_partition: bool,
+    },
+}
+
+/// Runtime fault injector: owns the spec, the named RNG stream, and the
+/// accounting ledger. Engines construct one only when the spec is
+/// non-quiet.
+#[derive(Debug)]
+pub struct FaultPlane {
+    spec: FaultSpec,
+    rng: Rng,
+    /// Learner-id space bound, for the rack mapping.
+    lambda: usize,
+    racks: usize,
+    pub stats: FaultStats,
+}
+
+impl FaultPlane {
+    pub fn new(spec: FaultSpec, seed: u64, lambda: usize) -> FaultPlane {
+        let racks = spec.racks();
+        FaultPlane {
+            rng: Rng::new(seed ^ FAULT_STREAM_SALT),
+            stats: FaultStats::new(lambda),
+            lambda,
+            racks,
+            spec,
+        }
+    }
+
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Rack of learner `l`: contiguous id blocks over `racks()` racks.
+    /// The root, shards, and aggregation leaves all live on rack 0.
+    pub fn rack_of(&self, l: usize) -> usize {
+        if self.racks <= 1 || self.lambda == 0 {
+            return 0;
+        }
+        (l * self.racks / self.lambda).min(self.racks - 1)
+    }
+
+    /// Is learner `l` cut off from the rack-0 infrastructure at `at`?
+    pub fn partitioned(&self, l: usize, at: f64) -> bool {
+        let rack = self.rack_of(l);
+        if rack == 0 {
+            return false;
+        }
+        self.spec.partitions.iter().any(|p| p.active(at) && p.cuts(rack, 0))
+    }
+
+    /// Raw RNG state for checkpointing (hex-encoded by the engine, like
+    /// the failure injector's stream).
+    pub fn rng_state(&self) -> u64 {
+        self.rng.state()
+    }
+
+    pub fn restore_rng_state(&mut self, state: u64) {
+        self.rng = Rng::from_state(state);
+    }
+
+    /// Route one learner↔infra message: walk the capped retry chain at
+    /// send time, booking fabric contention for every attempt through
+    /// `price` (absolute send time in, absolute arrival time out).
+    /// `learner` attributes retransmissions for the per-learner stats
+    /// columns.
+    pub fn route(
+        &mut self,
+        now: f64,
+        learner: usize,
+        price: impl FnMut(f64) -> f64,
+    ) -> RouteOutcome {
+        self.route_inner(now, Some(learner), self.spec.retries, price)
+    }
+
+    /// Route one infra↔infra message (leaf→root relay): partitions do not
+    /// apply (both endpoints sit on rack 0) and retries continue to the
+    /// safety cap, after which the message delivers regardless — an
+    /// aggregation leaf must never wedge behind a lost batch.
+    pub fn route_reliable(&mut self, now: f64, price: impl FnMut(f64) -> f64) -> RouteOutcome {
+        self.route_inner(now, None, RELIABLE_MAX_ATTEMPTS, price)
+    }
+
+    fn route_inner(
+        &mut self,
+        now: f64,
+        learner: Option<usize>,
+        max_retries: u32,
+        mut price: impl FnMut(f64) -> f64,
+    ) -> RouteOutcome {
+        self.stats.sent += 1;
+        let reliable = learner.is_none();
+        let mut send_time = now;
+        let mut rto = self.spec.rto.max(RTO_FLOOR_SECS);
+        let mut attempt: u32 = 0;
+        loop {
+            let arrival = price(send_time);
+            if attempt == 0 {
+                // Derive the timeout from the first attempt's one-way
+                // estimate unless the DSL pinned one.
+                rto = self.spec.rto.max(2.0 * (arrival - now)).max(RTO_FLOOR_SECS);
+            }
+            let blocked =
+                !reliable && learner.is_some_and(|l| self.partitioned(l, send_time));
+            let final_forced = reliable && attempt >= max_retries;
+            let dropped = !final_forced
+                && (blocked || (self.spec.loss > 0.0 && self.rng.f64() < self.spec.loss));
+            if !dropped {
+                let mut at = arrival;
+                if self.spec.delayspike_p > 0.0 && self.rng.f64() < self.spec.delayspike_p {
+                    at = send_time + (at - send_time) * self.spec.delayspike_mult;
+                }
+                if self.spec.reorder > 0.0 && self.rng.f64() < self.spec.reorder {
+                    at += self.rng.f64() * rto;
+                }
+                let mut dup_at = None;
+                if self.spec.dup > 0.0 && self.rng.f64() < self.spec.dup {
+                    // Duplicates are a network artifact (a re-delivered
+                    // frame), so they trail the real delivery without
+                    // booking fresh fabric contention.
+                    dup_at = Some(at + self.rng.f64() * rto);
+                    self.stats.dups_injected += 1;
+                    self.stats.delivered += 1;
+                }
+                self.stats.delivered += 1;
+                return RouteOutcome::Deliver { at, dup_at, retries: attempt };
+            }
+            self.stats.dropped += 1;
+            let backoff = rto
+                * f64::from(1u32 << attempt.min(16))
+                * (1.0 + BACKOFF_JITTER * self.rng.f64());
+            if attempt >= max_retries {
+                self.stats.exhausted += 1;
+                return RouteOutcome::Lost {
+                    give_up_at: send_time + backoff,
+                    retries: attempt,
+                    by_partition: blocked,
+                };
+            }
+            attempt += 1;
+            self.stats.retransmits += 1;
+            if let Some(l) = learner {
+                if let Some(r) = self.stats.retransmits_by.get_mut(l) {
+                    *r += 1;
+                }
+            }
+            send_time += backoff;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_none_and_empty_are_quiet() {
+        assert!(FaultSpec::parse("none").unwrap().is_quiet());
+        assert!(FaultSpec::parse("").unwrap().is_quiet());
+        assert_eq!(FaultSpec::parse("none").unwrap().label(), "none");
+        assert_eq!(FaultSpec::parse("none").unwrap(), FaultSpec::none());
+    }
+
+    #[test]
+    fn parse_and_label_roundtrip() {
+        let s = "loss:0.05,dup:0.01,reorder:0.02,delayspike:0.1x20,\
+                 partition:rack0-rack1@30s+15s,retries:4,rto:0.5";
+        let spec = FaultSpec::parse(s).unwrap();
+        assert_eq!(spec.loss, 0.05);
+        assert_eq!(spec.dup, 0.01);
+        assert_eq!(spec.reorder, 0.02);
+        assert_eq!(spec.delayspike_p, 0.1);
+        assert_eq!(spec.delayspike_mult, 20.0);
+        assert_eq!(
+            spec.partitions,
+            vec![PartitionWindow { rack_a: 0, rack_b: 1, start: 30.0, dur: 15.0 }]
+        );
+        assert_eq!(spec.retries, 4);
+        assert_eq!(spec.rto, 0.5);
+        let relabel = FaultSpec::parse(&spec.label()).unwrap();
+        assert_eq!(relabel, spec, "label must round-trip through parse");
+    }
+
+    #[test]
+    fn parse_rejects_bad_tokens() {
+        for bad in [
+            "loss",
+            "loss:1.5",
+            "loss:-0.1",
+            "loss:1.0",
+            "frobnicate:0.5",
+            "delayspike:0.1",
+            "delayspike:0.1x0.5",
+            "partition:rack0-rack0@1s+1s",
+            "partition:rack0-rack1@1s+0s",
+            "partition:rack0-rack1@1+1",
+            "rto:-1",
+        ] {
+            assert!(FaultSpec::parse(bad).is_err(), "'{bad}' should be rejected");
+        }
+    }
+
+    #[test]
+    fn retry_knobs_alone_stay_quiet() {
+        let spec = FaultSpec::parse("retries:3,rto:0.1").unwrap();
+        assert!(spec.is_quiet(), "nothing to retry without a perturbation");
+    }
+
+    #[test]
+    fn racks_and_rack_mapping() {
+        assert_eq!(FaultSpec::none().racks(), 1);
+        let spec = FaultSpec::parse("partition:rack0-rack1@1s+1s").unwrap();
+        assert_eq!(spec.racks(), 2);
+        let plane = FaultPlane::new(spec, 7, 8);
+        let racks: Vec<usize> = (0..8).map(|l| plane.rack_of(l)).collect();
+        assert_eq!(racks, vec![0, 0, 0, 0, 1, 1, 1, 1]);
+        let spec3 = FaultSpec::parse("partition:rack1-rack2@1s+1s").unwrap();
+        assert_eq!(spec3.racks(), 3);
+    }
+
+    #[test]
+    fn partition_blocks_only_named_racks_during_window() {
+        let spec = FaultSpec::parse("partition:rack0-rack2@10s+5s").unwrap();
+        let plane = FaultPlane::new(spec, 7, 9);
+        // racks: 0 → ids 0-2, 1 → ids 3-5, 2 → ids 6-8
+        assert!(!plane.partitioned(7, 9.9), "before the window");
+        assert!(plane.partitioned(7, 10.0), "rack 2 cut from rack 0");
+        assert!(plane.partitioned(7, 14.9));
+        assert!(!plane.partitioned(7, 15.0), "healed");
+        assert!(!plane.partitioned(4, 12.0), "rack 1 unaffected");
+        assert!(!plane.partitioned(0, 12.0), "rack 0 is the infra side");
+    }
+
+    #[test]
+    fn quiet_route_is_passthrough() {
+        // loss:0 with a partition elsewhere: a clear-path message must
+        // deliver on attempt 0 at exactly the priced time.
+        let spec = FaultSpec::parse("partition:rack0-rack1@100s+1s").unwrap();
+        let mut plane = FaultPlane::new(spec, 7, 4);
+        let out = plane.route(1.0, 0, |at| at + 0.25);
+        assert_eq!(out, RouteOutcome::Deliver { at: 1.25, dup_at: None, retries: 0 });
+    }
+
+    #[test]
+    fn route_is_deterministic_per_seed() {
+        let run = |seed: u64| {
+            let spec =
+                FaultSpec::parse("loss:0.3,dup:0.1,reorder:0.1,delayspike:0.1x10").unwrap();
+            let mut plane = FaultPlane::new(spec, seed, 4);
+            (0..200).map(|i| plane.route(i as f64, i % 4, |at| at + 0.1)).collect::<Vec<_>>()
+        };
+        assert_eq!(run(7), run(7), "same seed replays bit-identically");
+        assert_ne!(run(7), run(8), "different seed diverges");
+    }
+
+    #[test]
+    fn conservation_law_holds_under_chaos() {
+        let spec = FaultSpec::parse("loss:0.4,dup:0.2,reorder:0.1,retries:2").unwrap();
+        let mut plane = FaultPlane::new(spec, 11, 4);
+        let mut lost = 0;
+        for i in 0..500 {
+            if let RouteOutcome::Lost { .. } = plane.route(i as f64, i % 4, |at| at + 0.1) {
+                lost += 1;
+            }
+        }
+        assert!(plane.stats.balances(), "{:?}", plane.stats);
+        assert_eq!(plane.stats.sent, 500);
+        assert_eq!(plane.stats.exhausted, lost);
+        assert!(lost > 0, "loss:0.4 with retries:2 must exhaust sometimes");
+        assert!(plane.stats.retransmits > 0);
+        assert!(plane.stats.dups_injected > 0);
+        let by: u64 = plane.stats.retransmits_by.iter().sum();
+        assert_eq!(by, plane.stats.retransmits, "per-learner attribution is total");
+    }
+
+    #[test]
+    fn partition_exhausts_with_by_partition_flag() {
+        // Learner 1 (rack 1) inside a long partition: every attempt is
+        // blocked, so the route must exhaust and blame the partition.
+        let spec = FaultSpec::parse("partition:rack0-rack1@0s+1000000s,retries:2").unwrap();
+        let mut plane = FaultPlane::new(spec, 7, 2);
+        match plane.route(1.0, 1, |at| at + 0.1) {
+            RouteOutcome::Lost { give_up_at, retries, by_partition } => {
+                assert!(by_partition);
+                assert_eq!(retries, 2);
+                assert!(give_up_at > 1.0);
+            }
+            other => panic!("expected Lost, got {other:?}"),
+        }
+        assert!(plane.stats.balances());
+    }
+
+    #[test]
+    fn reliable_route_never_loses() {
+        let spec = FaultSpec::parse("loss:0.6,retries:1").unwrap();
+        let mut plane = FaultPlane::new(spec, 13, 4);
+        for i in 0..300 {
+            match plane.route_reliable(i as f64, |at| at + 0.1) {
+                RouteOutcome::Deliver { .. } => {}
+                RouteOutcome::Lost { .. } => panic!("reliable route must always deliver"),
+            }
+        }
+        assert!(plane.stats.balances());
+        assert!(plane.stats.retransmits > 0, "loss:0.6 must force retries");
+        assert_eq!(plane.stats.exhausted, 0);
+    }
+
+    #[test]
+    fn retry_chain_books_every_attempt_and_backs_off() {
+        // Deterministic hunt for a route with ≥ 1 retry; the pricing
+        // closure records each attempt's send time.
+        let spec = FaultSpec::parse("loss:0.5,retries:4,rto:0.2").unwrap();
+        let mut plane = FaultPlane::new(spec, 3, 2);
+        let mut found = false;
+        for i in 0..100 {
+            let mut sends = Vec::new();
+            let out = plane.route(i as f64 * 10.0, 0, |at| {
+                sends.push(at);
+                at + 0.05
+            });
+            if let RouteOutcome::Deliver { at, retries, .. } = out {
+                assert_eq!(sends.len() as u32, retries + 1, "every attempt priced");
+                if retries >= 2 {
+                    // backoff doubles (jitter aside): gap k+1 > gap k
+                    let g1 = sends[1] - sends[0];
+                    let g2 = sends[2] - sends[1];
+                    assert!(g2 > g1, "exponential backoff: {g2} vs {g1}");
+                    assert!(at >= sends[retries as usize], "delivery after final send");
+                    found = true;
+                    break;
+                }
+            }
+        }
+        assert!(found, "loss:0.5 should produce a ≥2-retry delivery in 100 tries");
+    }
+
+    #[test]
+    fn rng_state_checkpoint_resumes_exact_outcomes() {
+        let spec = FaultSpec::parse("loss:0.3,dup:0.1").unwrap();
+        let mut plane = FaultPlane::new(spec.clone(), 9, 4);
+        for i in 0..50 {
+            plane.route(i as f64, i % 4, |at| at + 0.1);
+        }
+        let state = plane.rng_state();
+        let tail: Vec<RouteOutcome> =
+            (0..50).map(|i| plane.route(i as f64, i % 4, |at| at + 0.1)).collect();
+        let mut resumed = FaultPlane::new(spec, 9, 4);
+        resumed.restore_rng_state(state);
+        let replay: Vec<RouteOutcome> =
+            (0..50).map(|i| resumed.route(i as f64, i % 4, |at| at + 0.1)).collect();
+        assert_eq!(tail, replay);
+    }
+}

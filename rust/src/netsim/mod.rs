@@ -15,10 +15,15 @@
 //! coordinator's simulation engine; [`overlap`] accounts the
 //! computation/communication overlap ratio that Table 1 reports;
 //! [`failure`] injects deterministic churn (random kills + downtimes) for
-//! the elastic-membership scenarios ([`crate::elastic`]).
+//! the elastic-membership scenarios ([`crate::elastic`]); [`faults`] and
+//! [`reliable`] add message-level chaos (loss, duplication, reordering,
+//! delay spikes, rack partitions) with an ack/retry reliability layer and
+//! receiver-side dedup so every protocol survives a lossy network.
 
 pub mod cluster;
 pub mod cost;
 pub mod event;
 pub mod failure;
+pub mod faults;
 pub mod overlap;
+pub mod reliable;

@@ -1,0 +1,292 @@
+//! Reliability primitives for the fault-injected fabric: idempotent
+//! dedup windows and the message-accounting ledger.
+//!
+//! The fault plane ([`crate::netsim::faults`]) can drop, duplicate,
+//! reorder, and retransmit messages. Exactly-once *effect* semantics are
+//! restored at the receivers: every sender stamps a per-link sequence
+//! number, and every receiver passes it through a [`DedupWindow`] before
+//! acting, so a duplicated or retried gradient is never double-accumulated
+//! and a duplicated broadcast never starts a second compute loop.
+//!
+//! [`FaultStats`] is the shared ledger. Its invariant — checked in tests
+//! and by the CI chaos smoke — is message conservation:
+//!
+//! ```text
+//! sent + retransmits + dups_injected == delivered + dropped
+//! ```
+//!
+//! every transmission attempt (original, retry, or injected duplicate)
+//! either arrives or is dropped; nothing is created or lost off-ledger.
+//! `dedup_dropped` counts receiver-side rejections of messages that *did*
+//! arrive, so it sits outside the conservation law on purpose.
+
+use crate::util::json::Json;
+use anyhow::Result;
+
+/// Sliding dedup window over per-sender sequence numbers: a 64-deep
+/// bitmask anchored at the highest sequence seen. Accepts any unseen
+/// sequence within the window (so reordered deliveries still land),
+/// rejects duplicates and anything older than the window (a retry that
+/// stale has long been superseded).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct DedupWindow {
+    /// Highest sequence accepted so far (valid only once `seen_any`).
+    max_seen: u64,
+    /// Bit `i` set ⇔ sequence `max_seen - i` was accepted.
+    mask: u64,
+    seen_any: bool,
+}
+
+impl DedupWindow {
+    pub fn new() -> DedupWindow {
+        DedupWindow::default()
+    }
+
+    /// Returns `true` iff `seq` has not been accepted before and is not
+    /// older than the 64-message window; records it when accepted.
+    pub fn accept(&mut self, seq: u64) -> bool {
+        if !self.seen_any {
+            self.seen_any = true;
+            self.max_seen = seq;
+            self.mask = 1;
+            return true;
+        }
+        if seq > self.max_seen {
+            let shift = seq - self.max_seen;
+            self.mask = if shift >= 64 { 0 } else { self.mask << shift };
+            self.mask |= 1;
+            self.max_seen = seq;
+            return true;
+        }
+        let back = self.max_seen - seq;
+        if back >= 64 {
+            return false; // beyond the window: treat as a stale duplicate
+        }
+        if self.mask & (1u64 << back) != 0 {
+            return false;
+        }
+        self.mask |= 1u64 << back;
+        true
+    }
+
+    /// Checkpoint form: `(max_seen, mask, seen_any)`.
+    pub fn state(&self) -> (u64, u64, bool) {
+        (self.max_seen, self.mask, self.seen_any)
+    }
+
+    pub fn from_state(max_seen: u64, mask: u64, seen_any: bool) -> DedupWindow {
+        DedupWindow { max_seen, mask, seen_any }
+    }
+}
+
+/// Serialize a slice of windows as one compact string per window. The
+/// mask is a full 64-bit value, so it travels as hex (JSON numbers are
+/// f64-backed and silently round above 2⁵³ — the same reason RNG states
+/// checkpoint as hex strings).
+pub fn windows_to_json(wins: &[DedupWindow]) -> Json {
+    Json::Arr(
+        wins.iter()
+            .map(|w| {
+                let (max_seen, mask, seen_any) = w.state();
+                Json::str(format!("{max_seen}:{mask:016x}:{}", u8::from(seen_any)))
+            })
+            .collect(),
+    )
+}
+
+/// Inverse of [`windows_to_json`]; `expect` guards the learner-count
+/// match against the resuming config.
+pub fn windows_from_json(j: &Json, expect: usize) -> Result<Vec<DedupWindow>> {
+    let arr = j.as_arr()?;
+    anyhow::ensure!(
+        arr.len() == expect,
+        "dedup window checkpoint has {} entries for {} windows",
+        arr.len(),
+        expect
+    );
+    arr.iter()
+        .map(|v| {
+            let s = v.as_str()?;
+            let mut it = s.split(':');
+            let (Some(max_seen), Some(mask), Some(seen), None) =
+                (it.next(), it.next(), it.next(), it.next())
+            else {
+                anyhow::bail!("malformed dedup window entry '{s}'");
+            };
+            Ok(DedupWindow::from_state(
+                max_seen.parse::<u64>()?,
+                u64::from_str_radix(mask, 16)?,
+                seen != "0",
+            ))
+        })
+        .collect()
+}
+
+/// Fault/retry/dedup accounting shared by the fault plane and the
+/// engines. All counters are message-level (one per transmission attempt
+/// or receiver decision), except `retry_bytes`, which books the byte
+/// overhead retransmissions add on the root links.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct FaultStats {
+    /// Original messages handed to the fault plane (one per logical send).
+    pub sent: u64,
+    /// Retransmission attempts after a drop (never counts the original).
+    pub retransmits: u64,
+    /// Duplicate deliveries injected by the fault plane.
+    pub dups_injected: u64,
+    /// Transmission attempts dropped in the network (loss or partition).
+    pub dropped: u64,
+    /// Deliveries that reached a receiver (originals, retries, and dups).
+    pub delivered: u64,
+    /// Messages abandoned after the retry budget was exhausted.
+    pub exhausted: u64,
+    /// Deliveries rejected by a receiver dedup window (arrived, not acted).
+    pub dedup_dropped: u64,
+    /// Byte overhead of retransmissions (booked into root bytes in/out).
+    pub retry_bytes: f64,
+    /// Retransmission attempts attributed per learner slot (the stats
+    /// server's per-learner chaos columns).
+    pub retransmits_by: Vec<u64>,
+}
+
+impl FaultStats {
+    pub fn new(lambda: usize) -> FaultStats {
+        FaultStats { retransmits_by: vec![0; lambda], ..FaultStats::default() }
+    }
+
+    /// The conservation law: every attempt (original, retry, injected
+    /// dup) either arrives or drops.
+    pub fn balances(&self) -> bool {
+        self.sent + self.retransmits + self.dups_injected == self.delivered + self.dropped
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("sent", Json::num(self.sent as f64)),
+            ("retransmits", Json::num(self.retransmits as f64)),
+            ("dups_injected", Json::num(self.dups_injected as f64)),
+            ("dropped", Json::num(self.dropped as f64)),
+            ("delivered", Json::num(self.delivered as f64)),
+            ("exhausted", Json::num(self.exhausted as f64)),
+            ("dedup_dropped", Json::num(self.dedup_dropped as f64)),
+            ("retry_bytes", Json::num(self.retry_bytes)),
+            ("retransmits_by", Json::arr_u64(&self.retransmits_by)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<FaultStats> {
+        Ok(FaultStats {
+            sent: j.get("sent")?.as_u64()?,
+            retransmits: j.get("retransmits")?.as_u64()?,
+            dups_injected: j.get("dups_injected")?.as_u64()?,
+            dropped: j.get("dropped")?.as_u64()?,
+            delivered: j.get("delivered")?.as_u64()?,
+            exhausted: j.get("exhausted")?.as_u64()?,
+            dedup_dropped: j.get("dedup_dropped")?.as_u64()?,
+            retry_bytes: j.get("retry_bytes")?.as_f64()?,
+            retransmits_by: j.get("retransmits_by")?.as_u64_vec()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn window_accepts_fresh_rejects_duplicate() {
+        let mut w = DedupWindow::new();
+        assert!(w.accept(0));
+        assert!(!w.accept(0), "exact duplicate rejected");
+        assert!(w.accept(1));
+        assert!(w.accept(2));
+        assert!(!w.accept(1), "replayed retry rejected");
+    }
+
+    #[test]
+    fn window_accepts_reordered_within_window() {
+        let mut w = DedupWindow::new();
+        assert!(w.accept(5));
+        assert!(w.accept(3), "late-but-unseen sequence still lands");
+        assert!(!w.accept(3));
+        assert!(w.accept(4));
+        assert!(w.accept(6));
+    }
+
+    #[test]
+    fn window_rejects_older_than_depth() {
+        let mut w = DedupWindow::new();
+        assert!(w.accept(100));
+        assert!(!w.accept(36), "100 - 36 = 64 ≥ window depth");
+        assert!(w.accept(37), "100 - 37 = 63 still inside");
+    }
+
+    #[test]
+    fn window_zero_is_a_real_sequence() {
+        let mut w = DedupWindow::new();
+        assert!(w.accept(0));
+        assert!(!w.accept(0));
+    }
+
+    #[test]
+    fn window_large_jump_clears_history() {
+        let mut w = DedupWindow::new();
+        assert!(w.accept(1));
+        assert!(w.accept(1000));
+        assert!(!w.accept(1), "fell out of the window");
+        assert!(w.accept(999));
+    }
+
+    #[test]
+    fn window_state_roundtrip() {
+        let mut w = DedupWindow::new();
+        for s in [4u64, 2, 7, 5] {
+            w.accept(s);
+        }
+        let (m, b, any) = w.state();
+        let mut back = DedupWindow::from_state(m, b, any);
+        assert_eq!(back, w);
+        assert!(!back.accept(7));
+        assert!(back.accept(6));
+    }
+
+    #[test]
+    fn windows_flat_json_roundtrip() {
+        let mut a = DedupWindow::new();
+        a.accept(9);
+        a.accept(11);
+        let wins = vec![a, DedupWindow::new()];
+        let j = windows_to_json(&wins);
+        let back = windows_from_json(&j, 2).unwrap();
+        assert_eq!(back, wins);
+        assert!(windows_from_json(&j, 3).is_err(), "count mismatch rejected");
+    }
+
+    #[test]
+    fn windows_json_preserves_full_64bit_mask() {
+        // A mask with the top bit set must survive the round-trip exactly
+        // (it would round if it ever passed through an f64-backed number).
+        let w = DedupWindow::from_state(200, u64::MAX, true);
+        let back = windows_from_json(&windows_to_json(std::slice::from_ref(&w)), 1).unwrap();
+        assert_eq!(back[0], w);
+    }
+
+    #[test]
+    fn stats_json_roundtrip_and_balance() {
+        let mut s = FaultStats::new(3);
+        s.sent = 10;
+        s.retransmits = 4;
+        s.dups_injected = 1;
+        s.delivered = 11;
+        s.dropped = 4;
+        s.exhausted = 1;
+        s.dedup_dropped = 1;
+        s.retry_bytes = 1234.5;
+        s.retransmits_by = vec![2, 0, 2];
+        assert!(s.balances());
+        let back = FaultStats::from_json(&s.to_json()).unwrap();
+        assert_eq!(back, s);
+        s.dropped += 1;
+        assert!(!s.balances());
+    }
+}

@@ -40,6 +40,13 @@ impl MetricsRegistry {
         *self.counters.entry(name).or_insert(0) += 1;
     }
 
+    /// Bulk counter increment (e.g. a delivery preceded by `n`
+    /// retransmission attempts books them all at once).
+    #[inline]
+    pub fn count_n(&mut self, name: &'static str, n: u64) {
+        *self.counters.entry(name).or_insert(0) += n;
+    }
+
     #[inline]
     pub fn gauge_queue_depth(&mut self, depth: u64) {
         if depth > self.queue_depth_high_water {
@@ -138,6 +145,16 @@ pub fn attach_series(snapshot: &mut Json, series: Json) {
 pub fn attach_profile(snapshot: &mut Json, profile: Json) {
     if let Json::Obj(m) = snapshot {
         m.insert("profile".to_string(), profile);
+    }
+}
+
+/// Attach the fault-plane accounting
+/// ([`crate::netsim::reliable::FaultStats`]) to a snapshot under the
+/// `"faults"` key — same placement contract as [`attach_series`], shared
+/// by both engines and the CI chaos smoke's validator.
+pub fn attach_faults(snapshot: &mut Json, faults: Json) {
+    if let Json::Obj(m) = snapshot {
+        m.insert("faults".to_string(), faults);
     }
 }
 

@@ -260,6 +260,69 @@ impl Obs {
         self.round_waits.clear();
     }
 
+    /// A delivery was preceded by `n` retransmission attempts (fault
+    /// plane; recorded at the moment the send chain was planned).
+    #[inline]
+    pub fn fault_retransmit(&mut self, l: usize, now: f64, n: u64) {
+        if !self.active || n == 0 {
+            return;
+        }
+        self.trace.instant("retransmit", trace::PID_LEARNERS, l as u64, now);
+        if let Some(m) = &mut self.metrics {
+            m.count_n("fault_retransmit", n);
+        }
+    }
+
+    /// A message (and its whole retry chain) was lost: the sender gave
+    /// the peer up at `now`.
+    #[inline]
+    pub fn fault_drop(&mut self, l: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("fault_drop", trace::PID_LEARNERS, l as u64, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("fault_drop");
+        }
+    }
+
+    /// A receiver dedup window rejected a duplicated/retried delivery.
+    #[inline]
+    pub fn fault_dedup(&mut self, l: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("dedup_drop", trace::PID_LEARNERS, l as u64, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("fault_dedup_drop");
+        }
+    }
+
+    /// Retry exhaustion handed learner `l` to the membership eviction
+    /// path.
+    #[inline]
+    pub fn fault_evict(&mut self, l: usize, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("fault_evict", trace::PID_LEARNERS, l as u64, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("fault_evict");
+        }
+    }
+
+    /// A partition window closed (heal event processed).
+    #[inline]
+    pub fn fault_heal(&mut self, now: f64) {
+        if !self.active {
+            return;
+        }
+        self.trace.instant("partition_heal", trace::PID_SHARDS, 0, now);
+        if let Some(m) = &mut self.metrics {
+            m.count("partition_heal");
+        }
+    }
+
     /// Whether the critical-path profiler is armed (gates the engine
     /// sites that exist only for profiling, like the per-gradient relay
     /// association loop).

@@ -119,9 +119,18 @@ impl RunRecord {
     }
 }
 
+/// Serializes in-process appenders (parallel sweep jobs, concurrent
+/// tests) so records never interleave mid-line. Cross-process appends are
+/// already atomic because each record lands as one `write_all` of a full
+/// line on an `O_APPEND` descriptor.
+static APPEND_LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+
 /// Append one record. The file is opened in append mode (not the
 /// truncating [`crate::stats::log::JsonlLog`] writer): the whole point is
-/// that records from *successive processes* accumulate.
+/// that records from *successive processes* accumulate. The record is
+/// pre-formatted (JSON + trailing newline) and written with a single
+/// `write_all` under [`APPEND_LOCK`], so a reader never observes half a
+/// line from a concurrent writer.
 pub fn append(path: &Path, record: &RunRecord) -> Result<()> {
     if let Some(parent) = path.parent() {
         if !parent.as_os_str().is_empty() {
@@ -129,13 +138,19 @@ pub fn append(path: &Path, record: &RunRecord) -> Result<()> {
                 .with_context(|| format!("creating run-index directory {}", parent.display()))?;
         }
     }
+    let mut line = record.to_json().to_string();
+    line.push('\n');
+    let guard = APPEND_LOCK.lock().unwrap_or_else(|poisoned| poisoned.into_inner());
     let mut file = std::fs::OpenOptions::new()
         .create(true)
         .append(true)
         .open(path)
         .with_context(|| format!("opening run index {}", path.display()))?;
-    writeln!(file, "{}", record.to_json().to_string())
-        .with_context(|| format!("appending to run index {}", path.display()))
+    let result = file
+        .write_all(line.as_bytes())
+        .with_context(|| format!("appending to run index {}", path.display()));
+    drop(guard);
+    result
 }
 
 /// Load every record (empty if the index does not exist yet).
@@ -337,6 +352,47 @@ mod tests {
         let back = RunRecord::from_json(&Json::parse(&text).unwrap()).unwrap();
         assert!(back.test_error_pct.is_none());
         assert!(back.train_loss.is_none());
+    }
+
+    /// jobs ∈ {1, 4}: concurrent appenders must never tear a line — every
+    /// line in the index parses and every record lands exactly once.
+    #[test]
+    fn concurrent_appends_never_tear_lines() {
+        for jobs in [1usize, 4] {
+            let path = tmp(&format!("concurrent_{jobs}.jsonl"));
+            std::fs::remove_file(&path).ok();
+            let per_job = 25u64;
+            std::thread::scope(|scope| {
+                for job in 0..jobs {
+                    let path = path.clone();
+                    scope.spawn(move || {
+                        for i in 0..per_job {
+                            let seed = job as u64 * 1000 + i;
+                            append(&path, &sample("sweep", seed)).unwrap();
+                        }
+                    });
+                }
+            });
+            // Raw-text check first: every line must parse on its own (the
+            // failure mode of interleaved writes is a torn/merged line).
+            let text = std::fs::read_to_string(&path).unwrap();
+            for (i, line) in text.lines().enumerate() {
+                Json::parse(line).unwrap_or_else(|e| {
+                    panic!("jobs={jobs}: line {} is not valid JSON ({e}): {line}", i + 1)
+                });
+            }
+            let records = load(&path).unwrap();
+            assert_eq!(records.len(), jobs * per_job as usize, "jobs={jobs}");
+            let mut seeds: Vec<u64> = records.iter().map(|r| r.seed).collect();
+            seeds.sort_unstable();
+            seeds.dedup();
+            assert_eq!(
+                seeds.len(),
+                jobs * per_job as usize,
+                "jobs={jobs}: duplicate or lost record"
+            );
+            std::fs::remove_file(&path).ok();
+        }
     }
 
     #[test]

@@ -176,6 +176,40 @@ pub fn straggler_summary(utilization: &[f64], dropped_by: &[u64]) -> String {
     out
 }
 
+/// One-line report of a chaos run's fault-plane accounting: messages
+/// routed, losses, the retry layer's work (with the worst per-learner
+/// retransmit column), dedup suppressions, and the byte overhead the
+/// retries added, e.g. `1200 routed, 23 dropped (2 exhausted),
+/// 57 retransmits (worst: learner 3 × 11), 4 dups injected,
+/// 9 dedup-dropped, retry overhead 1.2MB`. A run whose fault plane never
+/// fired renders as `fault plane armed, no faults fired`.
+pub fn fault_summary(f: &crate::netsim::reliable::FaultStats) -> String {
+    if f.retransmits == 0 && f.dropped == 0 && f.dups_injected == 0 && f.dedup_dropped == 0 {
+        return "fault plane armed, no faults fired".to_string();
+    }
+    let mut out = format!("{} routed, {} dropped", f.sent, f.dropped);
+    if f.exhausted > 0 {
+        out.push_str(&format!(" ({} exhausted)", f.exhausted));
+    }
+    out.push_str(&format!(", {} retransmits", f.retransmits));
+    if let Some((worst, &count)) = f
+        .retransmits_by
+        .iter()
+        .enumerate()
+        .max_by_key(|&(_, c)| c)
+        .filter(|&(_, &c)| c > 0)
+    {
+        out.push_str(&format!(" (worst: learner {worst} × {count})"));
+    }
+    out.push_str(&format!(
+        ", {} dups injected, {} dedup-dropped, retry overhead {}",
+        f.dups_injected,
+        f.dedup_dropped,
+        crate::util::fmt_bytes(f.retry_bytes)
+    ));
+    out
+}
+
 /// One-line report of the adaptive-n controller's trajectory, e.g.
 /// `adaptive-n: 3 retunes, n 8 → 2, ⟨σ⟩ 7.6 → 2.1`. An empty log renders
 /// as `adaptive-n: no decisions`.
@@ -286,6 +320,31 @@ mod tests {
         // drops force the detailed rendering even when utilization is flat
         let s = straggler_summary(&[0.5, 0.5], &[3, 0]);
         assert!(s.contains("3 gradients dropped"), "{s}");
+    }
+
+    #[test]
+    fn fault_summary_renders_counters_and_worst_learner() {
+        use crate::netsim::reliable::FaultStats;
+        let quiet = FaultStats::new(4);
+        assert_eq!(fault_summary(&quiet), "fault plane armed, no faults fired");
+        let mut f = FaultStats::new(4);
+        f.sent = 1200;
+        f.delivered = 1177;
+        f.dropped = 23;
+        f.exhausted = 2;
+        f.retransmits = 57;
+        f.retransmits_by = vec![10, 20, 16, 11];
+        f.dups_injected = 4;
+        f.dedup_dropped = 9;
+        f.retry_bytes = 1.2e6;
+        let s = fault_summary(&f);
+        assert!(s.contains("1200 routed"), "{s}");
+        assert!(s.contains("23 dropped (2 exhausted)"), "{s}");
+        assert!(s.contains("57 retransmits"), "{s}");
+        assert!(s.contains("learner 1 × 20"), "{s}");
+        assert!(s.contains("4 dups injected"), "{s}");
+        assert!(s.contains("9 dedup-dropped"), "{s}");
+        assert!(s.contains("1.2MB"), "{s}");
     }
 
     #[test]

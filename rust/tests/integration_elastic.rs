@@ -67,6 +67,7 @@ fn elastic_cfg(
         collect_metrics: false,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     }
 }
 

@@ -1,0 +1,331 @@
+//! Network chaos engineering: the fault plane + reliability layer end to
+//! end through the virtual-time engine.
+//!
+//! Covers the PR's acceptance properties:
+//! * a quiet `faults` spec is bit-identical to the legacy path across the
+//!   three protocol families × root shards S ∈ {1, 4};
+//! * a duplicate-heavy fabric never double-accumulates a gradient — the
+//!   training trajectory matches the clean run exactly while the dedup
+//!   ledger shows the duplicates arriving and being rejected;
+//! * 1-softsync staleness stays within the paper's σ ≤ 2n envelope under
+//!   5 % message loss;
+//! * a healed rack partition ends in membership eviction + revival for
+//!   barrier protocols (hardsync, backup-sync), never a deadlock;
+//! * a faulted run stops at event k and resumes bit-identically,
+//!   fault-plane RNG, dedup windows, and ledger included.
+
+use rudra::coordinator::engine_sim::{run_sim, SimConfig, SimEngine, SimResult};
+use rudra::coordinator::protocol::Protocol;
+use rudra::coordinator::tree::Arch;
+use rudra::elastic::membership::{ChurnKind, ChurnSchedule};
+use rudra::elastic::rescaler::RescalePolicy;
+use rudra::netsim::cluster::ClusterSpec;
+use rudra::netsim::cost::{LearnerCompute, ModelCost};
+use rudra::netsim::faults::FaultSpec;
+use rudra::params::lr::{LrPolicy, Modulation, Schedule};
+use rudra::params::optimizer::{Optimizer, OptimizerKind};
+use rudra::params::FlatVec;
+use rudra::straggler::adaptive::AdaptiveSpec;
+use rudra::straggler::hetero::HeteroSpec;
+
+fn tiny_model(samples_per_epoch: u64) -> ModelCost {
+    ModelCost { name: "tiny", flops_per_sample: 1.0e6, bytes: 1.0e3, samples_per_epoch }
+}
+
+fn quiet_cluster() -> ClusterSpec {
+    ClusterSpec { compute_jitter: 0.0, straggler_prob: 0.0, ..ClusterSpec::p775() }
+}
+
+fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
+    SimConfig {
+        protocol,
+        arch: Arch::Base,
+        mu: 4,
+        lambda: 6,
+        epochs: 2,
+        seed: 23,
+        cluster: quiet_cluster(),
+        compute: LearnerCompute::p775(),
+        model: tiny_model(240),
+        shards,
+        eval_each_epoch: false,
+        max_updates: None,
+        churn: ChurnSchedule::none(),
+        rescale: RescalePolicy::None,
+        checkpoint_every_updates: 0,
+        hetero: HeteroSpec::parse("none").unwrap(),
+        adaptive: AdaptiveSpec::none(),
+        compress: rudra::comm::codec::CodecSpec::None,
+        stop_after_events: None,
+        sim_checkpoint_path: None,
+        trace: false,
+        trace_path: None,
+        collect_metrics: false,
+        metrics_every: None,
+        profile: false,
+        faults: FaultSpec::none(),
+    }
+}
+
+fn run_timing(cfg: &SimConfig) -> SimResult {
+    run_sim(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+    .unwrap()
+}
+
+fn new_engine(cfg: &SimConfig) -> SimEngine<'_> {
+    SimEngine::new(
+        cfg,
+        FlatVec::zeros(0),
+        Optimizer::new(OptimizerKind::Sgd, 0.0, 0),
+        LrPolicy::new(Schedule::constant(0.05), Modulation::None, 128),
+        None,
+        None,
+    )
+}
+
+fn bits(v: &[f64]) -> Vec<u64> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+/// Compare the trajectory-observable SimResult fields bit for bit
+/// (floats by IEEE 754 bit pattern, not tolerance). Excludes the fields
+/// that depend on the exact *event stream* rather than the trajectory:
+/// `events_processed`, `sim_seconds`, and `learner_utilization` — the
+/// run's horizon is the timestamp of the first event popped after the
+/// final update, so a trailing no-op duplicate delivery can legally
+/// shift it without touching any training-visible state.
+fn assert_updates_same(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_eq!(a.updates, b.updates, "{ctx}: updates");
+    assert_eq!(a.shard_updates, b.shard_updates, "{ctx}: shard_updates");
+    assert_eq!(a.staleness.totals(), b.staleness.totals(), "{ctx}: staleness totals");
+    assert_eq!(a.staleness.max, b.staleness.max, "{ctx}: staleness max");
+    assert_eq!(a.staleness.histogram, b.staleness.histogram, "{ctx}: staleness histogram");
+    assert_eq!(
+        bits(&a.staleness.per_update_avg),
+        bits(&b.staleness.per_update_avg),
+        "{ctx}: staleness series"
+    );
+    assert_eq!(a.epochs.len(), b.epochs.len(), "{ctx}: epoch count");
+    for (ea, eb) in a.epochs.iter().zip(&b.epochs) {
+        assert_eq!(ea.epoch, eb.epoch, "{ctx}: epoch index");
+        assert_eq!(ea.sim_time.to_bits(), eb.sim_time.to_bits(), "{ctx}: epoch time");
+        assert_eq!(ea.active_lambda, eb.active_lambda, "{ctx}: epoch λ_active");
+    }
+    assert_eq!(format!("{:?}", a.churn), format!("{:?}", b.churn), "{ctx}: churn log");
+    assert_eq!(bits(&a.recovery_secs), bits(&b.recovery_secs), "{ctx}: recovery");
+    assert_eq!(format!("{:?}", a.adaptive), format!("{:?}", b.adaptive), "{ctx}: adaptive");
+    assert_eq!(format!("{:?}", a.overlap), format!("{:?}", b.overlap), "{ctx}: overlap");
+    assert_eq!(a.final_active_lambda, b.final_active_lambda, "{ctx}: λ_active");
+    assert_eq!(a.checkpoints_taken, b.checkpoints_taken, "{ctx}: checkpoints");
+    assert_eq!(a.dropped_gradients, b.dropped_gradients, "{ctx}: dropped");
+    assert_eq!(a.dropped_by_learner, b.dropped_by_learner, "{ctx}: dropped by learner");
+    assert_eq!(bits(&a.hetero_factors), bits(&b.hetero_factors), "{ctx}: hetero factors");
+    assert_eq!(a.root_bytes_in.to_bits(), b.root_bytes_in.to_bits(), "{ctx}: root bytes in");
+    assert_eq!(a.root_bytes_out.to_bits(), b.root_bytes_out.to_bits(), "{ctx}: root bytes out");
+    assert_eq!(
+        bits(&a.comm_bytes_by_learner),
+        bits(&b.comm_bytes_by_learner),
+        "{ctx}: comm bytes"
+    );
+}
+
+/// The strict form: identical event streams must also agree on the event
+/// count, the horizon, the per-learner utilization derived from it, and
+/// the rescale log (an armed fault plane makes the run elastic, which
+/// books a t = 0 active-set normalization record a legacy run lacks —
+/// comparable only between two runs armed the same way).
+fn assert_trajectory_same(a: &SimResult, b: &SimResult, ctx: &str) {
+    assert_updates_same(a, b, ctx);
+    assert_eq!(format!("{:?}", a.rescales), format!("{:?}", b.rescales), "{ctx}: rescales");
+    assert_eq!(a.events_processed, b.events_processed, "{ctx}: events_processed");
+    assert_eq!(a.sim_seconds.to_bits(), b.sim_seconds.to_bits(), "{ctx}: sim_seconds");
+    assert_eq!(
+        bits(&a.learner_utilization),
+        bits(&b.learner_utilization),
+        "{ctx}: utilization"
+    );
+}
+
+const FAMILIES: [Protocol; 3] =
+    [Protocol::Hardsync, Protocol::NSoftsync { n: 1 }, Protocol::BackupSync { b: 1 }];
+
+/// `faults none` takes the exact legacy code path: a quiet spec — even
+/// one that sets the retry knobs, which have nothing to retry — must
+/// reproduce the default run bit for bit, including `events_processed`,
+/// across the three protocol families and root shards S ∈ {1, 4}.
+#[test]
+fn quiet_spec_is_bit_identical_across_protocols_and_shards() {
+    for protocol in FAMILIES {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let baseline = run_timing(&cfg);
+            assert_eq!(baseline.epochs.len(), 2, "baseline completes");
+            let mut quiet_cfg = cfg.clone();
+            quiet_cfg.faults = FaultSpec::parse("retries:3,rto:0.5").unwrap();
+            assert!(quiet_cfg.faults.is_quiet());
+            let quiet = run_timing(&quiet_cfg);
+            let ctx = format!("{protocol:?} S={shards} quiet");
+            assert_trajectory_same(&baseline, &quiet, &ctx);
+            assert!(baseline.faults.is_none(), "{ctx}: legacy run carries no ledger");
+            assert!(quiet.faults.is_none(), "{ctx}: quiet run skips the fault plane");
+        }
+    }
+}
+
+/// The idempotency property: under a duplicate-heavy fabric (40 % of
+/// deliveries re-delivered) every duplicate bounces off a receiver dedup
+/// window, so the training trajectory — updates, virtual time, staleness,
+/// byte flows — is bit-identical to the clean run. Only the event count
+/// (no-op dup deliveries) and the ledger differ.
+#[test]
+fn dup_heavy_fabric_never_double_applies() {
+    for protocol in FAMILIES {
+        for shards in [1usize, 4] {
+            let cfg = base_cfg(protocol, shards);
+            let clean = run_timing(&cfg);
+            let mut dup_cfg = cfg.clone();
+            dup_cfg.faults = FaultSpec::parse("dup:0.4").unwrap();
+            let duped = run_timing(&dup_cfg);
+            let ctx = format!("{protocol:?} S={shards} dup:0.4");
+            assert_updates_same(&clean, &duped, &ctx);
+            let st = duped.faults.as_ref().expect("armed run must carry the ledger");
+            assert!(st.balances(), "{ctx}: conservation law: {st:?}");
+            assert!(st.dups_injected > 0, "{ctx}: dup:0.4 must inject duplicates");
+            assert!(st.dedup_dropped > 0, "{ctx}: duplicates must be rejected");
+            assert!(
+                st.dedup_dropped <= st.dups_injected,
+                "{ctx}: cannot reject more dups than were injected: {st:?}"
+            );
+            assert!(
+                duped.events_processed >= clean.events_processed,
+                "{ctx}: dup deliveries only add events"
+            );
+            assert_eq!(st.retransmits, 0, "{ctx}: nothing to retransmit without loss");
+            // An armed plane makes the run elastic, which books one t = 0
+            // active-set normalization; no *mid-run* rescale may appear.
+            assert!(clean.rescales.is_empty(), "{ctx}: clean run books no rescale");
+            assert!(
+                duped.rescales.iter().all(|r| r.at == 0.0),
+                "{ctx}: duplicates must never trigger a mid-run rescale: {:?}",
+                duped.rescales
+            );
+        }
+    }
+}
+
+/// 5 % message loss with the retry chain live: 1-softsync completes and
+/// average staleness stays inside the paper's σ ≤ 2n envelope (n = 1) —
+/// retransmissions delay gradients, they do not break the protocol. The
+/// same seed + spec replays bit-identically, ledger included.
+#[test]
+fn softsync_staleness_bounded_under_loss_and_replays_exactly() {
+    let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, 1);
+    cfg.lambda = 8;
+    cfg.faults = FaultSpec::parse("loss:0.05").unwrap();
+    let r = run_timing(&cfg);
+    assert_eq!(r.epochs.len(), 2, "lossy run completes");
+    assert!(r.updates > 0);
+    let avg = r.staleness.overall_avg();
+    assert!(avg <= 2.0, "1-softsync ⟨σ⟩ must stay ≤ 2n = 2 under 5% loss, got {avg}");
+    let st = r.faults.as_ref().expect("armed run must carry the ledger");
+    assert!(st.balances(), "conservation law: {st:?}");
+    assert!(st.retransmits > 0, "5% loss must force retransmissions");
+    assert_eq!(
+        st.retransmits,
+        st.retransmits_by.iter().sum::<u64>(),
+        "per-learner attribution must total: {st:?}"
+    );
+    assert!(st.retry_bytes > 0.0, "retransmissions must book byte overhead");
+    assert_eq!(st.exhausted, 0, "0.05^7 exhaustion is astronomically unlikely: {st:?}");
+
+    let replay = run_timing(&cfg);
+    assert_trajectory_same(&r, &replay, "loss:0.05 replay");
+    assert_eq!(r.faults, replay.faults, "replay: fault ledger");
+}
+
+/// A rack partition against a barrier protocol: the cut-off learners
+/// exhaust their retry budgets and take the Suspect → Dead membership
+/// path (the run keeps making progress on the surviving quorum), then
+/// revive when the window heals. No deadlock, and the run ends back at
+/// full strength.
+#[test]
+fn healed_partition_evicts_then_revives_instead_of_deadlocking() {
+    for protocol in [Protocol::Hardsync, Protocol::BackupSync { b: 1 }] {
+        let cfg = base_cfg(protocol, 1);
+        let clean = run_timing(&cfg);
+        let t = clean.sim_seconds;
+        assert!(t > 0.0);
+        // Cut the upper rack (learners 3-5) for the middle third of the
+        // clean run's duration; a tight retry budget makes the eviction
+        // land well inside the window.
+        let spec = format!("partition:rack0-rack1@{}s+{}s,retries:2", t / 4.0, t / 3.0);
+        let mut chaos_cfg = cfg.clone();
+        chaos_cfg.faults = FaultSpec::parse(&spec).unwrap();
+        let r = run_timing(&chaos_cfg);
+        let ctx = format!("{protocol:?} {spec}");
+        assert_eq!(r.epochs.len(), 2, "{ctx}: partitioned run must still complete");
+        assert!(r.updates > 0, "{ctx}");
+        let st = r.faults.as_ref().expect("armed run must carry the ledger");
+        assert!(st.balances(), "{ctx}: conservation law: {st:?}");
+        assert!(st.exhausted > 0, "{ctx}: the partition must exhaust retry budgets");
+        assert!(
+            r.churn.iter().any(|c| matches!(c.kind, ChurnKind::Suspect)),
+            "{ctx}: eviction goes through Suspect: {:?}",
+            r.churn
+        );
+        assert!(
+            r.churn.iter().any(|c| matches!(c.kind, ChurnKind::Kill)),
+            "{ctx}: retry exhaustion must reach the Dead phase: {:?}",
+            r.churn
+        );
+        assert!(
+            r.churn.iter().any(|c| matches!(c.kind, ChurnKind::Rejoin)),
+            "{ctx}: the heal must revive the partition's victims: {:?}",
+            r.churn
+        );
+        assert_eq!(
+            r.final_active_lambda, cfg.lambda,
+            "{ctx}: all victims revive once the window heals"
+        );
+        assert!(!r.recovery_secs.is_empty(), "{ctx}: downtime must be recorded");
+    }
+}
+
+/// Stop-at-event-k + resume of a *faulted* run is bit-identical to the
+/// uninterrupted one: the checkpoint carries the fault plane's RNG
+/// stream, every dedup window, in-flight retry bookkeeping, and the
+/// accounting ledger across the cut.
+#[test]
+fn faulted_run_stop_resume_is_bit_identical() {
+    for shards in [1usize, 4] {
+        let mut cfg = base_cfg(Protocol::NSoftsync { n: 1 }, shards);
+        cfg.faults = FaultSpec::parse("loss:0.05,dup:0.05,reorder:0.05,retries:3").unwrap();
+        let full = run_timing(&cfg);
+        assert_eq!(full.epochs.len(), 2, "faulted baseline completes");
+        let st = full.faults.as_ref().expect("armed run must carry the ledger");
+        assert!(st.balances(), "S={shards}: conservation law: {st:?}");
+        assert!(st.dups_injected > 0 && st.retransmits > 0, "S={shards}: chaos fired: {st:?}");
+        for k in [full.events_processed / 4, (3 * full.events_processed) / 4] {
+            let k = k.max(1);
+            let ctx = format!("faulted S={shards} k={k}");
+            let mut stop_cfg = cfg.clone();
+            stop_cfg.stop_after_events = Some(k);
+            let stopped = run_timing(&stop_cfg);
+            assert_eq!(stopped.events_processed, k, "{ctx}: stop lands exactly at k");
+            let ckpt =
+                stopped.sim_checkpoint.expect("mid-flight stop must capture a checkpoint");
+            let mut engine = new_engine(&cfg);
+            engine.install_sim_checkpoint(&ckpt).unwrap();
+            let resumed = engine.run().unwrap();
+            assert_trajectory_same(&full, &resumed, &ctx);
+            assert_eq!(full.faults, resumed.faults, "{ctx}: fault ledger survives the cut");
+        }
+    }
+}

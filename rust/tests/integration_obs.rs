@@ -51,6 +51,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         collect_metrics: false,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     }
 }
 
@@ -323,6 +324,7 @@ fn live_trace_spans_are_well_formed_over_wall_time() {
         trace: true,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     };
     let providers: Vec<Box<dyn GradProvider + Send>> = (0..cfg.lambda)
         .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)
@@ -627,6 +629,7 @@ fn live_profile_rides_the_metrics_snapshot_as_aggregate() {
         trace: false,
         metrics_every: None,
         profile: true,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     };
     let providers: Vec<Box<dyn GradProvider + Send>> = (0..cfg.lambda)
         .map(|_| Box::new(MockProvider::new(vec![0.0; dim])) as Box<dyn GradProvider + Send>)

@@ -56,6 +56,7 @@ fn base_cfg(protocol: Protocol, shards: usize) -> SimConfig {
         collect_metrics: false,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     }
 }
 

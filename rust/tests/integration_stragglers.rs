@@ -61,6 +61,7 @@ fn straggler_cfg(
         collect_metrics: false,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     }
 }
 

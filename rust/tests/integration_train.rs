@@ -111,6 +111,7 @@ fn live_engine_trains_below_chance() {
         trace: false,
         metrics_every: None,
         profile: false,
+        faults: rudra::netsim::faults::FaultSpec::none(),
     };
     let theta0 = ws.cnn_init().unwrap();
     let optimizer = Optimizer::new(cfg.optimizer, 0.0, theta0.len());
